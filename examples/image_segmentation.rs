@@ -1,0 +1,62 @@
+//! Image segmentation via graph cuts — the §1/§4 application: MAP
+//! estimation of a binary MRF by min-cut on the Kolmogorov–Zabih network,
+//! solved with the hybrid push-relabel pipeline.
+//!
+//! ```bash
+//! cargo run --release --example image_segmentation -- [HxW] [lambda]
+//! ```
+
+use flowmatch::energy::segmentation::{ascii_render, segment_image, segment_image_baseline};
+use flowmatch::gridflow::NativeGridExecutor;
+use flowmatch::util::{Rng, Timer};
+use flowmatch::workloads::grid_gen::synthetic_image;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let (h, w) = args
+        .get(1)
+        .and_then(|s| s.split_once('x'))
+        .map(|(a, b)| (a.parse().unwrap_or(24), b.parse().unwrap_or(24)))
+        .unwrap_or((24, 24));
+    let lambda: i64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(12);
+
+    let mut rng = Rng::seeded(7);
+    let img = synthetic_image(&mut rng, h, w);
+
+    println!("input image ({h}x{w}, '@'=bright):");
+    for i in 0..h {
+        let row: String = (0..w)
+            .map(|j| match img[i * w + j] {
+                0..=90 => ' ',
+                91..=160 => '.',
+                _ => '@',
+            })
+            .collect();
+        println!("  {row}");
+    }
+
+    // The paper's pipeline: MRF -> KZ grid network -> hybrid push-relabel.
+    let mut exec = NativeGridExecutor::default();
+    let t = Timer::start();
+    let seg = segment_image(&img, h, w, lambda, &mut exec)?;
+    let hybrid_time = t.elapsed();
+
+    // Sequential Dinic baseline for parity + speed comparison.
+    let t = Timer::start();
+    let baseline = segment_image_baseline(&img, h, w, lambda)?;
+    let baseline_time = t.elapsed();
+
+    assert_eq!(seg.energy, baseline.energy, "engines disagree on MAP energy");
+
+    println!(
+        "\nsegmentation ('#'=foreground): energy={} cut={} fg={} px",
+        seg.energy, seg.flow, seg.foreground
+    );
+    print!("{}", ascii_render(&seg.labels, h, w));
+    println!(
+        "hybrid={:.2} ms  dinic-baseline={:.2} ms  (identical energies)",
+        hybrid_time * 1e3,
+        baseline_time * 1e3
+    );
+    Ok(())
+}

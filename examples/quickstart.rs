@@ -1,0 +1,66 @@
+//! Quickstart: the two systems of the paper in ~60 lines.
+//!
+//! ```bash
+//! make artifacts            # once: AOT-compile the kernels
+//! cargo run --release --example quickstart
+//! ```
+
+use flowmatch::assignment::{self, AssignmentSolver};
+use flowmatch::coordinator;
+use flowmatch::graph::AssignmentInstance;
+use flowmatch::runtime::ArtifactRegistry;
+use flowmatch::util::Rng;
+use flowmatch::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::seeded(42);
+
+    // ------------------------------------------------------------------
+    // 1. Max flow on a grid graph (§4): the hybrid scheme — device waves
+    //    (PJRT artifact if built, native twin otherwise) + host global
+    //    relabeling.
+    // ------------------------------------------------------------------
+    let net = workloads::random_grid(&mut rng, 16, 16, 16, 0.25, 0.25);
+    let registry = ArtifactRegistry::discover().ok();
+    let (report, backend) = coordinator::solve_grid(&net, 256, registry.as_ref())?;
+    println!(
+        "max flow on 16x16 grid [{backend:?}]: value = {} ({} waves, {} host rounds)",
+        report.flow, report.waves, report.host_rounds
+    );
+
+    // Cross-check against a classical sequential engine.
+    use flowmatch::maxflow::MaxFlowSolver;
+    let mut csr = net.to_flow_network();
+    let seq = flowmatch::maxflow::dinic::Dinic.solve(&mut csr)?;
+    assert_eq!(report.flow, seq.value);
+    println!("  cross-check vs Dinic: OK ({})", seq.value);
+
+    // ------------------------------------------------------------------
+    // 2. Assignment on a complete bipartite graph (§5): cost scaling with
+    //    the lock-free refine.
+    // ------------------------------------------------------------------
+    let inst: AssignmentInstance = workloads::uniform_costs(&mut rng, 12, 100);
+    let result = assignment::csa_lockfree::LockFreeCsa::default().solve(&inst)?;
+    let exact = assignment::hungarian::Hungarian.solve(&inst)?;
+    println!(
+        "assignment n=12: lock-free CSA weight = {} (Hungarian: {})",
+        result.weight, exact.weight
+    );
+    assert_eq!(result.weight, exact.weight);
+
+    // The same instance through the PJRT device path, when available.
+    if let Some(reg) = &registry {
+        let mut driver = coordinator::PjrtAssignmentDriver::for_size(reg, inst.n)?;
+        let (dev_result, tel) = driver.solve(&inst)?;
+        println!(
+            "  PJRT path: weight = {} in {} device rounds (padded to n={})",
+            dev_result.weight, tel.device_rounds, tel.padded_n
+        );
+        assert_eq!(dev_result.weight, exact.weight);
+    } else {
+        println!("  (run `make artifacts` to exercise the PJRT path)");
+    }
+
+    println!("quickstart OK");
+    Ok(())
+}

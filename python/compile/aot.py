@@ -1,0 +1,106 @@
+"""AOT: lower every (kernel, shape) variant to HLO *text* in artifacts/.
+
+HLO text — not ``lowered.compile()`` or a serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids that
+the Rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.
+
+Run via ``make artifacts`` (which no-ops when inputs are unchanged):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits:
+    grid_wave_{H}x{W}.hlo.txt     for (H, W) in GRID_VARIANTS
+    csa_refine_{n}.hlo.txt        for n in CSA_VARIANTS
+    manifest.txt                  one line per artifact: name kind dims k_inner
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import (
+    csa_example_args,
+    grid_example_args,
+    make_csa_superstep,
+    make_grid_superstep,
+)
+from compile.kernels.csa_wave import K_INNER_DEFAULT as CSA_K_INNER
+from compile.kernels.grid_wave import K_INNER_DEFAULT as GRID_K_INNER
+
+GRID_VARIANTS = [(8, 8), (16, 16), (32, 32), (64, 64)]
+CSA_VARIANTS = [8, 16, 30, 32, 64]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_grid(height: int, width: int) -> str:
+    fn = make_grid_superstep(height, width)
+    lowered = jax.jit(fn).lower(*grid_example_args(height, width))
+    return to_hlo_text(lowered)
+
+
+def lower_csa(n: int) -> str:
+    fn = make_csa_superstep(n)
+    lowered = jax.jit(fn).lower(*csa_example_args(n))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat: ignored single-file path")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated artifact names to (re)build, e.g. csa_refine_8",
+    )
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = []
+
+    for h, w in GRID_VARIANTS:
+        name = f"grid_wave_{h}x{w}"
+        manifest.append(f"{name} grid {h} {w} {GRID_K_INNER}")
+        if only is not None and name not in only:
+            continue
+        text = lower_grid(h, w)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for n in CSA_VARIANTS:
+        name = f"csa_refine_{n}"
+        manifest.append(f"{name} csa {n} {n} {CSA_K_INNER}")
+        if only is not None and name not in only:
+            continue
+        text = lower_csa(n)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {out_dir}/manifest.txt ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

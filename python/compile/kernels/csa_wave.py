@@ -1,0 +1,175 @@
+"""L1 Pallas kernel: lock-free cost-scaling refine wave for the assignment
+problem on a complete bipartite graph (paper Algorithm 5.4).
+
+The paper runs one CUDA thread per node; each active node scans its residual
+arcs for the minimum *partially reduced cost* ``c'_p(x,y) = c(x,y) - p(y)``
+and either pushes one unit of flow along the argmin arc (if admissible,
+``min_c'p < -p(x)``) or relabels ``p(x) <- -(min_c'p + eps)``.
+
+TPU adaptation: dense synchronous waves over the ``n x n`` cost matrix.
+
+  * forward half-wave: every active x in X (e(x) > 0) scans its row of
+    residual arcs (f == 0), pushes to the argmin y or relabels;
+  * backward half-wave: every active y in Y (e(y) > 0) scans its column of
+    residual reverse arcs (f == 1) with ``c'_p(y,x) = -c(x,y) - p(x)``,
+    pushes back or relabels.
+
+Invariants (complete graph, unit capacities): e(x) in {0,1} and
+row-sum(f[x,:]) = 1 - e(x); e(y) = col-sum(f[:,y]) - 1 >= -1.  Two X nodes
+may push to the same y in one wave — those are *different* unit-capacity
+arcs, exactly as in the lock-free execution; y then becomes active and
+pushes the worse unit back.  A push x->y and y->x cannot collide on the same
+arc because admissibility of (x,y) and (y,x) is mutually exclusive
+(paper Lemma 5.5 case 8).
+
+State (all ``int32``): cost[n,n] (scaled by n+1), f[n,n] in {0,1},
+px[n], py[n], ex[n], ey[n], eps[1].
+
+Stats output ``int32[6]``: [active_x, active_y, pushes, relabels, waves, 0].
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+INF = np.int32(1 << 30)
+
+K_INNER_DEFAULT = 16
+
+
+def forward_half_wave(cost, f, px, py, ex, ey, eps):
+    """Active X nodes push one unit to their min-reduced-cost Y or relabel."""
+    n = cost.shape[0]
+    cp = cost - py[None, :]                       # c'_p(x, y)
+    cand = jnp.where(f == 0, cp, INF)             # residual (x,y) arcs
+    minc = jnp.min(cand, axis=1)
+    argy = jnp.argmin(cand, axis=1).astype(jnp.int32)
+
+    active = ex > 0
+    admissible = active & (minc < -px) & (minc < INF)
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    onehot = ((col_iota == argy[:, None]) & admissible[:, None]).astype(jnp.int32)
+
+    f_new = f + onehot
+    ex_new = ex - admissible.astype(jnp.int32)
+    ey_new = ey + jnp.sum(onehot, axis=0)
+
+    do_relabel = active & jnp.logical_not(admissible) & (minc < INF)
+    px_new = jnp.where(do_relabel, -(minc + eps), px)
+
+    pushes = jnp.sum(admissible.astype(jnp.int32), dtype=jnp.int32)
+    relabels = jnp.sum(do_relabel.astype(jnp.int32), dtype=jnp.int32)
+    return f_new, px_new, ex_new, ey_new, pushes, relabels
+
+
+def backward_half_wave(cost, f, px, py, ex, ey, eps):
+    """Active Y nodes push one unit back along their min reverse arc."""
+    n = cost.shape[0]
+    cpb = -cost - px[:, None]                     # c'_p(y, x), indexed [x, y]
+    cand = jnp.where(f == 1, cpb, INF)            # residual (y,x) arcs
+    minc = jnp.min(cand, axis=0)                  # per y
+    argx = jnp.argmin(cand, axis=0).astype(jnp.int32)
+
+    active = ey > 0
+    admissible = active & (minc < -py) & (minc < INF)
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    onehot = ((row_iota == argx[None, :]) & admissible[None, :]).astype(jnp.int32)
+
+    f_new = f - onehot
+    ey_new = ey - admissible.astype(jnp.int32)
+    ex_new = ex + jnp.sum(onehot, axis=1)
+
+    do_relabel = active & jnp.logical_not(admissible) & (minc < INF)
+    py_new = jnp.where(do_relabel, -(minc + eps), py)
+
+    pushes = jnp.sum(admissible.astype(jnp.int32), dtype=jnp.int32)
+    relabels = jnp.sum(do_relabel.astype(jnp.int32), dtype=jnp.int32)
+    return f_new, py_new, ex_new, ey_new, pushes, relabels
+
+
+def wave(cost, f, px, py, ex, ey, eps):
+    """One full wave = forward half-wave then backward half-wave."""
+    f, px, ex, ey, pu1, rl1 = forward_half_wave(cost, f, px, py, ex, ey, eps)
+    f, py, ex, ey, pu2, rl2 = backward_half_wave(cost, f, px, py, ex, ey, eps)
+    return f, px, py, ex, ey, pu1 + pu2, rl1 + rl2
+
+
+def _kernel_body(
+    cost_ref,
+    f_ref,
+    px_ref,
+    py_ref,
+    ex_ref,
+    ey_ref,
+    eps_ref,
+    f_out,
+    px_out,
+    py_out,
+    ex_out,
+    ey_out,
+    stats_out,
+    *,
+    k_inner: int,
+):
+    cost = cost_ref[...]
+    f = f_ref[...]
+    px = px_ref[...]
+    py = py_ref[...]
+    ex = ex_ref[...]
+    ey = ey_ref[...]
+    eps = eps_ref[0]
+
+    zero = np.int32(0)
+
+    def activity(ex, ey):
+        ax = jnp.sum((ex > 0).astype(jnp.int32), dtype=jnp.int32)
+        ay = jnp.sum((ey > 0).astype(jnp.int32), dtype=jnp.int32)
+        return ax, ay
+
+    def cond(carry):
+        i, _f, _px, _py, ex, ey, _pu, _rl = carry
+        ax, ay = activity(ex, ey)
+        return (i < k_inner) & (ax + ay > 0)
+
+    def body(carry):
+        i, f, px, py, ex, ey, pu, rl = carry
+        f, px, py, ex, ey, dpu, drl = wave(cost, f, px, py, ex, ey, eps)
+        return (i + 1, f, px, py, ex, ey, pu + dpu, rl + drl)
+
+    carry = (zero, f, px, py, ex, ey, zero, zero)
+    waves, f, px, py, ex, ey, pu, rl = jax.lax.while_loop(cond, body, carry)
+
+    ax, ay = activity(ex, ey)
+    f_out[...] = f
+    px_out[...] = px
+    py_out[...] = py
+    ex_out[...] = ex
+    ey_out[...] = ey
+    stats_out[...] = jnp.stack([ax, ay, pu, rl, waves, jnp.zeros_like(waves)])
+
+
+def make_csa_kernel(n: int, k_inner: int = K_INNER_DEFAULT):
+    """Build the pallas_call for an n x n assignment instance."""
+    kernel = functools.partial(_kernel_body, k_inner=k_inner)
+    out_shape = [
+        jax.ShapeDtypeStruct((n, n), jnp.int32),  # f
+        jax.ShapeDtypeStruct((n,), jnp.int32),    # px
+        jax.ShapeDtypeStruct((n,), jnp.int32),    # py
+        jax.ShapeDtypeStruct((n,), jnp.int32),    # ex
+        jax.ShapeDtypeStruct((n,), jnp.int32),    # ey
+        jax.ShapeDtypeStruct((6,), jnp.int32),    # stats
+    ]
+
+    def run(cost, f, px, py, ex, ey, eps):
+        return pl.pallas_call(
+            kernel,
+            out_shape=out_shape,
+            interpret=True,
+        )(cost, f, px, py, ex, ey, eps)
+
+    return run

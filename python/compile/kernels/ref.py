@@ -1,0 +1,345 @@
+"""Pure-numpy correctness oracles for the Pallas kernels.
+
+Deliberately written with explicit Python loops and snapshot-then-apply
+semantics so they are an *independent* specification of one synchronous
+wave, not a refactoring of the jnp code.  pytest/hypothesis compares the
+Pallas kernels against these, element-for-element.
+
+Also provides tiny ground-truth solvers:
+  * ``ford_fulkerson`` — BFS augmenting-path max-flow on an adjacency dict,
+  * ``brute_force_assignment`` — permutation scan for n <= 8.
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import deque
+
+import numpy as np
+
+INF = np.int32(1 << 30)
+
+# ---------------------------------------------------------------------------
+# Grid push-relabel wave oracle
+# ---------------------------------------------------------------------------
+
+# Arc order must match grid_wave.py: N, S, W, E, sink, source.
+_DIRS = [(-1, 0), (1, 0), (0, -1), (0, 1)]
+_OPP = [1, 0, 3, 2]
+
+
+def grid_wave_ref(h, e, cap, cap_sink, cap_src):
+    """One synchronous wave; returns the new state plus per-wave counters.
+
+    All decisions are taken from a snapshot of the inputs, then applied —
+    matching the data-parallel semantics of the kernel.
+    """
+    h = np.asarray(h, dtype=np.int64)
+    e = np.asarray(e, dtype=np.int64)
+    cap = np.asarray(cap, dtype=np.int64).copy()
+    cap_sink = np.asarray(cap_sink, dtype=np.int64).copy()
+    cap_src = np.asarray(cap_src, dtype=np.int64).copy()
+    H, Wd = h.shape
+    v_total = H * Wd + 2
+
+    h_new = h.copy()
+    e_new = e.copy()
+    sink_flow = 0
+    src_flow = 0
+    pushes = 0
+    relabels = 0
+
+    # Decision phase (snapshot).
+    decisions = []  # (i, j, arc, delta) or (i, j, -1, new_height)
+    for i in range(H):
+        for j in range(Wd):
+            if e[i, j] <= 0:
+                continue
+            # Find the lowest residual neighbour; tie-break by arc order,
+            # matching jnp.argmin's first-minimum rule.
+            best_h, best_a = int(INF), -1
+            for a, (di, dj) in enumerate(_DIRS):
+                ni, nj = i + di, j + dj
+                if 0 <= ni < H and 0 <= nj < Wd and cap[a, i, j] > 0:
+                    if h[ni, nj] < best_h:
+                        best_h, best_a = int(h[ni, nj]), a
+            if cap_sink[i, j] > 0 and 0 < best_h:
+                best_h, best_a = 0, 4
+            if cap_src[i, j] > 0 and v_total < best_h:
+                best_h, best_a = v_total, 5
+            if best_a == -1:
+                continue  # isolated active node: nothing to do
+            if h[i, j] > best_h:
+                if best_a < 4:
+                    c = cap[best_a, i, j]
+                elif best_a == 4:
+                    c = cap_sink[i, j]
+                else:
+                    c = cap_src[i, j]
+                decisions.append((i, j, best_a, min(int(e[i, j]), int(c))))
+            else:
+                decisions.append((i, j, -1, best_h + 1))
+
+    # Apply phase.
+    for i, j, a, val in decisions:
+        if a == -1:
+            h_new[i, j] = val
+            relabels += 1
+            continue
+        pushes += 1
+        delta = val
+        e_new[i, j] -= delta
+        if a == 4:
+            cap_sink[i, j] -= delta
+            sink_flow += delta
+        elif a == 5:
+            cap_src[i, j] -= delta
+            src_flow += delta
+        else:
+            di, dj = _DIRS[a]
+            ni, nj = i + di, j + dj
+            cap[a, i, j] -= delta
+            cap[_OPP[a], ni, nj] += delta
+            e_new[ni, nj] += delta
+
+    return (
+        h_new.astype(np.int32),
+        e_new.astype(np.int32),
+        cap.astype(np.int32),
+        cap_sink.astype(np.int32),
+        cap_src.astype(np.int32),
+        sink_flow,
+        src_flow,
+        pushes,
+        relabels,
+    )
+
+
+def grid_solve_ref(h, e, cap, cap_sink, cap_src, max_waves=200000):
+    """Run waves to quiescence; returns total flow delivered to the sink."""
+    total_sink = 0
+    total_src = 0
+    for _ in range(max_waves):
+        if not (np.asarray(e) > 0).any():
+            break
+        h, e, cap, cap_sink, cap_src, sf, bf, _, _ = grid_wave_ref(
+            h, e, cap, cap_sink, cap_src
+        )
+        total_sink += sf
+        total_src += bf
+    else:
+        raise RuntimeError("grid_solve_ref did not converge")
+    return total_sink, total_src, h, e, cap, cap_sink, cap_src
+
+
+# ---------------------------------------------------------------------------
+# CSA refine wave oracle
+# ---------------------------------------------------------------------------
+
+
+def csa_forward_ref(cost, f, px, py, ex, ey, eps):
+    cost = np.asarray(cost, dtype=np.int64)
+    f = np.asarray(f, dtype=np.int64).copy()
+    px = np.asarray(px, dtype=np.int64).copy()
+    py = np.asarray(py, dtype=np.int64)
+    ex = np.asarray(ex, dtype=np.int64).copy()
+    ey = np.asarray(ey, dtype=np.int64).copy()
+    n = cost.shape[0]
+    pushes = relabels = 0
+
+    decisions = []
+    for x in range(n):
+        if ex[x] <= 0:
+            continue
+        best_c, best_y = int(INF), -1
+        for y in range(n):
+            if f[x, y] == 0:
+                c = int(cost[x, y] - py[y])
+                if c < best_c:
+                    best_c, best_y = c, y
+        if best_y == -1:
+            continue
+        if best_c < -px[x]:
+            decisions.append((x, best_y, None))
+        else:
+            decisions.append((x, -1, -(best_c + int(eps))))
+
+    for x, y, newp in decisions:
+        if y == -1:
+            px[x] = newp
+            relabels += 1
+        else:
+            f[x, y] += 1
+            ex[x] -= 1
+            ey[y] += 1
+            pushes += 1
+    return f, px, ex, ey, pushes, relabels
+
+
+def csa_backward_ref(cost, f, px, py, ex, ey, eps):
+    cost = np.asarray(cost, dtype=np.int64)
+    f = np.asarray(f, dtype=np.int64).copy()
+    px = np.asarray(px, dtype=np.int64)
+    py = np.asarray(py, dtype=np.int64).copy()
+    ex = np.asarray(ex, dtype=np.int64).copy()
+    ey = np.asarray(ey, dtype=np.int64).copy()
+    n = cost.shape[0]
+    pushes = relabels = 0
+
+    decisions = []
+    for y in range(n):
+        if ey[y] <= 0:
+            continue
+        best_c, best_x = int(INF), -1
+        for x in range(n):
+            if f[x, y] == 1:
+                c = int(-cost[x, y] - px[x])
+                if c < best_c:
+                    best_c, best_x = c, x
+        if best_x == -1:
+            continue
+        if best_c < -py[y]:
+            decisions.append((y, best_x, None))
+        else:
+            decisions.append((y, -1, -(best_c + int(eps))))
+
+    for y, x, newp in decisions:
+        if x == -1:
+            py[y] = newp
+            relabels += 1
+        else:
+            f[x, y] -= 1
+            ey[y] -= 1
+            ex[x] += 1
+            pushes += 1
+    return f, py, ex, ey, pushes, relabels
+
+
+def csa_wave_ref(cost, f, px, py, ex, ey, eps):
+    f, px, ex, ey, p1, r1 = csa_forward_ref(cost, f, px, py, ex, ey, eps)
+    f, py, ex, ey, p2, r2 = csa_backward_ref(cost, f, px, py, ex, ey, eps)
+    return f, px, py, ex, ey, p1 + p2, r1 + r2
+
+
+def csa_refine_ref(cost, px, py, eps, max_waves=100000):
+    """Full refine at one eps from the de-saturated state (f = 0)."""
+    n = cost.shape[0]
+    f = np.zeros((n, n), dtype=np.int64)
+    ex = np.ones(n, dtype=np.int64)
+    ey = -np.ones(n, dtype=np.int64)
+    px = np.asarray(px, dtype=np.int64).copy()
+    py = np.asarray(py, dtype=np.int64).copy()
+    # Price initialisation, Algorithm 5.2 lines 5-6.
+    for x in range(n):
+        px[x] = -min(int(cost[x, y] - py[y]) for y in range(n)) - int(eps)
+    for _ in range(max_waves):
+        if not ((ex > 0).any() or (ey > 0).any()):
+            break
+        f, px, py, ex, ey, _, _ = csa_wave_ref(cost, f, px, py, ex, ey, eps)
+    else:
+        raise RuntimeError("csa_refine_ref did not converge")
+    return f, px, py
+
+
+def csa_solve_ref(weights, alpha=10):
+    """Full cost-scaling solve (max-weight assignment) — ground truth driver.
+
+    weights: int array [n, n].  Returns (assignment list, total weight).
+    """
+    w = np.asarray(weights, dtype=np.int64)
+    n = w.shape[0]
+    # Max-weight -> min-cost, scaled by (n + 1) for exact integer scaling.
+    cost = -w * (n + 1)
+    px = np.zeros(n, dtype=np.int64)
+    py = np.zeros(n, dtype=np.int64)
+    eps = max(1, int(np.abs(cost).max()))
+    while True:
+        f, px, py = csa_refine_ref(cost, px, py, eps)
+        if eps == 1:
+            break
+        eps = max(1, (eps + alpha - 1) // alpha)
+    assign = [int(np.argmax(f[x])) for x in range(n)]
+    total = int(sum(w[x, assign[x]] for x in range(n)))
+    return assign, total
+
+
+# ---------------------------------------------------------------------------
+# Ground-truth solvers
+# ---------------------------------------------------------------------------
+
+
+def ford_fulkerson(n_nodes, edges, s, t):
+    """Max-flow via BFS augmenting paths.  edges: list of (u, v, cap)."""
+    capm = {}
+    adj = [[] for _ in range(n_nodes)]
+    for u, v, c in edges:
+        if (u, v) not in capm:
+            capm[(u, v)] = 0
+            capm[(v, u)] = capm.get((v, u), 0)
+            adj[u].append(v)
+            adj[v].append(u)
+        capm[(u, v)] += c
+    flow = 0
+    while True:
+        parent = {s: s}
+        q = deque([s])
+        while q and t not in parent:
+            u = q.popleft()
+            for v in adj[u]:
+                if v not in parent and capm.get((u, v), 0) > 0:
+                    parent[v] = u
+                    q.append(v)
+        if t not in parent:
+            return flow
+        # Find the bottleneck along the path.
+        bott = int(INF)
+        v = t
+        while v != s:
+            u = parent[v]
+            bott = min(bott, capm[(u, v)])
+            v = u
+        v = t
+        while v != s:
+            u = parent[v]
+            capm[(u, v)] -= bott
+            capm[(v, u)] = capm.get((v, u), 0) + bott
+            v = u
+        flow += int(bott)
+
+
+def grid_to_edges(cap, cap_sink, source_excess):
+    """Convert an *initial* grid instance to an edge list for ford_fulkerson.
+
+    The device state encodes the source arcs implicitly: ``source_excess``
+    holds u(s, x) (preloaded excess).  Node ids: cell (i, j) -> i*W + j,
+    source = H*W, sink = H*W + 1.
+    """
+    cap = np.asarray(cap)
+    H, Wd = cap.shape[1:]
+    s, t = H * Wd, H * Wd + 1
+    edges = []
+    for i in range(H):
+        for j in range(Wd):
+            u = i * Wd + j
+            for a, (di, dj) in enumerate(_DIRS):
+                ni, nj = i + di, j + dj
+                if 0 <= ni < H and 0 <= nj < Wd and cap[a, i, j] > 0:
+                    edges.append((u, ni * Wd + nj, int(cap[a, i, j])))
+            if cap_sink[i, j] > 0:
+                edges.append((u, t, int(cap_sink[i, j])))
+            if source_excess[i, j] > 0:
+                edges.append((s, u, int(source_excess[i, j])))
+    return H * Wd + 2, edges, s, t
+
+
+def brute_force_assignment(weights):
+    """Exact max-weight assignment by permutation scan (n <= 8)."""
+    w = np.asarray(weights)
+    n = w.shape[0]
+    assert n <= 8, "brute force limited to n <= 8"
+    best, best_perm = None, None
+    for perm in itertools.permutations(range(n)):
+        tot = int(sum(w[i, perm[i]] for i in range(n)))
+        if best is None or tot > best:
+            best, best_perm = tot, list(perm)
+    return best_perm, best

@@ -1,0 +1,140 @@
+"""L2: the JAX compute graph around the L1 Pallas kernels.
+
+One *super-step* = a dynamic number (`outer`, a runtime scalar) of kernel
+invocations, each of which runs up to ``K_INNER`` VMEM-resident waves.  The
+paper's ``CYCLE`` parameter maps to ``K_INNER * outer``: the Rust coordinator
+chooses `outer` per host round, so a single AOT artifact per *shape* serves
+every CYCLE setting.
+
+The activity counter is computed inside the kernel and threaded through the
+loop so the super-step exits early once the instance is quiescent — the
+device-side analogue of the paper's "all excesses stay the same" stopping
+rule, without extra host round-trips.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.csa_wave import K_INNER_DEFAULT as CSA_K_INNER
+from compile.kernels.csa_wave import make_csa_kernel
+from compile.kernels.grid_wave import K_INNER_DEFAULT as GRID_K_INNER
+from compile.kernels.grid_wave import make_grid_kernel
+
+# Stats vector layout shared with the Rust runtime (keep in sync with
+# rust/src/runtime/device.rs).
+GRID_STATS = ("sink_flow", "src_flow", "active", "pushes", "relabels", "waves")
+CSA_STATS = ("active_x", "active_y", "pushes", "relabels", "waves", "zero")
+
+
+def make_grid_superstep(height: int, width: int, k_inner: int = GRID_K_INNER):
+    """Returns f(h, e, cap, cap_sink, cap_src, outer) -> (state..., stats)."""
+    kern = make_grid_kernel(height, width, k_inner)
+
+    def superstep(h, e, cap, cap_sink, cap_src, outer):
+        zero = jnp.int32(0)
+
+        def cond(carry):
+            i, _h, _e, _cap, _cs, _csrc, _sf, _bf, _pu, _rl, _wv, act = carry
+            return (i < outer) & (act > 0)
+
+        def body(carry):
+            i, h, e, cap, cs, csrc, sf, bf, pu, rl, wv, _act = carry
+            h, e, cap, cs, csrc, stats = kern(h, e, cap, cs, csrc)
+            return (
+                i + 1,
+                h,
+                e,
+                cap,
+                cs,
+                csrc,
+                sf + stats[0],
+                bf + stats[1],
+                pu + stats[3],
+                rl + stats[4],
+                wv + stats[5],
+                stats[2],
+            )
+
+        init_act = jnp.sum((e > 0).astype(jnp.int32), dtype=jnp.int32)
+        carry = (
+            zero, h, e, cap, cap_sink, cap_src,
+            zero, zero, zero, zero, zero, init_act,
+        )
+        (_, h, e, cap, cap_sink, cap_src, sf, bf, pu, rl, wv, act) = jax.lax.while_loop(
+            cond, body, carry
+        )
+        stats = jnp.stack([sf, bf, act, pu, rl, wv])
+        return h, e, cap, cap_sink, cap_src, stats
+
+    return superstep
+
+
+def make_csa_superstep(n: int, k_inner: int = CSA_K_INNER):
+    """Returns f(cost, f, px, py, ex, ey, eps, outer) -> (state..., stats)."""
+    kern = make_csa_kernel(n, k_inner)
+
+    def superstep(cost, f, px, py, ex, ey, eps, outer):
+        zero = jnp.int32(0)
+
+        def activity(ex, ey):
+            return jnp.sum((ex > 0).astype(jnp.int32)) + jnp.sum(
+                (ey > 0).astype(jnp.int32)
+            )
+
+        def cond(carry):
+            i, _f, _px, _py, _ex, _ey, _pu, _rl, _wv, act = carry
+            return (i < outer) & (act > 0)
+
+        def body(carry):
+            i, f, px, py, ex, ey, pu, rl, wv, _act = carry
+            f, px, py, ex, ey, stats = kern(cost, f, px, py, ex, ey, eps)
+            return (
+                i + 1,
+                f,
+                px,
+                py,
+                ex,
+                ey,
+                pu + stats[2],
+                rl + stats[3],
+                wv + stats[4],
+                stats[0] + stats[1],
+            )
+
+        init_act = activity(ex, ey).astype(jnp.int32)
+        carry = (zero, f, px, py, ex, ey, zero, zero, zero, init_act)
+        (_, f, px, py, ex, ey, pu, rl, wv, _act) = jax.lax.while_loop(cond, body, carry)
+        ax = jnp.sum((ex > 0).astype(jnp.int32), dtype=jnp.int32)
+        ay = jnp.sum((ey > 0).astype(jnp.int32), dtype=jnp.int32)
+        stats = jnp.stack([ax, ay, pu, rl, wv, jnp.int32(0)])
+        return f, px, py, ex, ey, stats
+
+    return superstep
+
+
+def grid_example_args(height: int, width: int):
+    i32 = jnp.int32
+    return (
+        jax.ShapeDtypeStruct((height, width), i32),      # h
+        jax.ShapeDtypeStruct((height, width), i32),      # e
+        jax.ShapeDtypeStruct((4, height, width), i32),   # cap
+        jax.ShapeDtypeStruct((height, width), i32),      # cap_sink
+        jax.ShapeDtypeStruct((height, width), i32),      # cap_src
+        jax.ShapeDtypeStruct((), i32),                   # outer
+    )
+
+
+def csa_example_args(n: int):
+    i32 = jnp.int32
+    return (
+        jax.ShapeDtypeStruct((n, n), i32),  # cost
+        jax.ShapeDtypeStruct((n, n), i32),  # f
+        jax.ShapeDtypeStruct((n,), i32),    # px
+        jax.ShapeDtypeStruct((n,), i32),    # py
+        jax.ShapeDtypeStruct((n,), i32),    # ex
+        jax.ShapeDtypeStruct((n,), i32),    # ey
+        jax.ShapeDtypeStruct((1,), i32),    # eps
+        jax.ShapeDtypeStruct((), i32),      # outer
+    )

@@ -1,0 +1,71 @@
+"""Shared fixtures and instance generators for the kernel test-suite."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+
+def random_grid_instance(rng, height, width, max_cap=15, frac_source=0.3, frac_sink=0.3):
+    """A random grid max-flow instance in device layout.
+
+    Returns (h, e, cap, cap_sink, cap_src, source_excess) where
+    source_excess = u(s, x) is the preloaded excess (Hong's Init).
+    """
+    cap = rng.integers(0, max_cap + 1, size=(4, height, width)).astype(np.int32)
+    # Arcs leaving the grid do not exist.
+    cap[0, 0, :] = 0
+    cap[1, -1, :] = 0
+    cap[2, :, 0] = 0
+    cap[3, :, -1] = 0
+    cap_sink = np.where(
+        rng.random((height, width)) < frac_sink,
+        rng.integers(1, max_cap + 1, size=(height, width)),
+        0,
+    ).astype(np.int32)
+    source_excess = np.where(
+        rng.random((height, width)) < frac_source,
+        rng.integers(1, max_cap + 1, size=(height, width)),
+        0,
+    ).astype(np.int32)
+    # Avoid degenerate overlap making flow trivial: fine either way.
+    h = np.zeros((height, width), np.int32)
+    e = source_excess.copy()
+    cap_src = source_excess.copy()  # u_f(x, s) = u(s, x) after saturation
+    return h, e, cap, cap_sink, cap_src, source_excess
+
+
+def random_midstate_grid(rng, height, width, max_cap=15):
+    """An arbitrary (not necessarily reachable) mid-execution grid state —
+    used to check wave parity pointwise on a much larger state space."""
+    h = rng.integers(0, 2 * height * width + 4, size=(height, width)).astype(np.int32)
+    e = rng.integers(0, 20, size=(height, width)).astype(np.int32)
+    cap = rng.integers(0, max_cap + 1, size=(4, height, width)).astype(np.int32)
+    cap[0, 0, :] = 0
+    cap[1, -1, :] = 0
+    cap[2, :, 0] = 0
+    cap[3, :, -1] = 0
+    cap_sink = rng.integers(0, max_cap + 1, size=(height, width)).astype(np.int32)
+    cap_src = rng.integers(0, max_cap + 1, size=(height, width)).astype(np.int32)
+    return h, e, cap, cap_sink, cap_src
+
+
+def random_csa_refine_start(rng, n, max_weight=100):
+    """A fresh refine state for a random weight matrix, paper scaling."""
+    w = rng.integers(0, max_weight + 1, size=(n, n)).astype(np.int64)
+    cost = (-w * (n + 1)).astype(np.int32)
+    eps = max(1, int(np.abs(cost).max()))
+    f = np.zeros((n, n), np.int32)
+    ex = np.ones(n, np.int32)
+    ey = -np.ones(n, np.int32)
+    py = np.zeros(n, np.int32)
+    px = np.array(
+        [-(min(int(cost[x, y]) for y in range(n))) - eps for x in range(n)],
+        np.int32,
+    )
+    return w, cost, f, px, py, ex, ey, eps
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(12345)

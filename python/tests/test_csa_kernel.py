@@ -1,0 +1,181 @@
+"""CSA refine kernel vs the numpy oracle + optimality ground truth."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.csa_wave import (
+    backward_half_wave,
+    forward_half_wave,
+    make_csa_kernel,
+    wave,
+)
+from tests.conftest import random_csa_refine_start
+
+
+def run_ref_waves(cost, f, px, py, ex, ey, eps, k):
+    tot = dict(pu=0, rl=0, waves=0)
+    for _ in range(k):
+        if not ((np.asarray(ex) > 0).any() or (np.asarray(ey) > 0).any()):
+            break
+        f, px, py, ex, ey, pu, rl = ref.csa_wave_ref(cost, f, px, py, ex, ey, eps)
+        tot["pu"] += pu
+        tot["rl"] += rl
+        tot["waves"] += 1
+    return f, px, py, ex, ey, tot
+
+
+def random_midstate(rng, n, max_weight=100):
+    """Arbitrary consistent mid-refine state: f has row sums in {0,1}."""
+    w = rng.integers(0, max_weight + 1, size=(n, n)).astype(np.int64)
+    cost = (-w * (n + 1)).astype(np.int32)
+    eps = max(1, int(np.abs(cost).max()) // int(rng.integers(1, 12)))
+    f = np.zeros((n, n), np.int32)
+    for x in range(n):
+        if rng.random() < 0.6:
+            f[x, rng.integers(0, n)] = 1
+    ex = (1 - f.sum(axis=1)).astype(np.int32)
+    ey = (f.sum(axis=0) - 1).astype(np.int32)
+    px = rng.integers(-5000, 100, size=n).astype(np.int32)
+    py = rng.integers(-5000, 100, size=n).astype(np.int32)
+    return cost, f, px, py, ex, ey, eps
+
+
+class TestHalfWaves:
+    @pytest.mark.parametrize("seed", range(10))
+    def test_forward_half_wave_matches_ref(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(2, 9))
+        cost, f, px, py, ex, ey, eps = random_midstate(rng, n)
+        got = forward_half_wave(
+            jnp.array(cost), jnp.array(f), jnp.array(px), jnp.array(py),
+            jnp.array(ex), jnp.array(ey), jnp.int32(eps),
+        )
+        want = ref.csa_forward_ref(cost, f, px, py, ex, ey, eps)
+        np.testing.assert_array_equal(np.asarray(got[0]), want[0], "f")
+        np.testing.assert_array_equal(np.asarray(got[1]), want[1], "px")
+        np.testing.assert_array_equal(np.asarray(got[2]), want[2], "ex")
+        np.testing.assert_array_equal(np.asarray(got[3]), want[3], "ey")
+        assert (int(got[4]), int(got[5])) == want[4:]
+
+    @pytest.mark.parametrize("seed", range(10))
+    def test_backward_half_wave_matches_ref(self, seed):
+        rng = np.random.default_rng(100 + seed)
+        n = int(rng.integers(2, 9))
+        cost, f, px, py, ex, ey, eps = random_midstate(rng, n)
+        # Make some Y nodes active so the backward wave has work.
+        got = backward_half_wave(
+            jnp.array(cost), jnp.array(f), jnp.array(px), jnp.array(py),
+            jnp.array(ex), jnp.array(ey), jnp.int32(eps),
+        )
+        want = ref.csa_backward_ref(cost, f, px, py, ex, ey, eps)
+        np.testing.assert_array_equal(np.asarray(got[0]), want[0], "f")
+        np.testing.assert_array_equal(np.asarray(got[1]), want[1], "py")
+        np.testing.assert_array_equal(np.asarray(got[2]), want[2], "ex")
+        np.testing.assert_array_equal(np.asarray(got[3]), want[3], "ey")
+
+
+class TestKernelMultiWave:
+    @pytest.mark.parametrize("seed", range(5))
+    @pytest.mark.parametrize("k_inner", [1, 4, 16])
+    def test_kernel_equals_k_ref_waves(self, seed, k_inner):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(3, 9))
+        _, cost, f, px, py, ex, ey, eps = random_csa_refine_start(rng, n)
+        kern = make_csa_kernel(n, k_inner=k_inner)
+        got = kern(
+            jnp.array(cost), jnp.array(f), jnp.array(px), jnp.array(py),
+            jnp.array(ex), jnp.array(ey), jnp.array([eps], dtype=jnp.int32),
+        )
+        fw, pxw, pyw, exw, eyw, tot = run_ref_waves(cost, f, px, py, ex, ey, eps, k_inner)
+        np.testing.assert_array_equal(np.asarray(got[0]), fw)
+        np.testing.assert_array_equal(np.asarray(got[1]), pxw)
+        np.testing.assert_array_equal(np.asarray(got[2]), pyw)
+        np.testing.assert_array_equal(np.asarray(got[3]), exw)
+        np.testing.assert_array_equal(np.asarray(got[4]), eyw)
+        stats = np.asarray(got[5])
+        assert stats[2] == tot["pu"] and stats[3] == tot["rl"] and stats[4] == tot["waves"]
+
+    def test_kernel_early_exit_when_quiescent(self):
+        n = 4
+        kern = make_csa_kernel(n, k_inner=8)
+        cost = jnp.zeros((n, n), jnp.int32)
+        f = jnp.eye(n, dtype=jnp.int32)
+        z = jnp.zeros((n,), jnp.int32)
+        got = kern(cost, f, z, z, z, z, jnp.array([1], jnp.int32))
+        assert int(np.asarray(got[5])[4]) == 0  # waves
+
+
+class TestRefineSolve:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_full_scaling_solve_is_optimal(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(2, 8))
+        w = rng.integers(0, 101, size=(n, n))
+        assign, total = ref.csa_solve_ref(w)
+        _, best = ref.brute_force_assignment(w)
+        assert total == best
+        assert sorted(assign) == list(range(n))
+
+    def test_kernel_refine_to_quiescence_yields_perfect_matching(self, ):
+        rng = np.random.default_rng(3)
+        n = 6
+        _, cost, f, px, py, ex, ey, eps = random_csa_refine_start(rng, n)
+        kern = make_csa_kernel(n, k_inner=16)
+        state = [jnp.array(cost), jnp.array(f), jnp.array(px), jnp.array(py),
+                 jnp.array(ex), jnp.array(ey)]
+        for _ in range(500):
+            out = kern(state[0], state[1], state[2], state[3], state[4], state[5],
+                       jnp.array([eps], dtype=jnp.int32))
+            state = [state[0]] + list(out[:5])
+            stats = np.asarray(out[5])
+            if stats[0] + stats[1] == 0:
+                break
+        else:
+            pytest.fail("refine did not converge")
+        fm = np.asarray(state[1])
+        assert (fm.sum(axis=0) == 1).all() and (fm.sum(axis=1) == 1).all()
+
+
+class TestWaveInvariants:
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 10))
+    def test_wave_preserves_matching_invariants(self, seed, n):
+        rng = np.random.default_rng(seed)
+        cost, f, px, py, ex, ey, eps = random_midstate(rng, n)
+        out = wave(
+            jnp.array(cost), jnp.array(f), jnp.array(px), jnp.array(py),
+            jnp.array(ex), jnp.array(ey), jnp.int32(eps),
+        )
+        f2, px2, py2, ex2, ey2 = (np.asarray(a) for a in out[:5])
+        # f stays 0/1 with row sums <= 1; excess bookkeeping consistent.
+        assert ((f2 == 0) | (f2 == 1)).all()
+        np.testing.assert_array_equal(ex2, 1 - f2.sum(axis=1))
+        np.testing.assert_array_equal(ey2, f2.sum(axis=0) - 1)
+        # Total excess is conserved by pushes (pushes just move units).
+        assert ex2.sum() + ey2.sum() == np.asarray(ex).sum() + np.asarray(ey).sum()
+        # Prices never increase (paper Lemma 5.2).
+        assert (px2 <= px).all() and (py2 <= py).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_kernel_matches_ref_on_hypothesis_states(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(2, 11))
+        cost, f, px, py, ex, ey, eps = random_midstate(rng, n)
+        kern = make_csa_kernel(n, k_inner=3)
+        got = kern(
+            jnp.array(cost), jnp.array(f), jnp.array(px), jnp.array(py),
+            jnp.array(ex), jnp.array(ey), jnp.array([eps], dtype=jnp.int32),
+        )
+        want = run_ref_waves(cost, f, px, py, ex, ey, eps, 3)
+        np.testing.assert_array_equal(np.asarray(got[0]), want[0])
+        np.testing.assert_array_equal(np.asarray(got[1]), want[1])
+        np.testing.assert_array_equal(np.asarray(got[2]), want[2])
+        np.testing.assert_array_equal(np.asarray(got[3]), want[3])
+        np.testing.assert_array_equal(np.asarray(got[4]), want[4])

@@ -1,0 +1,196 @@
+"""Grid push-relabel kernel vs the numpy oracle.
+
+The single most important correctness signal of the build path: the Pallas
+kernel (interpret=True) must be *bit-exact* against the loop-and-snapshot
+oracle in kernels/ref.py, wave for wave, on both reachable and adversarial
+states.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.grid_wave import make_grid_kernel, wave
+from tests.conftest import random_grid_instance, random_midstate_grid
+
+
+def run_ref_waves(h, e, cap, cs, csrc, k):
+    """k waves of the oracle with early exit, mirroring the kernel loop."""
+    tot = dict(sf=0, bf=0, pu=0, rl=0, waves=0)
+    for _ in range(k):
+        if not (np.asarray(e) > 0).any():
+            break
+        h, e, cap, cs, csrc, sf, bf, pu, rl = ref.grid_wave_ref(h, e, cap, cs, csrc)
+        tot["sf"] += sf
+        tot["bf"] += bf
+        tot["pu"] += pu
+        tot["rl"] += rl
+        tot["waves"] += 1
+    return h, e, cap, cs, csrc, tot
+
+
+def assert_state_equal(kernel_out, ref_out, what=""):
+    names = ["h", "e", "cap", "cap_sink", "cap_src"]
+    for name, a, b in zip(names, kernel_out, ref_out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=f"{what}:{name}")
+
+
+class TestSingleWave:
+    @pytest.mark.parametrize("seed", range(8))
+    @pytest.mark.parametrize("shape", [(3, 3), (4, 6), (8, 8)])
+    def test_wave_matches_ref_on_fresh_instance(self, seed, shape):
+        rng = np.random.default_rng(seed)
+        h, e, cap, cs, csrc, _ = random_grid_instance(rng, *shape)
+        got = wave(jnp.array(h), jnp.array(e), jnp.array(cap), jnp.array(cs), jnp.array(csrc), shape[0] * shape[1] + 2)
+        want = ref.grid_wave_ref(h, e, cap, cs, csrc)
+        assert_state_equal(got[:5], want[:5], f"seed={seed}")
+        assert (int(got[5]), int(got[6]), int(got[7]), int(got[8])) == want[5:]
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_wave_matches_ref_on_adversarial_midstate(self, seed):
+        rng = np.random.default_rng(1000 + seed)
+        state = random_midstate_grid(rng, 5, 7)
+        got = wave(*(jnp.array(a) for a in state), 5 * 7 + 2)
+        want = ref.grid_wave_ref(*state)
+        assert_state_equal(got[:5], want[:5], f"adv seed={seed}")
+
+    def test_wave_no_active_nodes_is_identity(self):
+        h = np.zeros((4, 4), np.int32)
+        e = np.zeros((4, 4), np.int32)
+        cap = np.ones((4, 4, 4), np.int32)
+        cs = np.ones((4, 4), np.int32)
+        csrc = np.zeros((4, 4), np.int32)
+        got = wave(jnp.array(h), jnp.array(e), jnp.array(cap), jnp.array(cs), jnp.array(csrc), 18)
+        assert_state_equal(got[:5], (h, e, cap, cs, csrc))
+        assert int(got[7]) == 0 and int(got[8]) == 0
+
+    def test_wave_single_active_pushes_to_sink(self):
+        # One active node with a sink arc: must push min(e, cap) to the sink.
+        h = np.array([[1]], np.int32)
+        e = np.array([[5]], np.int32)
+        cap = np.zeros((4, 1, 1), np.int32)
+        cs = np.array([[3]], np.int32)
+        csrc = np.array([[5]], np.int32)
+        out = wave(jnp.array(h), jnp.array(e), jnp.array(cap), jnp.array(cs), jnp.array(csrc), 3)
+        assert int(out[5]) == 3  # sink_flow
+        assert np.asarray(out[1])[0, 0] == 2  # leftover excess
+        assert np.asarray(out[3])[0, 0] == 0  # sink arc saturated
+
+    def test_wave_relabel_when_no_lower_neighbour(self):
+        # Active node whose only residual neighbour is higher -> relabel.
+        h = np.array([[2, 5]], np.int32)
+        e = np.array([[4, 0]], np.int32)
+        cap = np.zeros((4, 1, 2), np.int32)
+        cap[3, 0, 0] = 9  # east arc to the higher neighbour
+        cs = np.zeros((1, 2), np.int32)
+        csrc = np.zeros((1, 2), np.int32)
+        out = wave(jnp.array(h), jnp.array(e), jnp.array(cap), jnp.array(cs), jnp.array(csrc), 4)
+        assert np.asarray(out[0])[0, 0] == 6  # h = h(nb) + 1
+        assert int(out[8]) == 1
+
+
+class TestKernelMultiWave:
+    @pytest.mark.parametrize("seed", range(4))
+    @pytest.mark.parametrize("k_inner", [1, 3, 16])
+    def test_kernel_equals_k_ref_waves(self, seed, k_inner):
+        rng = np.random.default_rng(seed)
+        H, W = 6, 6
+        h, e, cap, cs, csrc, _ = random_grid_instance(rng, H, W)
+        kern = make_grid_kernel(H, W, k_inner=k_inner)
+        got = kern(jnp.array(h), jnp.array(e), jnp.array(cap), jnp.array(cs), jnp.array(csrc))
+        want = run_ref_waves(h, e, cap, cs, csrc, k_inner)
+        assert_state_equal(got[:5], want[:5], f"k={k_inner}")
+        stats = np.asarray(got[5])
+        tot = want[5]
+        assert stats[0] == tot["sf"] and stats[1] == tot["bf"]
+        assert stats[3] == tot["pu"] and stats[4] == tot["rl"]
+        assert stats[5] == tot["waves"]
+
+    def test_kernel_early_exit_when_quiescent(self):
+        # Already-quiescent instance: zero waves run.
+        H = W = 4
+        kern = make_grid_kernel(H, W, k_inner=8)
+        z = jnp.zeros((H, W), jnp.int32)
+        got = kern(z, z, jnp.zeros((4, H, W), jnp.int32), z, z)
+        assert int(np.asarray(got[5])[5]) == 0  # waves
+
+
+class TestEndToEnd:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_wave_solve_equals_ford_fulkerson(self, seed):
+        rng = np.random.default_rng(seed)
+        H, W = (4, 4) if seed % 2 else (5, 3)
+        h, e, cap, cs, csrc, src_exc = random_grid_instance(rng, H, W)
+        sink_total, src_total, *_ = ref.grid_solve_ref(h, e, cap, cs, csrc)
+        n, edges, s, t = ref.grid_to_edges(cap, cs, src_exc)
+        assert sink_total == ref.ford_fulkerson(n, edges, s, t)
+        # Conservation: everything injected either reached t or returned to s.
+        assert sink_total + src_total == int(src_exc.sum())
+
+    def test_kernel_solve_equals_ford_fulkerson(self):
+        rng = np.random.default_rng(7)
+        H = W = 5
+        h, e, cap, cs, csrc, src_exc = random_grid_instance(rng, H, W)
+        kern = make_grid_kernel(H, W, k_inner=16)
+        state = [jnp.array(a) for a in (h, e, cap, cs, csrc)]
+        sink_total = 0
+        for _ in range(2000):
+            *state, stats = kern(*state)
+            stats = np.asarray(stats)
+            sink_total += int(stats[0])
+            if stats[2] == 0:
+                break
+        else:
+            pytest.fail("kernel did not converge")
+        n, edges, s, t = ref.grid_to_edges(cap, cs, src_exc)
+        assert sink_total == ref.ford_fulkerson(n, edges, s, t)
+
+
+class TestWaveInvariants:
+    """Hypothesis: invariants hold on arbitrary random mid-states."""
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        height=st.integers(2, 6),
+        width=st.integers(2, 6),
+    )
+    def test_wave_preserves_mass_and_caps(self, seed, height, width):
+        rng = np.random.default_rng(seed)
+        h, e, cap, cs, csrc = random_midstate_grid(rng, height, width)
+        out = wave(
+            jnp.array(h), jnp.array(e), jnp.array(cap), jnp.array(cs), jnp.array(csrc),
+            height * width + 2,
+        )
+        h2, e2, cap2, cs2, csrc2 = (np.asarray(a) for a in out[:5])
+        sf, bf = int(out[5]), int(out[6])
+        # Mass conservation: excess + outflows is invariant.
+        assert e2.sum() + sf + bf == e.sum()
+        # Capacities stay non-negative and pairwise sums are preserved.
+        assert (cap2 >= 0).all() and (cs2 >= 0).all() and (csrc2 >= 0).all()
+        pair_ns = cap[0, 1:, :] + cap[1, :-1, :]
+        pair_ns2 = cap2[0, 1:, :] + cap2[1, :-1, :]
+        np.testing.assert_array_equal(pair_ns, pair_ns2)
+        pair_we = cap[2, :, 1:] + cap[3, :, :-1]
+        pair_we2 = cap2[2, :, 1:] + cap2[3, :, :-1]
+        np.testing.assert_array_equal(pair_we, pair_we2)
+        # Heights never decrease and only change for active nodes.
+        assert (h2 >= h).all()
+        assert (h2[e <= 0] == h[e <= 0]).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_kernel_matches_ref_on_hypothesis_states(self, seed):
+        rng = np.random.default_rng(seed)
+        height = int(rng.integers(2, 7))
+        width = int(rng.integers(2, 7))
+        state = random_midstate_grid(rng, height, width)
+        kern = make_grid_kernel(height, width, k_inner=3)
+        got = kern(*(jnp.array(a) for a in state))
+        want = run_ref_waves(*state, 3)
+        assert_state_equal(got[:5], want[:5], f"hyp seed={seed}")

@@ -1,0 +1,49 @@
+//! E6 (claim C5): the ALPHA sweep — the paper chose ALPHA = 10 "because
+//! in our tests other values much extended the running time" (§5.5).
+//! Swept for the sequential engine (with heuristics) and the wave engine.
+
+use flowmatch::assignment::csa::SequentialCsa;
+use flowmatch::assignment::wave::WaveCsa;
+use flowmatch::assignment::AssignmentSolver;
+use flowmatch::benchkit::{Cell, Measure, Table};
+use flowmatch::util::stats::Summary;
+use flowmatch::util::Rng;
+use flowmatch::workloads::uniform_costs;
+
+const ALPHAS: &[i64] = &[2, 4, 8, 10, 16, 32, 64];
+
+fn main() {
+    let measure = Measure::default().from_env();
+    for (n, seed) in [(30usize, 1u64), (64, 2)] {
+        let mut rng = Rng::seeded(seed);
+        let inst = uniform_costs(&mut rng, n, 100);
+
+        let mut table = Table::new(
+            &format!("E6: ALPHA sweep, n={n}, C=100"),
+            &[
+                "alpha",
+                "refines",
+                "seq ops",
+                "seq time",
+                "wave waves",
+                "wave time",
+            ],
+        );
+        for &alpha in ALPHAS {
+            let seq = SequentialCsa::with_alpha(alpha).solve(&inst).unwrap();
+            let wave = WaveCsa { alpha: Some(alpha) }.solve(&inst).unwrap();
+            assert_eq!(seq.weight, wave.weight, "alpha={alpha}");
+            let ts = measure.run(|| SequentialCsa::with_alpha(alpha).solve(&inst).unwrap());
+            let tw = measure.run(|| WaveCsa { alpha: Some(alpha) }.solve(&inst).unwrap());
+            table.row(vec![
+                Cell::Int(alpha),
+                Cell::Int(seq.stats.refines as i64),
+                Cell::Int((seq.stats.pushes + seq.stats.relabels) as i64),
+                Summary::of(&ts).unwrap().into(),
+                Cell::Int(wave.stats.waves as i64),
+                Summary::of(&tw).unwrap().into(),
+            ]);
+        }
+        table.print();
+    }
+}

@@ -1,0 +1,37 @@
+//! E5 (claim C4): every assignment engine on the §6 workload (uniform
+//! costs <= 100) — optimality parity with Hungarian, operation counts,
+//! wall-clock.
+
+use flowmatch::assignment::{self, AssignmentSolver};
+use flowmatch::benchkit::{Cell, Measure, Table};
+use flowmatch::util::stats::Summary;
+use flowmatch::util::Rng;
+use flowmatch::workloads::uniform_costs;
+
+fn main() {
+    let measure = Measure::default().from_env();
+    for (n, seed) in [(8usize, 1u64), (16, 2), (30, 3)] {
+        let mut rng = Rng::seeded(seed);
+        let inst = uniform_costs(&mut rng, n, 100);
+        let want = assignment::hungarian::Hungarian.solve(&inst).unwrap().weight;
+
+        let mut table = Table::new(
+            &format!("E5: assignment engines, n={n}, C=100 (optimum {want})"),
+            &["engine", "weight", "pushes", "relabels", "refines", "time"],
+        );
+        for engine in assignment::all_engines() {
+            let got = engine.solve(&inst).unwrap();
+            assert_eq!(got.weight, want, "{}", engine.name());
+            let times = measure.run(|| engine.solve(&inst).unwrap());
+            table.row(vec![
+                engine.name().into(),
+                Cell::Int(got.weight),
+                Cell::Int(got.stats.pushes as i64),
+                Cell::Int(got.stats.relabels as i64),
+                Cell::Int(got.stats.refines as i64),
+                Summary::of(&times).unwrap().into(),
+            ]);
+        }
+        table.print();
+    }
+}

@@ -1,0 +1,60 @@
+//! E8 (claim C7): the sequential/parallel crossover — §6: "In the case of
+//! the large complete bipartite graphs the presented algorithm is not
+//! efficient."  On a serial host the data-parallel wave engine pays
+//! O(n²) work per wave; the sequential double-scan engine does targeted
+//! work.  The table reports the time ratio as n grows — the paper's shape
+//! is the growing ratio (parallel loses ground with size when parallel
+//! hardware does not scale with the instance).
+
+use flowmatch::assignment::csa::SequentialCsa;
+use flowmatch::assignment::csa_lockfree::LockFreeCsa;
+use flowmatch::assignment::hungarian::Hungarian;
+use flowmatch::assignment::wave::WaveCsa;
+use flowmatch::assignment::AssignmentSolver;
+use flowmatch::benchkit::{Cell, Measure, Table};
+use flowmatch::util::stats::Summary;
+use flowmatch::util::Rng;
+use flowmatch::workloads::uniform_costs;
+
+fn main() {
+    let measure = Measure::quick().from_env();
+    let mut table = Table::new(
+        "E8: sequential vs parallel-style engines as n grows (C=100)",
+        &[
+            "n",
+            "hungarian",
+            "csa-seq",
+            "csa-lockfree(2)",
+            "csa-wave",
+            "wave/seq ratio",
+        ],
+    );
+    for (n, seed) in [(8usize, 1u64), (16, 2), (30, 3), (48, 4), (64, 5)] {
+        let mut rng = Rng::seeded(seed);
+        let inst = uniform_costs(&mut rng, n, 100);
+        let want = Hungarian.solve(&inst).unwrap().weight;
+        for engine in [
+            &SequentialCsa::default() as &dyn AssignmentSolver,
+            &LockFreeCsa::default(),
+            &WaveCsa::default(),
+        ] {
+            assert_eq!(engine.solve(&inst).unwrap().weight, want);
+        }
+        let th = Summary::of(&measure.run(|| Hungarian.solve(&inst).unwrap())).unwrap();
+        let ts =
+            Summary::of(&measure.run(|| SequentialCsa::default().solve(&inst).unwrap())).unwrap();
+        let tl =
+            Summary::of(&measure.run(|| LockFreeCsa::default().solve(&inst).unwrap())).unwrap();
+        let tw = Summary::of(&measure.run(|| WaveCsa::default().solve(&inst).unwrap())).unwrap();
+        table.row(vec![
+            Cell::Int(n as i64),
+            th.into(),
+            ts.clone().into(),
+            tl.into(),
+            tw.clone().into(),
+            Cell::Float(tw.mean / ts.mean.max(1e-12)),
+        ]);
+    }
+    table.print();
+    println!("(growing wave/seq ratio = the paper's §6 large-graph caveat)");
+}

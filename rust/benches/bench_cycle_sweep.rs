@@ -1,0 +1,79 @@
+//! E4 (claim C3): the CYCLE sweep — how many device waves to run between
+//! host rounds.  The paper tuned CYCLE = 7000 CUDA iterations for the
+//! max-flow kernel; here the sweep shows the same interior-optimum shape:
+//! tiny CYCLE pays host-round + transfer overhead, huge CYCLE wastes waves
+//! after local quiescence.  Both the native twin and the PJRT artifact
+//! (16x16/32x32/64x64) are swept, with transfer bytes from the runtime log.
+
+use flowmatch::benchkit::{Cell, Measure, Table};
+use flowmatch::gridflow::{GridExecutor, HybridGridSolver, NativeGridExecutor};
+use flowmatch::runtime::{transfer, ArtifactRegistry, GridDevice};
+use flowmatch::util::stats::Summary;
+use flowmatch::util::Rng;
+use flowmatch::workloads::random_grid;
+
+const CYCLES: &[usize] = &[16, 64, 256, 1024, 4096, 16384];
+
+fn main() {
+    let measure = Measure::quick().from_env();
+    let registry = ArtifactRegistry::discover().ok();
+
+    for (h, w, seed) in [(32usize, 32usize, 1u64), (64, 64, 2)] {
+        let mut rng = Rng::seeded(seed);
+        let net = random_grid(&mut rng, h, w, 30, 0.25, 0.25);
+
+        let mut table = Table::new(
+            &format!("E4: CYCLE sweep on grid {h}x{w} (waves between host rounds)"),
+            &[
+                "backend", "CYCLE", "flow", "host rounds", "waves", "H2D KiB", "D2H KiB", "time",
+            ],
+        );
+
+        for &cycle in CYCLES {
+            // Native twin.
+            let solver = HybridGridSolver::with_cycle(cycle);
+            let mut exec = NativeGridExecutor::default();
+            let report = solver.solve(&net, &mut exec).unwrap();
+            let times = measure.run(|| {
+                let mut exec = NativeGridExecutor::default();
+                solver.solve(&net, &mut exec).unwrap()
+            });
+            table.row(vec![
+                "native".into(),
+                Cell::Int(cycle as i64),
+                Cell::Int(report.flow),
+                Cell::Int(report.host_rounds as i64),
+                Cell::Int(report.waves),
+                Cell::Missing,
+                Cell::Missing,
+                Summary::of(&times).unwrap().into(),
+            ]);
+
+            // PJRT path with transfer accounting.
+            if let Some(reg) = &registry {
+                if let Ok(mut dev) = GridDevice::for_shape(reg, h, w) {
+                    transfer::GLOBAL.reset();
+                    let report = solver.solve(&net, &mut (dev)).unwrap();
+                    let tx = transfer::GLOBAL.snapshot();
+                    let times = measure.run(|| {
+                        let mut dev = GridDevice::for_shape(reg, h, w).unwrap();
+                        solver.solve(&net, &mut dev).unwrap()
+                    });
+                    table.row(vec![
+                        "pjrt".into(),
+                        Cell::Int(cycle as i64),
+                        Cell::Int(report.flow),
+                        Cell::Int(report.host_rounds as i64),
+                        Cell::Int(report.waves),
+                        Cell::Int((tx.h2d_bytes / 1024) as i64),
+                        Cell::Int((tx.d2h_bytes / 1024) as i64),
+                        Summary::of(&times).unwrap().into(),
+                    ]);
+                }
+            }
+            // keep the trait import used even when artifacts are absent
+            let _ = GridExecutor::k_inner(&NativeGridExecutor::default());
+        }
+        table.print();
+    }
+}

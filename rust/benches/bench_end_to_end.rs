@@ -1,0 +1,97 @@
+//! E7 (claim C6, the headline): per-solve latency of the full PJRT path
+//! on the paper's §6 operating point (n <= 30, costs <= 100; paper: about
+//! 1/20 s on a GTX 560 Ti), plus the batched-service view with queueing.
+
+use flowmatch::assignment::hungarian::Hungarian;
+use flowmatch::assignment::AssignmentSolver;
+use flowmatch::benchkit::{Cell, Measure, Table};
+use flowmatch::coordinator::{AssignmentService, PjrtAssignmentDriver, ServiceConfig};
+use flowmatch::runtime::{transfer, ArtifactRegistry};
+use flowmatch::util::stats::Summary;
+use flowmatch::util::Rng;
+use flowmatch::workloads::{uniform_costs, RequestTrace, TraceConfig};
+
+fn main() {
+    let measure = Measure::default().from_env();
+    let Ok(registry) = ArtifactRegistry::discover() else {
+        println!("bench_end_to_end: no artifacts (run `make artifacts`); skipping");
+        return;
+    };
+
+    // --- per-solve latency, PJRT driver ----------------------------------
+    let mut table = Table::new(
+        "E7a: PJRT per-solve latency (paper bar: 50 ms at n=30, C=100)",
+        &[
+            "n", "weight ok", "device rounds", "H2D KiB/solve", "time", "vs 50 ms",
+        ],
+    );
+    for (n, seed) in [(8usize, 1u64), (16, 2), (30, 3)] {
+        let mut rng = Rng::seeded(seed);
+        let inst = uniform_costs(&mut rng, n, 100);
+        let want = Hungarian.solve(&inst).unwrap().weight;
+        let mut driver = PjrtAssignmentDriver::for_size(&registry, n).unwrap();
+        let (got, tel) = driver.solve(&inst).unwrap();
+        assert_eq!(got.weight, want);
+
+        transfer::GLOBAL.reset();
+        let times = measure.run(|| driver.solve(&inst).unwrap());
+        let tx = transfer::GLOBAL.snapshot();
+        let per_solve_kib = tx.h2d_bytes / 1024 / (measure.samples as u64 + measure.warmup as u64);
+        let summary = Summary::of(&times).unwrap();
+        let verdict = if summary.p50 <= 0.05 { "MEETS" } else { "misses" };
+        table.row(vec![
+            Cell::Int(n as i64),
+            "yes".into(),
+            Cell::Int(tel.device_rounds as i64),
+            Cell::Int(per_solve_kib as i64),
+            summary.clone().into(),
+            format!("{verdict} ({:.1} ms p50)", summary.p50 * 1e3).into(),
+        ]);
+    }
+    table.print();
+
+    // --- batched service under an open-loop trace ------------------------
+    let mut table = Table::new(
+        "E7b: batched service, open-loop trace at 20 fps (n=30, C<=100)",
+        &["requests", "backend", "p50", "p99", "mean", "throughput rps"],
+    );
+    for requests in [30usize, 60] {
+        let cfg = TraceConfig {
+            requests,
+            n: 30,
+            max_weight: 100,
+            arrival_gap: 0.05,
+            geometric_frac: 0.5,
+        };
+        let mut rng = Rng::seeded(42);
+        let trace = RequestTrace::generate(&mut rng, &cfg);
+        let service = AssignmentService::start(ServiceConfig {
+            max_batch: 8,
+            use_pjrt: true,
+            max_n: 30,
+        });
+        let start = std::time::Instant::now();
+        let mut receivers = Vec::new();
+        for req in &trace.requests {
+            let target = std::time::Duration::from_secs_f64(req.arrival);
+            if let Some(wait) = target.checked_sub(start.elapsed()) {
+                std::thread::sleep(wait);
+            }
+            receivers.push(service.submit(req.instance.clone()));
+        }
+        for rx in receivers {
+            rx.recv().unwrap().unwrap();
+        }
+        let report = service.shutdown().unwrap();
+        table.row(vec![
+            Cell::Int(requests as i64),
+            report.backend.into(),
+            Cell::Float(report.p50_latency * 1e3),
+            Cell::Float(report.p99_latency * 1e3),
+            Cell::Float(report.mean_latency * 1e3),
+            Cell::Float(report.throughput_rps),
+        ]);
+    }
+    table.print();
+    println!("(latency columns in milliseconds)");
+}

@@ -1,0 +1,62 @@
+//! E2 (claim C1): every max-flow engine on every workload family —
+//! value parity, operation counts vs the O(V²E) envelope, wall-clock.
+
+use flowmatch::benchkit::{Cell, Measure, Table};
+use flowmatch::graph::FlowNetwork;
+use flowmatch::maxflow;
+use flowmatch::util::stats::Summary;
+use flowmatch::util::Rng;
+use flowmatch::workloads::{random_grid, rmf_network};
+
+fn workloads() -> Vec<(String, FlowNetwork)> {
+    let mut out = Vec::new();
+    for (h, w, cap, seed) in [(16usize, 16usize, 30i64, 1u64), (32, 32, 30, 2)] {
+        let mut rng = Rng::seeded(seed);
+        out.push((
+            format!("grid {h}x{w} C={cap}"),
+            random_grid(&mut rng, h, w, cap, 0.25, 0.25).to_flow_network(),
+        ));
+    }
+    let mut rng = Rng::seeded(3);
+    out.push(("rmf a=4 f=5".to_string(), rmf_network(&mut rng, 4, 5, 20)));
+    let mut rng = Rng::seeded(4);
+    out.push(("rmf a=6 f=4".to_string(), rmf_network(&mut rng, 6, 4, 20)));
+    out
+}
+
+fn main() {
+    let measure = Measure::default().from_env();
+    for (wname, base) in workloads() {
+        let n = base.node_count() as u64;
+        let m = (base.edge_pair_count() * 2) as u64;
+        let bound = n * n * m;
+        let mut table = Table::new(
+            &format!("E2: max-flow engines on {wname} (V={n}, E={m}; V²E={bound})"),
+            &["engine", "value", "pushes", "relabels", "work/V²E", "time"],
+        );
+        let mut reference = None;
+        for engine in maxflow::all_engines() {
+            let mut g = base.clone();
+            let stats = engine.solve(&mut g).unwrap();
+            flowmatch::graph::validate::assert_max_flow(&g, stats.value)
+                .unwrap_or_else(|e| panic!("{}: {e}", engine.name()));
+            match reference {
+                None => reference = Some(stats.value),
+                Some(v) => assert_eq!(v, stats.value, "{}", engine.name()),
+            }
+            let times = measure.run(|| {
+                let mut g = base.clone();
+                engine.solve(&mut g).unwrap()
+            });
+            table.row(vec![
+                engine.name().into(),
+                Cell::Int(stats.value),
+                Cell::Int(stats.pushes as i64),
+                Cell::Int(stats.relabels as i64),
+                Cell::Float(stats.work() as f64 / bound as f64),
+                Summary::of(&times).unwrap().into(),
+            ]);
+        }
+        table.print();
+    }
+}

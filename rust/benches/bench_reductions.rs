@@ -1,0 +1,69 @@
+//! E1 (Fig. 1): soundness + cost of the reductions — cardinality matching
+//! via max-flow, and assignment via the explicit §5 max-flow-min-cost
+//! instance, against direct algorithms.
+
+use flowmatch::assignment::{hungarian::Hungarian, AssignmentSolver};
+use flowmatch::benchkit::{Cell, Measure, Table};
+use flowmatch::maxflow::dinic::Dinic;
+use flowmatch::reductions;
+use flowmatch::util::stats::Summary;
+use flowmatch::util::Rng;
+use flowmatch::workloads::uniform_costs;
+
+fn main() {
+    let measure = Measure::default().from_env();
+
+    // --- matching via max flow ------------------------------------------
+    let mut t1 = Table::new(
+        "E1a: cardinality matching via max-flow (vs augmenting-path reference)",
+        &["nx x ny", "density", "matching", "reference", "time (flow path)"],
+    );
+    for (nx, ny, dens, seed) in [(20, 20, 0.2, 1u64), (40, 40, 0.1, 2), (30, 50, 0.3, 3)] {
+        let mut rng = Rng::seeded(seed);
+        let edges: Vec<Vec<usize>> = (0..nx)
+            .map(|_| (0..ny).filter(|_| rng.chance(dens)).collect())
+            .collect();
+        let want = reductions::matching_to_flow::reference_matching(nx, ny, &edges);
+        let (size, _) = reductions::max_cardinality_matching(nx, ny, &edges, &Dinic).unwrap();
+        assert_eq!(size, want);
+        let times =
+            measure.run(|| reductions::max_cardinality_matching(nx, ny, &edges, &Dinic).unwrap());
+        t1.row(vec![
+            format!("{nx}x{ny}").into(),
+            Cell::Float(dens),
+            Cell::Int(size as i64),
+            Cell::Int(want as i64),
+            Summary::of(&times).unwrap().into(),
+        ]);
+    }
+    t1.print();
+
+    // --- assignment via MCMF ---------------------------------------------
+    let mut t2 = Table::new(
+        "E1b: assignment via explicit I' + SSP (vs Hungarian)",
+        &[
+            "n",
+            "weight (reduction)",
+            "weight (hungarian)",
+            "time (reduction)",
+            "time (hungarian)",
+        ],
+    );
+    for (n, seed) in [(8usize, 4u64), (16, 5), (30, 6)] {
+        let mut rng = Rng::seeded(seed);
+        let inst = uniform_costs(&mut rng, n, 100);
+        let (_, red_w) = reductions::solve_assignment_via_mcmf(&inst).unwrap();
+        let hun = Hungarian.solve(&inst).unwrap();
+        assert_eq!(red_w, hun.weight);
+        let tr = measure.run(|| reductions::solve_assignment_via_mcmf(&inst).unwrap());
+        let th = measure.run(|| Hungarian.solve(&inst).unwrap());
+        t2.row(vec![
+            Cell::Int(n as i64),
+            Cell::Int(red_w),
+            Cell::Int(hun.weight),
+            Summary::of(&tr).unwrap().into(),
+            Summary::of(&th).unwrap().into(),
+        ]);
+    }
+    t2.print();
+}

@@ -1,0 +1,66 @@
+//! E8b (claim C8): wave-tile geometry — the analogue of Vineet &
+//! Narayanan's 32x8 thread-block tuning and the paper's 32x16 for
+//! assignment.  On this stack the tunable is K_INNER (VMEM-resident waves
+//! per kernel invocation): larger K amortises invocation overhead but
+//! wastes waves once locally quiescent, smaller K returns control too
+//! often.  Swept for the native twin and the PJRT device (whose K_INNER
+//! is baked at AOT time; its row shows outer-loop granularity instead).
+
+use flowmatch::benchkit::{Cell, Measure, Table};
+use flowmatch::gridflow::{HybridGridSolver, NativeGridExecutor};
+use flowmatch::runtime::{ArtifactRegistry, GridDevice};
+use flowmatch::util::stats::Summary;
+use flowmatch::util::Rng;
+use flowmatch::workloads::random_grid;
+
+fn main() {
+    let measure = Measure::quick().from_env();
+    let registry = ArtifactRegistry::discover().ok();
+    let (h, w) = (32usize, 32usize);
+    let mut rng = Rng::seeded(7);
+    let net = random_grid(&mut rng, h, w, 30, 0.25, 0.25);
+    let cycle = 512;
+
+    let mut table = Table::new(
+        &format!("E8b: wave-tile (K_INNER) sweep on grid {h}x{w}, CYCLE={cycle}"),
+        &["backend", "k_inner", "flow", "waves", "host rounds", "time"],
+    );
+    for k_inner in [1usize, 4, 16, 64, 256] {
+        let solver = HybridGridSolver::with_cycle(cycle);
+        let mut exec = NativeGridExecutor::with_k_inner(k_inner);
+        let report = solver.solve(&net, &mut exec).unwrap();
+        let times = measure.run(|| {
+            let mut exec = NativeGridExecutor::with_k_inner(k_inner);
+            solver.solve(&net, &mut exec).unwrap()
+        });
+        table.row(vec![
+            "native".into(),
+            Cell::Int(k_inner as i64),
+            Cell::Int(report.flow),
+            Cell::Int(report.waves),
+            Cell::Int(report.host_rounds as i64),
+            Summary::of(&times).unwrap().into(),
+        ]);
+    }
+    if let Some(reg) = &registry {
+        if let Ok(dev) = GridDevice::for_shape(reg, h, w) {
+            let k = dev.k_inner;
+            let solver = HybridGridSolver::with_cycle(cycle);
+            let mut dev = dev;
+            let report = solver.solve(&net, &mut dev).unwrap();
+            let times = measure.run(|| {
+                let mut dev = GridDevice::for_shape(reg, h, w).unwrap();
+                solver.solve(&net, &mut dev).unwrap()
+            });
+            table.row(vec![
+                "pjrt (AOT-baked)".into(),
+                Cell::Int(k as i64),
+                Cell::Int(report.flow),
+                Cell::Int(report.waves),
+                Cell::Int(report.host_rounds as i64),
+                Summary::of(&times).unwrap().into(),
+            ]);
+        }
+    }
+    table.print();
+}

@@ -1,0 +1,123 @@
+//! Bertsekas ε-scaling auction algorithm — the second baseline for the
+//! E5/E8 tables.  Bidders (X) raise prices on their best object (Y) by the
+//! bid increment `best - second_best + ε`; ε-scaling keeps the total work
+//! near O(n² log(nC)).
+
+use anyhow::Result;
+
+use crate::graph::AssignmentInstance;
+
+use super::{AssignStats, AssignmentResult, AssignmentSolver};
+
+#[derive(Debug, Clone)]
+pub struct Auction {
+    /// ε divisor per scaling phase.
+    pub alpha: i64,
+}
+
+impl Default for Auction {
+    fn default() -> Self {
+        Self { alpha: 4 }
+    }
+}
+
+impl AssignmentSolver for Auction {
+    fn name(&self) -> &'static str {
+        "auction"
+    }
+
+    fn solve(&self, inst: &AssignmentInstance) -> Result<AssignmentResult> {
+        let n = inst.n;
+        if n == 0 {
+            return Ok(AssignmentResult {
+                assignment: vec![],
+                weight: 0,
+                stats: AssignStats::default(),
+            });
+        }
+        let mut stats = AssignStats::default();
+        // Scale weights by (n+1) so ε = 1 certifies optimality.
+        let k = (n + 1) as i64;
+        let values: Vec<i64> = inst.weights.iter().map(|&w| w * k).collect();
+        let vmax = values.iter().copied().max().unwrap_or(0);
+
+        let mut prices = vec![0i64; n];
+        let mut owner: Vec<Option<usize>> = vec![None; n]; // y -> x
+        let mut assigned: Vec<Option<usize>> = vec![None; n]; // x -> y
+
+        let mut eps = (vmax / 2).max(1);
+        loop {
+            stats.refines += 1;
+            // Dissolve the matching at each phase start (ε-scaling restart).
+            owner.iter_mut().for_each(|o| *o = None);
+            assigned.iter_mut().for_each(|a| *a = None);
+            let mut free: Vec<usize> = (0..n).collect();
+
+            while let Some(x) = free.pop() {
+                // Find best and second-best net value for bidder x.
+                let mut best_y = 0usize;
+                let mut best = i64::MIN;
+                let mut second = i64::MIN;
+                for y in 0..n {
+                    let net = values[x * n + y] - prices[y];
+                    if net > best {
+                        second = best;
+                        best = net;
+                        best_y = y;
+                    } else if net > second {
+                        second = net;
+                    }
+                }
+                if second == i64::MIN {
+                    second = best; // n = 1
+                }
+                // Bid: raise the price so x is indifferent to second best.
+                prices[best_y] += best - second + eps;
+                stats.pushes += 1;
+                if let Some(prev) = owner[best_y].replace(x) {
+                    assigned[prev] = None;
+                    free.push(prev);
+                }
+                assigned[x] = Some(best_y);
+            }
+
+            if eps == 1 {
+                break;
+            }
+            eps = (eps / self.alpha).max(1);
+        }
+
+        let assignment: Vec<usize> = assigned.into_iter().map(|y| y.expect("complete")).collect();
+        Ok(AssignmentResult {
+            weight: inst.assignment_weight(&assignment),
+            assignment,
+            stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::hungarian::Hungarian;
+
+    #[test]
+    fn matches_hungarian_on_random() {
+        let mut rng = crate::util::Rng::seeded(5);
+        for n in [1usize, 2, 4, 6, 10, 16] {
+            let w: Vec<i64> = (0..n * n).map(|_| rng.range_i64(0, 100)).collect();
+            let inst = AssignmentInstance::new(n, w);
+            let a = Auction::default().solve(&inst).unwrap();
+            let h = Hungarian.solve(&inst).unwrap();
+            assert_eq!(a.weight, h.weight, "n={n}");
+        }
+    }
+
+    #[test]
+    fn single_item() {
+        let inst = AssignmentInstance::new(1, vec![42]);
+        let r = Auction::default().solve(&inst).unwrap();
+        assert_eq!(r.assignment, vec![0]);
+        assert_eq!(r.weight, 42);
+    }
+}

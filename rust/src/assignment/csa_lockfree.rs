@@ -1,0 +1,307 @@
+//! Lock-free parallel refine (Algorithm 5.4) — the paper's §5 core
+//! contribution — on OS threads and atomics:
+//!
+//! * each thread owns a stripe of X nodes *and* a stripe of Y nodes and is
+//!   the only writer of their prices (relabels need no RMW, exactly as
+//!   the paper observes for heights);
+//! * excesses and the 0/1 arc flows are `AtomicI64`/`AtomicI32` updated
+//!   with fetch-add — the write conflicts the paper resolves with
+//!   `atomicAdd`/`atomicSub`;
+//! * the trace-equivalence argument (Lemmas 5.3–5.5) covers the
+//!   interleavings; transient ε-optimality violations (case 5b) are
+//!   self-correcting, so the final state is only audited after
+//!   quiescence.
+
+use std::sync::atomic::{AtomicBool, AtomicI32, AtomicI64, Ordering};
+
+use anyhow::Result;
+
+use crate::graph::AssignmentInstance;
+
+use super::scaling::{solve_scaling, CsaState, RefineEngine};
+use super::{AssignStats, AssignmentResult, AssignmentSolver};
+
+const INF: i64 = 1 << 60;
+
+/// Lock-free refine engine.
+#[derive(Debug, Clone)]
+pub struct LockFreeRefine {
+    pub threads: usize,
+}
+
+impl Default for LockFreeRefine {
+    fn default() -> Self {
+        Self { threads: 2 }
+    }
+}
+
+struct SharedCsa<'a> {
+    n: usize,
+    cost: &'a [i64],
+    f: Vec<AtomicI32>,
+    px: Vec<AtomicI64>,
+    py: Vec<AtomicI64>,
+    ex: Vec<AtomicI64>,
+    ey: Vec<AtomicI64>,
+    eps: i64,
+    done: AtomicBool,
+    pushes: AtomicI64,
+    relabels: AtomicI64,
+}
+
+impl<'a> SharedCsa<'a> {
+    /// One Algorithm 5.4 step for X node `x`; true if an op was applied.
+    fn step_x(&self, x: usize) -> bool {
+        let n = self.n;
+        if self.ex[x].load(Ordering::SeqCst) <= 0 {
+            return false;
+        }
+        // Lines 6-10: min partially-reduced cost over residual row arcs.
+        let mut best = INF;
+        let mut best_y = usize::MAX;
+        for y in 0..n {
+            if self.f[x * n + y].load(Ordering::SeqCst) == 0 {
+                let c = self.cost[x * n + y] - self.py[y].load(Ordering::SeqCst);
+                if c < best {
+                    best = c;
+                    best_y = y;
+                }
+            }
+        }
+        if best_y == usize::MAX {
+            return false;
+        }
+        if best < -self.px[x].load(Ordering::SeqCst) {
+            // PUSH (lines 12-16): one unit along the argmin arc.  Only this
+            // thread flips f[x, y] 0 -> 1 (x's owner), so fetch_add is safe.
+            // ORDER MATTERS: credit the destination before debiting the
+            // source so total excess is never transiently understated —
+            // otherwise the quiescence detector can fire with a unit
+            // "in flight" and refine would terminate on a non-flow.
+            self.f[x * n + best_y].fetch_add(1, Ordering::SeqCst);
+            self.ey[best_y].fetch_add(1, Ordering::SeqCst);
+            self.ex[x].fetch_sub(1, Ordering::SeqCst);
+            self.pushes.fetch_add(1, Ordering::Relaxed);
+        } else {
+            // RELABEL (line 18): only x's owner writes px[x].
+            self.px[x].store(-(best + self.eps), Ordering::SeqCst);
+            self.relabels.fetch_add(1, Ordering::Relaxed);
+        }
+        true
+    }
+
+    /// Symmetric step for Y node `y` (pushing back along matched arcs).
+    fn step_y(&self, y: usize) -> bool {
+        let n = self.n;
+        if self.ey[y].load(Ordering::SeqCst) <= 0 {
+            return false;
+        }
+        let mut best = INF;
+        let mut best_x = usize::MAX;
+        for x in 0..n {
+            if self.f[x * n + y].load(Ordering::SeqCst) == 1 {
+                let c = -self.cost[x * n + y] - self.px[x].load(Ordering::SeqCst);
+                if c < best {
+                    best = c;
+                    best_x = x;
+                }
+            }
+        }
+        if best_x == usize::MAX {
+            return false;
+        }
+        if best < -self.py[y].load(Ordering::SeqCst) {
+            // Same credit-before-debit ordering as step_x.
+            self.f[best_x * n + y].fetch_sub(1, Ordering::SeqCst);
+            self.ex[best_x].fetch_add(1, Ordering::SeqCst);
+            self.ey[y].fetch_sub(1, Ordering::SeqCst);
+            self.pushes.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.py[y].store(-(best + self.eps), Ordering::SeqCst);
+            self.relabels.fetch_add(1, Ordering::Relaxed);
+        }
+        true
+    }
+
+    fn quiescent(&self) -> bool {
+        self.ex.iter().all(|e| e.load(Ordering::SeqCst) <= 0)
+            && self.ey.iter().all(|e| e.load(Ordering::SeqCst) <= 0)
+    }
+}
+
+impl RefineEngine for LockFreeRefine {
+    fn name(&self) -> &'static str {
+        "csa-lockfree"
+    }
+
+    fn refine(&mut self, st: &mut CsaState, eps: i64, stats: &mut AssignStats) -> Result<()> {
+        let n = st.n;
+        let shared = SharedCsa {
+            n,
+            cost: &st.cost,
+            f: st.f.iter().map(|&v| AtomicI32::new(v)).collect(),
+            px: st.px.iter().map(|&v| AtomicI64::new(v)).collect(),
+            py: st.py.iter().map(|&v| AtomicI64::new(v)).collect(),
+            ex: st.ex.iter().map(|&v| AtomicI64::new(v)).collect(),
+            ey: st.ey.iter().map(|&v| AtomicI64::new(v)).collect(),
+            eps,
+            done: AtomicBool::new(false),
+            pushes: AtomicI64::new(0),
+            relabels: AtomicI64::new(0),
+        };
+
+        let workers = self.threads.max(1);
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let shared = &shared;
+                scope.spawn(move || {
+                    let my_x: Vec<usize> = (0..n).filter(|v| v % workers == w).collect();
+                    let my_y: Vec<usize> = (0..n).filter(|v| v % workers == w).collect();
+                    loop {
+                        if shared.done.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let mut did = false;
+                        for &x in &my_x {
+                            // The paper's while e(x) > 0, bounded per sweep.
+                            let mut burst = 0;
+                            while shared.step_x(x) {
+                                did = true;
+                                burst += 1;
+                                if burst >= 32 {
+                                    break;
+                                }
+                            }
+                        }
+                        for &y in &my_y {
+                            let mut burst = 0;
+                            while shared.step_y(y) {
+                                did = true;
+                                burst += 1;
+                                if burst >= 32 {
+                                    break;
+                                }
+                            }
+                        }
+                        if !did && shared.quiescent() {
+                            shared.done.store(true, Ordering::SeqCst);
+                            break;
+                        }
+                        if !did {
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+            }
+        });
+
+        // Copy back.
+        for (dst, src) in st.f.iter_mut().zip(&shared.f) {
+            *dst = src.load(Ordering::SeqCst);
+        }
+        for (dst, src) in st.px.iter_mut().zip(&shared.px) {
+            *dst = src.load(Ordering::SeqCst);
+        }
+        for (dst, src) in st.py.iter_mut().zip(&shared.py) {
+            *dst = src.load(Ordering::SeqCst);
+        }
+        for (dst, src) in st.ex.iter_mut().zip(&shared.ex) {
+            *dst = src.load(Ordering::SeqCst);
+        }
+        for (dst, src) in st.ey.iter_mut().zip(&shared.ey) {
+            *dst = src.load(Ordering::SeqCst);
+        }
+        stats.pushes += shared.pushes.load(Ordering::Relaxed) as u64;
+        stats.relabels += shared.relabels.load(Ordering::Relaxed) as u64;
+        Ok(())
+    }
+}
+
+/// Full lock-free CSA solver.
+#[derive(Debug, Clone)]
+pub struct LockFreeCsa {
+    pub alpha: i64,
+    pub threads: usize,
+}
+
+impl Default for LockFreeCsa {
+    fn default() -> Self {
+        Self {
+            alpha: 10,
+            threads: 2,
+        }
+    }
+}
+
+impl LockFreeCsa {
+    pub fn with_threads(threads: usize) -> Self {
+        Self {
+            threads,
+            ..Self::default()
+        }
+    }
+}
+
+impl AssignmentSolver for LockFreeCsa {
+    fn name(&self) -> &'static str {
+        "csa-lockfree"
+    }
+
+    fn solve(&self, inst: &AssignmentInstance) -> Result<AssignmentResult> {
+        let mut engine = LockFreeRefine {
+            threads: self.threads,
+        };
+        solve_scaling(inst, self.alpha, &mut engine)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::hungarian::Hungarian;
+
+    #[test]
+    fn single_thread_matches_hungarian() {
+        let mut rng = crate::util::Rng::seeded(41);
+        for n in [2usize, 5, 9] {
+            let w: Vec<i64> = (0..n * n).map(|_| rng.range_i64(0, 100)).collect();
+            let inst = AssignmentInstance::new(n, w);
+            let got = LockFreeCsa::with_threads(1).solve(&inst).unwrap();
+            let want = Hungarian.solve(&inst).unwrap();
+            assert_eq!(got.weight, want.weight, "n={n}");
+        }
+    }
+
+    #[test]
+    fn multi_thread_matches_hungarian() {
+        let mut rng = crate::util::Rng::seeded(43);
+        for threads in [2usize, 4] {
+            for n in [3usize, 8, 12] {
+                let w: Vec<i64> = (0..n * n).map(|_| rng.range_i64(0, 100)).collect();
+                let inst = AssignmentInstance::new(n, w);
+                let got = LockFreeCsa::with_threads(threads).solve(&inst).unwrap();
+                let want = Hungarian.solve(&inst).unwrap();
+                assert_eq!(got.weight, want.weight, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn final_state_is_one_optimal() {
+        let mut rng = crate::util::Rng::seeded(47);
+        let n = 6;
+        let w: Vec<i64> = (0..n * n).map(|_| rng.range_i64(0, 100)).collect();
+        let inst = AssignmentInstance::new(n, w);
+        let (mut st, eps0) = CsaState::new(&inst);
+        let mut stats = AssignStats::default();
+        let mut engine = LockFreeRefine { threads: 2 };
+        for eps in crate::assignment::scaling::epsilon_schedule(eps0, 10) {
+            st.reset_refine(eps);
+            engine.refine(&mut st, eps, &mut stats).unwrap();
+            // After quiescence the pseudoflow is an eps-optimal flow
+            // (paper Lemma 5.6) — transient violations must be gone.
+            st.check_eps_optimal(eps).unwrap();
+        }
+        assert!(st.is_flow());
+    }
+}

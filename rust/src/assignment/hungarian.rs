@@ -1,0 +1,167 @@
+//! Exact Hungarian algorithm (Jonker–Volgenant shortest-augmenting-path
+//! formulation), O(n³): the ground-truth baseline for every other engine
+//! and the source of exact dual certificates.
+
+use anyhow::Result;
+
+use crate::graph::validate::assert_optimal_assignment;
+use crate::graph::AssignmentInstance;
+
+use super::{AssignStats, AssignmentResult, AssignmentSolver};
+
+pub struct Hungarian;
+
+/// Solve min-cost assignment for a row-major `cost` matrix, returning
+/// (assign, px, py) with exact complementary-slackness duals:
+/// `cost[x][y] + px[x] - py[y] >= 0`, equality on matched arcs.
+pub fn solve_min_cost(n: usize, cost: &[i64]) -> (Vec<usize>, Vec<i64>, Vec<i64>) {
+    assert_eq!(cost.len(), n * n);
+    const INF: i64 = i64::MAX / 4;
+    // 1-based helpers from the classic JV formulation.
+    let mut p = vec![0i64; n + 1]; // potentials for rows (assigned via way)
+    let mut v = vec![0i64; n + 1]; // potentials for columns
+    let mut way = vec![0usize; n + 1];
+    let mut matched_row = vec![0usize; n + 1]; // column -> row (1-based, 0 = free)
+
+    for x in 1..=n {
+        matched_row[0] = x;
+        let mut j0 = 0usize;
+        let mut minv = vec![INF; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = matched_row[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if used[j] {
+                    continue;
+                }
+                let cur = cost[(i0 - 1) * n + (j - 1)] - p[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    p[matched_row[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if matched_row[j0] == 0 {
+                break;
+            }
+        }
+        // Augment along the alternating path.
+        loop {
+            let j1 = way[j0];
+            matched_row[j0] = matched_row[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+
+    let mut assign = vec![0usize; n];
+    for j in 1..=n {
+        if matched_row[j] > 0 {
+            assign[matched_row[j] - 1] = j - 1;
+        }
+    }
+    // Duals: rc(x,y) = cost - p[x+1] - v[y+1] >= 0 with equality on match.
+    // Map to the (px, py) convention of validate::assert_optimal_assignment
+    // (cost + px - py >= 0): px = -p, py = v.
+    let px: Vec<i64> = (1..=n).map(|x| -p[x]).collect();
+    let py: Vec<i64> = (1..=n).map(|j| v[j]).collect();
+    (assign, px, py)
+}
+
+impl AssignmentSolver for Hungarian {
+    fn name(&self) -> &'static str {
+        "hungarian"
+    }
+
+    fn solve(&self, inst: &AssignmentInstance) -> Result<AssignmentResult> {
+        let n = inst.n;
+        if n == 0 {
+            return Ok(AssignmentResult {
+                assignment: vec![],
+                weight: 0,
+                stats: AssignStats::default(),
+            });
+        }
+        // Max-weight -> min-cost.
+        let cost: Vec<i64> = inst.weights.iter().map(|&w| -w).collect();
+        let (assign, px, py) = solve_min_cost(n, &cost);
+        // Self-certify.
+        assert_optimal_assignment(n, &cost, &assign, &px, &py)?;
+        Ok(AssignmentResult {
+            weight: inst.assignment_weight(&assign),
+            assignment: assign,
+            stats: AssignStats::default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hand_checked_3x3() {
+        // w = [[5,1,0],[2,8,1],[0,3,9]] -> diagonal, weight 22.
+        let inst = AssignmentInstance::new(3, vec![5, 1, 0, 2, 8, 1, 0, 3, 9]);
+        let r = Hungarian.solve(&inst).unwrap();
+        assert_eq!(r.assignment, vec![0, 1, 2]);
+        assert_eq!(r.weight, 22);
+    }
+
+    #[test]
+    fn anti_diagonal_instance() {
+        let inst = AssignmentInstance::new(2, vec![0, 9, 9, 0]);
+        let r = Hungarian.solve(&inst).unwrap();
+        assert_eq!(r.assignment, vec![1, 0]);
+        assert_eq!(r.weight, 18);
+    }
+
+    #[test]
+    fn matches_brute_force_up_to_7() {
+        let mut rng = crate::util::Rng::seeded(99);
+        for n in 1..=7usize {
+            for _ in 0..4 {
+                let w: Vec<i64> = (0..n * n).map(|_| rng.range_i64(0, 50)).collect();
+                let inst = AssignmentInstance::new(n, w);
+                let r = Hungarian.solve(&inst).unwrap();
+                let best = brute_force(&inst);
+                assert_eq!(r.weight, best, "n={n}");
+            }
+        }
+    }
+
+    fn brute_force(inst: &AssignmentInstance) -> i64 {
+        fn rec(inst: &AssignmentInstance, x: usize, used: &mut [bool]) -> i64 {
+            if x == inst.n {
+                return 0;
+            }
+            let mut best = i64::MIN;
+            for y in 0..inst.n {
+                if !used[y] {
+                    used[y] = true;
+                    best = best.max(inst.weight(x, y) + rec(inst, x + 1, used));
+                    used[y] = false;
+                }
+            }
+            best
+        }
+        rec(inst, 0, &mut vec![false; inst.n])
+    }
+}

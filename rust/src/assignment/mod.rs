@@ -1,0 +1,124 @@
+//! Assignment-problem engines (§5 of the paper).
+//!
+//! * [`hungarian`] — exact O(n³) Jonker–Volgenant/Kuhn–Munkres baseline
+//!   with dual certificates;
+//! * [`auction`] — Bertsekas ε-scaling auction, second baseline;
+//! * [`csa`] — the sequential cost-scaling algorithm (Algorithm 5.2) with
+//!   the price-update (Algorithm 5.3) and arc-fixing heuristics;
+//! * [`csa_gk`] — Goldberg & Kennedy's version-2 refine (Algorithm 5.1,
+//!   asymmetric ε/2 admissibility), the paper's §5.1 comparison point;
+//! * [`csa_lockfree`] — the paper's contribution: lock-free refine
+//!   (Algorithm 5.4) on threads + atomics;
+//! * [`wave`] — the dense synchronous-wave refine, a bit-exact native twin
+//!   of the L1 Pallas kernel (the PJRT-backed version lives in
+//!   `coordinator::assignment_driver`);
+//! * [`scaling`] — the shared ε-schedule driver (Algorithm 5.0 Min-Cost).
+
+pub mod arc_fixing;
+pub mod auction;
+pub mod csa;
+pub mod csa_gk;
+pub mod csa_lockfree;
+pub mod hungarian;
+pub mod price_update;
+pub mod scaling;
+pub mod wave;
+
+use anyhow::Result;
+
+use crate::graph::AssignmentInstance;
+
+/// Counters for the §6 complexity discussion and the E5-E8 benches.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AssignStats {
+    pub pushes: u64,
+    pub relabels: u64,
+    /// Refine invocations (scaling phases).
+    pub refines: u64,
+    /// Price-update heuristic runs.
+    pub price_updates: u64,
+    /// Arcs frozen by arc fixing (cumulative over refines).
+    pub arcs_fixed: u64,
+    /// Synchronous waves (wave engines only).
+    pub waves: u64,
+}
+
+/// An engine's answer: the matching, its weight, and the counters.
+#[derive(Debug, Clone)]
+pub struct AssignmentResult {
+    /// `assign[x] = y`.
+    pub assignment: Vec<usize>,
+    pub weight: i64,
+    pub stats: AssignStats,
+}
+
+pub trait AssignmentSolver {
+    fn name(&self) -> &'static str;
+    fn solve(&self, inst: &AssignmentInstance) -> Result<AssignmentResult>;
+}
+
+/// All engines, for parity tests and the E5 bench.
+pub fn all_engines() -> Vec<Box<dyn AssignmentSolver>> {
+    vec![
+        Box::new(hungarian::Hungarian),
+        Box::new(auction::Auction::default()),
+        Box::new(csa::SequentialCsa::default()),
+        Box::new(csa_gk::GkCsa::default()),
+        Box::new(csa_lockfree::LockFreeCsa::default()),
+        Box::new(wave::WaveCsa::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst(n: usize, seed: u64) -> AssignmentInstance {
+        let mut rng = crate::util::Rng::seeded(seed);
+        let w: Vec<i64> = (0..n * n).map(|_| rng.range_i64(0, 100)).collect();
+        AssignmentInstance::new(n, w)
+    }
+
+    #[test]
+    fn engines_agree_on_small_instances() {
+        for seed in 0..5u64 {
+            for n in [1usize, 2, 3, 5, 8] {
+                let inst = inst(n, seed * 31 + n as u64);
+                let reference = hungarian::Hungarian.solve(&inst).unwrap();
+                for engine in all_engines() {
+                    let got = engine.solve(&inst).unwrap();
+                    assert!(
+                        AssignmentInstance::is_permutation(&got.assignment),
+                        "{} n={n} seed={seed}: not a permutation",
+                        engine.name()
+                    );
+                    assert_eq!(
+                        got.weight,
+                        reference.weight,
+                        "{} n={n} seed={seed}",
+                        engine.name()
+                    );
+                    assert_eq!(got.weight, inst.assignment_weight(&got.assignment));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_all_equal_weights() {
+        let inst = AssignmentInstance::new(4, vec![7; 16]);
+        for engine in all_engines() {
+            let got = engine.solve(&inst).unwrap();
+            assert_eq!(got.weight, 28, "{}", engine.name());
+        }
+    }
+
+    #[test]
+    fn zero_weights() {
+        let inst = AssignmentInstance::new(3, vec![0; 9]);
+        for engine in all_engines() {
+            let got = engine.solve(&inst).unwrap();
+            assert_eq!(got.weight, 0, "{}", engine.name());
+        }
+    }
+}

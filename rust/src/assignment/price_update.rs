@@ -1,0 +1,199 @@
+//! Price-update heuristic (Algorithm 5.3): a Dial-bucket backward
+//! Dijkstra from the deficit nodes, assigning each node a label `l(v)` =
+//! its ε-distance to a deficit; prices drop by `ε·l(v)` (unscanned nodes
+//! by `ε·(last+1)`).  This is the cost-scaling analogue of the max-flow
+//! global relabel and preserves ε-optimality.
+
+use super::scaling::CsaState;
+
+/// Arc length in ε units (Goldberg's `max(0, ⌊c_p/ε⌋ + 1)` — the paper's
+/// listing omits the clamp/offset, which we restore for correctness).
+#[inline]
+fn arc_len(cp: i64, eps: i64) -> i64 {
+    (cp.div_euclid(eps) + 1).max(0)
+}
+
+/// Run the heuristic; returns the number of scanned nodes.
+///
+/// Node ids: X = 0..n, Y = n..2n.
+pub fn price_update(st: &mut CsaState, eps: i64) -> usize {
+    let n = st.n;
+    if n == 0 {
+        return 0;
+    }
+    let nn = 2 * n;
+    const UNSET: i64 = i64::MAX / 2;
+
+    // Active nodes must all get scanned; deficits seed bucket 0.
+    let mut label = vec![UNSET; nn];
+    let mut scanned = vec![false; nn];
+    let mut active_left = 0usize;
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new()];
+    for x in 0..n {
+        if st.ex[x] > 0 {
+            active_left += 1;
+        }
+        if st.ex[x] < 0 {
+            label[x] = 0;
+            buckets[0].push(x as u32);
+        }
+    }
+    for y in 0..n {
+        if st.ey[y] > 0 {
+            active_left += 1;
+        }
+        if st.ey[y] < 0 {
+            label[n + y] = 0;
+            buckets[0].push((n + y) as u32);
+        }
+    }
+    if buckets[0].is_empty() {
+        return 0; // no deficits: nothing to anchor distances to
+    }
+
+    let mut last = 0i64;
+    let mut scanned_count = 0usize;
+    let mut i = 0usize;
+    while active_left > 0 && i < buckets.len() {
+        while let Some(v) = buckets[i].pop() {
+            let v = v as usize;
+            if scanned[v] || label[v] != i as i64 {
+                continue; // stale entry from a lazy decrease-key
+            }
+            scanned[v] = true;
+            scanned_count += 1;
+            last = i as i64;
+            let is_active = if v < n {
+                st.ex[v] > 0
+            } else {
+                st.ey[v - n] > 0
+            };
+            if is_active {
+                // NOTE: even when this was the last active node, finish
+                // the current bucket — stopping mid-bucket leaves nodes
+                // with tentative labels <= `last` unscanned, and the
+                // uniform `last + 1` drop for unscanned nodes would then
+                // break eps-optimality on arcs into them.  Stopping at a
+                // bucket boundary keeps every unscanned tentative label
+                // >= last + 1, which is exactly what the proof needs.
+                active_left -= 1;
+            }
+            // Relax residual arcs *entering* v.
+            if v < n {
+                // v = x: entering arcs are (y -> x) for matched pairs.
+                let x = v;
+                for y in 0..n {
+                    if st.f[x * n + y] == 1 && !scanned[n + y] {
+                        let cp = -st.cost[x * n + y] - st.px[x] + st.py[y];
+                        let nl = i as i64 + arc_len(cp, eps);
+                        if nl < label[n + y] {
+                            label[n + y] = nl;
+                            push_bucket(&mut buckets, nl as usize, (n + y) as u32);
+                        }
+                    }
+                }
+            } else {
+                // v = y: entering arcs are (x -> y) for unmatched pairs.
+                let y = v - n;
+                for x in 0..n {
+                    if st.f[x * n + y] == 0 && !scanned[x] {
+                        let cp = st.cost[x * n + y] + st.px[x] - st.py[y];
+                        let nl = i as i64 + arc_len(cp, eps);
+                        if nl < label[x] {
+                            label[x] = nl;
+                            push_bucket(&mut buckets, nl as usize, x as u32);
+                        }
+                    }
+                }
+            }
+        }
+        if active_left == 0 {
+            break;
+        }
+        i += 1;
+    }
+
+    // Apply price drops.
+    for x in 0..n {
+        let drop = if scanned[x] { label[x] } else { last + 1 };
+        st.px[x] -= eps * drop;
+    }
+    for y in 0..n {
+        let drop = if scanned[n + y] { label[n + y] } else { last + 1 };
+        st.py[y] -= eps * drop;
+    }
+    scanned_count
+}
+
+fn push_bucket(buckets: &mut Vec<Vec<u32>>, idx: usize, v: u32) {
+    if buckets.len() <= idx {
+        buckets.resize_with(idx + 1, Vec::new);
+    }
+    buckets[idx].push(v);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::wave::native_wave;
+    use crate::graph::AssignmentInstance;
+
+    fn mid_refine_state() -> (CsaState, i64) {
+        let inst = AssignmentInstance::new(
+            5,
+            vec![
+                3, 9, 1, 0, 4, 4, 7, 2, 0, 5, 8, 6, 1, 2, 3, 4, 9, 9, 0, 1, 2, 5, 5, 5, 5,
+            ],
+        );
+        let (mut st, eps0) = CsaState::new(&inst);
+        st.reset_refine(eps0);
+        // Advance a few waves to a non-trivial mid-state.
+        for _ in 0..2 {
+            native_wave(&mut st, eps0);
+        }
+        (st, eps0)
+    }
+
+    #[test]
+    fn preserves_eps_optimality() {
+        let (mut st, eps) = mid_refine_state();
+        st.check_eps_optimal(eps).unwrap();
+        price_update(&mut st, eps);
+        st.check_eps_optimal(eps).unwrap();
+    }
+
+    #[test]
+    fn prices_never_increase() {
+        let (mut st, eps) = mid_refine_state();
+        let px0 = st.px.clone();
+        let py0 = st.py.clone();
+        price_update(&mut st, eps);
+        assert!(st.px.iter().zip(&px0).all(|(a, b)| a <= b));
+        assert!(st.py.iter().zip(&py0).all(|(a, b)| a <= b));
+    }
+
+    #[test]
+    fn noop_when_no_deficits() {
+        let inst = AssignmentInstance::new(2, vec![1, 2, 3, 4]);
+        let (mut st, eps) = CsaState::new(&inst);
+        // Perfect matching, all excesses zero.
+        st.f = vec![1, 0, 0, 1];
+        st.ex = vec![0, 0];
+        st.ey = vec![0, 0];
+        let scanned = price_update(&mut st, eps);
+        assert_eq!(scanned, 0);
+    }
+
+    #[test]
+    fn refine_still_converges_after_update() {
+        let (mut st, eps) = mid_refine_state();
+        price_update(&mut st, eps);
+        let mut guard = 0;
+        while st.active_count() > 0 {
+            native_wave(&mut st, eps);
+            guard += 1;
+            assert!(guard < 100_000);
+        }
+        assert!(st.is_flow());
+    }
+}

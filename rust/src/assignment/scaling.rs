@@ -1,0 +1,202 @@
+//! The shared cost-scaling driver (Algorithm 5.0 `Min-Cost`): maintain
+//! (ε, f, p), call a [`RefineEngine`] per phase, halt once the refine at
+//! ε = 1 (scaled integers) completes — 1-optimality at costs scaled by
+//! (n+1) certifies an optimal assignment (DESIGN.md §7).
+
+use anyhow::Result;
+
+use crate::graph::AssignmentInstance;
+
+use super::{AssignStats, AssignmentResult};
+
+/// Refine-level state shared by every CSA engine: dense 0/1 flow matrix,
+/// prices and excesses, over the scaled min-cost matrix.
+#[derive(Debug, Clone)]
+pub struct CsaState {
+    pub n: usize,
+    /// Scaled min-cost matrix `c(x,y) = -w(x,y) * (n+1)`, row-major.
+    pub cost: Vec<i64>,
+    /// Unit flows: `f[x*n+y] ∈ {0,1}`.
+    pub f: Vec<i32>,
+    pub px: Vec<i64>,
+    pub py: Vec<i64>,
+    /// Excess of X nodes (`1 - rowsum`).
+    pub ex: Vec<i64>,
+    /// Excess of Y nodes (`colsum - 1`).
+    pub ey: Vec<i64>,
+}
+
+impl CsaState {
+    pub fn new(inst: &AssignmentInstance) -> (Self, i64) {
+        let n = inst.n;
+        let st = Self {
+            n,
+            cost: inst.scaled_costs_i64(),
+            f: vec![0; n * n],
+            px: vec![0; n],
+            py: vec![0; n],
+            ex: vec![1; n],
+            ey: vec![-1; n],
+        };
+        (st, inst.initial_epsilon())
+    }
+
+    /// Refine preamble (Algorithm 5.2 lines 3-6): de-saturate every arc
+    /// and set `p(x) = -min_y (c'_p(x,y) + ε)`.
+    pub fn reset_refine(&mut self, eps: i64) {
+        let n = self.n;
+        self.f.iter_mut().for_each(|v| *v = 0);
+        self.ex.iter_mut().for_each(|v| *v = 1);
+        self.ey.iter_mut().for_each(|v| *v = -1);
+        for x in 0..n {
+            let row_min = (0..n)
+                .map(|y| self.cost[x * n + y] - self.py[y])
+                .min()
+                .expect("n > 0");
+            self.px[x] = -(row_min + eps);
+        }
+    }
+
+    /// Partially-reduced cost `c'_p(x,y) = c(x,y) - p(y)`.
+    #[inline]
+    pub fn cp_forward(&self, x: usize, y: usize) -> i64 {
+        self.cost[x * self.n + y] - self.py[y]
+    }
+
+    /// Partially-reduced cost of the reverse arc `c'_p(y,x) = -c(x,y) - p(x)`.
+    #[inline]
+    pub fn cp_backward(&self, x: usize, y: usize) -> i64 {
+        -self.cost[x * self.n + y] - self.px[x]
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.ex.iter().filter(|&&e| e > 0).count() + self.ey.iter().filter(|&&e| e > 0).count()
+    }
+
+    /// f is a flow (perfect matching) when no node holds excess.
+    pub fn is_flow(&self) -> bool {
+        self.ex.iter().all(|&e| e == 0) && self.ey.iter().all(|&e| e == 0)
+    }
+
+    /// Extract `assign[x] = y` (requires `is_flow()`).
+    pub fn assignment(&self) -> Vec<usize> {
+        let n = self.n;
+        (0..n)
+            .map(|x| {
+                (0..n)
+                    .find(|&y| self.f[x * n + y] == 1)
+                    .expect("perfect matching")
+            })
+            .collect()
+    }
+
+    /// ε-optimality audit (test hook): every residual arc must satisfy
+    /// `c_p >= -eps`.
+    pub fn check_eps_optimal(&self, eps: i64) -> Result<()> {
+        let n = self.n;
+        for x in 0..n {
+            for y in 0..n {
+                let rc_fwd = self.cost[x * n + y] + self.px[x] - self.py[y];
+                if self.f[x * n + y] == 0 {
+                    anyhow::ensure!(
+                        rc_fwd >= -eps,
+                        "residual (x{x},y{y}) violates eps-optimality: {rc_fwd} < -{eps}"
+                    );
+                } else {
+                    anyhow::ensure!(
+                        -rc_fwd >= -eps,
+                        "residual (y{y},x{x}) violates eps-optimality: {} < -{eps}",
+                        -rc_fwd
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One refine engine (sequential / lock-free / wave / PJRT).
+pub trait RefineEngine {
+    fn name(&self) -> &'static str;
+    /// Drive `st` (already `reset_refine`-ed by the caller) to a flow at
+    /// ε-optimality `eps`.
+    fn refine(&mut self, st: &mut CsaState, eps: i64, stats: &mut AssignStats) -> Result<()>;
+}
+
+/// ε schedule (matches python kernels/ref.py `csa_solve_ref`): refine at
+/// ε₀ = C̄, then ε ← max(1, ⌈ε/α⌉), stopping after the ε = 1 refine.
+pub fn epsilon_schedule(eps0: i64, alpha: i64) -> Vec<i64> {
+    assert!(alpha >= 2, "alpha must be >= 2");
+    let mut eps = eps0.max(1);
+    let mut out = vec![eps];
+    while eps > 1 {
+        eps = ((eps + alpha - 1) / alpha).max(1);
+        out.push(eps);
+    }
+    out
+}
+
+/// Full solve: scaling loop around `engine`.
+pub fn solve_scaling(
+    inst: &AssignmentInstance,
+    alpha: i64,
+    engine: &mut dyn RefineEngine,
+) -> Result<AssignmentResult> {
+    if inst.n == 0 {
+        return Ok(AssignmentResult {
+            assignment: vec![],
+            weight: 0,
+            stats: AssignStats::default(),
+        });
+    }
+    let (mut st, eps0) = CsaState::new(inst);
+    let mut stats = AssignStats::default();
+    for eps in epsilon_schedule(eps0, alpha) {
+        st.reset_refine(eps);
+        engine.refine(&mut st, eps, &mut stats)?;
+        stats.refines += 1;
+        anyhow::ensure!(st.is_flow(), "refine at eps={eps} did not produce a flow");
+    }
+    let assignment = st.assignment();
+    Ok(AssignmentResult {
+        weight: inst.assignment_weight(&assignment),
+        assignment,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epsilon_schedule_shrinks_to_one() {
+        let sched = epsilon_schedule(1000, 10);
+        assert_eq!(sched, vec![1000, 100, 10, 1]);
+        assert_eq!(epsilon_schedule(1, 10), vec![1]);
+        assert_eq!(epsilon_schedule(9, 10), vec![9, 1]);
+    }
+
+    #[test]
+    fn reset_refine_prices_make_pseudoflow_0_optimal() {
+        let inst = AssignmentInstance::new(3, vec![5, 1, 0, 2, 8, 1, 0, 3, 9]);
+        let (mut st, eps0) = CsaState::new(&inst);
+        st.reset_refine(eps0);
+        // After the reset the minimum arc of each row sits at exactly
+        // c_p = -eps (Algorithm 5.2 line 6), so f is eps-optimal.
+        st.check_eps_optimal(eps0).unwrap();
+        assert!(st.check_eps_optimal(0).is_err());
+        assert_eq!(st.active_count(), 3); // every x active
+    }
+
+    #[test]
+    fn state_flow_extraction() {
+        let inst = AssignmentInstance::new(2, vec![1, 2, 3, 4]);
+        let (mut st, _) = CsaState::new(&inst);
+        st.f = vec![0, 1, 1, 0];
+        st.ex = vec![0, 0];
+        st.ey = vec![0, 0];
+        assert!(st.is_flow());
+        assert_eq!(st.assignment(), vec![1, 0]);
+    }
+}

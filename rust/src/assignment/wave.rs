@@ -1,0 +1,208 @@
+//! Dense synchronous-wave refine: the bit-exact native twin of the L1
+//! Pallas CSA kernel (python/compile/kernels/csa_wave.py).  Forward
+//! half-wave (active X push/relabel), then backward half-wave (active Y
+//! push back/relabel), snapshot-then-apply.
+
+use anyhow::Result;
+
+use crate::graph::AssignmentInstance;
+
+use super::scaling::{solve_scaling, CsaState, RefineEngine};
+use super::{AssignStats, AssignmentResult, AssignmentSolver};
+
+const INF: i64 = 1 << 60;
+
+/// Per-wave counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CsaWaveStats {
+    pub pushes: u64,
+    pub relabels: u64,
+}
+
+/// Forward half-wave: every active x scans its residual row for the
+/// minimum partially-reduced cost, pushes one unit if admissible
+/// (`min < -p(x)`), else relabels `p(x) = -(min + eps)`.
+pub fn forward_half_wave(st: &mut CsaState, eps: i64) -> CsaWaveStats {
+    let n = st.n;
+    let mut stats = CsaWaveStats::default();
+    // Snapshot decisions (px/py/f are read before any mutation).
+    let mut pushes: Vec<(usize, usize)> = Vec::new();
+    let mut relabels: Vec<(usize, i64)> = Vec::new();
+    for x in 0..n {
+        if st.ex[x] <= 0 {
+            continue;
+        }
+        let mut best = INF;
+        let mut best_y = usize::MAX;
+        for y in 0..n {
+            if st.f[x * n + y] == 0 {
+                let c = st.cp_forward(x, y);
+                if c < best {
+                    best = c;
+                    best_y = y;
+                }
+            }
+        }
+        if best_y == usize::MAX {
+            continue;
+        }
+        if best < -st.px[x] {
+            pushes.push((x, best_y));
+        } else {
+            relabels.push((x, -(best + eps)));
+        }
+    }
+    for (x, y) in pushes {
+        st.f[x * n + y] = 1;
+        st.ex[x] -= 1;
+        st.ey[y] += 1;
+        stats.pushes += 1;
+    }
+    for (x, p) in relabels {
+        st.px[x] = p;
+        stats.relabels += 1;
+    }
+    stats
+}
+
+/// Backward half-wave: active y scans matched arcs (f = 1) for the
+/// minimum `c'_p(y,x)` and pushes one unit back or relabels.
+pub fn backward_half_wave(st: &mut CsaState, eps: i64) -> CsaWaveStats {
+    let n = st.n;
+    let mut stats = CsaWaveStats::default();
+    let mut pushes: Vec<(usize, usize)> = Vec::new();
+    let mut relabels: Vec<(usize, i64)> = Vec::new();
+    for y in 0..n {
+        if st.ey[y] <= 0 {
+            continue;
+        }
+        let mut best = INF;
+        let mut best_x = usize::MAX;
+        for x in 0..n {
+            if st.f[x * n + y] == 1 {
+                let c = st.cp_backward(x, y);
+                if c < best {
+                    best = c;
+                    best_x = x;
+                }
+            }
+        }
+        if best_x == usize::MAX {
+            continue;
+        }
+        if best < -st.py[y] {
+            pushes.push((y, best_x));
+        } else {
+            relabels.push((y, -(best + eps)));
+        }
+    }
+    for (y, x) in pushes {
+        st.f[x * n + y] = 0;
+        st.ey[y] -= 1;
+        st.ex[x] += 1;
+        stats.pushes += 1;
+    }
+    for (y, p) in relabels {
+        st.py[y] = p;
+        stats.relabels += 1;
+    }
+    stats
+}
+
+/// One full wave.
+pub fn native_wave(st: &mut CsaState, eps: i64) -> CsaWaveStats {
+    let a = forward_half_wave(st, eps);
+    let b = backward_half_wave(st, eps);
+    CsaWaveStats {
+        pushes: a.pushes + b.pushes,
+        relabels: a.relabels + b.relabels,
+    }
+}
+
+/// Wave-based refine engine (native; the PJRT twin lives in
+/// `coordinator::assignment_driver`).
+#[derive(Debug, Clone)]
+pub struct WaveRefine {
+    pub max_waves: u64,
+}
+
+impl Default for WaveRefine {
+    fn default() -> Self {
+        Self {
+            max_waves: 100_000_000,
+        }
+    }
+}
+
+impl RefineEngine for WaveRefine {
+    fn name(&self) -> &'static str {
+        "wave-native"
+    }
+
+    fn refine(&mut self, st: &mut CsaState, eps: i64, stats: &mut AssignStats) -> Result<()> {
+        let mut waves = 0u64;
+        while st.active_count() > 0 {
+            let w = native_wave(st, eps);
+            stats.pushes += w.pushes;
+            stats.relabels += w.relabels;
+            stats.waves += 1;
+            waves += 1;
+            anyhow::ensure!(
+                waves < self.max_waves,
+                "wave refine exceeded {} waves at eps={eps}",
+                self.max_waves
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Full solver: scaling loop over the wave refine.
+#[derive(Debug, Clone, Default)]
+pub struct WaveCsa {
+    pub alpha: Option<i64>,
+}
+
+impl AssignmentSolver for WaveCsa {
+    fn name(&self) -> &'static str {
+        "csa-wave"
+    }
+
+    fn solve(&self, inst: &AssignmentInstance) -> Result<AssignmentResult> {
+        let mut engine = WaveRefine::default();
+        solve_scaling(inst, self.alpha.unwrap_or(10), &mut engine)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::hungarian::Hungarian;
+
+    #[test]
+    fn wave_refine_preserves_eps_optimality() {
+        let inst = AssignmentInstance::new(4, vec![3, 9, 1, 0, 4, 4, 7, 2, 0, 5, 8, 6, 1, 2, 3, 4]);
+        let (mut st, eps0) = CsaState::new(&inst);
+        st.reset_refine(eps0);
+        let mut guard = 0;
+        while st.active_count() > 0 {
+            native_wave(&mut st, eps0);
+            st.check_eps_optimal(eps0).unwrap();
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        assert!(st.is_flow());
+    }
+
+    #[test]
+    fn matches_hungarian() {
+        let mut rng = crate::util::Rng::seeded(17);
+        for n in [2usize, 3, 5, 9, 14] {
+            let w: Vec<i64> = (0..n * n).map(|_| rng.range_i64(0, 100)).collect();
+            let inst = AssignmentInstance::new(n, w);
+            let got = WaveCsa::default().solve(&inst).unwrap();
+            let want = Hungarian.solve(&inst).unwrap();
+            assert_eq!(got.weight, want.weight, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! In-tree benchmark harness (no `criterion` in the offline image).
+//!
+//! Each `cargo bench` target is a plain binary (`harness = false`) that
+//! builds a [`Table`] of rows, where every cell is either a measured
+//! [`Summary`] or a derived count.  Output is a markdown table — the exact
+//! rows that EXPERIMENTS.md records for each paper table/figure.
+//!
+//! Measurement protocol: `warmup` untimed runs, then `samples` timed runs
+//! of the closure; the closure returns an opaque value that is black-boxed
+//! to keep the optimizer honest.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use crate::util::stats::{fmt_duration, Summary};
+
+/// Measurement configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Measure {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for Measure {
+    fn default() -> Self {
+        Self {
+            warmup: 2,
+            samples: 7,
+        }
+    }
+}
+
+impl Measure {
+    pub fn quick() -> Self {
+        Self {
+            warmup: 1,
+            samples: 3,
+        }
+    }
+
+    /// Honour `FLOWMATCH_BENCH_FAST=1` (CI smoke mode).
+    pub fn from_env(self) -> Self {
+        if std::env::var("FLOWMATCH_BENCH_FAST").as_deref() == Ok("1") {
+            Self::quick()
+        } else {
+            self
+        }
+    }
+
+    /// Time `f`, returning per-run seconds.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Vec<f64> {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut out = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            black_box(f());
+            out.push(t.elapsed().as_secs_f64());
+        }
+        out
+    }
+}
+
+/// One table cell.
+#[derive(Debug, Clone)]
+pub enum Cell {
+    Text(String),
+    Int(i64),
+    Float(f64),
+    /// Time summary rendered as "mean ± stddev".
+    Time(Summary),
+    Missing,
+}
+
+impl Cell {
+    fn render(&self) -> String {
+        match self {
+            Cell::Text(s) => s.clone(),
+            Cell::Int(v) => crate::util::stats::fmt_count(*v),
+            Cell::Float(v) => format!("{v:.3}"),
+            Cell::Time(s) => format!("{} ± {}", fmt_duration(s.mean), fmt_duration(s.stddev)),
+            Cell::Missing => "—".to_string(),
+        }
+    }
+}
+
+impl From<&str> for Cell {
+    fn from(s: &str) -> Self {
+        Cell::Text(s.to_string())
+    }
+}
+
+impl From<String> for Cell {
+    fn from(s: String) -> Self {
+        Cell::Text(s)
+    }
+}
+
+impl From<i64> for Cell {
+    fn from(v: i64) -> Self {
+        Cell::Int(v)
+    }
+}
+
+impl From<f64> for Cell {
+    fn from(v: f64) -> Self {
+        Cell::Float(v)
+    }
+}
+
+impl From<Summary> for Cell {
+    fn from(s: Summary) -> Self {
+        Cell::Time(s)
+    }
+}
+
+/// A bench-result table, rendered as markdown on `print`.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<Cell>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<Cell>) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in table {:?}",
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut cols: Vec<Vec<String>> = vec![self.headers.clone()];
+        for row in &self.rows {
+            cols.push(row.iter().map(Cell::render).collect());
+        }
+        let widths: Vec<usize> = (0..self.headers.len())
+            .map(|c| cols.iter().map(|r| r[c].chars().count()).max().unwrap_or(1))
+            .collect();
+        let line = |cells: &[String]| {
+            let body: Vec<String> = cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            format!("| {} |", body.join(" | "))
+        };
+        let mut out = format!("\n### {}\n\n", self.title);
+        out.push_str(&line(&cols[0]));
+        out.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&line(&sep));
+        out.push('\n');
+        for r in &cols[1..] {
+            out.push_str(&line(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_requested_samples() {
+        let m = Measure {
+            warmup: 1,
+            samples: 5,
+        };
+        let times = m.run(|| 1 + 1);
+        assert_eq!(times.len(), 5);
+        assert!(times.iter().all(|&t| t >= 0.0));
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("demo", &["name", "n", "time"]);
+        t.row(vec![
+            "fifo".into(),
+            Cell::Int(1234),
+            Cell::Time(Summary::of(&[0.001, 0.002]).unwrap()),
+        ]);
+        let s = t.render();
+        assert!(s.contains("### demo"));
+        assert!(s.contains("| fifo"));
+        assert!(s.contains("1_234"));
+        assert!(s.contains("ms"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+}

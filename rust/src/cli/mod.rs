@@ -1,0 +1,159 @@
+//! Minimal argument parser (no `clap` in the offline image): subcommands
+//! with `--flag`, `--key value` and `--key=value` options, typed getters
+//! and generated usage text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed invocation: subcommand + options + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Option names that never take a value (needed to disambiguate
+/// `--verbose file` from `--key value`).
+pub const BOOLEAN_FLAGS: &[&str] = &["native", "verbose", "fast", "no-heuristics"];
+
+impl Args {
+    /// Parse from an iterator (first element = argv[0], skipped).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        Self::parse_with_flags(argv, BOOLEAN_FLAGS)
+    }
+
+    /// Parse with an explicit boolean-flag vocabulary.
+    pub fn parse_with_flags<I: IntoIterator<Item = String>>(
+        argv: I,
+        boolean_flags: &[&str],
+    ) -> Result<Self> {
+        let mut it = argv.into_iter().skip(1).peekable();
+        let mut out = Args::default();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.command = Some(it.next().expect("peeked"));
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if boolean_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options
+                        .insert(body.to_string(), it.next().expect("peeked"));
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v:?}")),
+        }
+    }
+
+    pub fn get_i64(&self, name: &str, default: i64) -> Result<i64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v:?}")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Reject unknown options (catches typos early).
+    pub fn expect_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k} (expected one of: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        let mut v = vec!["prog".to_string()];
+        v.extend(tokens.iter().map(|s| s.to_string()));
+        Args::parse(v).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["assign", "--n", "30", "--alpha=10", "--verbose", "file.asn"]);
+        assert_eq!(a.command.as_deref(), Some("assign"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 30);
+        assert_eq!(a.get_i64("alpha", 0).unwrap(), 10);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["file.asn"]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.get_usize("n", 1).is_err());
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert_eq!(a.get_str("mode", "fast"), "fast");
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        let a = parse(&["x", "--typo", "1"]);
+        assert!(a.expect_known(&["n"]).is_err());
+        assert!(a.expect_known(&["typo"]).is_ok());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--fast", "--n", "5"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 5);
+    }
+}

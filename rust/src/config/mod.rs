@@ -1,0 +1,172 @@
+//! Config system: typed `key = value` files (a TOML subset: sections,
+//! comments, strings/ints/floats/bools) merged with CLI overrides —
+//! enough to parameterise the launcher and the benches reproducibly.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A flat config: section-qualified keys (`section.key`) to raw strings.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("config line {}: expected key = value", lineno + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim().to_string();
+            if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+                val = val[1..val.len() - 1].to_string();
+            }
+            values.insert(key, val);
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    /// Overlay `other` on top of `self` (later wins).
+    pub fn merge(&mut self, other: &Config) {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key} = {v:?}")),
+        }
+    }
+
+    pub fn get_i64(&self, key: &str, default: i64) -> Result<i64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key} = {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key} = {v:?}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("config {key} = {v:?} is not a bool"),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (idx, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..idx],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Built-in presets for the launcher (`--preset`).
+pub fn preset(name: &str) -> Result<Config> {
+    let text = match name {
+        // The paper's §5.5/§6 operating point.
+        "paper" => {
+            "[assign]\nalpha = 10\nmax_n = 30\nmax_weight = 100\ncycle = 1024\n\
+             [maxflow]\ncycle = 7000\nheuristics = true\n"
+        }
+        // Small smoke setting for CI.
+        "smoke" => {
+            "[assign]\nalpha = 10\nmax_n = 8\nmax_weight = 20\ncycle = 64\n\
+             [maxflow]\ncycle = 64\nheuristics = true\n"
+        }
+        other => bail!("unknown preset {other:?} (try: paper, smoke)"),
+    };
+    Config::parse(text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_types_comments() {
+        let cfg = Config::parse(
+            "# top\ncycle = 7000\n[assign]\nalpha = 10 # inline\nname = \"paper # not comment\"\nfast = true\nratio = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get_i64("cycle", 0).unwrap(), 7000);
+        assert_eq!(cfg.get_i64("assign.alpha", 0).unwrap(), 10);
+        assert_eq!(cfg.get("assign.name"), Some("paper # not comment"));
+        assert!(cfg.get_bool("assign.fast", false).unwrap());
+        assert!((cfg.get_f64("assign.ratio", 0.0).unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let mut a = Config::parse("x = 1\ny = 2\n").unwrap();
+        let b = Config::parse("y = 3\nz = 4\n").unwrap();
+        a.merge(&b);
+        assert_eq!(a.get_i64("x", 0).unwrap(), 1);
+        assert_eq!(a.get_i64("y", 0).unwrap(), 3);
+        assert_eq!(a.get_i64("z", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(Config::parse("just a line\n").is_err());
+        assert!(Config::parse("b = maybe\n").unwrap().get_bool("b", true).is_err());
+    }
+
+    #[test]
+    fn presets_load() {
+        let p = preset("paper").unwrap();
+        assert_eq!(p.get_i64("maxflow.cycle", 0).unwrap(), 7000);
+        assert_eq!(p.get_i64("assign.alpha", 0).unwrap(), 10);
+        assert!(preset("nope").is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! PJRT-backed assignment solver: the cost-scaling outer loop on the
+//! host, the lock-free refine waves on the device (the paper's §5.5
+//! architecture), with the price-update heuristic run host-side between
+//! device rounds and instances padded up to the artifact size.
+
+use anyhow::Result;
+
+use crate::assignment::price_update::price_update;
+use crate::assignment::scaling::{epsilon_schedule, CsaState};
+use crate::assignment::{AssignStats, AssignmentResult};
+use crate::graph::AssignmentInstance;
+use crate::runtime::device::CsaWireState;
+use crate::runtime::{ArtifactRegistry, CsaDevice};
+
+/// Per-solve telemetry beyond the engine counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SolveTelemetry {
+    pub device_rounds: u64,
+    pub host_price_updates: u64,
+    pub padded_n: usize,
+    pub device_seconds: f64,
+    pub host_seconds: f64,
+}
+
+/// The driver; owns one compiled artifact (device kernels are shape-
+/// specialised, so one driver serves all instances with `n <= padded_n`).
+pub struct PjrtAssignmentDriver {
+    dev: CsaDevice,
+    /// Device super-step budget per round (`outer`); CYCLE = outer * K_INNER.
+    pub outer_per_round: i32,
+    /// Run the host price-update heuristic between device rounds.
+    pub price_updates: bool,
+    /// Scaling factor (paper: ALPHA = 10).
+    pub alpha: i64,
+}
+
+impl PjrtAssignmentDriver {
+    pub fn for_size(reg: &ArtifactRegistry, n: usize) -> Result<Self> {
+        Ok(Self {
+            dev: CsaDevice::for_size(reg, n)?,
+            outer_per_round: 64,
+            price_updates: true,
+            alpha: 10,
+        })
+    }
+
+    pub fn padded_n(&self) -> usize {
+        self.dev.n
+    }
+
+    fn state_to_wire(st: &CsaState, cost: &[i32]) -> CsaWireState {
+        CsaWireState {
+            n: st.n,
+            cost: cost.to_vec(),
+            f: st.f.clone(),
+            px: st.px.iter().map(|&v| v as i32).collect(),
+            py: st.py.iter().map(|&v| v as i32).collect(),
+            ex: st.ex.iter().map(|&v| v as i32).collect(),
+            ey: st.ey.iter().map(|&v| v as i32).collect(),
+        }
+    }
+
+    fn wire_to_state(wire: &CsaWireState, st: &mut CsaState) {
+        st.f.copy_from_slice(&wire.f);
+        for (d, s) in st.px.iter_mut().zip(&wire.px) {
+            *d = *s as i64;
+        }
+        for (d, s) in st.py.iter_mut().zip(&wire.py) {
+            *d = *s as i64;
+        }
+        for (d, s) in st.ex.iter_mut().zip(&wire.ex) {
+            *d = *s as i64;
+        }
+        for (d, s) in st.ey.iter_mut().zip(&wire.ey) {
+            *d = *s as i64;
+        }
+    }
+
+    /// Solve a (possibly smaller) instance.
+    pub fn solve(&mut self, inst: &AssignmentInstance) -> Result<(AssignmentResult, SolveTelemetry)> {
+        let m = self.dev.n;
+        anyhow::ensure!(inst.n <= m, "instance n={} exceeds artifact n={m}", inst.n);
+        let padded = if inst.n == m {
+            inst.clone()
+        } else {
+            inst.pad(m)
+        };
+        let cost_i32 = padded.scaled_costs_i32();
+        let (mut st, eps0) = CsaState::new(&padded);
+        let mut stats = AssignStats::default();
+        let mut tel = SolveTelemetry {
+            padded_n: m,
+            ..Default::default()
+        };
+
+        for eps in epsilon_schedule(eps0, self.alpha) {
+            let host_t = crate::util::Timer::start();
+            st.reset_refine(eps);
+            tel.host_seconds += host_t.elapsed();
+            let mut wire = Self::state_to_wire(&st, &cost_i32);
+            loop {
+                let dev_t = crate::util::Timer::start();
+                let step = self.dev.step(&mut wire, eps as i32, self.outer_per_round)?;
+                tel.device_seconds += dev_t.elapsed();
+                tel.device_rounds += 1;
+                stats.pushes += step.pushes as u64;
+                stats.relabels += step.relabels as u64;
+                stats.waves += step.waves as u64;
+                if step.active() == 0 {
+                    break;
+                }
+                if self.price_updates {
+                    // Host heuristic round (paper §5.5: heuristics between
+                    // kernel launches): pull prices, bucket-Dijkstra, push
+                    // only the updated prices back (PERF: the cost matrix
+                    // and flows are unchanged by the heuristic — rebuilding
+                    // the whole wire image copied n² ints per round).
+                    let host_t = crate::util::Timer::start();
+                    Self::wire_to_state(&wire, &mut st);
+                    price_update(&mut st, eps);
+                    stats.price_updates += 1;
+                    tel.host_price_updates += 1;
+                    for (d, s) in wire.px.iter_mut().zip(&st.px) {
+                        *d = *s as i32;
+                    }
+                    for (d, s) in wire.py.iter_mut().zip(&st.py) {
+                        *d = *s as i32;
+                    }
+                    tel.host_seconds += host_t.elapsed();
+                }
+            }
+            Self::wire_to_state(&wire, &mut st);
+            stats.refines += 1;
+            anyhow::ensure!(st.is_flow(), "device refine at eps={eps} incomplete");
+        }
+
+        let padded_assign = st.assignment();
+        let assignment = inst.unpad_assignment(&padded_assign);
+        let weight = inst.assignment_weight(&assignment);
+        Ok((
+            AssignmentResult {
+                assignment,
+                weight,
+                stats,
+            },
+            tel,
+        ))
+    }
+}

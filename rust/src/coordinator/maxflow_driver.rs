@@ -1,0 +1,54 @@
+//! Grid max-flow driver: pick the device phase (PJRT artifact when one
+//! matches the shape, native wave engine otherwise) and run the hybrid
+//! scheme.  This is Algorithm 4.6 with PJRT in the CUDA role.
+
+use anyhow::Result;
+
+use crate::graph::GridNetwork;
+use crate::gridflow::{GridSolveReport, HybridGridSolver, NativeGridExecutor};
+use crate::runtime::{ArtifactRegistry, GridDevice};
+
+/// Which device phase backed a solve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Pjrt,
+    Native,
+}
+
+/// Solve `net` with the hybrid scheme; prefers the PJRT artifact.
+/// Returns the report plus the backend used.
+pub fn solve_grid(
+    net: &GridNetwork,
+    cycle_waves: usize,
+    registry: Option<&ArtifactRegistry>,
+) -> Result<(GridSolveReport, Backend)> {
+    let solver = HybridGridSolver::with_cycle(cycle_waves);
+    if let Some(reg) = registry {
+        if let Ok(mut dev) = GridDevice::for_shape(reg, net.height, net.width) {
+            let report = solver.solve(net, &mut dev)?;
+            return Ok((report, Backend::Pjrt));
+        }
+    }
+    let mut exec = NativeGridExecutor::default();
+    let report = solver.solve(net, &mut exec)?;
+    Ok((report, Backend::Native))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maxflow::{dinic::Dinic, MaxFlowSolver};
+    use crate::util::Rng;
+    use crate::workloads::grid_gen::random_grid;
+
+    #[test]
+    fn native_fallback_matches_baseline() {
+        let mut rng = Rng::seeded(77);
+        let net = random_grid(&mut rng, 6, 6, 8, 0.3, 0.3);
+        let (report, backend) = solve_grid(&net, 128, None).unwrap();
+        assert_eq!(backend, Backend::Native);
+        let mut g = net.to_flow_network();
+        let want = Dinic.solve(&mut g).unwrap();
+        assert_eq!(report.flow, want.value);
+    }
+}

@@ -1,0 +1,13 @@
+//! L3 coordination: the paper's CPU–GPU hybrid drivers with the PJRT
+//! device in the GPU role, plus the batched assignment service that
+//! serves the §6 real-time use case.
+
+pub mod assignment_driver;
+pub mod maxflow_driver;
+pub mod metrics;
+pub mod server;
+
+pub use assignment_driver::{PjrtAssignmentDriver, SolveTelemetry};
+pub use maxflow_driver::solve_grid;
+pub use metrics::LatencyRecorder;
+pub use server::{AssignmentService, ServiceConfig, ServiceReply, ServiceReport};

@@ -1,0 +1,279 @@
+//! Batched assignment service — the deployment shape of the paper's §6
+//! claim ("about 1/20 s, which allows for real-time applications"): a
+//! dedicated device thread owns the PJRT state (the `xla` handles are
+//! `!Send`, exactly like a CUDA context) and serves matching requests
+//! from a queue, draining them in batches.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::assignment::wave::WaveCsa;
+use crate::assignment::AssignmentSolver;
+use crate::graph::AssignmentInstance;
+use crate::runtime::ArtifactRegistry;
+
+use super::assignment_driver::PjrtAssignmentDriver;
+use super::metrics::LatencyRecorder;
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Max requests drained per batch.
+    pub max_batch: usize,
+    /// Prefer the PJRT backend when artifacts are discoverable.
+    pub use_pjrt: bool,
+    /// Maximum instance size accepted.
+    pub max_n: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            use_pjrt: true,
+            max_n: 64,
+        }
+    }
+}
+
+/// Reply for one request.
+#[derive(Debug, Clone)]
+pub struct ServiceReply {
+    pub id: u64,
+    pub assignment: Vec<usize>,
+    pub weight: i64,
+    /// Seconds from submit to completion.
+    pub latency: f64,
+    /// Seconds spent queued before solving started.
+    pub queue_delay: f64,
+    pub backend: &'static str,
+}
+
+struct Job {
+    id: u64,
+    instance: AssignmentInstance,
+    submitted: Instant,
+    reply: mpsc::Sender<Result<ServiceReply, String>>,
+}
+
+enum Msg {
+    Job(Box<Job>),
+    Shutdown(mpsc::Sender<ServiceReport>),
+}
+
+/// Aggregate service statistics, returned at shutdown.
+#[derive(Debug, Clone)]
+pub struct ServiceReport {
+    pub served: usize,
+    pub batches: usize,
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    pub mean_latency: f64,
+    pub throughput_rps: f64,
+    pub backend: &'static str,
+}
+
+/// Handle to the running service (clonable submitter).
+pub struct AssignmentService {
+    tx: mpsc::Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl AssignmentService {
+    /// Start the device thread.
+    pub fn start(cfg: ServiceConfig) -> Self {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let worker = std::thread::spawn(move || worker_loop(cfg, rx));
+        Self {
+            tx,
+            worker: Some(worker),
+            next_id: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Submit an instance; returns a receiver for the reply.
+    pub fn submit(
+        &self,
+        instance: AssignmentInstance,
+    ) -> mpsc::Receiver<Result<ServiceReply, String>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let job = Job {
+            id,
+            instance,
+            submitted: Instant::now(),
+            reply: reply_tx,
+        };
+        // A send failure means the worker died; the receiver will report
+        // a disconnect to the caller.
+        let _ = self.tx.send(Msg::Job(Box::new(job)));
+        reply_rx
+    }
+
+    /// Stop the worker and collect the aggregate report.
+    pub fn shutdown(mut self) -> Result<ServiceReport> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Shutdown(tx))
+            .map_err(|_| anyhow::anyhow!("service already stopped"))?;
+        let report = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("service dropped the report"))?;
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        Ok(report)
+    }
+}
+
+impl Drop for AssignmentService {
+    fn drop(&mut self) {
+        if let Some(w) = self.worker.take() {
+            let (tx, _rx) = mpsc::channel();
+            let _ = self.tx.send(Msg::Shutdown(tx));
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(cfg: ServiceConfig, rx: mpsc::Receiver<Msg>) {
+    // Device state lives on this thread only.
+    let mut driver: Option<PjrtAssignmentDriver> = if cfg.use_pjrt {
+        ArtifactRegistry::discover()
+            .ok()
+            .and_then(|reg| PjrtAssignmentDriver::for_size(&reg, cfg.max_n).ok())
+    } else {
+        None
+    };
+    let backend: &'static str = if driver.is_some() { "pjrt" } else { "native" };
+    let fallback = WaveCsa::default();
+
+    let mut recorder = LatencyRecorder::new();
+    let mut batches = 0usize;
+
+    let solve = |job: &Job, driver: &mut Option<PjrtAssignmentDriver>| {
+        let queue_delay = job.submitted.elapsed().as_secs_f64();
+        let outcome = if job.instance.n > cfg.max_n {
+            Err(format!(
+                "instance n={} exceeds service max_n={}",
+                job.instance.n, cfg.max_n
+            ))
+        } else {
+            let solved = match driver {
+                Some(d) => d.solve(&job.instance).map(|(r, _)| r),
+                None => fallback.solve(&job.instance),
+            };
+            solved.map_err(|e| e.to_string())
+        };
+        (queue_delay, outcome)
+    };
+
+    loop {
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        // Drain a batch.
+        let mut batch = Vec::new();
+        let mut shutdown: Option<mpsc::Sender<ServiceReport>> = None;
+        match first {
+            Msg::Job(j) => batch.push(j),
+            Msg::Shutdown(tx) => shutdown = Some(tx),
+        }
+        while shutdown.is_none() && batch.len() < cfg.max_batch {
+            match rx.try_recv() {
+                Ok(Msg::Job(j)) => batch.push(j),
+                Ok(Msg::Shutdown(tx)) => {
+                    shutdown = Some(tx);
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+        if !batch.is_empty() {
+            batches += 1;
+        }
+        for job in batch {
+            let (queue_delay, outcome) = solve(&job, &mut driver);
+            let latency = job.submitted.elapsed().as_secs_f64();
+            recorder.record(latency);
+            let reply = outcome.map(|r| ServiceReply {
+                id: job.id,
+                assignment: r.assignment,
+                weight: r.weight,
+                latency,
+                queue_delay,
+                backend,
+            });
+            let _ = job.reply.send(reply);
+        }
+        if let Some(tx) = shutdown {
+            let summary = recorder.summary();
+            let report = ServiceReport {
+                served: recorder.count(),
+                batches,
+                p50_latency: summary.as_ref().map_or(0.0, |s| s.p50),
+                p99_latency: summary.as_ref().map_or(0.0, |s| s.p99),
+                mean_latency: summary.as_ref().map_or(0.0, |s| s.mean),
+                throughput_rps: recorder.throughput(),
+                backend,
+            };
+            let _ = tx.send(report);
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::hungarian::Hungarian;
+    use crate::util::Rng;
+    use crate::workloads::bipartite_gen::uniform_costs;
+
+    #[test]
+    fn service_solves_requests_natively() {
+        let service = AssignmentService::start(ServiceConfig {
+            use_pjrt: false,
+            max_batch: 4,
+            max_n: 32,
+        });
+        let mut rng = Rng::seeded(81);
+        let mut receivers = Vec::new();
+        let mut wants = Vec::new();
+        for _ in 0..6 {
+            let inst = uniform_costs(&mut rng, 10, 100);
+            wants.push(Hungarian.solve(&inst).unwrap().weight);
+            receivers.push(service.submit(inst));
+        }
+        for (rx, want) in receivers.into_iter().zip(wants) {
+            let reply = rx.recv().unwrap().unwrap();
+            assert_eq!(reply.weight, want);
+            assert!(reply.latency >= 0.0);
+            assert_eq!(reply.backend, "native");
+        }
+        let report = service.shutdown().unwrap();
+        assert_eq!(report.served, 6);
+        assert!(report.batches >= 1);
+    }
+
+    #[test]
+    fn oversized_requests_rejected() {
+        let service = AssignmentService::start(ServiceConfig {
+            use_pjrt: false,
+            max_batch: 2,
+            max_n: 4,
+        });
+        let mut rng = Rng::seeded(83);
+        let inst = uniform_costs(&mut rng, 8, 10);
+        let rx = service.submit(inst);
+        let reply = rx.recv().unwrap();
+        assert!(reply.is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! MAP-MRF energy minimisation via graph cuts — the §1/§4 application
+//! (Kolmogorov & Zabih: "What energy functions can be minimized via graph
+//! cuts?").
+//!
+//! A binary MRF energy `E(L) = Σ θ_p(l_p) + Σ θ_pq(l_p, l_q)` over a
+//! 4-connected grid is *regular* (graph-representable) when every
+//! pairwise term satisfies `θ(0,0) + θ(1,1) <= θ(0,1) + θ(1,0)`; the KZ
+//! construction turns it into an s-t grid network whose min cut equals
+//! the minimum energy (up to an additive constant).
+
+pub mod kz;
+pub mod mrf;
+pub mod segmentation;
+
+pub use kz::{build_kz_network, KzReport};
+pub use mrf::{BinaryMrf, PairwiseTerm};
+pub use segmentation::{segment_image, SegmentationResult};

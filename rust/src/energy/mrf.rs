@@ -1,0 +1,158 @@
+//! Binary MRF energies over 4-connected grids.
+
+/// Pairwise term table `θ(l_p, l_q)` for one neighbour pair.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PairwiseTerm {
+    pub e00: i64,
+    pub e01: i64,
+    pub e10: i64,
+    pub e11: i64,
+}
+
+impl PairwiseTerm {
+    /// Potts smoothness: 0 on agreement, `lambda` on disagreement.
+    pub fn potts(lambda: i64) -> Self {
+        Self {
+            e00: 0,
+            e01: lambda,
+            e10: lambda,
+            e11: 0,
+        }
+    }
+
+    /// KZ regularity: representable by graph cuts (Kolmogorov–Zabih Thm).
+    pub fn is_regular(&self) -> bool {
+        self.e00 + self.e11 <= self.e01 + self.e10
+    }
+}
+
+/// A binary MRF on an `height x width` grid: unary terms per pixel and
+/// pairwise terms per S/E neighbour pair.
+#[derive(Debug, Clone)]
+pub struct BinaryMrf {
+    pub height: usize,
+    pub width: usize,
+    /// `unary[p] = (θ_p(0), θ_p(1))`, label 0 = background/source side.
+    pub unary: Vec<(i64, i64)>,
+    /// Pairwise term for (p, south(p)); `None` at the bottom row.
+    pub pair_s: Vec<Option<PairwiseTerm>>,
+    /// Pairwise term for (p, east(p)); `None` at the last column.
+    pub pair_e: Vec<Option<PairwiseTerm>>,
+}
+
+impl BinaryMrf {
+    pub fn new(height: usize, width: usize) -> Self {
+        let n = height * width;
+        Self {
+            height,
+            width,
+            unary: vec![(0, 0); n],
+            pair_s: vec![None; n],
+            pair_e: vec![None; n],
+        }
+    }
+
+    #[inline]
+    pub fn cell(&self, i: usize, j: usize) -> usize {
+        i * self.width + j
+    }
+
+    /// True iff every pairwise term is regular (graph-representable).
+    pub fn is_regular(&self) -> bool {
+        self.pair_s
+            .iter()
+            .chain(self.pair_e.iter())
+            .flatten()
+            .all(PairwiseTerm::is_regular)
+    }
+
+    /// Evaluate the energy of a labelling (`labels[p] ∈ {0,1}`).
+    pub fn energy(&self, labels: &[u8]) -> i64 {
+        assert_eq!(labels.len(), self.unary.len());
+        let mut e = 0i64;
+        for (p, &(u0, u1)) in self.unary.iter().enumerate() {
+            e += if labels[p] == 0 { u0 } else { u1 };
+        }
+        for i in 0..self.height {
+            for j in 0..self.width {
+                let p = self.cell(i, j);
+                if let Some(t) = self.pair_s[p] {
+                    let q = self.cell(i + 1, j);
+                    e += pair_value(t, labels[p], labels[q]);
+                }
+                if let Some(t) = self.pair_e[p] {
+                    let q = self.cell(i, j + 1);
+                    e += pair_value(t, labels[p], labels[q]);
+                }
+            }
+        }
+        e
+    }
+
+    /// Exhaustive minimiser for tiny grids (tests only).
+    pub fn brute_force_min(&self) -> (Vec<u8>, i64) {
+        let n = self.unary.len();
+        assert!(n <= 20, "brute force limited to 20 pixels");
+        let mut best = (vec![0u8; n], i64::MAX);
+        for mask in 0u32..(1 << n) {
+            let labels: Vec<u8> = (0..n).map(|p| ((mask >> p) & 1) as u8).collect();
+            let e = self.energy(&labels);
+            if e < best.1 {
+                best = (labels, e);
+            }
+        }
+        best
+    }
+}
+
+fn pair_value(t: PairwiseTerm, lp: u8, lq: u8) -> i64 {
+    match (lp, lq) {
+        (0, 0) => t.e00,
+        (0, 1) => t.e01,
+        (1, 0) => t.e10,
+        _ => t.e11,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn potts_is_regular() {
+        assert!(PairwiseTerm::potts(5).is_regular());
+        let bad = PairwiseTerm {
+            e00: 10,
+            e01: 0,
+            e10: 0,
+            e11: 10,
+        };
+        assert!(!bad.is_regular());
+    }
+
+    #[test]
+    fn energy_evaluation() {
+        let mut mrf = BinaryMrf::new(1, 2);
+        mrf.unary[0] = (1, 5);
+        mrf.unary[1] = (4, 2);
+        mrf.pair_e[0] = Some(PairwiseTerm::potts(3));
+        assert_eq!(mrf.energy(&[0, 0]), 1 + 4);
+        assert_eq!(mrf.energy(&[0, 1]), 1 + 2 + 3);
+        assert_eq!(mrf.energy(&[1, 1]), 5 + 2);
+    }
+
+    #[test]
+    fn brute_force_finds_min() {
+        let mut mrf = BinaryMrf::new(2, 2);
+        for p in 0..4 {
+            mrf.unary[p] = (if p == 0 { 10 } else { 0 }, if p == 0 { 0 } else { 10 });
+        }
+        mrf.pair_e[0] = Some(PairwiseTerm::potts(1));
+        mrf.pair_s[0] = Some(PairwiseTerm::potts(1));
+        let (labels, e) = mrf.brute_force_min();
+        // Pixel 0 wants label 1, others want 0; smoothness cost 2 paid.
+        assert_eq!(labels[0], 1);
+        assert_eq!(&labels[1..], &[0, 0, 0]);
+        assert_eq!(e, 2);
+    }
+}

@@ -1,0 +1,205 @@
+//! Complete-bipartite assignment instances (§5): weight matrices, the
+//! integer cost scaling the algorithms need, padding to artifact sizes,
+//! and the explicit reduction to a max-flow-min-cost network (Fig. 1).
+
+use super::csr::{FlowNetwork, NetworkBuilder};
+
+/// A max-weight assignment instance on the complete bipartite graph
+/// `K_{n,n}` with non-negative integer weights.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AssignmentInstance {
+    pub n: usize,
+    /// Row-major `w[x * n + y] = w(x, y) >= 0`.
+    pub weights: Vec<i64>,
+}
+
+impl AssignmentInstance {
+    pub fn new(n: usize, weights: Vec<i64>) -> Self {
+        assert_eq!(weights.len(), n * n, "weight matrix must be n*n");
+        assert!(weights.iter().all(|&w| w >= 0), "weights must be >= 0");
+        Self { n, weights }
+    }
+
+    #[inline]
+    pub fn weight(&self, x: usize, y: usize) -> i64 {
+        self.weights[x * self.n + y]
+    }
+
+    pub fn max_weight(&self) -> i64 {
+        self.weights.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Total weight of an assignment given as `y = assign[x]`.
+    pub fn assignment_weight(&self, assign: &[usize]) -> i64 {
+        assert_eq!(assign.len(), self.n);
+        assign
+            .iter()
+            .enumerate()
+            .map(|(x, &y)| self.weight(x, y))
+            .sum()
+    }
+
+    /// Is `assign` a permutation of `0..n`?
+    pub fn is_permutation(assign: &[usize]) -> bool {
+        let n = assign.len();
+        let mut seen = vec![false; n];
+        for &y in assign {
+            if y >= n || seen[y] {
+                return false;
+            }
+            seen[y] = true;
+        }
+        true
+    }
+
+    /// Scaled min-cost matrix for the cost-scaling engines:
+    /// `c(x,y) = -w(x,y) * (n + 1)` (max-weight -> min-cost; the (n+1)
+    /// factor makes 1-optimality certify optimality, DESIGN.md §7).
+    pub fn scaled_costs_i32(&self) -> Vec<i32> {
+        let k = (self.n + 1) as i64;
+        self.weights
+            .iter()
+            .map(|&w| {
+                let c = -w * k;
+                assert!(c >= i32::MIN as i64, "scaled cost overflows i32");
+                c as i32
+            })
+            .collect()
+    }
+
+    pub fn scaled_costs_i64(&self) -> Vec<i64> {
+        let k = (self.n + 1) as i64;
+        self.weights.iter().map(|&w| -w * k).collect()
+    }
+
+    /// Initial epsilon for the scaling loop: the largest |scaled cost|.
+    pub fn initial_epsilon(&self) -> i64 {
+        (self.max_weight() * (self.n + 1) as i64).max(1)
+    }
+
+    /// Pad to an `m x m` instance (`m >= n`) with zero-weight arcs.  With
+    /// non-negative weights the optimum restricted to the real block is
+    /// preserved; `unpad_assignment` completes any real->dummy rows.
+    pub fn pad(&self, m: usize) -> AssignmentInstance {
+        assert!(m >= self.n);
+        let mut w = vec![0i64; m * m];
+        for x in 0..self.n {
+            w[x * m..x * m + self.n].copy_from_slice(&self.weights[x * self.n..(x + 1) * self.n]);
+        }
+        AssignmentInstance::new(m, w)
+    }
+
+    /// Restrict a padded solution back to `n` rows, re-matching any row
+    /// that was assigned a dummy column to a free real column (possible
+    /// only at equal weight for non-negative instances solved optimally;
+    /// the validators double-check).
+    pub fn unpad_assignment(&self, padded: &[usize]) -> Vec<usize> {
+        let n = self.n;
+        let mut assign: Vec<Option<usize>> = padded[..n]
+            .iter()
+            .map(|&y| if y < n { Some(y) } else { None })
+            .collect();
+        let mut used = vec![false; n];
+        for y in assign.iter().flatten() {
+            used[*y] = true;
+        }
+        let mut free: Vec<usize> = (0..n).filter(|&y| !used[y]).collect();
+        for slot in assign.iter_mut() {
+            if slot.is_none() {
+                *slot = free.pop();
+            }
+        }
+        assign.into_iter().map(|y| y.expect("perfect matching")).collect()
+    }
+
+    /// The paper's §5 reduction: instance `I = (G, w)` to a max-flow
+    /// min-cost instance `I' = (G', u, c)` *plus* source/sink, for the
+    /// reduction-soundness bench (E1).  Costs are returned alongside since
+    /// `FlowNetwork` itself is cost-free.
+    ///
+    /// Node ids: X = 0..n, Y = n..2n, s = 2n, t = 2n+1.
+    pub fn to_mincost_network(&self) -> (FlowNetwork, Vec<i64>) {
+        let n = self.n;
+        let mut b = NetworkBuilder::new(2 * n + 2, 2 * n, 2 * n + 1);
+        let mut costs = Vec::new();
+        for x in 0..n {
+            for y in 0..n {
+                // u(x,y) = 1, c(x,y) = -w (min-cost form of max-weight).
+                b.add_edge(x, n + y, 1, 0);
+                costs.push(-self.weight(x, y));
+            }
+        }
+        for x in 0..n {
+            b.add_edge(2 * n, x, 1, 0);
+            costs.push(0);
+        }
+        for y in 0..n {
+            b.add_edge(n + y, 2 * n + 1, 1, 0);
+            costs.push(0);
+        }
+        (b.build().expect("well-formed"), costs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst3() -> AssignmentInstance {
+        AssignmentInstance::new(3, vec![5, 1, 0, 2, 8, 1, 0, 3, 9])
+    }
+
+    #[test]
+    fn weight_accessors() {
+        let a = inst3();
+        assert_eq!(a.weight(1, 1), 8);
+        assert_eq!(a.max_weight(), 9);
+        assert_eq!(a.assignment_weight(&[0, 1, 2]), 22);
+    }
+
+    #[test]
+    fn permutation_check() {
+        assert!(AssignmentInstance::is_permutation(&[2, 0, 1]));
+        assert!(!AssignmentInstance::is_permutation(&[0, 0, 1]));
+        assert!(!AssignmentInstance::is_permutation(&[0, 1, 3]));
+    }
+
+    #[test]
+    fn scaling_matches_design() {
+        let a = inst3();
+        let c = a.scaled_costs_i64();
+        assert_eq!(c[0], -5 * 4);
+        assert_eq!(a.initial_epsilon(), 36);
+    }
+
+    #[test]
+    fn pad_preserves_real_block() {
+        let a = inst3();
+        let p = a.pad(5);
+        assert_eq!(p.n, 5);
+        assert_eq!(p.weight(1, 1), 8);
+        assert_eq!(p.weight(1, 4), 0);
+        assert_eq!(p.weight(4, 1), 0);
+    }
+
+    #[test]
+    fn unpad_completes_dummy_rows() {
+        let a = inst3();
+        // Padded solution where x=2 went to dummy column 4; columns 0,1 used.
+        let assign = a.unpad_assignment(&[0, 1, 4, 2, 3]);
+        assert!(AssignmentInstance::is_permutation(&assign));
+        assert_eq!(assign[0], 0);
+        assert_eq!(assign[1], 1);
+        assert_eq!(assign[2], 2);
+    }
+
+    #[test]
+    fn mincost_reduction_shape() {
+        let a = inst3();
+        let (f, costs) = a.to_mincost_network();
+        assert_eq!(f.node_count(), 8);
+        assert_eq!(f.edge_pair_count(), 9 + 3 + 3);
+        assert_eq!(costs.len(), f.edge_pair_count());
+        assert_eq!(costs[4], -8); // arc (1,1)
+    }
+}

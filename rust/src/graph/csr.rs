@@ -1,0 +1,260 @@
+//! Residual flow network in CSR form with paired reverse edges.
+//!
+//! Every call to [`NetworkBuilder::add_edge`] creates a *pair* of edges
+//! `(2k, 2k+1)` that are each other's reverses, so `eid ^ 1` is the mate —
+//! the same trick the paper uses with its `adj.mate` pointer (§4.6).  All
+//! engines (sequential, lock-free, hybrid) operate on this structure.
+
+use anyhow::{ensure, Result};
+
+/// Index of a directed edge; `eid ^ 1` is its reverse mate.
+pub type EdgeId = u32;
+
+/// Immutable topology + mutable residual capacities of an s-t network.
+#[derive(Debug, Clone)]
+pub struct FlowNetwork {
+    n: usize,
+    s: usize,
+    t: usize,
+    /// CSR offsets into `adj`, length n + 1.
+    adj_off: Vec<u32>,
+    /// Edge ids ordered by tail node.
+    adj: Vec<EdgeId>,
+    /// Head (target) of each edge.
+    head: Vec<u32>,
+    /// Current residual capacity of each edge.
+    cap: Vec<i64>,
+    /// Residual capacity at build time (to extract flows later).
+    cap0: Vec<i64>,
+}
+
+impl FlowNetwork {
+    pub fn node_count(&self) -> usize {
+        self.n
+    }
+
+    pub fn edge_pair_count(&self) -> usize {
+        self.head.len() / 2
+    }
+
+    pub fn source(&self) -> usize {
+        self.s
+    }
+
+    pub fn sink(&self) -> usize {
+        self.t
+    }
+
+    /// Edge ids leaving `v` (both orientations of incident pairs).
+    #[inline]
+    pub fn out_edges(&self, v: usize) -> &[EdgeId] {
+        &self.adj[self.adj_off[v] as usize..self.adj_off[v + 1] as usize]
+    }
+
+    #[inline]
+    pub fn edge_head(&self, e: EdgeId) -> usize {
+        self.head[e as usize] as usize
+    }
+
+    #[inline]
+    pub fn residual(&self, e: EdgeId) -> i64 {
+        self.cap[e as usize]
+    }
+
+    /// Push `delta` along `e` (decreasing its residual, increasing the
+    /// mate's).  Panics in debug builds if `delta` exceeds the residual.
+    #[inline]
+    pub fn push(&mut self, e: EdgeId, delta: i64) {
+        debug_assert!(delta >= 0 && delta <= self.cap[e as usize]);
+        self.cap[e as usize] -= delta;
+        self.cap[(e ^ 1) as usize] += delta;
+    }
+
+    /// Net flow currently on `e`: positive if flow moved in e's direction.
+    #[inline]
+    pub fn flow(&self, e: EdgeId) -> i64 {
+        self.cap0[e as usize] - self.cap[e as usize]
+    }
+
+    /// Original (build-time) capacity of `e`.
+    #[inline]
+    pub fn capacity0(&self, e: EdgeId) -> i64 {
+        self.cap0[e as usize]
+    }
+
+    /// Reset all residuals to build-time capacities.
+    pub fn reset(&mut self) {
+        self.cap.copy_from_slice(&self.cap0);
+    }
+
+    /// Value currently flowing out of the source (net).
+    pub fn source_outflow(&self) -> i64 {
+        self.out_edges(self.s).iter().map(|&e| self.flow(e)).sum()
+    }
+
+    /// Direct mutable access for engines that manage capacities wholesale
+    /// (the lock-free engine snapshots into atomics and writes back).
+    pub fn capacities(&self) -> &[i64] {
+        &self.cap
+    }
+
+    pub fn set_capacities(&mut self, cap: Vec<i64>) {
+        assert_eq!(cap.len(), self.cap.len());
+        self.cap = cap;
+    }
+
+    /// All edges as (tail, head, cap0, residual) for inspection/IO.
+    pub fn edges(&self) -> impl Iterator<Item = (usize, usize, i64, i64)> + '_ {
+        (0..self.n).flat_map(move |u| {
+            self.out_edges(u)
+                .iter()
+                .map(move |&e| (u, self.edge_head(e), self.capacity0(e), self.residual(e)))
+        })
+    }
+}
+
+/// Incremental builder; `build()` freezes the CSR layout.
+#[derive(Debug, Clone)]
+pub struct NetworkBuilder {
+    n: usize,
+    s: usize,
+    t: usize,
+    // (tail, head, cap_fwd, cap_bwd) per pair.
+    pairs: Vec<(u32, u32, i64, i64)>,
+}
+
+impl NetworkBuilder {
+    pub fn new(n: usize, s: usize, t: usize) -> Self {
+        assert!(s < n && t < n && s != t, "bad source/sink");
+        Self {
+            n,
+            s,
+            t,
+            pairs: Vec::new(),
+        }
+    }
+
+    /// Add the directed edge `u -> v` with capacity `cap` and a reverse
+    /// capacity `rcap` (0 for plain directed edges).  Returns the forward
+    /// edge id.
+    pub fn add_edge(&mut self, u: usize, v: usize, cap: i64, rcap: i64) -> EdgeId {
+        assert!(u < self.n && v < self.n && u != v, "bad edge {u}->{v}");
+        assert!(cap >= 0 && rcap >= 0, "negative capacity");
+        let id = (self.pairs.len() * 2) as EdgeId;
+        self.pairs.push((u as u32, v as u32, cap, rcap));
+        id
+    }
+
+    pub fn build(self) -> Result<FlowNetwork> {
+        ensure!(self.n >= 2, "network needs at least s and t");
+        let m2 = self.pairs.len() * 2;
+        let mut head = vec![0u32; m2];
+        let mut cap = vec![0i64; m2];
+        let mut deg = vec![0u32; self.n + 1];
+        for &(u, v, _, _) in &self.pairs {
+            deg[u as usize + 1] += 1;
+            deg[v as usize + 1] += 1;
+        }
+        for i in 0..self.n {
+            deg[i + 1] += deg[i];
+        }
+        let adj_off = deg.clone();
+        let mut cursor = deg;
+        let mut adj = vec![0 as EdgeId; m2];
+        for (k, &(u, v, c, rc)) in self.pairs.iter().enumerate() {
+            let ef = (2 * k) as EdgeId;
+            let eb = ef + 1;
+            head[ef as usize] = v;
+            head[eb as usize] = u;
+            cap[ef as usize] = c;
+            cap[eb as usize] = rc;
+            adj[cursor[u as usize] as usize] = ef;
+            cursor[u as usize] += 1;
+            adj[cursor[v as usize] as usize] = eb;
+            cursor[v as usize] += 1;
+        }
+        let cap0 = cap.clone();
+        Ok(FlowNetwork {
+            n: self.n,
+            s: self.s,
+            t: self.t,
+            adj_off,
+            adj,
+            head,
+            cap,
+            cap0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> FlowNetwork {
+        // s=0, t=3, two disjoint paths of capacity 3 and 2.
+        let mut b = NetworkBuilder::new(4, 0, 3);
+        b.add_edge(0, 1, 3, 0);
+        b.add_edge(1, 3, 3, 0);
+        b.add_edge(0, 2, 2, 0);
+        b.add_edge(2, 3, 2, 0);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn mate_pairing() {
+        let g = diamond();
+        for e in 0..(g.edge_pair_count() * 2) as EdgeId {
+            let mate = e ^ 1;
+            assert_eq!(g.edge_head(mate), {
+                // mate's head is e's tail: find e in tail's out list
+                let mut tail = usize::MAX;
+                for u in 0..g.node_count() {
+                    if g.out_edges(u).contains(&e) {
+                        tail = u;
+                    }
+                }
+                tail
+            });
+        }
+    }
+
+    #[test]
+    fn push_moves_residual_to_mate() {
+        let mut g = diamond();
+        let e = g.out_edges(0)[0];
+        let before = g.residual(e);
+        g.push(e, 2);
+        assert_eq!(g.residual(e), before - 2);
+        assert_eq!(g.residual(e ^ 1), 2);
+        assert_eq!(g.flow(e), 2);
+        g.push(e ^ 1, 1); // partial undo
+        assert_eq!(g.flow(e), 1);
+    }
+
+    #[test]
+    fn adjacency_is_complete() {
+        let g = diamond();
+        let total: usize = (0..4).map(|v| g.out_edges(v).len()).sum();
+        assert_eq!(total, 8); // 4 pairs * 2 directions
+        assert_eq!(g.out_edges(0).len(), 2);
+        assert_eq!(g.out_edges(3).len(), 2);
+    }
+
+    #[test]
+    fn reset_restores_capacities() {
+        let mut g = diamond();
+        let e = g.out_edges(0)[0];
+        g.push(e, 3);
+        g.reset();
+        assert_eq!(g.residual(e), 3);
+        assert_eq!(g.flow(e), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad edge")]
+    fn self_loops_rejected() {
+        let mut b = NetworkBuilder::new(3, 0, 2);
+        b.add_edge(1, 1, 5, 0);
+    }
+}

@@ -1,0 +1,223 @@
+//! DIMACS file formats: `.max` (max-flow) and `.asn` (assignment), both
+//! reader and writer — the interchange the original max-flow/matching
+//! community (and Goldberg's codes the paper builds on) uses.
+//!
+//! Max-flow:
+//! ```text
+//! c comment
+//! p max <nodes> <arcs>
+//! n <id> s
+//! n <id> t
+//! a <from> <to> <cap>          (1-based ids)
+//! ```
+//!
+//! Assignment:
+//! ```text
+//! p asn <nodes> <arcs>
+//! n <id>                        (source-side node)
+//! a <x> <y> <weight>
+//! ```
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::bipartite::AssignmentInstance;
+use super::csr::{FlowNetwork, NetworkBuilder};
+
+/// Parsed `.max` file (kept as an edge list so callers can build either a
+/// CSR network or a grid).
+#[derive(Debug, Clone)]
+pub struct MaxFlowFile {
+    pub nodes: usize,
+    pub source: usize,
+    pub sink: usize,
+    /// 0-based (from, to, cap).
+    pub arcs: Vec<(usize, usize, i64)>,
+}
+
+impl MaxFlowFile {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut nodes = None;
+        let mut arcs_decl = 0usize;
+        let mut source = None;
+        let mut sink = None;
+        let mut arcs = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            let mut it = line.split_whitespace();
+            match it.next() {
+                None | Some("c") => {}
+                Some("p") => {
+                    ensure!(it.next() == Some("max"), "line {}: not a max problem", lineno + 1);
+                    nodes = Some(it.next().context("missing node count")?.parse()?);
+                    arcs_decl = it.next().context("missing arc count")?.parse()?;
+                }
+                Some("n") => {
+                    let id: usize = it.next().context("missing node id")?.parse()?;
+                    match it.next() {
+                        Some("s") => source = Some(id - 1),
+                        Some("t") => sink = Some(id - 1),
+                        other => bail!("line {}: bad node designator {other:?}", lineno + 1),
+                    }
+                }
+                Some("a") => {
+                    let u: usize = it.next().context("missing tail")?.parse()?;
+                    let v: usize = it.next().context("missing head")?.parse()?;
+                    let c: i64 = it.next().context("missing cap")?.parse()?;
+                    ensure!(c >= 0, "line {}: negative capacity", lineno + 1);
+                    arcs.push((u - 1, v - 1, c));
+                }
+                Some(other) => bail!("line {}: unknown record {other:?}", lineno + 1),
+            }
+        }
+        let nodes = nodes.context("no problem line")?;
+        ensure!(
+            arcs.len() == arcs_decl,
+            "declared {} arcs, found {}",
+            arcs_decl,
+            arcs.len()
+        );
+        Ok(Self {
+            nodes,
+            source: source.context("no source")?,
+            sink: sink.context("no sink")?,
+            arcs,
+        })
+    }
+
+    pub fn to_network(&self) -> Result<FlowNetwork> {
+        let mut b = NetworkBuilder::new(self.nodes, self.source, self.sink);
+        for &(u, v, c) in &self.arcs {
+            ensure!(u < self.nodes && v < self.nodes, "arc out of range");
+            if u != v {
+                b.add_edge(u, v, c, 0);
+            }
+        }
+        b.build()
+    }
+}
+
+/// Serialize a network (build-time capacities) to `.max` format.
+pub fn write_max_flow(g: &FlowNetwork) -> String {
+    let mut arcs = Vec::new();
+    for (u, v, c0, _) in g.edges() {
+        if c0 > 0 {
+            arcs.push((u, v, c0));
+        }
+    }
+    let mut out = String::new();
+    out.push_str("c flowmatch export\n");
+    out.push_str(&format!("p max {} {}\n", g.node_count(), arcs.len()));
+    out.push_str(&format!("n {} s\n", g.source() + 1));
+    out.push_str(&format!("n {} t\n", g.sink() + 1));
+    for (u, v, c) in arcs {
+        out.push_str(&format!("a {} {} {}\n", u + 1, v + 1, c));
+    }
+    out
+}
+
+/// Parse a complete-bipartite `.asn` file into an [`AssignmentInstance`].
+/// Missing arcs get weight 0 (the formats allow sparse listings).
+pub fn parse_assignment(text: &str) -> Result<AssignmentInstance> {
+    let mut nodes = None;
+    let mut sources = Vec::new();
+    let mut arcs: Vec<(usize, usize, i64)> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        let mut it = line.split_whitespace();
+        match it.next() {
+            None | Some("c") => {}
+            Some("p") => {
+                ensure!(it.next() == Some("asn"), "line {}: not an asn problem", lineno + 1);
+                nodes = Some(it.next().context("missing node count")?.parse::<usize>()?);
+            }
+            Some("n") => sources.push(it.next().context("node id")?.parse::<usize>()? - 1),
+            Some("a") => {
+                let x: usize = it.next().context("tail")?.parse()?;
+                let y: usize = it.next().context("head")?.parse()?;
+                let w: i64 = it.next().context("weight")?.parse()?;
+                arcs.push((x - 1, y - 1, w));
+            }
+            Some(other) => bail!("line {}: unknown record {other:?}", lineno + 1),
+        }
+    }
+    let nodes = nodes.context("no problem line")?;
+    ensure!(nodes % 2 == 0, "asn node count must be even");
+    let n = nodes / 2;
+    ensure!(
+        sources.len() == n,
+        "expected {} source-side nodes, got {}",
+        n,
+        sources.len()
+    );
+    let mut weights = vec![0i64; n * n];
+    for (x, y, w) in arcs {
+        ensure!(x < n, "source-side id {} out of range", x + 1);
+        ensure!((n..2 * n).contains(&y), "sink-side id {} out of range", y + 1);
+        ensure!(w >= 0, "negative weight");
+        weights[x * n + (y - n)] = w;
+    }
+    Ok(AssignmentInstance::new(n, weights))
+}
+
+/// Serialize an assignment instance to `.asn` (zero-weight arcs elided).
+pub fn write_assignment(inst: &AssignmentInstance) -> String {
+    let n = inst.n;
+    let arcs: Vec<(usize, usize, i64)> = (0..n)
+        .flat_map(|x| (0..n).map(move |y| (x, y, inst.weight(x, y))))
+        .filter(|&(_, _, w)| w > 0)
+        .collect();
+    let mut out = String::new();
+    out.push_str("c flowmatch export\n");
+    out.push_str(&format!("p asn {} {}\n", 2 * n, arcs.len()));
+    for x in 0..n {
+        out.push_str(&format!("n {}\n", x + 1));
+    }
+    for (x, y, w) in arcs {
+        out.push_str(&format!("a {} {} {}\n", x + 1, n + y + 1, w));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maxflow_roundtrip() {
+        let text = "c demo\np max 4 5\nn 1 s\nn 4 t\na 1 2 3\na 2 4 3\na 1 3 2\na 3 4 2\na 2 3 1\n";
+        let parsed = MaxFlowFile::parse(text).unwrap();
+        assert_eq!(parsed.nodes, 4);
+        assert_eq!(parsed.source, 0);
+        assert_eq!(parsed.sink, 3);
+        assert_eq!(parsed.arcs.len(), 5);
+        let g = parsed.to_network().unwrap();
+        let re = write_max_flow(&g);
+        let reparsed = MaxFlowFile::parse(&re).unwrap();
+        let mut a1 = parsed.arcs.clone();
+        let mut a2 = reparsed.arcs.clone();
+        a1.sort();
+        a2.sort();
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn maxflow_rejects_malformed() {
+        assert!(MaxFlowFile::parse("p max 2 1\nn 1 s\nn 2 t\n").is_err()); // arc count
+        assert!(MaxFlowFile::parse("p min 2 0\nn 1 s\nn 2 t\n").is_err());
+        assert!(MaxFlowFile::parse("a 1 2 3\n").is_err()); // no p line
+    }
+
+    #[test]
+    fn assignment_roundtrip() {
+        let inst = AssignmentInstance::new(3, vec![5, 0, 2, 0, 7, 0, 1, 0, 9]);
+        let text = write_assignment(&inst);
+        let parsed = parse_assignment(&text).unwrap();
+        assert_eq!(parsed, inst);
+    }
+
+    #[test]
+    fn assignment_rejects_bad_sides() {
+        let text = "p asn 4 1\nn 1\nn 2\na 1 2 5\n"; // head must be in 3..4
+        assert!(parse_assignment(text).is_err());
+    }
+}

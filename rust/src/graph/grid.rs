@@ -1,0 +1,211 @@
+//! Grid flow networks (the §4 instance class: 4-connected grids from
+//! MRF/graph-cut constructions) in the dense SoA layout the device kernel
+//! uses, with converters to the general CSR representation for the
+//! sequential baselines.
+
+use super::csr::{FlowNetwork, NetworkBuilder};
+
+/// Arc directions, matching python/compile/kernels/grid_wave.py.
+pub const N: usize = 0;
+pub const S: usize = 1;
+pub const W: usize = 2;
+pub const E: usize = 3;
+
+/// `(di, dj)` per direction.
+pub const DIRS: [(i64, i64); 4] = [(-1, 0), (1, 0), (0, -1), (0, 1)];
+/// Opposite direction index.
+pub const OPP: [usize; 4] = [S, N, E, W];
+
+/// A grid max-flow *instance*: immutable initial capacities.
+///
+/// `cap[d][i][j]` is the neighbour-arc capacity, `cap_sink` the (x, t)
+/// terminal capacity and `cap_source` the (s, x) terminal capacity (the
+/// Kolmogorov–Zabih construction only ever attaches a pixel to one of the
+/// two terminals, but both arrays are allowed to be non-zero).
+#[derive(Debug, Clone)]
+pub struct GridNetwork {
+    pub height: usize,
+    pub width: usize,
+    /// Arc-major `[4 * height * width]`.
+    pub cap: Vec<i64>,
+    pub cap_sink: Vec<i64>,
+    pub cap_source: Vec<i64>,
+}
+
+impl GridNetwork {
+    pub fn zeros(height: usize, width: usize) -> Self {
+        assert!(height > 0 && width > 0);
+        let n = height * width;
+        Self {
+            height,
+            width,
+            cap: vec![0; 4 * n],
+            cap_sink: vec![0; n],
+            cap_source: vec![0; n],
+        }
+    }
+
+    #[inline]
+    pub fn cells(&self) -> usize {
+        self.height * self.width
+    }
+
+    #[inline]
+    pub fn cell(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < self.height && j < self.width);
+        i * self.width + j
+    }
+
+    /// Neighbour cell index in direction `d`, if inside the grid.
+    #[inline]
+    pub fn neighbour(&self, i: usize, j: usize, d: usize) -> Option<(usize, usize)> {
+        let (di, dj) = DIRS[d];
+        let ni = i as i64 + di;
+        let nj = j as i64 + dj;
+        if ni >= 0 && nj >= 0 && (ni as usize) < self.height && (nj as usize) < self.width {
+            Some((ni as usize, nj as usize))
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    pub fn arc(&self, d: usize, i: usize, j: usize) -> usize {
+        d * self.cells() + self.cell(i, j)
+    }
+
+    pub fn set_neighbour_cap(&mut self, i: usize, j: usize, d: usize, cap: i64) {
+        assert!(self.neighbour(i, j, d).is_some(), "arc leaves the grid");
+        assert!(cap >= 0);
+        let a = self.arc(d, i, j);
+        self.cap[a] = cap;
+    }
+
+    /// Zero any arcs that would leave the grid (defensive normalisation
+    /// after bulk-filling `cap`).
+    pub fn clear_border_arcs(&mut self) {
+        for i in 0..self.height {
+            for j in 0..self.width {
+                for d in 0..4 {
+                    if self.neighbour(i, j, d).is_none() {
+                        let a = self.arc(d, i, j);
+                        self.cap[a] = 0;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Total capacity leaving the source — Hong's `ExcessTotal`.
+    pub fn excess_total(&self) -> i64 {
+        self.cap_source.iter().sum()
+    }
+
+    /// Node ids in the CSR view: cells row-major, then source, then sink.
+    pub fn source_id(&self) -> usize {
+        self.cells()
+    }
+
+    pub fn sink_id(&self) -> usize {
+        self.cells() + 1
+    }
+
+    /// Convert to the general representation for the sequential baselines.
+    /// Neighbour arcs become directed pairs with the *stored* capacity in
+    /// each direction (each grid arc appears once per orientation, so we
+    /// emit the pair from the lexicographically smaller side with both
+    /// orientations' capacities).
+    pub fn to_flow_network(&self) -> FlowNetwork {
+        let n = self.cells() + 2;
+        let mut b = NetworkBuilder::new(n, self.source_id(), self.sink_id());
+        for i in 0..self.height {
+            for j in 0..self.width {
+                let u = self.cell(i, j);
+                // Emit S and E pairs only (each undirected neighbour pair
+                // once), pairing with the neighbour's opposite capacity.
+                for &d in &[S, E] {
+                    if let Some((ni, nj)) = self.neighbour(i, j, d) {
+                        let fwd = self.cap[self.arc(d, i, j)];
+                        let bwd = self.cap[self.arc(OPP[d], ni, nj)];
+                        if fwd > 0 || bwd > 0 {
+                            b.add_edge(u, self.cell(ni, nj), fwd, bwd);
+                        }
+                    }
+                }
+                let cs = self.cap_source[u];
+                if cs > 0 {
+                    b.add_edge(self.source_id(), u, cs, 0);
+                }
+                let ct = self.cap_sink[u];
+                if ct > 0 {
+                    b.add_edge(u, self.sink_id(), ct, 0);
+                }
+            }
+        }
+        b.build().expect("grid network is well-formed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_helpers() {
+        let g = GridNetwork::zeros(3, 4);
+        assert_eq!(g.cells(), 12);
+        assert_eq!(g.cell(2, 3), 11);
+        assert_eq!(g.neighbour(0, 0, N), None);
+        assert_eq!(g.neighbour(0, 0, S), Some((1, 0)));
+        assert_eq!(g.neighbour(1, 3, E), None);
+        assert_eq!(g.neighbour(1, 2, E), Some((1, 3)));
+        assert_eq!(g.source_id(), 12);
+        assert_eq!(g.sink_id(), 13);
+    }
+
+    #[test]
+    fn csr_conversion_roundtrips_arc_capacities() {
+        let mut g = GridNetwork::zeros(2, 2);
+        g.set_neighbour_cap(0, 0, E, 5);
+        g.set_neighbour_cap(0, 1, W, 2); // reverse of the same pair
+        g.set_neighbour_cap(0, 0, S, 7);
+        let c00 = g.cell(0, 0);
+        let c11 = g.cell(1, 1);
+        g.cap_source[c00] = 9;
+        g.cap_sink[c11] = 4;
+        let f = g.to_flow_network();
+        assert_eq!(f.node_count(), 6);
+        // Pairs: (0,0)-(0,1) with 5/2, (0,0)-(1,0) with 7/0, s->(0,0), (1,1)->t.
+        assert_eq!(f.edge_pair_count(), 4);
+        let mut caps: Vec<(usize, usize, i64)> = f
+            .edges()
+            .filter(|&(_, _, c0, _)| c0 > 0)
+            .map(|(u, v, c0, _)| (u, v, c0))
+            .collect();
+        caps.sort();
+        assert!(caps.contains(&(0, 1, 5)));
+        assert!(caps.contains(&(1, 0, 2)));
+        assert!(caps.contains(&(0, 2, 7)));
+        assert!(caps.contains(&(4, 0, 9)));
+        assert!(caps.contains(&(3, 5, 4)));
+    }
+
+    #[test]
+    fn excess_total_sums_source_caps() {
+        let mut g = GridNetwork::zeros(2, 2);
+        g.cap_source[0] = 3;
+        g.cap_source[3] = 4;
+        assert_eq!(g.excess_total(), 7);
+    }
+
+    #[test]
+    fn clear_border_arcs_zeroes_outward() {
+        let mut g = GridNetwork::zeros(2, 2);
+        g.cap.fill(9);
+        g.clear_border_arcs();
+        assert_eq!(g.cap[g.arc(N, 0, 0)], 0);
+        assert_eq!(g.cap[g.arc(S, 0, 0)], 9);
+        assert_eq!(g.cap[g.arc(E, 1, 1)], 0);
+        assert_eq!(g.cap[g.arc(W, 1, 1)], 9);
+    }
+}

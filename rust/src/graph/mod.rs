@@ -1,0 +1,12 @@
+//! Graph substrates: the flow-network and bipartite-instance types every
+//! engine operates on, plus DIMACS I/O and solution validators.
+
+pub mod bipartite;
+pub mod csr;
+pub mod dimacs;
+pub mod grid;
+pub mod validate;
+
+pub use bipartite::AssignmentInstance;
+pub use csr::{EdgeId, FlowNetwork, NetworkBuilder};
+pub use grid::GridNetwork;

@@ -1,0 +1,224 @@
+//! Host phase of the hybrid scheme on grid states (Algorithm 4.8): cancel
+//! height-violating residual arcs, then a backwards BFS from the sink
+//! assigns exact distances, and the gap step parks unreached cells at |V|.
+//!
+//! In the paper this is the C procedure the CUDA kernel returns control
+//! to every CYCLE iterations; here it runs between PJRT super-steps.
+
+use std::collections::VecDeque;
+
+use crate::runtime::device::GridWireState;
+
+const DIRS: [(i64, i64); 4] = [(-1, 0), (1, 0), (0, -1), (0, 1)];
+const OPP: [usize; 4] = [1, 0, 3, 2];
+
+/// Outcome counters of one host round.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HostRoundStats {
+    pub cancelled_arcs: u64,
+    pub reached_cells: u64,
+    pub gap_cells: u64,
+    /// Flow returned to the source by violation cancellation on (x, s)
+    /// arcs (must be credited to the solver's src_flow total).
+    pub src_returned: i64,
+}
+
+/// Cancel residual arcs with `h(x) > h(y) + 1` by pushing their full
+/// residual (Algorithm 4.8 lines 1-6).  Terminal arcs: the sink counts as
+/// height 0 (never violated: pushing to the sink is always allowed), the
+/// source as height |V|.
+pub fn cancel_violations(st: &mut GridWireState) -> (u64, i64) {
+    let (hh, ww) = (st.height, st.width);
+    let cells = hh * ww;
+    let v_total = (cells + 2) as i64;
+    let mut cancelled = 0;
+    let mut src_returned = 0i64;
+    for i in 0..hh {
+        for j in 0..ww {
+            let c = i * ww + j;
+            for (a, &(di, dj)) in DIRS.iter().enumerate() {
+                let (ni, nj) = (i as i64 + di, j as i64 + dj);
+                if ni < 0 || nj < 0 || ni >= hh as i64 || nj >= ww as i64 {
+                    continue;
+                }
+                let nc = (ni as usize) * ww + nj as usize;
+                let r = st.cap[a * cells + c];
+                if r > 0 && (st.h[c] as i64) > st.h[nc] as i64 + 1 {
+                    st.cap[a * cells + c] = 0;
+                    st.cap[OPP[a] * cells + nc] += r;
+                    st.e[c] -= r;
+                    st.e[nc] += r;
+                    cancelled += 1;
+                }
+            }
+            // Source arc: violation when h(x) > |V| + 1.
+            let r = st.cap_src[c];
+            if r > 0 && (st.h[c] as i64) > v_total + 1 {
+                st.cap_src[c] = 0;
+                st.e[c] -= r;
+                src_returned += r as i64;
+                cancelled += 1;
+            }
+        }
+    }
+    (cancelled, src_returned)
+}
+
+/// Global relabel: heights become exact BFS distances to the sink in the
+/// residual graph; unreached cells are parked at |V| (gap relabeling,
+/// §4.6 "for each unvisited node ... sets its height to |V|").
+pub fn global_relabel(st: &mut GridWireState) -> HostRoundStats {
+    let (hh, ww) = (st.height, st.width);
+    let cells = hh * ww;
+    let v_total = (cells + 2) as i32;
+
+    let mut dist = vec![-1i32; cells];
+    let mut q = VecDeque::new();
+    // Distance 1: cells with residual arc to the sink.
+    for c in 0..cells {
+        if st.cap_sink[c] > 0 {
+            dist[c] = 1;
+            q.push_back(c);
+        }
+    }
+    let mut reached = q.len() as u64;
+    while let Some(c) = q.pop_front() {
+        let (i, j) = (c / ww, c % ww);
+        // Traverse reverse residual arcs: neighbour n can reach c if the
+        // arc n->c has residual capacity, i.e. cap[a_from_n][n] > 0 where
+        // a_from_n points from n to c (= OPP of the arc c->n).
+        for (a, &(di, dj)) in DIRS.iter().enumerate() {
+            let (ni, nj) = (i as i64 + di, j as i64 + dj);
+            if ni < 0 || nj < 0 || ni >= hh as i64 || nj >= ww as i64 {
+                continue;
+            }
+            let nc = (ni as usize) * ww + nj as usize;
+            if dist[nc] < 0 && st.cap[OPP[a] * cells + nc] > 0 {
+                dist[nc] = dist[c] + 1;
+                reached += 1;
+                q.push_back(nc);
+            }
+        }
+    }
+
+    // Second phase (Cherkassky–Goldberg): cells that cannot reach the
+    // sink get `|V| + distance-to-source`, so their excess routes back to
+    // the source instead of re-climbing from the |V| plateau every round
+    // (plain `h = |V|` livelocks when CYCLE is smaller than the climb).
+    let mut dist_s = vec![-1i32; cells];
+    let mut qs = VecDeque::new();
+    for c in 0..cells {
+        if dist[c] < 0 && st.cap_src[c] > 0 {
+            dist_s[c] = 1;
+            qs.push_back(c);
+        }
+    }
+    while let Some(c) = qs.pop_front() {
+        let (i, j) = (c / ww, c % ww);
+        for (a, &(di, dj)) in DIRS.iter().enumerate() {
+            let (ni, nj) = (i as i64 + di, j as i64 + dj);
+            if ni < 0 || nj < 0 || ni >= hh as i64 || nj >= ww as i64 {
+                continue;
+            }
+            let nc = (ni as usize) * ww + nj as usize;
+            if dist[nc] < 0 && dist_s[nc] < 0 && st.cap[OPP[a] * cells + nc] > 0 {
+                dist_s[nc] = dist_s[c] + 1;
+                qs.push_back(nc);
+            }
+        }
+    }
+
+    let mut gap = 0;
+    for c in 0..cells {
+        st.h[c] = if dist[c] >= 0 {
+            dist[c]
+        } else {
+            gap += 1;
+            if dist_s[c] >= 0 {
+                v_total + dist_s[c]
+            } else {
+                // Unreachable from both terminals: inert (no excess can
+                // sit here by the preflow invariant).
+                2 * v_total
+            }
+        };
+    }
+    HostRoundStats {
+        cancelled_arcs: 0,
+        reached_cells: reached,
+        gap_cells: gap,
+        src_returned: 0,
+    }
+}
+
+/// Full host round: cancel violations then global+gap relabel.
+pub fn host_round(st: &mut GridWireState) -> HostRoundStats {
+    let (cancelled, src_returned) = cancel_violations(st);
+    let mut out = global_relabel(st);
+    out.cancelled_arcs = cancelled;
+    out.src_returned = src_returned;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bfs_heights_on_fresh_column() {
+        // 3x1 column, sink arc at the bottom cell, full interior caps.
+        let mut st = GridWireState::zeros(3, 1);
+        st.cap_sink[2] = 5;
+        st.cap[1 * 3 + 0] = 2; // S from cell 0
+        st.cap[1 * 3 + 1] = 2; // S from cell 1
+        let out = global_relabel(&mut st);
+        assert_eq!(st.h, vec![3, 2, 1]);
+        assert_eq!(out.reached_cells, 3);
+        assert_eq!(out.gap_cells, 0);
+    }
+
+    #[test]
+    fn unreachable_cells_gap_above_v() {
+        let mut st = GridWireState::zeros(2, 2);
+        st.cap_sink[0] = 1;
+        st.cap_src[3] = 1;
+        // No interior capacity: cells 1..3 cannot reach the sink; cell 3
+        // reaches the source directly, cells 1-2 reach neither terminal.
+        let out = global_relabel(&mut st);
+        assert_eq!(st.h[0], 1);
+        assert_eq!(st.h[3], 7); // |V| + 1, routes excess back to s
+        assert_eq!(st.h[1], 12); // 2|V|: inert
+        assert_eq!(st.h[2], 12);
+        assert_eq!(out.gap_cells, 3);
+    }
+
+    #[test]
+    fn source_side_distances_route_back() {
+        // 1x3 row: src arc at cell 0, no sink arcs, full interior caps.
+        let mut st = GridWireState::zeros(1, 3);
+        st.cap_src[0] = 5;
+        st.cap[3 * 3] = 2; // E from 0
+        st.cap[3 * 3 + 1] = 2; // E from 1
+        st.cap[2 * 3 + 1] = 2; // W from 1
+        st.cap[2 * 3 + 2] = 2; // W from 2
+        global_relabel(&mut st);
+        assert_eq!(st.h, vec![6, 7, 8]); // |V|=5: 5+1, 5+2, 5+3
+    }
+
+    #[test]
+    fn violation_cancelling_pushes_back() {
+        let mut st = GridWireState::zeros(1, 2);
+        // Residual arc 0 -> 1 (E) while h(0) >> h(1): must be cancelled.
+        st.cap[3 * 2] = 4;
+        st.h[0] = 9;
+        st.h[1] = 0;
+        st.e[0] = 2;
+        let (cancelled, src_ret) = cancel_violations(&mut st);
+        assert_eq!(cancelled, 1);
+        assert_eq!(src_ret, 0);
+        assert_eq!(st.cap[3 * 2], 0);
+        assert_eq!(st.cap[2 * 2 + 1], 4); // W mate at cell 1
+        assert_eq!(st.e[0], -2);
+        assert_eq!(st.e[1], 4);
+    }
+}

@@ -1,0 +1,13 @@
+//! Grid push-relabel execution: the dense wave engine (a bit-exact native
+//! twin of the L1 Pallas kernel), the host-side heuristics of the hybrid
+//! scheme, and the solver that alternates the two — with the device phase
+//! served either natively or by the PJRT artifact.
+
+pub mod host;
+pub mod solver;
+pub mod state;
+pub mod wave;
+
+pub use solver::{GridExecutor, GridSolveReport, HybridGridSolver, NativeGridExecutor};
+pub use state::init_state;
+pub use wave::{native_wave, WaveStats};

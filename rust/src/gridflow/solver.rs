@@ -1,0 +1,294 @@
+//! The hybrid grid solver: device super-steps (native waves or the PJRT
+//! artifact) alternating with host rounds (violation cancel + global/gap
+//! relabel), Algorithm 4.6's loop `while e(s) + e(t) < ExcessTotal`.
+
+use anyhow::Result;
+
+use crate::graph::GridNetwork;
+use crate::runtime::device::{GridStepStats, GridWireState};
+
+use super::host;
+use super::state::init_state;
+use super::wave::{active_cells, native_wave_with, WaveScratch};
+
+/// A device that can advance the grid state by up to `outer * k_inner`
+/// waves.  Implemented natively below and by `runtime::GridDevice`.
+pub trait GridExecutor {
+    fn k_inner(&self) -> usize;
+    fn superstep(&mut self, st: &mut GridWireState, outer: i32) -> Result<GridStepStats>;
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust executor: runs the bit-exact kernel twin in-process.
+pub struct NativeGridExecutor {
+    pub k_inner: usize,
+    scratch: WaveScratch,
+}
+
+impl NativeGridExecutor {
+    pub fn with_k_inner(k_inner: usize) -> Self {
+        Self {
+            k_inner,
+            scratch: WaveScratch::default(),
+        }
+    }
+}
+
+impl Default for NativeGridExecutor {
+    fn default() -> Self {
+        Self::with_k_inner(16)
+    }
+}
+
+impl GridExecutor for NativeGridExecutor {
+    fn k_inner(&self) -> usize {
+        self.k_inner
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn superstep(&mut self, st: &mut GridWireState, outer: i32) -> Result<GridStepStats> {
+        let mut stats = GridStepStats::default();
+        let budget = outer as i64 * self.k_inner as i64;
+        // Super-step boundaries are exactly where the host may have
+        // mutated the state (global relabel, violation cancel), so the
+        // active list is rebuilt once here and maintained incrementally
+        // inside the waves (PERF: removes two full-grid scans per wave).
+        self.scratch.rebuild(st);
+        for _ in 0..budget {
+            if self.scratch.active_count() == 0 {
+                break;
+            }
+            let w = native_wave_with(st, &mut self.scratch);
+            stats.sink_flow += w.sink_flow;
+            stats.src_flow += w.src_flow;
+            stats.pushes += w.pushes;
+            stats.relabels += w.relabels;
+            stats.waves += 1;
+        }
+        debug_assert_eq!(self.scratch.active_count(), active_cells(st));
+        stats.active = self.scratch.active_count() as i64;
+        Ok(stats)
+    }
+}
+
+/// PJRT-backed executor.
+impl GridExecutor for crate::runtime::GridDevice {
+    fn k_inner(&self) -> usize {
+        self.k_inner
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn superstep(&mut self, st: &mut GridWireState, outer: i32) -> Result<GridStepStats> {
+        self.step(st, outer)
+    }
+}
+
+/// Solve report: flow value + the operational counters of the hybrid loop.
+#[derive(Debug, Clone, Default)]
+pub struct GridSolveReport {
+    pub flow: i64,
+    pub excess_total: i64,
+    pub host_rounds: u64,
+    pub waves: i64,
+    pub pushes: i64,
+    pub relabels: i64,
+    pub gap_cells: u64,
+    pub cancelled_arcs: u64,
+    pub device_seconds: f64,
+    pub host_seconds: f64,
+}
+
+/// The hybrid solver (Algorithm 4.6 shape).
+pub struct HybridGridSolver {
+    /// Waves per host round = `CYCLE` (the paper's 7000 maps to
+    /// `outer = CYCLE / k_inner` device iterations per super-step).
+    pub cycle_waves: usize,
+    /// Run the host heuristics between super-steps.
+    pub heuristics: bool,
+    /// Abort threshold.
+    pub max_rounds: u64,
+}
+
+impl Default for HybridGridSolver {
+    fn default() -> Self {
+        Self {
+            cycle_waves: 512,
+            heuristics: true,
+            max_rounds: 100_000,
+        }
+    }
+}
+
+impl HybridGridSolver {
+    pub fn with_cycle(cycle_waves: usize) -> Self {
+        Self {
+            cycle_waves: cycle_waves.max(1),
+            ..Self::default()
+        }
+    }
+
+    pub fn no_heuristics(cycle_waves: usize) -> Self {
+        Self {
+            cycle_waves: cycle_waves.max(1),
+            heuristics: false,
+            ..Self::default()
+        }
+    }
+
+    /// Run to completion on `net` using `exec` for the device phase.
+    pub fn solve(&self, net: &GridNetwork, exec: &mut dyn GridExecutor) -> Result<GridSolveReport> {
+        let (mut st, excess_total) = init_state(net);
+        let mut report = GridSolveReport {
+            excess_total,
+            ..Default::default()
+        };
+
+        // Exact initial heights (the hybrid scheme begins with a global
+        // relabel — same as copying h to the device in Algorithm 4.6).
+        if self.heuristics {
+            let t = crate::util::Timer::start();
+            let out = host::global_relabel(&mut st);
+            report.gap_cells += out.gap_cells;
+            report.host_seconds += t.elapsed();
+        }
+
+        let outer = (self.cycle_waves as i64 + exec.k_inner() as i64 - 1) / exec.k_inner() as i64;
+        let mut sink_total = 0i64;
+        let mut src_total = 0i64;
+
+        loop {
+            let t = crate::util::Timer::start();
+            let stats = exec.superstep(&mut st, outer as i32)?;
+            report.device_seconds += t.elapsed();
+            sink_total += stats.sink_flow;
+            src_total += stats.src_flow;
+            report.waves += stats.waves;
+            report.pushes += stats.pushes;
+            report.relabels += stats.relabels;
+            report.host_rounds += 1;
+
+            if sink_total + src_total >= excess_total && stats.active == 0 {
+                break;
+            }
+            anyhow::ensure!(
+                report.host_rounds < self.max_rounds,
+                "hybrid grid solve exceeded {} rounds (sink={} src={} total={})",
+                self.max_rounds,
+                sink_total,
+                src_total,
+                excess_total
+            );
+
+            if self.heuristics {
+                let t = crate::util::Timer::start();
+                let out = host::host_round(&mut st);
+                src_total += out.src_returned;
+                report.gap_cells += out.gap_cells;
+                report.cancelled_arcs += out.cancelled_arcs;
+                report.host_seconds += t.elapsed();
+            }
+        }
+
+        anyhow::ensure!(
+            sink_total + src_total == excess_total,
+            "mass accounting broken: sink {} + src {} != total {}",
+            sink_total,
+            src_total,
+            excess_total
+        );
+        report.flow = sink_total;
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::grid::{E, S};
+    use crate::maxflow::{self, MaxFlowSolver};
+
+    fn demo_net() -> GridNetwork {
+        let mut net = GridNetwork::zeros(4, 4);
+        for j in 0..4 {
+            let top = net.cell(0, j);
+            let bot = net.cell(3, j);
+            net.cap_source[top] = 4;
+            net.cap_sink[bot] = 3;
+        }
+        for i in 0..4 {
+            for j in 0..4 {
+                if i + 1 < 4 {
+                    net.set_neighbour_cap(i, j, S, 2);
+                }
+                if j + 1 < 4 {
+                    net.set_neighbour_cap(i, j, E, 1);
+                }
+            }
+        }
+        net
+    }
+
+    #[test]
+    fn native_hybrid_matches_sequential_reference() {
+        let net = demo_net();
+        let mut exec = NativeGridExecutor::default();
+        let report = HybridGridSolver::with_cycle(32)
+            .solve(&net, &mut exec)
+            .unwrap();
+
+        let mut g = net.to_flow_network();
+        let want = maxflow::dinic::Dinic.solve(&mut g).unwrap();
+        assert_eq!(report.flow, want.value);
+    }
+
+    #[test]
+    fn cycle_extremes_agree() {
+        let net = demo_net();
+        let mut flows = Vec::new();
+        for cycle in [1, 4, 64, 4096] {
+            let mut exec = NativeGridExecutor::default();
+            let report = HybridGridSolver::with_cycle(cycle)
+                .solve(&net, &mut exec)
+                .unwrap();
+            flows.push(report.flow);
+        }
+        assert!(flows.windows(2).all(|w| w[0] == w[1]), "{flows:?}");
+    }
+
+    #[test]
+    fn no_heuristics_still_correct() {
+        let net = demo_net();
+        let mut exec = NativeGridExecutor::default();
+        let report = HybridGridSolver::no_heuristics(1_000_000)
+            .solve(&net, &mut exec)
+            .unwrap();
+        let mut g = net.to_flow_network();
+        let want = maxflow::dinic::Dinic.solve(&mut g).unwrap();
+        assert_eq!(report.flow, want.value);
+    }
+
+    #[test]
+    fn heuristics_reduce_waves() {
+        let net = demo_net();
+        let mut e1 = NativeGridExecutor::default();
+        let with = HybridGridSolver::with_cycle(64)
+            .solve(&net, &mut e1)
+            .unwrap();
+        let mut e2 = NativeGridExecutor::default();
+        let without = HybridGridSolver::no_heuristics(1_000_000)
+            .solve(&net, &mut e2)
+            .unwrap();
+        assert!(
+            with.waves <= without.waves,
+            "heuristics should not increase waves: {} vs {}",
+            with.waves,
+            without.waves
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! Device-state initialisation from a grid instance (Hong's Init,
+//! Algorithm 4.7): source arcs are pre-saturated into excess, the reverse
+//! arcs `u_f(x, s)` carry the returned-flow capacity.
+
+use crate::graph::GridNetwork;
+use crate::runtime::device::GridWireState;
+
+/// Build the initial wire state and `ExcessTotal` for `net`.
+pub fn init_state(net: &GridNetwork) -> (GridWireState, i64) {
+    let (hh, ww) = (net.height, net.width);
+    let cells = hh * ww;
+    let mut st = GridWireState::zeros(hh, ww);
+    for a in 0..4 * cells {
+        let c = net.cap[a];
+        assert!(c <= i32::MAX as i64, "capacity too large for device i32");
+        st.cap[a] = c as i32;
+    }
+    for c in 0..cells {
+        st.cap_sink[c] = net.cap_sink[c] as i32;
+        // Hong Init lines 9-12: u_f(s,x) = 0, u_f(x,s) = u_sx, e(x) = u_sx.
+        st.cap_src[c] = net.cap_source[c] as i32;
+        st.e[c] = net.cap_source[c] as i32;
+        st.h[c] = 0;
+    }
+    (st, net.excess_total())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::grid::E;
+
+    #[test]
+    fn init_moves_source_caps_to_excess() {
+        let mut net = GridNetwork::zeros(2, 2);
+        net.cap_source[0] = 7;
+        net.cap_sink[3] = 4;
+        net.set_neighbour_cap(0, 0, E, 5);
+        let (st, total) = init_state(&net);
+        assert_eq!(total, 7);
+        assert_eq!(st.e[0], 7);
+        assert_eq!(st.cap_src[0], 7);
+        assert_eq!(st.cap_sink[3], 4);
+        assert_eq!(st.cap[3 * 4], 5); // E plane, cell 0
+        assert_eq!(st.h, vec![0; 4]);
+    }
+}

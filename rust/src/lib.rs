@@ -1,0 +1,33 @@
+//! # flowmatch
+//!
+//! Reproduction of *"Parallel implementation of flow and matching
+//! algorithms"* (Łupińska, 2011) as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): synchronous
+//!   push-relabel waves for grid max-flow and cost-scaling refine waves for
+//!   the assignment problem (AOT-compiled to HLO text).
+//! * **L2** — JAX super-steps (`python/compile/model.py`): dynamic wave
+//!   loops with device-side quiescence detection.
+//! * **L3** — this crate: every runtime component, from the graph
+//!   substrates and sequential baselines through the lock-free atomic
+//!   engines up to the hybrid CPU/device coordinator and the batched
+//!   assignment service.
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod assignment;
+pub mod benchkit;
+pub mod gridflow;
+pub mod maxflow;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod graph;
+pub mod opticalflow;
+pub mod reductions;
+pub mod workloads;
+pub mod prop;
+pub mod runtime;
+pub mod util;

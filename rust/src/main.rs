@@ -1,0 +1,350 @@
+//! `flowmatch` — launcher for the paper's two systems.
+//!
+//! ```text
+//! flowmatch info
+//! flowmatch maxflow   --height 32 --width 32 [--cycle 512] [--seed 1] [--native] [--dimacs f.max]
+//! flowmatch assign    --n 30 [--max-weight 100] [--alpha 10] [--engine csa-seq|csa-lockfree|csa-wave|hungarian|auction|pjrt] [--seed 1]
+//! flowmatch segment   --height 32 --width 32 [--lambda 12] [--seed 1]
+//! flowmatch optflow   --height 32 --width 32 [--features 12] [--dy 2 --dx 1]
+//! flowmatch serve     --requests 50 --n 30 [--fps 20] [--native]
+//! flowmatch artifacts
+//! ```
+
+use anyhow::{bail, Result};
+
+use flowmatch::assignment::{self, AssignmentSolver};
+use flowmatch::cli::Args;
+use flowmatch::config;
+use flowmatch::coordinator::{self, AssignmentService, ServiceConfig};
+use flowmatch::graph::dimacs;
+use flowmatch::runtime::ArtifactRegistry;
+use flowmatch::util::stats::fmt_duration;
+use flowmatch::util::{Rng, Timer};
+use flowmatch::workloads;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("info") => cmd_info(),
+        Some("maxflow") => cmd_maxflow(&args),
+        Some("assign") => cmd_assign(&args),
+        Some("segment") => cmd_segment(&args),
+        Some("optflow") => cmd_optflow(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("artifacts") => cmd_artifacts(),
+        Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "flowmatch <info|maxflow|assign|segment|optflow|serve|artifacts> [options]
+  maxflow   --height H --width W [--cycle N] [--seed S] [--native] [--dimacs FILE]
+  assign    --n N [--max-weight C] [--alpha A] [--engine NAME] [--seed S] [--preset paper|smoke]
+  segment   --height H --width W [--lambda L] [--seed S]
+  optflow   --height H --width W [--features K] [--dy D --dx D]
+  serve     --requests R --n N [--fps F] [--native] [--batch B]";
+
+fn cmd_info() -> Result<()> {
+    println!("flowmatch — parallel flow and matching algorithms (Łupińska 2011 reproduction)");
+    println!("PJRT: {}", flowmatch::runtime::client::platform_info()?);
+    match ArtifactRegistry::discover() {
+        Ok(reg) => {
+            println!("artifacts:");
+            for spec in reg.iter() {
+                println!(
+                    "  {} ({:?} {}x{}, k_inner={})",
+                    spec.name, spec.kind, spec.dim0, spec.dim1, spec.k_inner
+                );
+            }
+        }
+        Err(e) => println!("artifacts: none ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_maxflow(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "height", "width", "cycle", "seed", "native", "dimacs", "max-cap",
+    ])?;
+    if let Some(path) = args.get("dimacs") {
+        // CSR path: solve a DIMACS file with every engine.
+        let text = std::fs::read_to_string(path)?;
+        let parsed = dimacs::MaxFlowFile::parse(&text)?;
+        for engine in flowmatch::maxflow::all_engines() {
+            let mut g = parsed.to_network()?;
+            let t = Timer::start();
+            let stats = engine.solve(&mut g)?;
+            println!(
+                "{:<16} value={} pushes={} relabels={} time={}",
+                engine.name(),
+                stats.value,
+                stats.pushes,
+                stats.relabels,
+                fmt_duration(t.elapsed())
+            );
+        }
+        return Ok(());
+    }
+    let height = args.get_usize("height", 32)?;
+    let width = args.get_usize("width", 32)?;
+    let cycle = args.get_usize("cycle", 512)?;
+    let seed = args.get_u64("seed", 1)?;
+    let max_cap = args.get_i64("max-cap", 32)?;
+    let mut rng = Rng::seeded(seed);
+    let net = workloads::random_grid(&mut rng, height, width, max_cap, 0.25, 0.25);
+
+    let registry = if args.flag("native") {
+        None
+    } else {
+        ArtifactRegistry::discover().ok()
+    };
+    let t = Timer::start();
+    let (report, backend) = coordinator::solve_grid(&net, cycle, registry.as_ref())?;
+    let elapsed = t.elapsed();
+    println!(
+        "grid {}x{} seed={} backend={:?}: maxflow={} (ExcessTotal={})",
+        height, width, seed, backend, report.flow, report.excess_total
+    );
+    println!(
+        "  rounds={} waves={} pushes={} relabels={} gap_cells={} cancelled={}",
+        report.host_rounds,
+        report.waves,
+        report.pushes,
+        report.relabels,
+        report.gap_cells,
+        report.cancelled_arcs
+    );
+    println!(
+        "  time={} (device={} host={})",
+        fmt_duration(elapsed),
+        fmt_duration(report.device_seconds),
+        fmt_duration(report.host_seconds)
+    );
+    Ok(())
+}
+
+fn cmd_assign(args: &Args) -> Result<()> {
+    args.expect_known(&["n", "max-weight", "alpha", "engine", "seed", "preset"])?;
+    let mut cfg = config::preset("paper")?;
+    if let Some(p) = args.get("preset") {
+        cfg = config::preset(p)?;
+    }
+    let n = args.get_usize("n", cfg.get_usize("assign.max_n", 30)?)?;
+    let max_weight = args.get_i64("max-weight", cfg.get_i64("assign.max_weight", 100)?)?;
+    let alpha = args.get_i64("alpha", cfg.get_i64("assign.alpha", 10)?)?;
+    let seed = args.get_u64("seed", 1)?;
+    let engine_name = args.get_str("engine", "csa-lockfree");
+
+    let mut rng = Rng::seeded(seed);
+    let inst = workloads::uniform_costs(&mut rng, n, max_weight);
+
+    let t = Timer::start();
+    let result = match engine_name {
+        "pjrt" => {
+            let reg = ArtifactRegistry::discover()?;
+            let mut driver = coordinator::PjrtAssignmentDriver::for_size(&reg, n)?;
+            driver.alpha = alpha;
+            let (r, tel) = driver.solve(&inst)?;
+            println!(
+                "  device_rounds={} price_updates={} padded_n={} device={} host={}",
+                tel.device_rounds,
+                tel.host_price_updates,
+                tel.padded_n,
+                fmt_duration(tel.device_seconds),
+                fmt_duration(tel.host_seconds)
+            );
+            r
+        }
+        "hungarian" => assignment::hungarian::Hungarian.solve(&inst)?,
+        "auction" => assignment::auction::Auction::default().solve(&inst)?,
+        "csa-seq" => assignment::csa::SequentialCsa::with_alpha(alpha).solve(&inst)?,
+        "csa-wave" => assignment::wave::WaveCsa { alpha: Some(alpha) }.solve(&inst)?,
+        "csa-lockfree" => assignment::csa_lockfree::LockFreeCsa {
+            alpha,
+            threads: 2,
+        }
+        .solve(&inst)?,
+        other => bail!("unknown engine {other:?}"),
+    };
+    let elapsed = t.elapsed();
+
+    // Always cross-check against the exact baseline.
+    let want = assignment::hungarian::Hungarian.solve(&inst)?;
+    anyhow::ensure!(
+        result.weight == want.weight,
+        "engine {engine_name} returned weight {} but optimum is {}",
+        result.weight,
+        want.weight
+    );
+    println!(
+        "assign n={n} C={max_weight} alpha={alpha} engine={engine_name}: weight={} (optimal) time={}",
+        result.weight,
+        fmt_duration(elapsed)
+    );
+    println!(
+        "  pushes={} relabels={} refines={} price_updates={} waves={}",
+        result.stats.pushes,
+        result.stats.relabels,
+        result.stats.refines,
+        result.stats.price_updates,
+        result.stats.waves
+    );
+    Ok(())
+}
+
+fn cmd_segment(args: &Args) -> Result<()> {
+    args.expect_known(&["height", "width", "lambda", "seed"])?;
+    let height = args.get_usize("height", 32)?;
+    let width = args.get_usize("width", 32)?;
+    let lambda = args.get_i64("lambda", 12)?;
+    let seed = args.get_u64("seed", 1)?;
+    let mut rng = Rng::seeded(seed);
+    let img = workloads::grid_gen::synthetic_image(&mut rng, height, width);
+    let mut exec = flowmatch::gridflow::NativeGridExecutor::default();
+    let t = Timer::start();
+    let seg = flowmatch::energy::segment_image(&img, height, width, lambda, &mut exec)?;
+    println!(
+        "segment {}x{} lambda={}: energy={} flow={} foreground={} time={}",
+        height,
+        width,
+        lambda,
+        seg.energy,
+        seg.flow,
+        seg.foreground,
+        fmt_duration(t.elapsed())
+    );
+    print!(
+        "{}",
+        flowmatch::energy::segmentation::ascii_render(&seg.labels, height, width)
+    );
+    Ok(())
+}
+
+fn cmd_optflow(args: &Args) -> Result<()> {
+    args.expect_known(&["height", "width", "features", "dy", "dx", "seed"])?;
+    let height = args.get_usize("height", 32)?;
+    let width = args.get_usize("width", 32)?;
+    let features = args.get_usize("features", 12)?;
+    let dy = args.get_i64("dy", 2)?;
+    let dx = args.get_i64("dx", 1)?;
+    let seed = args.get_u64("seed", 1)?;
+    let mut rng = Rng::seeded(seed);
+    let frame_a = workloads::grid_gen::synthetic_image(&mut rng, height, width);
+    let frame_b = flowmatch::opticalflow::flow::translate_image(&frame_a, height, width, dy, dx);
+    let solver = assignment::csa::SequentialCsa::default();
+    let t = Timer::start();
+    let field =
+        flowmatch::opticalflow::compute_flow(&frame_a, &frame_b, height, width, features, &solver)?;
+    println!(
+        "optflow {}x{} features={}: matches={} weight={} epe={:.3} time={}",
+        height,
+        width,
+        features,
+        field.vectors.len(),
+        field.matching_weight,
+        field.mean_endpoint_error(dy as f64, dx as f64),
+        fmt_duration(t.elapsed())
+    );
+    for v in field.vectors.iter().take(8) {
+        println!(
+            "  ({:>2},{:>2}) -> ({:>2},{:>2})",
+            v.from.0, v.from.1, v.to.0, v.to.1
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_known(&["requests", "n", "fps", "native", "batch", "seed"])?;
+    let requests = args.get_usize("requests", 50)?;
+    let n = args.get_usize("n", 30)?;
+    let fps = args.get_f64("fps", 20.0)?;
+    let seed = args.get_u64("seed", 1)?;
+    let batch = args.get_usize("batch", 8)?;
+
+    let cfg = workloads::TraceConfig {
+        requests,
+        n,
+        arrival_gap: if fps > 0.0 { 1.0 / fps } else { 0.0 },
+        ..Default::default()
+    };
+    let mut rng = Rng::seeded(seed);
+    let trace = workloads::RequestTrace::generate(&mut rng, &cfg);
+
+    let service = AssignmentService::start(ServiceConfig {
+        max_batch: batch,
+        use_pjrt: !args.flag("native"),
+        max_n: n.max(30),
+    });
+    let start = Timer::start();
+    let mut receivers = Vec::new();
+    for req in &trace.requests {
+        // Open-loop arrivals at the trace's frame rate.
+        let target = req.arrival;
+        let now = start.elapsed();
+        if target > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(target - now));
+        }
+        receivers.push(service.submit(req.instance.clone()));
+    }
+    let mut ok = 0usize;
+    for rx in receivers {
+        let reply = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("service dropped reply"))?
+            .map_err(|e| anyhow::anyhow!(e))?;
+        ok += 1;
+        let _ = reply;
+    }
+    let report = service.shutdown()?;
+    println!(
+        "serve: {} requests, backend={}, p50={} p99={} mean={} throughput={:.1} req/s",
+        ok,
+        report.backend,
+        fmt_duration(report.p50_latency),
+        fmt_duration(report.p99_latency),
+        fmt_duration(report.mean_latency),
+        report.throughput_rps
+    );
+    println!(
+        "  paper §6 bar: 1/20 s per solve -> p50 {} that bar",
+        if report.p50_latency <= 0.05 {
+            "MEETS"
+        } else {
+            "misses"
+        }
+    );
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let reg = ArtifactRegistry::discover()?;
+    for spec in reg.iter() {
+        println!(
+            "{} kind={:?} dims={}x{} k_inner={} path={}",
+            spec.name,
+            spec.kind,
+            spec.dim0,
+            spec.dim1,
+            spec.k_inner,
+            spec.path.display()
+        );
+    }
+    Ok(())
+}

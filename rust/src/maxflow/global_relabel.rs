@@ -1,0 +1,170 @@
+//! Global + gap relabeling heuristics (§4.2) shared by the push-relabel
+//! engines: a backwards BFS from the sink assigns exact residual
+//! distances; unreached nodes are lifted to `n` (gap relabeling), removing
+//! them from useful work until their excess drains back to the source.
+
+use std::collections::VecDeque;
+
+use crate::graph::csr::FlowNetwork;
+
+/// Result of a global relabel pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GlobalRelabelOutcome {
+    /// Nodes assigned a finite BFS distance.
+    pub reached: usize,
+    /// Nodes lifted to `n` by the gap step.
+    pub gap_lifted: usize,
+}
+
+/// Recompute `h` as exact distances-to-sink in the residual graph
+/// (heights of unreachable nodes jump to `n`, the paper's gap step).
+/// The source keeps height `n` (its distance class by definition).
+pub fn global_relabel(g: &FlowNetwork, h: &mut [i64]) -> GlobalRelabelOutcome {
+    let n = g.node_count();
+    debug_assert_eq!(h.len(), n);
+    let (s, t) = (g.source(), g.sink());
+
+    let mut dist = vec![-1i64; n];
+    dist[t] = 0;
+    let mut q = VecDeque::new();
+    q.push_back(t);
+    let mut reached = 1;
+    while let Some(u) = q.pop_front() {
+        for &e in g.out_edges(u) {
+            // BFS follows *reverse* residual arcs: we can relabel v from u
+            // when the arc v->u has residual capacity, i.e. the mate of
+            // (u->v) entry has residual > 0.
+            let v = g.edge_head(e);
+            if dist[v] < 0 && g.residual(e ^ 1) > 0 {
+                dist[v] = dist[u] + 1;
+                reached += 1;
+                if v != s {
+                    q.push_back(v);
+                }
+            }
+        }
+    }
+
+    // Second phase (Cherkassky-Goldberg): nodes that cannot reach the
+    // sink get `n + distance-to-source` so their excess drains back to s
+    // directly (parking everything at exactly n livelocks CYCLE-bounded
+    // engines: each host round would erase the climb above n).
+    let mut dist_s = vec![-1i64; n];
+    dist_s[s] = 0;
+    let mut qs = VecDeque::new();
+    qs.push_back(s);
+    while let Some(u) = qs.pop_front() {
+        for &e in g.out_edges(u) {
+            let v = g.edge_head(e);
+            if dist[v] < 0 && dist_s[v] < 0 && g.residual(e ^ 1) > 0 {
+                dist_s[v] = dist_s[u] + 1;
+                qs.push_back(v);
+            }
+        }
+    }
+
+    let mut gap_lifted = 0;
+    for v in 0..n {
+        if v == s {
+            h[v] = n as i64;
+        } else if dist[v] >= 0 {
+            h[v] = dist[v];
+        } else {
+            if h[v] < n as i64 {
+                gap_lifted += 1;
+            }
+            h[v] = if dist_s[v] >= 0 {
+                n as i64 + dist_s[v]
+            } else {
+                2 * n as i64 // unreachable from both terminals: inert
+            };
+        }
+    }
+    GlobalRelabelOutcome {
+        reached,
+        gap_lifted,
+    }
+}
+
+/// Cancel height-violating residual arcs (`h(u) > h(v) + 1`) by pushing
+/// the full residual through them — Algorithm 4.8 lines 1-6.  Needed when
+/// a CYCLE-bounded engine stops mid-stream before recomputing heights.
+/// Returns the number of cancelled arcs.
+pub fn cancel_violations(g: &mut FlowNetwork, h: &[i64], e: &mut [i64]) -> usize {
+    let mut cancelled = 0;
+    for u in 0..g.node_count() {
+        for idx in 0..g.out_edges(u).len() {
+            let eid = g.out_edges(u)[idx];
+            let v = g.edge_head(eid);
+            let r = g.residual(eid);
+            if r > 0 && h[u] > h[v] + 1 {
+                g.push(eid, r);
+                e[u] -= r;
+                e[v] += r;
+                cancelled += 1;
+            }
+        }
+    }
+    cancelled
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::NetworkBuilder;
+
+    #[test]
+    fn distances_on_fresh_chain() {
+        // s -> a -> b -> t, all residual: dist(t)=0, b=1, a=2, s stays n.
+        let mut b = NetworkBuilder::new(4, 0, 3);
+        b.add_edge(0, 1, 5, 0);
+        b.add_edge(1, 2, 5, 0);
+        b.add_edge(2, 3, 5, 0);
+        let g = b.build().unwrap();
+        let mut h = vec![0i64; 4];
+        let out = global_relabel(&g, &mut h);
+        assert_eq!(h, vec![4, 2, 1, 0]);
+        assert_eq!(out.reached, 4);
+        assert_eq!(out.gap_lifted, 0);
+    }
+
+    #[test]
+    fn saturated_arc_breaks_reachability() {
+        let mut b = NetworkBuilder::new(4, 0, 3);
+        let e01 = b.add_edge(0, 1, 5, 0);
+        let e13 = b.add_edge(1, 3, 5, 0);
+        b.add_edge(0, 2, 5, 0); // 2 has no arc to t
+        let mut g = b.build().unwrap();
+        g.push(e01, 5);
+        g.push(e13, 5); // arc 1->3 saturated: 1 now reachable only via 3->1 mate
+        let mut h = vec![0i64; 4];
+        let out = global_relabel(&g, &mut h);
+        // Arc 1->3 is saturated so neither 1 nor 2 reaches t; both reach
+        // the source through residual reverse arcs and get n + dist_s.
+        assert_eq!(h[3], 0);
+        assert_eq!(h[1], 5); // n + 1 (residual arc 1->0 via the mate)
+        assert_eq!(h[2], 8); // 2n: no flow ever reached 2, inert
+        assert_eq!(out.gap_lifted, 2);
+    }
+
+    #[test]
+    fn cancel_violations_pushes_back() {
+        let mut b = NetworkBuilder::new(3, 0, 2);
+        let e = b.add_edge(0, 1, 5, 0);
+        b.add_edge(1, 2, 1, 0);
+        let mut g = b.build().unwrap();
+        g.push(e, 5);
+        // Pretend node 1 was relabelled sky-high with excess.
+        let h = vec![3, 9, 0];
+        let mut ex = vec![0i64, 5, 0];
+        // Both residual arcs out of node 1 violate: the mate 1->0
+        // (h(1)=9 > h(0)+1=4) and 1->2 (h(1)=9 > h(2)+1=1); Algorithm 4.8
+        // cancels them all, leaving node 1 with a transient deficit.
+        let cancelled = cancel_violations(&mut g, &h, &mut ex);
+        assert_eq!(cancelled, 2);
+        assert_eq!(ex[1], -1);
+        assert_eq!(ex[0], 5);
+        assert_eq!(ex[2], 1);
+        assert_eq!(g.residual(e), 5); // flow undone
+    }
+}

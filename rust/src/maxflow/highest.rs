@@ -1,0 +1,249 @@
+//! Highest-label push-relabel with bucketed active sets and *exact* gap
+//! relabeling via label counts — the strongest sequential push-relabel
+//! variant in the comparison ([Cherkassky & Goldberg 1995], the paper's
+//! reference [3]).
+
+use anyhow::Result;
+
+use crate::graph::csr::FlowNetwork;
+
+use super::global_relabel::global_relabel;
+use super::{FlowStats, MaxFlowSolver};
+
+/// Highest-label engine with gap relabeling; global relabel every
+/// `global_freq * n` relabels (None disables, for the E3 ablation).
+#[derive(Debug, Clone)]
+pub struct HighestLabel {
+    pub global_relabel_freq: Option<f64>,
+    /// Enable the label-count gap heuristic.
+    pub gap: bool,
+}
+
+impl Default for HighestLabel {
+    fn default() -> Self {
+        Self {
+            global_relabel_freq: Some(1.0),
+            gap: true,
+        }
+    }
+}
+
+impl HighestLabel {
+    pub fn no_gap() -> Self {
+        Self {
+            global_relabel_freq: Some(1.0),
+            gap: false,
+        }
+    }
+}
+
+struct Buckets {
+    /// active[h] = stack of active nodes at height h.
+    active: Vec<Vec<u32>>,
+    highest: usize,
+}
+
+impl Buckets {
+    fn new(levels: usize) -> Self {
+        Self {
+            active: vec![Vec::new(); levels],
+            highest: 0,
+        }
+    }
+
+    fn push(&mut self, v: u32, h: usize) {
+        self.active[h].push(v);
+        self.highest = self.highest.max(h);
+    }
+
+    fn pop_highest(&mut self) -> Option<(u32, usize)> {
+        loop {
+            if let Some(v) = self.active[self.highest].pop() {
+                return Some((v, self.highest));
+            }
+            if self.highest == 0 {
+                return None;
+            }
+            self.highest -= 1;
+        }
+    }
+
+    fn clear(&mut self) {
+        for b in &mut self.active {
+            b.clear();
+        }
+        self.highest = 0;
+    }
+}
+
+impl MaxFlowSolver for HighestLabel {
+    fn name(&self) -> &'static str {
+        if self.gap {
+            "highest+gap"
+        } else {
+            "highest-nogap"
+        }
+    }
+
+    fn solve(&self, g: &mut FlowNetwork) -> Result<FlowStats> {
+        let mut stats = FlowStats::default();
+        let n = g.node_count();
+        let (s, t) = (g.source(), g.sink());
+        let levels = 2 * n + 1;
+
+        let mut h = vec![0i64; n];
+        let mut excess = vec![0i64; n];
+        let mut cur = vec![0usize; n];
+        // label_count[d] = number of nodes at height d (for gap detection).
+        let mut label_count = vec![0usize; levels];
+
+        h[s] = n as i64;
+        for idx in 0..g.out_edges(s).len() {
+            let e = g.out_edges(s)[idx];
+            let c = g.residual(e);
+            if c > 0 {
+                let v = g.edge_head(e);
+                g.push(e, c);
+                excess[v] += c;
+                excess[s] -= c;
+                stats.pushes += 1;
+            }
+        }
+        if self.global_relabel_freq.is_some() {
+            let out = global_relabel(g, &mut h);
+            stats.global_relabels += 1;
+            stats.gap_nodes += out.gap_lifted as u64;
+        }
+
+        let mut buckets = Buckets::new(levels);
+        let rebuild =
+            |buckets: &mut Buckets, label_count: &mut Vec<usize>, h: &[i64], excess: &[i64]| {
+                buckets.clear();
+                label_count.iter_mut().for_each(|c| *c = 0);
+                for v in 0..n {
+                    let hv = (h[v] as usize).min(levels - 1);
+                    label_count[hv] += 1;
+                    if v != s && v != t && excess[v] > 0 && hv < levels {
+                        buckets.push(v as u32, hv);
+                    }
+                }
+            };
+        rebuild(&mut buckets, &mut label_count, &h, &excess);
+
+        let mut relabels_since_global = 0u64;
+        let budget = self
+            .global_relabel_freq
+            .map(|f| (f * n as f64).max(1.0) as u64);
+
+        while let Some((u32v, hv)) = buckets.pop_highest() {
+            let u = u32v as usize;
+            if excess[u] <= 0 || h[u] as usize != hv {
+                continue; // stale entry
+            }
+            // Discharge u.
+            while excess[u] > 0 {
+                let out_len = g.out_edges(u).len();
+                if cur[u] == out_len {
+                    // Relabel.
+                    let old_h = h[u] as usize;
+                    let mut min_h = i64::MAX;
+                    for &e in g.out_edges(u) {
+                        if g.residual(e) > 0 {
+                            min_h = min_h.min(h[g.edge_head(e)]);
+                        }
+                    }
+                    if min_h == i64::MAX {
+                        break;
+                    }
+                    let new_h = (min_h + 1).min((levels - 1) as i64);
+                    stats.relabels += 1;
+                    relabels_since_global += 1;
+                    label_count[old_h] -= 1;
+                    h[u] = new_h;
+                    label_count[new_h as usize] += 1;
+                    cur[u] = 0;
+
+                    // Gap heuristic: if old level emptied below n, every node
+                    // above it (and below n) can never reach t again.
+                    if self.gap && label_count[old_h] == 0 && old_h < n {
+                        for v in 0..n {
+                            let hv = h[v] as usize;
+                            if v != s && hv > old_h && hv < n {
+                                label_count[hv] -= 1;
+                                h[v] = (n + 1) as i64;
+                                label_count[n + 1] += 1;
+                                stats.gap_nodes += 1;
+                            }
+                        }
+                    }
+                    if let Some(b) = budget {
+                        if relabels_since_global >= b {
+                            let out = global_relabel(g, &mut h);
+                            stats.global_relabels += 1;
+                            stats.gap_nodes += out.gap_lifted as u64;
+                            relabels_since_global = 0;
+                            rebuild(&mut buckets, &mut label_count, &h, &excess);
+                        }
+                    }
+                    if h[u] as usize >= levels - 1 {
+                        break;
+                    }
+                    continue;
+                }
+                let e = g.out_edges(u)[cur[u]];
+                let v = g.edge_head(e);
+                if g.residual(e) > 0 && h[u] == h[v] + 1 {
+                    let delta = excess[u].min(g.residual(e));
+                    let was_inactive = excess[v] == 0;
+                    g.push(e, delta);
+                    excess[u] -= delta;
+                    excess[v] += delta;
+                    stats.pushes += 1;
+                    if v != s && v != t && was_inactive {
+                        buckets.push(v as u32, h[v] as usize);
+                    }
+                } else {
+                    cur[u] += 1;
+                }
+            }
+            if excess[u] > 0 && (h[u] as usize) < levels - 1 {
+                buckets.push(u as u32, h[u] as usize);
+            }
+        }
+
+        stats.value = excess[t];
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::assert_max_flow;
+
+    #[test]
+    fn solves_clrs_variants() {
+        for engine in [HighestLabel::default(), HighestLabel::no_gap()] {
+            let mut g = crate::maxflow::tests::clrs();
+            let stats = engine.solve(&mut g).unwrap();
+            assert_eq!(stats.value, 23, "{}", engine.name());
+            assert_max_flow(&g, 23).unwrap();
+        }
+    }
+
+    #[test]
+    fn gap_heuristic_fires_on_trap() {
+        // Network with a large trap region that becomes disconnected from t.
+        let mut b = crate::graph::csr::NetworkBuilder::new(12, 0, 11);
+        b.add_edge(0, 1, 10, 0);
+        b.add_edge(1, 11, 2, 0);
+        // Trap: chain 1 -> 2 -> ... -> 10 with no exit to t.
+        for i in 1..10 {
+            b.add_edge(i, i + 1, 8, 0);
+        }
+        let mut g = b.build().unwrap();
+        let stats = HighestLabel::default().solve(&mut g).unwrap();
+        assert_eq!(stats.value, 2);
+        assert_max_flow(&g, 2).unwrap();
+    }
+}

@@ -1,0 +1,358 @@
+//! Hong's lock-free multi-threaded push-relabel (Algorithm 4.5), as
+//! faithfully as the host allows: real OS threads, shared excess/capacity
+//! arrays of `AtomicI64`, no locks, no barriers.
+//!
+//! Key properties the paper relies on (and that we preserve):
+//!
+//! * `e(x)` is only ever *decreased* by the thread owning `x` and only
+//!   ever *increased* by neighbours, so `delta = min(e', c_f(x, y))` read
+//!   from a stale `e'` never overshoots;
+//! * `c_f(x, y)` is only decreased by `x`'s owner (pushes out of `x`), so
+//!   the residual check cannot be invalidated concurrently;
+//! * `h(x)` is written only by `x`'s owner (the relabel needs no RMW);
+//! * every push/relabel is equivalent to some sequential trace
+//!   (Hong 2008, mirrored by the paper's Lemma 5.3 for prices).
+//!
+//! Termination detection is the hybrid scheme's rule (Algorithm 4.6):
+//! `e(s) + e(t) == ExcessTotal`, with `e(s)` counting flow returned to the
+//! source.
+
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+
+use anyhow::Result;
+
+use crate::graph::csr::FlowNetwork;
+
+use super::{FlowStats, MaxFlowSolver};
+
+/// Lock-free engine; `threads = 0` means one worker per available core.
+#[derive(Debug, Clone)]
+pub struct LockFree {
+    pub threads: usize,
+    /// Run the Asynchronous Global Relabeling heuristic (§4.5, Hong & He
+    /// 2011): a distinguished thread periodically recomputes BFS heights
+    /// *concurrently* with the push/relabel workers.  Heights are only
+    /// ever raised (monotone guard), which keeps Hong's invariants.  The
+    /// paper tried ARG and found it slower than the host-round scheme on
+    /// CUDA because of the global-memory queue; here it is an ablation
+    /// option (off by default, like the paper's final implementation).
+    pub arg: bool,
+}
+
+impl Default for LockFree {
+    fn default() -> Self {
+        Self {
+            threads: 2,
+            arg: false,
+        }
+    }
+}
+
+impl LockFree {
+    pub fn with_threads(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+            arg: false,
+        }
+    }
+
+    pub fn with_arg(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+            arg: true,
+        }
+    }
+}
+
+struct Shared<'a> {
+    g: &'a FlowNetwork,
+    cap: Vec<AtomicI64>,
+    excess: Vec<AtomicI64>,
+    height: Vec<AtomicI64>,
+    done: AtomicBool,
+    pushes: AtomicI64,
+    relabels: AtomicI64,
+    excess_total: i64,
+}
+
+impl<'a> Shared<'a> {
+    /// One Hong step for node `x`: find the lowest residual neighbour,
+    /// push if strictly lower, otherwise relabel.  Returns true if an
+    /// operation was applied.
+    fn step(&self, x: usize, n: usize) -> bool {
+        let e_x = self.excess[x].load(Ordering::SeqCst);
+        if e_x <= 0 {
+            return false;
+        }
+        // Lines 4-9: lowest residual neighbour.
+        let mut best_h = i64::MAX;
+        let mut best_e = None;
+        for &eid in self.g.out_edges(x) {
+            if self.cap[eid as usize].load(Ordering::SeqCst) > 0 {
+                let hy = self.height[self.g.edge_head(eid)].load(Ordering::SeqCst);
+                if hy < best_h {
+                    best_h = hy;
+                    best_e = Some(eid);
+                }
+            }
+        }
+        let Some(eid) = best_e else {
+            return false; // no residual arc (cannot happen for active nodes)
+        };
+        let h_x = self.height[x].load(Ordering::SeqCst);
+        if h_x > best_h {
+            // PUSH (lines 11-15).  cap[eid] is only decreased by this
+            // thread, so the min is safe even under concurrency.
+            let c = self.cap[eid as usize].load(Ordering::SeqCst);
+            let delta = e_x.min(c);
+            if delta <= 0 {
+                return false;
+            }
+            let y = self.g.edge_head(eid);
+            self.cap[eid as usize].fetch_sub(delta, Ordering::SeqCst);
+            self.cap[(eid ^ 1) as usize].fetch_add(delta, Ordering::SeqCst);
+            self.excess[x].fetch_sub(delta, Ordering::SeqCst);
+            self.excess[y].fetch_add(delta, Ordering::SeqCst);
+            self.pushes.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            // RELABEL (line 17): only this thread writes h(x).  Heights
+            // stay < 2n in any sequential trace; the 4n guard is a pure
+            // safety net against pathological interleavings.
+            if best_h >= 4 * n as i64 {
+                return false;
+            }
+            self.height[x].store(best_h + 1, Ordering::SeqCst);
+            self.relabels.fetch_add(1, Ordering::Relaxed);
+            true
+        }
+    }
+
+    fn terminated(&self) -> bool {
+        let (s, t) = (self.g.source(), self.g.sink());
+        self.excess[s].load(Ordering::SeqCst) + self.excess[t].load(Ordering::SeqCst)
+            >= self.excess_total
+    }
+
+    /// One ARG pass (§4.5): BFS over a *snapshot* of the residual
+    /// capacities, then raise (never lower) heights to the exact
+    /// distances.  Raising-only keeps every worker-side invariant: a
+    /// stale-low height only costs extra work, a lowered height could
+    /// break termination.
+    fn arg_pass(&self, n: usize) {
+        use std::collections::VecDeque;
+        let (s, t) = (self.g.source(), self.g.sink());
+        let snap: Vec<i64> = self.cap.iter().map(|c| c.load(Ordering::SeqCst)).collect();
+        let mut dist = vec![-1i64; n];
+        dist[t] = 0;
+        let mut q = VecDeque::new();
+        q.push_back(t);
+        while let Some(u) = q.pop_front() {
+            for &e in self.g.out_edges(u) {
+                let v = self.g.edge_head(e);
+                if dist[v] < 0 && snap[(e ^ 1) as usize] > 0 && v != s {
+                    dist[v] = dist[u] + 1;
+                    q.push_back(v);
+                }
+            }
+        }
+        for v in 0..n {
+            if v == s || v == t {
+                continue;
+            }
+            let target = if dist[v] >= 0 { dist[v] } else { n as i64 };
+            // Monotone raise via CAS loop.
+            loop {
+                let cur = self.height[v].load(Ordering::SeqCst);
+                if cur >= target {
+                    break;
+                }
+                if self
+                    .height[v]
+                    .compare_exchange(cur, target, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+                {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+impl MaxFlowSolver for LockFree {
+    fn name(&self) -> &'static str {
+        "lockfree-hong"
+    }
+
+    fn solve(&self, g: &mut FlowNetwork) -> Result<FlowStats> {
+        let n = g.node_count();
+        let (s, t) = (g.source(), g.sink());
+
+        // Init (Algorithm 4.5 Init): saturate source arcs; e(s) counts
+        // *returned* flow so it starts at 0.
+        let mut cap0: Vec<i64> = g.capacities().to_vec();
+        let mut excess0 = vec![0i64; n];
+        let mut excess_total = 0i64;
+        for &eid in g.out_edges(s) {
+            let c = cap0[eid as usize];
+            if c > 0 {
+                cap0[eid as usize] = 0;
+                cap0[(eid ^ 1) as usize] += c;
+                excess0[g.edge_head(eid)] += c;
+                excess_total += c;
+            }
+        }
+        let mut height0 = vec![0i64; n];
+        height0[s] = n as i64;
+
+        let shared = Shared {
+            g,
+            cap: cap0.into_iter().map(AtomicI64::new).collect(),
+            excess: excess0.into_iter().map(AtomicI64::new).collect(),
+            height: height0.into_iter().map(AtomicI64::new).collect(),
+            done: AtomicBool::new(false),
+            pushes: AtomicI64::new(0),
+            relabels: AtomicI64::new(0),
+            excess_total,
+        };
+
+        let workers = self.threads.max(1);
+        std::thread::scope(|scope| {
+            if self.arg {
+                // The distinguished ARG thread (§4.5) runs BFS passes
+                // concurrently until the workers finish.
+                let shared = &shared;
+                scope.spawn(move || {
+                    while !shared.done.load(Ordering::SeqCst) {
+                        shared.arg_pass(n);
+                        std::thread::yield_now();
+                    }
+                });
+            }
+            for w in 0..workers {
+                let shared = &shared;
+                scope.spawn(move || {
+                    // Round-robin over this worker's node stripe.
+                    let mine: Vec<usize> = (0..n)
+                        .filter(|&v| v != s && v != t && v % workers == w)
+                        .collect();
+                    let mut idle_sweeps = 0u32;
+                    loop {
+                        if shared.done.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let mut did_work = false;
+                        for &v in &mine {
+                            // Drain v greedily (the paper's while e(x) > 0),
+                            // but bound the burst so termination checks run.
+                            let mut burst = 0;
+                            while shared.step(v, n) {
+                                did_work = true;
+                                burst += 1;
+                                if burst >= 64 {
+                                    break;
+                                }
+                            }
+                        }
+                        if shared.terminated() {
+                            shared.done.store(true, Ordering::SeqCst);
+                            break;
+                        }
+                        if did_work {
+                            idle_sweeps = 0;
+                        } else {
+                            idle_sweeps += 1;
+                            if idle_sweeps > 2 {
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                });
+            }
+        });
+
+        // Write the relaxed state back into the network.
+        let cap: Vec<i64> = shared
+            .cap
+            .iter()
+            .map(|c| c.load(Ordering::SeqCst))
+            .collect();
+        let value = shared.excess[t].load(Ordering::SeqCst);
+        let stats = FlowStats {
+            value,
+            pushes: shared.pushes.load(Ordering::Relaxed) as u64,
+            relabels: shared.relabels.load(Ordering::Relaxed) as u64,
+            global_relabels: 0,
+            gap_nodes: 0,
+            rounds: 0,
+        };
+        g.set_capacities(cap);
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::assert_max_flow;
+
+    #[test]
+    fn single_thread_matches_reference() {
+        let mut g = crate::maxflow::tests::clrs();
+        let stats = LockFree::with_threads(1).solve(&mut g).unwrap();
+        assert_eq!(stats.value, 23);
+        assert_max_flow(&g, 23).unwrap();
+    }
+
+    #[test]
+    fn multi_thread_matches_reference() {
+        for threads in [2, 4] {
+            let mut g = crate::maxflow::tests::clrs();
+            let stats = LockFree::with_threads(threads).solve(&mut g).unwrap();
+            assert_eq!(stats.value, 23, "threads={threads}");
+            assert_max_flow(&g, 23).unwrap();
+        }
+    }
+
+    #[test]
+    fn arg_variant_matches_reference() {
+        for threads in [1, 2, 4] {
+            let mut g = crate::maxflow::tests::clrs();
+            let stats = LockFree::with_arg(threads).solve(&mut g).unwrap();
+            assert_eq!(stats.value, 23, "arg threads={threads}");
+            assert_max_flow(&g, 23).unwrap();
+        }
+    }
+
+    #[test]
+    fn arg_on_random_networks() {
+        use crate::graph::csr::NetworkBuilder;
+        let mut rng = crate::util::Rng::seeded(101);
+        for case in 0..8 {
+            let nn = 5 + rng.index(10);
+            let mut b = NetworkBuilder::new(nn, 0, nn - 1);
+            for _ in 0..3 * nn {
+                let u = rng.index(nn);
+                let v = (u + 1 + rng.index(nn - 1)) % nn;
+                b.add_edge(u, v, rng.range_i64(0, 15), 0);
+            }
+            let base = b.build().unwrap();
+            let mut g0 = base.clone();
+            let want = crate::maxflow::dinic::Dinic.solve(&mut g0).unwrap().value;
+            let mut g = base.clone();
+            let stats = LockFree::with_arg(2).solve(&mut g).unwrap();
+            assert_eq!(stats.value, want, "case={case}");
+            assert_max_flow(&g, stats.value).unwrap();
+        }
+    }
+
+    #[test]
+    fn op_count_within_theoretical_bound() {
+        let mut g = crate::maxflow::tests::clrs();
+        let stats = LockFree::with_threads(2).solve(&mut g).unwrap();
+        let n = 6u64;
+        let m = 9u64 * 2;
+        // O(V^2 E) bound with a generous constant.
+        assert!(stats.work() <= 16 * n * n * m);
+    }
+}

@@ -1,0 +1,122 @@
+//! Max-flow engines (§4 of the paper).
+//!
+//! Sequential baselines (Edmonds–Karp, Dinic, FIFO and highest-label
+//! push-relabel with the global/gap heuristics), Hong's lock-free
+//! multi-threaded algorithm on atomics (Algorithm 4.5), and the hybrid
+//! CYCLE-bounded scheme of Algorithm 4.6–4.8.  Every engine implements
+//! [`MaxFlowSolver`] over the shared CSR [`FlowNetwork`] and reports the
+//! operation counters the paper's complexity claims are stated in.
+
+pub mod edmonds_karp;
+pub mod dinic;
+pub mod fifo;
+pub mod global_relabel;
+pub mod highest;
+pub mod hybrid;
+pub mod lockfree;
+
+use anyhow::Result;
+
+use crate::graph::FlowNetwork;
+
+/// Operation counters: the paper analyses parallel complexity "in the
+/// number of operations, not in the execution time" (§4.4), so every
+/// engine reports them.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FlowStats {
+    /// Max-flow value.
+    pub value: i64,
+    /// Push operations (saturating + non-saturating).
+    pub pushes: u64,
+    /// Relabel operations.
+    pub relabels: u64,
+    /// Global-relabel heuristic runs.
+    pub global_relabels: u64,
+    /// Nodes lifted by gap relabeling.
+    pub gap_nodes: u64,
+    /// Host rounds (hybrid engines) or BFS phases (augmenting engines).
+    pub rounds: u64,
+}
+
+impl FlowStats {
+    pub fn work(&self) -> u64 {
+        self.pushes + self.relabels
+    }
+}
+
+/// A max-flow engine: mutates `g`'s residual capacities into a maximum
+/// flow and returns the counters.  `g.reset()` restores the instance.
+pub trait MaxFlowSolver {
+    fn name(&self) -> &'static str;
+    fn solve(&self, g: &mut FlowNetwork) -> Result<FlowStats>;
+}
+
+/// All registered engines (for benches and parity tests).
+pub fn all_engines() -> Vec<Box<dyn MaxFlowSolver>> {
+    vec![
+        Box::new(edmonds_karp::EdmondsKarp),
+        Box::new(dinic::Dinic),
+        Box::new(fifo::FifoPushRelabel::default()),
+        Box::new(highest::HighestLabel::default()),
+        Box::new(lockfree::LockFree::default()),
+        Box::new(hybrid::Hybrid::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::NetworkBuilder;
+
+    /// CLRS figure instance; max flow 23.
+    pub(crate) fn clrs() -> FlowNetwork {
+        let mut b = NetworkBuilder::new(6, 0, 5);
+        b.add_edge(0, 1, 16, 0);
+        b.add_edge(0, 2, 13, 0);
+        b.add_edge(1, 2, 10, 4);
+        b.add_edge(1, 3, 12, 0);
+        b.add_edge(2, 3, 0, 9);
+        b.add_edge(2, 4, 14, 0);
+        b.add_edge(3, 5, 20, 0);
+        b.add_edge(4, 3, 7, 0);
+        b.add_edge(4, 5, 4, 0);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn every_engine_solves_clrs() {
+        for engine in all_engines() {
+            let mut g = clrs();
+            let stats = engine.solve(&mut g).unwrap();
+            assert_eq!(stats.value, 23, "{} value", engine.name());
+            crate::graph::validate::assert_max_flow(&g, 23)
+                .unwrap_or_else(|e| panic!("{}: {e}", engine.name()));
+        }
+    }
+
+    #[test]
+    fn disconnected_sink_gives_zero() {
+        for engine in all_engines() {
+            let mut b = NetworkBuilder::new(4, 0, 3);
+            b.add_edge(0, 1, 5, 0);
+            b.add_edge(1, 2, 5, 0); // no arc to 3
+            let mut g = b.build().unwrap();
+            let stats = engine.solve(&mut g).unwrap();
+            assert_eq!(stats.value, 0, "{}", engine.name());
+        }
+    }
+
+    #[test]
+    fn parallel_paths_sum() {
+        for engine in all_engines() {
+            let mut b = NetworkBuilder::new(5, 0, 4);
+            for mid in 1..4 {
+                b.add_edge(0, mid, mid as i64, 0);
+                b.add_edge(mid, 4, mid as i64, 0);
+            }
+            let mut g = b.build().unwrap();
+            let stats = engine.solve(&mut g).unwrap();
+            assert_eq!(stats.value, 6, "{}", engine.name());
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Feature extraction on intensity images: gradient-energy corner scores
+//! (a poor man's Harris detector) + raw 5x5 patch descriptors.  Enough
+//! structure to make descriptor matching meaningful without any imaging
+//! dependency.
+
+/// One detected feature.
+#[derive(Debug, Clone)]
+pub struct Feature {
+    pub i: usize,
+    pub j: usize,
+    pub score: i64,
+    /// Flattened 5x5 patch around (i, j), border-clamped.
+    pub descriptor: Vec<i16>,
+}
+
+fn pixel(img: &[u8], h: usize, w: usize, i: i64, j: i64) -> i64 {
+    let ii = i.clamp(0, h as i64 - 1) as usize;
+    let jj = j.clamp(0, w as i64 - 1) as usize;
+    img[ii * w + jj] as i64
+}
+
+/// Gradient-product corner score at (i, j).
+fn corner_score(img: &[u8], h: usize, w: usize, i: usize, j: usize) -> i64 {
+    let (i, j) = (i as i64, j as i64);
+    let mut gxx = 0i64;
+    let mut gyy = 0i64;
+    let mut gxy = 0i64;
+    for di in -1..=1i64 {
+        for dj in -1..=1i64 {
+            let gx = pixel(img, h, w, i + di, j + dj + 1) - pixel(img, h, w, i + di, j + dj - 1);
+            let gy = pixel(img, h, w, i + di + 1, j + dj) - pixel(img, h, w, i + di - 1, j + dj);
+            gxx += gx * gx;
+            gyy += gy * gy;
+            gxy += gx * gy;
+        }
+    }
+    // det - trace^2/4 (scaled Harris-like response).
+    let det = gxx * gyy - gxy * gxy;
+    let tr = gxx + gyy;
+    det / 256 - tr * tr / 4096
+}
+
+fn descriptor(img: &[u8], h: usize, w: usize, i: usize, j: usize) -> Vec<i16> {
+    let mut d = Vec::with_capacity(25);
+    for di in -2..=2i64 {
+        for dj in -2..=2i64 {
+            d.push(pixel(img, h, w, i as i64 + di, j as i64 + dj) as i16);
+        }
+    }
+    d
+}
+
+/// Extract the top `count` features by corner score with non-maximum
+/// suppression radius 2.
+pub fn extract_features(img: &[u8], h: usize, w: usize, count: usize) -> Vec<Feature> {
+    assert_eq!(img.len(), h * w);
+    let mut scored: Vec<(i64, usize, usize)> = Vec::new();
+    for i in 1..h.saturating_sub(1) {
+        for j in 1..w.saturating_sub(1) {
+            scored.push((corner_score(img, h, w, i, j), i, j));
+        }
+    }
+    scored.sort_by_key(|&(s, _, _)| std::cmp::Reverse(s));
+    let mut picked: Vec<Feature> = Vec::new();
+    for (score, i, j) in scored {
+        if picked.len() >= count {
+            break;
+        }
+        let clash = picked
+            .iter()
+            .any(|f| f.i.abs_diff(i) <= 2 && f.j.abs_diff(j) <= 2);
+        if !clash {
+            picked.push(Feature {
+                i,
+                j,
+                score,
+                descriptor: descriptor(img, h, w, i, j),
+            });
+        }
+    }
+    picked
+}
+
+/// Sum of absolute descriptor differences.
+pub fn descriptor_distance(a: &Feature, b: &Feature) -> i64 {
+    a.descriptor
+        .iter()
+        .zip(&b.descriptor)
+        .map(|(&x, &y)| (x as i64 - y as i64).abs())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn checkerboard(h: usize, w: usize) -> Vec<u8> {
+        (0..h * w)
+            .map(|p| {
+                let (i, j) = (p / w, p % w);
+                if ((i / 4) + (j / 4)) % 2 == 0 {
+                    220
+                } else {
+                    40
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn corners_found_on_checkerboard() {
+        let img = checkerboard(16, 16);
+        let feats = extract_features(&img, 16, 16, 8);
+        assert_eq!(feats.len(), 8);
+        // Top features should sit near block boundaries (gradient energy).
+        for f in &feats {
+            let near_boundary = (f.i % 4 <= 1 || f.i % 4 >= 3) || (f.j % 4 <= 1 || f.j % 4 >= 3);
+            assert!(near_boundary, "feature at ({}, {}) not near an edge", f.i, f.j);
+        }
+    }
+
+    #[test]
+    fn nms_enforces_spacing() {
+        let img = checkerboard(20, 20);
+        let feats = extract_features(&img, 20, 20, 12);
+        for (a_idx, a) in feats.iter().enumerate() {
+            for b in feats.iter().skip(a_idx + 1) {
+                assert!(a.i.abs_diff(b.i) > 2 || a.j.abs_diff(b.j) > 2);
+            }
+        }
+    }
+
+    #[test]
+    fn identical_patches_have_zero_distance() {
+        let img = checkerboard(12, 12);
+        let f = extract_features(&img, 12, 12, 2);
+        assert_eq!(descriptor_distance(&f[0], &f[0]), 0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Flow-from-assignment: match features between frames by solving the
+//! max-weight assignment over descriptor similarities, yielding a sparse
+//! displacement field.
+
+use anyhow::Result;
+
+use crate::assignment::{AssignmentResult, AssignmentSolver};
+use crate::graph::AssignmentInstance;
+
+use super::features::{descriptor_distance, extract_features, Feature};
+
+/// A matched displacement vector.
+#[derive(Debug, Clone, Copy)]
+pub struct FlowVector {
+    pub from: (usize, usize),
+    pub to: (usize, usize),
+}
+
+/// Sparse optical-flow field.
+#[derive(Debug, Clone)]
+pub struct FlowField {
+    pub vectors: Vec<FlowVector>,
+    pub matching_weight: i64,
+    pub solver_result: AssignmentResult,
+}
+
+impl FlowField {
+    /// Mean endpoint error against a known constant translation.
+    pub fn mean_endpoint_error(&self, dy: f64, dx: f64) -> f64 {
+        if self.vectors.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .vectors
+            .iter()
+            .map(|v| {
+                let vy = v.to.0 as f64 - v.from.0 as f64;
+                let vx = v.to.1 as f64 - v.from.1 as f64;
+                ((vy - dy).powi(2) + (vx - dx).powi(2)).sqrt()
+            })
+            .sum();
+        sum / self.vectors.len() as f64
+    }
+}
+
+/// Build the weight matrix between two feature sets: similarity = scaled
+/// inverse descriptor distance, damped by spatial displacement (flows are
+/// small between consecutive frames).
+pub fn match_weights(fa: &[Feature], fb: &[Feature]) -> AssignmentInstance {
+    let n = fa.len().min(fb.len());
+    let fa = &fa[..n];
+    let fb = &fb[..n];
+    let mut w = vec![0i64; n * n];
+    for (i, a) in fa.iter().enumerate() {
+        for (j, b) in fb.iter().enumerate() {
+            let d = descriptor_distance(a, b);
+            let spatial =
+                ((a.i.abs_diff(b.i)).pow(2) + (a.j.abs_diff(b.j)).pow(2)) as f64;
+            let sim = 1000.0 * (-(d as f64) / 2000.0).exp() * (-spatial / 200.0).exp();
+            w[i * n + j] = sim.round() as i64;
+        }
+    }
+    AssignmentInstance::new(n, w)
+}
+
+/// Full pipeline: frames -> features -> assignment -> flow field.
+pub fn compute_flow(
+    frame_a: &[u8],
+    frame_b: &[u8],
+    height: usize,
+    width: usize,
+    feature_count: usize,
+    solver: &dyn AssignmentSolver,
+) -> Result<FlowField> {
+    let fa = extract_features(frame_a, height, width, feature_count);
+    let fb = extract_features(frame_b, height, width, feature_count);
+    anyhow::ensure!(!fa.is_empty() && !fb.is_empty(), "no features detected");
+    let inst = match_weights(&fa, &fb);
+    let result = solver.solve(&inst)?;
+    let n = inst.n;
+    let vectors = (0..n)
+        .map(|i| FlowVector {
+            from: (fa[i].i, fa[i].j),
+            to: (fb[result.assignment[i]].i, fb[result.assignment[i]].j),
+        })
+        .collect();
+    Ok(FlowField {
+        vectors,
+        matching_weight: result.weight,
+        solver_result: result,
+    })
+}
+
+/// Translate an image by (dy, dx) with border clamping (synthetic frames).
+pub fn translate_image(img: &[u8], h: usize, w: usize, dy: i64, dx: i64) -> Vec<u8> {
+    let mut out = vec![0u8; h * w];
+    for i in 0..h {
+        for j in 0..w {
+            let si = (i as i64 - dy).clamp(0, h as i64 - 1) as usize;
+            let sj = (j as i64 - dx).clamp(0, w as i64 - 1) as usize;
+            out[i * w + j] = img[si * w + sj];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::csa::SequentialCsa;
+    use crate::workloads::grid_gen::synthetic_image;
+
+    #[test]
+    fn recovers_constant_translation() {
+        let mut rng = crate::util::Rng::seeded(71);
+        let (h, w) = (24, 24);
+        let a = synthetic_image(&mut rng, h, w);
+        let b = translate_image(&a, h, w, 2, 1);
+        let field = compute_flow(&a, &b, h, w, 10, &SequentialCsa::default()).unwrap();
+        let err = field.mean_endpoint_error(2.0, 1.0);
+        // Features near the border clamp, so allow a loose bound.
+        assert!(err < 3.0, "mean endpoint error too high: {err}");
+        assert!(field.vectors.len() >= 6);
+    }
+
+    #[test]
+    fn zero_motion_gives_identity_matches() {
+        let mut rng = crate::util::Rng::seeded(73);
+        let (h, w) = (20, 20);
+        let a = synthetic_image(&mut rng, h, w);
+        let field = compute_flow(&a, &a, h, w, 8, &SequentialCsa::default()).unwrap();
+        let err = field.mean_endpoint_error(0.0, 0.0);
+        assert!(err < 0.5, "identity flow should be near-zero: {err}");
+    }
+}

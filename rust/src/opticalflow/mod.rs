@@ -1,0 +1,14 @@
+//! Optical flow via the assignment problem — the §1 motivation ("a new
+//! and most interesting for us idea consists in computing optical flow by
+//! reducing it to the assignment problem").
+//!
+//! Pipeline: two frames -> corner-like feature extraction -> patch
+//! descriptors -> similarity weight matrix -> max-weight assignment ->
+//! displacement field + endpoint-error metrics against the known
+//! synthetic ground truth.
+
+pub mod features;
+pub mod flow;
+
+pub use features::{extract_features, Feature};
+pub use flow::{compute_flow, FlowField};

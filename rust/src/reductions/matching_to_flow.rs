@@ -1,0 +1,137 @@
+//! Unweighted bipartite matching via max flow (the classic reduction the
+//! paper cites from CLRS §"Maximum bipartite matching"): unit source/sink
+//! arcs, unit X->Y arcs, max-flow value = maximum matching cardinality.
+
+use anyhow::Result;
+
+use crate::graph::csr::NetworkBuilder;
+use crate::maxflow::MaxFlowSolver;
+
+/// `edges[x]` lists the Y-neighbours of X node `x` (|X| = nx, |Y| = ny).
+/// Returns (cardinality, matching pairs), solving with `engine`.
+pub fn max_cardinality_matching(
+    nx: usize,
+    ny: usize,
+    edges: &[Vec<usize>],
+    engine: &dyn MaxFlowSolver,
+) -> Result<(usize, Vec<(usize, usize)>)> {
+    assert_eq!(edges.len(), nx);
+    let n = nx + ny + 2;
+    let (s, t) = (n - 2, n - 1);
+    let mut b = NetworkBuilder::new(n, s, t);
+    let mut xy_edges = Vec::new();
+    for (x, nbrs) in edges.iter().enumerate() {
+        for &y in nbrs {
+            assert!(y < ny, "edge to out-of-range y {y}");
+            let e = b.add_edge(x, nx + y, 1, 0);
+            xy_edges.push((e, x, y));
+        }
+    }
+    for x in 0..nx {
+        b.add_edge(s, x, 1, 0);
+    }
+    for y in 0..ny {
+        b.add_edge(nx + y, t, 1, 0);
+    }
+    let mut g = b.build()?;
+    let stats = engine.solve(&mut g)?;
+    crate::graph::validate::assert_max_flow(&g, stats.value)?;
+
+    let matching: Vec<(usize, usize)> = xy_edges
+        .iter()
+        .filter(|&&(e, _, _)| g.flow(e) == 1)
+        .map(|&(_, x, y)| (x, y))
+        .collect();
+    anyhow::ensure!(
+        matching.len() as i64 == stats.value,
+        "matching size {} != flow value {}",
+        matching.len(),
+        stats.value
+    );
+    Ok((stats.value as usize, matching))
+}
+
+/// Independent Hopcroft–Karp-style (augmenting BFS/DFS) matcher used to
+/// cross-check the reduction in tests and benches.
+pub fn reference_matching(nx: usize, ny: usize, edges: &[Vec<usize>]) -> usize {
+    let mut match_x: Vec<Option<usize>> = vec![None; nx];
+    let mut match_y: Vec<Option<usize>> = vec![None; ny];
+
+    fn try_augment(
+        x: usize,
+        edges: &[Vec<usize>],
+        match_x: &mut [Option<usize>],
+        match_y: &mut [Option<usize>],
+        visited: &mut [bool],
+    ) -> bool {
+        for &y in &edges[x] {
+            if visited[y] {
+                continue;
+            }
+            visited[y] = true;
+            if match_y[y].is_none()
+                || try_augment(match_y[y].unwrap(), edges, match_x, match_y, visited)
+            {
+                match_x[x] = Some(y);
+                match_y[y] = Some(x);
+                return true;
+            }
+        }
+        false
+    }
+
+    let mut size = 0;
+    for x in 0..nx {
+        let mut visited = vec![false; ny];
+        if try_augment(x, edges, &mut match_x, &mut match_y, &mut visited) {
+            size += 1;
+        }
+    }
+    size
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maxflow::dinic::Dinic;
+    use crate::util::Rng;
+
+    #[test]
+    fn perfect_matching_found() {
+        // 3x3 with a unique perfect matching on the diagonal.
+        let edges = vec![vec![0], vec![0, 1], vec![1, 2]];
+        let (size, matching) = max_cardinality_matching(3, 3, &edges, &Dinic).unwrap();
+        assert_eq!(size, 3);
+        assert_eq!(matching.len(), 3);
+    }
+
+    #[test]
+    fn deficient_graph() {
+        // Both X nodes only see y0: matching is 1.
+        let edges = vec![vec![0], vec![0]];
+        let (size, _) = max_cardinality_matching(2, 2, &edges, &Dinic).unwrap();
+        assert_eq!(size, 1);
+    }
+
+    #[test]
+    fn matches_reference_on_random_graphs() {
+        let mut rng = Rng::seeded(31);
+        for _ in 0..10 {
+            let nx = 2 + rng.index(8);
+            let ny = 2 + rng.index(8);
+            let edges: Vec<Vec<usize>> = (0..nx)
+                .map(|_| (0..ny).filter(|_| rng.chance(0.4)).collect())
+                .collect();
+            let (size, matching) = max_cardinality_matching(nx, ny, &edges, &Dinic).unwrap();
+            assert_eq!(size, reference_matching(nx, ny, &edges));
+            // Matching is valid: no repeated endpoints.
+            let mut used_x = vec![false; nx];
+            let mut used_y = vec![false; ny];
+            for (x, y) in matching {
+                assert!(!used_x[x] && !used_y[y]);
+                used_x[x] = true;
+                used_y[y] = true;
+            }
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Successive-shortest-paths min-cost max-flow on the explicit §5
+//! reduction instance `I'` — the Fig. 1 path "assignment -> max flow min
+//! cost", used to certify the reduction itself (E1).
+//!
+//! SPFA-based Bellman–Ford potentials (costs include negative arcs from
+//! the max->min conversion), unit capacities, O(n) augmentations.
+
+use anyhow::Result;
+
+use crate::graph::AssignmentInstance;
+
+/// Solve the assignment instance through the explicit flow reduction;
+/// returns (assignment, weight).
+pub fn solve_assignment_via_mcmf(inst: &AssignmentInstance) -> Result<(Vec<usize>, i64)> {
+    let n = inst.n;
+    if n == 0 {
+        return Ok((vec![], 0));
+    }
+    let (g, costs) = inst.to_mincost_network();
+    let nn = g.node_count();
+    let (s, t) = (g.source(), g.sink());
+
+    // Mutable residual copies: cap per directed edge id, cost per edge id
+    // (mate has negated cost).
+    let m2 = g.edge_pair_count() * 2;
+    let mut cap: Vec<i64> = (0..m2 as u32).map(|e| g.residual(e)).collect();
+    let cost: Vec<i64> = (0..m2)
+        .map(|e| {
+            let pair = e / 2;
+            if e % 2 == 0 {
+                costs[pair]
+            } else {
+                -costs[pair]
+            }
+        })
+        .collect();
+
+    let mut total_cost = 0i64;
+    let mut flow = 0i64;
+    loop {
+        // SPFA shortest path s -> t over residual arcs.
+        const INF: i64 = i64::MAX / 4;
+        let mut dist = vec![INF; nn];
+        let mut in_queue = vec![false; nn];
+        let mut pre: Vec<Option<u32>> = vec![None; nn];
+        dist[s] = 0;
+        let mut q = std::collections::VecDeque::new();
+        q.push_back(s);
+        in_queue[s] = true;
+        while let Some(u) = q.pop_front() {
+            in_queue[u] = false;
+            for &e in g.out_edges(u) {
+                if cap[e as usize] > 0 {
+                    let v = g.edge_head(e);
+                    let nd = dist[u] + cost[e as usize];
+                    if nd < dist[v] {
+                        dist[v] = nd;
+                        pre[v] = Some(e);
+                        if !in_queue[v] {
+                            in_queue[v] = true;
+                            q.push_back(v);
+                        }
+                    }
+                }
+            }
+        }
+        if dist[t] >= INF {
+            break;
+        }
+        // Unit capacities on terminal arcs: bottleneck is 1.
+        let mut bottleneck = i64::MAX;
+        let mut v = t;
+        while v != s {
+            let e = pre[v].expect("path");
+            bottleneck = bottleneck.min(cap[e as usize]);
+            v = g.edge_head((e ^ 1) as u32);
+        }
+        let mut v = t;
+        while v != s {
+            let e = pre[v].expect("path");
+            cap[e as usize] -= bottleneck;
+            cap[(e ^ 1) as usize] += bottleneck;
+            total_cost += cost[e as usize] * bottleneck;
+            v = g.edge_head((e ^ 1) as u32);
+        }
+        flow += bottleneck;
+    }
+    anyhow::ensure!(flow == n as i64, "reduction flow {flow} != n {n}");
+
+    // Extract the matching: X->Y edge pairs with flow (cap 0 on forward).
+    // Edge pairs were added X-major: pair k = (x, y) with k = x*n + y for
+    // the first n*n pairs.
+    let mut assign = vec![usize::MAX; n];
+    for x in 0..n {
+        for y in 0..n {
+            let e = (2 * (x * n + y)) as u32;
+            if cap[e as usize] == 0 && g.capacity0(e) == 1 {
+                assign[x] = y;
+            }
+        }
+    }
+    anyhow::ensure!(
+        AssignmentInstance::is_permutation(&assign),
+        "reduction produced a non-matching"
+    );
+    let weight = inst.assignment_weight(&assign);
+    anyhow::ensure!(
+        weight == -total_cost,
+        "cost accounting mismatch: weight {weight} vs -cost {}",
+        -total_cost
+    );
+    Ok((assign, weight))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::hungarian::Hungarian;
+    use crate::assignment::AssignmentSolver;
+    use crate::util::Rng;
+
+    #[test]
+    fn reduction_matches_hungarian() {
+        let mut rng = Rng::seeded(37);
+        for n in [1usize, 2, 4, 6, 9] {
+            let w: Vec<i64> = (0..n * n).map(|_| rng.range_i64(0, 50)).collect();
+            let inst = AssignmentInstance::new(n, w);
+            let (assign, weight) = solve_assignment_via_mcmf(&inst).unwrap();
+            let want = Hungarian.solve(&inst).unwrap();
+            assert_eq!(weight, want.weight, "n={n}");
+            assert_eq!(weight, inst.assignment_weight(&assign));
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! The paper's Figure 1: reductions between the analysed problems.
+//!
+//! * bipartite cardinality matching -> max flow (unit network);
+//! * assignment -> max-flow-min-cost on the explicit instance `I'` of §5
+//!   (checked against Hungarian via a successive-shortest-path solver).
+
+pub mod matching_to_flow;
+pub mod mcmf;
+
+pub use matching_to_flow::max_cardinality_matching;
+pub use mcmf::solve_assignment_via_mcmf;

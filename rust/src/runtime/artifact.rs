@@ -1,0 +1,169 @@
+//! Artifact discovery: map logical kernel names to `artifacts/*.hlo.txt`
+//! files produced by `make artifacts` (python/compile/aot.py).
+//!
+//! The AOT step writes a `manifest.txt` with one line per artifact:
+//!
+//! ```text
+//! grid_wave_32x32 grid 32 32 16
+//! csa_refine_30   csa  30 30 16
+//! ```
+//!
+//! (name, kind, dim0, dim1, k_inner).  The registry parses it and knows,
+//! for a requested problem shape, which artifact to load.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Which L2 graph an artifact encodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Grid push-relabel super-step (`grid_wave_{H}x{W}`).
+    Grid,
+    /// CSA refine super-step (`csa_refine_{n}`).
+    Csa,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "grid" => Ok(Self::Grid),
+            "csa" => Ok(Self::Csa),
+            other => bail!("unknown artifact kind {other:?} in manifest"),
+        }
+    }
+}
+
+/// One line of the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub dim0: usize,
+    pub dim1: usize,
+    pub k_inner: usize,
+    pub path: PathBuf,
+}
+
+/// All artifacts found in one artifacts directory.
+#[derive(Debug, Default)]
+pub struct ArtifactRegistry {
+    by_name: BTreeMap<String, ArtifactSpec>,
+}
+
+/// Locate the artifacts directory: `$FLOWMATCH_ARTIFACTS`, else `artifacts/`
+/// relative to the current dir, else relative to the crate root (so tests
+/// and benches work from any working directory).
+pub fn default_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("FLOWMATCH_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.is_dir() {
+            return Some(p);
+        }
+    }
+    let candidates = [
+        PathBuf::from("artifacts"),
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ];
+    candidates.into_iter().find(|p| p.is_dir())
+}
+
+impl ArtifactRegistry {
+    /// Parse `manifest.txt` in `dir`.  Artifacts whose `.hlo.txt` file is
+    /// missing (e.g. a partial `--only` build) are skipped.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let mut by_name = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 {
+                bail!("manifest line {} malformed: {line:?}", lineno + 1);
+            }
+            let path = dir.join(format!("{}.hlo.txt", parts[0]));
+            if !path.is_file() {
+                continue;
+            }
+            let spec = ArtifactSpec {
+                name: parts[0].to_string(),
+                kind: ArtifactKind::parse(parts[1])?,
+                dim0: parts[2].parse().context("manifest dim0")?,
+                dim1: parts[3].parse().context("manifest dim1")?,
+                k_inner: parts[4].parse().context("manifest k_inner")?,
+                path,
+            };
+            by_name.insert(spec.name.clone(), spec);
+        }
+        Ok(Self { by_name })
+    }
+
+    /// Load from the default location, if one exists.
+    pub fn discover() -> Result<Self> {
+        let dir = default_dir().context(
+            "no artifacts directory found; run `make artifacts` or set FLOWMATCH_ARTIFACTS",
+        )?;
+        Self::load(&dir)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.by_name.get(name)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactSpec> {
+        self.by_name.values()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    /// Exact-shape grid artifact.
+    pub fn grid(&self, height: usize, width: usize) -> Option<&ArtifactSpec> {
+        self.by_name
+            .values()
+            .find(|s| s.kind == ArtifactKind::Grid && s.dim0 == height && s.dim1 == width)
+    }
+
+    /// Smallest CSA artifact with `dim0 >= n` (instances are padded up).
+    pub fn csa_at_least(&self, n: usize) -> Option<&ArtifactSpec> {
+        self.by_name
+            .values()
+            .filter(|s| s.kind == ArtifactKind::Csa && s.dim0 >= n)
+            .min_by_key(|s| s.dim0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest() {
+        let dir = std::env::temp_dir().join(format!("fm_artifacts_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "a_8 grid 8 8 16\nb_4 csa 4 4 8\n").unwrap();
+        std::fs::write(dir.join("a_8.hlo.txt"), "HloModule x").unwrap();
+        // b_4.hlo.txt intentionally missing -> skipped.
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert!(reg.get("a_8").is_some());
+        assert!(reg.get("b_4").is_none());
+        assert_eq!(reg.grid(8, 8).unwrap().k_inner, 16);
+        assert!(reg.csa_at_least(2).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        let dir = std::env::temp_dir().join(format!("fm_artifacts_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "only three fields\n").unwrap();
+        assert!(ArtifactRegistry::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

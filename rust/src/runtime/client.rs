@@ -1,0 +1,36 @@
+//! Per-thread PJRT CPU client.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based and therefore `!Send`: all
+//! PJRT state lives in thread-locals, and the coordinator confines device
+//! work to a single *device thread* (see `coordinator::server`) — mirroring
+//! the single CUDA context of the paper's implementation.
+
+use std::cell::OnceCell;
+
+use anyhow::{Context, Result};
+
+thread_local! {
+    static CLIENT: OnceCell<xla::PjRtClient> = const { OnceCell::new() };
+}
+
+/// The calling thread's PJRT CPU client.  First call pays plugin start-up.
+pub fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
+    CLIENT.with(|cell| {
+        if cell.get().is_none() {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let _ = cell.set(client);
+        }
+        f(cell.get().expect("client initialised above"))
+    })
+}
+
+/// Human-readable platform description (for `flowmatch info`).
+pub fn platform_info() -> Result<String> {
+    with_client(|c| {
+        Ok(format!(
+            "{} ({} devices)",
+            c.platform_name(),
+            c.device_count()
+        ))
+    })
+}

@@ -1,0 +1,262 @@
+//! Typed device front-ends for the two kernels.
+//!
+//! A *device* owns one compiled artifact and moves typed host state across
+//! the PJRT boundary, one super-step per call.  The wire layout matches
+//! `python/compile/model.py` exactly (same tuple order, same `int32`
+//! stats vectors).
+
+use anyhow::Result;
+
+use super::artifact::{ArtifactRegistry, ArtifactSpec};
+use super::{executor, literal, transfer};
+
+// ---------------------------------------------------------------------------
+// Grid push-relabel device
+// ---------------------------------------------------------------------------
+
+/// Host copy of the grid kernel state (flat row-major `i32` arrays).
+#[derive(Debug, Clone)]
+pub struct GridWireState {
+    pub height: usize,
+    pub width: usize,
+    /// Heights, `height * width`.
+    pub h: Vec<i32>,
+    /// Excess, `height * width`.
+    pub e: Vec<i32>,
+    /// Residual caps to N/S/W/E, `4 * height * width` (arc-major).
+    pub cap: Vec<i32>,
+    /// Residual cap of the (x, t) arc, `height * width`.
+    pub cap_sink: Vec<i32>,
+    /// Residual cap of the (x, s) arc, `height * width`.
+    pub cap_src: Vec<i32>,
+}
+
+impl GridWireState {
+    pub fn zeros(height: usize, width: usize) -> Self {
+        let n = height * width;
+        Self {
+            height,
+            width,
+            h: vec![0; n],
+            e: vec![0; n],
+            cap: vec![0; 4 * n],
+            cap_sink: vec![0; n],
+            cap_src: vec![0; n],
+        }
+    }
+
+    pub fn cells(&self) -> usize {
+        self.height * self.width
+    }
+
+    /// Total bytes of one full host->device state upload.
+    pub fn byte_size(&self) -> usize {
+        (self.h.len() + self.e.len() + self.cap.len() + self.cap_sink.len() + self.cap_src.len())
+            * std::mem::size_of::<i32>()
+    }
+}
+
+/// Stats vector of one grid super-step (model.py GRID_STATS order).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GridStepStats {
+    pub sink_flow: i64,
+    pub src_flow: i64,
+    pub active: i64,
+    pub pushes: i64,
+    pub relabels: i64,
+    pub waves: i64,
+}
+
+/// PJRT-backed grid super-step executor.
+pub struct GridDevice {
+    exe: std::rc::Rc<executor::Executor>,
+    pub height: usize,
+    pub width: usize,
+    pub k_inner: usize,
+}
+
+impl GridDevice {
+    pub fn from_spec(spec: &ArtifactSpec) -> Result<Self> {
+        let exe = executor::get_or_compile(&spec.name, &spec.path)?;
+        Ok(Self {
+            exe,
+            height: spec.dim0,
+            width: spec.dim1,
+            k_inner: spec.k_inner,
+        })
+    }
+
+    /// Look up the exact-shape artifact in `reg`.
+    pub fn for_shape(reg: &ArtifactRegistry, height: usize, width: usize) -> Result<Self> {
+        let spec = reg.grid(height, width).ok_or_else(|| {
+            anyhow::anyhow!("no grid artifact for {height}x{width}; run `make artifacts`")
+        })?;
+        Self::from_spec(spec)
+    }
+
+    /// Run up to `outer * k_inner` waves on the device; updates `state`
+    /// in place and returns the accumulated stats.
+    pub fn step(&self, state: &mut GridWireState, outer: i32) -> Result<GridStepStats> {
+        anyhow::ensure!(
+            state.height == self.height && state.width == self.width,
+            "state is {}x{}, artifact wants {}x{}",
+            state.height,
+            state.width,
+            self.height,
+            self.width
+        );
+        let (hh, ww) = (self.height, self.width);
+        let n = hh * ww;
+        let inputs = [
+            literal::i32_tensor(&state.h, &[hh, ww])?,
+            literal::i32_tensor(&state.e, &[hh, ww])?,
+            literal::i32_tensor(&state.cap, &[4, hh, ww])?,
+            literal::i32_tensor(&state.cap_sink, &[hh, ww])?,
+            literal::i32_tensor(&state.cap_src, &[hh, ww])?,
+            literal::i32_scalar(outer),
+        ];
+        transfer::GLOBAL.record_h2d(state.byte_size() + 4);
+
+        let out = self.exe.run(&inputs)?;
+        anyhow::ensure!(out.len() == 6, "grid step returned {} outputs", out.len());
+
+        state.h = literal::to_i32_vec(&out[0], n)?;
+        state.e = literal::to_i32_vec(&out[1], n)?;
+        state.cap = literal::to_i32_vec(&out[2], 4 * n)?;
+        state.cap_sink = literal::to_i32_vec(&out[3], n)?;
+        state.cap_src = literal::to_i32_vec(&out[4], n)?;
+        let stats = literal::to_i32_vec(&out[5], 6)?;
+        transfer::GLOBAL.record_d2h(state.byte_size() + 24);
+
+        Ok(GridStepStats {
+            sink_flow: stats[0] as i64,
+            src_flow: stats[1] as i64,
+            active: stats[2] as i64,
+            pushes: stats[3] as i64,
+            relabels: stats[4] as i64,
+            waves: stats[5] as i64,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CSA refine device
+// ---------------------------------------------------------------------------
+
+/// Host copy of the CSA kernel state.
+#[derive(Debug, Clone)]
+pub struct CsaWireState {
+    pub n: usize,
+    /// Scaled min-cost matrix, `n * n` row-major.
+    pub cost: Vec<i32>,
+    /// Unit flows (0/1), `n * n`.
+    pub f: Vec<i32>,
+    pub px: Vec<i32>,
+    pub py: Vec<i32>,
+    pub ex: Vec<i32>,
+    pub ey: Vec<i32>,
+}
+
+impl CsaWireState {
+    /// Fresh refine state for a scaled cost matrix: f = 0, e(x) = 1,
+    /// e(y) = -1 (the paper's reduction replacing supplies, §5).
+    pub fn fresh(cost: Vec<i32>, n: usize) -> Self {
+        assert_eq!(cost.len(), n * n);
+        Self {
+            n,
+            cost,
+            f: vec![0; n * n],
+            px: vec![0; n],
+            py: vec![0; n],
+            ex: vec![1; n],
+            ey: vec![-1; n],
+        }
+    }
+
+    pub fn byte_size(&self) -> usize {
+        (self.cost.len() + self.f.len() + 4 * self.n) * std::mem::size_of::<i32>()
+    }
+}
+
+/// Stats vector of one CSA super-step (model.py CSA_STATS order).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CsaStepStats {
+    pub active_x: i64,
+    pub active_y: i64,
+    pub pushes: i64,
+    pub relabels: i64,
+    pub waves: i64,
+}
+
+impl CsaStepStats {
+    pub fn active(&self) -> i64 {
+        self.active_x + self.active_y
+    }
+}
+
+/// PJRT-backed CSA refine super-step executor.
+pub struct CsaDevice {
+    exe: std::rc::Rc<executor::Executor>,
+    pub n: usize,
+    pub k_inner: usize,
+}
+
+impl CsaDevice {
+    pub fn from_spec(spec: &ArtifactSpec) -> Result<Self> {
+        let exe = executor::get_or_compile(&spec.name, &spec.path)?;
+        Ok(Self {
+            exe,
+            n: spec.dim0,
+            k_inner: spec.k_inner,
+        })
+    }
+
+    /// Smallest artifact that fits an `n x n` instance (caller pads).
+    pub fn for_size(reg: &ArtifactRegistry, n: usize) -> Result<Self> {
+        let spec = reg.csa_at_least(n).ok_or_else(|| {
+            anyhow::anyhow!("no CSA artifact for n >= {n}; run `make artifacts`")
+        })?;
+        Self::from_spec(spec)
+    }
+
+    /// Run up to `outer * k_inner` waves of refine at `eps`.
+    pub fn step(&self, state: &mut CsaWireState, eps: i32, outer: i32) -> Result<CsaStepStats> {
+        anyhow::ensure!(
+            state.n == self.n,
+            "state is n={}, artifact wants n={}",
+            state.n,
+            self.n
+        );
+        let n = self.n;
+        let inputs = [
+            literal::i32_tensor(&state.cost, &[n, n])?,
+            literal::i32_tensor(&state.f, &[n, n])?,
+            literal::i32_tensor(&state.px, &[n])?,
+            literal::i32_tensor(&state.py, &[n])?,
+            literal::i32_tensor(&state.ex, &[n])?,
+            literal::i32_tensor(&state.ey, &[n])?,
+            literal::i32_tensor(&[eps], &[1])?,
+            literal::i32_scalar(outer),
+        ];
+        transfer::GLOBAL.record_h2d(state.byte_size() + 8);
+
+        let out = self.exe.run(&inputs)?;
+        anyhow::ensure!(out.len() == 6, "csa step returned {} outputs", out.len());
+
+        state.f = literal::to_i32_vec(&out[0], n * n)?;
+        state.px = literal::to_i32_vec(&out[1], n)?;
+        state.py = literal::to_i32_vec(&out[2], n)?;
+        state.ex = literal::to_i32_vec(&out[3], n)?;
+        state.ey = literal::to_i32_vec(&out[4], n)?;
+        let stats = literal::to_i32_vec(&out[5], 6)?;
+        transfer::GLOBAL.record_d2h((state.f.len() + 4 * n + 6) * 4);
+
+        Ok(CsaStepStats {
+            active_x: stats[0] as i64,
+            active_y: stats[1] as i64,
+            pushes: stats[2] as i64,
+            relabels: stats[3] as i64,
+            waves: stats[4] as i64,
+        })
+    }
+}

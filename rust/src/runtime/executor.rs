@@ -1,0 +1,72 @@
+//! Compiled-executable cache: HLO text -> PJRT executable, compiled once
+//! per artifact per thread (the paper's analogue: one CUDA module load).
+//!
+//! PJRT handles are `!Send` (`Rc` internally), so the cache is
+//! thread-local; the coordinator keeps all device work on one thread.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::client;
+
+/// A compiled artifact plus its execution entry point.
+pub struct Executor {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executor {
+    /// Load HLO text from `path` and compile it on this thread's client.
+    pub fn compile_file(name: &str, path: &Path) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client::with_client(|c| {
+            c.compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling artifact {name}: {e}"))
+        })?;
+        Ok(Self {
+            exe,
+            name: name.to_string(),
+        })
+    }
+
+    /// Execute with the given input literals; returns the flattened output
+    /// tuple (AOT lowering uses `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {}: {e}", self.name))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("decomposing result tuple of {}: {e}", self.name))
+    }
+}
+
+thread_local! {
+    static CACHE: RefCell<HashMap<String, Rc<Executor>>> = RefCell::new(HashMap::new());
+}
+
+/// Get this thread's cached executor for `name`, compiling on first use.
+pub fn get_or_compile(name: &str, path: &Path) -> Result<Rc<Executor>> {
+    if let Some(exe) = CACHE.with(|c| c.borrow().get(name).cloned()) {
+        return Ok(exe);
+    }
+    let exe = Rc::new(Executor::compile_file(name, path)?);
+    CACHE.with(|c| c.borrow_mut().insert(name.to_string(), exe.clone()));
+    Ok(exe)
+}
+
+/// Number of executables compiled on this thread (for diagnostics).
+pub fn cached_count() -> usize {
+    CACHE.with(|c| c.borrow().len())
+}

@@ -1,0 +1,39 @@
+//! Marshalling between Rust `i32` buffers and XLA literals.
+//!
+//! Every kernel input/output in this project is `int32` (DESIGN.md §7), so
+//! the surface here is deliberately small and panic-free.
+
+use anyhow::{Context, Result};
+
+/// Build a rank-N i32 literal from a flat row-major buffer.
+pub fn i32_tensor(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(
+        n == data.len(),
+        "literal shape {:?} wants {} elements, got {}",
+        dims,
+        n,
+        data.len()
+    );
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .context("reshaping literal")
+}
+
+/// Scalar i32 literal (rank 0).
+pub fn i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract a flat i32 vector and check the element count.
+pub fn to_i32_vec(lit: &xla::Literal, expect: usize) -> Result<Vec<i32>> {
+    let v = lit.to_vec::<i32>().context("literal -> Vec<i32>")?;
+    anyhow::ensure!(
+        v.len() == expect,
+        "expected {} elements from device, got {}",
+        expect,
+        v.len()
+    );
+    Ok(v)
+}

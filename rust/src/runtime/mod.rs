@@ -1,0 +1,28 @@
+//! L3 runtime: load AOT-compiled HLO-text artifacts and execute them on the
+//! PJRT CPU client from the coordinator's hot path.
+//!
+//! Python/JAX runs only at build time (`make artifacts`); at runtime this
+//! module is the *only* bridge to the compiled compute graphs:
+//!
+//! ```text
+//! PjRtClient::cpu()
+//!   -> HloModuleProto::from_text_file("artifacts/<name>.hlo.txt")
+//!   -> client.compile(..)            (cached per artifact)
+//!   -> exe.execute(literals)         (one call per super-step)
+//! ```
+//!
+//! Transfers between host and device are byte-accounted in [`transfer`] to
+//! reproduce the paper's host<->device copy-minimization analysis (§4.6,
+//! §5.5 of the paper).
+
+pub mod artifact;
+pub mod client;
+pub mod device;
+pub mod executor;
+pub mod literal;
+pub mod transfer;
+
+pub use artifact::{ArtifactKind, ArtifactRegistry, ArtifactSpec};
+pub use device::{CsaDevice, CsaStepStats, GridDevice, GridStepStats};
+pub use executor::Executor;
+pub use transfer::TransferLog;

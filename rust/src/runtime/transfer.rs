@@ -1,0 +1,105 @@
+//! Host<->device transfer accounting.
+//!
+//! The paper devotes §4.6 and §5.5 to minimizing `cudaMemcpy` traffic (only
+//! heights back to the device after a global relabel; flows/excesses/prices
+//! as separate arrays).  PJRT hides the copies inside `execute`, so the
+//! coordinator logs the bytes it marshals each way; the CYCLE-sweep bench
+//! (E4) reports these columns next to wall-clock time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Cumulative transfer counters.  Cheap enough to keep global and atomic.
+#[derive(Debug, Default)]
+pub struct TransferLog {
+    h2d_bytes: AtomicU64,
+    d2h_bytes: AtomicU64,
+    h2d_calls: AtomicU64,
+    d2h_calls: AtomicU64,
+}
+
+impl TransferLog {
+    pub const fn new() -> Self {
+        Self {
+            h2d_bytes: AtomicU64::new(0),
+            d2h_bytes: AtomicU64::new(0),
+            h2d_calls: AtomicU64::new(0),
+            d2h_calls: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_h2d(&self, bytes: usize) {
+        self.h2d_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.h2d_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_d2h(&self, bytes: usize) {
+        self.d2h_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.d2h_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> TransferSnapshot {
+        TransferSnapshot {
+            h2d_bytes: self.h2d_bytes.load(Ordering::Relaxed),
+            d2h_bytes: self.d2h_bytes.load(Ordering::Relaxed),
+            h2d_calls: self.h2d_calls.load(Ordering::Relaxed),
+            d2h_calls: self.d2h_calls.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.h2d_bytes.store(0, Ordering::Relaxed);
+        self.d2h_bytes.store(0, Ordering::Relaxed);
+        self.h2d_calls.store(0, Ordering::Relaxed);
+        self.d2h_calls.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time copy of a [`TransferLog`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransferSnapshot {
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    pub h2d_calls: u64,
+    pub d2h_calls: u64,
+}
+
+impl TransferSnapshot {
+    /// Difference since `earlier` (for per-phase reporting).
+    pub fn since(&self, earlier: &TransferSnapshot) -> TransferSnapshot {
+        TransferSnapshot {
+            h2d_bytes: self.h2d_bytes - earlier.h2d_bytes,
+            d2h_bytes: self.d2h_bytes - earlier.d2h_bytes,
+            h2d_calls: self.h2d_calls - earlier.h2d_calls,
+            d2h_calls: self.d2h_calls - earlier.d2h_calls,
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.h2d_bytes + self.d2h_bytes
+    }
+}
+
+/// Global log used by the default devices.
+pub static GLOBAL: TransferLog = TransferLog::new();
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_roundtrip() {
+        let log = TransferLog::new();
+        log.record_h2d(100);
+        log.record_h2d(24);
+        log.record_d2h(8);
+        let s = log.snapshot();
+        assert_eq!(s.h2d_bytes, 124);
+        assert_eq!(s.h2d_calls, 2);
+        assert_eq!(s.d2h_bytes, 8);
+        assert_eq!(s.total_bytes(), 132);
+        let s2 = log.snapshot().since(&s);
+        assert_eq!(s2.total_bytes(), 0);
+        log.reset();
+        assert_eq!(log.snapshot().total_bytes(), 0);
+    }
+}

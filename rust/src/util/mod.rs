@@ -1,0 +1,14 @@
+//! Small self-contained substrates: PRNG, statistics, timing, logging.
+//!
+//! The build image vendors only the `xla` crate's dependency closure, so
+//! the crates a project would normally pull in (`rand`, `log`, `criterion`
+//! internals) are provided here as minimal, well-tested equivalents.
+
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use timer::Timer;

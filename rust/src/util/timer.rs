@@ -1,0 +1,65 @@
+//! Wall-clock timing helpers.
+
+use std::time::Instant;
+
+/// A started stopwatch.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    /// Seconds since start.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the lap time in seconds.
+    pub fn lap(&mut self) -> f64 {
+        let t = self.elapsed();
+        self.start = Instant::now();
+        t
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed();
+        let b = t.elapsed();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn time_returns_result() {
+        let (v, secs) = time(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let lap = t.lap();
+        assert!(lap >= 0.002);
+        assert!(t.elapsed() < lap + 0.002);
+    }
+}

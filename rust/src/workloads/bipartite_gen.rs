@@ -1,0 +1,68 @@
+//! Assignment-instance generators: the §6 workload (uniform costs ≤ C)
+//! and a geometric family (points in the plane, weight = max_dist - dist)
+//! that models the optical-flow feature-matching application.
+
+use crate::graph::AssignmentInstance;
+use crate::util::Rng;
+
+/// Uniform weights in `[0, max_weight]` — the paper's §6 setting with
+/// `max_weight = 100`.
+pub fn uniform_costs(rng: &mut Rng, n: usize, max_weight: i64) -> AssignmentInstance {
+    let w: Vec<i64> = (0..n * n).map(|_| rng.range_i64(0, max_weight)).collect();
+    AssignmentInstance::new(n, w)
+}
+
+/// Geometric weights: two point clouds where Y is a jittered copy of X —
+/// high weight for matching a point to its displaced twin (the optical
+/// flow structure).  Weight = `scale * exp(-dist / bandwidth)`.
+pub fn geometric_costs(rng: &mut Rng, n: usize, jitter: f64, scale: i64) -> AssignmentInstance {
+    let xs: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64() * 100.0, rng.f64() * 100.0)).collect();
+    let ys: Vec<(f64, f64)> = xs
+        .iter()
+        .map(|&(x, y)| {
+            (
+                x + (rng.f64() - 0.5) * 2.0 * jitter,
+                y + (rng.f64() - 0.5) * 2.0 * jitter,
+            )
+        })
+        .collect();
+    let bandwidth = 25.0;
+    let mut w = vec![0i64; n * n];
+    for (i, &(ax, ay)) in xs.iter().enumerate() {
+        for (j, &(bx, by)) in ys.iter().enumerate() {
+            let d = ((ax - bx).powi(2) + (ay - by).powi(2)).sqrt();
+            w[i * n + j] = ((scale as f64) * (-d / bandwidth).exp()).round() as i64;
+        }
+    }
+    AssignmentInstance::new(n, w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::{hungarian::Hungarian, AssignmentSolver};
+
+    #[test]
+    fn uniform_bounds_respected() {
+        let mut rng = Rng::seeded(11);
+        let inst = uniform_costs(&mut rng, 12, 100);
+        assert!(inst.weights.iter().all(|&w| (0..=100).contains(&w)));
+        assert_eq!(inst.n, 12);
+    }
+
+    #[test]
+    fn geometric_prefers_identity_for_small_jitter() {
+        let mut rng = Rng::seeded(13);
+        let inst = geometric_costs(&mut rng, 10, 0.5, 1000);
+        let r = Hungarian.solve(&inst).unwrap();
+        // With tiny jitter the optimal matching is (almost always) the
+        // identity permutation.
+        let identity_hits = r
+            .assignment
+            .iter()
+            .enumerate()
+            .filter(|&(i, &y)| i == y)
+            .count();
+        assert!(identity_hits >= 8, "only {identity_hits}/10 identity");
+    }
+}

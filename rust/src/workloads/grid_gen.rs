@@ -1,0 +1,155 @@
+//! Grid max-flow instance generators.
+//!
+//! `random_grid` draws independent capacities — the stress workload.
+//! `segmentation_grid` mimics the §4 application: a smooth synthetic image
+//! with two regions produces terminal capacities from unary likelihoods
+//! and neighbour capacities from a contrast-sensitive smoothness term —
+//! structurally the same instances the CUDA-cuts datasets contain.
+
+use crate::graph::grid::{E, S};
+use crate::graph::GridNetwork;
+use crate::util::Rng;
+
+/// Uniform random grid: interior caps in [0, max_cap], a `frac_source`
+/// fraction of cells carries a source arc, `frac_sink` a sink arc.
+pub fn random_grid(
+    rng: &mut Rng,
+    height: usize,
+    width: usize,
+    max_cap: i64,
+    frac_source: f64,
+    frac_sink: f64,
+) -> GridNetwork {
+    let mut net = GridNetwork::zeros(height, width);
+    for i in 0..height {
+        for j in 0..width {
+            if i + 1 < height {
+                net.set_neighbour_cap(i, j, S, rng.range_i64(0, max_cap));
+                let cap_up = rng.range_i64(0, max_cap);
+                net.set_neighbour_cap(i + 1, j, crate::graph::grid::N, cap_up);
+            }
+            if j + 1 < width {
+                net.set_neighbour_cap(i, j, E, rng.range_i64(0, max_cap));
+                let cap_left = rng.range_i64(0, max_cap);
+                net.set_neighbour_cap(i, j + 1, crate::graph::grid::W, cap_left);
+            }
+            let c = net.cell(i, j);
+            if rng.chance(frac_source) {
+                net.cap_source[c] = rng.range_i64(1, max_cap.max(1));
+            }
+            if rng.chance(frac_sink) {
+                net.cap_sink[c] = rng.range_i64(1, max_cap.max(1));
+            }
+        }
+    }
+    net
+}
+
+/// A synthetic two-region "image": intensities in [0, 255] with a smooth
+/// blob of foreground, plus noise.  Returned row-major.
+pub fn synthetic_image(rng: &mut Rng, height: usize, width: usize) -> Vec<u8> {
+    let cy = height as f64 * (0.35 + 0.3 * rng.f64());
+    let cx = width as f64 * (0.35 + 0.3 * rng.f64());
+    let r = (height.min(width) as f64) * (0.2 + 0.15 * rng.f64());
+    let mut img = vec![0u8; height * width];
+    for i in 0..height {
+        for j in 0..width {
+            let d = ((i as f64 - cy).powi(2) + (j as f64 - cx).powi(2)).sqrt();
+            let base = if d < r { 200.0 } else { 60.0 };
+            let noise = rng.range_i64(-25, 25) as f64;
+            img[i * width + j] = (base + noise).clamp(0.0, 255.0) as u8;
+        }
+    }
+    img
+}
+
+/// Build the graph-cut instance for a two-label MRF over `img`
+/// (Kolmogorov–Zabih / Boykov-Jolly construction):
+///
+/// * unary terms: likelihood of foreground (bright) vs background (dark)
+///   become source/sink terminal capacities;
+/// * pairwise terms: contrast-sensitive Potts `lambda * exp(-|dI|/sigma)`
+///   become symmetric neighbour capacities.
+pub fn segmentation_grid(img: &[u8], height: usize, width: usize, lambda: i64) -> GridNetwork {
+    assert_eq!(img.len(), height * width);
+    let mut net = GridNetwork::zeros(height, width);
+    let sigma = 30.0f64;
+    let pairwise = |a: u8, b: u8| -> i64 {
+        let d = (a as f64 - b as f64).abs();
+        ((lambda as f64) * (-d / sigma).exp()).round() as i64 + 1
+    };
+    for i in 0..height {
+        for j in 0..width {
+            let c = net.cell(i, j);
+            let v = img[c] as i64;
+            // Unary: distance to the two class means (fg=200, bg=60),
+            // scaled to the capacity range.
+            let fg_cost = (v - 200).abs() / 4;
+            let bg_cost = (v - 60).abs() / 4;
+            // Cheap-to-be-foreground pixels attach to the source.
+            net.cap_source[c] = bg_cost; // cutting to bg costs this
+            net.cap_sink[c] = fg_cost;
+            if i + 1 < height {
+                let w = pairwise(img[c], img[(i + 1) * width + j]);
+                net.set_neighbour_cap(i, j, S, w);
+                net.set_neighbour_cap(i + 1, j, crate::graph::grid::N, w);
+            }
+            if j + 1 < width {
+                let w = pairwise(img[c], img[i * width + j + 1]);
+                net.set_neighbour_cap(i, j, E, w);
+                net.set_neighbour_cap(i, j + 1, crate::graph::grid::W, w);
+            }
+        }
+    }
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_grid_is_well_formed() {
+        let mut rng = Rng::seeded(1);
+        let net = random_grid(&mut rng, 6, 7, 10, 0.3, 0.3);
+        assert_eq!(net.cells(), 42);
+        // Border arcs zero.
+        for j in 0..7 {
+            assert_eq!(net.cap[net.arc(crate::graph::grid::N, 0, j)], 0);
+        }
+        assert!(net.excess_total() > 0);
+        // Convertible and solvable.
+        let g = net.to_flow_network();
+        assert_eq!(g.node_count(), 44);
+    }
+
+    #[test]
+    fn random_grid_deterministic_by_seed() {
+        let a = random_grid(&mut Rng::seeded(7), 5, 5, 9, 0.4, 0.4);
+        let b = random_grid(&mut Rng::seeded(7), 5, 5, 9, 0.4, 0.4);
+        assert_eq!(a.cap, b.cap);
+        assert_eq!(a.cap_source, b.cap_source);
+    }
+
+    #[test]
+    fn synthetic_image_has_two_modes() {
+        let mut rng = Rng::seeded(3);
+        let img = synthetic_image(&mut rng, 16, 16);
+        let bright = img.iter().filter(|&&v| v > 130).count();
+        let dark = img.iter().filter(|&&v| v <= 130).count();
+        assert!(bright > 8, "blob missing: {bright}");
+        assert!(dark > 8, "background missing: {dark}");
+    }
+
+    #[test]
+    fn segmentation_instance_attaches_terminals_by_intensity() {
+        let mut rng = Rng::seeded(4);
+        let img = synthetic_image(&mut rng, 12, 12);
+        let net = segmentation_grid(&img, 12, 12, 20);
+        // A bright pixel should have higher source capacity than sink.
+        let bright = img.iter().position(|&v| v > 180).unwrap();
+        assert!(net.cap_source[bright] > net.cap_sink[bright]);
+        let dark = img.iter().position(|&v| v < 80).unwrap();
+        assert!(net.cap_sink[dark] > net.cap_source[dark]);
+    }
+}

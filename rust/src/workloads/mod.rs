@@ -1,0 +1,14 @@
+//! Workload generators for every experiment row: grid instances
+//! (random + segmentation-like, standing in for the CVIT grid-graph
+//! datasets of Vineet & Narayanan), RMF-style layered CSR networks, random
+//! bipartite cost matrices, and request traces for the service bench.
+
+pub mod bipartite_gen;
+pub mod grid_gen;
+pub mod rmf;
+pub mod traces;
+
+pub use bipartite_gen::{geometric_costs, uniform_costs};
+pub use grid_gen::{random_grid, segmentation_grid};
+pub use rmf::rmf_network;
+pub use traces::{RequestTrace, TraceConfig};

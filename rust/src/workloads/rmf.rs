@@ -1,0 +1,83 @@
+//! RMF-style layered networks (Goldberg–Rao "washington RMF" family):
+//! `frames` square grids of side `a`, dense random arcs between
+//! consecutive frames, source in the first frame, sink in the last.
+//! The classic hard family for augmenting-path codes — the E2 stress
+//! workload for the CSR engines.
+
+use crate::graph::csr::{FlowNetwork, NetworkBuilder};
+use crate::util::Rng;
+
+/// Build an RMF-like network with `frames` frames of `a x a` nodes.
+pub fn rmf_network(rng: &mut Rng, a: usize, frames: usize, max_cap: i64) -> FlowNetwork {
+    assert!(a >= 2 && frames >= 2);
+    let per = a * a;
+    let n = per * frames + 2;
+    let s = n - 2;
+    let t = n - 1;
+    let node = |f: usize, i: usize, j: usize| f * per + i * a + j;
+    let mut b = NetworkBuilder::new(n, s, t);
+
+    // In-frame grid arcs with large capacity (cheap lateral movement).
+    for f in 0..frames {
+        for i in 0..a {
+            for j in 0..a {
+                if i + 1 < a {
+                    b.add_edge(node(f, i, j), node(f, i + 1, j), max_cap * 4, max_cap * 4);
+                }
+                if j + 1 < a {
+                    b.add_edge(node(f, i, j), node(f, i, j + 1), max_cap * 4, max_cap * 4);
+                }
+            }
+        }
+    }
+    // Between frames: a random permutation of a*a arcs with random caps —
+    // the bottleneck structure.
+    for f in 0..frames - 1 {
+        let mut perm: Vec<usize> = (0..per).collect();
+        rng.shuffle(&mut perm);
+        for (k, &p) in perm.iter().enumerate() {
+            let u = f * per + k;
+            let v = (f + 1) * per + p;
+            b.add_edge(u, v, rng.range_i64(1, max_cap), 0);
+        }
+    }
+    // Source feeds frame 0, sink drains the last frame.
+    for k in 0..per {
+        b.add_edge(s, k, max_cap * 8, 0);
+        b.add_edge((frames - 1) * per + k, t, max_cap * 8, 0);
+    }
+    b.build().expect("rmf well-formed")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maxflow;
+
+    #[test]
+    fn rmf_shape() {
+        let mut rng = Rng::seeded(2);
+        let g = rmf_network(&mut rng, 3, 4, 10);
+        assert_eq!(g.node_count(), 9 * 4 + 2);
+        // Every inter-frame layer has exactly a*a arcs: bottleneck exists.
+        assert!(g.edge_pair_count() > 0);
+    }
+
+    #[test]
+    fn engines_agree_on_rmf() {
+        let mut rng = Rng::seeded(3);
+        let base = rmf_network(&mut rng, 3, 3, 8);
+        let mut value = None;
+        for engine in maxflow::all_engines() {
+            let mut g = base.clone();
+            let stats = engine.solve(&mut g).unwrap();
+            crate::graph::validate::assert_max_flow(&g, stats.value)
+                .unwrap_or_else(|e| panic!("{}: {e}", engine.name()));
+            match value {
+                None => value = Some(stats.value),
+                Some(v) => assert_eq!(stats.value, v, "{}", engine.name()),
+            }
+        }
+        assert!(value.unwrap() > 0);
+    }
+}

@@ -1,0 +1,100 @@
+//! Request traces for the batched assignment service (E7): a stream of
+//! assignment instances with arrival offsets, modelling the real-time
+//! optical-flow use the paper's §6 targets (one matching problem per
+//! frame pair at a fixed frame rate).
+
+use crate::graph::AssignmentInstance;
+use crate::util::Rng;
+
+use super::bipartite_gen::{geometric_costs, uniform_costs};
+
+/// Trace parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub requests: usize,
+    /// Instance size (paper: n <= 30).
+    pub n: usize,
+    /// Max weight (paper: 100).
+    pub max_weight: i64,
+    /// Inter-arrival gap in seconds (1/fps); 0 = closed-loop.
+    pub arrival_gap: f64,
+    /// Fraction of geometric (optical-flow-like) instances.
+    pub geometric_frac: f64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            requests: 50,
+            n: 30,
+            max_weight: 100,
+            arrival_gap: 0.05, // 20 fps, the paper's real-time bar
+            geometric_frac: 0.5,
+        }
+    }
+}
+
+/// One request of the trace.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    /// Arrival time offset from trace start, seconds.
+    pub arrival: f64,
+    pub instance: AssignmentInstance,
+}
+
+/// A generated trace.
+#[derive(Debug, Clone)]
+pub struct RequestTrace {
+    pub requests: Vec<Request>,
+}
+
+impl RequestTrace {
+    pub fn generate(rng: &mut Rng, cfg: &TraceConfig) -> Self {
+        let requests = (0..cfg.requests)
+            .map(|id| {
+                let instance = if rng.chance(cfg.geometric_frac) {
+                    geometric_costs(rng, cfg.n, 3.0, cfg.max_weight)
+                } else {
+                    uniform_costs(rng, cfg.n, cfg.max_weight)
+                };
+                Request {
+                    id,
+                    arrival: id as f64 * cfg.arrival_gap,
+                    instance,
+                }
+            })
+            .collect();
+        Self { requests }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_shape_and_arrivals() {
+        let mut rng = Rng::seeded(21);
+        let cfg = TraceConfig {
+            requests: 10,
+            n: 8,
+            ..Default::default()
+        };
+        let trace = RequestTrace::generate(&mut rng, &cfg);
+        assert_eq!(trace.len(), 10);
+        assert!(trace
+            .requests
+            .windows(2)
+            .all(|w| w[1].arrival >= w[0].arrival));
+        assert!(trace.requests.iter().all(|r| r.instance.n == 8));
+    }
+}

@@ -1,0 +1,125 @@
+//! Integration: the application pipelines (segmentation, optical flow)
+//! and the batched service, end to end.
+
+use flowmatch::assignment::csa::SequentialCsa;
+use flowmatch::assignment::hungarian::Hungarian;
+use flowmatch::assignment::AssignmentSolver;
+use flowmatch::coordinator::{AssignmentService, ServiceConfig};
+use flowmatch::energy::segmentation::{segment_image, segment_image_baseline};
+use flowmatch::energy::{build_kz_network, BinaryMrf, PairwiseTerm};
+use flowmatch::gridflow::NativeGridExecutor;
+use flowmatch::opticalflow::compute_flow;
+use flowmatch::opticalflow::flow::translate_image;
+use flowmatch::util::Rng;
+use flowmatch::workloads::grid_gen::synthetic_image;
+use flowmatch::workloads::{RequestTrace, TraceConfig};
+
+#[test]
+fn segmentation_pipeline_hybrid_vs_baseline_on_many_images() {
+    for seed in [1u64, 2, 3] {
+        let mut rng = Rng::seeded(seed);
+        let (h, w) = (16, 16);
+        let img = synthetic_image(&mut rng, h, w);
+        let mut exec = NativeGridExecutor::default();
+        let a = segment_image(&img, h, w, 12, &mut exec).unwrap();
+        let b = segment_image_baseline(&img, h, w, 12).unwrap();
+        assert_eq!(a.energy, b.energy, "seed={seed}");
+        assert_eq!(a.labels, b.labels, "seed={seed}: different MAP labellings");
+    }
+}
+
+#[test]
+fn kz_energy_certificate_on_random_regular_mrfs() {
+    let mut rng = Rng::seeded(4);
+    for _ in 0..6 {
+        let (h, w) = (2 + rng.index(2), 2 + rng.index(3));
+        let mut mrf = BinaryMrf::new(h, w);
+        for p in 0..h * w {
+            mrf.unary[p] = (rng.range_i64(0, 25), rng.range_i64(0, 25));
+        }
+        for i in 0..h {
+            for j in 0..w {
+                let p = mrf.cell(i, j);
+                if i + 1 < h && rng.chance(0.8) {
+                    mrf.pair_s[p] = Some(PairwiseTerm::potts(rng.range_i64(0, 9)));
+                }
+                if j + 1 < w && rng.chance(0.8) {
+                    mrf.pair_e[p] = Some(PairwiseTerm::potts(rng.range_i64(0, 9)));
+                }
+            }
+        }
+        let kz = build_kz_network(&mrf).unwrap();
+        use flowmatch::maxflow::MaxFlowSolver;
+        let mut g = kz.network.to_flow_network();
+        let stats = flowmatch::maxflow::highest::HighestLabel::default()
+            .solve(&mut g)
+            .unwrap();
+        let (_, want) = mrf.brute_force_min();
+        assert_eq!(stats.value + kz.constant, want);
+    }
+}
+
+#[test]
+fn optical_flow_recovers_translations() {
+    let mut rng = Rng::seeded(5);
+    let (h, w) = (24, 24);
+    let img = synthetic_image(&mut rng, h, w);
+    for (dy, dx) in [(1i64, 0i64), (0, 2), (2, 2)] {
+        let moved = translate_image(&img, h, w, dy, dx);
+        let field = compute_flow(&img, &moved, h, w, 10, &SequentialCsa::default()).unwrap();
+        let epe = field.mean_endpoint_error(dy as f64, dx as f64);
+        assert!(epe < 3.0, "({dy},{dx}): endpoint error {epe}");
+    }
+}
+
+#[test]
+fn service_replays_trace_with_all_optimal_answers() {
+    let cfg = TraceConfig {
+        requests: 12,
+        n: 10,
+        max_weight: 100,
+        arrival_gap: 0.0,
+        geometric_frac: 0.5,
+    };
+    let mut rng = Rng::seeded(6);
+    let trace = RequestTrace::generate(&mut rng, &cfg);
+    let service = AssignmentService::start(ServiceConfig {
+        max_batch: 4,
+        use_pjrt: false, // native twin: keeps this test artifact-free
+        max_n: 16,
+    });
+    let receivers: Vec<_> = trace
+        .requests
+        .iter()
+        .map(|r| (r.id, service.submit(r.instance.clone())))
+        .collect();
+    for (id, rx) in receivers {
+        let reply = rx.recv().unwrap().unwrap();
+        let want = Hungarian.solve(&trace.requests[id].instance).unwrap();
+        assert_eq!(reply.weight, want.weight, "request {id}");
+    }
+    let report = service.shutdown().unwrap();
+    assert_eq!(report.served, 12);
+    assert!(report.p50_latency > 0.0);
+}
+
+#[test]
+fn service_pjrt_backend_when_artifacts_present() {
+    if flowmatch::runtime::ArtifactRegistry::discover().is_err() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let service = AssignmentService::start(ServiceConfig {
+        max_batch: 4,
+        use_pjrt: true,
+        max_n: 16,
+    });
+    let mut rng = Rng::seeded(7);
+    let inst = flowmatch::workloads::uniform_costs(&mut rng, 12, 100);
+    let want = Hungarian.solve(&inst).unwrap();
+    let reply = service.submit(inst).recv().unwrap().unwrap();
+    assert_eq!(reply.weight, want.weight);
+    assert_eq!(reply.backend, "pjrt");
+    let report = service.shutdown().unwrap();
+    assert_eq!(report.backend, "pjrt");
+}

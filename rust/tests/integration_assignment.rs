@@ -1,0 +1,155 @@
+//! Integration: every assignment engine against Hungarian on every
+//! workload family, the §5 reduction, alpha sweeps, and the PJRT driver.
+
+use flowmatch::assignment::{self, AssignmentSolver};
+use flowmatch::coordinator::PjrtAssignmentDriver;
+use flowmatch::graph::{dimacs, AssignmentInstance};
+use flowmatch::reductions;
+use flowmatch::runtime::ArtifactRegistry;
+use flowmatch::util::Rng;
+use flowmatch::workloads::{geometric_costs, uniform_costs};
+
+fn cases() -> Vec<(String, AssignmentInstance)> {
+    let mut out = Vec::new();
+    for (seed, n, c) in [(1u64, 5usize, 100i64), (2, 10, 100), (3, 16, 10), (4, 30, 100)] {
+        let mut rng = Rng::seeded(seed);
+        out.push((format!("uniform n={n} C={c}"), uniform_costs(&mut rng, n, c)));
+    }
+    for (seed, n) in [(5u64, 12usize), (6, 20)] {
+        let mut rng = Rng::seeded(seed);
+        out.push((format!("geometric n={n}"), geometric_costs(&mut rng, n, 3.0, 500)));
+    }
+    out
+}
+
+#[test]
+fn all_engines_optimal_on_all_families() {
+    for (name, inst) in cases() {
+        let want = assignment::hungarian::Hungarian.solve(&inst).unwrap();
+        for engine in assignment::all_engines() {
+            let got = engine.solve(&inst).unwrap();
+            assert!(
+                AssignmentInstance::is_permutation(&got.assignment),
+                "{name}/{}",
+                engine.name()
+            );
+            assert_eq!(got.weight, want.weight, "{name}/{}", engine.name());
+        }
+    }
+}
+
+#[test]
+fn reduction_to_mcmf_is_sound() {
+    // Fig. 1 / E1: the explicit §5 reduction solved by SSP agrees with
+    // Hungarian (and hence with every engine above).
+    for (name, inst) in cases() {
+        if inst.n > 16 {
+            continue; // SSP on the dense reduction is O(n^3) anyway; keep fast
+        }
+        let (assign, weight) = reductions::solve_assignment_via_mcmf(&inst).unwrap();
+        let want = assignment::hungarian::Hungarian.solve(&inst).unwrap();
+        assert_eq!(weight, want.weight, "{name}");
+        assert_eq!(weight, inst.assignment_weight(&assign), "{name}");
+    }
+}
+
+#[test]
+fn alpha_sweep_always_optimal() {
+    let mut rng = Rng::seeded(7);
+    let inst = uniform_costs(&mut rng, 14, 100);
+    let want = assignment::hungarian::Hungarian.solve(&inst).unwrap().weight;
+    for alpha in [2i64, 4, 8, 10, 16, 32, 64] {
+        let got = assignment::csa::SequentialCsa::with_alpha(alpha)
+            .solve(&inst)
+            .unwrap();
+        assert_eq!(got.weight, want, "alpha={alpha}");
+    }
+}
+
+#[test]
+fn lockfree_thread_sweep_optimal() {
+    let mut rng = Rng::seeded(8);
+    let inst = uniform_costs(&mut rng, 16, 100);
+    let want = assignment::hungarian::Hungarian.solve(&inst).unwrap().weight;
+    for threads in [1usize, 2, 3, 4, 8] {
+        let got = assignment::csa_lockfree::LockFreeCsa::with_threads(threads)
+            .solve(&inst)
+            .unwrap();
+        assert_eq!(got.weight, want, "threads={threads}");
+    }
+}
+
+#[test]
+fn pjrt_driver_optimal_with_and_without_padding() {
+    let Ok(reg) = ArtifactRegistry::discover() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    // n=30 exact artifact; n=20 forces padding to 30; n=8 exact.
+    for (seed, n) in [(9u64, 30usize), (10, 20), (11, 8)] {
+        let mut rng = Rng::seeded(seed);
+        let inst = uniform_costs(&mut rng, n, 100);
+        let want = assignment::hungarian::Hungarian.solve(&inst).unwrap();
+        let mut driver = PjrtAssignmentDriver::for_size(&reg, n).unwrap();
+        let (got, tel) = driver.solve(&inst).unwrap();
+        assert_eq!(got.weight, want.weight, "n={n}");
+        assert!(
+            AssignmentInstance::is_permutation(&got.assignment),
+            "n={n}"
+        );
+        assert!(tel.device_rounds > 0);
+        assert!(tel.padded_n >= n);
+    }
+}
+
+#[test]
+fn pjrt_driver_price_update_ablation() {
+    let Ok(reg) = ArtifactRegistry::discover() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut rng = Rng::seeded(12);
+    let inst = uniform_costs(&mut rng, 16, 100);
+    let want = assignment::hungarian::Hungarian.solve(&inst).unwrap().weight;
+    for price_updates in [true, false] {
+        let mut driver = PjrtAssignmentDriver::for_size(&reg, 16).unwrap();
+        driver.price_updates = price_updates;
+        let (got, _) = driver.solve(&inst).unwrap();
+        assert_eq!(got.weight, want, "price_updates={price_updates}");
+    }
+}
+
+#[test]
+fn asn_file_roundtrip_preserves_optimum() {
+    let mut rng = Rng::seeded(13);
+    let inst = uniform_costs(&mut rng, 9, 50);
+    let text = dimacs::write_assignment(&inst);
+    let parsed = dimacs::parse_assignment(&text).unwrap();
+    let a = assignment::hungarian::Hungarian.solve(&inst).unwrap();
+    let b = assignment::hungarian::Hungarian.solve(&parsed).unwrap();
+    assert_eq!(a.weight, b.weight);
+}
+
+#[test]
+fn matching_reduction_cardinality_parity() {
+    // Fig. 1's other edge: cardinality matching via max-flow.
+    let mut rng = Rng::seeded(14);
+    for _ in 0..5 {
+        let nx = 3 + rng.index(6);
+        let ny = 3 + rng.index(6);
+        let edges: Vec<Vec<usize>> = (0..nx)
+            .map(|_| (0..ny).filter(|_| rng.chance(0.45)).collect())
+            .collect();
+        let (size, _) = reductions::max_cardinality_matching(
+            nx,
+            ny,
+            &edges,
+            &flowmatch::maxflow::dinic::Dinic,
+        )
+        .unwrap();
+        assert_eq!(
+            size,
+            reductions::matching_to_flow::reference_matching(nx, ny, &edges)
+        );
+    }
+}

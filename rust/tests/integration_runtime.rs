@@ -1,0 +1,142 @@
+//! Integration: PJRT runtime against real AOT artifacts, including the
+//! cross-language parity check (PJRT kernel vs bit-exact native twin).
+//!
+//! Skipped with a note when `make artifacts` has not run.
+
+use flowmatch::gridflow::{self, GridExecutor, NativeGridExecutor};
+use flowmatch::runtime::device::{CsaWireState, GridWireState};
+use flowmatch::runtime::{ArtifactRegistry, CsaDevice, GridDevice};
+use flowmatch::util::Rng;
+use flowmatch::workloads::grid_gen::random_grid;
+
+fn registry() -> Option<ArtifactRegistry> {
+    match ArtifactRegistry::discover() {
+        Ok(reg) if !reg.is_empty() => Some(reg),
+        _ => {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+/// Deterministic 8x8 grid instance in wire form.
+fn demo_grid_state(seed: u64) -> (GridWireState, i64) {
+    let mut rng = Rng::seeded(seed);
+    let net = random_grid(&mut rng, 8, 8, 12, 0.3, 0.3);
+    gridflow::init_state(&net)
+}
+
+#[test]
+fn grid_device_runs_to_quiescence_and_conserves_mass() {
+    let Some(reg) = registry() else { return };
+    let dev = GridDevice::for_shape(&reg, 8, 8).expect("8x8 artifact");
+    let (mut st, excess_total) = demo_grid_state(3);
+
+    let mut sink_total = 0i64;
+    let mut src_total = 0i64;
+    for round in 0.. {
+        assert!(round < 500, "did not converge");
+        let stats = dev.step(&mut st, 64).expect("step");
+        sink_total += stats.sink_flow;
+        src_total += stats.src_flow;
+        if stats.active == 0 {
+            break;
+        }
+    }
+    assert_eq!(sink_total + src_total, excess_total);
+    assert!(st.cap.iter().all(|&c| c >= 0));
+    assert!(st.cap_sink.iter().all(|&c| c >= 0));
+    assert!(st.cap_src.iter().all(|&c| c >= 0));
+}
+
+#[test]
+fn grid_device_outer_zero_is_identity() {
+    let Some(reg) = registry() else { return };
+    let dev = GridDevice::for_shape(&reg, 8, 8).expect("8x8 artifact");
+    let (mut st, _) = demo_grid_state(4);
+    let before = st.clone();
+    let stats = dev.step(&mut st, 0).expect("step");
+    assert_eq!(stats.waves, 0);
+    assert_eq!(st.h, before.h);
+    assert_eq!(st.e, before.e);
+    assert_eq!(st.cap, before.cap);
+}
+
+/// THE cross-language pin: the PJRT artifact and the native Rust twin
+/// must produce *identical* state trajectories, super-step for
+/// super-step.
+#[test]
+fn pjrt_and_native_trajectories_are_bit_identical() {
+    let Some(reg) = registry() else { return };
+    let dev = GridDevice::for_shape(&reg, 8, 8).expect("8x8 artifact");
+    let mut native = NativeGridExecutor::with_k_inner(dev.k_inner);
+
+    let (mut st_dev, _) = demo_grid_state(5);
+    let mut st_nat = st_dev.clone();
+
+    for step in 0..20 {
+        let a = dev.step(&mut st_dev, 2).expect("device step");
+        let b = native.superstep(&mut st_nat, 2).expect("native step");
+        assert_eq!(st_dev.h, st_nat.h, "heights diverged at step {step}");
+        assert_eq!(st_dev.e, st_nat.e, "excess diverged at step {step}");
+        assert_eq!(st_dev.cap, st_nat.cap, "caps diverged at step {step}");
+        assert_eq!(st_dev.cap_sink, st_nat.cap_sink, "sink caps diverged");
+        assert_eq!(st_dev.cap_src, st_nat.cap_src, "src caps diverged");
+        assert_eq!(
+            (a.sink_flow, a.src_flow, a.pushes, a.relabels, a.waves, a.active),
+            (b.sink_flow, b.src_flow, b.pushes, b.relabels, b.waves, b.active),
+            "stats diverged at step {step}"
+        );
+        if a.active == 0 {
+            break;
+        }
+    }
+}
+
+#[test]
+fn csa_device_refines_to_perfect_matching() {
+    let Some(reg) = registry() else { return };
+    let n = 8usize;
+    let dev = CsaDevice::for_size(&reg, n).expect("csa artifact");
+    assert_eq!(dev.n, n);
+
+    let weights: Vec<i64> = (0..n * n).map(|k| ((k * 37 + 11) % 101) as i64).collect();
+    let k = (n + 1) as i64;
+    let cost: Vec<i32> = weights.iter().map(|&w| (-w * k) as i32).collect();
+    let eps0 = weights.iter().max().unwrap() * k;
+
+    let mut st = CsaWireState::fresh(cost.clone(), n);
+    for x in 0..n {
+        let row_min = (0..n).map(|y| st.cost[x * n + y]).min().unwrap();
+        st.px[x] = -row_min - eps0 as i32;
+    }
+
+    for round in 0.. {
+        assert!(round < 500, "refine did not converge");
+        let stats = dev.step(&mut st, eps0 as i32, 64).expect("step");
+        if stats.active() == 0 {
+            break;
+        }
+    }
+    for x in 0..n {
+        let row: i32 = st.f[x * n..(x + 1) * n].iter().sum();
+        assert_eq!(row, 1, "row {x}");
+    }
+    for y in 0..n {
+        let col: i32 = (0..n).map(|x| st.f[x * n + y]).sum();
+        assert_eq!(col, 1, "col {y}");
+    }
+    assert!(st.ex.iter().all(|&e| e == 0));
+    assert!(st.ey.iter().all(|&e| e == 0));
+}
+
+#[test]
+fn registry_discovers_expected_variants() {
+    let Some(reg) = registry() else { return };
+    assert!(reg.grid(8, 8).is_some());
+    assert!(reg.grid(64, 64).is_some());
+    assert!(reg.csa_at_least(8).is_some());
+    // The padding rule returns the smallest artifact that fits.
+    let spec = reg.csa_at_least(20).expect("n>=20 artifact");
+    assert_eq!(spec.dim0, 30, "expected the n=30 artifact for n=20");
+}

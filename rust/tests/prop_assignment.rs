@@ -1,0 +1,173 @@
+//! Property tests for the assignment stack: engine parity, ε-optimality
+//! preservation, price monotonicity, heuristic safety.
+
+use flowmatch::assignment::scaling::{epsilon_schedule, CsaState};
+use flowmatch::assignment::wave::native_wave;
+use flowmatch::assignment::{self, AssignmentSolver};
+use flowmatch::graph::AssignmentInstance;
+use flowmatch::prop::{forall, Config};
+use flowmatch::util::Rng;
+use flowmatch::{prop_assert, prop_assert_eq};
+
+fn random_instance(rng: &mut Rng) -> AssignmentInstance {
+    let n = 1 + rng.index(14);
+    let c = 1 + rng.range_i64(0, 120);
+    let w: Vec<i64> = (0..n * n).map(|_| rng.range_i64(0, c)).collect();
+    AssignmentInstance::new(n, w)
+}
+
+#[test]
+fn prop_all_engines_match_hungarian() {
+    forall(Config::cases(40).seed(0xA10).named("engine parity"), |rng| {
+        let inst = random_instance(rng);
+        let want = assignment::hungarian::Hungarian
+            .solve(&inst)
+            .map_err(|e| e.to_string())?;
+        for engine in assignment::all_engines() {
+            let got = engine.solve(&inst).map_err(|e| format!("{}: {e}", engine.name()))?;
+            prop_assert!(
+                AssignmentInstance::is_permutation(&got.assignment),
+                "{}: not a permutation",
+                engine.name()
+            );
+            prop_assert_eq!(got.weight, want.weight, engine.name());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wave_preserves_eps_optimality_and_monotone_prices() {
+    forall(Config::cases(40).seed(0xA11).named("eps-optimality"), |rng| {
+        let inst = random_instance(rng);
+        if inst.n < 2 {
+            return Ok(());
+        }
+        let (mut st, eps0) = CsaState::new(&inst);
+        let eps = 1 + rng.range_i64(0, eps0);
+        st.reset_refine(eps);
+        st.check_eps_optimal(eps).map_err(|e| e.to_string())?;
+        let mut guard = 0;
+        while st.active_count() > 0 {
+            let px_before = st.px.clone();
+            let py_before = st.py.clone();
+            native_wave(&mut st, eps);
+            st.check_eps_optimal(eps)
+                .map_err(|e| format!("after wave {guard}: {e}"))?;
+            prop_assert!(
+                st.px.iter().zip(&px_before).all(|(a, b)| a <= b),
+                "px increased"
+            );
+            prop_assert!(
+                st.py.iter().zip(&py_before).all(|(a, b)| a <= b),
+                "py increased"
+            );
+            // Structural invariants (paper: e(x) ∈ {0,1}).
+            prop_assert!(st.ex.iter().all(|&e| (0..=1).contains(&e)), "ex out of range");
+            guard += 1;
+            prop_assert!(guard < 500_000, "did not converge");
+        }
+        prop_assert!(st.is_flow(), "quiescent but not a flow");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_price_update_safe_at_any_point() {
+    forall(Config::cases(30).seed(0xA12).named("price update safety"), |rng| {
+        let inst = random_instance(rng);
+        if inst.n < 2 {
+            return Ok(());
+        }
+        let (mut st, eps0) = CsaState::new(&inst);
+        st.reset_refine(eps0);
+        // Run a random number of waves, then the heuristic, then finish.
+        for _ in 0..rng.index(10) {
+            if st.active_count() == 0 {
+                break;
+            }
+            native_wave(&mut st, eps0);
+        }
+        assignment::price_update::price_update(&mut st, eps0);
+        st.check_eps_optimal(eps0)
+            .map_err(|e| format!("after price update: {e}"))?;
+        let mut guard = 0;
+        while st.active_count() > 0 {
+            native_wave(&mut st, eps0);
+            guard += 1;
+            prop_assert!(guard < 500_000, "did not converge after update");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_epsilon_schedule_properties() {
+    forall(Config::cases(60).seed(0xA13).named("eps schedule"), |rng| {
+        let eps0 = 1 + rng.range_i64(0, 1_000_000);
+        let alpha = 2 + rng.range_i64(0, 30);
+        let sched = epsilon_schedule(eps0, alpha);
+        prop_assert_eq!(sched[0], eps0, "starts at eps0");
+        prop_assert_eq!(*sched.last().unwrap(), 1, "ends at 1");
+        prop_assert!(
+            sched.windows(2).all(|w| w[1] < w[0] || w[0] == 1),
+            "not strictly decreasing"
+        );
+        // Length bounded by log_alpha(eps0) + 2.
+        let bound = ((eps0 as f64).log(alpha as f64).ceil() as usize) + 2;
+        prop_assert!(sched.len() <= bound, "schedule too long: {} > {bound}", sched.len());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_padding_preserves_optimum() {
+    forall(Config::cases(30).seed(0xA14).named("padding"), |rng| {
+        let inst = random_instance(rng);
+        let m = inst.n + rng.index(10);
+        let padded = inst.pad(m);
+        let a = assignment::hungarian::Hungarian
+            .solve(&inst)
+            .map_err(|e| e.to_string())?;
+        let b = assignment::hungarian::Hungarian
+            .solve(&padded)
+            .map_err(|e| e.to_string())?;
+        prop_assert_eq!(a.weight, b.weight, "padded optimum differs");
+        // unpad produces a valid, equally-good assignment.
+        let unpadded = inst.unpad_assignment(&b.assignment);
+        prop_assert!(
+            AssignmentInstance::is_permutation(&unpadded),
+            "unpad broke the permutation"
+        );
+        prop_assert_eq!(inst.assignment_weight(&unpadded), a.weight, "unpad weight");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_auction_and_csa_agree_without_reference() {
+    // Cross-engine agreement on larger instances where Hungarian also
+    // runs but we additionally check the two scaling families agree on
+    // op-count sanity: work is positive and bounded by the theory-level
+    // envelope O(n^2 m log(nC)) with a generous constant.
+    forall(Config::cases(15).seed(0xA15).named("work bounds"), |rng| {
+        let n = 4 + rng.index(12);
+        let c = 100;
+        let w: Vec<i64> = (0..n * n).map(|_| rng.range_i64(0, c)).collect();
+        let inst = AssignmentInstance::new(n, w);
+        let got = assignment::csa::SequentialCsa::default()
+            .solve(&inst)
+            .map_err(|e| e.to_string())?;
+        let nn = n as u64;
+        let m = nn * nn;
+        let logterm = (64 - ((nn * (c as u64 + 1)).leading_zeros() as u64)).max(1);
+        let bound = 64 * nn * nn * m * logterm;
+        prop_assert!(got.stats.pushes > 0, "no pushes recorded");
+        prop_assert!(
+            got.stats.pushes + got.stats.relabels <= bound,
+            "work {} exceeds envelope {bound}",
+            got.stats.pushes + got.stats.relabels
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,168 @@
+//! Property tests for the max-flow stack (in-tree `prop` harness):
+//! engine-vs-engine parity with certificates on random instances, wave
+//! invariants, and heuristic safety.
+
+use flowmatch::graph::csr::NetworkBuilder;
+use flowmatch::graph::validate::assert_max_flow;
+use flowmatch::gridflow::{self, native_wave, HybridGridSolver, NativeGridExecutor};
+use flowmatch::maxflow::{self, MaxFlowSolver};
+use flowmatch::prop::{forall, Config};
+use flowmatch::util::Rng;
+use flowmatch::workloads::random_grid;
+use flowmatch::{prop_assert, prop_assert_eq};
+
+/// Random sparse digraph with s = 0, t = n-1.
+fn random_network(rng: &mut Rng) -> flowmatch::graph::FlowNetwork {
+    let n = 4 + rng.index(12);
+    let mut b = NetworkBuilder::new(n, 0, n - 1);
+    let m = n + rng.index(3 * n);
+    for _ in 0..m {
+        let u = rng.index(n);
+        let mut v = rng.index(n);
+        if u == v {
+            v = (v + 1) % n;
+        }
+        b.add_edge(u, v, rng.range_i64(0, 20), 0);
+    }
+    // Guarantee some source/sink incidence.
+    let v1 = 1 + rng.index(n - 2);
+    let c1 = rng.range_i64(1, 20);
+    b.add_edge(0, v1, c1, 0);
+    let v2 = 1 + rng.index(n - 2);
+    let c2 = rng.range_i64(1, 20);
+    b.add_edge(v2, n - 1, c2, 0);
+    b.build().unwrap()
+}
+
+#[test]
+fn prop_engines_agree_with_certificates() {
+    forall(
+        Config::cases(60).seed(0xF10).named("engines agree"),
+        |rng| {
+            let base = random_network(rng);
+            let mut value = None;
+            for engine in maxflow::all_engines() {
+                let mut g = base.clone();
+                let stats = engine
+                    .solve(&mut g)
+                    .map_err(|e| format!("{}: {e}", engine.name()))?;
+                assert_max_flow(&g, stats.value).map_err(|e| format!("{}: {e}", engine.name()))?;
+                match value {
+                    None => value = Some(stats.value),
+                    Some(v) => prop_assert_eq!(stats.value, v, engine.name()),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_grid_hybrid_matches_dinic() {
+    forall(
+        Config::cases(30).seed(0xF11).named("grid hybrid parity"),
+        |rng| {
+            let h = 3 + rng.index(8);
+            let w = 3 + rng.index(8);
+            let cap = 1 + rng.range_i64(0, 30);
+            let net = random_grid(rng, h, w, cap, 0.35, 0.35);
+            let cycle = 1 + rng.index(200);
+            let mut exec = NativeGridExecutor::default();
+            let report = HybridGridSolver::with_cycle(cycle)
+                .solve(&net, &mut exec)
+                .map_err(|e| e.to_string())?;
+            let mut g = net.to_flow_network();
+            let want = maxflow::dinic::Dinic.solve(&mut g).map_err(|e| e.to_string())?;
+            prop_assert_eq!(report.flow, want.value, format!("cycle={cycle} {h}x{w}"));
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_wave_invariants() {
+    forall(Config::cases(60).seed(0xF12).named("wave invariants"), |rng| {
+        let h = 2 + rng.index(7);
+        let w = 2 + rng.index(7);
+        let cap = 1 + rng.range_i64(0, 15);
+        let net = random_grid(rng, h, w, cap, 0.4, 0.4);
+        let (mut st, total) = gridflow::init_state(&net);
+        let mut sink = 0i64;
+        let mut src = 0i64;
+        let waves = 1 + rng.index(50);
+        let mut h_prev = st.h.clone();
+        for _ in 0..waves {
+            let wstat = native_wave(&mut st);
+            sink += wstat.sink_flow;
+            src += wstat.src_flow;
+            // Mass conservation.
+            let excess_sum: i64 = st.e.iter().map(|&e| e as i64).sum();
+            prop_assert_eq!(excess_sum + sink + src, total, "mass");
+            // Heights monotone.
+            prop_assert!(
+                st.h.iter().zip(&h_prev).all(|(a, b)| a >= b),
+                "height decreased"
+            );
+            // Caps non-negative.
+            prop_assert!(st.cap.iter().all(|&c| c >= 0), "negative residual");
+            prop_assert!(st.cap_sink.iter().all(|&c| c >= 0), "negative sink cap");
+            prop_assert!(st.cap_src.iter().all(|&c| c >= 0), "negative src cap");
+            h_prev = st.h.clone();
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lockfree_any_thread_count() {
+    forall(
+        Config::cases(25).seed(0xF13).named("lockfree threads"),
+        |rng| {
+            let base = random_network(rng);
+            let mut g0 = base.clone();
+            let want = maxflow::dinic::Dinic.solve(&mut g0).map_err(|e| e.to_string())?;
+            let threads = 1 + rng.index(4);
+            let mut g = base.clone();
+            let stats = maxflow::lockfree::LockFree::with_threads(threads)
+                .solve(&mut g)
+                .map_err(|e| e.to_string())?;
+            prop_assert_eq!(stats.value, want.value, format!("threads={threads}"));
+            assert_max_flow(&g, stats.value).map_err(|e| e.to_string())?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_global_relabel_heights_are_valid_distances() {
+    forall(
+        Config::cases(40).seed(0xF14).named("global relabel validity"),
+        |rng| {
+            let base = random_network(rng);
+            let mut g = base.clone();
+            // Push some arbitrary flow via a few augmentations.
+            let _ = maxflow::edmonds_karp::EdmondsKarp.solve(&mut g);
+            let mut h = vec![0i64; g.node_count()];
+            maxflow::global_relabel::global_relabel(&g, &mut h);
+            // Validity: every residual arc satisfies h(u) <= h(v) + 1...
+            for u in 0..g.node_count() {
+                for &e in g.out_edges(u) {
+                    if g.residual(e) > 0 && u != g.source() {
+                        let v = g.edge_head(e);
+                        // ...unless u was gap-lifted to n (excluded from
+                        // useful work by construction).
+                        if h[u] < g.node_count() as i64 {
+                            prop_assert!(
+                                h[u] <= h[v] + 1,
+                                "invalid labelling: h({u})={} h({v})={}",
+                                h[u],
+                                h[v]
+                            );
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
