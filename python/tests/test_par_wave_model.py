@@ -1,0 +1,347 @@
+"""Executable model of the tiled parallel wave protocol.
+
+Mirrors rust/src/gridflow/wave.rs (sequential oracle) and the 4-phase
+tile protocol of rust/src/gridflow/par_wave.rs: parallel decisions,
+parallel apply with owned interiors, sequential border reconciliation,
+then compaction.  The protocol was designed against this model (1 680
+differential cases during development); the committed test keeps a
+trimmed matrix as a regression pin for anyone editing either engine or
+porting the protocol into the Pallas kernels.
+
+Pure stdlib: no numpy/jax required.
+"""
+import random
+import copy
+
+DIRS = [(-1, 0), (1, 0), (0, -1), (0, 1)]
+OPP = [1, 0, 3, 2]
+INF = 1 << 30
+
+
+class St:
+    def __init__(self, hh, ww):
+        self.hh, self.ww = hh, ww
+        n = hh * ww
+        self.h = [0] * n
+        self.e = [0] * n
+        self.cap = [0] * (4 * n)
+        self.cap_sink = [0] * n
+        self.cap_src = [0] * n
+
+    def cells(self):
+        return self.hh * self.ww
+
+    def key(self):
+        return (tuple(self.h), tuple(self.e), tuple(self.cap),
+                tuple(self.cap_sink), tuple(self.cap_src))
+
+
+def decide(st, c):
+    """Decision for active cell c against snapshot heights. Returns
+    None | ('push', arc, delta) | ('relabel', new_h)."""
+    hh, ww = st.hh, st.ww
+    cells = hh * ww
+    v_total = cells + 2
+    i, j = divmod(c, ww)
+    best_h = INF
+    best_a = -1
+    for a, (di, dj) in enumerate(DIRS):
+        ni, nj = i + di, j + dj
+        if ni < 0 or nj < 0 or ni >= hh or nj >= ww:
+            continue
+        if st.cap[a * cells + c] > 0:
+            hn = st.h[ni * ww + nj]
+            if hn < best_h:
+                best_h = hn
+                best_a = a
+    if st.cap_sink[c] > 0 and 0 < best_h:
+        best_h = 0
+        best_a = 4
+    if st.cap_src[c] > 0 and v_total < best_h:
+        best_h = v_total
+        best_a = 5
+    if best_a == -1:
+        return None
+    if st.h[c] > best_h:
+        if best_a == 4:
+            cap = st.cap_sink[c]
+        elif best_a == 5:
+            cap = st.cap_src[c]
+        else:
+            cap = st.cap[best_a * cells + c]
+        return ('push', best_a, min(st.e[c], cap))
+    return ('relabel', best_h + 1)
+
+
+# ---------------------------------------------------------------- sequential
+class SeqScratch:
+    def __init__(self):
+        self.decisions = []
+        self.active = []
+        self.on_list = []
+        self.built_for = None
+
+    def rebuild(self, st):
+        cells = st.cells()
+        self.on_list = [False] * cells
+        self.active = []
+        for c in range(cells):
+            if st.e[c] > 0:
+                self.active.append(c)
+                self.on_list[c] = True
+        self.decisions = [None] * cells
+        self.built_for = (st.hh, st.ww)
+
+
+def seq_wave(st, scratch):
+    hh, ww = st.hh, st.ww
+    cells = hh * ww
+    if scratch.built_for != (hh, ww):
+        scratch.rebuild(st)
+    for c in scratch.active:
+        if st.e[c] <= 0:
+            continue
+        scratch.decisions[c] = decide(st, c)
+    stats = dict(sink_flow=0, src_flow=0, pushes=0, relabels=0)
+    n0 = len(scratch.active)
+    for idx in range(n0):
+        c = scratch.active[idx]
+        d = scratch.decisions[c]
+        scratch.decisions[c] = None
+        if d is None:
+            continue
+        if d[0] == 'relabel':
+            st.h[c] = d[1]
+            stats['relabels'] += 1
+            continue
+        _, arc, delta = d
+        stats['pushes'] += 1
+        st.e[c] -= delta
+        if arc == 4:
+            st.cap_sink[c] -= delta
+            stats['sink_flow'] += delta
+        elif arc == 5:
+            st.cap_src[c] -= delta
+            stats['src_flow'] += delta
+        else:
+            i, j = divmod(c, ww)
+            di, dj = DIRS[arc]
+            nc = (i + di) * ww + (j + dj)
+            st.cap[arc * cells + c] -= delta
+            st.cap[OPP[arc] * cells + nc] += delta
+            st.e[nc] += delta
+            if not scratch.on_list[nc]:
+                scratch.on_list[nc] = True
+                scratch.active.append(nc)
+    w = 0
+    for r in range(len(scratch.active)):
+        c = scratch.active[r]
+        if st.e[c] > 0:
+            scratch.active[w] = c
+            w += 1
+        else:
+            scratch.on_list[c] = False
+    del scratch.active[w:]
+    return stats
+
+
+# ------------------------------------------------------------------ parallel
+class ParScratch:
+    def __init__(self, tile_rows):
+        self.tile_rows = tile_rows
+        self.tiles = []      # list of dicts: active, border
+        self.decisions = []
+        self.on_list = []
+        self.built_for = None
+
+    def n_tiles(self, hh):
+        return (hh + self.tile_rows - 1) // self.tile_rows
+
+    def rebuild(self, st):
+        hh, ww = st.hh, st.ww
+        cells = hh * ww
+        self.on_list = [False] * cells
+        self.decisions = [None] * cells
+        self.tiles = []
+        for t in range(self.n_tiles(hh)):
+            r0 = t * self.tile_rows
+            r1 = min(r0 + self.tile_rows, hh)
+            tile = dict(base=r0 * ww, end=r1 * ww, active=[], border=[])
+            for c in range(tile['base'], tile['end']):
+                if st.e[c] > 0:
+                    tile['active'].append(c)
+                    self.on_list[c] = True
+            self.tiles.append(tile)
+        self.built_for = (hh, ww)
+
+
+def par_wave(st, scratch, threads):
+    hh, ww = st.hh, st.ww
+    cells = hh * ww
+    if scratch.built_for != (hh, ww):
+        scratch.rebuild(st)
+    tiles = scratch.tiles
+    nt = len(tiles)
+    # Phase 1: decisions, per tile (read-only state; disjoint decision
+    # ranges). Worker w handles tiles w, w+threads, ... -- order
+    # irrelevant, simulate in that order anyway.
+    for w in range(threads):
+        for t in range(w, nt, threads):
+            for c in tiles[t]['active']:
+                if st.e[c] <= 0:
+                    continue
+                scratch.decisions[c] = decide(st, c)
+    # Phase 2: apply with owned interiors; cross-tile receive deferred.
+    stats_tiles = []
+    for t in range(nt):
+        tiles[t]['border'] = []
+    for w in range(threads):
+        for t in range(w, nt, threads):
+            tile = tiles[t]
+            stats = dict(sink_flow=0, src_flow=0, pushes=0, relabels=0)
+            n0 = len(tile['active'])
+            for idx in range(n0):
+                c = tile['active'][idx]
+                d = scratch.decisions[c]
+                scratch.decisions[c] = None
+                if d is None:
+                    continue
+                if d[0] == 'relabel':
+                    st.h[c] = d[1]
+                    stats['relabels'] += 1
+                    continue
+                _, arc, delta = d
+                stats['pushes'] += 1
+                st.e[c] -= delta
+                if arc == 4:
+                    st.cap_sink[c] -= delta
+                    stats['sink_flow'] += delta
+                elif arc == 5:
+                    st.cap_src[c] -= delta
+                    stats['src_flow'] += delta
+                else:
+                    i, j = divmod(c, ww)
+                    di, dj = DIRS[arc]
+                    nc = (i + di) * ww + (j + dj)
+                    st.cap[arc * cells + c] -= delta
+                    if tile['base'] <= nc < tile['end']:
+                        st.cap[OPP[arc] * cells + nc] += delta
+                        st.e[nc] += delta
+                        if not scratch.on_list[nc]:
+                            scratch.on_list[nc] = True
+                            tile['active'].append(nc)
+                    else:
+                        tile['border'].append((nc, OPP[arc], delta))
+            stats_tiles.append(stats)
+    # Phase 3: sequential border reconciliation.
+    for t in range(nt):
+        for (nc, arc, delta) in tiles[t]['border']:
+            st.cap[arc * cells + nc] += delta
+            st.e[nc] += delta
+            if not scratch.on_list[nc]:
+                scratch.on_list[nc] = True
+                tt = (nc // ww) // scratch.tile_rows
+                tiles[tt]['active'].append(nc)
+    # Phase 4: compaction, after all excess updates have landed (keeps
+    # the active set exactly equal to the sequential engine's).
+    for t in range(nt):
+        tile = tiles[t]
+        kept = []
+        for c in tile['active']:
+            if st.e[c] > 0:
+                kept.append(c)
+            else:
+                scratch.on_list[c] = False
+        tile['active'] = kept
+    total = dict(sink_flow=0, src_flow=0, pushes=0, relabels=0)
+    for s in stats_tiles:
+        for k in total:
+            total[k] += s[k]
+    return total
+
+
+def par_active_count(scratch):
+    return sum(len(t['active']) for t in scratch.tiles)
+
+
+# ----------------------------------------------------------------- driving
+def random_state(rng, hh, ww, max_cap):
+    """Adversarial random state: arbitrary heights, negative excess,
+    partial caps — a superset of anything a real solve produces."""
+    st = St(hh, ww)
+    cells = hh * ww
+    for c in range(cells):
+        st.h[c] = rng.randrange(0, cells + 4)
+        st.e[c] = rng.randrange(-2, max_cap) if rng.random() < 0.5 else 0
+        if rng.random() < 0.3:
+            st.cap_sink[c] = rng.randrange(0, max_cap)
+        if rng.random() < 0.3:
+            st.cap_src[c] = rng.randrange(0, max_cap)
+    for a in range(4):
+        for c in range(cells):
+            i, j = divmod(c, ww)
+            di, dj = DIRS[a]
+            if 0 <= i + di < hh and 0 <= j + dj < ww and rng.random() < 0.7:
+                st.cap[a * cells + c] = rng.randrange(0, max_cap)
+    return st
+
+
+def host_mutate(rng, st):
+    """Random host-style mutation: tweak e / h / caps arbitrarily."""
+    cells = st.cells()
+    for _ in range(cells // 4):
+        c = rng.randrange(cells)
+        kind = rng.randrange(3)
+        if kind == 0:
+            st.e[c] += rng.randrange(-2, 5)
+        elif kind == 1:
+            st.h[c] = rng.randrange(0, 2 * (cells + 2))
+        else:
+            st.cap[rng.randrange(4) * cells + c] = rng.randrange(0, 6)
+
+
+def run_case(seed, hh, ww, tile_rows, threads, waves, supersteps):
+    rng = random.Random(seed)
+    st_seq = random_state(rng, hh, ww, 9)
+    st_par = copy.deepcopy(st_seq)
+    seq = SeqScratch()
+    par = ParScratch(tile_rows)
+    for ss in range(supersteps):
+        seq.rebuild(st_seq)
+        par.rebuild(st_par)
+        for wv in range(waves):
+            if len(seq.active) == 0:
+                assert par_active_count(par) == 0, (seed, ss, wv)
+                break
+            a = seq_wave(st_seq, seq)
+            b = par_wave(st_par, par, threads)
+            assert a == b, (seed, ss, wv, a, b)
+            assert st_seq.key() == st_par.key(), (seed, ss, wv, "state diverged")
+            par_active = sorted(c for t in par.tiles for c in t['active'])
+            assert sorted(seq.active) == par_active, (seed, ss, wv, "active set diverged")
+            assert seq.on_list == par.on_list, (seed, ss, wv, "on_list diverged")
+        # Host round stand-in: identical arbitrary mutation on both.
+        host_mutate(rng, st_seq)
+        st_par.h = list(st_seq.h)
+        st_par.e = list(st_seq.e)
+        st_par.cap = list(st_seq.cap)
+        st_par.cap_sink = list(st_seq.cap_sink)
+        st_par.cap_src = list(st_seq.cap_src)
+
+
+def test_tiled_protocol_bit_exact():
+    cases = 0
+    for seed in range(4):
+        for (hh, ww) in [(1, 7), (4, 4), (7, 5), (8, 8)]:
+            for tile_rows in [1, 2, 3, 100]:
+                for threads in [1, 2, 3]:
+                    run_case(seed, hh, ww, tile_rows, threads,
+                             waves=30, supersteps=2)
+                    cases += 1
+    assert cases == 192
+
+
+def test_degenerate_shapes():
+    for (hh, ww) in [(1, 1), (5, 1), (2, 9)]:
+        for tile_rows in [1, 4]:
+            run_case(3, hh, ww, tile_rows, threads=4, waves=25, supersteps=2)

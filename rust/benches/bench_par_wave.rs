@@ -1,0 +1,109 @@
+//! Parallel tiled wave engine sweep: thread-count × tile-rows × grid
+//! size, sequential twin as baseline.  Measures raw wave throughput
+//! (fixed wave budget on a prepared state) rather than full solves, so
+//! the numbers isolate the engine the tentpole changed.
+//!
+//! Emits the markdown table plus benchkit JSON (default
+//! `benches/data/bench_par_wave.json`, override with
+//! `FLOWMATCH_BENCH_JSON`) so the next PR has a perf trajectory to
+//! compare against.
+
+use flowmatch::benchkit::{write_json, Cell, Measure, Table};
+use flowmatch::gridflow::wave::{native_wave_with, WaveScratch};
+use flowmatch::gridflow::{host, init_state, par_wave_with, ParWaveScratch};
+use flowmatch::runtime::device::GridWireState;
+use flowmatch::util::stats::Summary;
+use flowmatch::util::Rng;
+use flowmatch::workloads::random_grid;
+
+/// Init + exact heights: the state every engine starts from.
+fn prepared_state(seed: u64, h: usize, w: usize) -> GridWireState {
+    let mut rng = Rng::seeded(seed);
+    let net = random_grid(&mut rng, h, w, 30, 0.25, 0.25);
+    let (mut st, _) = init_state(&net);
+    host::global_relabel(&mut st);
+    st
+}
+
+fn run_seq(st0: &GridWireState, waves: usize) -> i64 {
+    let mut st = st0.clone();
+    let mut scratch = WaveScratch::default();
+    let mut pushes = 0;
+    for _ in 0..waves {
+        pushes += native_wave_with(&mut st, &mut scratch).pushes;
+    }
+    pushes
+}
+
+fn run_par(st0: &GridWireState, waves: usize, threads: usize, tile_rows: usize) -> i64 {
+    let mut st = st0.clone();
+    let mut scratch = ParWaveScratch::new(tile_rows);
+    let mut pushes = 0;
+    for _ in 0..waves {
+        pushes += par_wave_with(&mut st, &mut scratch, threads).pushes;
+    }
+    pushes
+}
+
+fn main() {
+    let measure = Measure::default().from_env();
+    let fast = std::env::var("FLOWMATCH_BENCH_FAST").as_deref() == Ok("1");
+    let sizes: &[usize] = if fast { &[64, 128] } else { &[128, 256, 512] };
+    let waves = 96usize;
+
+    let mut table = Table::new(
+        &format!("Parallel tiled wave engine: threads x tile_rows sweep ({waves} waves)"),
+        &[
+            "grid", "engine", "threads", "tile_rows", "pushes", "time", "speedup",
+        ],
+    );
+
+    for &size in sizes {
+        let st0 = prepared_state(9, size, size);
+        let seq_pushes = run_seq(&st0, waves);
+        let seq_times = measure.run(|| run_seq(&st0, waves));
+        let seq_summary = Summary::of(&seq_times).unwrap();
+        let seq_mean = seq_summary.mean;
+        table.row(vec![
+            format!("{size}x{size}").into(),
+            "native".into(),
+            Cell::Int(1),
+            Cell::Missing,
+            Cell::Int(seq_pushes),
+            seq_summary.into(),
+            Cell::Float(1.0),
+        ]);
+        for &threads in &[1usize, 2, 4] {
+            for &tile_rows in &[8usize, 16, 32] {
+                // The differential contract, enforced even while
+                // benchmarking: identical work counters.
+                let par_pushes = run_par(&st0, waves, threads, tile_rows);
+                assert_eq!(
+                    par_pushes, seq_pushes,
+                    "parallel engine diverged at {size}x{size} t={threads} tr={tile_rows}"
+                );
+                let times = measure.run(|| run_par(&st0, waves, threads, tile_rows));
+                let summary = Summary::of(&times).unwrap();
+                let speedup = seq_mean / summary.mean;
+                table.row(vec![
+                    format!("{size}x{size}").into(),
+                    "native-par".into(),
+                    Cell::Int(threads as i64),
+                    Cell::Int(tile_rows as i64),
+                    Cell::Int(par_pushes),
+                    summary.into(),
+                    Cell::Float(speedup),
+                ]);
+            }
+        }
+    }
+
+    table.print();
+    let path = std::env::var("FLOWMATCH_BENCH_JSON")
+        .unwrap_or_else(|_| "benches/data/bench_par_wave.json".to_string());
+    let path = std::path::PathBuf::from(path);
+    match write_json(&path, &[&table]) {
+        Ok(()) => println!("\nbenchkit JSON written to {}", path.display()),
+        Err(e) => eprintln!("\nwarning: could not write benchkit JSON: {e}"),
+    }
+}

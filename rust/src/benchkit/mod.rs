@@ -174,6 +174,87 @@ impl Table {
     pub fn print(&self) {
         print!("{}", self.render());
     }
+
+    /// Render the table as a JSON object (no `serde` in the image):
+    /// `{"title": ..., "headers": [...], "rows": [[cell, ...], ...]}`.
+    /// Time cells become objects carrying the full summary.
+    pub fn to_json(&self) -> String {
+        let headers: Vec<String> = self.headers.iter().map(|h| json_string(h)).collect();
+        let rows: Vec<String> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let cells: Vec<String> = r.iter().map(Cell::to_json).collect();
+                format!("[{}]", cells.join(","))
+            })
+            .collect();
+        format!(
+            "{{\"title\":{},\"headers\":[{}],\"rows\":[{}]}}",
+            json_string(&self.title),
+            headers.join(","),
+            rows.join(",")
+        )
+    }
+}
+
+impl Cell {
+    fn to_json(&self) -> String {
+        match self {
+            Cell::Text(s) => json_string(s),
+            Cell::Int(v) => v.to_string(),
+            Cell::Float(v) => json_f64(*v),
+            Cell::Time(s) => format!(
+                "{{\"mean\":{},\"stddev\":{},\"min\":{},\"p50\":{},\"p90\":{},\"p99\":{},\"max\":{},\"count\":{}}}",
+                json_f64(s.mean),
+                json_f64(s.stddev),
+                json_f64(s.min),
+                json_f64(s.p50),
+                json_f64(s.p90),
+                json_f64(s.p99),
+                json_f64(s.max),
+                s.count
+            ),
+            Cell::Missing => "null".to_string(),
+        }
+    }
+}
+
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// f64 to JSON (JSON has no NaN/Inf; map them to null).
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Write tables as a JSON array to `path`, creating parent directories.
+/// Every bench that sweeps a tunable emits one of these so later PRs
+/// have a machine-readable perf trajectory to diff against.
+pub fn write_json(path: &std::path::Path, tables: &[&Table]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let body: Vec<String> = tables.iter().map(|t| t.to_json()).collect();
+    std::fs::write(path, format!("[{}]\n", body.join(",\n")))
 }
 
 #[cfg(test)]
@@ -211,5 +292,34 @@ mod tests {
     fn row_width_checked() {
         let mut t = Table::new("demo", &["a", "b"]);
         t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn json_escapes_and_shapes() {
+        let mut t = Table::new("q\"t\\n", &["name", "n", "time"]);
+        t.row(vec![
+            "se\tq".into(),
+            Cell::Int(-3),
+            Cell::Time(Summary::of(&[0.5, 1.5]).unwrap()),
+        ]);
+        t.row(vec![Cell::Missing, Cell::Float(0.25), "x".into()]);
+        let s = t.to_json();
+        assert!(s.starts_with("{\"title\":\"q\\\"t\\\\n\""), "{s}");
+        assert!(s.contains("\"headers\":[\"name\",\"n\",\"time\"]"), "{s}");
+        assert!(s.contains("\"se\\tq\",-3,{\"mean\":1"), "{s}");
+        assert!(s.contains("null,0.25,\"x\""), "{s}");
+    }
+
+    #[test]
+    fn json_written_to_disk() {
+        let mut t = Table::new("disk", &["a"]);
+        t.row(vec![Cell::Int(7)]);
+        let dir = std::env::temp_dir().join("flowmatch_benchkit_test");
+        let path = dir.join("nested").join("out.json");
+        write_json(&path, &[&t]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with('['));
+        assert!(text.contains("\"title\":\"disk\""));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -114,15 +114,20 @@ fn strip_comment(line: &str) -> &str {
 /// Built-in presets for the launcher (`--preset`).
 pub fn preset(name: &str) -> Result<Config> {
     let text = match name {
-        // The paper's §5.5/§6 operating point.
+        // The paper's §5.5/§6 operating point.  `engine` picks the grid
+        // device phase: auto (PJRT if an artifact matches, else native),
+        // native, or native-par (the tiled multi-threaded twin with
+        // `threads` workers over `tile_rows`-row stripes).
         "paper" => {
             "[assign]\nalpha = 10\nmax_n = 30\nmax_weight = 100\ncycle = 1024\n\
-             [maxflow]\ncycle = 7000\nheuristics = true\n"
+             [maxflow]\ncycle = 7000\nheuristics = true\nengine = \"auto\"\n\
+             threads = 4\ntile_rows = 16\n"
         }
         // Small smoke setting for CI.
         "smoke" => {
             "[assign]\nalpha = 10\nmax_n = 8\nmax_weight = 20\ncycle = 64\n\
-             [maxflow]\ncycle = 64\nheuristics = true\n"
+             [maxflow]\ncycle = 64\nheuristics = true\nengine = \"auto\"\n\
+             threads = 2\ntile_rows = 4\n"
         }
         other => bail!("unknown preset {other:?} (try: paper, smoke)"),
     };
@@ -167,6 +172,9 @@ mod tests {
         let p = preset("paper").unwrap();
         assert_eq!(p.get_i64("maxflow.cycle", 0).unwrap(), 7000);
         assert_eq!(p.get_i64("assign.alpha", 0).unwrap(), 10);
+        assert_eq!(p.get("maxflow.engine"), Some("auto"));
+        assert_eq!(p.get_usize("maxflow.threads", 0).unwrap(), 4);
+        assert_eq!(p.get_usize("maxflow.tile_rows", 0).unwrap(), 16);
         assert!(preset("nope").is_err());
     }
 }

@@ -1,11 +1,15 @@
 //! Grid max-flow driver: pick the device phase (PJRT artifact when one
-//! matches the shape, native wave engine otherwise) and run the hybrid
-//! scheme.  This is Algorithm 4.6 with PJRT in the CUDA role.
+//! matches the shape, a native wave engine otherwise) and run the hybrid
+//! scheme.  This is Algorithm 4.6 with PJRT in the CUDA role; the tiled
+//! multi-threaded engine stands in when several host cores are the best
+//! hardware available.
 
 use anyhow::Result;
 
 use crate::graph::GridNetwork;
-use crate::gridflow::{GridSolveReport, HybridGridSolver, NativeGridExecutor};
+use crate::gridflow::{
+    GridSolveReport, HybridGridSolver, NativeGridExecutor, NativeParGridExecutor,
+};
 use crate::runtime::{ArtifactRegistry, GridDevice};
 
 /// Which device phase backed a solve.
@@ -13,6 +17,19 @@ use crate::runtime::{ArtifactRegistry, GridDevice};
 pub enum Backend {
     Pjrt,
     Native,
+    NativePar,
+}
+
+/// Device-phase selection for [`solve_grid_with`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GridEngine {
+    /// PJRT artifact when one matches the shape, else the sequential
+    /// native twin.
+    Auto,
+    /// Force the single-threaded native twin.
+    Native,
+    /// Force the multi-threaded tiled engine (bit-exact with `Native`).
+    NativePar { threads: usize, tile_rows: usize },
 }
 
 /// Solve `net` with the hybrid scheme; prefers the PJRT artifact.
@@ -22,7 +39,30 @@ pub fn solve_grid(
     cycle_waves: usize,
     registry: Option<&ArtifactRegistry>,
 ) -> Result<(GridSolveReport, Backend)> {
+    solve_grid_with(net, cycle_waves, registry, GridEngine::Auto)
+}
+
+/// Solve `net` with an explicit device-phase choice.
+pub fn solve_grid_with(
+    net: &GridNetwork,
+    cycle_waves: usize,
+    registry: Option<&ArtifactRegistry>,
+    engine: GridEngine,
+) -> Result<(GridSolveReport, Backend)> {
     let solver = HybridGridSolver::with_cycle(cycle_waves);
+    match engine {
+        GridEngine::NativePar { threads, tile_rows } => {
+            let mut exec = NativeParGridExecutor::new(threads, tile_rows);
+            let report = solver.solve(net, &mut exec)?;
+            return Ok((report, Backend::NativePar));
+        }
+        GridEngine::Native => {
+            let mut exec = NativeGridExecutor::default();
+            let report = solver.solve(net, &mut exec)?;
+            return Ok((report, Backend::Native));
+        }
+        GridEngine::Auto => {}
+    }
     if let Some(reg) = registry {
         if let Ok(mut dev) = GridDevice::for_shape(reg, net.height, net.width) {
             let report = solver.solve(net, &mut dev)?;
@@ -50,5 +90,25 @@ mod tests {
         let mut g = net.to_flow_network();
         let want = Dinic.solve(&mut g).unwrap();
         assert_eq!(report.flow, want.value);
+    }
+
+    #[test]
+    fn forced_parallel_engine_matches_baseline() {
+        let mut rng = Rng::seeded(78);
+        let net = random_grid(&mut rng, 7, 9, 10, 0.3, 0.3);
+        let (seq, b0) = solve_grid_with(&net, 128, None, GridEngine::Native).unwrap();
+        assert_eq!(b0, Backend::Native);
+        for (threads, tile_rows) in [(1, 2), (2, 3), (4, 16)] {
+            let (par, b1) = solve_grid_with(
+                &net,
+                128,
+                None,
+                GridEngine::NativePar { threads, tile_rows },
+            )
+            .unwrap();
+            assert_eq!(b1, Backend::NativePar);
+            assert_eq!(par.flow, seq.flow, "t={threads} tr={tile_rows}");
+            assert_eq!(par.waves, seq.waves, "t={threads} tr={tile_rows}");
+        }
     }
 }

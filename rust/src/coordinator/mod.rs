@@ -8,6 +8,6 @@ pub mod metrics;
 pub mod server;
 
 pub use assignment_driver::{PjrtAssignmentDriver, SolveTelemetry};
-pub use maxflow_driver::solve_grid;
+pub use maxflow_driver::{solve_grid, solve_grid_with, Backend, GridEngine};
 pub use metrics::LatencyRecorder;
 pub use server::{AssignmentService, ServiceConfig, ServiceReply, ServiceReport};

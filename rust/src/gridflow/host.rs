@@ -4,6 +4,15 @@
 //!
 //! In the paper this is the C procedure the CUDA kernel returns control
 //! to every CYCLE iterations; here it runs between PJRT super-steps.
+//!
+//! PERF: the passes are frontier-seeded instead of full-grid scans.
+//! Violation cancelling visits only cells that currently hold excess
+//! (cancelling exists to return trapped excess; an arc at an excess-free
+//! cell moves no mass a wave could not move itself), and the two BFS
+//! passes seed from cached terminal-cell lists — residual terminal
+//! capacity only ever shrinks during a solve, so the cells with initial
+//! `cap_sink/cap_src > 0` are a fixed superset.  [`HostScratch`] also
+//! reuses the distance/queue buffers across rounds.
 
 use std::collections::VecDeque;
 
@@ -23,59 +32,117 @@ pub struct HostRoundStats {
     pub src_returned: i64,
 }
 
+/// Per-solve host scratch: cached terminal seed lists plus reusable BFS
+/// buffers.  Build once per solve with [`HostScratch::for_state`] — the
+/// terminal caches are supersets only for states whose terminal caps
+/// never grow, which holds within a solve but not across solves.
+#[derive(Debug, Default)]
+pub struct HostScratch {
+    /// Cells whose sink arc had residual capacity at construction time
+    /// (a fixed superset of the current sink frontier).
+    sink_cells: Vec<u32>,
+    /// Same for source arcs.
+    src_cells: Vec<u32>,
+    /// Snapshot of the excess-bearing cells taken by `cancel_violations_with`.
+    active: Vec<u32>,
+    dist: Vec<i32>,
+    dist_s: Vec<i32>,
+    queue: VecDeque<usize>,
+}
+
+impl HostScratch {
+    pub fn for_state(st: &GridWireState) -> Self {
+        let cells = st.cells();
+        let mut sink_cells = Vec::new();
+        let mut src_cells = Vec::new();
+        for c in 0..cells {
+            if st.cap_sink[c] > 0 {
+                sink_cells.push(c as u32);
+            }
+            if st.cap_src[c] > 0 {
+                src_cells.push(c as u32);
+            }
+        }
+        Self {
+            sink_cells,
+            src_cells,
+            ..Default::default()
+        }
+    }
+}
+
 /// Cancel residual arcs with `h(x) > h(y) + 1` by pushing their full
-/// residual (Algorithm 4.8 lines 1-6).  Terminal arcs: the sink counts as
-/// height 0 (never violated: pushing to the sink is always allowed), the
-/// source as height |V|.
-pub fn cancel_violations(st: &mut GridWireState) -> (u64, i64) {
+/// residual (Algorithm 4.8 lines 1-6), seeded from the excess frontier:
+/// only cells with `e > 0` are visited (snapshot taken before any
+/// cancel, in cell order — cells a cancel activates are handled by the
+/// waves or the next round).  Terminal arcs: the sink counts as height 0
+/// (never violated: pushing to the sink is always allowed), the source
+/// as height |V|.
+pub fn cancel_violations_with(st: &mut GridWireState, scratch: &mut HostScratch) -> (u64, i64) {
     let (hh, ww) = (st.height, st.width);
     let cells = hh * ww;
     let v_total = (cells + 2) as i64;
+    scratch.active.clear();
+    for c in 0..cells {
+        if st.e[c] > 0 {
+            scratch.active.push(c as u32);
+        }
+    }
     let mut cancelled = 0;
     let mut src_returned = 0i64;
-    for i in 0..hh {
-        for j in 0..ww {
-            let c = i * ww + j;
-            for (a, &(di, dj)) in DIRS.iter().enumerate() {
-                let (ni, nj) = (i as i64 + di, j as i64 + dj);
-                if ni < 0 || nj < 0 || ni >= hh as i64 || nj >= ww as i64 {
-                    continue;
-                }
-                let nc = (ni as usize) * ww + nj as usize;
-                let r = st.cap[a * cells + c];
-                if r > 0 && (st.h[c] as i64) > st.h[nc] as i64 + 1 {
-                    st.cap[a * cells + c] = 0;
-                    st.cap[OPP[a] * cells + nc] += r;
-                    st.e[c] -= r;
-                    st.e[nc] += r;
-                    cancelled += 1;
-                }
+    for &c in &scratch.active {
+        let c = c as usize;
+        let (i, j) = (c / ww, c % ww);
+        for (a, &(di, dj)) in DIRS.iter().enumerate() {
+            let (ni, nj) = (i as i64 + di, j as i64 + dj);
+            if ni < 0 || nj < 0 || ni >= hh as i64 || nj >= ww as i64 {
+                continue;
             }
-            // Source arc: violation when h(x) > |V| + 1.
-            let r = st.cap_src[c];
-            if r > 0 && (st.h[c] as i64) > v_total + 1 {
-                st.cap_src[c] = 0;
+            let nc = (ni as usize) * ww + nj as usize;
+            let r = st.cap[a * cells + c];
+            if r > 0 && (st.h[c] as i64) > st.h[nc] as i64 + 1 {
+                st.cap[a * cells + c] = 0;
+                st.cap[OPP[a] * cells + nc] += r;
                 st.e[c] -= r;
-                src_returned += r as i64;
+                st.e[nc] += r;
                 cancelled += 1;
             }
+        }
+        // Source arc: violation when h(x) > |V| + 1.
+        let r = st.cap_src[c];
+        if r > 0 && (st.h[c] as i64) > v_total + 1 {
+            st.cap_src[c] = 0;
+            st.e[c] -= r;
+            src_returned += r as i64;
+            cancelled += 1;
         }
     }
     (cancelled, src_returned)
 }
 
+/// Allocating wrapper around [`cancel_violations_with`].
+pub fn cancel_violations(st: &mut GridWireState) -> (u64, i64) {
+    let mut scratch = HostScratch::for_state(st);
+    cancel_violations_with(st, &mut scratch)
+}
+
 /// Global relabel: heights become exact BFS distances to the sink in the
 /// residual graph; unreached cells are parked at |V| (gap relabeling,
-/// §4.6 "for each unvisited node ... sets its height to |V|").
-pub fn global_relabel(st: &mut GridWireState) -> HostRoundStats {
+/// §4.6 "for each unvisited node ... sets its height to |V|").  Seeds
+/// come from the scratch's cached terminal lists.
+pub fn global_relabel_with(st: &mut GridWireState, scratch: &mut HostScratch) -> HostRoundStats {
     let (hh, ww) = (st.height, st.width);
     let cells = hh * ww;
     let v_total = (cells + 2) as i32;
 
-    let mut dist = vec![-1i32; cells];
-    let mut q = VecDeque::new();
+    let dist = &mut scratch.dist;
+    dist.clear();
+    dist.resize(cells, -1);
+    let q = &mut scratch.queue;
+    q.clear();
     // Distance 1: cells with residual arc to the sink.
-    for c in 0..cells {
+    for &c in &scratch.sink_cells {
+        let c = c as usize;
         if st.cap_sink[c] > 0 {
             dist[c] = 1;
             q.push_back(c);
@@ -105,15 +172,17 @@ pub fn global_relabel(st: &mut GridWireState) -> HostRoundStats {
     // sink get `|V| + distance-to-source`, so their excess routes back to
     // the source instead of re-climbing from the |V| plateau every round
     // (plain `h = |V|` livelocks when CYCLE is smaller than the climb).
-    let mut dist_s = vec![-1i32; cells];
-    let mut qs = VecDeque::new();
-    for c in 0..cells {
+    let dist_s = &mut scratch.dist_s;
+    dist_s.clear();
+    dist_s.resize(cells, -1);
+    for &c in &scratch.src_cells {
+        let c = c as usize;
         if dist[c] < 0 && st.cap_src[c] > 0 {
             dist_s[c] = 1;
-            qs.push_back(c);
+            q.push_back(c);
         }
     }
-    while let Some(c) = qs.pop_front() {
+    while let Some(c) = q.pop_front() {
         let (i, j) = (c / ww, c % ww);
         for (a, &(di, dj)) in DIRS.iter().enumerate() {
             let (ni, nj) = (i as i64 + di, j as i64 + dj);
@@ -123,7 +192,7 @@ pub fn global_relabel(st: &mut GridWireState) -> HostRoundStats {
             let nc = (ni as usize) * ww + nj as usize;
             if dist[nc] < 0 && dist_s[nc] < 0 && st.cap[OPP[a] * cells + nc] > 0 {
                 dist_s[nc] = dist_s[c] + 1;
-                qs.push_back(nc);
+                q.push_back(nc);
             }
         }
     }
@@ -151,13 +220,25 @@ pub fn global_relabel(st: &mut GridWireState) -> HostRoundStats {
     }
 }
 
+/// Allocating wrapper around [`global_relabel_with`].
+pub fn global_relabel(st: &mut GridWireState) -> HostRoundStats {
+    let mut scratch = HostScratch::for_state(st);
+    global_relabel_with(st, &mut scratch)
+}
+
 /// Full host round: cancel violations then global+gap relabel.
-pub fn host_round(st: &mut GridWireState) -> HostRoundStats {
-    let (cancelled, src_returned) = cancel_violations(st);
-    let mut out = global_relabel(st);
+pub fn host_round_with(st: &mut GridWireState, scratch: &mut HostScratch) -> HostRoundStats {
+    let (cancelled, src_returned) = cancel_violations_with(st, scratch);
+    let mut out = global_relabel_with(st, scratch);
     out.cancelled_arcs = cancelled;
     out.src_returned = src_returned;
     out
+}
+
+/// Allocating wrapper around [`host_round_with`].
+pub fn host_round(st: &mut GridWireState) -> HostRoundStats {
+    let mut scratch = HostScratch::for_state(st);
+    host_round_with(st, &mut scratch)
 }
 
 #[cfg(test)]
@@ -169,8 +250,8 @@ mod tests {
         // 3x1 column, sink arc at the bottom cell, full interior caps.
         let mut st = GridWireState::zeros(3, 1);
         st.cap_sink[2] = 5;
-        st.cap[1 * 3 + 0] = 2; // S from cell 0
-        st.cap[1 * 3 + 1] = 2; // S from cell 1
+        st.cap[3] = 2; // S from cell 0 (S plane starts at cells=3)
+        st.cap[4] = 2; // S from cell 1
         let out = global_relabel(&mut st);
         assert_eq!(st.h, vec![3, 2, 1]);
         assert_eq!(out.reached_cells, 3);
@@ -220,5 +301,41 @@ mod tests {
         assert_eq!(st.cap[2 * 2 + 1], 4); // W mate at cell 1
         assert_eq!(st.e[0], -2);
         assert_eq!(st.e[1], 4);
+    }
+
+    #[test]
+    fn cancel_skips_excess_free_cells() {
+        // Same violating arc but no excess anywhere: the frontier pass
+        // leaves it for the relabel to fix (heights are rewritten anyway)
+        // instead of perturbing the residual graph.
+        let mut st = GridWireState::zeros(1, 2);
+        st.cap[3 * 2] = 4;
+        st.h[0] = 9;
+        let (cancelled, src_ret) = cancel_violations(&mut st);
+        assert_eq!(cancelled, 0);
+        assert_eq!(src_ret, 0);
+        assert_eq!(st.cap[3 * 2], 4);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_rounds() {
+        // Driving rounds through one scratch must equal fresh wrappers.
+        let mut a = GridWireState::zeros(3, 3);
+        a.cap_sink[8] = 3;
+        a.cap_src[0] = 3;
+        a.e[0] = 3;
+        a.cap[9 + 1] = 2; // S plane
+        a.cap[9 + 4] = 2;
+        a.cap[3 * 9] = 2; // E plane
+        let mut b = a.clone();
+        let mut scratch = HostScratch::for_state(&a);
+        for _ in 0..3 {
+            let x = host_round_with(&mut a, &mut scratch);
+            let y = host_round(&mut b);
+            assert_eq!(x, y);
+            assert_eq!(a.h, b.h);
+            assert_eq!(a.e, b.e);
+            assert_eq!(a.cap, b.cap);
+        }
     }
 }

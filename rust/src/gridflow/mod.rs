@@ -4,10 +4,12 @@
 //! served either natively or by the PJRT artifact.
 
 pub mod host;
+pub mod par_wave;
 pub mod solver;
 pub mod state;
 pub mod wave;
 
+pub use par_wave::{par_wave_with, NativeParGridExecutor, ParWaveScratch};
 pub use solver::{GridExecutor, GridSolveReport, HybridGridSolver, NativeGridExecutor};
 pub use state::init_state;
 pub use wave::{native_wave, WaveStats};

@@ -9,20 +9,28 @@ use crate::runtime::device::{GridStepStats, GridWireState};
 
 use super::host;
 use super::state::init_state;
-use super::wave::{active_cells, native_wave_with, WaveScratch};
+#[cfg(feature = "paranoid")]
+use super::wave::active_cells;
+use super::wave::{native_wave_with, WaveScratch};
 
 /// A device that can advance the grid state by up to `outer * k_inner`
-/// waves.  Implemented natively below and by `runtime::GridDevice`.
+/// waves.  Implemented natively below (sequential and tiled-parallel)
+/// and by `runtime::GridDevice`.
 pub trait GridExecutor {
     fn k_inner(&self) -> usize;
     fn superstep(&mut self, st: &mut GridWireState, outer: i32) -> Result<GridStepStats>;
     fn name(&self) -> &'static str;
+    /// The host mutated the state outside `superstep` (fresh instance,
+    /// violation cancel, …): drop any cached active sets.  Devices that
+    /// re-derive activity on-device (PJRT) ignore this.
+    fn invalidate(&mut self) {}
 }
 
 /// Pure-Rust executor: runs the bit-exact kernel twin in-process.
 pub struct NativeGridExecutor {
     pub k_inner: usize,
     scratch: WaveScratch,
+    needs_rebuild: bool,
 }
 
 impl NativeGridExecutor {
@@ -30,6 +38,7 @@ impl NativeGridExecutor {
         Self {
             k_inner,
             scratch: WaveScratch::default(),
+            needs_rebuild: true,
         }
     }
 }
@@ -49,14 +58,22 @@ impl GridExecutor for NativeGridExecutor {
         "native"
     }
 
+    fn invalidate(&mut self) {
+        self.needs_rebuild = true;
+    }
+
     fn superstep(&mut self, st: &mut GridWireState, outer: i32) -> Result<GridStepStats> {
         let mut stats = GridStepStats::default();
         let budget = outer as i64 * self.k_inner as i64;
-        // Super-step boundaries are exactly where the host may have
-        // mutated the state (global relabel, violation cancel), so the
-        // active list is rebuilt once here and maintained incrementally
-        // inside the waves (PERF: removes two full-grid scans per wave).
-        self.scratch.rebuild(st);
+        // The active list is rebuilt only when the host announced a
+        // mutation (`invalidate`) or the dims changed, and maintained
+        // incrementally inside the waves otherwise (PERF: the old code
+        // rescanned the grid on every superstep even when no host round
+        // had touched the state; see EXPERIMENTS.md §Parallel-Wave).
+        if self.needs_rebuild || self.scratch.built_for != Some((st.height, st.width)) {
+            self.scratch.rebuild(st);
+            self.needs_rebuild = false;
+        }
         for _ in 0..budget {
             if self.scratch.active_count() == 0 {
                 break;
@@ -68,6 +85,9 @@ impl GridExecutor for NativeGridExecutor {
             stats.relabels += w.relabels;
             stats.waves += 1;
         }
+        // O(cells) scan per superstep: too hot even for debug CI runs,
+        // so it only exists under the `paranoid` feature.
+        #[cfg(feature = "paranoid")]
         debug_assert_eq!(self.scratch.active_count(), active_cells(st));
         stats.active = self.scratch.active_count() as i64;
         Ok(stats)
@@ -148,12 +168,16 @@ impl HybridGridSolver {
             excess_total,
             ..Default::default()
         };
+        // Fresh state: whatever the executor cached belongs to a
+        // previous solve.
+        exec.invalidate();
+        let mut hscratch = host::HostScratch::for_state(&st);
 
         // Exact initial heights (the hybrid scheme begins with a global
         // relabel — same as copying h to the device in Algorithm 4.6).
         if self.heuristics {
             let t = crate::util::Timer::start();
-            let out = host::global_relabel(&mut st);
+            let out = host::global_relabel_with(&mut st, &mut hscratch);
             report.gap_cells += out.gap_cells;
             report.host_seconds += t.elapsed();
         }
@@ -187,11 +211,12 @@ impl HybridGridSolver {
 
             if self.heuristics {
                 let t = crate::util::Timer::start();
-                let out = host::host_round(&mut st);
+                let out = host::host_round_with(&mut st, &mut hscratch);
                 src_total += out.src_returned;
                 report.gap_cells += out.gap_cells;
                 report.cancelled_arcs += out.cancelled_arcs;
                 report.host_seconds += t.elapsed();
+                exec.invalidate();
             }
         }
 

@@ -10,8 +10,8 @@
 use crate::runtime::device::GridWireState;
 
 /// Arc order must match the kernel: N, S, W, E, sink, source.
-const DIRS: [(i64, i64); 4] = [(-1, 0), (1, 0), (0, -1), (0, 1)];
-const OPP: [usize; 4] = [1, 0, 3, 2];
+pub(super) const DIRS: [(i64, i64); 4] = [(-1, 0), (1, 0), (0, -1), (0, 1)];
+pub(super) const OPP: [usize; 4] = [1, 0, 3, 2];
 const INF: i64 = 1 << 30;
 
 /// Per-wave counters (kernel stats without the carried totals).
@@ -23,12 +23,70 @@ pub struct WaveStats {
     pub relabels: i64,
 }
 
-/// Decision taken by one cell in the snapshot phase.
+/// Decision taken by one cell in the snapshot phase.  Shared with the
+/// tiled parallel engine (`par_wave`), which stores the same decisions
+/// in per-tile slices.
 #[derive(Debug, Clone, Copy)]
-enum Decision {
+pub(super) enum Decision {
     None,
     Push { arc: usize, delta: i32 },
     Relabel { new_h: i32 },
+}
+
+/// Decision for one active cell against the immutable pre-wave snapshot:
+/// lowest residual neighbour with first-minimum tie-break in arc order
+/// (matching `jnp.argmin`), then push if strictly lower, else relabel.
+///
+/// This is the single source of truth for decision semantics — both the
+/// sequential engine and the tiled parallel engine call it, so the two
+/// cannot drift.  Caller guarantees `st.e[c] > 0`.
+#[inline]
+pub(super) fn decide(st: &GridWireState, c: usize) -> Decision {
+    let (hh, ww) = (st.height, st.width);
+    let cells = hh * ww;
+    let v_total = (cells + 2) as i64;
+    let (i, j) = (c / ww, c % ww);
+    let mut best_h = INF;
+    let mut best_a = usize::MAX;
+    for (a, &(di, dj)) in DIRS.iter().enumerate() {
+        let (ni, nj) = (i as i64 + di, j as i64 + dj);
+        if ni < 0 || nj < 0 || ni >= hh as i64 || nj >= ww as i64 {
+            continue;
+        }
+        if st.cap[a * cells + c] > 0 {
+            let hn = st.h[(ni as usize) * ww + nj as usize] as i64;
+            if hn < best_h {
+                best_h = hn;
+                best_a = a;
+            }
+        }
+    }
+    if st.cap_sink[c] > 0 && 0 < best_h {
+        best_h = 0;
+        best_a = 4;
+    }
+    if st.cap_src[c] > 0 && v_total < best_h {
+        best_h = v_total;
+        best_a = 5;
+    }
+    if best_a == usize::MAX {
+        return Decision::None;
+    }
+    if (st.h[c] as i64) > best_h {
+        let cap = match best_a {
+            4 => st.cap_sink[c],
+            5 => st.cap_src[c],
+            a => st.cap[a * cells + c],
+        };
+        Decision::Push {
+            arc: best_a,
+            delta: st.e[c].min(cap),
+        }
+    } else {
+        Decision::Relabel {
+            new_h: (best_h + 1) as i32,
+        }
+    }
 }
 
 /// Reusable per-wave scratch (PERF: reused buffers + an incrementally
@@ -41,7 +99,7 @@ pub struct WaveScratch {
     active: Vec<u32>,
     on_list: Vec<bool>,
     /// Dimensions the active list was built for (guards reuse).
-    built_for: Option<(usize, usize)>,
+    pub(super) built_for: Option<(usize, usize)>,
 }
 
 impl WaveScratch {
@@ -84,7 +142,6 @@ pub fn native_wave(st: &mut GridWireState) -> WaveStats {
 pub fn native_wave_with(st: &mut GridWireState, scratch: &mut WaveScratch) -> WaveStats {
     let (hh, ww) = (st.height, st.width);
     let cells = hh * ww;
-    let v_total = (cells + 2) as i64;
 
     if scratch.built_for != Some((hh, ww)) {
         scratch.rebuild(st);
@@ -94,61 +151,13 @@ pub fn native_wave_with(st: &mut GridWireState, scratch: &mut WaveScratch) -> Wa
     // Only cells on the active list can decide anything; the list is a
     // strict superset of {e > 0} (stale zero-excess entries are skipped
     // and dropped below).
-    let h_snap: &[i32] = &st.h;
-    let mut decided: usize = 0;
     for idx in 0..scratch.active.len() {
         let c = scratch.active[idx] as usize;
         if st.e[c] <= 0 {
             continue;
         }
-        let (i, j) = (c / ww, c % ww);
-        // Lowest residual neighbour; first-minimum tie-break in arc
-        // order, matching jnp.argmin.
-        let mut best_h = INF;
-        let mut best_a = usize::MAX;
-        for (a, &(di, dj)) in DIRS.iter().enumerate() {
-            let (ni, nj) = (i as i64 + di, j as i64 + dj);
-            if ni < 0 || nj < 0 || ni >= hh as i64 || nj >= ww as i64 {
-                continue;
-            }
-            if st.cap[a * cells + c] > 0 {
-                let hn = h_snap[(ni as usize) * ww + nj as usize] as i64;
-                if hn < best_h {
-                    best_h = hn;
-                    best_a = a;
-                }
-            }
-        }
-        if st.cap_sink[c] > 0 && 0 < best_h {
-            best_h = 0;
-            best_a = 4;
-        }
-        if st.cap_src[c] > 0 && v_total < best_h {
-            best_h = v_total;
-            best_a = 5;
-        }
-        if best_a == usize::MAX {
-            continue;
-        }
-        let h_c = h_snap[c] as i64;
-        scratch.decisions[c] = if h_c > best_h {
-            let cap = match best_a {
-                4 => st.cap_sink[c],
-                5 => st.cap_src[c],
-                a => st.cap[a * cells + c],
-            };
-            Decision::Push {
-                arc: best_a,
-                delta: st.e[c].min(cap),
-            }
-        } else {
-            Decision::Relabel {
-                new_h: (best_h + 1) as i32,
-            }
-        };
-        decided += 1;
+        scratch.decisions[c] = decide(st, c);
     }
-    let _ = decided;
 
     // --- Apply phase -----------------------------------------------------
     // Iterate the same list; newly activated receivers are appended for

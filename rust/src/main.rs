@@ -3,6 +3,7 @@
 //! ```text
 //! flowmatch info
 //! flowmatch maxflow   --height 32 --width 32 [--cycle 512] [--seed 1] [--native] [--dimacs f.max]
+//!                     [--engine auto|native|native-par] [--threads 4] [--tile-rows 16]
 //! flowmatch assign    --n 30 [--max-weight 100] [--alpha 10] [--engine csa-seq|csa-lockfree|csa-wave|hungarian|auction|pjrt] [--seed 1]
 //! flowmatch segment   --height 32 --width 32 [--lambda 12] [--seed 1]
 //! flowmatch optflow   --height 32 --width 32 [--features 12] [--dy 2 --dx 1]
@@ -15,7 +16,7 @@ use anyhow::{bail, Result};
 use flowmatch::assignment::{self, AssignmentSolver};
 use flowmatch::cli::Args;
 use flowmatch::config;
-use flowmatch::coordinator::{self, AssignmentService, ServiceConfig};
+use flowmatch::coordinator::{self, AssignmentService, GridEngine, ServiceConfig};
 use flowmatch::graph::dimacs;
 use flowmatch::runtime::ArtifactRegistry;
 use flowmatch::util::stats::fmt_duration;
@@ -55,6 +56,7 @@ fn run(args: Args) -> Result<()> {
 
 const USAGE: &str = "flowmatch <info|maxflow|assign|segment|optflow|serve|artifacts> [options]
   maxflow   --height H --width W [--cycle N] [--seed S] [--native] [--dimacs FILE]
+            [--engine auto|native|native-par] [--threads T] [--tile-rows R] [--preset paper|smoke]
   assign    --n N [--max-weight C] [--alpha A] [--engine NAME] [--seed S] [--preset paper|smoke]
   segment   --height H --width W [--lambda L] [--seed S]
   optflow   --height H --width W [--features K] [--dy D --dx D]
@@ -80,7 +82,8 @@ fn cmd_info() -> Result<()> {
 
 fn cmd_maxflow(args: &Args) -> Result<()> {
     args.expect_known(&[
-        "height", "width", "cycle", "seed", "native", "dimacs", "max-cap",
+        "height", "width", "cycle", "seed", "native", "dimacs", "max-cap", "engine", "threads",
+        "tile-rows", "preset",
     ])?;
     if let Some(path) = args.get("dimacs") {
         // CSR path: solve a DIMACS file with every engine.
@@ -101,21 +104,50 @@ fn cmd_maxflow(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
+    // Defaults come from the preset only when one is asked for, so the
+    // bare CLI behaviour is unchanged.
+    let cfg = match args.get("preset") {
+        Some(p) => Some(config::preset(p)?),
+        None => None,
+    };
+    let mut d_cycle = 512usize;
+    let mut d_threads = 4usize;
+    let mut d_tile_rows = 16usize;
+    let mut d_engine = "auto";
+    if let Some(c) = &cfg {
+        d_cycle = c.get_usize("maxflow.cycle", d_cycle)?;
+        d_threads = c.get_usize("maxflow.threads", d_threads)?;
+        d_tile_rows = c.get_usize("maxflow.tile_rows", d_tile_rows)?;
+        if let Some(e) = c.get("maxflow.engine") {
+            d_engine = e;
+        }
+    }
     let height = args.get_usize("height", 32)?;
     let width = args.get_usize("width", 32)?;
-    let cycle = args.get_usize("cycle", 512)?;
+    let cycle = args.get_usize("cycle", d_cycle)?;
     let seed = args.get_u64("seed", 1)?;
     let max_cap = args.get_i64("max-cap", 32)?;
+    let threads = args.get_usize("threads", d_threads)?;
+    let tile_rows = args.get_usize("tile-rows", d_tile_rows)?;
+    let engine_name = args.get_str("engine", d_engine);
+    let engine = match engine_name {
+        "auto" => GridEngine::Auto,
+        "native" => GridEngine::Native,
+        "native-par" => GridEngine::NativePar { threads, tile_rows },
+        other => bail!("unknown grid engine {other:?} (expected auto, native, native-par)"),
+    };
     let mut rng = Rng::seeded(seed);
     let net = workloads::random_grid(&mut rng, height, width, max_cap, 0.25, 0.25);
 
-    let registry = if args.flag("native") {
+    // Artifact discovery only matters on the Auto path; forced native
+    // engines never consult the registry.
+    let registry = if args.flag("native") || engine != GridEngine::Auto {
         None
     } else {
         ArtifactRegistry::discover().ok()
     };
     let t = Timer::start();
-    let (report, backend) = coordinator::solve_grid(&net, cycle, registry.as_ref())?;
+    let (report, backend) = coordinator::solve_grid_with(&net, cycle, registry.as_ref(), engine)?;
     let elapsed = t.elapsed();
     println!(
         "grid {}x{} seed={} backend={:?}: maxflow={} (ExcessTotal={})",

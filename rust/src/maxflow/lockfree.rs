@@ -16,6 +16,38 @@
 //! Termination detection is the hybrid scheme's rule (Algorithm 4.6):
 //! `e(s) + e(t) == ExcessTotal`, with `e(s)` counting flow returned to the
 //! source.
+//!
+//! ## Memory orderings
+//!
+//! The engine originally ran every atomic op at `SeqCst`.  The invariants
+//! above justify a much cheaper set, used throughout:
+//!
+//! * **Owner-read / foreign-increment values** (`e(x)` read by `x`'s
+//!   owner, `c_f` of out-arcs of `x`): `Relaxed`.  The owner is the only
+//!   decrementer, so a stale read only *under*-estimates and
+//!   `delta = min(e', c')` can never overshoot — the same argument that
+//!   makes the plain (unfenced) CUDA kernel of the paper sound.
+//! * **Heights**: `Relaxed`, and every write is a *monotone raise*
+//!   (`fetch_max` in the relabel, a raising CAS loop in ARG) — with
+//!   ARG enabled the BFS thread writes heights too, so owner-only
+//!   plain stores would be a lost-update race.  Heights are read
+//!   heuristically by neighbours; a stale height costs extra work
+//!   (a re-examined push or a redundant relabel attempt), never an
+//!   unaccounted unit of flow.  Even under `SeqCst` the neighbour scan
+//!   reads each location at a different instant, so cross-location
+//!   staleness was always part of the algorithm's contract.
+//! * **The push handshake**: the receive-side `e(y).fetch_add` is
+//!   `Release` and the owner's `e(x)` entry load is `Acquire`, so a
+//!   thread that *sees* new excess also sees the reverse-arc capacity
+//!   that arrived with it (message passing) and can always route it
+//!   back.  Mass conservation itself needs no ordering — it follows
+//!   from RMW atomicity.
+//! * **Termination**: `e(s)`/`e(t)` are monotone non-decreasing, so the
+//!   `Acquire` loads in `terminated()` pairing with the `Release` adds
+//!   make `e(s) + e(t) >= ExcessTotal` a stable, sufficient condition.
+//!   The `done` flag is a standard `Release`-store/`Acquire`-load latch,
+//!   and the final capacity read-back happens after `thread::scope`
+//!   joins (a full synchronisation point), so it can be `Relaxed`.
 
 use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
 
@@ -80,16 +112,21 @@ impl<'a> Shared<'a> {
     /// push if strictly lower, otherwise relabel.  Returns true if an
     /// operation was applied.
     fn step(&self, x: usize, n: usize) -> bool {
-        let e_x = self.excess[x].load(Ordering::SeqCst);
+        // Acquire pairs with the Release half of a neighbour's push: if
+        // we see the excess, we also see the reverse residual capacity
+        // that came with it.
+        let e_x = self.excess[x].load(Ordering::Acquire);
         if e_x <= 0 {
             return false;
         }
-        // Lines 4-9: lowest residual neighbour.
+        // Lines 4-9: lowest residual neighbour.  Relaxed: out-arc caps
+        // are only decreased by this thread (stale reads under-estimate)
+        // and heights are heuristic (see module docs).
         let mut best_h = i64::MAX;
         let mut best_e = None;
         for &eid in self.g.out_edges(x) {
-            if self.cap[eid as usize].load(Ordering::SeqCst) > 0 {
-                let hy = self.height[self.g.edge_head(eid)].load(Ordering::SeqCst);
+            if self.cap[eid as usize].load(Ordering::Relaxed) > 0 {
+                let hy = self.height[self.g.edge_head(eid)].load(Ordering::Relaxed);
                 if hy < best_h {
                     best_h = hy;
                     best_e = Some(eid);
@@ -99,38 +136,48 @@ impl<'a> Shared<'a> {
         let Some(eid) = best_e else {
             return false; // no residual arc (cannot happen for active nodes)
         };
-        let h_x = self.height[x].load(Ordering::SeqCst);
+        // Own height: written only by this thread.
+        let h_x = self.height[x].load(Ordering::Relaxed);
         if h_x > best_h {
             // PUSH (lines 11-15).  cap[eid] is only decreased by this
             // thread, so the min is safe even under concurrency.
-            let c = self.cap[eid as usize].load(Ordering::SeqCst);
+            let c = self.cap[eid as usize].load(Ordering::Relaxed);
             let delta = e_x.min(c);
             if delta <= 0 {
                 return false;
             }
             let y = self.g.edge_head(eid);
-            self.cap[eid as usize].fetch_sub(delta, Ordering::SeqCst);
-            self.cap[(eid ^ 1) as usize].fetch_add(delta, Ordering::SeqCst);
-            self.excess[x].fetch_sub(delta, Ordering::SeqCst);
-            self.excess[y].fetch_add(delta, Ordering::SeqCst);
+            // Send side: owner-exclusive decrements, no ordering needed.
+            self.cap[eid as usize].fetch_sub(delta, Ordering::Relaxed);
+            self.cap[(eid ^ 1) as usize].fetch_add(delta, Ordering::Relaxed);
+            self.excess[x].fetch_sub(delta, Ordering::Relaxed);
+            // Receive side: Release publishes the reverse capacity above
+            // to whoever Acquire-loads the new excess.
+            self.excess[y].fetch_add(delta, Ordering::Release);
             self.pushes.fetch_add(1, Ordering::Relaxed);
             true
         } else {
-            // RELABEL (line 17): only this thread writes h(x).  Heights
-            // stay < 2n in any sequential trace; the 4n guard is a pure
-            // safety net against pathological interleavings.
+            // RELABEL (line 17): a monotone raise.  Without ARG this
+            // thread is the only writer of h(x) (fetch_max == store,
+            // since relabel implies h(x) <= best_h); with ARG the BFS
+            // thread may concurrently CAS-raise h(x), and fetch_max
+            // keeps the heights-never-decrease invariant both rely on.
+            // Heights stay < 2n in any sequential trace; the 4n guard
+            // is a pure safety net against pathological interleavings.
             if best_h >= 4 * n as i64 {
                 return false;
             }
-            self.height[x].store(best_h + 1, Ordering::SeqCst);
+            self.height[x].fetch_max(best_h + 1, Ordering::Relaxed);
             self.relabels.fetch_add(1, Ordering::Relaxed);
             true
         }
     }
 
     fn terminated(&self) -> bool {
+        // Acquire pairs with the Release adds; both terminal excesses
+        // are monotone non-decreasing, so the test is stable.
         let (s, t) = (self.g.source(), self.g.sink());
-        self.excess[s].load(Ordering::SeqCst) + self.excess[t].load(Ordering::SeqCst)
+        self.excess[s].load(Ordering::Acquire) + self.excess[t].load(Ordering::Acquire)
             >= self.excess_total
     }
 
@@ -142,7 +189,9 @@ impl<'a> Shared<'a> {
     fn arg_pass(&self, n: usize) {
         use std::collections::VecDeque;
         let (s, t) = (self.g.source(), self.g.sink());
-        let snap: Vec<i64> = self.cap.iter().map(|c| c.load(Ordering::SeqCst)).collect();
+        // The snapshot is heuristic (any plausible residual graph will
+        // do — heights are only ever raised), so Relaxed loads suffice.
+        let snap: Vec<i64> = self.cap.iter().map(|c| c.load(Ordering::Relaxed)).collect();
         let mut dist = vec![-1i64; n];
         dist[t] = 0;
         let mut q = VecDeque::new();
@@ -161,15 +210,16 @@ impl<'a> Shared<'a> {
                 continue;
             }
             let target = if dist[v] >= 0 { dist[v] } else { n as i64 };
-            // Monotone raise via CAS loop.
+            // Monotone raise via CAS loop; no payload travels with the
+            // height, so Relaxed orderings are enough.
             loop {
-                let cur = self.height[v].load(Ordering::SeqCst);
+                let cur = self.height[v].load(Ordering::Relaxed);
                 if cur >= target {
                     break;
                 }
                 if self
                     .height[v]
-                    .compare_exchange(cur, target, Ordering::SeqCst, Ordering::SeqCst)
+                    .compare_exchange(cur, target, Ordering::Relaxed, Ordering::Relaxed)
                     .is_ok()
                 {
                     break;
@@ -223,7 +273,7 @@ impl MaxFlowSolver for LockFree {
                 // concurrently until the workers finish.
                 let shared = &shared;
                 scope.spawn(move || {
-                    while !shared.done.load(Ordering::SeqCst) {
+                    while !shared.done.load(Ordering::Acquire) {
                         shared.arg_pass(n);
                         std::thread::yield_now();
                     }
@@ -238,7 +288,7 @@ impl MaxFlowSolver for LockFree {
                         .collect();
                     let mut idle_sweeps = 0u32;
                     loop {
-                        if shared.done.load(Ordering::SeqCst) {
+                        if shared.done.load(Ordering::Acquire) {
                             break;
                         }
                         let mut did_work = false;
@@ -255,7 +305,7 @@ impl MaxFlowSolver for LockFree {
                             }
                         }
                         if shared.terminated() {
-                            shared.done.store(true, Ordering::SeqCst);
+                            shared.done.store(true, Ordering::Release);
                             break;
                         }
                         if did_work {
@@ -271,13 +321,15 @@ impl MaxFlowSolver for LockFree {
             }
         });
 
-        // Write the relaxed state back into the network.
+        // Write the state back into the network.  `thread::scope` has
+        // joined every worker, which synchronises-with all their writes,
+        // so Relaxed loads read the final values.
         let cap: Vec<i64> = shared
             .cap
             .iter()
-            .map(|c| c.load(Ordering::SeqCst))
+            .map(|c| c.load(Ordering::Relaxed))
             .collect();
-        let value = shared.excess[t].load(Ordering::SeqCst);
+        let value = shared.excess[t].load(Ordering::Relaxed);
         let stats = FlowStats {
             value,
             pushes: shared.pushes.load(Ordering::Relaxed) as u64,
@@ -343,6 +395,34 @@ mod tests {
             let stats = LockFree::with_arg(2).solve(&mut g).unwrap();
             assert_eq!(stats.value, want, "case={case}");
             assert_max_flow(&g, stats.value).unwrap();
+        }
+    }
+
+    #[test]
+    fn relaxed_orderings_on_random_networks() {
+        // arg_on_random_networks-style sweep for the plain engine: the
+        // relaxed Acquire/Release/Relaxed orderings must keep every
+        // random instance exact at real thread counts (run under
+        // --release in CI, where reordering is most likely to bite).
+        use crate::graph::csr::NetworkBuilder;
+        let mut rng = crate::util::Rng::seeded(4242);
+        for case in 0..10 {
+            let nn = 5 + rng.index(12);
+            let mut b = NetworkBuilder::new(nn, 0, nn - 1);
+            for _ in 0..3 * nn {
+                let u = rng.index(nn);
+                let v = (u + 1 + rng.index(nn - 1)) % nn;
+                b.add_edge(u, v, rng.range_i64(0, 15), 0);
+            }
+            let base = b.build().unwrap();
+            let mut g0 = base.clone();
+            let want = crate::maxflow::dinic::Dinic.solve(&mut g0).unwrap().value;
+            for threads in [1, 2, 4] {
+                let mut g = base.clone();
+                let stats = LockFree::with_threads(threads).solve(&mut g).unwrap();
+                assert_eq!(stats.value, want, "case={case} threads={threads}");
+                assert_max_flow(&g, stats.value).unwrap();
+            }
         }
     }
 
