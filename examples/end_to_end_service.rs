@@ -1,13 +1,16 @@
-//! END-TO-END DRIVER (the repo's full-stack validation run): load the AOT
-//! artifacts, start the batched assignment service on its device thread,
-//! replay a real-time request trace (20 fps of n=30, C<=100 matching
-//! problems — exactly the paper's §6 operating point), and report
-//! latency/throughput against the paper's 1/20 s real-time bar.
+//! END-TO-END DRIVER (the repo's full-stack validation run): start the
+//! sharded solver pool, replay a mixed real-time trace — 20 fps of
+//! n=30, C<=100 matching problems (exactly the paper's §6 operating
+//! point) interleaved with grid max-flow solves, including periodic
+//! oversized grids — and verify EVERY reply against the sequential
+//! oracles (Hungarian for matchings, the native wave engine for
+//! grids) while reporting latency against the paper's 1/20 s bar.
 //!
-//! Every layer composes here: L1 Pallas waves (AOT-lowered) -> L2
-//! super-step loop -> PJRT runtime -> cost-scaling driver with host
-//! price updates -> batched service -> trace replay. Results are recorded
-//! in EXPERIMENTS.md.
+//! Every layer composes here: L1 Pallas waves (AOT-lowered, when
+//! artifacts exist) -> L2 super-step loop -> PJRT runtime -> backend
+//! router -> size-class sharded queues -> persistent solver workers
+//! (grid waves on the shared worker pool) -> trace replay.  Results
+//! are recorded in EXPERIMENTS.md §E9.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example end_to_end_service
@@ -15,11 +18,12 @@
 
 use flowmatch::assignment::hungarian::Hungarian;
 use flowmatch::assignment::AssignmentSolver;
-use flowmatch::coordinator::{AssignmentService, ServiceConfig};
+use flowmatch::coordinator::{solve_grid_with, GridEngine};
 use flowmatch::runtime::{transfer, ArtifactRegistry};
+use flowmatch::service::{replay, PoolConfig, ProblemInstance, SizeClass, SolverPool};
 use flowmatch::util::stats::fmt_duration;
-use flowmatch::util::{Rng, Timer};
-use flowmatch::workloads::{RequestTrace, TraceConfig};
+use flowmatch::util::Rng;
+use flowmatch::workloads::{MixedTrace, MixedTraceConfig, TraceConfig};
 
 fn main() -> anyhow::Result<()> {
     let requests = std::env::args()
@@ -27,76 +31,125 @@ fn main() -> anyhow::Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(60usize);
 
-    let have_artifacts = ArtifactRegistry::discover().map(|r| !r.is_empty()).unwrap_or(false);
+    let have_artifacts = ArtifactRegistry::discover()
+        .map(|r| !r.is_empty())
+        .unwrap_or(false);
     if !have_artifacts {
-        println!("NOTE: no artifacts found; service will run on the native twin.");
+        println!("NOTE: no artifacts found; assignment requests run on native engines.");
         println!("      Run `make artifacts` for the PJRT path.\n");
     }
 
-    // The §6 workload: n = 30, costs <= 100, arriving at 20 fps.
-    let cfg = TraceConfig {
-        requests,
-        n: 30,
-        max_weight: 100,
-        arrival_gap: 0.05,
-        geometric_frac: 0.5,
+    // The §6 workload (n = 30, costs <= 100, 20 fps — the Small
+    // shard) plus a grid stream that exercises the other two shards:
+    // 48² solves (Medium) with every 4th at 96² (Large).
+    let cfg = MixedTraceConfig {
+        assign: TraceConfig {
+            requests,
+            n: 30,
+            max_weight: 100,
+            arrival_gap: 0.05,
+            geometric_frac: 0.5,
+        },
+        grid_requests: requests / 6,
+        grid_size: 48,
+        grid_max_cap: 16,
+        grid_arrival_gap: 0.3,
+        large_every: 4,
+        large_size: 96,
     };
     let mut rng = Rng::seeded(2026);
-    let trace = RequestTrace::generate(&mut rng, &cfg);
+    let trace = MixedTrace::generate(&mut rng, &cfg);
 
-    let service = AssignmentService::start(ServiceConfig {
-        max_batch: 8,
-        use_pjrt: have_artifacts,
-        max_n: 30,
-    });
+    let mut pool_cfg = PoolConfig::default();
+    pool_cfg.router.use_pjrt = have_artifacts;
+    pool_cfg.router.pjrt_max_n = 30;
+    let cycle = pool_cfg.router.cycle_waves;
+    let pool = SolverPool::start(pool_cfg);
 
     transfer::GLOBAL.reset();
     println!(
-        "replaying {} requests (n={}, C<={}, {:.0} fps)...",
+        "replaying {} requests ({} matchings n={} at {:.0} fps, {} grids {}²/{}²) on {} workers...",
         trace.len(),
-        cfg.n,
-        cfg.max_weight,
-        1.0 / cfg.arrival_gap
+        trace.assignment_count(),
+        cfg.assign.n,
+        1.0 / cfg.assign.arrival_gap,
+        trace.grid_count(),
+        cfg.grid_size,
+        cfg.large_size,
+        pool.workers(),
     );
 
-    let start = Timer::start();
-    let mut receivers = Vec::new();
-    for req in &trace.requests {
-        let now = start.elapsed();
-        if req.arrival > now {
-            std::thread::sleep(std::time::Duration::from_secs_f64(req.arrival - now));
-        }
-        receivers.push((req.id, service.submit(req.instance.clone())));
-    }
-
-    // Collect replies and verify EVERY answer against the exact baseline.
-    let mut optimal = 0usize;
-    for (id, rx) in receivers {
-        let reply = rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("service dropped reply {id}"))?
-            .map_err(|e| anyhow::anyhow!(e))?;
-        let exact = Hungarian.solve(&trace.requests[id].instance)?;
-        anyhow::ensure!(
-            reply.weight == exact.weight,
-            "request {id}: weight {} != optimum {}",
-            reply.weight,
-            exact.weight
-        );
-        optimal += 1;
-    }
-    let wall = start.elapsed();
-    let report = service.shutdown()?;
+    let out = replay(&pool, &trace, true);
+    let report = pool.shutdown();
     let tx = transfer::GLOBAL.snapshot();
 
+    // Verify EVERY answer against the sequential single-solver oracle.
+    let mut optimal = 0usize;
+    for (id, reply) in &out.replies {
+        let reply = reply
+            .as_ref()
+            .map_err(|e| anyhow::anyhow!("request {id}: {e}"))?;
+        match &trace.requests[*id].instance {
+            ProblemInstance::Assignment(inst) => {
+                let exact = Hungarian.solve(inst)?;
+                anyhow::ensure!(
+                    reply.outcome.weight() == Some(exact.weight),
+                    "request {id}: weight {:?} != optimum {}",
+                    reply.outcome.weight(),
+                    exact.weight
+                );
+            }
+            ProblemInstance::Grid(net) => {
+                let (want, _) = solve_grid_with(net, cycle, None, GridEngine::Native)?;
+                anyhow::ensure!(
+                    reply.outcome.flow() == Some(want.flow),
+                    "request {id}: flow {:?} != oracle {}",
+                    reply.outcome.flow(),
+                    want.flow
+                );
+            }
+        }
+        optimal += 1;
+    }
+
     println!("\n=== end-to-end report ===");
-    println!("backend            : {}", report.backend);
-    println!("requests served    : {} ({} verified optimal)", report.served, optimal);
-    println!("wall clock         : {}", fmt_duration(wall));
-    println!("throughput         : {:.1} req/s", report.throughput_rps);
-    println!("latency p50        : {}", fmt_duration(report.p50_latency));
-    println!("latency p99        : {}", fmt_duration(report.p99_latency));
-    println!("latency mean       : {}", fmt_duration(report.mean_latency));
+    println!("requests served    : {} ({} verified against oracles)", out.ok, optimal);
+    println!("rejected / failed  : {} / {}", out.rejected, out.failed);
+    println!("wall clock         : {}", fmt_duration(out.wall_seconds));
+    println!("throughput         : {:.1} req/s", out.throughput_rps);
+    if let Some(s) = &out.assign {
+        println!(
+            "matching latency   : p50={} p95={} p99={}",
+            fmt_duration(s.p50),
+            fmt_duration(s.p95),
+            fmt_duration(s.p99)
+        );
+    }
+    if let Some(s) = &out.grid {
+        println!(
+            "grid latency       : p50={} p95={} p99={}",
+            fmt_duration(s.p50),
+            fmt_duration(s.p95),
+            fmt_duration(s.p99)
+        );
+    }
+    for class in SizeClass::ALL {
+        if let Some(s) = &report.class_latency[class.index()] {
+            println!(
+                "{:<7} shard       : p50={} p99={} ({} reqs)",
+                class.name(),
+                fmt_duration(s.p50),
+                fmt_duration(s.p99),
+                s.count
+            );
+        }
+    }
+    let backends: Vec<String> = report
+        .backends
+        .iter()
+        .map(|(b, c)| format!("{b}={c}"))
+        .collect();
+    println!("backends           : [{}]", backends.join(", "));
     println!(
         "host<->device      : {} H2D calls / {} KiB, {} D2H calls / {} KiB",
         tx.h2d_calls,
@@ -105,12 +158,13 @@ fn main() -> anyhow::Result<()> {
         tx.d2h_bytes / 1024
     );
     let bar = 0.05;
+    let p50 = out.assign.as_ref().map_or(0.0, |s| s.p50);
     println!(
-        "paper §6 bar (1/20 s per solve): p50 {} ({} vs {})",
-        if report.p50_latency <= bar { "MET" } else { "MISSED" },
-        fmt_duration(report.p50_latency),
+        "paper §6 bar (1/20 s per matching): p50 {} ({} vs {})",
+        if p50 <= bar { "MET" } else { "MISSED" },
+        fmt_duration(p50),
         fmt_duration(bar)
     );
-    anyhow::ensure!(optimal == trace.len(), "not all answers optimal");
+    anyhow::ensure!(optimal == trace.len(), "not all answers verified");
     Ok(())
 }

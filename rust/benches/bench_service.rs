@@ -1,0 +1,172 @@
+//! E9: sharded solver-pool service throughput/latency.
+//!
+//! Two comparisons, both closed-loop:
+//!
+//! * **small-instance trace** (assignment n=16, the real-time class):
+//!   the pooled path (persistent workers, cached solver state) against
+//!   the per-request-spawn baseline (fresh thread + fresh backend
+//!   state per request — the deployment shape before this subsystem).
+//!   The acceptance bar is pooled ≥ 1x baseline throughput here.
+//! * **mixed trace** (assignment + grids, with periodic oversized
+//!   grids): pooled only, reported per family, demonstrating that the
+//!   shard scheduler keeps small-matching latency flat while grid
+//!   solves run.
+//!
+//! Emits benchkit JSON (default `benches/data/bench_service.json`,
+//! override with `FLOWMATCH_BENCH_SERVICE_JSON`).
+
+use flowmatch::assignment::hungarian::Hungarian;
+use flowmatch::assignment::AssignmentSolver;
+use flowmatch::benchkit::{write_json, Cell, Table};
+use flowmatch::service::{
+    replay, replay_spawn_baseline, PoolConfig, ReplayOutcome, SolverPool,
+};
+use flowmatch::util::Rng;
+use flowmatch::workloads::{MixedTrace, MixedTraceConfig, ProblemInstance, TraceConfig};
+
+fn small_trace(requests: usize, seed: u64) -> MixedTrace {
+    let mut rng = Rng::seeded(seed);
+    MixedTrace::generate(
+        &mut rng,
+        &MixedTraceConfig {
+            assign: TraceConfig {
+                requests,
+                n: 16,
+                max_weight: 100,
+                arrival_gap: 0.0,
+                ..Default::default()
+            },
+            grid_requests: 0,
+            grid_arrival_gap: 0.0,
+            ..Default::default()
+        },
+    )
+}
+
+fn mixed_trace(requests: usize, grids: usize, seed: u64) -> MixedTrace {
+    let mut rng = Rng::seeded(seed);
+    MixedTrace::generate(
+        &mut rng,
+        &MixedTraceConfig {
+            assign: TraceConfig {
+                requests,
+                n: 24,
+                arrival_gap: 0.0,
+                ..Default::default()
+            },
+            // Straddles the default shard boundaries: matchings Small,
+            // 48² grids Medium, every 4th grid 96² = Large.
+            grid_requests: grids,
+            grid_size: 48,
+            large_every: 4,
+            large_size: 96,
+            grid_arrival_gap: 0.0,
+            ..Default::default()
+        },
+    )
+}
+
+fn row(table: &mut Table, trace: &str, path: &str, workers: i64, out: &ReplayOutcome) {
+    table.row(vec![
+        trace.into(),
+        path.into(),
+        Cell::Int(workers),
+        Cell::Int(out.sent as i64),
+        Cell::Int(out.ok as i64),
+        Cell::Int(out.rejected as i64),
+        match &out.overall {
+            Some(s) => s.clone().into(),
+            None => Cell::Missing,
+        },
+        match &out.assign {
+            Some(s) => Cell::Float(s.p95 * 1e3),
+            None => Cell::Missing,
+        },
+        Cell::Float(out.throughput_rps),
+    ]);
+}
+
+fn verify_sample(trace: &MixedTrace, out: &ReplayOutcome) {
+    // Spot-check optimality so the bench cannot silently measure a
+    // broken path (full verification lives in integration_service.rs).
+    for (id, reply) in out.replies.iter().take(8) {
+        if let (Ok(reply), ProblemInstance::Assignment(inst)) =
+            (reply, &trace.requests[*id].instance)
+        {
+            let want = Hungarian.solve(inst).unwrap().weight;
+            assert_eq!(reply.outcome.weight(), Some(want), "request {id} not optimal");
+        }
+    }
+}
+
+fn main() {
+    let fast = std::env::var("FLOWMATCH_BENCH_FAST").as_deref() == Ok("1");
+    let small_requests = if fast { 60 } else { 240 };
+    let mixed_requests = if fast { 24 } else { 80 };
+    let mixed_grids = if fast { 4 } else { 12 };
+
+    let mut table = Table::new(
+        "E9: solver-pool service, closed-loop (latency columns: overall; p95 in ms)",
+        &[
+            "trace", "path", "workers", "sent", "ok", "rejected", "latency", "assign p95 ms",
+            "throughput rps",
+        ],
+    );
+
+    // --- small-instance trace: pooled vs per-request spawn ---------------
+    let trace = small_trace(small_requests, 7);
+    let cfg = PoolConfig {
+        workers: 4,
+        ..Default::default()
+    };
+    let (shard, router) = (cfg.shard.clone(), cfg.router.clone());
+
+    let pool = SolverPool::start(cfg.clone());
+    let pooled = replay(&pool, &trace, false);
+    let _ = pool.shutdown();
+    verify_sample(&trace, &pooled);
+    row(&mut table, "small n=16", "pooled", 4, &pooled);
+
+    let baseline = replay_spawn_baseline(&trace, &shard, &router);
+    verify_sample(&trace, &baseline);
+    row(
+        &mut table,
+        "small n=16",
+        "spawn-per-request",
+        baseline.sent as i64,
+        &baseline,
+    );
+
+    let speedup = if pooled.wall_seconds > 0.0 {
+        baseline.wall_seconds / pooled.wall_seconds
+    } else {
+        f64::INFINITY
+    };
+    println!(
+        "\nsmall-instance trace: pooled {:.1} req/s vs spawn-baseline {:.1} req/s -> {speedup:.2}x",
+        pooled.throughput_rps, baseline.throughput_rps
+    );
+
+    // --- mixed trace through the sharded pool ----------------------------
+    let trace = mixed_trace(mixed_requests, mixed_grids, 11);
+    let pool = SolverPool::start(cfg);
+    let mixed = replay(&pool, &trace, false);
+    let report = pool.shutdown();
+    verify_sample(&trace, &mixed);
+    row(&mut table, "mixed asn+grid", "pooled", 4, &mixed);
+    let backends: Vec<String> = report
+        .backends
+        .iter()
+        .map(|(b, c)| format!("{b}={c}"))
+        .collect();
+    println!("mixed trace backends: [{}]", backends.join(", "));
+
+    table.print();
+    let path = std::env::var("FLOWMATCH_BENCH_SERVICE_JSON")
+        .unwrap_or_else(|_| "benches/data/bench_service.json".to_string());
+    let path = std::path::PathBuf::from(path);
+    match write_json(&path, &[&table]) {
+        Ok(()) => println!("\nbenchkit JSON written to {}", path.display()),
+        Err(e) => eprintln!("\nwarning: could not write benchkit JSON: {e}"),
+    }
+}

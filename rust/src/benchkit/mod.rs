@@ -204,12 +204,13 @@ impl Cell {
             Cell::Int(v) => v.to_string(),
             Cell::Float(v) => json_f64(*v),
             Cell::Time(s) => format!(
-                "{{\"mean\":{},\"stddev\":{},\"min\":{},\"p50\":{},\"p90\":{},\"p99\":{},\"max\":{},\"count\":{}}}",
+                "{{\"mean\":{},\"stddev\":{},\"min\":{},\"p50\":{},\"p90\":{},\"p95\":{},\"p99\":{},\"max\":{},\"count\":{}}}",
                 json_f64(s.mean),
                 json_f64(s.stddev),
                 json_f64(s.min),
                 json_f64(s.p50),
                 json_f64(s.p90),
+                json_f64(s.p95),
                 json_f64(s.p99),
                 json_f64(s.max),
                 s.count

@@ -121,13 +121,22 @@ pub fn preset(name: &str) -> Result<Config> {
         "paper" => {
             "[assign]\nalpha = 10\nmax_n = 30\nmax_weight = 100\ncycle = 1024\n\
              [maxflow]\ncycle = 7000\nheuristics = true\nengine = \"auto\"\n\
-             threads = 4\ntile_rows = 16\n"
+             threads = 4\ntile_rows = 16\n\
+             [service]\nworkers = 4\nqueue_depth = 64\nsmall_units = 2048\n\
+             medium_units = 8192\nmax_units = 1048576\nuse_pjrt = true\n\
+             assign_small = \"hungarian\"\nassign_medium = \"csa-lockfree\"\n\
+             assign_large = \"csa-lockfree\"\ngrid_small = \"native\"\n\
+             grid_medium = \"native-par\"\ngrid_large = \"native-par\"\n\
+             cycle = 1024\nthreads = 4\ntile_rows = 16\nalpha = 10\n"
         }
         // Small smoke setting for CI.
         "smoke" => {
             "[assign]\nalpha = 10\nmax_n = 8\nmax_weight = 20\ncycle = 64\n\
              [maxflow]\ncycle = 64\nheuristics = true\nengine = \"auto\"\n\
-             threads = 2\ntile_rows = 4\n"
+             threads = 2\ntile_rows = 4\n\
+             [service]\nworkers = 2\nqueue_depth = 16\nsmall_units = 512\n\
+             medium_units = 4096\nmax_units = 65536\nuse_pjrt = false\n\
+             cycle = 128\nthreads = 2\ntile_rows = 4\n"
         }
         other => bail!("unknown preset {other:?} (try: paper, smoke)"),
     };
@@ -176,5 +185,18 @@ mod tests {
         assert_eq!(p.get_usize("maxflow.threads", 0).unwrap(), 4);
         assert_eq!(p.get_usize("maxflow.tile_rows", 0).unwrap(), 16);
         assert!(preset("nope").is_err());
+    }
+
+    #[test]
+    fn presets_carry_service_section() {
+        let p = preset("paper").unwrap();
+        assert_eq!(p.get_usize("service.workers", 0).unwrap(), 4);
+        assert_eq!(p.get_usize("service.queue_depth", 0).unwrap(), 64);
+        assert_eq!(p.get("service.assign_small"), Some("hungarian"));
+        assert_eq!(p.get("service.grid_large"), Some("native-par"));
+        assert!(p.get_bool("service.use_pjrt", false).unwrap());
+        let s = preset("smoke").unwrap();
+        assert_eq!(s.get_usize("service.workers", 0).unwrap(), 2);
+        assert!(!s.get_bool("service.use_pjrt", true).unwrap());
     }
 }

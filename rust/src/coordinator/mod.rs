@@ -1,6 +1,6 @@
 //! L3 coordination: the paper's CPU–GPU hybrid drivers with the PJRT
-//! device in the GPU role, plus the batched assignment service that
-//! serves the §6 real-time use case.
+//! device in the GPU role, plus the legacy assignment-service shim
+//! (the runtime itself now lives in `crate::service`).
 
 pub mod assignment_driver;
 pub mod maxflow_driver;
@@ -10,4 +10,4 @@ pub mod server;
 pub use assignment_driver::{PjrtAssignmentDriver, SolveTelemetry};
 pub use maxflow_driver::{solve_grid, solve_grid_with, Backend, GridEngine};
 pub use metrics::LatencyRecorder;
-pub use server::{AssignmentService, ServiceConfig, ServiceReply, ServiceReport};
+pub use server::{AssignmentService, ReplyReceiver, ServiceConfig, ServiceReply, ServiceReport};

@@ -1,27 +1,31 @@
-//! Batched assignment service — the deployment shape of the paper's §6
-//! claim ("about 1/20 s, which allows for real-time applications"): a
-//! dedicated device thread owns the PJRT state (the `xla` handles are
-//! `!Send`, exactly like a CUDA context) and serves matching requests
-//! from a queue, draining them in batches.
+//! Legacy batched assignment service — now a thin shim over the
+//! sharded solver pool (`crate::service`).
+//!
+//! The original implementation here owned its own device thread and
+//! queue; that runtime has been generalised into
+//! [`SolverPool`](crate::service::SolverPool), which serves *both*
+//! problem families with persistent workers, size-class sharding, and
+//! admission control.  This module keeps the assignment-only API
+//! (`submit` a matching instance, receive a [`ServiceReply`]) so the
+//! §6 real-time callers (CLI `serve`, E7 benches) are unchanged: one
+//! pool worker plays the old device thread, the PJRT driver is cached
+//! on it, and oversized instances are rejected by the pool's admission
+//! control instead of ad-hoc checks.
 
 use std::sync::mpsc;
-use std::thread::JoinHandle;
-use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::assignment::wave::WaveCsa;
-use crate::assignment::AssignmentSolver;
 use crate::graph::AssignmentInstance;
-use crate::runtime::ArtifactRegistry;
+use crate::service::{
+    AssignBackend, PoolConfig, ProblemInstance, RouterConfig, ShardConfig, SolveOutcome,
+    SolveReply, SolverPool,
+};
 
-use super::assignment_driver::PjrtAssignmentDriver;
-use super::metrics::LatencyRecorder;
-
-/// Service configuration.
+/// Service configuration (legacy shape).
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
-    /// Max requests drained per batch.
+    /// Kept for API compatibility only; the pool drains continuously.
     pub max_batch: usize,
     /// Prefer the PJRT backend when artifacts are discoverable.
     pub use_pjrt: bool,
@@ -52,22 +56,12 @@ pub struct ServiceReply {
     pub backend: &'static str,
 }
 
-struct Job {
-    id: u64,
-    instance: AssignmentInstance,
-    submitted: Instant,
-    reply: mpsc::Sender<Result<ServiceReply, String>>,
-}
-
-enum Msg {
-    Job(Box<Job>),
-    Shutdown(mpsc::Sender<ServiceReport>),
-}
-
 /// Aggregate service statistics, returned at shutdown.
 #[derive(Debug, Clone)]
 pub struct ServiceReport {
     pub served: usize,
+    /// The pool drains continuously; kept equal to `served` for
+    /// report-shape compatibility.
     pub batches: usize,
     pub p50_latency: f64,
     pub p99_latency: f64,
@@ -76,157 +70,99 @@ pub struct ServiceReport {
     pub backend: &'static str,
 }
 
-/// Handle to the running service (clonable submitter).
+/// Receiver for one reply; adapts the pool's [`SolveReply`] to the
+/// legacy [`ServiceReply`] at `recv` time.
+pub struct ReplyReceiver {
+    rx: mpsc::Receiver<Result<SolveReply, String>>,
+}
+
+impl ReplyReceiver {
+    pub fn recv(&self) -> Result<Result<ServiceReply, String>, mpsc::RecvError> {
+        Ok(self.rx.recv()?.and_then(convert_reply))
+    }
+}
+
+fn convert_reply(reply: SolveReply) -> Result<ServiceReply, String> {
+    match reply.outcome {
+        SolveOutcome::Assignment(r) => Ok(ServiceReply {
+            id: reply.id,
+            assignment: r.assignment,
+            weight: r.weight,
+            latency: reply.latency,
+            queue_delay: reply.queue_delay,
+            // The legacy report distinguished only the device path from
+            // "some native engine".
+            backend: if reply.backend == "pjrt" { "pjrt" } else { "native" },
+        }),
+        SolveOutcome::Grid(_) => Err("assignment service received a grid reply".to_string()),
+    }
+}
+
+/// Handle to the running service.
 pub struct AssignmentService {
-    tx: mpsc::Sender<Msg>,
-    worker: Option<JoinHandle<()>>,
-    next_id: std::sync::atomic::AtomicU64,
+    pool: SolverPool,
+    use_pjrt: bool,
 }
 
 impl AssignmentService {
-    /// Start the device thread.
+    /// Start the service: one pool worker in the old device-thread
+    /// role (the PJRT handles are `!Send`, so they cache on it).
     pub fn start(cfg: ServiceConfig) -> Self {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let worker = std::thread::spawn(move || worker_loop(cfg, rx));
+        let max_units = cfg.max_n.max(1) * cfg.max_n.max(1);
+        let pool_cfg = PoolConfig {
+            workers: 1,
+            shard: ShardConfig {
+                // Every admitted instance lands in the Small lane; the
+                // admission cap is the old `max_n` check.  The legacy
+                // queue was unbounded, so the shim must not introduce
+                // backpressure rejections old callers never handled.
+                small_max_units: max_units,
+                medium_max_units: max_units,
+                max_units,
+                queue_depth: usize::MAX,
+            },
+            router: RouterConfig {
+                // The old fallback engine was the dense wave twin.
+                assign: [AssignBackend::WaveCsa; 3],
+                use_pjrt: cfg.use_pjrt,
+                pjrt_max_n: cfg.max_n,
+                ..RouterConfig::default()
+            },
+        };
         Self {
-            tx,
-            worker: Some(worker),
-            next_id: std::sync::atomic::AtomicU64::new(0),
+            pool: SolverPool::start(pool_cfg),
+            use_pjrt: cfg.use_pjrt,
         }
     }
 
-    /// Submit an instance; returns a receiver for the reply.
-    pub fn submit(
-        &self,
-        instance: AssignmentInstance,
-    ) -> mpsc::Receiver<Result<ServiceReply, String>> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let id = self
-            .next_id
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let job = Job {
-            id,
-            instance,
-            submitted: Instant::now(),
-            reply: reply_tx,
-        };
-        // A send failure means the worker died; the receiver will report
-        // a disconnect to the caller.
-        let _ = self.tx.send(Msg::Job(Box::new(job)));
-        reply_rx
+    /// Submit an instance; returns a receiver for the reply.  A
+    /// rejection (oversized, queue full) arrives through the receiver
+    /// as `Err(reason)`.
+    pub fn submit(&self, instance: AssignmentInstance) -> ReplyReceiver {
+        ReplyReceiver {
+            rx: self.pool.submit(ProblemInstance::Assignment(instance)),
+        }
     }
 
     /// Stop the worker and collect the aggregate report.
-    pub fn shutdown(mut self) -> Result<ServiceReport> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Shutdown(tx))
-            .map_err(|_| anyhow::anyhow!("service already stopped"))?;
-        let report = rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("service dropped the report"))?;
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-        Ok(report)
-    }
-}
-
-impl Drop for AssignmentService {
-    fn drop(&mut self) {
-        if let Some(w) = self.worker.take() {
-            let (tx, _rx) = mpsc::channel();
-            let _ = self.tx.send(Msg::Shutdown(tx));
-            let _ = w.join();
-        }
-    }
-}
-
-fn worker_loop(cfg: ServiceConfig, rx: mpsc::Receiver<Msg>) {
-    // Device state lives on this thread only.
-    let mut driver: Option<PjrtAssignmentDriver> = if cfg.use_pjrt {
-        ArtifactRegistry::discover()
-            .ok()
-            .and_then(|reg| PjrtAssignmentDriver::for_size(&reg, cfg.max_n).ok())
-    } else {
-        None
-    };
-    let backend: &'static str = if driver.is_some() { "pjrt" } else { "native" };
-    let fallback = WaveCsa::default();
-
-    let mut recorder = LatencyRecorder::new();
-    let mut batches = 0usize;
-
-    let solve = |job: &Job, driver: &mut Option<PjrtAssignmentDriver>| {
-        let queue_delay = job.submitted.elapsed().as_secs_f64();
-        let outcome = if job.instance.n > cfg.max_n {
-            Err(format!(
-                "instance n={} exceeds service max_n={}",
-                job.instance.n, cfg.max_n
-            ))
+    pub fn shutdown(self) -> Result<ServiceReport> {
+        let use_pjrt = self.use_pjrt;
+        let report = self.pool.shutdown();
+        let backend = if use_pjrt && report.served_by("pjrt") > 0 {
+            "pjrt"
         } else {
-            let solved = match driver {
-                Some(d) => d.solve(&job.instance).map(|(r, _)| r),
-                None => fallback.solve(&job.instance),
-            };
-            solved.map_err(|e| e.to_string())
+            "native"
         };
-        (queue_delay, outcome)
-    };
-
-    loop {
-        let first = match rx.recv() {
-            Ok(m) => m,
-            Err(_) => break,
-        };
-        // Drain a batch.
-        let mut batch = Vec::new();
-        let mut shutdown: Option<mpsc::Sender<ServiceReport>> = None;
-        match first {
-            Msg::Job(j) => batch.push(j),
-            Msg::Shutdown(tx) => shutdown = Some(tx),
-        }
-        while shutdown.is_none() && batch.len() < cfg.max_batch {
-            match rx.try_recv() {
-                Ok(Msg::Job(j)) => batch.push(j),
-                Ok(Msg::Shutdown(tx)) => {
-                    shutdown = Some(tx);
-                    break;
-                }
-                Err(_) => break,
-            }
-        }
-        if !batch.is_empty() {
-            batches += 1;
-        }
-        for job in batch {
-            let (queue_delay, outcome) = solve(&job, &mut driver);
-            let latency = job.submitted.elapsed().as_secs_f64();
-            recorder.record(latency);
-            let reply = outcome.map(|r| ServiceReply {
-                id: job.id,
-                assignment: r.assignment,
-                weight: r.weight,
-                latency,
-                queue_delay,
-                backend,
-            });
-            let _ = job.reply.send(reply);
-        }
-        if let Some(tx) = shutdown {
-            let summary = recorder.summary();
-            let report = ServiceReport {
-                served: recorder.count(),
-                batches,
-                p50_latency: summary.as_ref().map_or(0.0, |s| s.p50),
-                p99_latency: summary.as_ref().map_or(0.0, |s| s.p99),
-                mean_latency: summary.as_ref().map_or(0.0, |s| s.mean),
-                throughput_rps: recorder.throughput(),
-                backend,
-            };
-            let _ = tx.send(report);
-            break;
-        }
+        let s = report.latency;
+        Ok(ServiceReport {
+            served: report.served,
+            batches: report.served,
+            p50_latency: s.as_ref().map_or(0.0, |s| s.p50),
+            p99_latency: s.as_ref().map_or(0.0, |s| s.p99),
+            mean_latency: s.as_ref().map_or(0.0, |s| s.mean),
+            throughput_rps: report.throughput_rps,
+            backend,
+        })
     }
 }
 
@@ -234,6 +170,7 @@ fn worker_loop(cfg: ServiceConfig, rx: mpsc::Receiver<Msg>) {
 mod tests {
     use super::*;
     use crate::assignment::hungarian::Hungarian;
+    use crate::assignment::AssignmentSolver;
     use crate::util::Rng;
     use crate::workloads::bipartite_gen::uniform_costs;
 
@@ -275,5 +212,6 @@ mod tests {
         let rx = service.submit(inst);
         let reply = rx.recv().unwrap();
         assert!(reply.is_err());
+        assert!(reply.unwrap_err().contains("too large"));
     }
 }

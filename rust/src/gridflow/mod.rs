@@ -9,7 +9,7 @@ pub mod solver;
 pub mod state;
 pub mod wave;
 
-pub use par_wave::{par_wave_with, NativeParGridExecutor, ParWaveScratch};
+pub use par_wave::{par_wave_pooled, par_wave_with, NativeParGridExecutor, ParWaveScratch};
 pub use solver::{GridExecutor, GridSolveReport, HybridGridSolver, NativeGridExecutor};
 pub use state::init_state;
 pub use wave::{native_wave, WaveStats};

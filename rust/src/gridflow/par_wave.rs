@@ -22,10 +22,12 @@
 //! per-wave stats, state, active set, and on-list flags.
 
 use std::ops::Range;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::runtime::device::{GridStepStats, GridWireState};
+use crate::service::pool::WorkerPool;
 
 use super::solver::GridExecutor;
 use super::wave::{decide, Decision, WaveStats, DIRS, OPP};
@@ -218,6 +220,22 @@ fn apply_tile(job: TileJob<'_>, ww: usize) {
     tile.stats = stats;
 }
 
+/// Execute one batch of per-worker jobs: on the persistent pool when
+/// one is lent, otherwise on freshly scoped threads (the original
+/// engine shape, still used when no pool exists).
+fn run_workers<'env>(pool: Option<&WorkerPool>, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+    match pool {
+        Some(p) => p.scope_run(jobs),
+        None => {
+            std::thread::scope(|s| {
+                for job in jobs {
+                    s.spawn(job);
+                }
+            });
+        }
+    }
+}
+
 /// One synchronous wave executed by `threads` workers over row-stripe
 /// tiles; bit-exact with [`super::wave::native_wave_with`] (same stats,
 /// same state trajectory, same surviving active set).
@@ -225,6 +243,28 @@ pub fn par_wave_with(
     st: &mut GridWireState,
     scratch: &mut ParWaveScratch,
     threads: usize,
+) -> WaveStats {
+    par_wave_exec(st, scratch, threads, None)
+}
+
+/// Same wave, but the workers are the persistent [`WorkerPool`]
+/// threads instead of per-wave scoped spawns — two condvar wakeups per
+/// wave instead of two spawn/join rounds.  Bit-exact with
+/// [`par_wave_with`] at any thread count: tile→worker partitioning only
+/// affects which thread applies a tile, and tiles are disjoint.
+pub fn par_wave_pooled(
+    st: &mut GridWireState,
+    scratch: &mut ParWaveScratch,
+    pool: &WorkerPool,
+) -> WaveStats {
+    par_wave_exec(st, scratch, pool.threads(), Some(pool))
+}
+
+fn par_wave_exec(
+    st: &mut GridWireState,
+    scratch: &mut ParWaveScratch,
+    threads: usize,
+    pool: Option<&WorkerPool>,
 ) -> WaveStats {
     let (hh, ww) = (st.height, st.width);
     let cells = hh * ww;
@@ -246,22 +286,22 @@ pub fn par_wave_with(
         for (t, chunk) in scratch.decisions.chunks_mut(tile_cells).enumerate() {
             per_worker[t % threads].push((&tiles[t], chunk));
         }
-        std::thread::scope(|s| {
-            for work in per_worker {
-                s.spawn(move || {
-                    for (tile, decisions) in work {
-                        let base = tile.cells.start;
-                        for &c in &tile.active {
-                            let c = c as usize;
-                            if st_ref.e[c] <= 0 {
-                                continue;
-                            }
-                            decisions[c - base] = decide(st_ref, c);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(threads);
+        for work in per_worker {
+            jobs.push(Box::new(move || {
+                for (tile, decisions) in work {
+                    let base = tile.cells.start;
+                    for &c in &tile.active {
+                        let c = c as usize;
+                        if st_ref.e[c] <= 0 {
+                            continue;
                         }
+                        decisions[c - base] = decide(st_ref, c);
                     }
-                });
-            }
-        });
+                }
+            }));
+        }
+        run_workers(pool, jobs);
     }
 
     // --- Phase 2: apply, parallel with owned interiors ------------------
@@ -303,15 +343,15 @@ pub fn par_wave_with(
                 decisions,
             });
         }
-        std::thread::scope(|s| {
-            for jobs in per_worker {
-                s.spawn(move || {
-                    for job in jobs {
-                        apply_tile(job, ww);
-                    }
-                });
-            }
-        });
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(threads);
+        for work in per_worker {
+            jobs.push(Box::new(move || {
+                for job in work {
+                    apply_tile(job, ww);
+                }
+            }));
+        }
+        run_workers(pool, jobs);
     }
 
     // --- Phase 3: sequential border reconciliation ----------------------
@@ -369,6 +409,7 @@ pub struct NativeParGridExecutor {
     pub tile_rows: usize,
     scratch: ParWaveScratch,
     needs_rebuild: bool,
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl NativeParGridExecutor {
@@ -380,12 +421,28 @@ impl NativeParGridExecutor {
             tile_rows,
             scratch: ParWaveScratch::new(tile_rows),
             needs_rebuild: true,
+            pool: None,
         }
     }
 
     pub fn with_k_inner(mut self, k_inner: usize) -> Self {
         self.k_inner = k_inner.max(1);
         self
+    }
+
+    /// Borrow a persistent worker pool for the wave phases instead of
+    /// spawning scoped threads per wave.  The pool's width becomes the
+    /// effective worker count.  This is the ROADMAP "persistent worker
+    /// pool for par_wave" item: on small grids the per-wave spawn/join
+    /// overhead dominated, so pooled execution is what lets `native-par`
+    /// serve sub-128² instances from the solver service.
+    pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    pub fn is_pooled(&self) -> bool {
+        self.pool.is_some()
     }
 }
 
@@ -401,7 +458,11 @@ impl GridExecutor for NativeParGridExecutor {
     }
 
     fn name(&self) -> &'static str {
-        "native-par"
+        if self.pool.is_some() {
+            "native-par-pooled"
+        } else {
+            "native-par"
+        }
     }
 
     fn invalidate(&mut self) {
@@ -425,7 +486,10 @@ impl GridExecutor for NativeParGridExecutor {
             if self.scratch.active_count() == 0 {
                 break;
             }
-            let w = par_wave_with(st, &mut self.scratch, self.threads);
+            let w = match &self.pool {
+                Some(pool) => par_wave_pooled(st, &mut self.scratch, pool),
+                None => par_wave_with(st, &mut self.scratch, self.threads),
+            };
             stats.sink_flow += w.sink_flow;
             stats.src_flow += w.src_flow;
             stats.pushes += w.pushes;
@@ -546,6 +610,35 @@ mod tests {
             assert_eq!(got.pushes, want.pushes, "t={threads} tr={tile_rows}");
             assert_eq!(got.relabels, want.relabels, "t={threads} tr={tile_rows}");
             assert_eq!(got.host_rounds, want.host_rounds, "t={threads} tr={tile_rows}");
+        }
+    }
+
+    #[test]
+    fn pooled_executor_bit_exact_with_sequential() {
+        use crate::gridflow::{HybridGridSolver, NativeGridExecutor};
+        use crate::util::Rng;
+        use crate::workloads::grid_gen::random_grid;
+
+        let mut rng = Rng::seeded(91);
+        let net = random_grid(&mut rng, 9, 7, 11, 0.3, 0.3);
+        let solver = HybridGridSolver::with_cycle(48);
+        let mut seq_exec = NativeGridExecutor::default();
+        let want = solver.solve(&net, &mut seq_exec).unwrap();
+        let pool = Arc::new(WorkerPool::new(3));
+        for tile_rows in [1usize, 2, 4, 16] {
+            let mut exec =
+                NativeParGridExecutor::new(2, tile_rows).with_pool(Arc::clone(&pool));
+            assert!(exec.is_pooled());
+            // Two back-to-back solves on the same executor: the pool
+            // and scratch are reused across requests, as in the
+            // service workers.
+            for round in 0..2 {
+                let got = solver.solve(&net, &mut exec).unwrap();
+                assert_eq!(got.flow, want.flow, "tr={tile_rows} round={round}");
+                assert_eq!(got.waves, want.waves, "tr={tile_rows} round={round}");
+                assert_eq!(got.pushes, want.pushes, "tr={tile_rows} round={round}");
+                assert_eq!(got.relabels, want.relabels, "tr={tile_rows} round={round}");
+            }
         }
     }
 }

@@ -11,8 +11,9 @@
 //!   loops with device-side quiescence detection.
 //! * **L3** — this crate: every runtime component, from the graph
 //!   substrates and sequential baselines through the lock-free atomic
-//!   engines up to the hybrid CPU/device coordinator and the batched
-//!   assignment service.
+//!   engines up to the hybrid CPU/device coordinator and the sharded
+//!   solver-pool service (`service`) that serves both problem families
+//!   under load.
 //!
 //! See DESIGN.md for the full system inventory and experiment index.
 
@@ -27,6 +28,7 @@ pub mod energy;
 pub mod graph;
 pub mod opticalflow;
 pub mod reductions;
+pub mod service;
 pub mod workloads;
 pub mod prop;
 pub mod runtime;

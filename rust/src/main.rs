@@ -8,6 +8,8 @@
 //! flowmatch segment   --height 32 --width 32 [--lambda 12] [--seed 1]
 //! flowmatch optflow   --height 32 --width 32 [--features 12] [--dy 2 --dx 1]
 //! flowmatch serve     --requests 50 --n 30 [--fps 20] [--native]
+//! flowmatch solver-pool serve   --workers 4 --requests 40 --grid-requests 8 [--fps 20]
+//! flowmatch solver-pool loadgen --workers 4 --requests 200 [--baseline]
 //! flowmatch artifacts
 //! ```
 
@@ -45,6 +47,7 @@ fn run(args: Args) -> Result<()> {
         Some("segment") => cmd_segment(&args),
         Some("optflow") => cmd_optflow(&args),
         Some("serve") => cmd_serve(&args),
+        Some("solver-pool") => cmd_solver_pool(&args),
         Some("artifacts") => cmd_artifacts(),
         Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
         None => {
@@ -54,13 +57,17 @@ fn run(args: Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "flowmatch <info|maxflow|assign|segment|optflow|serve|artifacts> [options]
+const USAGE: &str = "flowmatch <info|maxflow|assign|segment|optflow|serve|solver-pool|artifacts> [options]
   maxflow   --height H --width W [--cycle N] [--seed S] [--native] [--dimacs FILE]
             [--engine auto|native|native-par] [--threads T] [--tile-rows R] [--preset paper|smoke]
   assign    --n N [--max-weight C] [--alpha A] [--engine NAME] [--seed S] [--preset paper|smoke]
   segment   --height H --width W [--lambda L] [--seed S]
   optflow   --height H --width W [--features K] [--dy D --dx D]
-  serve     --requests R --n N [--fps F] [--native] [--batch B]";
+  serve     --requests R --n N [--fps F] [--native] [--batch B]
+  solver-pool <serve|loadgen>
+            [--workers W] [--requests R] [--grid-requests G] [--n N] [--grid S]
+            [--large-grid S] [--fps F] [--queue-depth D] [--max-units U] [--seed S]
+            [--native] [--preset paper|smoke] [--baseline (loadgen)]";
 
 fn cmd_info() -> Result<()> {
     println!("flowmatch — parallel flow and matching algorithms (Łupińska 2011 reproduction)");
@@ -362,6 +369,158 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "misses"
         }
     );
+    Ok(())
+}
+
+fn fmt_lat(tag: &str, s: &Option<flowmatch::util::stats::Summary>) -> String {
+    match s {
+        Some(s) => format!(
+            "{tag}: p50={} p95={} p99={} mean={} ({} reqs)",
+            fmt_duration(s.p50),
+            fmt_duration(s.p95),
+            fmt_duration(s.p99),
+            fmt_duration(s.mean),
+            s.count
+        ),
+        None => format!("{tag}: no samples"),
+    }
+}
+
+fn cmd_solver_pool(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "workers",
+        "requests",
+        "grid-requests",
+        "n",
+        "grid",
+        "large-grid",
+        "fps",
+        "queue-depth",
+        "max-units",
+        "seed",
+        "native",
+        "preset",
+        "baseline",
+        "cycle",
+        "threads",
+        "tile-rows",
+    ])?;
+    let action = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("serve");
+    if action != "serve" && action != "loadgen" {
+        bail!("unknown solver-pool action {action:?} (expected serve or loadgen)");
+    }
+
+    let mut pool_cfg = match args.get("preset") {
+        Some(p) => flowmatch::service::PoolConfig::from_config(&config::preset(p)?)?,
+        None => flowmatch::service::PoolConfig::default(),
+    };
+    pool_cfg.workers = args.get_usize("workers", pool_cfg.workers)?;
+    pool_cfg.shard.queue_depth = args.get_usize("queue-depth", pool_cfg.shard.queue_depth)?;
+    pool_cfg.shard.max_units = args.get_usize("max-units", pool_cfg.shard.max_units)?;
+    pool_cfg.router.cycle_waves = args.get_usize("cycle", pool_cfg.router.cycle_waves)?;
+    pool_cfg.router.par_threads = args.get_usize("threads", pool_cfg.router.par_threads)?;
+    pool_cfg.router.tile_rows = args.get_usize("tile-rows", pool_cfg.router.tile_rows)?;
+    if args.flag("native") {
+        pool_cfg.router.use_pjrt = false;
+    }
+
+    let requests = args.get_usize("requests", 40)?;
+    let grid_requests = args.get_usize("grid-requests", 8)?;
+    let n = args.get_usize("n", 30)?;
+    // Defaults straddle the default shard boundaries: 48² grids are
+    // Medium, 96² grids are Large, matchings are Small.
+    let grid = args.get_usize("grid", 48)?;
+    let large_grid = args.get_usize("large-grid", 96)?;
+    let fps = args.get_f64("fps", 20.0)?;
+    let seed = args.get_u64("seed", 1)?;
+    pool_cfg.router.pjrt_max_n = pool_cfg.router.pjrt_max_n.max(n);
+
+    // serve = open-loop at the trace's frame rate (the §6 real-time
+    // shape); loadgen = closed-loop (the throughput shape).
+    let open_loop = action == "serve" && fps > 0.0;
+    let gap = if open_loop { 1.0 / fps } else { 0.0 };
+    let trace_cfg = workloads::MixedTraceConfig {
+        assign: workloads::TraceConfig {
+            requests,
+            n,
+            arrival_gap: gap,
+            ..Default::default()
+        },
+        grid_requests,
+        grid_size: grid,
+        large_size: large_grid,
+        grid_arrival_gap: if open_loop { 3.0 * gap } else { 0.0 },
+        ..Default::default()
+    };
+    let mut rng = Rng::seeded(seed);
+    let trace = workloads::MixedTrace::generate(&mut rng, &trace_cfg);
+    println!(
+        "solver-pool {action}: {} requests ({} assignment n={n}, {} grid {grid}²/{large_grid}²), {} workers",
+        trace.len(),
+        trace.assignment_count(),
+        trace.grid_count(),
+        pool_cfg.workers
+    );
+
+    let shard_cfg = pool_cfg.shard.clone();
+    let router_cfg = pool_cfg.router.clone();
+    let pool = flowmatch::service::SolverPool::start(pool_cfg);
+    let out = flowmatch::service::replay(&pool, &trace, open_loop);
+    let report = pool.shutdown();
+
+    println!(
+        "client : ok={} rejected={} failed={} wall={} throughput={:.1} req/s",
+        out.ok,
+        out.rejected,
+        out.failed,
+        fmt_duration(out.wall_seconds),
+        out.throughput_rps
+    );
+    println!("  {}", fmt_lat("assignment", &out.assign));
+    println!("  {}", fmt_lat("grid      ", &out.grid));
+    for class in flowmatch::service::SizeClass::ALL {
+        println!(
+            "  {}",
+            fmt_lat(
+                &format!("{:<10}", class.name()),
+                &report.class_latency[class.index()]
+            )
+        );
+    }
+    let backends: Vec<String> = report
+        .backends
+        .iter()
+        .map(|(b, c)| format!("{b}={c}"))
+        .collect();
+    println!("server : served={} via [{}]", report.served, backends.join(", "));
+    if let Some(s) = &out.assign {
+        println!(
+            "paper §6 bar (1/20 s per matching): p50 {} ({} vs 50 ms)",
+            if s.p50 <= 0.05 { "MET" } else { "MISSED" },
+            fmt_duration(s.p50)
+        );
+    }
+
+    if action == "loadgen" && args.flag("baseline") {
+        println!("\nbaseline: spawn-one-thread-per-request, no worker reuse...");
+        let base = flowmatch::service::replay_spawn_baseline(&trace, &shard_cfg, &router_cfg);
+        println!(
+            "baseline: ok={} wall={} throughput={:.1} req/s",
+            base.ok,
+            fmt_duration(base.wall_seconds),
+            base.throughput_rps
+        );
+        if base.wall_seconds > 0.0 && out.wall_seconds > 0.0 {
+            println!(
+                "pooled path speedup over per-request spawn: {:.2}x",
+                base.wall_seconds / out.wall_seconds
+            );
+        }
+    }
     Ok(())
 }
 

@@ -1,0 +1,243 @@
+//! Load generation and trace replay against the solver pool.
+//!
+//! Builds on `workloads::traces`: a [`MixedTrace`] (assignment stream +
+//! grid stream, arrival-sorted) is replayed either open-loop (honour
+//! arrival offsets — the §6 real-time shape) or closed-loop (submit as
+//! fast as admission control allows — the throughput shape).  The
+//! replay records client-side what the service promised: per-request
+//! latency split by family and p50/p95/p99 summaries, plus the reject
+//! count that the bounded shards produced.
+//!
+//! [`replay_spawn_baseline`] is the anti-pattern the pool replaces — a
+//! fresh thread and fresh solver state per request — kept as the
+//! benchmark baseline for `bench_service`.
+
+use std::fmt;
+
+use crate::util::stats::Summary;
+use crate::util::Timer;
+use crate::workloads::{MixedTrace, ProblemInstance};
+
+use super::pool::SolverPool;
+use super::router::{RouterConfig, WorkerBackends};
+use super::shard::{RejectReason, ShardConfig};
+use super::SolveReply;
+
+/// Why a replayed request produced no reply.
+#[derive(Debug, Clone)]
+pub enum ReplayError {
+    /// Shed by admission control (the typed reason, not a re-parsed
+    /// message).
+    Rejected(RejectReason),
+    /// The solve itself failed (solver error, panic, dropped reply).
+    Failed(String),
+}
+
+impl fmt::Display for ReplayError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReplayError::Rejected(r) => write!(f, "rejected: {r}"),
+            ReplayError::Failed(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+/// Outcome of one replay run, measured at the client.
+#[derive(Debug, Clone)]
+pub struct ReplayOutcome {
+    pub sent: usize,
+    pub ok: usize,
+    pub rejected: usize,
+    pub failed: usize,
+    pub wall_seconds: f64,
+    /// Served requests per wall-clock second.
+    pub throughput_rps: f64,
+    pub overall: Option<Summary>,
+    pub assign: Option<Summary>,
+    pub grid: Option<Summary>,
+    /// Per-request outcomes in trace order, for oracle verification by
+    /// the caller.
+    pub replies: Vec<(usize, Result<SolveReply, ReplayError>)>,
+}
+
+impl ReplayOutcome {
+    fn from_replies(replies: Vec<(usize, Result<SolveReply, ReplayError>)>, wall: f64) -> Self {
+        let sent = replies.len();
+        let mut assign = Vec::new();
+        let mut grid = Vec::new();
+        let mut rejected = 0usize;
+        let mut failed = 0usize;
+        for (_, r) in &replies {
+            match r {
+                Ok(reply) => {
+                    if reply.outcome.family() == "assignment" {
+                        assign.push(reply.latency);
+                    } else {
+                        grid.push(reply.latency);
+                    }
+                }
+                Err(ReplayError::Rejected(_)) => rejected += 1,
+                Err(ReplayError::Failed(_)) => failed += 1,
+            }
+        }
+        let ok = assign.len() + grid.len();
+        let all: Vec<f64> = assign.iter().chain(grid.iter()).copied().collect();
+        Self {
+            sent,
+            ok,
+            rejected,
+            failed,
+            wall_seconds: wall,
+            throughput_rps: if wall > 0.0 { ok as f64 / wall } else { 0.0 },
+            overall: Summary::of(&all),
+            assign: Summary::of(&assign),
+            grid: Summary::of(&grid),
+            replies,
+        }
+    }
+}
+
+/// Replay `trace` through `pool`.
+///
+/// Open-loop honours arrival offsets and records rejections as shed
+/// load — a real-time client cannot wait, so backpressure is the
+/// service protecting its latency.  Closed-loop submits as fast as
+/// admission control allows: on `QueueFull` it *paces* (briefly waits
+/// and retries) instead of shedding, so a closed-loop run measures
+/// throughput over the whole trace rather than over whichever prefix
+/// fit the queue depth.
+pub fn replay(pool: &SolverPool, trace: &MixedTrace, open_loop: bool) -> ReplayOutcome {
+    let start = Timer::start();
+    let mut pending = Vec::with_capacity(trace.len());
+    for req in &trace.requests {
+        if open_loop {
+            let now = start.elapsed();
+            if req.arrival > now {
+                std::thread::sleep(std::time::Duration::from_secs_f64(req.arrival - now));
+            }
+        }
+        let slot = loop {
+            match pool.try_submit(req.instance.clone()) {
+                Ok(rx) => break Ok(rx),
+                // Pace only when something is draining: a 0-worker
+                // pool (admission-only test mode) must still reject.
+                Err(RejectReason::QueueFull { .. }) if !open_loop && pool.workers() > 0 => {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                Err(reason) => break Err(reason),
+            }
+        };
+        match slot {
+            Ok(rx) => pending.push((req.id, Ok(rx))),
+            Err(reason) => pending.push((req.id, Err(ReplayError::Rejected(reason)))),
+        }
+    }
+    let mut replies = Vec::with_capacity(pending.len());
+    for (id, slot) in pending {
+        let outcome = match slot {
+            Ok(rx) => match rx.recv() {
+                Ok(reply) => reply.map_err(ReplayError::Failed),
+                Err(_) => Err(ReplayError::Failed("service dropped the reply".to_string())),
+            },
+            Err(err) => Err(err),
+        };
+        replies.push((id, outcome));
+    }
+    ReplayOutcome::from_replies(replies, start.elapsed())
+}
+
+/// The pre-pool deployment shape, kept as the benchmark baseline: one
+/// fresh OS thread *and one fresh backend state* per request (no
+/// worker reuse, no scratch/artifact caching, no admission control).
+pub fn replay_spawn_baseline(
+    trace: &MixedTrace,
+    shard: &ShardConfig,
+    router: &RouterConfig,
+) -> ReplayOutcome {
+    let start = Timer::start();
+    let mut handles = Vec::with_capacity(trace.len());
+    for req in &trace.requests {
+        let instance = req.instance.clone();
+        let class = shard.classify(instance.work_units());
+        let rcfg = router.clone();
+        let id = req.id;
+        handles.push((
+            id,
+            std::thread::spawn(move || {
+                let t = Timer::start();
+                let mut backends = WorkerBackends::new(rcfg, None);
+                let solved = backends.solve(class, &instance);
+                let latency = t.elapsed();
+                solved
+                    .map(|(outcome, backend)| SolveReply {
+                        id: id as u64,
+                        class,
+                        worker: usize::MAX,
+                        backend,
+                        latency,
+                        queue_delay: 0.0,
+                        outcome,
+                    })
+                    .map_err(|e| ReplayError::Failed(format!("solver error: {e:#}")))
+            }),
+        ));
+    }
+    let mut replies = Vec::with_capacity(handles.len());
+    for (id, handle) in handles {
+        let outcome = match handle.join() {
+            Ok(r) => r,
+            Err(_) => Err(ReplayError::Failed("solver panicked".to_string())),
+        };
+        replies.push((id, outcome));
+    }
+    ReplayOutcome::from_replies(replies, start.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::hungarian::Hungarian;
+    use crate::assignment::AssignmentSolver;
+    use crate::util::Rng;
+    use crate::workloads::{MixedTraceConfig, TraceConfig};
+
+    fn tiny_trace(seed: u64) -> MixedTrace {
+        let mut rng = Rng::seeded(seed);
+        MixedTrace::generate(
+            &mut rng,
+            &MixedTraceConfig {
+                assign: TraceConfig {
+                    requests: 5,
+                    n: 8,
+                    arrival_gap: 0.0,
+                    ..Default::default()
+                },
+                grid_requests: 2,
+                grid_size: 6,
+                grid_arrival_gap: 0.0,
+                large_every: 0,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn spawn_baseline_solves_the_whole_trace() {
+        let trace = tiny_trace(5);
+        let out = replay_spawn_baseline(&trace, &ShardConfig::default(), &RouterConfig::default());
+        assert_eq!(out.sent, 7);
+        assert_eq!(out.ok, 7);
+        assert_eq!(out.rejected + out.failed, 0);
+        assert!(out.overall.is_some());
+        // Every assignment answer is optimal.
+        for (id, reply) in &out.replies {
+            if let (Ok(reply), ProblemInstance::Assignment(inst)) =
+                (reply, &trace.requests[*id].instance)
+            {
+                if let Some(weight) = reply.outcome.weight() {
+                    assert_eq!(weight, Hungarian.solve(inst).unwrap().weight);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! The sharded solver-pool service: one persistent runtime that serves
+//! **both** paper algorithms — grid max-flow (§4) and assignment (§5) —
+//! behind a single submit/reply API, built for the §6 real-time claim
+//! ("about 1/20 s, which allows for real-time applications") under
+//! mixed load.
+//!
+//! Layers:
+//!
+//! * [`pool`] — the persistent workers: a scoped-job [`WorkerPool`]
+//!   (borrowed by the tiled wave engine instead of per-wave thread
+//!   spawns) and the request-serving [`SolverPool`].
+//! * [`shard`] — size-class sharded queues with admission control and
+//!   reject-with-reason backpressure, so small real-time matchings
+//!   never sit behind 512² grid solves.
+//! * [`router`] — per-size-class backend selection (hungarian /
+//!   csa-seq / csa-lockfree / csa-wave / PJRT for assignment; native /
+//!   native-par / fifo-lockfree for grids) with per-worker solver and
+//!   artifact caches.
+//! * [`loadgen`] — mixed-trace replay (open- and closed-loop) with
+//!   p50/p95/p99 latency and throughput reporting, plus the
+//!   spawn-per-request baseline the pool replaces.
+//!
+//! The legacy assignment-only `coordinator::server::AssignmentService`
+//! is now a thin shim over [`SolverPool`].
+
+pub mod loadgen;
+pub mod pool;
+pub mod router;
+pub mod shard;
+
+use anyhow::Result;
+
+use crate::assignment::AssignmentResult;
+use crate::config::Config;
+use crate::gridflow::GridSolveReport;
+
+pub use crate::workloads::ProblemInstance;
+pub use loadgen::{replay, replay_spawn_baseline, ReplayError, ReplayOutcome};
+pub use pool::{PoolReport, SolverPool, WorkerPool};
+pub use router::{AssignBackend, GridBackend, RouterConfig};
+pub use shard::{RejectReason, ShardConfig, SizeClass};
+
+/// What a request solved to, by family.
+#[derive(Debug, Clone)]
+pub enum SolveOutcome {
+    Assignment(AssignmentResult),
+    Grid(GridSolveReport),
+}
+
+impl SolveOutcome {
+    pub fn family(&self) -> &'static str {
+        match self {
+            SolveOutcome::Assignment(_) => "assignment",
+            SolveOutcome::Grid(_) => "grid",
+        }
+    }
+
+    /// Matching weight, for assignment outcomes.
+    pub fn weight(&self) -> Option<i64> {
+        match self {
+            SolveOutcome::Assignment(r) => Some(r.weight),
+            SolveOutcome::Grid(_) => None,
+        }
+    }
+
+    /// Max-flow value, for grid outcomes.
+    pub fn flow(&self) -> Option<i64> {
+        match self {
+            SolveOutcome::Assignment(_) => None,
+            SolveOutcome::Grid(r) => Some(r.flow),
+        }
+    }
+
+    pub fn assignment(&self) -> Option<&AssignmentResult> {
+        match self {
+            SolveOutcome::Assignment(r) => Some(r),
+            SolveOutcome::Grid(_) => None,
+        }
+    }
+
+    pub fn grid(&self) -> Option<&GridSolveReport> {
+        match self {
+            SolveOutcome::Assignment(_) => None,
+            SolveOutcome::Grid(r) => Some(r),
+        }
+    }
+}
+
+/// One reply from the pool.
+#[derive(Debug, Clone)]
+pub struct SolveReply {
+    pub id: u64,
+    pub class: SizeClass,
+    /// Index of the solver worker that served the request
+    /// (`usize::MAX` for the spawn-baseline path).
+    pub worker: usize,
+    /// Backend that actually served it (e.g. "hungarian", "pjrt",
+    /// "native-par").
+    pub backend: &'static str,
+    /// Seconds from submit to completion.
+    pub latency: f64,
+    /// Seconds spent queued before a worker picked the request up.
+    pub queue_delay: f64,
+    pub outcome: SolveOutcome,
+}
+
+/// Full pool configuration: worker count + sharding + routing.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    pub workers: usize,
+    pub shard: ShardConfig,
+    pub router: RouterConfig,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            shard: ShardConfig::default(),
+            router: RouterConfig::default(),
+        }
+    }
+}
+
+impl PoolConfig {
+    /// Read `[service]` keys from a config (preset or file), falling
+    /// back to the defaults for anything missing.
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let d = PoolConfig::default();
+        let mut out = PoolConfig {
+            workers: cfg.get_usize("service.workers", d.workers)?,
+            shard: ShardConfig {
+                small_max_units: cfg
+                    .get_usize("service.small_units", d.shard.small_max_units)?,
+                medium_max_units: cfg
+                    .get_usize("service.medium_units", d.shard.medium_max_units)?,
+                queue_depth: cfg.get_usize("service.queue_depth", d.shard.queue_depth)?,
+                max_units: cfg.get_usize("service.max_units", d.shard.max_units)?,
+            },
+            router: RouterConfig {
+                use_pjrt: cfg.get_bool("service.use_pjrt", d.router.use_pjrt)?,
+                pjrt_max_n: cfg.get_usize("service.pjrt_max_n", d.router.pjrt_max_n)?,
+                alpha: cfg.get_i64("service.alpha", d.router.alpha)?,
+                csa_threads: cfg.get_usize("service.csa_threads", d.router.csa_threads)?,
+                cycle_waves: cfg.get_usize("service.cycle", d.router.cycle_waves)?,
+                par_threads: cfg.get_usize("service.threads", d.router.par_threads)?,
+                tile_rows: cfg.get_usize("service.tile_rows", d.router.tile_rows)?,
+                ..d.router
+            },
+        };
+        for (i, key) in ["assign_small", "assign_medium", "assign_large"]
+            .iter()
+            .enumerate()
+        {
+            if let Some(name) = cfg.get(&format!("service.{key}")) {
+                out.router.assign[i] = AssignBackend::parse(name)?;
+            }
+        }
+        for (i, key) in ["grid_small", "grid_medium", "grid_large"].iter().enumerate() {
+            if let Some(name) = cfg.get(&format!("service.{key}")) {
+                out.router.grid[i] = GridBackend::parse(name)?;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_config_from_preset_config() {
+        let cfg = Config::parse(
+            "[service]\nworkers = 3\nqueue_depth = 8\nsmall_units = 100\n\
+             medium_units = 1000\nmax_units = 5000\nassign_medium = \"csa-seq\"\n\
+             grid_large = \"fifo-lockfree\"\ncycle = 99\nthreads = 2\n",
+        )
+        .unwrap();
+        let pc = PoolConfig::from_config(&cfg).unwrap();
+        assert_eq!(pc.workers, 3);
+        assert_eq!(pc.shard.queue_depth, 8);
+        assert_eq!(pc.shard.small_max_units, 100);
+        assert_eq!(pc.shard.max_units, 5000);
+        assert_eq!(pc.router.assign[1], AssignBackend::CsaSeq);
+        assert_eq!(pc.router.assign[0], AssignBackend::Hungarian);
+        assert_eq!(pc.router.grid[2], GridBackend::FifoLockfree);
+        assert_eq!(pc.router.cycle_waves, 99);
+        assert_eq!(pc.router.par_threads, 2);
+    }
+
+    #[test]
+    fn bad_backend_name_rejected() {
+        let cfg = Config::parse("[service]\nassign_small = \"nope\"\n").unwrap();
+        assert!(PoolConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn outcome_accessors() {
+        let g = SolveOutcome::Grid(GridSolveReport {
+            flow: 7,
+            ..Default::default()
+        });
+        assert_eq!(g.flow(), Some(7));
+        assert_eq!(g.weight(), None);
+        assert_eq!(g.family(), "grid");
+        assert!(g.grid().is_some() && g.assignment().is_none());
+    }
+}

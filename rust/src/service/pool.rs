@@ -1,0 +1,511 @@
+//! The persistent worker pools.
+//!
+//! Two pools live here:
+//!
+//! * [`WorkerPool`] — N long-lived OS threads parked on a condvar that
+//!   execute batches of *scoped* jobs (closures borrowing the caller's
+//!   stack).  This is the engine-room primitive: the tiled wave engine
+//!   (`gridflow::par_wave`) borrows it instead of spawning two rounds
+//!   of scoped threads per wave, which retires the per-wave spawn
+//!   overhead the ROADMAP flagged.
+//! * [`SolverPool`] — the request-serving runtime: N long-lived solver
+//!   workers pull [`QueuedJob`]s from the size-class sharded queues
+//!   ([`super::shard`]), route them to a backend ([`super::router`],
+//!   with per-worker solver/artifact caches), and reply over the
+//!   per-request channel.  No thread is ever spawned per request.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::metrics::LatencyRecorder;
+use crate::util::stats::Summary;
+use crate::workloads::ProblemInstance;
+
+use super::router::{RouterConfig, WorkerBackends};
+use super::shard::{QueuedJob, RejectReason, ShardedQueues, SizeClass};
+use super::{PoolConfig, SolveReply};
+
+// ---------------------------------------------------------------------------
+// WorkerPool: persistent threads executing scoped job batches
+// ---------------------------------------------------------------------------
+
+type StaticJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion latch for one `scope_run` batch.
+struct Latch {
+    state: Mutex<(usize, usize)>, // (remaining, panicked)
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new((n, 0)),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.0 -= 1;
+        if panicked {
+            st.1 += 1;
+        }
+        if st.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Wait for every job; returns how many panicked.
+    fn wait(&self) -> usize {
+        let mut st = self.state.lock().unwrap();
+        while st.0 > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.1
+    }
+}
+
+struct PoolQueue {
+    jobs: VecDeque<(StaticJob, Arc<Latch>)>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    queue: Mutex<PoolQueue>,
+    work_cv: Condvar,
+}
+
+/// A fixed set of long-lived worker threads that run scoped job
+/// batches.  Threads park on a condvar between batches, so handing a
+/// wave's two phases to the pool costs two wakeups instead of two
+/// rounds of `thread::spawn`.
+///
+/// Concurrent `scope_run` calls from different threads are safe (each
+/// batch has its own completion latch); a job must never call
+/// `scope_run` on the pool it runs on (it would deadlock waiting for a
+/// worker slot it occupies).
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(PoolQueue {
+                jobs: VecDeque::new(),
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+        });
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("flowmatch-pool-{i}"))
+                    .spawn(move || pool_worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run every job to completion on the pool, blocking until all are
+    /// done.  Propagates a panic if any job panicked.
+    ///
+    /// The jobs may borrow from the caller's stack (`'env`): the
+    /// lifetime erasure below is sound because this function does not
+    /// return until every job has finished executing, so no borrow
+    /// escapes the frame that owns it — the same contract
+    /// `std::thread::scope` enforces.
+    pub fn scope_run<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let latch = Latch::new(jobs.len());
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            assert!(!q.shutdown, "scope_run on a shut-down WorkerPool");
+            for job in jobs {
+                // SAFETY: `latch.wait()` below blocks until this job has
+                // run to completion (or panicked), so the 'env borrows
+                // inside it cannot outlive this call.
+                let job: StaticJob = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, StaticJob>(job)
+                };
+                q.jobs.push_back((job, Arc::clone(&latch)));
+            }
+        }
+        self.shared.work_cv.notify_all();
+        let panicked = latch.wait();
+        if panicked > 0 {
+            panic!("{panicked} WorkerPool job(s) panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn pool_worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let (job, latch) = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(item) = q.jobs.pop_front() {
+                    break item;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        latch.complete(outcome.is_err());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SolverPool: the sharded request-serving runtime
+// ---------------------------------------------------------------------------
+
+struct PoolMetrics {
+    overall: LatencyRecorder,
+    assign: LatencyRecorder,
+    grid: LatencyRecorder,
+    per_class: [LatencyRecorder; 3],
+    rejected: usize,
+    backends: BTreeMap<&'static str, usize>,
+}
+
+impl PoolMetrics {
+    fn new() -> Self {
+        Self {
+            overall: LatencyRecorder::new(),
+            assign: LatencyRecorder::new(),
+            grid: LatencyRecorder::new(),
+            per_class: [
+                LatencyRecorder::new(),
+                LatencyRecorder::new(),
+                LatencyRecorder::new(),
+            ],
+            rejected: 0,
+            backends: BTreeMap::new(),
+        }
+    }
+
+    fn record(&mut self, class: SizeClass, family: &'static str, backend: &'static str, lat: f64) {
+        self.overall.record(lat);
+        if family == "assignment" {
+            self.assign.record(lat);
+        } else {
+            self.grid.record(lat);
+        }
+        self.per_class[class.index()].record(lat);
+        *self.backends.entry(backend).or_insert(0) += 1;
+    }
+}
+
+/// Aggregate pool statistics, collected at shutdown.
+#[derive(Debug, Clone)]
+pub struct PoolReport {
+    pub served: usize,
+    pub rejected: usize,
+    pub assign_served: usize,
+    pub grid_served: usize,
+    /// End-to-end latency (submit → reply) over all served requests.
+    pub latency: Option<Summary>,
+    pub assign_latency: Option<Summary>,
+    pub grid_latency: Option<Summary>,
+    /// Latency per size class, indexed by [`SizeClass::index`].
+    pub class_latency: [Option<Summary>; 3],
+    pub throughput_rps: f64,
+    /// Requests served per backend name.
+    pub backends: Vec<(&'static str, usize)>,
+}
+
+impl PoolReport {
+    pub fn served_by(&self, backend: &str) -> usize {
+        self.backends
+            .iter()
+            .find(|(b, _)| *b == backend)
+            .map_or(0, |(_, n)| *n)
+    }
+}
+
+/// The sharded solver-pool service: one runtime serving both paper
+/// algorithms (grid max-flow and assignment) behind a single
+/// submit/reply API, with persistent workers, size-class sharding,
+/// admission control, and per-worker backend caches.
+pub struct SolverPool {
+    queues: Arc<ShardedQueues>,
+    metrics: Arc<Mutex<PoolMetrics>>,
+    wave_pool: Arc<WorkerPool>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl SolverPool {
+    /// Start the pool: spawn `cfg.workers` long-lived solver workers
+    /// (0 is allowed and useful in tests: admission-only, nothing
+    /// drains) plus one shared wave [`WorkerPool`] that the grid
+    /// `native-par` backend borrows for its tile phases.
+    pub fn start(cfg: PoolConfig) -> Self {
+        let queues = Arc::new(ShardedQueues::new(cfg.shard.clone()));
+        let metrics = Arc::new(Mutex::new(PoolMetrics::new()));
+        let wave_pool = Arc::new(WorkerPool::new(cfg.router.par_threads));
+        let workers = (0..cfg.workers)
+            .map(|idx| {
+                let queues = Arc::clone(&queues);
+                let metrics = Arc::clone(&metrics);
+                let wave_pool = Arc::clone(&wave_pool);
+                let rcfg = cfg.router.clone();
+                let total = cfg.workers;
+                std::thread::Builder::new()
+                    .name(format!("flowmatch-solver-{idx}"))
+                    .spawn(move || solver_worker_loop(idx, total, queues, metrics, rcfg, wave_pool))
+                    .expect("spawn solver worker")
+            })
+            .collect();
+        Self {
+            queues,
+            metrics,
+            wave_pool,
+            workers,
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// The shared wave pool (exposed so callers can run pooled grid
+    /// executors outside the service path).
+    pub fn wave_pool(&self) -> &Arc<WorkerPool> {
+        &self.wave_pool
+    }
+
+    /// Submit with synchronous admission control: `Err` is the
+    /// backpressure signal (queue full / too large / shutting down).
+    pub fn try_submit(
+        &self,
+        instance: ProblemInstance,
+    ) -> Result<mpsc::Receiver<Result<SolveReply, String>>, RejectReason> {
+        let cfg = self.queues.config();
+        let units = instance.work_units();
+        if units > cfg.max_units {
+            let reason = RejectReason::TooLarge {
+                units,
+                max_units: cfg.max_units,
+            };
+            self.metrics.lock().unwrap().rejected += 1;
+            return Err(reason);
+        }
+        let class = cfg.classify(units);
+        let (tx, rx) = mpsc::channel();
+        let job = QueuedJob {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            class,
+            instance,
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        match self.queues.push(job) {
+            Ok(()) => Ok(rx),
+            Err((job, reason)) => {
+                drop(job);
+                self.metrics.lock().unwrap().rejected += 1;
+                Err(reason)
+            }
+        }
+    }
+
+    /// Submit returning a receiver unconditionally: a rejection arrives
+    /// through the channel as `Err(reason string)` (the legacy
+    /// `AssignmentService` shape).
+    pub fn submit(&self, instance: ProblemInstance) -> mpsc::Receiver<Result<SolveReply, String>> {
+        match self.try_submit(instance) {
+            Ok(rx) => rx,
+            Err(reason) => {
+                let (tx, rx) = mpsc::channel();
+                let _ = tx.send(Err(reason.to_string()));
+                rx
+            }
+        }
+    }
+
+    /// Drain the queues, stop the workers, and report.
+    pub fn shutdown(mut self) -> PoolReport {
+        self.finish();
+        let m = self.metrics.lock().unwrap();
+        PoolReport {
+            served: m.overall.count(),
+            rejected: m.rejected,
+            assign_served: m.assign.count(),
+            grid_served: m.grid.count(),
+            latency: m.overall.summary(),
+            assign_latency: m.assign.summary(),
+            grid_latency: m.grid.summary(),
+            class_latency: [
+                m.per_class[0].summary(),
+                m.per_class[1].summary(),
+                m.per_class[2].summary(),
+            ],
+            throughput_rps: m.overall.throughput(),
+            backends: m.backends.iter().map(|(k, v)| (*k, *v)).collect(),
+        }
+    }
+
+    fn finish(&mut self) {
+        self.queues.shutdown();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for SolverPool {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+fn solver_worker_loop(
+    idx: usize,
+    total: usize,
+    queues: Arc<ShardedQueues>,
+    metrics: Arc<Mutex<PoolMetrics>>,
+    rcfg: RouterConfig,
+    wave_pool: Arc<WorkerPool>,
+) {
+    // Per-worker backend state: cached executors/scratch and (when
+    // configured and discoverable) a PJRT driver.  The `xla` handles
+    // are !Send, exactly like a CUDA context — they live and die on
+    // this thread.
+    let mut backends = WorkerBackends::new(rcfg, Some(&wave_pool));
+    while let Some(job) = queues.pop(idx, total) {
+        let queue_delay = job.submitted.elapsed().as_secs_f64();
+        let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            backends.solve(job.class, &job.instance)
+        }));
+        let latency = job.submitted.elapsed().as_secs_f64();
+        let reply = match solved {
+            Ok(Ok((outcome, backend))) => {
+                metrics
+                    .lock()
+                    .unwrap()
+                    .record(job.class, outcome.family(), backend, latency);
+                Ok(SolveReply {
+                    id: job.id,
+                    class: job.class,
+                    worker: idx,
+                    backend,
+                    latency,
+                    queue_delay,
+                    outcome,
+                })
+            }
+            Ok(Err(e)) => Err(format!("solver error: {e:#}")),
+            Err(_) => Err("solver panicked".to_string()),
+        };
+        let _ = job.reply.send(reply);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_run_executes_borrowing_jobs() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0u64; 64];
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (i, chunk) in data.chunks_mut(16).enumerate() {
+                jobs.push(Box::new(move || {
+                    for (j, x) in chunk.iter_mut().enumerate() {
+                        *x = (i * 16 + j) as u64;
+                    }
+                }));
+            }
+            pool.scope_run(jobs);
+        }
+        assert!(data.iter().enumerate().all(|(i, &x)| x == i as u64));
+    }
+
+    #[test]
+    fn scope_run_reusable_and_more_jobs_than_threads() {
+        let pool = WorkerPool::new(2);
+        for round in 0..3 {
+            let counter = std::sync::atomic::AtomicUsize::new(0);
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for _ in 0..9 {
+                jobs.push(Box::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+            pool.scope_run(jobs);
+            assert_eq!(counter.load(Ordering::Relaxed), 9, "round {round}");
+        }
+    }
+
+    #[test]
+    fn concurrent_scopes_from_two_threads() {
+        let pool = Arc::new(WorkerPool::new(4));
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let pool = Arc::clone(&pool);
+                s.spawn(move || {
+                    for _ in 0..5 {
+                        let sum = Mutex::new(0u64);
+                        let sum_ref = &sum;
+                        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+                        for k in 0..8u64 {
+                            jobs.push(Box::new(move || {
+                                *sum_ref.lock().unwrap() += k + 1;
+                            }));
+                        }
+                        pool.scope_run(jobs);
+                        assert_eq!(*sum.lock().unwrap(), 36);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn pool_job_panic_propagates() {
+        let pool = WorkerPool::new(2);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                vec![Box::new(|| {}), Box::new(|| panic!("boom"))];
+            pool.scope_run(jobs);
+        }));
+        assert!(res.is_err());
+        // The pool survives a panicked batch.
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![Box::new(|| {})];
+        pool.scope_run(jobs);
+    }
+}

@@ -1,0 +1,311 @@
+//! Backend routing: which solver engine serves a request, chosen per
+//! problem family and size class, with per-worker cached state.
+//!
+//! Assignment requests can go to the exact Hungarian baseline, the
+//! sequential cost-scaling engine, the paper's lock-free refine, the
+//! dense wave twin, or (when artifacts are discoverable) the PJRT
+//! device driver.  Grid max-flow requests can go to the sequential
+//! native wave engine, the tiled multi-threaded engine (borrowing the
+//! shared [`WorkerPool`](super::pool::WorkerPool) instead of spawning
+//! per-wave threads), or Hong's lock-free CSR engine.
+//!
+//! Everything a backend needs between requests is cached on the worker
+//! ([`WorkerBackends`]): executor scratch (active lists, BFS buffers)
+//! and the compiled PJRT artifact handle, which is `!Send` and so must
+//! live on the worker thread that created it.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::assignment::{self, AssignmentSolver};
+use crate::coordinator::PjrtAssignmentDriver;
+use crate::graph::GridNetwork;
+use crate::gridflow::{
+    GridSolveReport, HybridGridSolver, NativeGridExecutor, NativeParGridExecutor,
+};
+use crate::maxflow::{self, MaxFlowSolver};
+use crate::runtime::ArtifactRegistry;
+use crate::workloads::ProblemInstance;
+
+use super::pool::WorkerPool;
+use super::shard::SizeClass;
+use super::SolveOutcome;
+
+/// Native assignment backends (the PJRT driver is layered on top via
+/// [`RouterConfig::use_pjrt`], mirroring the hybrid drivers' Auto mode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssignBackend {
+    Hungarian,
+    CsaSeq,
+    CsaLockfree,
+    WaveCsa,
+}
+
+impl AssignBackend {
+    pub fn parse(name: &str) -> Result<Self> {
+        Ok(match name {
+            "hungarian" => AssignBackend::Hungarian,
+            "csa-seq" => AssignBackend::CsaSeq,
+            "csa-lockfree" => AssignBackend::CsaLockfree,
+            "csa-wave" => AssignBackend::WaveCsa,
+            other => bail!(
+                "unknown assignment backend {other:?} \
+                 (expected hungarian, csa-seq, csa-lockfree, csa-wave)"
+            ),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AssignBackend::Hungarian => "hungarian",
+            AssignBackend::CsaSeq => "csa-seq",
+            AssignBackend::CsaLockfree => "csa-lockfree",
+            AssignBackend::WaveCsa => "csa-wave",
+        }
+    }
+}
+
+/// Grid max-flow backends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GridBackend {
+    /// Sequential native wave engine.
+    Native,
+    /// Tiled multi-threaded wave engine on the shared worker pool
+    /// (bit-exact with `Native`).
+    NativePar,
+    /// Hong's lock-free engine over the CSR conversion.
+    FifoLockfree,
+}
+
+impl GridBackend {
+    pub fn parse(name: &str) -> Result<Self> {
+        Ok(match name {
+            "native" => GridBackend::Native,
+            "native-par" => GridBackend::NativePar,
+            "fifo-lockfree" => GridBackend::FifoLockfree,
+            other => bail!(
+                "unknown grid backend {other:?} \
+                 (expected native, native-par, fifo-lockfree)"
+            ),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GridBackend::Native => "native",
+            GridBackend::NativePar => "native-par",
+            GridBackend::FifoLockfree => "fifo-lockfree",
+        }
+    }
+}
+
+/// Routing table + engine tunables, one copy per worker.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Assignment backend per size class, indexed by [`SizeClass::index`].
+    pub assign: [AssignBackend; 3],
+    /// Grid backend per size class.
+    pub grid: [GridBackend; 3],
+    /// Prefer the PJRT driver for assignment instances that fit its
+    /// padded size, falling back to the native table on any miss.
+    pub use_pjrt: bool,
+    /// Size the per-worker PJRT driver is built for.
+    pub pjrt_max_n: usize,
+    /// Cost-scaling alpha for the CSA engines.
+    pub alpha: i64,
+    /// Threads of the lock-free CSA refine.
+    pub csa_threads: usize,
+    /// Waves per host round of the hybrid grid solver.
+    pub cycle_waves: usize,
+    /// Wave-pool width used by the `native-par` grid backend.
+    pub par_threads: usize,
+    pub tile_rows: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            assign: [
+                AssignBackend::Hungarian,
+                AssignBackend::CsaLockfree,
+                AssignBackend::CsaLockfree,
+            ],
+            grid: [GridBackend::Native, GridBackend::NativePar, GridBackend::NativePar],
+            use_pjrt: false,
+            pjrt_max_n: 64,
+            alpha: 10,
+            csa_threads: 2,
+            cycle_waves: 512,
+            par_threads: 4,
+            tile_rows: 16,
+        }
+    }
+}
+
+/// Per-worker backend state: cached executors (scratch survives across
+/// requests) and the optional PJRT driver.
+pub(crate) struct WorkerBackends {
+    cfg: RouterConfig,
+    pjrt: Option<PjrtAssignmentDriver>,
+    seq_exec: NativeGridExecutor,
+    par_exec: NativeParGridExecutor,
+}
+
+impl WorkerBackends {
+    /// Build the worker's caches.  PJRT discovery happens once, here —
+    /// not per request; `wave_pool` is the shared persistent pool the
+    /// `native-par` backend borrows (None: fall back to per-wave scoped
+    /// threads, used by the spawn-baseline loadgen path).
+    pub fn new(cfg: RouterConfig, wave_pool: Option<&Arc<WorkerPool>>) -> Self {
+        let pjrt = if cfg.use_pjrt {
+            ArtifactRegistry::discover()
+                .ok()
+                .and_then(|reg| PjrtAssignmentDriver::for_size(&reg, cfg.pjrt_max_n).ok())
+                .map(|mut d| {
+                    d.alpha = cfg.alpha;
+                    d
+                })
+        } else {
+            None
+        };
+        let mut par_exec = NativeParGridExecutor::new(cfg.par_threads, cfg.tile_rows);
+        if let Some(pool) = wave_pool {
+            par_exec = par_exec.with_pool(Arc::clone(pool));
+        }
+        Self {
+            cfg,
+            pjrt,
+            seq_exec: NativeGridExecutor::default(),
+            par_exec,
+        }
+    }
+
+    /// Solve one request; returns the outcome plus the backend name
+    /// that actually served it.
+    pub fn solve(
+        &mut self,
+        class: SizeClass,
+        instance: &ProblemInstance,
+    ) -> Result<(SolveOutcome, &'static str)> {
+        match instance {
+            ProblemInstance::Assignment(inst) => {
+                if let Some(driver) = self.pjrt.as_mut() {
+                    if inst.n <= driver.padded_n() {
+                        let (result, _tel) = driver.solve(inst)?;
+                        return Ok((SolveOutcome::Assignment(result), "pjrt"));
+                    }
+                }
+                let backend = self.cfg.assign[class.index()];
+                let result = match backend {
+                    AssignBackend::Hungarian => assignment::hungarian::Hungarian.solve(inst)?,
+                    AssignBackend::CsaSeq => {
+                        assignment::csa::SequentialCsa::with_alpha(self.cfg.alpha).solve(inst)?
+                    }
+                    AssignBackend::CsaLockfree => assignment::csa_lockfree::LockFreeCsa {
+                        alpha: self.cfg.alpha,
+                        threads: self.cfg.csa_threads,
+                    }
+                    .solve(inst)?,
+                    AssignBackend::WaveCsa => assignment::wave::WaveCsa {
+                        alpha: Some(self.cfg.alpha),
+                    }
+                    .solve(inst)?,
+                };
+                Ok((SolveOutcome::Assignment(result), backend.name()))
+            }
+            ProblemInstance::Grid(net) => {
+                let backend = self.cfg.grid[class.index()];
+                let report = self.solve_grid(backend, net)?;
+                Ok((SolveOutcome::Grid(report), backend.name()))
+            }
+        }
+    }
+
+    fn solve_grid(&mut self, backend: GridBackend, net: &GridNetwork) -> Result<GridSolveReport> {
+        let solver = HybridGridSolver::with_cycle(self.cfg.cycle_waves);
+        match backend {
+            GridBackend::Native => solver.solve(net, &mut self.seq_exec),
+            GridBackend::NativePar => solver.solve(net, &mut self.par_exec),
+            GridBackend::FifoLockfree => {
+                let mut g = net.to_flow_network();
+                let stats = maxflow::lockfree::LockFree {
+                    threads: self.cfg.par_threads.max(1),
+                    ..Default::default()
+                }
+                .solve(&mut g)?;
+                Ok(GridSolveReport {
+                    flow: stats.value,
+                    excess_total: net.excess_total(),
+                    host_rounds: stats.rounds,
+                    pushes: stats.pushes as i64,
+                    relabels: stats.relabels as i64,
+                    ..Default::default()
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::hungarian::Hungarian;
+    use crate::maxflow::dinic::Dinic;
+    use crate::util::Rng;
+    use crate::workloads::{random_grid, uniform_costs};
+
+    #[test]
+    fn backend_names_roundtrip() {
+        for b in [
+            AssignBackend::Hungarian,
+            AssignBackend::CsaSeq,
+            AssignBackend::CsaLockfree,
+            AssignBackend::WaveCsa,
+        ] {
+            assert_eq!(AssignBackend::parse(b.name()).unwrap(), b);
+        }
+        for b in [
+            GridBackend::Native,
+            GridBackend::NativePar,
+            GridBackend::FifoLockfree,
+        ] {
+            assert_eq!(GridBackend::parse(b.name()).unwrap(), b);
+        }
+        assert!(AssignBackend::parse("nope").is_err());
+        assert!(GridBackend::parse("nope").is_err());
+    }
+
+    #[test]
+    fn routes_by_class_and_solves_optimally() {
+        let mut backends = WorkerBackends::new(RouterConfig::default(), None);
+        let mut rng = Rng::seeded(11);
+        let inst = uniform_costs(&mut rng, 12, 50);
+        let want = Hungarian.solve(&inst).unwrap().weight;
+        for class in SizeClass::ALL {
+            let (out, name) = backends
+                .solve(class, &ProblemInstance::Assignment(inst.clone()))
+                .unwrap();
+            assert_eq!(out.weight(), Some(want), "class {}", class.name());
+            let expected = RouterConfig::default().assign[class.index()].name();
+            assert_eq!(name, expected);
+        }
+    }
+
+    #[test]
+    fn every_grid_backend_agrees_with_dinic() {
+        let mut rng = Rng::seeded(12);
+        let net = random_grid(&mut rng, 7, 7, 9, 0.3, 0.3);
+        let mut g = net.to_flow_network();
+        let want = Dinic.solve(&mut g).unwrap().value;
+        let mut backends = WorkerBackends::new(RouterConfig::default(), None);
+        for b in [
+            GridBackend::Native,
+            GridBackend::NativePar,
+            GridBackend::FifoLockfree,
+        ] {
+            let report = backends.solve_grid(b, &net).unwrap();
+            assert_eq!(report.flow, want, "backend {}", b.name());
+        }
+    }
+}

@@ -1,0 +1,356 @@
+//! Size-class sharded queues with admission control and backpressure.
+//!
+//! Requests are classified by *work units* (cost-matrix cells for
+//! assignment, grid cells for max-flow) into three shards so a 512²
+//! grid solve never sits in front of an n=30 real-time matching.  Each
+//! shard is a bounded FIFO: when a shard is at depth the submit is
+//! rejected synchronously with a [`RejectReason`] instead of queueing
+//! unboundedly — the caller sheds load rather than timing out.
+//!
+//! Scheduling is by per-worker scan order (see [`scan_order`]): with two
+//! or more workers, worker 0 is the reserved real-time lane (it never
+//! picks up a Large job) and worker 1 prefers Large, so both tails of
+//! the size distribution always have a worker whose first look is them.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::workloads::ProblemInstance;
+
+use super::SolveReply;
+
+/// The three shard classes, by work units.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SizeClass {
+    Small,
+    Medium,
+    Large,
+}
+
+impl SizeClass {
+    pub const ALL: [SizeClass; 3] = [SizeClass::Small, SizeClass::Medium, SizeClass::Large];
+
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            SizeClass::Small => 0,
+            SizeClass::Medium => 1,
+            SizeClass::Large => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SizeClass::Small => "small",
+            SizeClass::Medium => "medium",
+            SizeClass::Large => "large",
+        }
+    }
+}
+
+/// Sharding + admission parameters.
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// Work-unit ceiling of the Small class — the real-time lane
+    /// (default 2048: matchings up to n = 45, grids up to 45²; the
+    /// paper's §6 workload of n ≤ 30 lands here with room to spare,
+    /// while any grid a solver would take visible time on does not).
+    pub small_max_units: usize,
+    /// Work-unit ceiling of the Medium class (default 8192: ≤ 90²
+    /// grids); anything above is Large.
+    pub medium_max_units: usize,
+    /// Bounded per-shard queue depth; a full shard rejects.  Clamped
+    /// to ≥ 1 by the queues (a 0-depth shard could never admit, which
+    /// would turn closed-loop pacing into a spin).
+    pub queue_depth: usize,
+    /// Admission cap: instances above this many work units are rejected
+    /// outright (default 1 << 20: 1024² grids).
+    pub max_units: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        Self {
+            small_max_units: 2048,
+            medium_max_units: 8192,
+            queue_depth: 64,
+            max_units: 1 << 20,
+        }
+    }
+}
+
+impl ShardConfig {
+    pub fn classify(&self, units: usize) -> SizeClass {
+        if units <= self.small_max_units {
+            SizeClass::Small
+        } else if units <= self.medium_max_units {
+            SizeClass::Medium
+        } else {
+            SizeClass::Large
+        }
+    }
+}
+
+/// Why a submit was refused.  Every rejection is synchronous and
+/// carries enough context for the client to adapt (shrink, retry
+/// later, or route elsewhere).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The shard for this size class is at its bounded depth.
+    QueueFull { class: SizeClass, depth: usize },
+    /// The instance exceeds the admission cap.
+    TooLarge { units: usize, max_units: usize },
+    /// The pool is shutting down.
+    ShuttingDown,
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RejectReason::QueueFull { class, depth } => write!(
+                f,
+                "queue full: {} shard at bounded depth {depth} (backpressure)",
+                class.name()
+            ),
+            RejectReason::TooLarge { units, max_units } => write!(
+                f,
+                "instance too large: {units} work units exceed the admission cap {max_units}"
+            ),
+            RejectReason::ShuttingDown => write!(f, "solver pool is shutting down"),
+        }
+    }
+}
+
+/// A queued request, owned by a shard until a worker pops it.
+pub(crate) struct QueuedJob {
+    pub id: u64,
+    pub class: SizeClass,
+    pub instance: ProblemInstance,
+    pub submitted: Instant,
+    pub reply: std::sync::mpsc::Sender<Result<SolveReply, String>>,
+}
+
+struct State {
+    queues: [VecDeque<QueuedJob>; 3],
+    shutdown: bool,
+}
+
+/// The three bounded shard queues plus the worker wakeup condvar.
+pub(crate) struct ShardedQueues {
+    cfg: ShardConfig,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+/// Which shards worker `worker` scans, in preference order.
+///
+/// * 1 worker: everything, small first.
+/// * ≥ 2 workers: worker 0 is the reserved real-time lane — it never
+///   takes a Large job, so a small matching is at worst one Medium
+///   solve away from service.  Worker 1 is the heavy lane (Large
+///   first), so Large jobs cannot starve either.  Remaining workers
+///   alternate small-first / medium-first for load balance.
+pub(crate) fn scan_order(worker: usize, workers: usize) -> &'static [SizeClass] {
+    use SizeClass::*;
+    if workers <= 1 {
+        return &[Small, Medium, Large];
+    }
+    match worker {
+        0 => &[Small, Medium],
+        1 => &[Large, Medium, Small],
+        w if w % 2 == 0 => &[Small, Medium, Large],
+        _ => &[Medium, Small, Large],
+    }
+}
+
+impl ShardedQueues {
+    pub fn new(mut cfg: ShardConfig) -> Self {
+        cfg.queue_depth = cfg.queue_depth.max(1);
+        Self {
+            cfg,
+            state: Mutex::new(State {
+                queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn config(&self) -> &ShardConfig {
+        &self.cfg
+    }
+
+    /// Admit `job` into its shard, or hand it back with the reason.
+    pub fn push(&self, job: QueuedJob) -> Result<(), (QueuedJob, RejectReason)> {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return Err((job, RejectReason::ShuttingDown));
+        }
+        let q = &mut st.queues[job.class.index()];
+        if q.len() >= self.cfg.queue_depth {
+            let reason = RejectReason::QueueFull {
+                class: job.class,
+                depth: self.cfg.queue_depth,
+            };
+            return Err((job, reason));
+        }
+        q.push_back(job);
+        drop(st);
+        // notify_all: the woken worker must be one whose scan order
+        // includes this shard (worker 0 never serves Large).
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Block until a job this worker may take is available; `None` once
+    /// the pool is shutting down and this worker's shards are drained.
+    pub fn pop(&self, worker: usize, workers: usize) -> Option<QueuedJob> {
+        let order = scan_order(worker, workers);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            for &class in order {
+                if let Some(job) = st.queues[class.index()].pop_front() {
+                    return Some(job);
+                }
+            }
+            if st.shutdown {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Begin shutdown: no new admissions; workers drain then exit.
+    pub fn shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+    }
+
+    #[cfg(test)]
+    pub fn depth(&self, class: SizeClass) -> usize {
+        self.state.lock().unwrap().queues[class.index()].len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::AssignmentInstance;
+
+    fn job(class: SizeClass) -> QueuedJob {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        QueuedJob {
+            id: 0,
+            class,
+            instance: ProblemInstance::Assignment(AssignmentInstance::new(2, vec![0; 4])),
+            submitted: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn classification_boundaries() {
+        let cfg = ShardConfig {
+            small_max_units: 100,
+            medium_max_units: 1000,
+            ..Default::default()
+        };
+        assert_eq!(cfg.classify(1), SizeClass::Small);
+        assert_eq!(cfg.classify(100), SizeClass::Small);
+        assert_eq!(cfg.classify(101), SizeClass::Medium);
+        assert_eq!(cfg.classify(1000), SizeClass::Medium);
+        assert_eq!(cfg.classify(1001), SizeClass::Large);
+    }
+
+    #[test]
+    fn bounded_depth_rejects() {
+        let q = ShardedQueues::new(ShardConfig {
+            queue_depth: 2,
+            ..Default::default()
+        });
+        assert!(q.push(job(SizeClass::Small)).is_ok());
+        assert!(q.push(job(SizeClass::Small)).is_ok());
+        let (_, reason) = q.push(job(SizeClass::Small)).unwrap_err();
+        assert_eq!(
+            reason,
+            RejectReason::QueueFull {
+                class: SizeClass::Small,
+                depth: 2
+            }
+        );
+        // Other shards are independent.
+        assert!(q.push(job(SizeClass::Large)).is_ok());
+        assert_eq!(q.depth(SizeClass::Small), 2);
+        assert_eq!(q.depth(SizeClass::Large), 1);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_and_drains_old() {
+        let q = ShardedQueues::new(ShardConfig::default());
+        assert!(q.push(job(SizeClass::Medium)).is_ok());
+        q.shutdown();
+        let (_, reason) = q.push(job(SizeClass::Small)).unwrap_err();
+        assert_eq!(reason, RejectReason::ShuttingDown);
+        // The queued job is still drained...
+        assert!(q.pop(0, 1).is_some());
+        // ...then workers see the shutdown.
+        assert!(q.pop(0, 1).is_none());
+    }
+
+    #[test]
+    fn reserved_lane_never_scans_large() {
+        assert!(!scan_order(0, 4).contains(&SizeClass::Large));
+        assert_eq!(scan_order(1, 4)[0], SizeClass::Large);
+        assert_eq!(scan_order(0, 1), &SizeClass::ALL[..]);
+        for w in 0..8 {
+            assert!(scan_order(w, 8).contains(&SizeClass::Small));
+        }
+    }
+
+    #[test]
+    fn pop_prefers_small_on_lane_zero() {
+        let q = ShardedQueues::new(ShardConfig::default());
+        q.push(job(SizeClass::Medium)).unwrap();
+        q.push(job(SizeClass::Small)).unwrap();
+        let got = q.pop(0, 2).unwrap();
+        assert_eq!(got.class, SizeClass::Small);
+        let got = q.pop(0, 2).unwrap();
+        assert_eq!(got.class, SizeClass::Medium);
+    }
+
+    #[test]
+    fn zero_depth_clamped_to_one() {
+        let q = ShardedQueues::new(ShardConfig {
+            queue_depth: 0,
+            ..Default::default()
+        });
+        assert!(q.push(job(SizeClass::Small)).is_ok());
+        assert!(q.push(job(SizeClass::Small)).is_err());
+    }
+
+    #[test]
+    fn default_boundaries_separate_the_demo_workloads() {
+        let cfg = ShardConfig::default();
+        assert_eq!(cfg.classify(30 * 30), SizeClass::Small); // §6 matchings
+        assert_eq!(cfg.classify(48 * 48), SizeClass::Medium); // demo grids
+        assert_eq!(cfg.classify(96 * 96), SizeClass::Large); // oversized grids
+    }
+
+    #[test]
+    fn reject_reasons_render() {
+        let s = RejectReason::QueueFull {
+            class: SizeClass::Small,
+            depth: 4,
+        }
+        .to_string();
+        assert!(s.contains("queue full"));
+        let s = RejectReason::TooLarge {
+            units: 9,
+            max_units: 4,
+        }
+        .to_string();
+        assert!(s.contains("too large"));
+    }
+}

@@ -11,4 +11,6 @@ pub mod traces;
 pub use bipartite_gen::{geometric_costs, uniform_costs};
 pub use grid_gen::{random_grid, segmentation_grid};
 pub use rmf::rmf_network;
-pub use traces::{RequestTrace, TraceConfig};
+pub use traces::{
+    MixedRequest, MixedTrace, MixedTraceConfig, ProblemInstance, RequestTrace, TraceConfig,
+};

@@ -1,12 +1,15 @@
-//! Request traces for the batched assignment service (E7): a stream of
+//! Request traces for the solver services (E7/E9): a stream of
 //! assignment instances with arrival offsets, modelling the real-time
 //! optical-flow use the paper's §6 targets (one matching problem per
-//! frame pair at a fixed frame rate).
+//! frame pair at a fixed frame rate), plus the mixed grid+assignment
+//! traces the sharded solver pool is sized against (small real-time
+//! matchings interleaved with heavyweight grid max-flow solves).
 
-use crate::graph::AssignmentInstance;
+use crate::graph::{AssignmentInstance, GridNetwork};
 use crate::util::Rng;
 
 use super::bipartite_gen::{geometric_costs, uniform_costs};
+use super::grid_gen::random_grid;
 
 /// Trace parameters.
 #[derive(Debug, Clone)]
@@ -77,6 +80,138 @@ impl RequestTrace {
     }
 }
 
+/// One request payload for the sharded solver pool: either of the
+/// paper's two problem families behind a single submit API.
+#[derive(Debug, Clone)]
+pub enum ProblemInstance {
+    Assignment(AssignmentInstance),
+    Grid(GridNetwork),
+}
+
+impl ProblemInstance {
+    /// Work units used by the pool's size-class sharding: cost-matrix
+    /// cells for assignment (`n²`), grid cells for max-flow.
+    pub fn work_units(&self) -> usize {
+        match self {
+            ProblemInstance::Assignment(a) => a.n * a.n,
+            ProblemInstance::Grid(g) => g.cells(),
+        }
+    }
+
+    pub fn family(&self) -> &'static str {
+        match self {
+            ProblemInstance::Assignment(_) => "assignment",
+            ProblemInstance::Grid(_) => "grid",
+        }
+    }
+}
+
+/// Mixed-trace parameters: an assignment stream (the §6 real-time
+/// workload) interleaved with a grid max-flow stream, including a
+/// periodic oversized grid so the shard scheduler has something to keep
+/// out of the real-time lane.
+#[derive(Debug, Clone)]
+pub struct MixedTraceConfig {
+    /// The assignment sub-stream (requests, n, fps, ...).
+    pub assign: TraceConfig,
+    /// Number of grid max-flow requests.
+    pub grid_requests: usize,
+    /// Grid side length (height = width).
+    pub grid_size: usize,
+    /// Max arc capacity of generated grids.
+    pub grid_max_cap: i64,
+    /// Inter-arrival gap of the grid sub-stream, seconds; 0 = closed-loop.
+    pub grid_arrival_gap: f64,
+    /// Every `large_every`-th grid request uses `large_size` instead of
+    /// `grid_size` (0 disables the oversized requests).
+    pub large_every: usize,
+    pub large_size: usize,
+}
+
+impl Default for MixedTraceConfig {
+    fn default() -> Self {
+        Self {
+            assign: TraceConfig::default(),
+            grid_requests: 8,
+            grid_size: 24,
+            grid_max_cap: 16,
+            grid_arrival_gap: 0.3,
+            large_every: 4,
+            large_size: 48,
+        }
+    }
+}
+
+/// One request of a mixed trace.  `id` indexes into
+/// [`MixedTrace::requests`] (assigned after the arrival-order merge).
+#[derive(Debug, Clone)]
+pub struct MixedRequest {
+    pub id: usize,
+    /// Arrival time offset from trace start, seconds.
+    pub arrival: f64,
+    pub instance: ProblemInstance,
+}
+
+/// A generated mixed trace, sorted by arrival time.
+#[derive(Debug, Clone)]
+pub struct MixedTrace {
+    pub requests: Vec<MixedRequest>,
+}
+
+impl MixedTrace {
+    pub fn generate(rng: &mut Rng, cfg: &MixedTraceConfig) -> Self {
+        let assign = RequestTrace::generate(rng, &cfg.assign);
+        let mut requests: Vec<MixedRequest> = assign
+            .requests
+            .into_iter()
+            .map(|r| MixedRequest {
+                id: 0,
+                arrival: r.arrival,
+                instance: ProblemInstance::Assignment(r.instance),
+            })
+            .collect();
+        for k in 0..cfg.grid_requests {
+            let size = if cfg.large_every > 0 && (k + 1) % cfg.large_every == 0 {
+                cfg.large_size
+            } else {
+                cfg.grid_size
+            };
+            let net = random_grid(rng, size, size, cfg.grid_max_cap, 0.25, 0.25);
+            requests.push(MixedRequest {
+                id: 0,
+                arrival: k as f64 * cfg.grid_arrival_gap,
+                instance: ProblemInstance::Grid(net),
+            });
+        }
+        // Stable sort: at equal arrival the assignment request keeps its
+        // place ahead of the grid request, so traces are reproducible.
+        requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).expect("NaN arrival"));
+        for (id, req) in requests.iter_mut().enumerate() {
+            req.id = id;
+        }
+        Self { requests }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn assignment_count(&self) -> usize {
+        self.requests
+            .iter()
+            .filter(|r| matches!(r.instance, ProblemInstance::Assignment(_)))
+            .count()
+    }
+
+    pub fn grid_count(&self) -> usize {
+        self.len() - self.assignment_count()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,5 +231,53 @@ mod tests {
             .windows(2)
             .all(|w| w[1].arrival >= w[0].arrival));
         assert!(trace.requests.iter().all(|r| r.instance.n == 8));
+    }
+
+    #[test]
+    fn mixed_trace_interleaves_and_sorts() {
+        let mut rng = Rng::seeded(33);
+        let cfg = MixedTraceConfig {
+            assign: TraceConfig {
+                requests: 6,
+                n: 8,
+                arrival_gap: 0.1,
+                ..Default::default()
+            },
+            grid_requests: 4,
+            grid_size: 6,
+            grid_arrival_gap: 0.15,
+            large_every: 2,
+            large_size: 10,
+            ..Default::default()
+        };
+        let trace = MixedTrace::generate(&mut rng, &cfg);
+        assert_eq!(trace.len(), 10);
+        assert_eq!(trace.assignment_count(), 6);
+        assert_eq!(trace.grid_count(), 4);
+        assert!(trace
+            .requests
+            .windows(2)
+            .all(|w| w[1].arrival >= w[0].arrival));
+        assert!(trace.requests.iter().enumerate().all(|(i, r)| r.id == i));
+        // Every second grid is the oversized one.
+        let sizes: Vec<usize> = trace
+            .requests
+            .iter()
+            .filter_map(|r| match &r.instance {
+                ProblemInstance::Grid(g) => Some(g.height),
+                _ => None,
+            })
+            .collect();
+        assert!(sizes.contains(&6) && sizes.contains(&10));
+    }
+
+    #[test]
+    fn work_units_by_family() {
+        let a = ProblemInstance::Assignment(AssignmentInstance::new(4, vec![0; 16]));
+        assert_eq!(a.work_units(), 16);
+        assert_eq!(a.family(), "assignment");
+        let g = ProblemInstance::Grid(GridNetwork::zeros(3, 5));
+        assert_eq!(g.work_units(), 15);
+        assert_eq!(g.family(), "grid");
     }
 }

@@ -1,0 +1,223 @@
+//! Integration tests for the sharded solver-pool service: a mixed
+//! grid+assignment trace through the pool with every reply checked
+//! against the sequential single-solver oracle, plus the
+//! backpressure/admission-control behaviour.
+
+use flowmatch::assignment::hungarian::Hungarian;
+use flowmatch::assignment::AssignmentSolver;
+use flowmatch::coordinator::{solve_grid_with, GridEngine};
+use flowmatch::graph::AssignmentInstance;
+use flowmatch::service::{
+    replay, GridBackend, PoolConfig, ProblemInstance, RejectReason, RouterConfig, ShardConfig,
+    SizeClass, SolverPool,
+};
+use flowmatch::util::Rng;
+use flowmatch::workloads::{MixedTrace, MixedTraceConfig, TraceConfig};
+
+const CYCLE: usize = 128;
+
+fn test_pool_config(workers: usize) -> PoolConfig {
+    PoolConfig {
+        workers,
+        shard: ShardConfig {
+            // Tuned so the test trace exercises all three classes:
+            // n=10 assignment (100 units) is Small, 24² grids (576)
+            // are Medium, 48² grids (2304) are Large.
+            small_max_units: 256,
+            medium_max_units: 1024,
+            queue_depth: 64,
+            max_units: 1 << 16,
+        },
+        router: RouterConfig {
+            use_pjrt: false, // keep the oracle artifact-free
+            cycle_waves: CYCLE,
+            par_threads: 2,
+            tile_rows: 4,
+            ..Default::default()
+        },
+    }
+}
+
+fn mixed_trace(seed: u64) -> MixedTrace {
+    let mut rng = Rng::seeded(seed);
+    MixedTrace::generate(
+        &mut rng,
+        &MixedTraceConfig {
+            assign: TraceConfig {
+                requests: 12,
+                n: 10,
+                max_weight: 60,
+                arrival_gap: 0.0,
+                ..Default::default()
+            },
+            grid_requests: 6,
+            grid_size: 24,
+            grid_max_cap: 12,
+            grid_arrival_gap: 0.0,
+            large_every: 3,
+            large_size: 48,
+        },
+    )
+}
+
+/// Every pooled reply matches the sequential single-solver path:
+/// Hungarian for matchings (optimal weight + valid permutation), and
+/// for grids the *full report* of the sequential native engine — the
+/// native-par backend is bit-exact, so waves/pushes/relabels must
+/// agree too, not just the flow value.
+#[test]
+fn mixed_trace_matches_sequential_oracles() {
+    let trace = mixed_trace(501);
+    let pool = SolverPool::start(test_pool_config(3));
+    let out = replay(&pool, &trace, false);
+    let report = pool.shutdown();
+
+    assert_eq!(out.sent, trace.len());
+    assert_eq!(out.ok, trace.len(), "rejected={} failed={}", out.rejected, out.failed);
+    assert_eq!(report.served, trace.len());
+    assert_eq!(report.assign_served, trace.assignment_count());
+    assert_eq!(report.grid_served, trace.grid_count());
+
+    for (id, reply) in &out.replies {
+        let reply = reply.as_ref().unwrap_or_else(|e| panic!("request {id}: {e}"));
+        match &trace.requests[*id].instance {
+            ProblemInstance::Assignment(inst) => {
+                let exact = Hungarian.solve(inst).unwrap();
+                let got = reply.outcome.assignment().expect("assignment outcome");
+                assert!(
+                    AssignmentInstance::is_permutation(&got.assignment),
+                    "request {id}: not a permutation"
+                );
+                assert_eq!(got.weight, exact.weight, "request {id}: suboptimal");
+                assert_eq!(got.weight, inst.assignment_weight(&got.assignment));
+            }
+            ProblemInstance::Grid(net) => {
+                let (want, _) = solve_grid_with(net, CYCLE, None, GridEngine::Native).unwrap();
+                let got = reply.outcome.grid().expect("grid outcome");
+                assert_eq!(got.flow, want.flow, "request {id}: wrong flow");
+                if reply.backend == "native-par" {
+                    // Bit-exactness of the pooled tiled engine.
+                    assert_eq!(got.waves, want.waves, "request {id}");
+                    assert_eq!(got.pushes, want.pushes, "request {id}");
+                    assert_eq!(got.relabels, want.relabels, "request {id}");
+                    assert_eq!(got.host_rounds, want.host_rounds, "request {id}");
+                }
+            }
+        }
+    }
+
+    // The router sent each class where it was configured to go.
+    assert!(report.served_by("hungarian") >= 1, "{:?}", report.backends);
+    assert!(report.served_by("native-par") >= 1, "{:?}", report.backends);
+}
+
+/// The fifo-lockfree grid backend (Hong's CSR engine) agrees with the
+/// sequential path on the flow value when routed to from the pool.
+#[test]
+fn lockfree_grid_backend_agrees_on_flow() {
+    let mut cfg = test_pool_config(2);
+    cfg.router.grid = [
+        GridBackend::FifoLockfree,
+        GridBackend::FifoLockfree,
+        GridBackend::FifoLockfree,
+    ];
+    let trace = mixed_trace(502);
+    let pool = SolverPool::start(cfg);
+    let out = replay(&pool, &trace, false);
+    let report = pool.shutdown();
+    assert_eq!(out.ok, trace.len());
+    assert_eq!(report.served_by("fifo-lockfree"), trace.grid_count());
+    for (id, reply) in &out.replies {
+        if let ProblemInstance::Grid(net) = &trace.requests[*id].instance {
+            let (want, _) = solve_grid_with(net, CYCLE, None, GridEngine::Native).unwrap();
+            let got = reply.as_ref().unwrap().outcome.flow().unwrap();
+            assert_eq!(got, want.flow, "request {id}");
+        }
+    }
+}
+
+/// Backpressure: with no workers draining, the bounded shard fills to
+/// its configured depth and the next submit is rejected with
+/// `QueueFull`; an instance above the admission cap is rejected with
+/// `TooLarge` regardless of queue state.
+#[test]
+fn backpressure_rejects_with_reason() {
+    let mut cfg = test_pool_config(0); // admission-only: nothing drains
+    cfg.shard.queue_depth = 2;
+    let pool = SolverPool::start(cfg);
+    let mut rng = Rng::seeded(9);
+
+    let mut small =
+        || ProblemInstance::Assignment(flowmatch::workloads::uniform_costs(&mut rng, 8, 20));
+    assert!(pool.try_submit(small()).is_ok());
+    assert!(pool.try_submit(small()).is_ok());
+    match pool.try_submit(small()) {
+        Err(RejectReason::QueueFull { class, depth }) => {
+            assert_eq!(class, SizeClass::Small);
+            assert_eq!(depth, 2);
+        }
+        other => panic!("expected QueueFull, got {other:?}"),
+    }
+    // Shards are independent: a Medium submit still goes through.
+    let mut rng2 = Rng::seeded(10);
+    let medium = ProblemInstance::Grid(flowmatch::workloads::random_grid(
+        &mut rng2, 20, 20, 8, 0.25, 0.25,
+    ));
+    assert!(pool.try_submit(medium).is_ok());
+
+    // Admission cap: 300² = 90000 > max_units (1 << 16).
+    let big = ProblemInstance::Grid(flowmatch::graph::GridNetwork::zeros(300, 300));
+    match pool.try_submit(big) {
+        Err(RejectReason::TooLarge { units, max_units }) => {
+            assert_eq!(units, 90_000);
+            assert_eq!(max_units, 1 << 16);
+        }
+        other => panic!("expected TooLarge, got {other:?}"),
+    }
+
+    let report = pool.shutdown();
+    assert_eq!(report.served, 0);
+    assert_eq!(report.rejected, 2);
+}
+
+/// The legacy submit shape delivers the rejection through the channel.
+#[test]
+fn channel_submit_reports_rejection_string() {
+    let cfg = test_pool_config(0);
+    let pool = SolverPool::start(cfg);
+    let rx = pool.submit(ProblemInstance::Grid(
+        flowmatch::graph::GridNetwork::zeros(300, 300),
+    ));
+    let err = rx.recv().unwrap().unwrap_err();
+    assert!(err.contains("too large"), "{err}");
+}
+
+/// Small requests do not queue behind a Large flood: with two workers,
+/// worker 0 never scans the Large shard, so a burst of large grids
+/// leaves the real-time lane free.
+#[test]
+fn small_requests_bypass_large_flood() {
+    let mut cfg = test_pool_config(2);
+    cfg.shard.queue_depth = 32;
+    let pool = SolverPool::start(cfg);
+    let mut rng = Rng::seeded(77);
+    let mut receivers = Vec::new();
+    // Flood the Large shard first...
+    for _ in 0..4 {
+        let net = flowmatch::workloads::random_grid(&mut rng, 48, 48, 10, 0.25, 0.25);
+        receivers.push(pool.try_submit(ProblemInstance::Grid(net)).unwrap());
+    }
+    // ...then a small matching; it must complete even while the heavy
+    // lane is saturated.
+    let inst = flowmatch::workloads::uniform_costs(&mut rng, 10, 50);
+    let want = Hungarian.solve(&inst).unwrap().weight;
+    let rx = pool.try_submit(ProblemInstance::Assignment(inst)).unwrap();
+    let reply = rx.recv().unwrap().unwrap();
+    assert_eq!(reply.outcome.weight(), Some(want));
+    assert_eq!(reply.class, SizeClass::Small);
+    for rx in receivers {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    let report = pool.shutdown();
+    assert_eq!(report.served, 5);
+}
