@@ -1,16 +1,18 @@
-//! E9: sharded solver-pool service throughput/latency.
+//! E9/E10: sharded solver-pool service throughput/latency.
 //!
-//! Two comparisons, both closed-loop:
+//! Three comparisons, all closed-loop:
 //!
 //! * **small-instance trace** (assignment n=16, the real-time class):
 //!   the pooled path (persistent workers, cached solver state) against
 //!   the per-request-spawn baseline (fresh thread + fresh backend
 //!   state per request — the deployment shape before this subsystem).
 //!   The acceptance bar is pooled ≥ 1x baseline throughput here.
-//! * **mixed trace** (assignment + grids, with periodic oversized
-//!   grids): pooled only, reported per family, demonstrating that the
-//!   shard scheduler keeps small-matching latency flat while grid
-//!   solves run.
+//! * **mixed trace, static routing** (assignment + grids, with
+//!   periodic oversized grids): the PR 3 per-size-class tables.
+//! * **mixed trace, adaptive routing** (§E10): the same trace with
+//!   measurement-driven routing — EWMA winners, ε-greedy probing, and
+//!   saturation spill — so the JSON carries an adaptive-vs-static row
+//!   pair for every later PR to diff.
 //!
 //! Emits benchkit JSON (default `benches/data/bench_service.json`,
 //! override with `FLOWMATCH_BENCH_SERVICE_JSON`).
@@ -19,8 +21,9 @@ use flowmatch::assignment::hungarian::Hungarian;
 use flowmatch::assignment::AssignmentSolver;
 use flowmatch::benchkit::{write_json, Cell, Table};
 use flowmatch::service::{
-    replay, replay_spawn_baseline, PoolConfig, ReplayOutcome, SolverPool,
+    replay, replay_spawn_baseline, PoolConfig, ReplayOutcome, RoutingMode, SolverPool,
 };
+use flowmatch::util::stats::fmt_count_pairs;
 use flowmatch::util::Rng;
 use flowmatch::workloads::{MixedTrace, MixedTraceConfig, ProblemInstance, TraceConfig};
 
@@ -82,13 +85,28 @@ fn row(table: &mut Table, trace: &str, path: &str, workers: i64, out: &ReplayOut
             Some(s) => Cell::Float(s.p95 * 1e3),
             None => Cell::Missing,
         },
+        match &out.assign {
+            Some(s) => Cell::Float(s.p99 * 1e3),
+            None => Cell::Missing,
+        },
+        match &out.assign {
+            Some(s) => Cell::Float(s.max * 1e3),
+            None => Cell::Missing,
+        },
         Cell::Float(out.throughput_rps),
     ]);
 }
 
+fn print_rejects(out: &ReplayOutcome) {
+    if !out.reject_reasons.is_empty() {
+        println!("  rejects: {}", fmt_count_pairs(&out.reject_reasons));
+    }
+}
+
 fn verify_sample(trace: &MixedTrace, out: &ReplayOutcome) {
     // Spot-check optimality so the bench cannot silently measure a
-    // broken path (full verification lives in integration_service.rs).
+    // broken path (full verification lives in integration_service.rs
+    // and integration_adaptive.rs).
     for (id, reply) in out.replies.iter().take(8) {
         if let (Ok(reply), ProblemInstance::Assignment(inst)) =
             (reply, &trace.requests[*id].instance)
@@ -106,9 +124,18 @@ fn main() {
     let mixed_grids = if fast { 4 } else { 12 };
 
     let mut table = Table::new(
-        "E9: solver-pool service, closed-loop (latency columns: overall; p95 in ms)",
+        "E9/E10: solver-pool service, closed-loop (latency: overall; assign tail in ms)",
         &[
-            "trace", "path", "workers", "sent", "ok", "rejected", "latency", "assign p95 ms",
+            "trace",
+            "path",
+            "workers",
+            "sent",
+            "ok",
+            "rejected",
+            "latency",
+            "assign p95 ms",
+            "assign p99 ms",
+            "assign max ms",
             "throughput rps",
         ],
     );
@@ -147,19 +174,38 @@ fn main() {
         pooled.throughput_rps, baseline.throughput_rps
     );
 
-    // --- mixed trace through the sharded pool ----------------------------
+    // --- mixed trace: static vs adaptive routing (E10) -------------------
     let trace = mixed_trace(mixed_requests, mixed_grids, 11);
-    let pool = SolverPool::start(cfg);
-    let mixed = replay(&pool, &trace, false);
-    let report = pool.shutdown();
-    verify_sample(&trace, &mixed);
-    row(&mut table, "mixed asn+grid", "pooled", 4, &mixed);
-    let backends: Vec<String> = report
-        .backends
-        .iter()
-        .map(|(b, c)| format!("{b}={c}"))
-        .collect();
-    println!("mixed trace backends: [{}]", backends.join(", "));
+
+    let pool = SolverPool::start(cfg.clone());
+    let static_out = replay(&pool, &trace, false);
+    let static_report = pool.shutdown();
+    verify_sample(&trace, &static_out);
+    print_rejects(&static_out);
+    row(&mut table, "mixed asn+grid", "pooled-static", 4, &static_out);
+
+    let mut adaptive_cfg = cfg;
+    adaptive_cfg.router.routing = RoutingMode::Adaptive;
+    let pool = SolverPool::start(adaptive_cfg);
+    let adaptive_out = replay(&pool, &trace, false);
+    let adaptive_report = pool.shutdown();
+    verify_sample(&trace, &adaptive_out);
+    print_rejects(&adaptive_out);
+    row(
+        &mut table,
+        "mixed asn+grid",
+        "pooled-adaptive",
+        4,
+        &adaptive_out,
+    );
+
+    for (mode, report) in [("static", &static_report), ("adaptive", &adaptive_report)] {
+        println!(
+            "mixed trace [{mode}] backends: [{}] spilled={}",
+            fmt_count_pairs(&report.backends),
+            report.spilled
+        );
+    }
 
     table.print();
     let path = std::env::var("FLOWMATCH_BENCH_SERVICE_JSON")

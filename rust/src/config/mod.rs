@@ -127,7 +127,8 @@ pub fn preset(name: &str) -> Result<Config> {
              assign_small = \"hungarian\"\nassign_medium = \"csa-lockfree\"\n\
              assign_large = \"csa-lockfree\"\ngrid_small = \"native\"\n\
              grid_medium = \"native-par\"\ngrid_large = \"native-par\"\n\
-             cycle = 1024\nthreads = 4\ntile_rows = 16\nalpha = 10\n"
+             cycle = 1024\nthreads = 4\ntile_rows = 16\nalpha = 10\n\
+             routing = \"static\"\nprobe_every = 8\nspill_depth = 8\n"
         }
         // Small smoke setting for CI.
         "smoke" => {
@@ -136,7 +137,8 @@ pub fn preset(name: &str) -> Result<Config> {
              threads = 2\ntile_rows = 4\n\
              [service]\nworkers = 2\nqueue_depth = 16\nsmall_units = 512\n\
              medium_units = 4096\nmax_units = 65536\nuse_pjrt = false\n\
-             cycle = 128\nthreads = 2\ntile_rows = 4\n"
+             cycle = 128\nthreads = 2\ntile_rows = 4\n\
+             routing = \"static\"\nprobe_every = 4\nspill_depth = 4\n"
         }
         other => bail!("unknown preset {other:?} (try: paper, smoke)"),
     };
@@ -195,8 +197,13 @@ mod tests {
         assert_eq!(p.get("service.assign_small"), Some("hungarian"));
         assert_eq!(p.get("service.grid_large"), Some("native-par"));
         assert!(p.get_bool("service.use_pjrt", false).unwrap());
+        // Routing keys: static stays the out-of-the-box behaviour.
+        assert_eq!(p.get("service.routing"), Some("static"));
+        assert_eq!(p.get_usize("service.probe_every", 0).unwrap(), 8);
+        assert_eq!(p.get_usize("service.spill_depth", 0).unwrap(), 8);
         let s = preset("smoke").unwrap();
         assert_eq!(s.get_usize("service.workers", 0).unwrap(), 2);
         assert!(!s.get_bool("service.use_pjrt", true).unwrap());
+        assert_eq!(s.get("service.routing"), Some("static"));
     }
 }

@@ -1,67 +1,7 @@
 //! Latency/throughput metrics for the service (E7 reporting).
+//!
+//! The recorder implementation lives in [`crate::util::stats`] so the
+//! coordinator shim and the solver pool share one accounting substrate;
+//! this module keeps the historical `coordinator::metrics` path alive.
 
-use crate::util::stats::Summary;
-
-/// Accumulates per-request latencies (seconds).
-#[derive(Debug, Default, Clone)]
-pub struct LatencyRecorder {
-    samples: Vec<f64>,
-    started: Option<std::time::Instant>,
-    finished: Option<std::time::Instant>,
-}
-
-impl LatencyRecorder {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn mark_start(&mut self) {
-        self.started.get_or_insert_with(std::time::Instant::now);
-    }
-
-    pub fn record(&mut self, latency_secs: f64) {
-        self.mark_start();
-        self.samples.push(latency_secs);
-        self.finished = Some(std::time::Instant::now());
-    }
-
-    pub fn count(&self) -> usize {
-        self.samples.len()
-    }
-
-    pub fn summary(&self) -> Option<Summary> {
-        Summary::of(&self.samples)
-    }
-
-    /// Requests per second over the recording window.
-    pub fn throughput(&self) -> f64 {
-        match (self.started, self.finished) {
-            (Some(a), Some(b)) if b > a => self.samples.len() as f64 / (b - a).as_secs_f64(),
-            _ => 0.0,
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn records_and_summarises() {
-        let mut r = LatencyRecorder::new();
-        r.record(0.010);
-        r.record(0.020);
-        r.record(0.030);
-        let s = r.summary().unwrap();
-        assert_eq!(s.count, 3);
-        assert!((s.mean - 0.020).abs() < 1e-9);
-        assert!(r.throughput() >= 0.0);
-    }
-
-    #[test]
-    fn empty_recorder() {
-        let r = LatencyRecorder::new();
-        assert!(r.summary().is_none());
-        assert_eq!(r.throughput(), 0.0);
-    }
-}
+pub use crate::util::stats::LatencyRecorder;

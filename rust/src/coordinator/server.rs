@@ -68,6 +68,10 @@ pub struct ServiceReport {
     pub mean_latency: f64,
     pub throughput_rps: f64,
     pub backend: &'static str,
+    /// Requests served per backend name, from the pool's routing
+    /// telemetry (the legacy `backend` field keeps the old pjrt/native
+    /// dichotomy).
+    pub backends: Vec<(&'static str, usize)>,
 }
 
 /// Receiver for one reply; adapts the pool's [`SolveReply`] to the
@@ -162,6 +166,7 @@ impl AssignmentService {
             mean_latency: s.as_ref().map_or(0.0, |s| s.mean),
             throughput_rps: report.throughput_rps,
             backend,
+            backends: report.backends,
         })
     }
 }
@@ -198,6 +203,9 @@ mod tests {
         let report = service.shutdown().unwrap();
         assert_eq!(report.served, 6);
         assert!(report.batches >= 1);
+        // The per-backend breakdown names the real engine behind the
+        // legacy "native" label (the shim's fallback is the wave twin).
+        assert_eq!(report.backends, vec![("csa-wave", 6)]);
     }
 
     #[test]

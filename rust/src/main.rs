@@ -9,7 +9,7 @@
 //! flowmatch optflow   --height 32 --width 32 [--features 12] [--dy 2 --dx 1]
 //! flowmatch serve     --requests 50 --n 30 [--fps 20] [--native]
 //! flowmatch solver-pool serve   --workers 4 --requests 40 --grid-requests 8 [--fps 20]
-//! flowmatch solver-pool loadgen --workers 4 --requests 200 [--baseline]
+//! flowmatch solver-pool loadgen --workers 4 --requests 200 [--baseline] [--routing adaptive]
 //! flowmatch artifacts
 //! ```
 
@@ -21,7 +21,7 @@ use flowmatch::config;
 use flowmatch::coordinator::{self, AssignmentService, GridEngine, ServiceConfig};
 use flowmatch::graph::dimacs;
 use flowmatch::runtime::ArtifactRegistry;
-use flowmatch::util::stats::fmt_duration;
+use flowmatch::util::stats::{fmt_count_pairs, fmt_duration};
 use flowmatch::util::{Rng, Timer};
 use flowmatch::workloads;
 
@@ -67,6 +67,7 @@ const USAGE: &str = "flowmatch <info|maxflow|assign|segment|optflow|serve|solver
   solver-pool <serve|loadgen>
             [--workers W] [--requests R] [--grid-requests G] [--n N] [--grid S]
             [--large-grid S] [--fps F] [--queue-depth D] [--max-units U] [--seed S]
+            [--routing static|adaptive] [--probe-every N] [--spill-depth D]
             [--native] [--preset paper|smoke] [--baseline (loadgen)]";
 
 fn cmd_info() -> Result<()> {
@@ -361,6 +362,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fmt_duration(report.mean_latency),
         report.throughput_rps
     );
+    if !report.backends.is_empty() {
+        println!("  backends: [{}]", fmt_count_pairs(&report.backends));
+    }
     println!(
         "  paper §6 bar: 1/20 s per solve -> p50 {} that bar",
         if report.p50_latency <= 0.05 {
@@ -375,10 +379,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn fmt_lat(tag: &str, s: &Option<flowmatch::util::stats::Summary>) -> String {
     match s {
         Some(s) => format!(
-            "{tag}: p50={} p95={} p99={} mean={} ({} reqs)",
+            "{tag}: p50={} p95={} p99={} max={} mean={} ({} reqs)",
             fmt_duration(s.p50),
             fmt_duration(s.p95),
             fmt_duration(s.p99),
+            fmt_duration(s.max),
             fmt_duration(s.mean),
             s.count
         ),
@@ -404,6 +409,9 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
         "cycle",
         "threads",
         "tile-rows",
+        "routing",
+        "probe-every",
+        "spill-depth",
     ])?;
     let action = args
         .positional
@@ -424,6 +432,11 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
     pool_cfg.router.cycle_waves = args.get_usize("cycle", pool_cfg.router.cycle_waves)?;
     pool_cfg.router.par_threads = args.get_usize("threads", pool_cfg.router.par_threads)?;
     pool_cfg.router.tile_rows = args.get_usize("tile-rows", pool_cfg.router.tile_rows)?;
+    if let Some(mode) = args.get("routing") {
+        pool_cfg.router.routing = flowmatch::service::RoutingMode::parse(mode)?;
+    }
+    pool_cfg.router.probe_every = args.get_usize("probe-every", pool_cfg.router.probe_every)?;
+    pool_cfg.router.spill_depth = args.get_usize("spill-depth", pool_cfg.router.spill_depth)?;
     if args.flag("native") {
         pool_cfg.router.use_pjrt = false;
     }
@@ -459,11 +472,13 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
     let mut rng = Rng::seeded(seed);
     let trace = workloads::MixedTrace::generate(&mut rng, &trace_cfg);
     println!(
-        "solver-pool {action}: {} requests ({} assignment n={n}, {} grid {grid}²/{large_grid}²), {} workers",
+        "solver-pool {action}: {} requests ({} assignment n={n}, {} grid {grid}²/{large_grid}²), \
+         {} workers, routing={}",
         trace.len(),
         trace.assignment_count(),
         trace.grid_count(),
-        pool_cfg.workers
+        pool_cfg.workers,
+        pool_cfg.router.routing.name()
     );
 
     let shard_cfg = pool_cfg.shard.clone();
@@ -480,6 +495,9 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
         fmt_duration(out.wall_seconds),
         out.throughput_rps
     );
+    if !out.reject_reasons.is_empty() {
+        println!("  rejects: {}", fmt_count_pairs(&out.reject_reasons));
+    }
     println!("  {}", fmt_lat("assignment", &out.assign));
     println!("  {}", fmt_lat("grid      ", &out.grid));
     for class in flowmatch::service::SizeClass::ALL {
@@ -491,12 +509,42 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
             )
         );
     }
-    let backends: Vec<String> = report
-        .backends
-        .iter()
-        .map(|(b, c)| format!("{b}={c}"))
-        .collect();
-    println!("server : served={} via [{}]", report.served, backends.join(", "));
+    println!(
+        "server : served={} via [{}]",
+        report.served,
+        fmt_count_pairs(&report.backends)
+    );
+    if report.spilled > 0 {
+        println!(
+            "  spill  : {} Large grid solve(s) re-routed to fifo-lockfree (wave pool saturated)",
+            report.spilled
+        );
+    }
+    // Routing telemetry: one line per (family, class) with each
+    // backend's route count and latency EWMA.
+    for family in flowmatch::service::Family::ALL {
+        for class in flowmatch::service::SizeClass::ALL {
+            let rows: Vec<String> = report
+                .routes
+                .iter()
+                .filter(|r| r.family == family && r.class == class)
+                .map(|r| {
+                    let ewma = r
+                        .ewma_seconds
+                        .map_or_else(|| "—".to_string(), fmt_duration);
+                    format!("{}={} (ewma {})", r.backend, r.count, ewma)
+                })
+                .collect();
+            if !rows.is_empty() {
+                println!(
+                    "  routes : {}/{:<6} {}",
+                    family.name(),
+                    class.name(),
+                    rows.join("  ")
+                );
+            }
+        }
+    }
     if let Some(s) = &out.assign {
         println!(
             "paper §6 bar (1/20 s per matching): p50 {} ({} vs 50 ms)",

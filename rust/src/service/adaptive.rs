@@ -1,0 +1,278 @@
+//! Measurement-driven routing: the shared telemetry sink behind the
+//! adaptive router.
+//!
+//! Every solve records its backend latency into a per-(family ×
+//! size-class × backend) [`Ewma`](crate::util::stats::Ewma) held in one
+//! [`TelemetrySink`] shared by all solver workers.  Route decisions in
+//! adaptive mode go through [`TelemetrySink::choose`]:
+//!
+//! 1. **Cold start** — any candidate backend with no recorded sample
+//!    yet is taken first (in registration order), so every engine gets
+//!    measured before the sink claims to know a winner.
+//! 2. **Probe** — every `probe_every`-th decision for a (family,
+//!    class) pair routes round-robin across the candidates instead of
+//!    to the winner.  This is a deterministic ε-greedy (ε =
+//!    1/probe_every): stale EWMAs keep getting refreshed, so a backend
+//!    that regressed — or one that got faster as instances drifted —
+//!    is re-discovered without a wall clock or RNG in the decision
+//!    path (decisions are reproducible under a single worker).
+//! 3. **Steady state** — route to the candidate with the lowest
+//!    latency EWMA.
+//!
+//! Saturation spill (Large grid solves → `fifo-lockfree` when the
+//! shared wave pool's queue is backed up) is decided in the router,
+//! which consults the pool depth; the sink only counts the spills so
+//! reports can show them.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::util::stats::Ewma;
+
+use super::router::Family;
+use super::shard::SizeClass;
+
+/// Smoothing factor for the per-backend latency EWMAs.  0.3 weights
+/// roughly the last half-dozen solves; fast enough that a backend that
+/// turns slow is demoted within a few probes, smooth enough that one
+/// noisy sample does not flip the winner.
+pub const EWMA_ALPHA: f64 = 0.3;
+
+/// How the service picks a backend per request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutingMode {
+    /// The PR 3 behaviour: a fixed per-size-class table
+    /// ([`RouterConfig::assign`](super::RouterConfig::assign) /
+    /// [`grid`](super::RouterConfig::grid)), bit-exact with the
+    /// pre-adaptive service.
+    #[default]
+    Static,
+    /// Measurement-driven: latency EWMAs + ε-greedy probing + winner
+    /// routing, with saturation spill for Large grids.
+    Adaptive,
+}
+
+impl RoutingMode {
+    pub fn parse(name: &str) -> Result<Self> {
+        Ok(match name {
+            "static" => RoutingMode::Static,
+            "adaptive" => RoutingMode::Adaptive,
+            other => bail!("unknown routing mode {other:?} (expected static or adaptive)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutingMode::Static => "static",
+            RoutingMode::Adaptive => "adaptive",
+        }
+    }
+}
+
+/// One row of the routing telemetry: how often a backend served a
+/// (family, class) pair and at what smoothed latency.
+#[derive(Debug, Clone)]
+pub struct RouteStat {
+    pub family: Family,
+    pub class: SizeClass,
+    pub backend: &'static str,
+    /// Requests this backend served for the pair.
+    pub count: u64,
+    /// Latency EWMA in seconds (`None` only for rows that were chosen
+    /// but never finished recording, which cannot happen via `record`).
+    pub ewma_seconds: Option<f64>,
+}
+
+#[derive(Default)]
+struct SinkState {
+    /// Keyed by (family index, class index, backend name); BTreeMap so
+    /// snapshots iterate in a stable report order.
+    routes: BTreeMap<(usize, usize, &'static str), Ewma>,
+    /// Decision counters per (family, class) — the probe clock.
+    decisions: [[u64; 3]; 2],
+    spills: u64,
+}
+
+/// The shared measurement sink: one per [`SolverPool`](super::SolverPool),
+/// written by every worker after every solve.
+pub struct TelemetrySink {
+    probe_every: u64,
+    state: Mutex<SinkState>,
+}
+
+impl TelemetrySink {
+    /// `probe_every = N` probes one decision in `N` (ε = 1/N); 0
+    /// disables probing entirely (cold-start measurement still runs).
+    pub fn new(probe_every: usize) -> Self {
+        Self {
+            probe_every: probe_every as u64,
+            state: Mutex::new(SinkState::default()),
+        }
+    }
+
+    /// Record one served request's backend latency (seconds spent in
+    /// the solve, excluding queue delay).
+    pub fn record(&self, family: Family, class: SizeClass, backend: &'static str, secs: f64) {
+        let mut st = self.state.lock().unwrap();
+        st.routes
+            .entry((family.index(), class.index(), backend))
+            .or_insert_with(|| Ewma::new(EWMA_ALPHA))
+            .record(secs);
+    }
+
+    /// Count one saturation spill (router decided it; see module doc).
+    pub fn record_spill(&self) {
+        self.state.lock().unwrap().spills += 1;
+    }
+
+    /// Pick a backend for a (family, class) request from `candidates`
+    /// (must be non-empty, in registration order).
+    pub fn choose(
+        &self,
+        family: Family,
+        class: SizeClass,
+        candidates: &[&'static str],
+    ) -> &'static str {
+        assert!(!candidates.is_empty(), "choose with no candidate backends");
+        let mut st = self.state.lock().unwrap();
+        let tick = st.decisions[family.index()][class.index()];
+        st.decisions[family.index()][class.index()] += 1;
+        let key = |b: &'static str| (family.index(), class.index(), b);
+        // Cold start: measure every candidate once before trusting any EWMA.
+        if let Some(&cold) = candidates.iter().find(|&&b| match st.routes.get(&key(b)) {
+            None => true,
+            Some(e) => e.count() == 0,
+        }) {
+            return cold;
+        }
+        // Deterministic ε-greedy probe: cycle the candidates.
+        if self.probe_every > 0 && tick % self.probe_every == 0 {
+            return candidates[((tick / self.probe_every) % candidates.len() as u64) as usize];
+        }
+        // Steady state: current EWMA winner.
+        candidates
+            .iter()
+            .copied()
+            .min_by(|&a, &b| {
+                let ea = st.routes[&key(a)].get().unwrap_or(f64::INFINITY);
+                let eb = st.routes[&key(b)].get().unwrap_or(f64::INFINITY);
+                ea.partial_cmp(&eb).expect("NaN latency EWMA")
+            })
+            .expect("non-empty candidates")
+    }
+
+    /// Stable-ordered copy of every route row, for reports.
+    pub fn snapshot(&self) -> Vec<RouteStat> {
+        let st = self.state.lock().unwrap();
+        st.routes
+            .iter()
+            .map(|(&(f, c, backend), ewma)| RouteStat {
+                family: Family::ALL[f],
+                class: SizeClass::ALL[c],
+                backend,
+                count: ewma.count(),
+                ewma_seconds: ewma.get(),
+            })
+            .collect()
+    }
+
+    pub fn spills(&self) -> usize {
+        self.state.lock().unwrap().spills as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const A: &str = "engine-a";
+    const B: &str = "engine-b";
+
+    #[test]
+    fn routing_mode_roundtrip() {
+        for m in [RoutingMode::Static, RoutingMode::Adaptive] {
+            assert_eq!(RoutingMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(RoutingMode::parse("nope").is_err());
+        assert_eq!(RoutingMode::default(), RoutingMode::Static);
+    }
+
+    #[test]
+    fn cold_start_measures_every_candidate() {
+        let sink = TelemetrySink::new(0); // no probing: isolate cold start
+        let cands = [A, B];
+        assert_eq!(sink.choose(Family::Assignment, SizeClass::Small, &cands), A);
+        sink.record(Family::Assignment, SizeClass::Small, A, 0.010);
+        assert_eq!(sink.choose(Family::Assignment, SizeClass::Small, &cands), B);
+        sink.record(Family::Assignment, SizeClass::Small, B, 0.001);
+        // Both measured: winner is the faster one from now on.
+        for _ in 0..5 {
+            assert_eq!(sink.choose(Family::Assignment, SizeClass::Small, &cands), B);
+        }
+    }
+
+    /// The headline adaptive behaviour: deterministic injected
+    /// latencies flip the EWMA winner.
+    #[test]
+    fn injected_latencies_flip_the_winner() {
+        let sink = TelemetrySink::new(0);
+        let cands = [A, B];
+        let (fam, class) = (Family::Grid, SizeClass::Large);
+        sink.record(fam, class, A, 0.002);
+        sink.record(fam, class, B, 0.010);
+        assert_eq!(sink.choose(fam, class, &cands), A, "A starts as winner");
+        // A regresses hard; within a few samples its EWMA crosses B's.
+        for _ in 0..6 {
+            sink.record(fam, class, A, 0.050);
+        }
+        assert_eq!(sink.choose(fam, class, &cands), B, "winner flipped to B");
+        // And back: B regresses, A recovers.
+        for _ in 0..6 {
+            sink.record(fam, class, B, 0.200);
+            sink.record(fam, class, A, 0.001);
+        }
+        assert_eq!(sink.choose(fam, class, &cands), A, "winner flipped back");
+    }
+
+    #[test]
+    fn probing_revisits_losers_at_the_configured_rate() {
+        let sink = TelemetrySink::new(4);
+        let cands = [A, B];
+        let (fam, class) = (Family::Assignment, SizeClass::Medium);
+        sink.record(fam, class, A, 0.001);
+        sink.record(fam, class, B, 0.100);
+        let picks: Vec<&str> = (0..16).map(|_| sink.choose(fam, class, &cands)).collect();
+        let probes_to_b = picks.iter().filter(|p| **p == B).count();
+        // Ticks 0,4,8,12 probe round-robin (A,B,A,B) → exactly 2 hit B.
+        assert_eq!(probes_to_b, 2, "picks: {picks:?}");
+        // Everything that wasn't a probe went to the winner.
+        assert_eq!(picks.iter().filter(|p| **p == A).count(), 14);
+    }
+
+    #[test]
+    fn per_pair_state_is_independent() {
+        let sink = TelemetrySink::new(0);
+        sink.record(Family::Grid, SizeClass::Small, A, 0.001);
+        sink.record(Family::Grid, SizeClass::Large, B, 0.001);
+        sink.record(Family::Grid, SizeClass::Large, A, 0.050);
+        assert_eq!(sink.choose(Family::Grid, SizeClass::Large, &[A, B]), B);
+        // Small never saw B: cold start takes it there.
+        assert_eq!(sink.choose(Family::Grid, SizeClass::Small, &[A, B]), B);
+    }
+
+    #[test]
+    fn snapshot_reports_counts_and_ewmas() {
+        let sink = TelemetrySink::new(0);
+        sink.record(Family::Assignment, SizeClass::Small, A, 0.004);
+        sink.record(Family::Assignment, SizeClass::Small, A, 0.004);
+        sink.record_spill();
+        let snap = sink.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].backend, A);
+        assert_eq!(snap[0].count, 2);
+        assert!((snap[0].ewma_seconds.unwrap() - 0.004).abs() < 1e-12);
+        assert_eq!(sink.spills(), 1);
+    }
+}

@@ -55,6 +55,10 @@ pub struct ReplayOutcome {
     pub overall: Option<Summary>,
     pub assign: Option<Summary>,
     pub grid: Option<Summary>,
+    /// Rejections broken down by [`RejectReason::label`] (queue-full /
+    /// too-large / shutting-down), so backpressure behaviour is visible
+    /// in summaries without reading per-request traces.
+    pub reject_reasons: Vec<(&'static str, usize)>,
     /// Per-request outcomes in trace order, for oracle verification by
     /// the caller.
     pub replies: Vec<(usize, Result<SolveReply, ReplayError>)>,
@@ -67,6 +71,8 @@ impl ReplayOutcome {
         let mut grid = Vec::new();
         let mut rejected = 0usize;
         let mut failed = 0usize;
+        let mut reasons: std::collections::BTreeMap<&'static str, usize> =
+            std::collections::BTreeMap::new();
         for (_, r) in &replies {
             match r {
                 Ok(reply) => {
@@ -76,7 +82,10 @@ impl ReplayOutcome {
                         grid.push(reply.latency);
                     }
                 }
-                Err(ReplayError::Rejected(_)) => rejected += 1,
+                Err(ReplayError::Rejected(reason)) => {
+                    rejected += 1;
+                    *reasons.entry(reason.label()).or_insert(0) += 1;
+                }
                 Err(ReplayError::Failed(_)) => failed += 1,
             }
         }
@@ -92,6 +101,7 @@ impl ReplayOutcome {
             overall: Summary::of(&all),
             assign: Summary::of(&assign),
             grid: Summary::of(&grid),
+            reject_reasons: reasons.into_iter().collect(),
             replies,
         }
     }
@@ -219,6 +229,41 @@ mod tests {
                 ..Default::default()
             },
         )
+    }
+
+    #[test]
+    fn reject_breakdown_counts_by_reason() {
+        use super::super::{PoolConfig, SolverPool};
+        // Admission cap below the grid size: every grid request is
+        // rejected as too-large, every matching is served.
+        let mut cfg = PoolConfig {
+            workers: 1,
+            ..Default::default()
+        };
+        cfg.shard.max_units = 100; // n=8 matchings (64 units) admit; 12² grids (144) do not
+        let mut rng = Rng::seeded(6);
+        let trace = MixedTrace::generate(
+            &mut rng,
+            &MixedTraceConfig {
+                assign: TraceConfig {
+                    requests: 3,
+                    n: 8,
+                    arrival_gap: 0.0,
+                    ..Default::default()
+                },
+                grid_requests: 2,
+                grid_size: 12, // 144 units > max_units = 100
+                grid_arrival_gap: 0.0,
+                large_every: 0,
+                ..Default::default()
+            },
+        );
+        let pool = SolverPool::start(cfg);
+        let out = replay(&pool, &trace, false);
+        drop(pool.shutdown());
+        assert_eq!(out.ok, 3);
+        assert_eq!(out.rejected, 2);
+        assert_eq!(out.reject_reasons, vec![("too-large", 2)]);
     }
 
     #[test]

@@ -12,17 +12,25 @@
 //! * [`shard`] — size-class sharded queues with admission control and
 //!   reject-with-reason backpressure, so small real-time matchings
 //!   never sit behind 512² grid solves.
-//! * [`router`] — per-size-class backend selection (hungarian /
-//!   csa-seq / csa-lockfree / csa-wave / PJRT for assignment; native /
-//!   native-par / fifo-lockfree for grids) with per-worker solver and
-//!   artifact caches.
+//! * [`router`] — the [`Backend`] trait + [`BackendRegistry`]: every
+//!   engine (hungarian / csa-seq / csa-lockfree / csa-wave / PJRT for
+//!   assignment; native / native-par / fifo-lockfree for grids) is
+//!   registered once and instantiated per worker, with solver scratch
+//!   and artifact caches surviving across requests.
+//! * [`adaptive`] — measurement-driven routing: per-(family ×
+//!   size-class × backend) latency EWMAs in a shared [`TelemetrySink`],
+//!   deterministic ε-greedy probing, route-to-winner steady state, and
+//!   saturation spill of Large grid solves to `fifo-lockfree` when the
+//!   wave pool's queue backs up.  Static (PR 3 tables) stays the
+//!   default; select with `[service] routing = "adaptive"`.
 //! * [`loadgen`] — mixed-trace replay (open- and closed-loop) with
-//!   p50/p95/p99 latency and throughput reporting, plus the
-//!   spawn-per-request baseline the pool replaces.
+//!   p50/p95/p99/max latency, throughput, and reject-reason reporting,
+//!   plus the spawn-per-request baseline the pool replaces.
 //!
 //! The legacy assignment-only `coordinator::server::AssignmentService`
 //! is now a thin shim over [`SolverPool`].
 
+pub mod adaptive;
 pub mod loadgen;
 pub mod pool;
 pub mod router;
@@ -35,9 +43,10 @@ use crate::config::Config;
 use crate::gridflow::GridSolveReport;
 
 pub use crate::workloads::ProblemInstance;
+pub use adaptive::{RouteStat, RoutingMode, TelemetrySink};
 pub use loadgen::{replay, replay_spawn_baseline, ReplayError, ReplayOutcome};
 pub use pool::{PoolReport, SolverPool, WorkerPool};
-pub use router::{AssignBackend, GridBackend, RouterConfig};
+pub use router::{AssignBackend, Backend, BackendRegistry, Family, GridBackend, RouterConfig};
 pub use shard::{RejectReason, ShardConfig, SizeClass};
 
 /// What a request solved to, by family.
@@ -145,6 +154,12 @@ impl PoolConfig {
                 cycle_waves: cfg.get_usize("service.cycle", d.router.cycle_waves)?,
                 par_threads: cfg.get_usize("service.threads", d.router.par_threads)?,
                 tile_rows: cfg.get_usize("service.tile_rows", d.router.tile_rows)?,
+                routing: match cfg.get("service.routing") {
+                    Some(name) => RoutingMode::parse(name)?,
+                    None => d.router.routing,
+                },
+                probe_every: cfg.get_usize("service.probe_every", d.router.probe_every)?,
+                spill_depth: cfg.get_usize("service.spill_depth", d.router.spill_depth)?,
                 ..d.router
             },
         };
@@ -193,6 +208,23 @@ mod tests {
     fn bad_backend_name_rejected() {
         let cfg = Config::parse("[service]\nassign_small = \"nope\"\n").unwrap();
         assert!(PoolConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn routing_keys_from_config() {
+        let cfg = Config::parse(
+            "[service]\nrouting = \"adaptive\"\nprobe_every = 5\nspill_depth = 3\n",
+        )
+        .unwrap();
+        let pc = PoolConfig::from_config(&cfg).unwrap();
+        assert_eq!(pc.router.routing, RoutingMode::Adaptive);
+        assert_eq!(pc.router.probe_every, 5);
+        assert_eq!(pc.router.spill_depth, 3);
+        // Absent keys keep the static default.
+        let pc = PoolConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(pc.router.routing, RoutingMode::Static);
+        let bad = Config::parse("[service]\nrouting = \"nope\"\n").unwrap();
+        assert!(PoolConfig::from_config(&bad).is_err());
     }
 
     #[test]

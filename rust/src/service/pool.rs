@@ -21,10 +21,10 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::coordinator::metrics::LatencyRecorder;
-use crate::util::stats::Summary;
+use crate::util::stats::{LatencyRecorder, Summary};
 use crate::workloads::ProblemInstance;
 
+use super::adaptive::{RouteStat, TelemetrySink};
 use super::router::{RouterConfig, WorkerBackends};
 use super::shard::{QueuedJob, RejectReason, ShardedQueues, SizeClass};
 use super::{PoolConfig, SolveReply};
@@ -117,6 +117,14 @@ impl WorkerPool {
 
     pub fn threads(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Jobs queued but not yet picked up by a pool thread — the
+    /// saturation signal the adaptive router's spill check reads.  A
+    /// non-zero depth means tile phases handed to the pool right now
+    /// would wait behind other solves' work.
+    pub fn pending(&self) -> usize {
+        self.shared.queue.lock().unwrap().jobs.len()
     }
 
     /// Run every job to completion on the pool, blocking until all are
@@ -242,6 +250,13 @@ pub struct PoolReport {
     pub throughput_rps: f64,
     /// Requests served per backend name.
     pub backends: Vec<(&'static str, usize)>,
+    /// Routing telemetry: per-(family × class × backend) route counts
+    /// and latency EWMAs, in stable order.  Populated in both modes —
+    /// static deployments get the same per-backend observability.
+    pub routes: Vec<RouteStat>,
+    /// Large grid solves the adaptive router spilled to
+    /// `fifo-lockfree` because the wave pool was saturated.
+    pub spilled: usize,
 }
 
 impl PoolReport {
@@ -260,6 +275,7 @@ impl PoolReport {
 pub struct SolverPool {
     queues: Arc<ShardedQueues>,
     metrics: Arc<Mutex<PoolMetrics>>,
+    telemetry: Arc<TelemetrySink>,
     wave_pool: Arc<WorkerPool>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
@@ -273,23 +289,30 @@ impl SolverPool {
     pub fn start(cfg: PoolConfig) -> Self {
         let queues = Arc::new(ShardedQueues::new(cfg.shard.clone()));
         let metrics = Arc::new(Mutex::new(PoolMetrics::new()));
+        // One telemetry sink shared by every worker: route decisions
+        // and EWMAs are pool-global, not per-worker.
+        let telemetry = Arc::new(TelemetrySink::new(cfg.router.probe_every));
         let wave_pool = Arc::new(WorkerPool::new(cfg.router.par_threads));
         let workers = (0..cfg.workers)
             .map(|idx| {
                 let queues = Arc::clone(&queues);
                 let metrics = Arc::clone(&metrics);
+                let telemetry = Arc::clone(&telemetry);
                 let wave_pool = Arc::clone(&wave_pool);
                 let rcfg = cfg.router.clone();
                 let total = cfg.workers;
                 std::thread::Builder::new()
                     .name(format!("flowmatch-solver-{idx}"))
-                    .spawn(move || solver_worker_loop(idx, total, queues, metrics, rcfg, wave_pool))
+                    .spawn(move || {
+                        solver_worker_loop(idx, total, queues, metrics, telemetry, rcfg, wave_pool)
+                    })
                     .expect("spawn solver worker")
             })
             .collect();
         Self {
             queues,
             metrics,
+            telemetry,
             wave_pool,
             workers,
             next_id: AtomicU64::new(0),
@@ -358,8 +381,12 @@ impl SolverPool {
     /// Drain the queues, stop the workers, and report.
     pub fn shutdown(mut self) -> PoolReport {
         self.finish();
+        let routes = self.telemetry.snapshot();
+        let spilled = self.telemetry.spills();
         let m = self.metrics.lock().unwrap();
         PoolReport {
+            routes,
+            spilled,
             served: m.overall.count(),
             rejected: m.rejected,
             assign_served: m.assign.count(),
@@ -396,14 +423,16 @@ fn solver_worker_loop(
     total: usize,
     queues: Arc<ShardedQueues>,
     metrics: Arc<Mutex<PoolMetrics>>,
+    telemetry: Arc<TelemetrySink>,
     rcfg: RouterConfig,
     wave_pool: Arc<WorkerPool>,
 ) {
     // Per-worker backend state: cached executors/scratch and (when
     // configured and discoverable) a PJRT driver.  The `xla` handles
     // are !Send, exactly like a CUDA context — they live and die on
-    // this thread.
-    let mut backends = WorkerBackends::new(rcfg, Some(&wave_pool));
+    // this thread.  The telemetry sink is the one shared measurement
+    // store behind adaptive routing.
+    let mut backends = WorkerBackends::with_telemetry(rcfg, Some(&wave_pool), telemetry);
     while let Some(job) = queues.pop(idx, total) {
         let queue_delay = job.submitted.elapsed().as_secs_f64();
         let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {

@@ -1,20 +1,28 @@
-//! Backend routing: which solver engine serves a request, chosen per
-//! problem family and size class, with per-worker cached state.
+//! Backend routing: which solver engine serves a request.
 //!
-//! Assignment requests can go to the exact Hungarian baseline, the
-//! sequential cost-scaling engine, the paper's lock-free refine, the
-//! dense wave twin, or (when artifacts are discoverable) the PJRT
-//! device driver.  Grid max-flow requests can go to the sequential
-//! native wave engine, the tiled multi-threaded engine (borrowing the
-//! shared [`WorkerPool`](super::pool::WorkerPool) instead of spawning
-//! per-wave threads), or Hong's lock-free CSR engine.
+//! Every engine in the tree is wrapped in one [`Backend`] trait object
+//! and registered exactly once in [`BackendRegistry::standard`] — that
+//! function is the single place a new engine is added.  A registry is
+//! instantiated **per worker** ([`WorkerBackends`]): executor scratch
+//! (active lists, BFS buffers) survives across requests, and the
+//! compiled PJRT artifact handle, which is `!Send`, lives and dies on
+//! the worker thread that built it.
 //!
-//! Everything a backend needs between requests is cached on the worker
-//! ([`WorkerBackends`]): executor scratch (active lists, BFS buffers)
-//! and the compiled PJRT artifact handle, which is `!Send` and so must
-//! live on the worker thread that created it.
+//! Two routing modes sit on top (see [`RoutingMode`]):
+//!
+//! * **static** — the per-size-class tables in [`RouterConfig`]
+//!   (`assign` / `grid`), with PJRT preferred for assignment instances
+//!   that fit its padded size.  Bit-exact with the PR 3 service.
+//! * **adaptive** — measurement-driven: per-(family × class × backend)
+//!   latency EWMAs in the shared [`TelemetrySink`], ε-greedy cold-start
+//!   probing, route-to-winner steady state, and saturation spill of
+//!   Large grid solves to `fifo-lockfree` whenever the shared wave
+//!   pool's queue depth is at or above [`RouterConfig::spill_depth`]
+//!   (a saturated pool means `native-par`'s tile phases would queue
+//!   behind other solves, so Hong's self-threaded CSR engine wins).
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
@@ -28,12 +36,435 @@ use crate::maxflow::{self, MaxFlowSolver};
 use crate::runtime::ArtifactRegistry;
 use crate::workloads::ProblemInstance;
 
+use super::adaptive::{RoutingMode, TelemetrySink};
 use super::pool::WorkerPool;
 use super::shard::SizeClass;
 use super::SolveOutcome;
 
-/// Native assignment backends (the PJRT driver is layered on top via
-/// [`RouterConfig::use_pjrt`], mirroring the hybrid drivers' Auto mode).
+/// The two problem families the service routes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Family {
+    Assignment,
+    Grid,
+}
+
+impl Family {
+    pub const ALL: [Family; 2] = [Family::Assignment, Family::Grid];
+
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            Family::Assignment => 0,
+            Family::Grid => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Assignment => "assignment",
+            Family::Grid => "grid",
+        }
+    }
+
+    pub fn of(instance: &ProblemInstance) -> Family {
+        match instance {
+            ProblemInstance::Assignment(_) => Family::Assignment,
+            ProblemInstance::Grid(_) => Family::Grid,
+        }
+    }
+}
+
+/// One solver engine behind the service.  Implementations own whatever
+/// state they want cached between requests on a worker (executor
+/// scratch, device handles); they are built per worker thread and never
+/// cross threads, so `!Send` members are fine.
+pub trait Backend {
+    /// Stable engine name — the routing tables, telemetry, and reports
+    /// all key on it.
+    fn name(&self) -> &'static str;
+
+    fn family(&self) -> Family;
+
+    /// Whether this backend can serve `instance` (e.g. PJRT only takes
+    /// assignment instances that fit its padded size).  Backends are
+    /// only offered instances of their own family.
+    fn accepts(&self, instance: &ProblemInstance) -> bool {
+        let _ = instance;
+        true
+    }
+
+    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome>;
+}
+
+fn wrong_family(backend: &'static str, instance: &ProblemInstance) -> anyhow::Error {
+    anyhow::anyhow!(
+        "backend {backend} cannot serve a {} instance",
+        Family::of(instance).name()
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Assignment backends
+// ---------------------------------------------------------------------------
+
+struct HungarianBackend;
+
+impl Backend for HungarianBackend {
+    fn name(&self) -> &'static str {
+        "hungarian"
+    }
+
+    fn family(&self) -> Family {
+        Family::Assignment
+    }
+
+    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome> {
+        match instance {
+            ProblemInstance::Assignment(inst) => Ok(SolveOutcome::Assignment(
+                assignment::hungarian::Hungarian.solve(inst)?,
+            )),
+            other => Err(wrong_family(self.name(), other)),
+        }
+    }
+}
+
+struct CsaSeqBackend {
+    alpha: i64,
+}
+
+impl Backend for CsaSeqBackend {
+    fn name(&self) -> &'static str {
+        "csa-seq"
+    }
+
+    fn family(&self) -> Family {
+        Family::Assignment
+    }
+
+    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome> {
+        match instance {
+            ProblemInstance::Assignment(inst) => Ok(SolveOutcome::Assignment(
+                assignment::csa::SequentialCsa::with_alpha(self.alpha).solve(inst)?,
+            )),
+            other => Err(wrong_family(self.name(), other)),
+        }
+    }
+}
+
+struct CsaLockfreeBackend {
+    alpha: i64,
+    threads: usize,
+}
+
+impl Backend for CsaLockfreeBackend {
+    fn name(&self) -> &'static str {
+        "csa-lockfree"
+    }
+
+    fn family(&self) -> Family {
+        Family::Assignment
+    }
+
+    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome> {
+        match instance {
+            ProblemInstance::Assignment(inst) => Ok(SolveOutcome::Assignment(
+                assignment::csa_lockfree::LockFreeCsa {
+                    alpha: self.alpha,
+                    threads: self.threads,
+                }
+                .solve(inst)?,
+            )),
+            other => Err(wrong_family(self.name(), other)),
+        }
+    }
+}
+
+struct WaveCsaBackend {
+    alpha: i64,
+}
+
+impl Backend for WaveCsaBackend {
+    fn name(&self) -> &'static str {
+        "csa-wave"
+    }
+
+    fn family(&self) -> Family {
+        Family::Assignment
+    }
+
+    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome> {
+        match instance {
+            ProblemInstance::Assignment(inst) => Ok(SolveOutcome::Assignment(
+                assignment::wave::WaveCsa {
+                    alpha: Some(self.alpha),
+                }
+                .solve(inst)?,
+            )),
+            other => Err(wrong_family(self.name(), other)),
+        }
+    }
+}
+
+/// The PJRT device driver.  The artifact handle is `!Send` (like a CUDA
+/// context); it is discovered and compiled once per worker, here.
+struct PjrtBackend {
+    driver: PjrtAssignmentDriver,
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn family(&self) -> Family {
+        Family::Assignment
+    }
+
+    fn accepts(&self, instance: &ProblemInstance) -> bool {
+        match instance {
+            ProblemInstance::Assignment(inst) => inst.n <= self.driver.padded_n(),
+            ProblemInstance::Grid(_) => false,
+        }
+    }
+
+    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome> {
+        match instance {
+            ProblemInstance::Assignment(inst) => {
+                let (result, _tel) = self.driver.solve(inst)?;
+                Ok(SolveOutcome::Assignment(result))
+            }
+            other => Err(wrong_family(self.name(), other)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Grid backends
+// ---------------------------------------------------------------------------
+
+struct NativeGridBackend {
+    exec: NativeGridExecutor,
+    cycle_waves: usize,
+}
+
+impl Backend for NativeGridBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn family(&self) -> Family {
+        Family::Grid
+    }
+
+    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome> {
+        match instance {
+            ProblemInstance::Grid(net) => Ok(SolveOutcome::Grid(
+                HybridGridSolver::with_cycle(self.cycle_waves).solve(net, &mut self.exec)?,
+            )),
+            other => Err(wrong_family(self.name(), other)),
+        }
+    }
+}
+
+struct NativeParGridBackend {
+    exec: NativeParGridExecutor,
+    cycle_waves: usize,
+}
+
+impl Backend for NativeParGridBackend {
+    fn name(&self) -> &'static str {
+        "native-par"
+    }
+
+    fn family(&self) -> Family {
+        Family::Grid
+    }
+
+    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome> {
+        match instance {
+            ProblemInstance::Grid(net) => Ok(SolveOutcome::Grid(
+                HybridGridSolver::with_cycle(self.cycle_waves).solve(net, &mut self.exec)?,
+            )),
+            other => Err(wrong_family(self.name(), other)),
+        }
+    }
+}
+
+/// Hong's lock-free engine over the CSR conversion.  It spawns its own
+/// scoped threads, so it stays fast when the shared wave pool is
+/// saturated — which is exactly why the adaptive router spills to it.
+struct FifoLockfreeBackend {
+    threads: usize,
+}
+
+impl FifoLockfreeBackend {
+    fn solve_grid(&self, net: &GridNetwork) -> Result<GridSolveReport> {
+        let mut g = net.to_flow_network();
+        let stats = maxflow::lockfree::LockFree {
+            threads: self.threads.max(1),
+            ..Default::default()
+        }
+        .solve(&mut g)?;
+        Ok(GridSolveReport {
+            flow: stats.value,
+            excess_total: net.excess_total(),
+            host_rounds: stats.rounds,
+            pushes: stats.pushes as i64,
+            relabels: stats.relabels as i64,
+            ..Default::default()
+        })
+    }
+}
+
+impl Backend for FifoLockfreeBackend {
+    fn name(&self) -> &'static str {
+        "fifo-lockfree"
+    }
+
+    fn family(&self) -> Family {
+        Family::Grid
+    }
+
+    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome> {
+        match instance {
+            ProblemInstance::Grid(net) => Ok(SolveOutcome::Grid(self.solve_grid(net)?)),
+            other => Err(wrong_family(self.name(), other)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+type BuildFn = fn(&RouterConfig, Option<&Arc<WorkerPool>>) -> Option<Box<dyn Backend>>;
+
+/// One registered engine: its stable name, family, and per-worker
+/// constructor.  The constructor may return `None` for backends that
+/// are unavailable in this process (PJRT without artifacts).
+pub struct BackendSpec {
+    pub name: &'static str,
+    pub family: Family,
+    build: BuildFn,
+}
+
+/// The engine catalogue.  [`BackendRegistry::standard`] is the single
+/// registration point: adding an engine there makes it routable,
+/// measurable, and reportable everywhere at once.
+pub struct BackendRegistry {
+    specs: Vec<BackendSpec>,
+}
+
+impl BackendRegistry {
+    pub fn new() -> Self {
+        Self { specs: Vec::new() }
+    }
+
+    pub fn register(&mut self, name: &'static str, family: Family, build: BuildFn) {
+        assert!(
+            self.specs.iter().all(|s| s.name != name),
+            "backend {name:?} registered twice"
+        );
+        self.specs.push(BackendSpec {
+            name,
+            family,
+            build,
+        });
+    }
+
+    /// Every in-tree engine, registered once.
+    pub fn standard() -> Self {
+        let mut r = Self::new();
+        r.register("hungarian", Family::Assignment, |_, _| {
+            Some(Box::new(HungarianBackend))
+        });
+        r.register("csa-seq", Family::Assignment, |cfg, _| {
+            Some(Box::new(CsaSeqBackend { alpha: cfg.alpha }))
+        });
+        r.register("csa-lockfree", Family::Assignment, |cfg, _| {
+            Some(Box::new(CsaLockfreeBackend {
+                alpha: cfg.alpha,
+                threads: cfg.csa_threads,
+            }))
+        });
+        r.register("csa-wave", Family::Assignment, |cfg, _| {
+            Some(Box::new(WaveCsaBackend { alpha: cfg.alpha }))
+        });
+        // PJRT discovery happens once, here — not per request; absent
+        // artifacts simply leave the backend unregistered on the worker.
+        r.register("pjrt", Family::Assignment, |cfg, _| {
+            if !cfg.use_pjrt {
+                return None;
+            }
+            ArtifactRegistry::discover()
+                .ok()
+                .and_then(|reg| PjrtAssignmentDriver::for_size(&reg, cfg.pjrt_max_n).ok())
+                .map(|mut d| {
+                    d.alpha = cfg.alpha;
+                    Box::new(PjrtBackend { driver: d }) as Box<dyn Backend>
+                })
+        });
+        r.register("native", Family::Grid, |cfg, _| {
+            Some(Box::new(NativeGridBackend {
+                exec: NativeGridExecutor::default(),
+                cycle_waves: cfg.cycle_waves,
+            }))
+        });
+        r.register("native-par", Family::Grid, |cfg, pool| {
+            let mut exec = NativeParGridExecutor::new(cfg.par_threads, cfg.tile_rows);
+            if let Some(pool) = pool {
+                exec = exec.with_pool(Arc::clone(pool));
+            }
+            Some(Box::new(NativeParGridBackend {
+                exec,
+                cycle_waves: cfg.cycle_waves,
+            }))
+        });
+        r.register("fifo-lockfree", Family::Grid, |cfg, _| {
+            Some(Box::new(FifoLockfreeBackend {
+                threads: cfg.par_threads.max(1),
+            }))
+        });
+        r
+    }
+
+    /// Registered names for a family (whether or not they build on a
+    /// given worker).
+    pub fn names(&self, family: Family) -> Vec<&'static str> {
+        self.specs
+            .iter()
+            .filter(|s| s.family == family)
+            .map(|s| s.name)
+            .collect()
+    }
+
+    /// Build every available backend for one worker, in registration
+    /// order.
+    fn instantiate(
+        &self,
+        cfg: &RouterConfig,
+        pool: Option<&Arc<WorkerPool>>,
+    ) -> Vec<Box<dyn Backend>> {
+        self.specs
+            .iter()
+            .filter_map(|s| (s.build)(cfg, pool))
+            .collect()
+    }
+}
+
+impl Default for BackendRegistry {
+    fn default() -> Self {
+        Self::standard()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Static routing tables (config surface, unchanged from PR 3)
+// ---------------------------------------------------------------------------
+
+/// Native assignment backends for the static table (the PJRT driver is
+/// layered on top via [`RouterConfig::use_pjrt`], mirroring the hybrid
+/// drivers' Auto mode).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AssignBackend {
     Hungarian,
@@ -66,7 +497,7 @@ impl AssignBackend {
     }
 }
 
-/// Grid max-flow backends.
+/// Grid max-flow backends for the static table.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum GridBackend {
     /// Sequential native wave engine.
@@ -100,12 +531,13 @@ impl GridBackend {
     }
 }
 
-/// Routing table + engine tunables, one copy per worker.
+/// Routing tables + engine tunables, one copy per worker.
 #[derive(Debug, Clone)]
 pub struct RouterConfig {
-    /// Assignment backend per size class, indexed by [`SizeClass::index`].
+    /// Static assignment backend per size class, indexed by
+    /// [`SizeClass::index`].  Ignored in adaptive mode.
     pub assign: [AssignBackend; 3],
-    /// Grid backend per size class.
+    /// Static grid backend per size class.  Ignored in adaptive mode.
     pub grid: [GridBackend; 3],
     /// Prefer the PJRT driver for assignment instances that fit its
     /// padded size, falling back to the native table on any miss.
@@ -121,6 +553,16 @@ pub struct RouterConfig {
     /// Wave-pool width used by the `native-par` grid backend.
     pub par_threads: usize,
     pub tile_rows: usize,
+    /// Static (PR 3 tables) or adaptive (measurement-driven) routing.
+    pub routing: RoutingMode,
+    /// Adaptive mode: probe one decision in `probe_every` (0 disables
+    /// probing after cold start).
+    pub probe_every: usize,
+    /// Adaptive mode: spill Large grid solves to `fifo-lockfree` when
+    /// the shared wave pool has at least this many queued jobs (0 =
+    /// spill whenever the check runs, useful in tests; has no effect in
+    /// static mode).
+    pub spill_depth: usize,
 }
 
 impl Default for RouterConfig {
@@ -139,111 +581,165 @@ impl Default for RouterConfig {
             cycle_waves: 512,
             par_threads: 4,
             tile_rows: 16,
+            routing: RoutingMode::Static,
+            probe_every: 8,
+            spill_depth: 8,
         }
     }
 }
 
-/// Per-worker backend state: cached executors (scratch survives across
-/// requests) and the optional PJRT driver.
+// ---------------------------------------------------------------------------
+// Per-worker routing state
+// ---------------------------------------------------------------------------
+
+/// EWMA penalty multiplier applied to a solve that returned an error:
+/// the failed attempt's elapsed time (floored at [`MIN_FAILURE_SECS`],
+/// so a fast-failing backend cannot look cheap) scaled so the backend
+/// loses the winner contest until probes see it succeed again.
+const FAILURE_PENALTY: f64 = 8.0;
+const MIN_FAILURE_SECS: f64 = 0.050;
+
+/// Per-worker backend state: every available engine instantiated from
+/// the registry (scratch survives across requests), the routing config,
+/// and the shared telemetry sink.
 pub(crate) struct WorkerBackends {
     cfg: RouterConfig,
-    pjrt: Option<PjrtAssignmentDriver>,
-    seq_exec: NativeGridExecutor,
-    par_exec: NativeParGridExecutor,
+    backends: Vec<Box<dyn Backend>>,
+    telemetry: Arc<TelemetrySink>,
+    /// Clone of the shared wave pool, kept for the saturation probe
+    /// (the `native-par` executor holds its own clone for tile work).
+    wave_pool: Option<Arc<WorkerPool>>,
 }
 
 impl WorkerBackends {
-    /// Build the worker's caches.  PJRT discovery happens once, here —
-    /// not per request; `wave_pool` is the shared persistent pool the
-    /// `native-par` backend borrows (None: fall back to per-wave scoped
-    /// threads, used by the spawn-baseline loadgen path).
+    /// Build the worker's caches with a private telemetry sink (tests,
+    /// spawn-baseline loadgen).  `wave_pool` is the shared persistent
+    /// pool the `native-par` backend borrows (None: fall back to
+    /// per-wave scoped threads).
     pub fn new(cfg: RouterConfig, wave_pool: Option<&Arc<WorkerPool>>) -> Self {
-        let pjrt = if cfg.use_pjrt {
-            ArtifactRegistry::discover()
-                .ok()
-                .and_then(|reg| PjrtAssignmentDriver::for_size(&reg, cfg.pjrt_max_n).ok())
-                .map(|mut d| {
-                    d.alpha = cfg.alpha;
-                    d
-                })
-        } else {
-            None
-        };
-        let mut par_exec = NativeParGridExecutor::new(cfg.par_threads, cfg.tile_rows);
-        if let Some(pool) = wave_pool {
-            par_exec = par_exec.with_pool(Arc::clone(pool));
-        }
+        let sink = Arc::new(TelemetrySink::new(cfg.probe_every));
+        Self::with_telemetry(cfg, wave_pool, sink)
+    }
+
+    /// Build the worker's caches against a sink shared with the other
+    /// workers — the production shape: all workers feed (and read) one
+    /// set of EWMAs.
+    pub fn with_telemetry(
+        cfg: RouterConfig,
+        wave_pool: Option<&Arc<WorkerPool>>,
+        telemetry: Arc<TelemetrySink>,
+    ) -> Self {
+        let backends = BackendRegistry::standard().instantiate(&cfg, wave_pool);
         Self {
             cfg,
-            pjrt,
-            seq_exec: NativeGridExecutor::default(),
-            par_exec,
+            backends,
+            telemetry,
+            wave_pool: wave_pool.map(Arc::clone),
         }
     }
 
+    fn index_of(&self, name: &str) -> Option<usize> {
+        self.backends.iter().position(|b| b.name() == name)
+    }
+
+    /// Static routing: PJRT first for assignment instances that fit,
+    /// then the per-class table — exactly the PR 3 dispatch.
+    fn route_static(&self, class: SizeClass, instance: &ProblemInstance) -> &'static str {
+        match Family::of(instance) {
+            Family::Assignment => {
+                if let Some(i) = self.index_of("pjrt") {
+                    if self.backends[i].accepts(instance) {
+                        return "pjrt";
+                    }
+                }
+                self.cfg.assign[class.index()].name()
+            }
+            Family::Grid => self.cfg.grid[class.index()].name(),
+        }
+    }
+
+    /// Adaptive routing: saturation spill first, then the telemetry
+    /// sink's cold-start / probe / winner decision.
+    fn route_adaptive(&self, class: SizeClass, instance: &ProblemInstance) -> &'static str {
+        let family = Family::of(instance);
+        if family == Family::Grid && class == SizeClass::Large {
+            if let Some(pool) = &self.wave_pool {
+                if pool.pending() >= self.cfg.spill_depth {
+                    self.telemetry.record_spill();
+                    return "fifo-lockfree";
+                }
+            }
+        }
+        let candidates: Vec<&'static str> = self
+            .backends
+            .iter()
+            .filter(|b| b.family() == family && b.accepts(instance))
+            .map(|b| b.name())
+            .collect();
+        self.telemetry.choose(family, class, &candidates)
+    }
+
     /// Solve one request; returns the outcome plus the backend name
-    /// that actually served it.
+    /// that actually served it.  Every solve's latency (excluding queue
+    /// delay) feeds the telemetry sink in both routing modes — that is
+    /// what populates the per-backend route counts and EWMAs surfaced
+    /// in `PoolReport::routes` and the CLI route table.
     pub fn solve(
         &mut self,
         class: SizeClass,
         instance: &ProblemInstance,
     ) -> Result<(SolveOutcome, &'static str)> {
-        match instance {
-            ProblemInstance::Assignment(inst) => {
-                if let Some(driver) = self.pjrt.as_mut() {
-                    if inst.n <= driver.padded_n() {
-                        let (result, _tel) = driver.solve(inst)?;
-                        return Ok((SolveOutcome::Assignment(result), "pjrt"));
-                    }
-                }
-                let backend = self.cfg.assign[class.index()];
-                let result = match backend {
-                    AssignBackend::Hungarian => assignment::hungarian::Hungarian.solve(inst)?,
-                    AssignBackend::CsaSeq => {
-                        assignment::csa::SequentialCsa::with_alpha(self.cfg.alpha).solve(inst)?
-                    }
-                    AssignBackend::CsaLockfree => assignment::csa_lockfree::LockFreeCsa {
-                        alpha: self.cfg.alpha,
-                        threads: self.cfg.csa_threads,
-                    }
-                    .solve(inst)?,
-                    AssignBackend::WaveCsa => assignment::wave::WaveCsa {
-                        alpha: Some(self.cfg.alpha),
-                    }
-                    .solve(inst)?,
-                };
-                Ok((SolveOutcome::Assignment(result), backend.name()))
+        let name = match self.cfg.routing {
+            RoutingMode::Static => self.route_static(class, instance),
+            RoutingMode::Adaptive => self.route_adaptive(class, instance),
+        };
+        let idx = self
+            .index_of(name)
+            .ok_or_else(|| anyhow::anyhow!("backend {name:?} not available on this worker"))?;
+        let t = Instant::now();
+        let outcome = self.backends[idx].solve(instance);
+        let elapsed = t.elapsed().as_secs_f64();
+        match outcome {
+            Ok(out) => {
+                self.telemetry.record(Family::of(instance), class, name, elapsed);
+                Ok((out, name))
             }
-            ProblemInstance::Grid(net) => {
-                let backend = self.cfg.grid[class.index()];
-                let report = self.solve_grid(backend, net)?;
-                Ok((SolveOutcome::Grid(report), backend.name()))
+            Err(e) => {
+                // A failing backend must still be measured: with no
+                // sample its count stays 0 and adaptive cold start
+                // would re-select it forever.  The penalty is finite
+                // (not ∞) so later successful probes can rehabilitate
+                // a backend that recovers.
+                self.telemetry.record(
+                    Family::of(instance),
+                    class,
+                    name,
+                    elapsed.max(MIN_FAILURE_SECS) * FAILURE_PENALTY,
+                );
+                Err(e)
             }
         }
     }
 
-    fn solve_grid(&mut self, backend: GridBackend, net: &GridNetwork) -> Result<GridSolveReport> {
-        let solver = HybridGridSolver::with_cycle(self.cfg.cycle_waves);
-        match backend {
-            GridBackend::Native => solver.solve(net, &mut self.seq_exec),
-            GridBackend::NativePar => solver.solve(net, &mut self.par_exec),
-            GridBackend::FifoLockfree => {
-                let mut g = net.to_flow_network();
-                let stats = maxflow::lockfree::LockFree {
-                    threads: self.cfg.par_threads.max(1),
-                    ..Default::default()
-                }
-                .solve(&mut g)?;
-                Ok(GridSolveReport {
-                    flow: stats.value,
-                    excess_total: net.excess_total(),
-                    host_rounds: stats.rounds,
-                    pushes: stats.pushes as i64,
-                    relabels: stats.relabels as i64,
-                    ..Default::default()
-                })
-            }
+    /// Test hook: build against an arbitrary registry (fault injection).
+    #[cfg(test)]
+    fn with_registry_for_tests(cfg: RouterConfig, registry: &BackendRegistry) -> Self {
+        let telemetry = Arc::new(TelemetrySink::new(cfg.probe_every));
+        let backends = registry.instantiate(&cfg, None);
+        Self {
+            cfg,
+            backends,
+            telemetry,
+            wave_pool: None,
         }
+    }
+
+    #[cfg(test)]
+    fn solve_named(&mut self, name: &str, instance: &ProblemInstance) -> Result<SolveOutcome> {
+        let idx = self
+            .index_of(name)
+            .ok_or_else(|| anyhow::anyhow!("backend {name:?} not available"))?;
+        self.backends[idx].solve(instance)
     }
 }
 
@@ -277,6 +773,33 @@ mod tests {
     }
 
     #[test]
+    fn registry_lists_every_engine_once() {
+        let reg = BackendRegistry::standard();
+        assert_eq!(
+            reg.names(Family::Assignment),
+            ["hungarian", "csa-seq", "csa-lockfree", "csa-wave", "pjrt"]
+        );
+        assert_eq!(
+            reg.names(Family::Grid),
+            ["native", "native-par", "fifo-lockfree"]
+        );
+        // Every static-table name resolves to a registered spec.
+        for n in ["hungarian", "csa-seq", "csa-lockfree", "csa-wave"] {
+            assert!(reg.names(Family::Assignment).contains(&n));
+        }
+        for n in ["native", "native-par", "fifo-lockfree"] {
+            assert!(reg.names(Family::Grid).contains(&n));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "registered twice")]
+    fn duplicate_registration_rejected() {
+        let mut reg = BackendRegistry::standard();
+        reg.register("hungarian", Family::Assignment, |_, _| None);
+    }
+
+    #[test]
     fn routes_by_class_and_solves_optimally() {
         let mut backends = WorkerBackends::new(RouterConfig::default(), None);
         let mut rng = Rng::seeded(11);
@@ -304,8 +827,165 @@ mod tests {
             GridBackend::NativePar,
             GridBackend::FifoLockfree,
         ] {
-            let report = backends.solve_grid(b, &net).unwrap();
-            assert_eq!(report.flow, want, "backend {}", b.name());
+            let out = backends
+                .solve_named(b.name(), &ProblemInstance::Grid(net.clone()))
+                .unwrap();
+            assert_eq!(out.flow(), Some(want), "backend {}", b.name());
         }
+    }
+
+    #[test]
+    fn backend_rejects_wrong_family() {
+        let mut backends = WorkerBackends::new(RouterConfig::default(), None);
+        let mut rng = Rng::seeded(13);
+        let net = random_grid(&mut rng, 4, 4, 5, 0.3, 0.3);
+        let err = backends
+            .solve_named("hungarian", &ProblemInstance::Grid(net))
+            .unwrap_err();
+        assert!(err.to_string().contains("cannot serve"), "{err}");
+    }
+
+    #[test]
+    fn adaptive_cold_start_covers_all_assignment_engines() {
+        let cfg = RouterConfig {
+            routing: RoutingMode::Adaptive,
+            probe_every: 0,
+            ..RouterConfig::default()
+        };
+        let mut backends = WorkerBackends::new(cfg, None);
+        let mut rng = Rng::seeded(14);
+        let inst = uniform_costs(&mut rng, 10, 40);
+        let want = Hungarian.solve(&inst).unwrap().weight;
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..4 {
+            let (out, name) = backends
+                .solve(SizeClass::Small, &ProblemInstance::Assignment(inst.clone()))
+                .unwrap();
+            assert_eq!(out.weight(), Some(want), "backend {name} suboptimal");
+            seen.insert(name);
+        }
+        // use_pjrt = false → exactly the four native engines, each
+        // probed once during cold start.
+        assert_eq!(
+            seen.into_iter().collect::<Vec<_>>(),
+            ["csa-lockfree", "csa-seq", "csa-wave", "hungarian"]
+        );
+    }
+
+    struct AlwaysFails;
+
+    impl Backend for AlwaysFails {
+        fn name(&self) -> &'static str {
+            "always-fails"
+        }
+
+        fn family(&self) -> Family {
+            Family::Assignment
+        }
+
+        fn solve(&mut self, _instance: &ProblemInstance) -> Result<SolveOutcome> {
+            bail!("injected failure")
+        }
+    }
+
+    /// A backend whose every solve errors must still get measured (with
+    /// the failure penalty) — otherwise adaptive cold start, which
+    /// prefers unmeasured candidates, would re-select it forever.
+    #[test]
+    fn failing_backend_is_demoted_not_repinned() {
+        let mut reg = BackendRegistry::new();
+        reg.register("always-fails", Family::Assignment, |_, _| {
+            Some(Box::new(AlwaysFails))
+        });
+        reg.register("hungarian", Family::Assignment, |_, _| {
+            Some(Box::new(HungarianBackend))
+        });
+        let cfg = RouterConfig {
+            routing: RoutingMode::Adaptive,
+            probe_every: 0,
+            ..RouterConfig::default()
+        };
+        let mut backends = WorkerBackends::with_registry_for_tests(cfg, &reg);
+        let mut rng = Rng::seeded(16);
+        let inst = ProblemInstance::Assignment(uniform_costs(&mut rng, 6, 20));
+        // Cold start hits the broken engine first; the error propagates.
+        let err = backends.solve(SizeClass::Small, &inst).unwrap_err();
+        assert!(err.to_string().contains("injected failure"), "{err}");
+        // But the failure was recorded (penalised), so the router cold
+        // starts the healthy engine next and then keeps winning with it
+        // instead of re-pinning the broken one.
+        for _ in 0..3 {
+            let (_, name) = backends.solve(SizeClass::Small, &inst).unwrap();
+            assert_eq!(name, "hungarian");
+        }
+    }
+
+    /// Saturation spill: with the shared wave pool's queue backed up
+    /// past `spill_depth`, a Large grid solve is re-routed to the
+    /// self-threaded `fifo-lockfree` engine — and the flow value is
+    /// unchanged.
+    #[test]
+    fn large_grid_spills_to_lockfree_when_pool_saturated() {
+        use std::sync::{Condvar, Mutex};
+
+        let pool = Arc::new(WorkerPool::new(1));
+        let cfg = RouterConfig {
+            routing: RoutingMode::Adaptive,
+            spill_depth: 2,
+            par_threads: 1,
+            ..RouterConfig::default()
+        };
+        let mut backends = WorkerBackends::new(cfg, Some(&pool));
+
+        let mut rng = Rng::seeded(15);
+        let net = random_grid(&mut rng, 8, 8, 9, 0.3, 0.3);
+        let mut g = net.to_flow_network();
+        let want = Dinic.solve(&mut g).unwrap().value;
+
+        // Saturate the 1-thread wave pool: the worker blocks on the
+        // gate, two more jobs sit queued → pending() == 2 == spill_depth.
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let blocked = {
+            let pool = Arc::clone(&pool);
+            let gate = Arc::clone(&gate);
+            std::thread::spawn(move || {
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+                    .map(|_| {
+                        let gate = Arc::clone(&gate);
+                        Box::new(move || {
+                            let (lock, cv) = &*gate;
+                            let mut open = lock.lock().unwrap();
+                            while !*open {
+                                open = cv.wait(open).unwrap();
+                            }
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.scope_run(jobs);
+            })
+        };
+        while pool.pending() < 2 {
+            std::thread::yield_now();
+        }
+
+        let (out, name) = backends
+            .solve(SizeClass::Large, &ProblemInstance::Grid(net.clone()))
+            .unwrap();
+        assert_eq!(name, "fifo-lockfree", "saturated pool must spill");
+        assert_eq!(out.flow(), Some(want), "spilled solve changed the flow");
+
+        // Open the gate; once the pool drains, Large grids route
+        // normally again (cold start: first un-measured grid engine).
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        blocked.join().unwrap();
+        assert_eq!(pool.pending(), 0);
+        let (_, name) = backends
+            .solve(SizeClass::Large, &ProblemInstance::Grid(net))
+            .unwrap();
+        assert_ne!(name, "fifo-lockfree", "drained pool must not spill");
     }
 }

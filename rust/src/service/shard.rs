@@ -106,6 +106,18 @@ pub enum RejectReason {
     ShuttingDown,
 }
 
+impl RejectReason {
+    /// Short stable tag for breakdown tables ("queue-full=3 too-large=1"
+    /// in the loadgen summary); the `Display` impl carries the detail.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull { .. } => "queue-full",
+            RejectReason::TooLarge { .. } => "too-large",
+            RejectReason::ShuttingDown => "shutting-down",
+        }
+    }
+}
+
 impl fmt::Display for RejectReason {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
@@ -340,17 +352,18 @@ mod tests {
 
     #[test]
     fn reject_reasons_render() {
-        let s = RejectReason::QueueFull {
+        let full = RejectReason::QueueFull {
             class: SizeClass::Small,
             depth: 4,
-        }
-        .to_string();
-        assert!(s.contains("queue full"));
-        let s = RejectReason::TooLarge {
+        };
+        assert!(full.to_string().contains("queue full"));
+        assert_eq!(full.label(), "queue-full");
+        let large = RejectReason::TooLarge {
             units: 9,
             max_units: 4,
-        }
-        .to_string();
-        assert!(s.contains("too large"));
+        };
+        assert!(large.to_string().contains("too large"));
+        assert_eq!(large.label(), "too-large");
+        assert_eq!(RejectReason::ShuttingDown.label(), "shutting-down");
     }
 }

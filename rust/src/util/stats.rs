@@ -1,4 +1,8 @@
-//! Sample statistics for bench reporting: mean, stddev, percentiles.
+//! Sample statistics shared by every reporting layer: `Summary`
+//! (mean/stddev/percentiles), `LatencyRecorder` (the one per-request
+//! latency accumulator — the coordinator service and the solver pool
+//! both sit on it), and `Ewma` (the exponentially weighted average the
+//! adaptive router's telemetry sink keeps per backend).
 
 /// Summary statistics over a set of f64 samples (times in seconds, op
 /// counts, byte counts — anything the benches record).
@@ -44,6 +48,87 @@ impl Summary {
     }
 }
 
+/// Accumulates per-request latencies (seconds) and summarises them.
+/// This is the single recorder behind both the legacy coordinator
+/// service report and the solver pool's metrics.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    samples: Vec<f64>,
+    started: Option<std::time::Instant>,
+    finished: Option<std::time::Instant>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn mark_start(&mut self) {
+        self.started.get_or_insert_with(std::time::Instant::now);
+    }
+
+    pub fn record(&mut self, latency_secs: f64) {
+        self.mark_start();
+        self.samples.push(latency_secs);
+        self.finished = Some(std::time::Instant::now());
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn summary(&self) -> Option<Summary> {
+        Summary::of(&self.samples)
+    }
+
+    /// Requests per second over the recording window.
+    pub fn throughput(&self) -> f64 {
+        match (self.started, self.finished) {
+            (Some(a), Some(b)) if b > a => self.samples.len() as f64 / (b - a).as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+}
+
+/// Exponentially weighted moving average: `v ← (1-α)·v + α·x`.  The
+/// adaptive router keeps one per (family × size class × backend); a
+/// fixed α trades smoothing for how fast a regressing backend is
+/// demoted.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+    count: u64,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha), "EWMA alpha out of range");
+        Self {
+            alpha,
+            value: None,
+            count: 0,
+        }
+    }
+
+    pub fn record(&mut self, sample: f64) {
+        self.value = Some(match self.value {
+            None => sample,
+            Some(v) => (1.0 - self.alpha) * v + self.alpha * sample,
+        });
+        self.count += 1;
+    }
+
+    /// Current average; `None` until the first sample.
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
 /// Nearest-rank percentile on a pre-sorted slice.
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     assert!(!sorted.is_empty());
@@ -63,6 +148,13 @@ pub fn fmt_duration(secs: f64) -> String {
     } else {
         format!("{:.0} ns", secs * 1e9)
     }
+}
+
+/// Format `name=count` pairs for one-line breakdowns (reject reasons,
+/// per-backend served counts) — one formatter for the CLI and benches.
+pub fn fmt_count_pairs(pairs: &[(&str, usize)]) -> String {
+    let parts: Vec<String> = pairs.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    parts.join(", ")
 }
 
 /// Format a count with thousands separators (for op-count tables).
@@ -130,5 +222,47 @@ mod tests {
         assert_eq!(fmt_count(1234567), "1_234_567");
         assert_eq!(fmt_count(-42), "-42");
         assert_eq!(fmt_count(0), "0");
+    }
+
+    #[test]
+    fn count_pairs_formatting() {
+        assert_eq!(fmt_count_pairs(&[]), "");
+        assert_eq!(
+            fmt_count_pairs(&[("queue-full", 3), ("too-large", 1)]),
+            "queue-full=3, too-large=1"
+        );
+    }
+
+    #[test]
+    fn recorder_records_and_summarises() {
+        let mut r = LatencyRecorder::new();
+        r.record(0.010);
+        r.record(0.020);
+        r.record(0.030);
+        let s = r.summary().unwrap();
+        assert_eq!(s.count, 3);
+        assert!((s.mean - 0.020).abs() < 1e-9);
+        assert!(r.throughput() >= 0.0);
+    }
+
+    #[test]
+    fn empty_recorder() {
+        let r = LatencyRecorder::new();
+        assert!(r.summary().is_none());
+        assert_eq!(r.throughput(), 0.0);
+    }
+
+    #[test]
+    fn ewma_converges_toward_recent_samples() {
+        let mut e = Ewma::new(0.5);
+        assert!(e.get().is_none());
+        e.record(8.0);
+        assert_eq!(e.get(), Some(8.0)); // first sample seeds the average
+        for _ in 0..20 {
+            e.record(1.0);
+        }
+        let v = e.get().unwrap();
+        assert!(v < 1.01, "ewma {v} did not track the recent level");
+        assert_eq!(e.count(), 21);
     }
 }

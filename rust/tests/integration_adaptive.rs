@@ -1,0 +1,214 @@
+//! Integration tests for the adaptive execution layer: static mode
+//! must reproduce the PR 3 routing tables verbatim, adaptive mode must
+//! re-route across engines (cold start + probing) and spill saturated
+//! Large grid work — and in every mode, every reply must stay exact
+//! against the sequential oracles.
+//!
+//! The EWMA winner-flip itself is unit-tested deterministically in
+//! `service::adaptive` (injected latencies, no wall clock); here we
+//! drive the full pool.
+
+use std::collections::BTreeSet;
+
+use flowmatch::assignment::hungarian::Hungarian;
+use flowmatch::assignment::AssignmentSolver;
+use flowmatch::coordinator::{solve_grid_with, GridEngine};
+use flowmatch::service::{
+    replay, Family, PoolConfig, ProblemInstance, RouterConfig, RoutingMode, ShardConfig,
+    SizeClass, SolverPool,
+};
+use flowmatch::util::Rng;
+use flowmatch::workloads::{MixedTrace, MixedTraceConfig, TraceConfig};
+
+const CYCLE: usize = 128;
+
+fn pool_config(workers: usize, routing: RoutingMode) -> PoolConfig {
+    PoolConfig {
+        workers,
+        shard: ShardConfig {
+            // n=10 assignment (100 units) is Small, 24² grids (576)
+            // are Medium, 48² grids (2304) are Large.
+            small_max_units: 256,
+            medium_max_units: 1024,
+            queue_depth: 64,
+            max_units: 1 << 16,
+        },
+        router: RouterConfig {
+            use_pjrt: false, // keep the oracle artifact-free
+            cycle_waves: CYCLE,
+            par_threads: 2,
+            tile_rows: 4,
+            routing,
+            probe_every: 2,
+            ..Default::default()
+        },
+    }
+}
+
+fn mixed_trace(seed: u64, assign_requests: usize, grid_requests: usize) -> MixedTrace {
+    let mut rng = Rng::seeded(seed);
+    MixedTrace::generate(
+        &mut rng,
+        &MixedTraceConfig {
+            assign: TraceConfig {
+                requests: assign_requests,
+                n: 10,
+                max_weight: 60,
+                arrival_gap: 0.0,
+                ..Default::default()
+            },
+            grid_requests,
+            grid_size: 24,
+            grid_max_cap: 12,
+            grid_arrival_gap: 0.0,
+            large_every: 3,
+            large_size: 48,
+        },
+    )
+}
+
+/// Check every reply against the sequential single-solver oracles and
+/// return the set of backends seen per (family, class).
+fn verify_against_oracles(
+    trace: &MixedTrace,
+    replies: &[(usize, Result<flowmatch::service::SolveReply, flowmatch::service::ReplayError>)],
+) -> BTreeSet<(Family, SizeClass, &'static str)> {
+    let mut seen = BTreeSet::new();
+    for (id, reply) in replies {
+        let reply = reply.as_ref().unwrap_or_else(|e| panic!("request {id}: {e}"));
+        match &trace.requests[*id].instance {
+            ProblemInstance::Assignment(inst) => {
+                let exact = Hungarian.solve(inst).unwrap();
+                assert_eq!(
+                    reply.outcome.weight(),
+                    Some(exact.weight),
+                    "request {id}: backend {} suboptimal",
+                    reply.backend
+                );
+                seen.insert((Family::Assignment, reply.class, reply.backend));
+            }
+            ProblemInstance::Grid(net) => {
+                let (want, _) = solve_grid_with(net, CYCLE, None, GridEngine::Native).unwrap();
+                assert_eq!(
+                    reply.outcome.flow(),
+                    Some(want.flow),
+                    "request {id}: backend {} wrong flow",
+                    reply.backend
+                );
+                seen.insert((Family::Grid, reply.class, reply.backend));
+            }
+        }
+    }
+    seen
+}
+
+/// Static mode is the default and reproduces the PR 3 per-class
+/// tables verbatim: every reply's backend is exactly the configured
+/// table entry for its (family, class).
+#[test]
+fn static_mode_reproduces_table_routing_verbatim() {
+    let cfg = pool_config(3, RoutingMode::Static);
+    let assign_table = cfg.router.assign;
+    let grid_table = cfg.router.grid;
+    let trace = mixed_trace(601, 10, 6);
+    let pool = SolverPool::start(cfg);
+    let out = replay(&pool, &trace, false);
+    let report = pool.shutdown();
+
+    assert_eq!(out.ok, trace.len());
+    for (id, reply) in &out.replies {
+        let reply = reply.as_ref().unwrap();
+        let expected = match &trace.requests[*id].instance {
+            ProblemInstance::Assignment(_) => assign_table[reply.class.index()].name(),
+            ProblemInstance::Grid(_) => grid_table[reply.class.index()].name(),
+        };
+        assert_eq!(
+            reply.backend, expected,
+            "request {id}: static routing diverged from the table"
+        );
+    }
+    verify_against_oracles(&trace, &out.replies);
+    // No spill in static mode, ever.
+    assert_eq!(report.spilled, 0);
+    // Telemetry still accumulates (per-backend observability).
+    assert!(!report.routes.is_empty());
+    assert!(report.routes.iter().all(|r| r.count > 0));
+}
+
+/// Adaptive mode demonstrably re-routes: cold start measures every
+/// registered engine of each (family, class) that sees enough
+/// requests, probing keeps revisiting them — and every answer still
+/// matches the sequential oracles exactly.
+#[test]
+fn adaptive_mode_reroutes_and_stays_oracle_exact() {
+    let trace = mixed_trace(602, 16, 6);
+    let pool = SolverPool::start(pool_config(2, RoutingMode::Adaptive));
+    let out = replay(&pool, &trace, false);
+    let report = pool.shutdown();
+
+    assert_eq!(out.ok, trace.len(), "rejected={} failed={}", out.rejected, out.failed);
+    let seen = verify_against_oracles(&trace, &out.replies);
+
+    // 16 Small matchings against 4 registered native assignment
+    // engines: cold start alone must have spread them across all 4.
+    let small_assign: BTreeSet<&str> = seen
+        .iter()
+        .filter(|(f, c, _)| *f == Family::Assignment && *c == SizeClass::Small)
+        .map(|(_, _, b)| *b)
+        .collect();
+    assert_eq!(
+        small_assign.into_iter().collect::<Vec<_>>(),
+        ["csa-lockfree", "csa-seq", "csa-wave", "hungarian"],
+        "adaptive routing did not measure every assignment engine"
+    );
+
+    // The report carries the measurement state: every routed pair has
+    // a count and a finite EWMA.
+    assert!(!report.routes.is_empty());
+    for r in &report.routes {
+        assert!(r.count > 0, "{}/{} {}", r.family.name(), r.class.name(), r.backend);
+        let ewma = r.ewma_seconds.expect("routed backend has an EWMA");
+        assert!(ewma.is_finite() && ewma >= 0.0);
+    }
+}
+
+/// Saturation spill at the pool level: with the spill threshold at 0
+/// (spill whenever the check runs), every Large grid is re-routed to
+/// the self-threaded `fifo-lockfree` engine; Small/Medium traffic and
+/// all results are untouched.
+#[test]
+fn adaptive_spill_routes_large_grids_to_lockfree() {
+    let mut cfg = pool_config(2, RoutingMode::Adaptive);
+    cfg.router.spill_depth = 0;
+    let trace = mixed_trace(603, 8, 6); // every 3rd grid is 48² = Large
+    let large_grids = trace
+        .requests
+        .iter()
+        .filter(|r| matches!(&r.instance, ProblemInstance::Grid(_)) && r.instance.work_units() > 1024)
+        .count();
+    assert!(large_grids >= 2, "trace must contain Large grids");
+
+    let pool = SolverPool::start(cfg);
+    let out = replay(&pool, &trace, false);
+    let report = pool.shutdown();
+
+    assert_eq!(out.ok, trace.len());
+    let seen = verify_against_oracles(&trace, &out.replies);
+    for (id, reply) in &out.replies {
+        let reply = reply.as_ref().unwrap();
+        if reply.class == SizeClass::Large {
+            assert_eq!(
+                reply.backend, "fifo-lockfree",
+                "request {id}: Large grid must spill under saturation"
+            );
+        }
+    }
+    // Spill only *forces* Large grids there; Medium grids may still
+    // visit fifo-lockfree through ordinary cold-start probing, and
+    // assignment traffic never can (wrong family).
+    assert!(report.served_by("fifo-lockfree") >= large_grids);
+    assert_eq!(report.spilled, large_grids);
+    assert!(seen
+        .iter()
+        .all(|(f, _, b)| *f == Family::Grid || *b != "fifo-lockfree"));
+}
