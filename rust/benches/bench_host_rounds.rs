@@ -1,0 +1,115 @@
+//! Host-round scaling sweep (EXPERIMENTS §E11): sequential host rounds
+//! vs the stripe-parallel twins on a pooled lane set, across thread
+//! counts and grid sizes.  Measures full host rounds (violation cancel
+//! + two-pass global relabel + height write-back) on a mid-solve state
+//! reached by real waves, so the numbers isolate exactly the serial
+//! fraction the striped refactor removes.
+//!
+//! Emits the markdown table plus benchkit JSON (default
+//! `benches/data/bench_host_rounds.json`, override with
+//! `FLOWMATCH_BENCH_JSON`).
+
+use std::sync::Arc;
+
+use flowmatch::benchkit::{write_json, Cell, Measure, Table};
+use flowmatch::gridflow::wave::{native_wave_with, WaveScratch};
+use flowmatch::gridflow::{host, init_state};
+use flowmatch::parallel::Lanes;
+use flowmatch::runtime::device::GridWireState;
+use flowmatch::service::WorkerPool;
+use flowmatch::util::stats::Summary;
+use flowmatch::util::Rng;
+use flowmatch::workloads::random_grid;
+
+/// Init + exact heights + a burst of waves: a state with spread-out
+/// excess, saturated arcs, and height violations — what a host round
+/// actually sees mid-solve.
+fn mid_solve_state(seed: u64, h: usize, w: usize) -> GridWireState {
+    let mut rng = Rng::seeded(seed);
+    let net = random_grid(&mut rng, h, w, 30, 0.25, 0.25);
+    let (mut st, _) = init_state(&net);
+    host::global_relabel(&mut st);
+    let mut scratch = WaveScratch::default();
+    for _ in 0..96 {
+        native_wave_with(&mut st, &mut scratch);
+    }
+    st
+}
+
+const ROUNDS: usize = 4;
+
+fn run_seq(st0: &GridWireState) -> GridWireState {
+    let mut st = st0.clone();
+    let mut scratch = host::HostScratch::for_state(&st);
+    for _ in 0..ROUNDS {
+        host::host_round_with(&mut st, &mut scratch);
+    }
+    st
+}
+
+fn run_striped(st0: &GridWireState, lanes: &Lanes<'_>) -> GridWireState {
+    let mut st = st0.clone();
+    let mut scratch = host::HostScratch::for_state(&st);
+    for _ in 0..ROUNDS {
+        host::host_round_par(&mut st, &mut scratch, lanes);
+    }
+    st
+}
+
+fn main() {
+    let measure = Measure::default().from_env();
+    let fast = std::env::var("FLOWMATCH_BENCH_FAST").as_deref() == Ok("1");
+    let sizes: &[usize] = if fast { &[64, 128] } else { &[128, 256, 512] };
+
+    let mut table = Table::new(
+        &format!("Host rounds: seq vs striped ({ROUNDS} rounds on a mid-solve state)"),
+        &["grid", "mode", "threads", "time", "speedup"],
+    );
+
+    for &size in sizes {
+        let st0 = mid_solve_state(9, size, size);
+        let seq_state = run_seq(&st0);
+        let seq_times = measure.run(|| run_seq(&st0));
+        let seq_summary = Summary::of(&seq_times).unwrap();
+        let seq_mean = seq_summary.mean;
+        table.row(vec![
+            format!("{size}x{size}").into(),
+            "seq".into(),
+            Cell::Int(1),
+            seq_summary.into(),
+            Cell::Float(1.0),
+        ]);
+        for &threads in &[1usize, 2, 4, 8] {
+            let pool = Arc::new(WorkerPool::new(threads));
+            let lanes = Lanes::Pool(&pool);
+            // The differential contract, enforced even while
+            // benchmarking: identical post-round state.
+            let striped_state = run_striped(&st0, &lanes);
+            assert_eq!(
+                striped_state.h, seq_state.h,
+                "striped host rounds diverged at {size}x{size} t={threads}"
+            );
+            assert_eq!(striped_state.e, seq_state.e, "excess diverged");
+            assert_eq!(striped_state.cap, seq_state.cap, "caps diverged");
+            let times = measure.run(|| run_striped(&st0, &lanes));
+            let summary = Summary::of(&times).unwrap();
+            let speedup = seq_mean / summary.mean;
+            table.row(vec![
+                format!("{size}x{size}").into(),
+                "striped".into(),
+                Cell::Int(threads as i64),
+                summary.into(),
+                Cell::Float(speedup),
+            ]);
+        }
+    }
+
+    table.print();
+    let path = std::env::var("FLOWMATCH_BENCH_JSON")
+        .unwrap_or_else(|_| "benches/data/bench_host_rounds.json".to_string());
+    let path = std::path::PathBuf::from(path);
+    match write_json(&path, &[&table]) {
+        Ok(()) => println!("\nbenchkit JSON written to {}", path.display()),
+        Err(e) => eprintln!("\nwarning: could not write benchkit JSON: {e}"),
+    }
+}

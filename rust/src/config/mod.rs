@@ -118,10 +118,14 @@ pub fn preset(name: &str) -> Result<Config> {
         // device phase: auto (PJRT if an artifact matches, else native),
         // native, or native-par (the tiled multi-threaded twin with
         // `threads` workers over `tile_rows`-row stripes).
+        // `[gridflow] host_rounds` picks the hybrid solver's host-round
+        // policy (seq | striped); striped is bit-exact and parallel
+        // whenever a worker pool is attached, so both presets opt in.
         "paper" => {
             "[assign]\nalpha = 10\nmax_n = 30\nmax_weight = 100\ncycle = 1024\n\
              [maxflow]\ncycle = 7000\nheuristics = true\nengine = \"auto\"\n\
              threads = 4\ntile_rows = 16\n\
+             [gridflow]\nhost_rounds = \"striped\"\n\
              [service]\nworkers = 4\nqueue_depth = 64\nsmall_units = 2048\n\
              medium_units = 8192\nmax_units = 1048576\nuse_pjrt = true\n\
              assign_small = \"hungarian\"\nassign_medium = \"csa-lockfree\"\n\
@@ -135,6 +139,7 @@ pub fn preset(name: &str) -> Result<Config> {
             "[assign]\nalpha = 10\nmax_n = 8\nmax_weight = 20\ncycle = 64\n\
              [maxflow]\ncycle = 64\nheuristics = true\nengine = \"auto\"\n\
              threads = 2\ntile_rows = 4\n\
+             [gridflow]\nhost_rounds = \"striped\"\n\
              [service]\nworkers = 2\nqueue_depth = 16\nsmall_units = 512\n\
              medium_units = 4096\nmax_units = 65536\nuse_pjrt = false\n\
              cycle = 128\nthreads = 2\ntile_rows = 4\n\
@@ -186,6 +191,11 @@ mod tests {
         assert_eq!(p.get("maxflow.engine"), Some("auto"));
         assert_eq!(p.get_usize("maxflow.threads", 0).unwrap(), 4);
         assert_eq!(p.get_usize("maxflow.tile_rows", 0).unwrap(), 16);
+        assert_eq!(p.get("gridflow.host_rounds"), Some("striped"));
+        assert_eq!(
+            preset("smoke").unwrap().get("gridflow.host_rounds"),
+            Some("striped")
+        );
         assert!(preset("nope").is_err());
     }
 

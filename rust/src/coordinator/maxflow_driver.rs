@@ -4,13 +4,16 @@
 //! multi-threaded engine stands in when several host cores are the best
 //! hardware available.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::graph::GridNetwork;
 use crate::gridflow::{
-    GridSolveReport, HybridGridSolver, NativeGridExecutor, NativeParGridExecutor,
+    GridSolveReport, HostRounds, HybridGridSolver, NativeGridExecutor, NativeParGridExecutor,
 };
 use crate::runtime::{ArtifactRegistry, GridDevice};
+use crate::service::pool::WorkerPool;
 
 /// Which device phase backed a solve.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,10 +52,44 @@ pub fn solve_grid_with(
     registry: Option<&ArtifactRegistry>,
     engine: GridEngine,
 ) -> Result<(GridSolveReport, Backend)> {
-    let solver = HybridGridSolver::with_cycle(cycle_waves);
+    solve_grid_opts(net, cycle_waves, registry, engine, HostRounds::Seq, None)
+}
+
+/// Solve `net` with an explicit device-phase choice *and* host-round
+/// policy.  With `host_rounds = Striped`, the host BFS fans out on
+/// `pool` — pass one when solving in a loop so the worker threads are
+/// reused across solves; with `None` a pool is created for this call
+/// (on `NativePar` it also carries the wave phases, bit-exact either
+/// way).
+pub fn solve_grid_opts(
+    net: &GridNetwork,
+    cycle_waves: usize,
+    registry: Option<&ArtifactRegistry>,
+    engine: GridEngine,
+    host_rounds: HostRounds,
+    pool: Option<Arc<WorkerPool>>,
+) -> Result<(GridSolveReport, Backend)> {
+    let pool = match (host_rounds, pool) {
+        (HostRounds::Seq, _) => None,
+        (HostRounds::Striped, Some(p)) => Some(p),
+        (HostRounds::Striped, None) => {
+            let width = match engine {
+                GridEngine::NativePar { threads, .. } => threads.max(1),
+                _ => std::thread::available_parallelism().map_or(4, |n| n.get()).min(8),
+            };
+            Some(Arc::new(WorkerPool::new(width)))
+        }
+    };
+    let mut solver = HybridGridSolver::with_cycle(cycle_waves).with_host_rounds(host_rounds);
+    if let Some(p) = &pool {
+        solver = solver.with_host_pool(Arc::clone(p));
+    }
     match engine {
         GridEngine::NativePar { threads, tile_rows } => {
             let mut exec = NativeParGridExecutor::new(threads, tile_rows);
+            if let Some(p) = &pool {
+                exec = exec.with_pool(Arc::clone(p));
+            }
             let report = solver.solve(net, &mut exec)?;
             return Ok((report, Backend::NativePar));
         }
@@ -90,6 +127,42 @@ mod tests {
         let mut g = net.to_flow_network();
         let want = Dinic.solve(&mut g).unwrap();
         assert_eq!(report.flow, want.value);
+    }
+
+    #[test]
+    fn striped_host_rounds_match_sequential_rounds() {
+        use crate::gridflow::HostRounds;
+
+        let mut rng = Rng::seeded(79);
+        let net = random_grid(&mut rng, 11, 8, 12, 0.3, 0.3);
+        let pool = Arc::new(WorkerPool::new(3));
+        for engine in [
+            GridEngine::Native,
+            GridEngine::NativePar { threads: 3, tile_rows: 2 },
+        ] {
+            let (seq, _) = solve_grid_opts(&net, 96, None, engine, HostRounds::Seq, None).unwrap();
+            // Once with a caller-lent pool, once letting the driver
+            // create its own.
+            let (par, _) = solve_grid_opts(
+                &net,
+                96,
+                None,
+                engine,
+                HostRounds::Striped,
+                Some(Arc::clone(&pool)),
+            )
+            .unwrap();
+            let (par2, _) =
+                solve_grid_opts(&net, 96, None, engine, HostRounds::Striped, None).unwrap();
+            assert_eq!(par2.flow, seq.flow, "{engine:?} own-pool");
+            assert_eq!(par2.waves, seq.waves, "{engine:?} own-pool");
+            assert_eq!(par.flow, seq.flow, "{engine:?}");
+            assert_eq!(par.waves, seq.waves, "{engine:?}");
+            assert_eq!(par.pushes, seq.pushes, "{engine:?}");
+            assert_eq!(par.relabels, seq.relabels, "{engine:?}");
+            assert_eq!(par.gap_cells, seq.gap_cells, "{engine:?}");
+            assert_eq!(par.cancelled_arcs, seq.cancelled_arcs, "{engine:?}");
+        }
     }
 
     #[test]

@@ -4,10 +4,13 @@
 
 pub mod assignment_driver;
 pub mod maxflow_driver;
-pub mod metrics;
 pub mod server;
 
 pub use assignment_driver::{PjrtAssignmentDriver, SolveTelemetry};
-pub use maxflow_driver::{solve_grid, solve_grid_with, Backend, GridEngine};
-pub use metrics::LatencyRecorder;
+pub use maxflow_driver::{solve_grid, solve_grid_opts, solve_grid_with, Backend, GridEngine};
+// Deprecated alias: the recorder lives in `util::stats` since PR 4 and
+// the `coordinator::metrics` shim module is gone — import
+// `util::stats::LatencyRecorder` in new code; this re-export keeps the
+// old `coordinator::LatencyRecorder` path compiling.
+pub use crate::util::stats::LatencyRecorder;
 pub use server::{AssignmentService, ReplyReceiver, ServiceConfig, ServiceReply, ServiceReport};

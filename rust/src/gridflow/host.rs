@@ -13,9 +13,21 @@
 //! capacity only ever shrinks during a solve, so the cells with initial
 //! `cap_sink/cap_src > 0` are a fixed superset.  [`HostScratch`] also
 //! reuses the distance/queue buffers across rounds.
+//!
+//! Every pass also has a stripe-parallel twin (`*_par`) on the shared
+//! frontier substrate (`crate::parallel`): the grid is partitioned into
+//! row stripes, each stripe owns its cells, and cross-stripe effects
+//! (BFS discoveries, cancel receive-sides) travel through per-stripe
+//! outboxes committed by the owner in the parity-coloured two-pass.
+//! The twins are **bit-exact** with the sequential passes at any stripe
+//! count and on any [`Lanes`]: BFS distances are visit-order
+//! independent, and the deferred cancel ops are additive increments to
+//! reverse arcs that can never themselves violate (a violation both
+//! ways would need `h(x) > h(y) + 1` and `h(y) > h(x) + 1`).
 
 use std::collections::VecDeque;
 
+use crate::parallel::{CrossOp, Lanes, Stripes, StripedFrontier};
 use crate::runtime::device::GridWireState;
 
 const DIRS: [(i64, i64); 4] = [(-1, 0), (1, 0), (0, -1), (0, 1)];
@@ -48,6 +60,19 @@ pub struct HostScratch {
     dist: Vec<i32>,
     dist_s: Vec<i32>,
     queue: VecDeque<usize>,
+    /// Striped twins: the reusable BFS frontier plus per-stripe buffers
+    /// (excess snapshots, cross-stripe cancel outboxes, counters).
+    frontier: StripedFrontier,
+    stripe_active: Vec<Vec<u32>>,
+    cancel_out: Vec<Vec<CrossOp>>,
+    stripe_cancel: Vec<(u64, i64)>,
+    stripe_gap: Vec<u64>,
+}
+
+/// Row-stripe partition the striped host passes use: about twice as
+/// many stripes as lanes, so the ragged tail balances.
+fn host_stripes(st: &GridWireState, lanes: &Lanes<'_>) -> Stripes {
+    Stripes::rows(st.height, st.width, lanes.width() * 2)
 }
 
 impl HostScratch {
@@ -241,6 +266,407 @@ pub fn host_round(st: &mut GridWireState) -> HostRoundStats {
     host_round_with(st, &mut scratch)
 }
 
+// ---------------------------------------------------------------------------
+// Stripe-parallel twins (the shared frontier substrate)
+// ---------------------------------------------------------------------------
+
+/// Stripe-parallel twin of [`cancel_violations_with`], bit-exact at any
+/// stripe count.  Each stripe snapshots and cancels its own excess
+/// cells; the receive side of a cancel that crosses a stripe boundary
+/// (`cap[opp] += r`, `e[nc] += r`) is deferred to a per-stripe outbox
+/// and applied by the owning stripe in the parity commit.  Safe because
+/// a cancel's receive side can never change another cell's decision:
+/// the reverse arc it feeds cannot itself violate (that would need
+/// `h(x) > h(y)+1` *and* `h(y) > h(x)+1`), heights are never written,
+/// and the active snapshot is taken before any cancel — exactly the
+/// sequential pass's contract.
+pub fn cancel_violations_par(
+    st: &mut GridWireState,
+    scratch: &mut HostScratch,
+    lanes: &Lanes<'_>,
+) -> (u64, i64) {
+    let (hh, ww) = (st.height, st.width);
+    let cells = hh * ww;
+    let v_total = (cells + 2) as i64;
+    let stripes = host_stripes(st, lanes);
+    let ns = stripes.n_stripes();
+    let sl = stripes.stripe_len();
+
+    scratch.cancel_out.iter_mut().for_each(Vec::clear);
+    scratch.cancel_out.resize_with(ns * ns, Vec::new);
+    scratch.stripe_active.iter_mut().for_each(Vec::clear);
+    scratch.stripe_active.resize_with(ns, Vec::new);
+    scratch.stripe_cancel.clear();
+    scratch.stripe_cancel.resize(ns, (0, 0));
+
+    // Heights are read-only this pass; everything the stripes mutate is
+    // lent out as disjoint per-stripe chunks.
+    let GridWireState {
+        h, e, cap, cap_src, ..
+    } = st;
+    let h: &[i32] = h;
+    let (cap_n, rest) = cap.split_at_mut(cells);
+    let (cap_s, rest) = rest.split_at_mut(cells);
+    let (cap_w, cap_e) = rest.split_at_mut(cells);
+
+    struct CancelStripe<'a> {
+        base: usize,
+        e: &'a mut [i32],
+        cap_n: &'a mut [i32],
+        cap_s: &'a mut [i32],
+        cap_w: &'a mut [i32],
+        cap_e: &'a mut [i32],
+        cap_src: &'a mut [i32],
+        active: &'a mut Vec<u32>,
+        row: &'a mut [Vec<CrossOp>],
+        counts: &'a mut (u64, i64),
+    }
+
+    // Pass 1: snapshot + cancel, owner-side effects applied in place.
+    {
+        let mut tasks = Vec::with_capacity(ns);
+        let iter = e
+            .chunks_mut(sl)
+            .zip(cap_n.chunks_mut(sl))
+            .zip(cap_s.chunks_mut(sl))
+            .zip(cap_w.chunks_mut(sl))
+            .zip(cap_e.chunks_mut(sl))
+            .zip(cap_src.chunks_mut(sl))
+            .zip(scratch.stripe_active.iter_mut())
+            .zip(scratch.cancel_out.chunks_mut(ns))
+            .zip(scratch.stripe_cancel.iter_mut())
+            .enumerate();
+        for (s, ((((((((e, cap_n), cap_s), cap_w), cap_e), cap_src), active), row), counts)) in
+            iter
+        {
+            tasks.push(CancelStripe {
+                base: s * sl,
+                e,
+                cap_n,
+                cap_s,
+                cap_w,
+                cap_e,
+                cap_src,
+                active,
+                row,
+                counts,
+            });
+        }
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for group in crate::parallel::deal(tasks, lanes.width()) {
+            jobs.push(Box::new(move || {
+                for task in group {
+                    let CancelStripe {
+                        base,
+                        e,
+                        cap_n,
+                        cap_s,
+                        cap_w,
+                        cap_e,
+                        cap_src,
+                        active,
+                        row,
+                        counts,
+                    } = task;
+                    // Snapshot before any cancel: the stripe
+                    // concatenation equals the sequential global
+                    // snapshot (receive sides only ever add excess, so
+                    // live checks would over-collect — snapshot, like
+                    // the sequential pass, does not).
+                    for (lc, &ev) in e.iter().enumerate() {
+                        if ev > 0 {
+                            active.push((base + lc) as u32);
+                        }
+                    }
+                    let end = base + e.len();
+                    for &c in active.iter() {
+                        let c = c as usize;
+                        let lc = c - base;
+                        let (i, j) = (c / ww, c % ww);
+                        for (a, &(di, dj)) in DIRS.iter().enumerate() {
+                            let (ni, nj) = (i as i64 + di, j as i64 + dj);
+                            if ni < 0 || nj < 0 || ni >= hh as i64 || nj >= ww as i64 {
+                                continue;
+                            }
+                            let nc = (ni as usize) * ww + nj as usize;
+                            let r = match a {
+                                0 => cap_n[lc],
+                                1 => cap_s[lc],
+                                2 => cap_w[lc],
+                                _ => cap_e[lc],
+                            };
+                            if r > 0 && (h[c] as i64) > h[nc] as i64 + 1 {
+                                match a {
+                                    0 => cap_n[lc] = 0,
+                                    1 => cap_s[lc] = 0,
+                                    2 => cap_w[lc] = 0,
+                                    _ => cap_e[lc] = 0,
+                                }
+                                e[lc] -= r;
+                                counts.0 += 1;
+                                if nc >= base && nc < end {
+                                    let ln = nc - base;
+                                    match OPP[a] {
+                                        0 => cap_n[ln] += r,
+                                        1 => cap_s[ln] += r,
+                                        2 => cap_w[ln] += r,
+                                        _ => cap_e[ln] += r,
+                                    }
+                                    e[ln] += r;
+                                } else {
+                                    row[nc / sl].push(CrossOp {
+                                        cell: nc as u32,
+                                        arc: OPP[a] as u8,
+                                        delta: r,
+                                    });
+                                }
+                            }
+                        }
+                        // Source arc: violation when h(x) > |V| + 1.
+                        let r = cap_src[lc];
+                        if r > 0 && (h[c] as i64) > v_total + 1 {
+                            cap_src[lc] = 0;
+                            e[lc] -= r;
+                            counts.1 += r as i64;
+                            counts.0 += 1;
+                        }
+                    }
+                }
+            }));
+        }
+        lanes.run(jobs);
+    }
+
+    // Pass 2: parity-coloured commit of the deferred receive sides —
+    // even-index stripes apply the ops addressed to them, then the odd
+    // stripes.  All increments are additive, so the final state equals
+    // the sequential in-order apply.  Skipped outright when no cancel
+    // crossed a stripe boundary (the common steady-state round).
+    if scratch.cancel_out.iter().any(|b| !b.is_empty()) {
+        struct CancelCommit<'a> {
+            owner: usize,
+            base: usize,
+            e: &'a mut [i32],
+            cap_n: &'a mut [i32],
+            cap_s: &'a mut [i32],
+            cap_w: &'a mut [i32],
+            cap_e: &'a mut [i32],
+        }
+        let out: &[Vec<CrossOp>] = &scratch.cancel_out;
+        let mut even = Vec::new();
+        let mut odd = Vec::new();
+        let iter = e
+            .chunks_mut(sl)
+            .zip(cap_n.chunks_mut(sl))
+            .zip(cap_s.chunks_mut(sl))
+            .zip(cap_w.chunks_mut(sl))
+            .zip(cap_e.chunks_mut(sl))
+            .enumerate();
+        for (o, ((((e, cap_n), cap_s), cap_w), cap_e)) in iter {
+            let task = CancelCommit {
+                owner: o,
+                base: o * sl,
+                e,
+                cap_n,
+                cap_s,
+                cap_w,
+                cap_e,
+            };
+            if o % 2 == 0 {
+                even.push(task);
+            } else {
+                odd.push(task);
+            }
+        }
+        for pass in [even, odd] {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for group in crate::parallel::deal(pass, lanes.width()) {
+                jobs.push(Box::new(move || {
+                    for task in group {
+                        // Row-aligned stripes: a cancel's receive side
+                        // crosses exactly one row boundary, so only the
+                        // two adjacent producers can address this owner
+                        // (same argument as the wave reconcile).
+                        for p in [task.owner.wrapping_sub(1), task.owner + 1] {
+                            if p >= ns {
+                                continue;
+                            }
+                            for op in &out[p * ns + task.owner] {
+                                let lv = op.cell as usize - task.base;
+                                match op.arc {
+                                    0 => task.cap_n[lv] += op.delta,
+                                    1 => task.cap_s[lv] += op.delta,
+                                    2 => task.cap_w[lv] += op.delta,
+                                    _ => task.cap_e[lv] += op.delta,
+                                }
+                                task.e[lv] += op.delta;
+                            }
+                        }
+                    }
+                }));
+            }
+            lanes.run(jobs);
+        }
+    }
+
+    let mut cancelled = 0u64;
+    let mut src_returned = 0i64;
+    for &(c, s) in &scratch.stripe_cancel {
+        cancelled += c;
+        src_returned += s;
+    }
+    (cancelled, src_returned)
+}
+
+/// Stripe-parallel twin of [`global_relabel_with`]: the two reverse
+/// BFS passes run level-synchronously on the [`StripedFrontier`]
+/// (identical distances — shortest distances are unique regardless of
+/// visit order), and the height write-back is an embarrassingly
+/// parallel sweep over the same stripes.
+pub fn global_relabel_par(
+    st: &mut GridWireState,
+    scratch: &mut HostScratch,
+    lanes: &Lanes<'_>,
+) -> HostRoundStats {
+    let (hh, ww) = (st.height, st.width);
+    let cells = hh * ww;
+    let v_total = (cells + 2) as i32;
+    let stripes = host_stripes(st, lanes);
+    let ns = stripes.n_stripes();
+    let sl = stripes.stripe_len();
+
+    let HostScratch {
+        sink_cells,
+        src_cells,
+        dist,
+        dist_s,
+        frontier,
+        stripe_gap,
+        ..
+    } = scratch;
+
+    // Pass 1: distance-to-sink over reverse residual arcs.
+    dist.clear();
+    dist.resize(cells, -1);
+    frontier.reset(stripes);
+    let mut seeded = 0u64;
+    for &c in sink_cells.iter() {
+        let c = c as usize;
+        if st.cap_sink[c] > 0 {
+            dist[c] = 1;
+            frontier.seed(c);
+            seeded += 1;
+        }
+    }
+    let assigned = {
+        let st_ro: &GridWireState = st;
+        let neigh = |c: usize, emit: &mut dyn FnMut(usize)| {
+            let (i, j) = (c / ww, c % ww);
+            for (a, &(di, dj)) in DIRS.iter().enumerate() {
+                let (ni, nj) = (i as i64 + di, j as i64 + dj);
+                if ni < 0 || nj < 0 || ni >= hh as i64 || nj >= ww as i64 {
+                    continue;
+                }
+                let nc = (ni as usize) * ww + nj as usize;
+                if st_ro.cap[OPP[a] * cells + nc] > 0 {
+                    emit(nc);
+                }
+            }
+        };
+        frontier.run(dist, 1, None, &neigh, lanes)
+    };
+    let reached = seeded + assigned;
+
+    // Pass 2 (Cherkassky–Goldberg): distance-to-source for cells the
+    // sink BFS missed, masked by the (now read-only) sink distances.
+    dist_s.clear();
+    dist_s.resize(cells, -1);
+    frontier.reset(stripes);
+    for &c in src_cells.iter() {
+        let c = c as usize;
+        if dist[c] < 0 && st.cap_src[c] > 0 {
+            dist_s[c] = 1;
+            frontier.seed(c);
+        }
+    }
+    {
+        let st_ro: &GridWireState = st;
+        let dist_ro: &[i32] = dist;
+        let neigh = |c: usize, emit: &mut dyn FnMut(usize)| {
+            let (i, j) = (c / ww, c % ww);
+            for (a, &(di, dj)) in DIRS.iter().enumerate() {
+                let (ni, nj) = (i as i64 + di, j as i64 + dj);
+                if ni < 0 || nj < 0 || ni >= hh as i64 || nj >= ww as i64 {
+                    continue;
+                }
+                let nc = (ni as usize) * ww + nj as usize;
+                if dist_ro[nc] < 0 && st_ro.cap[OPP[a] * cells + nc] > 0 {
+                    emit(nc);
+                }
+            }
+        };
+        frontier.run(dist_s, 1, None, &neigh, lanes);
+    }
+
+    // Write-back: heights from distances, gap counting per stripe.
+    stripe_gap.clear();
+    stripe_gap.resize(ns, 0);
+    {
+        let mut tasks = Vec::with_capacity(ns);
+        let iter = st
+            .h
+            .chunks_mut(sl)
+            .zip(dist.chunks(sl))
+            .zip(dist_s.chunks(sl))
+            .zip(stripe_gap.iter_mut());
+        for (((h, d), ds), gap) in iter {
+            tasks.push((h, d, ds, gap));
+        }
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for group in crate::parallel::deal(tasks, lanes.width()) {
+            jobs.push(Box::new(move || {
+                for (h, d, ds, gap) in group {
+                    for lc in 0..h.len() {
+                        h[lc] = if d[lc] >= 0 {
+                            d[lc]
+                        } else {
+                            *gap += 1;
+                            if ds[lc] >= 0 {
+                                v_total + ds[lc]
+                            } else {
+                                2 * v_total
+                            }
+                        };
+                    }
+                }
+            }));
+        }
+        lanes.run(jobs);
+    }
+
+    HostRoundStats {
+        cancelled_arcs: 0,
+        reached_cells: reached,
+        gap_cells: stripe_gap.iter().sum(),
+        src_returned: 0,
+    }
+}
+
+/// Stripe-parallel twin of [`host_round_with`]: cancel then relabel,
+/// both on the frontier substrate.  Bit-exact with the sequential round
+/// on any lanes.
+pub fn host_round_par(
+    st: &mut GridWireState,
+    scratch: &mut HostScratch,
+    lanes: &Lanes<'_>,
+) -> HostRoundStats {
+    let (cancelled, src_returned) = cancel_violations_par(st, scratch, lanes);
+    let mut out = global_relabel_par(st, scratch, lanes);
+    out.cancelled_arcs = cancelled;
+    out.src_returned = src_returned;
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -315,6 +741,93 @@ mod tests {
         assert_eq!(cancelled, 0);
         assert_eq!(src_ret, 0);
         assert_eq!(st.cap[3 * 2], 4);
+    }
+
+    fn assert_state_eq(a: &GridWireState, b: &GridWireState, ctx: &str) {
+        assert_eq!(a.h, b.h, "{ctx}: heights");
+        assert_eq!(a.e, b.e, "{ctx}: excess");
+        assert_eq!(a.cap, b.cap, "{ctx}: caps");
+        assert_eq!(a.cap_sink, b.cap_sink, "{ctx}: sink caps");
+        assert_eq!(a.cap_src, b.cap_src, "{ctx}: src caps");
+    }
+
+    /// Adversarial mid-execution state: arbitrary heights/excess so
+    /// violations, source returns, and unreachable pockets all occur.
+    fn mid_state(seed: u64, hh: usize, ww: usize) -> GridWireState {
+        let mut rng = crate::util::Rng::seeded(seed);
+        let cells = hh * ww;
+        let mut st = GridWireState::zeros(hh, ww);
+        for c in 0..cells {
+            st.h[c] = (rng.next_u64() % (2 * cells as u64 + 6)) as i32;
+            st.e[c] = (rng.next_u64() % 6) as i32;
+            st.cap_sink[c] = (rng.next_u64() % 4) as i32;
+            st.cap_src[c] = (rng.next_u64() % 4) as i32;
+        }
+        for a in 0..4 {
+            for c in 0..cells {
+                st.cap[a * cells + c] = (rng.next_u64() % 5) as i32;
+            }
+        }
+        // Arcs leaving the grid do not exist.
+        for j in 0..ww {
+            st.cap[j] = 0; // N from top row
+            st.cap[cells + (hh - 1) * ww + j] = 0; // S from bottom row
+        }
+        for i in 0..hh {
+            st.cap[2 * cells + i * ww] = 0; // W from col 0
+            st.cap[3 * cells + i * ww + ww - 1] = 0; // E from last col
+        }
+        st
+    }
+
+    #[test]
+    fn striped_round_bit_exact_with_sequential() {
+        use crate::parallel::Lanes;
+        use crate::service::pool::WorkerPool;
+
+        let pool = WorkerPool::new(3);
+        for (seed, hh, ww) in [(1u64, 1usize, 1usize), (2, 5, 7), (3, 16, 3), (4, 9, 9), (5, 1, 24)] {
+            for lanes in [Lanes::Seq, Lanes::Scoped { threads: 3 }, Lanes::Pool(&pool)] {
+                let mut seq = mid_state(seed, hh, ww);
+                let mut par = seq.clone();
+                let mut ss = HostScratch::for_state(&seq);
+                let mut ps = HostScratch::for_state(&par);
+                let ctx = format!("seed={seed} {hh}x{ww} lanes={}", lanes.width());
+                // Several rounds through the same scratches, so the
+                // reused stripe buffers are exercised too.
+                for round in 0..3 {
+                    let a = host_round_with(&mut seq, &mut ss);
+                    let b = host_round_par(&mut par, &mut ps, &lanes);
+                    assert_eq!(a, b, "{ctx}: stats at round {round}");
+                    assert_state_eq(&seq, &par, &format!("{ctx} round {round}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn striped_passes_bit_exact_individually() {
+        use crate::parallel::Lanes;
+
+        for (seed, hh, ww) in [(11u64, 4usize, 11usize), (12, 13, 2)] {
+            let mut seq = mid_state(seed, hh, ww);
+            let mut par = seq.clone();
+            let mut ss = HostScratch::for_state(&seq);
+            let mut ps = HostScratch::for_state(&par);
+            let lanes = Lanes::Scoped { threads: 4 };
+            assert_eq!(
+                cancel_violations_with(&mut seq, &mut ss),
+                cancel_violations_par(&mut par, &mut ps, &lanes),
+                "cancel stats seed={seed}"
+            );
+            assert_state_eq(&seq, &par, &format!("after cancel seed={seed}"));
+            assert_eq!(
+                global_relabel_with(&mut seq, &mut ss),
+                global_relabel_par(&mut par, &mut ps, &lanes),
+                "relabel stats seed={seed}"
+            );
+            assert_state_eq(&seq, &par, &format!("after relabel seed={seed}"));
+        }
     }
 
     #[test]

@@ -10,6 +10,6 @@ pub mod state;
 pub mod wave;
 
 pub use par_wave::{par_wave_pooled, par_wave_with, NativeParGridExecutor, ParWaveScratch};
-pub use solver::{GridExecutor, GridSolveReport, HybridGridSolver, NativeGridExecutor};
+pub use solver::{GridExecutor, GridSolveReport, HostRounds, HybridGridSolver, NativeGridExecutor};
 pub use state::init_state;
 pub use wave::{native_wave, WaveStats};

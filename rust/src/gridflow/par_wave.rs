@@ -12,9 +12,11 @@
 //! the same state.  Row-stripe tiles make every W/E push and every
 //! interior N/S push land inside the owning tile; only pushes crossing a
 //! stripe boundary have a foreign receive side, and those are recorded
-//! as [`BorderOp`]s and applied in a short sequential reconciliation
-//! pass.  Compaction runs after reconciliation so the surviving active
-//! set is exactly `{e > 0}` — the same set the sequential engine keeps.
+//! as [`CrossOp`]s and applied by the parity-coloured reconciliation
+//! pass (even tiles then odd tiles own their borders — the same commit
+//! shape as `crate::parallel::frontier`).  Compaction runs after
+//! reconciliation so the surviving active set is exactly `{e > 0}` —
+//! the same set the sequential engine keeps.
 //!
 //! The protocol (4 phases per wave) was validated against an executable
 //! model before this implementation: 1 680 differential cases (shapes ×
@@ -26,31 +28,20 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::parallel::CrossOp;
 use crate::runtime::device::{GridStepStats, GridWireState};
 use crate::service::pool::WorkerPool;
 
 use super::solver::GridExecutor;
 use super::wave::{decide, Decision, WaveStats, DIRS, OPP};
 
-/// Receive side of a cross-tile push, deferred to the sequential
-/// reconciliation pass: `cap[arc * cells + cell] += delta` and
-/// `e[cell] += delta` (+ activation if the cell is not listed).
-#[derive(Debug, Clone, Copy)]
-struct BorderOp {
-    cell: u32,
-    /// Arc plane of the *reverse* arc at the receiving cell (OPP of the
-    /// push direction).
-    arc: u8,
-    delta: i32,
-}
-
 /// One row stripe: the cell range it owns, its active list, and the
-/// per-wave outputs (border ops + stats) produced by its worker.
+/// per-wave stats produced by its worker (border ops live in
+/// [`ParWaveScratch::borders`], indexed by tile).
 #[derive(Debug)]
 struct Tile {
     cells: Range<usize>,
     active: Vec<u32>,
-    border: Vec<BorderOp>,
     stats: WaveStats,
 }
 
@@ -63,6 +54,10 @@ struct Tile {
 pub struct ParWaveScratch {
     tile_rows: usize,
     tiles: Vec<Tile>,
+    /// Per-tile border-op outboxes (`borders[t]` = ops tile `t`'s apply
+    /// deferred), kept outside [`Tile`] so the reconcile pass can read
+    /// every outbox while the owning tiles mutate their active lists.
+    borders: Vec<Vec<CrossOp>>,
     decisions: Vec<Decision>,
     on_list: Vec<bool>,
     pub(super) built_for: Option<(usize, usize)>,
@@ -73,6 +68,7 @@ impl ParWaveScratch {
         Self {
             tile_rows: tile_rows.max(1),
             tiles: Vec::new(),
+            borders: Vec::new(),
             decisions: Vec::new(),
             on_list: Vec::new(),
             built_for: None,
@@ -108,10 +104,11 @@ impl ParWaveScratch {
             self.tiles.push(Tile {
                 cells: range,
                 active,
-                border: Vec::new(),
                 stats: WaveStats::default(),
             });
         }
+        self.borders.iter_mut().for_each(Vec::clear);
+        self.borders.resize_with(n_tiles, Vec::new);
         self.built_for = Some((hh, ww));
     }
 
@@ -125,6 +122,7 @@ impl ParWaveScratch {
 /// are indexed by `cell - tile.cells.start`.
 struct TileJob<'a> {
     tile: &'a mut Tile,
+    border: &'a mut Vec<CrossOp>,
     h: &'a mut [i32],
     e: &'a mut [i32],
     cap_n: &'a mut [i32],
@@ -144,6 +142,7 @@ struct TileJob<'a> {
 fn apply_tile(job: TileJob<'_>, ww: usize) {
     let TileJob {
         tile,
+        border,
         h,
         e,
         cap_n,
@@ -157,7 +156,7 @@ fn apply_tile(job: TileJob<'_>, ww: usize) {
     } = job;
     let base = tile.cells.start;
     let end = tile.cells.end;
-    tile.border.clear();
+    border.clear();
     let mut stats = WaveStats::default();
     let n0 = tile.active.len();
     for idx in 0..n0 {
@@ -206,7 +205,7 @@ fn apply_tile(job: TileJob<'_>, ww: usize) {
                                 tile.active.push(nc as u32);
                             }
                         } else {
-                            tile.border.push(BorderOp {
+                            border.push(CrossOp {
                                 cell: nc as u32,
                                 arc: OPP[a] as u8,
                                 delta,
@@ -314,6 +313,7 @@ fn par_wave_exec(
         let iter = scratch
             .tiles
             .iter_mut()
+            .zip(scratch.borders.iter_mut())
             .zip(st.h.chunks_mut(tile_cells))
             .zip(st.e.chunks_mut(tile_cells))
             .zip(cap_n.chunks_mut(tile_cells))
@@ -326,11 +326,12 @@ fn par_wave_exec(
             .zip(scratch.decisions.chunks_mut(tile_cells))
             .enumerate();
         let mut per_worker: Vec<Vec<TileJob<'_>>> = (0..threads).map(|_| Vec::new()).collect();
-        for (t, ((((((((((tile, h), e), cap_n), cap_s), cap_w), cap_e), cap_sink), cap_src), on_list), decisions)) in
+        for (t, (((((((((((tile, border), h), e), cap_n), cap_s), cap_w), cap_e), cap_sink), cap_src), on_list), decisions)) in
             iter
         {
             per_worker[t % threads].push(TileJob {
                 tile,
+                border,
                 h,
                 e,
                 cap_n,
@@ -354,26 +355,101 @@ fn par_wave_exec(
         run_workers(pool, jobs);
     }
 
-    // --- Phase 3: sequential border reconciliation ----------------------
-    // Cross-tile receive sides, in tile order.  Sequential on purpose:
-    // two boundary rows may target the same cell, and the additive ops
-    // are so few (O(width) worst case) that synchronising them would
-    // cost more than applying them.
-    let tile_rows = scratch.tile_rows;
-    for t in 0..n_tiles {
-        let ops = std::mem::take(&mut scratch.tiles[t].border);
-        for op in &ops {
-            let nc = op.cell as usize;
-            st.cap[op.arc as usize * cells + nc] += op.delta;
-            st.e[nc] += op.delta;
-            if !scratch.on_list[nc] {
-                scratch.on_list[nc] = true;
-                let tt = (nc / ww) / tile_rows;
-                scratch.tiles[tt].active.push(op.cell);
+    // --- Phase 3: parity-coloured border reconciliation -----------------
+    // Cross-tile receive sides, applied by the *owning* tile: every op
+    // from tile `p` lands in stripe `p ± 1`, so each owner drains its
+    // two neighbours' outboxes (upper first, matching the old serial
+    // tile order).  Even-index tiles run first, then odd — "even tiles
+    // then odd tiles own their borders" — the same two-pass shape as
+    // the frontier substrate's commit (`crate::parallel::frontier`).
+    // Bit-exact with the retired serial loop: the increments are
+    // additive, and per owner the activation append order (upper
+    // neighbour's ops, then lower's) is exactly the serial order.
+    let any_border = scratch.borders.iter().any(|b| !b.is_empty());
+    if any_border {
+        struct ReconcileJob<'a> {
+            t: usize,
+            tile: &'a mut Tile,
+            e: &'a mut [i32],
+            cap_n: &'a mut [i32],
+            cap_s: &'a mut [i32],
+            on_list: &'a mut [bool],
+        }
+        let borders: &[Vec<CrossOp>] = &scratch.borders;
+        let (cap_n, rest) = st.cap.split_at_mut(cells);
+        let (cap_s, _) = rest.split_at_mut(cells);
+        let mut even = Vec::new();
+        let mut odd = Vec::new();
+        let iter = scratch
+            .tiles
+            .iter_mut()
+            .zip(st.e.chunks_mut(tile_cells))
+            .zip(cap_n.chunks_mut(tile_cells))
+            .zip(cap_s.chunks_mut(tile_cells))
+            .zip(scratch.on_list.chunks_mut(tile_cells))
+            .enumerate();
+        for (t, ((((tile, e), cap_n), cap_s), on_list)) in iter {
+            let job = ReconcileJob {
+                t,
+                tile,
+                e,
+                cap_n,
+                cap_s,
+                on_list,
+            };
+            if t % 2 == 0 {
+                even.push(job);
+            } else {
+                odd.push(job);
             }
         }
-        // Hand the buffer back so its allocation is reused next wave.
-        scratch.tiles[t].border = ops;
+        for pass in [even, odd] {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for group in crate::parallel::deal(pass, threads) {
+                jobs.push(Box::new(move || {
+                    for job in group {
+                        let base = job.tile.cells.start;
+                        let end = job.tile.cells.end;
+                        for p in [job.t.wrapping_sub(1), job.t + 1] {
+                            if p >= n_tiles {
+                                continue;
+                            }
+                            for op in &borders[p] {
+                                let nc = op.cell as usize;
+                                if nc < base || nc >= end {
+                                    continue;
+                                }
+                                let ln = nc - base;
+                                debug_assert!(op.arc < 2, "cross-tile ops are N/S only");
+                                if op.arc == 0 {
+                                    job.cap_n[ln] += op.delta;
+                                } else {
+                                    job.cap_s[ln] += op.delta;
+                                }
+                                job.e[ln] += op.delta;
+                                if !job.on_list[ln] {
+                                    job.on_list[ln] = true;
+                                    job.tile.active.push(op.cell);
+                                }
+                            }
+                        }
+                    }
+                }));
+            }
+            // Border ops are O(width) worst case: a pooled batch is two
+            // cheap condvar wakeups, but spawning scoped threads for
+            // them would cost more than applying them — unpooled lanes
+            // run the owner jobs inline (owner-disjoint, so execution
+            // order is irrelevant).
+            match pool {
+                Some(p) => p.scope_run(jobs),
+                None => {
+                    for job in jobs {
+                        job();
+                    }
+                }
+            }
+        }
     }
 
     // --- Phase 4: compaction + stats reduction --------------------------
@@ -467,6 +543,14 @@ impl GridExecutor for NativeParGridExecutor {
 
     fn invalidate(&mut self) {
         self.needs_rebuild = true;
+    }
+
+    fn host_pool(&self) -> Option<Arc<WorkerPool>> {
+        // Striped host rounds ride the same pool as the wave phases:
+        // between super-steps the pool is idle, so lending it out is
+        // free.  Unpooled executors keep host rounds sequential (the
+        // per-level spawn cost of scoped threads would exceed the BFS).
+        self.pool.clone()
     }
 
     fn superstep(&mut self, st: &mut GridWireState, outer: i32) -> Result<GridStepStats> {

@@ -2,16 +2,49 @@
 //! artifact) alternating with host rounds (violation cancel + global/gap
 //! relabel), Algorithm 4.6's loop `while e(s) + e(t) < ExcessTotal`.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::graph::GridNetwork;
+use crate::parallel::Lanes;
 use crate::runtime::device::{GridStepStats, GridWireState};
+use crate::service::pool::WorkerPool;
 
 use super::host;
 use super::state::init_state;
 #[cfg(feature = "paranoid")]
 use super::wave::active_cells;
 use super::wave::{native_wave_with, WaveScratch};
+
+/// Host-round execution policy of the hybrid solver: the classic
+/// sequential passes, or their stripe-parallel twins on the shared
+/// frontier substrate (`crate::parallel`).  The twins are bit-exact, so
+/// this is purely a performance switch (`[gridflow] host_rounds`,
+/// CLI `--host-rounds`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum HostRounds {
+    #[default]
+    Seq,
+    Striped,
+}
+
+impl HostRounds {
+    pub fn parse(name: &str) -> Result<Self> {
+        Ok(match name {
+            "seq" => HostRounds::Seq,
+            "striped" => HostRounds::Striped,
+            other => anyhow::bail!("unknown host_rounds {other:?} (expected seq, striped)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HostRounds::Seq => "seq",
+            HostRounds::Striped => "striped",
+        }
+    }
+}
 
 /// A device that can advance the grid state by up to `outer * k_inner`
 /// waves.  Implemented natively below (sequential and tiled-parallel)
@@ -24,6 +57,12 @@ pub trait GridExecutor {
     /// violation cancel, …): drop any cached active sets.  Devices that
     /// re-derive activity on-device (PJRT) ignore this.
     fn invalidate(&mut self) {}
+    /// Worker pool the solver's striped host rounds may borrow between
+    /// super-steps.  `None` (the default) keeps striped host rounds on
+    /// the sequential lanes fallback — same results, no threads.
+    fn host_pool(&self) -> Option<Arc<WorkerPool>> {
+        None
+    }
 }
 
 /// Pure-Rust executor: runs the bit-exact kernel twin in-process.
@@ -133,6 +172,14 @@ pub struct HybridGridSolver {
     pub heuristics: bool,
     /// Abort threshold.
     pub max_rounds: u64,
+    /// Sequential host rounds, or the stripe-parallel twins (bit-exact;
+    /// parallel when a pool is available).
+    pub host_rounds: HostRounds,
+    /// Explicit pool for striped host rounds.  Takes precedence over
+    /// the executor's own pool ([`GridExecutor::host_pool`]); lets
+    /// callers parallelise host rounds behind executors that have no
+    /// worker threads of their own (sequential native, PJRT).
+    pub host_pool: Option<Arc<WorkerPool>>,
 }
 
 impl Default for HybridGridSolver {
@@ -141,6 +188,8 @@ impl Default for HybridGridSolver {
             cycle_waves: 512,
             heuristics: true,
             max_rounds: 100_000,
+            host_rounds: HostRounds::Seq,
+            host_pool: None,
         }
     }
 }
@@ -161,6 +210,16 @@ impl HybridGridSolver {
         }
     }
 
+    pub fn with_host_rounds(mut self, host_rounds: HostRounds) -> Self {
+        self.host_rounds = host_rounds;
+        self
+    }
+
+    pub fn with_host_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.host_pool = Some(pool);
+        self
+    }
+
     /// Run to completion on `net` using `exec` for the device phase.
     pub fn solve(&self, net: &GridNetwork, exec: &mut dyn GridExecutor) -> Result<GridSolveReport> {
         let (mut st, excess_total) = init_state(net);
@@ -173,11 +232,30 @@ impl HybridGridSolver {
         exec.invalidate();
         let mut hscratch = host::HostScratch::for_state(&st);
 
+        // Striped host rounds run on the solver's explicit pool, else
+        // the executor's (the service's native-par backend); with
+        // neither they fall back to sequential lanes — same results
+        // either way.
+        let striped = self.host_rounds == HostRounds::Striped;
+        let host_pool = if striped {
+            self.host_pool.clone().or_else(|| exec.host_pool())
+        } else {
+            None
+        };
+        let lanes = match &host_pool {
+            Some(p) => Lanes::Pool(p.as_ref()),
+            None => Lanes::Seq,
+        };
+
         // Exact initial heights (the hybrid scheme begins with a global
         // relabel — same as copying h to the device in Algorithm 4.6).
         if self.heuristics {
             let t = crate::util::Timer::start();
-            let out = host::global_relabel_with(&mut st, &mut hscratch);
+            let out = if striped {
+                host::global_relabel_par(&mut st, &mut hscratch, &lanes)
+            } else {
+                host::global_relabel_with(&mut st, &mut hscratch)
+            };
             report.gap_cells += out.gap_cells;
             report.host_seconds += t.elapsed();
         }
@@ -211,7 +289,11 @@ impl HybridGridSolver {
 
             if self.heuristics {
                 let t = crate::util::Timer::start();
-                let out = host::host_round_with(&mut st, &mut hscratch);
+                let out = if striped {
+                    host::host_round_par(&mut st, &mut hscratch, &lanes)
+                } else {
+                    host::host_round_with(&mut st, &mut hscratch)
+                };
                 src_total += out.src_returned;
                 report.gap_cells += out.gap_cells;
                 report.cancelled_arcs += out.cancelled_arcs;

@@ -27,6 +27,7 @@ pub mod coordinator;
 pub mod energy;
 pub mod graph;
 pub mod opticalflow;
+pub mod parallel;
 pub mod reductions;
 pub mod service;
 pub mod workloads;

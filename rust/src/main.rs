@@ -59,7 +59,8 @@ fn run(args: Args) -> Result<()> {
 
 const USAGE: &str = "flowmatch <info|maxflow|assign|segment|optflow|serve|solver-pool|artifacts> [options]
   maxflow   --height H --width W [--cycle N] [--seed S] [--native] [--dimacs FILE]
-            [--engine auto|native|native-par] [--threads T] [--tile-rows R] [--preset paper|smoke]
+            [--engine auto|native|native-par] [--threads T] [--tile-rows R]
+            [--host-rounds seq|striped] [--preset paper|smoke]
   assign    --n N [--max-weight C] [--alpha A] [--engine NAME] [--seed S] [--preset paper|smoke]
   segment   --height H --width W [--lambda L] [--seed S]
   optflow   --height H --width W [--features K] [--dy D --dx D]
@@ -68,7 +69,7 @@ const USAGE: &str = "flowmatch <info|maxflow|assign|segment|optflow|serve|solver
             [--workers W] [--requests R] [--grid-requests G] [--n N] [--grid S]
             [--large-grid S] [--fps F] [--queue-depth D] [--max-units U] [--seed S]
             [--routing static|adaptive] [--probe-every N] [--spill-depth D]
-            [--native] [--preset paper|smoke] [--baseline (loadgen)]";
+            [--host-rounds seq|striped] [--native] [--preset paper|smoke] [--baseline (loadgen)]";
 
 fn cmd_info() -> Result<()> {
     println!("flowmatch — parallel flow and matching algorithms (Łupińska 2011 reproduction)");
@@ -91,13 +92,19 @@ fn cmd_info() -> Result<()> {
 fn cmd_maxflow(args: &Args) -> Result<()> {
     args.expect_known(&[
         "height", "width", "cycle", "seed", "native", "dimacs", "max-cap", "engine", "threads",
-        "tile-rows", "preset",
+        "tile-rows", "host-rounds", "preset",
     ])?;
     if let Some(path) = args.get("dimacs") {
-        // CSR path: solve a DIMACS file with every engine.
+        // CSR path: solve a DIMACS file with every engine.  With
+        // --threads the push-relabel engines borrow one worker pool for
+        // their (striped) periodic global relabels.
         let text = std::fs::read_to_string(path)?;
         let parsed = dimacs::MaxFlowFile::parse(&text)?;
-        for engine in flowmatch::maxflow::all_engines() {
+        let pool = match args.get_usize("threads", 0)? {
+            0 => None,
+            t => Some(std::sync::Arc::new(flowmatch::service::WorkerPool::new(t))),
+        };
+        for engine in flowmatch::maxflow::all_engines_with(pool) {
             let mut g = parsed.to_network()?;
             let t = Timer::start();
             let stats = engine.solve(&mut g)?;
@@ -122,12 +129,16 @@ fn cmd_maxflow(args: &Args) -> Result<()> {
     let mut d_threads = 4usize;
     let mut d_tile_rows = 16usize;
     let mut d_engine = "auto";
+    let mut d_host_rounds = "seq";
     if let Some(c) = &cfg {
         d_cycle = c.get_usize("maxflow.cycle", d_cycle)?;
         d_threads = c.get_usize("maxflow.threads", d_threads)?;
         d_tile_rows = c.get_usize("maxflow.tile_rows", d_tile_rows)?;
         if let Some(e) = c.get("maxflow.engine") {
             d_engine = e;
+        }
+        if let Some(hr) = c.get("gridflow.host_rounds") {
+            d_host_rounds = hr;
         }
     }
     let height = args.get_usize("height", 32)?;
@@ -144,6 +155,8 @@ fn cmd_maxflow(args: &Args) -> Result<()> {
         "native-par" => GridEngine::NativePar { threads, tile_rows },
         other => bail!("unknown grid engine {other:?} (expected auto, native, native-par)"),
     };
+    let host_rounds =
+        flowmatch::gridflow::HostRounds::parse(args.get_str("host-rounds", d_host_rounds))?;
     let mut rng = Rng::seeded(seed);
     let net = workloads::random_grid(&mut rng, height, width, max_cap, 0.25, 0.25);
 
@@ -155,11 +168,18 @@ fn cmd_maxflow(args: &Args) -> Result<()> {
         ArtifactRegistry::discover().ok()
     };
     let t = Timer::start();
-    let (report, backend) = coordinator::solve_grid_with(&net, cycle, registry.as_ref(), engine)?;
+    let (report, backend) =
+        coordinator::solve_grid_opts(&net, cycle, registry.as_ref(), engine, host_rounds, None)?;
     let elapsed = t.elapsed();
     println!(
-        "grid {}x{} seed={} backend={:?}: maxflow={} (ExcessTotal={})",
-        height, width, seed, backend, report.flow, report.excess_total
+        "grid {}x{} seed={} backend={:?} host_rounds={}: maxflow={} (ExcessTotal={})",
+        height,
+        width,
+        seed,
+        backend,
+        host_rounds.name(),
+        report.flow,
+        report.excess_total
     );
     println!(
         "  rounds={} waves={} pushes={} relabels={} gap_cells={} cancelled={}",
@@ -412,6 +432,7 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
         "routing",
         "probe-every",
         "spill-depth",
+        "host-rounds",
     ])?;
     let action = args
         .positional
@@ -437,6 +458,9 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
     }
     pool_cfg.router.probe_every = args.get_usize("probe-every", pool_cfg.router.probe_every)?;
     pool_cfg.router.spill_depth = args.get_usize("spill-depth", pool_cfg.router.spill_depth)?;
+    if let Some(hr) = args.get("host-rounds") {
+        pool_cfg.router.host_rounds = flowmatch::service::HostRounds::parse(hr)?;
+    }
     if args.flag("native") {
         pool_cfg.router.use_pjrt = false;
     }
@@ -473,12 +497,13 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
     let trace = workloads::MixedTrace::generate(&mut rng, &trace_cfg);
     println!(
         "solver-pool {action}: {} requests ({} assignment n={n}, {} grid {grid}²/{large_grid}²), \
-         {} workers, routing={}",
+         {} workers, routing={}, host_rounds={}",
         trace.len(),
         trace.assignment_count(),
         trace.grid_count(),
         pool_cfg.workers,
-        pool_cfg.router.routing.name()
+        pool_cfg.router.routing.name(),
+        pool_cfg.router.host_rounds.name()
     );
 
     let shard_cfg = pool_cfg.shard.clone();

@@ -3,12 +3,14 @@
 //! a global relabel (BFS + gap) runs every `relabel_freq * n` relabels.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::graph::csr::FlowNetwork;
+use crate::service::pool::WorkerPool;
 
-use super::global_relabel::global_relabel;
+use super::global_relabel::{global_relabel_auto, RelabelScratch};
 use super::{FlowStats, MaxFlowSolver};
 
 /// FIFO push-relabel engine.
@@ -17,12 +19,17 @@ pub struct FifoPushRelabel {
     /// Run the global relabel heuristic every `freq * n` relabels;
     /// `None` disables it (the "generic" row of the E3 ablation).
     pub global_relabel_freq: Option<f64>,
+    /// Worker pool the periodic global relabel borrows on large
+    /// instances (`None` = always the sequential BFS; results are
+    /// identical either way).
+    pub relabel_pool: Option<Arc<WorkerPool>>,
 }
 
 impl Default for FifoPushRelabel {
     fn default() -> Self {
         Self {
             global_relabel_freq: Some(1.0),
+            relabel_pool: None,
         }
     }
 }
@@ -31,7 +38,13 @@ impl FifoPushRelabel {
     pub fn generic() -> Self {
         Self {
             global_relabel_freq: None,
+            relabel_pool: None,
         }
+    }
+
+    pub fn with_relabel_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.relabel_pool = Some(pool);
+        self
     }
 }
 
@@ -72,9 +85,10 @@ impl MaxFlowSolver for FifoPushRelabel {
                 }
             }
         }
+        let mut rscratch = RelabelScratch::default();
         if let Some(freq) = self.global_relabel_freq {
             // Initial exact heights help as much as the periodic ones.
-            let out = global_relabel(g, &mut h);
+            let out = global_relabel_auto(g, &mut h, self.relabel_pool.as_deref(), &mut rscratch);
             stats.global_relabels += 1;
             stats.gap_nodes += out.gap_lifted as u64;
             let _ = freq;
@@ -108,7 +122,12 @@ impl MaxFlowSolver for FifoPushRelabel {
                     relabels_since_global += 1;
                     if let Some(freq) = self.global_relabel_freq {
                         if relabels_since_global >= relabel_budget(freq) {
-                            let out = global_relabel(g, &mut h);
+                            let out = global_relabel_auto(
+                                g,
+                                &mut h,
+                                self.relabel_pool.as_deref(),
+                                &mut rscratch,
+                            );
                             stats.global_relabels += 1;
                             stats.gap_nodes += out.gap_lifted as u64;
                             relabels_since_global = 0;

@@ -2,10 +2,27 @@
 //! engines: a backwards BFS from the sink assigns exact residual
 //! distances; unreached nodes are lifted to `n` (gap relabeling), removing
 //! them from useful work until their excess drains back to the source.
+//!
+//! The pass exists twice: the classic queue BFS ([`global_relabel`])
+//! and a stripe-parallel twin ([`global_relabel_striped`]) on the
+//! shared frontier substrate (`crate::parallel`) — node ids are
+//! partitioned into contiguous stripes, each BFS level expands with
+//! per-stripe local queues, and cross-stripe discoveries commit through
+//! the parity-coloured two-pass.  The twins are bit-exact (BFS
+//! distances are unique regardless of visit order); engines pick the
+//! striped path on large instances when a [`WorkerPool`] is lent
+//! ([`global_relabel_auto`]).
 
 use std::collections::VecDeque;
 
 use crate::graph::csr::FlowNetwork;
+use crate::parallel::{deal, Lanes, Stripes, StripedFrontier};
+use crate::service::pool::WorkerPool;
+
+/// Below this node count the sequential BFS wins outright (the striped
+/// pass costs a few batch barriers per level), so
+/// [`global_relabel_auto`] does not bother the pool.
+pub const STRIPED_RELABEL_MIN_NODES: usize = 256;
 
 /// Result of a global relabel pass.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -86,6 +103,144 @@ pub fn global_relabel(g: &FlowNetwork, h: &mut [i64]) -> GlobalRelabelOutcome {
     }
 }
 
+/// Reusable buffers of the striped relabel: distance planes plus the
+/// level-synchronous frontier.  Engines allocate one per solve so the
+/// queues and outboxes survive across the periodic relabels.
+#[derive(Debug, Default)]
+pub struct RelabelScratch {
+    dist: Vec<i32>,
+    dist_s: Vec<i32>,
+    frontier: StripedFrontier,
+    stripe_gap: Vec<u64>,
+}
+
+/// Stripe-parallel twin of [`global_relabel`], bit-exact at any stripe
+/// count and on any [`Lanes`]: both reverse BFS passes run
+/// level-synchronously on the [`StripedFrontier`], and the height
+/// write-back (with gap counting) is a parallel sweep over the same
+/// stripes.
+pub fn global_relabel_striped(
+    g: &FlowNetwork,
+    h: &mut [i64],
+    scratch: &mut RelabelScratch,
+    lanes: &Lanes<'_>,
+) -> GlobalRelabelOutcome {
+    let n = g.node_count();
+    debug_assert_eq!(h.len(), n);
+    let (s, t) = (g.source(), g.sink());
+    let stripes = Stripes::new(n, lanes.width() * 2);
+    let ns = stripes.n_stripes();
+    let sl = stripes.stripe_len();
+
+    let RelabelScratch {
+        dist,
+        dist_s,
+        frontier,
+        stripe_gap,
+    } = scratch;
+
+    // Pass 1: distance-to-sink over reverse residual arcs.  The source
+    // is assigned a distance when reached (it counts as `reached`, like
+    // the sequential pass) but never expanded.
+    dist.clear();
+    dist.resize(n, -1);
+    frontier.reset(stripes);
+    dist[t] = 0;
+    frontier.seed(t);
+    let neigh = |u: usize, emit: &mut dyn FnMut(usize)| {
+        for &e in g.out_edges(u) {
+            if g.residual(e ^ 1) > 0 {
+                emit(g.edge_head(e));
+            }
+        }
+    };
+    let assigned = frontier.run(dist, 0, Some(s), &neigh, lanes);
+    let reached = 1 + assigned as usize;
+
+    // Pass 2 (Cherkassky–Goldberg): distance-to-source for nodes the
+    // sink BFS missed, masked by the (now read-only) sink distances.
+    dist_s.clear();
+    dist_s.resize(n, -1);
+    frontier.reset(stripes);
+    dist_s[s] = 0;
+    frontier.seed(s);
+    {
+        let dist_ro: &[i32] = dist;
+        let neigh_s = |u: usize, emit: &mut dyn FnMut(usize)| {
+            for &e in g.out_edges(u) {
+                let v = g.edge_head(e);
+                if dist_ro[v] < 0 && g.residual(e ^ 1) > 0 {
+                    emit(v);
+                }
+            }
+        };
+        frontier.run(dist_s, 0, None, &neigh_s, lanes);
+    }
+
+    // Write-back, gap counting per stripe.
+    stripe_gap.clear();
+    stripe_gap.resize(ns, 0);
+    {
+        let mut tasks = Vec::with_capacity(ns);
+        let iter = h
+            .chunks_mut(sl)
+            .zip(dist.chunks(sl))
+            .zip(dist_s.chunks(sl))
+            .zip(stripe_gap.iter_mut())
+            .enumerate();
+        for (o, (((h, d), ds), gap)) in iter {
+            tasks.push((o * sl, h, d, ds, gap));
+        }
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for group in deal(tasks, lanes.width()) {
+            jobs.push(Box::new(move || {
+                for (base, h, d, ds, gap) in group {
+                    for lc in 0..h.len() {
+                        let v = base + lc;
+                        if v == s {
+                            h[lc] = n as i64;
+                        } else if d[lc] >= 0 {
+                            h[lc] = d[lc] as i64;
+                        } else {
+                            if h[lc] < n as i64 {
+                                *gap += 1;
+                            }
+                            h[lc] = if ds[lc] >= 0 {
+                                n as i64 + ds[lc] as i64
+                            } else {
+                                2 * n as i64
+                            };
+                        }
+                    }
+                }
+            }));
+        }
+        lanes.run(jobs);
+    }
+
+    GlobalRelabelOutcome {
+        reached,
+        gap_lifted: stripe_gap.iter().sum::<u64>() as usize,
+    }
+}
+
+/// What the engines call: the striped pass on the lent pool for large
+/// instances, the sequential queue BFS otherwise.  Identical results
+/// either way — this is purely a latency switch.
+pub fn global_relabel_auto(
+    g: &FlowNetwork,
+    h: &mut [i64],
+    pool: Option<&WorkerPool>,
+    scratch: &mut RelabelScratch,
+) -> GlobalRelabelOutcome {
+    match pool {
+        Some(pool) if g.node_count() >= STRIPED_RELABEL_MIN_NODES => {
+            global_relabel_striped(g, h, scratch, &Lanes::Pool(pool))
+        }
+        _ => global_relabel(g, h),
+    }
+}
+
 /// Cancel height-violating residual arcs (`h(u) > h(v) + 1`) by pushing
 /// the full residual through them — Algorithm 4.8 lines 1-6.  Needed when
 /// a CYCLE-bounded engine stops mid-stream before recomputing heights.
@@ -145,6 +300,65 @@ mod tests {
         assert_eq!(h[1], 5); // n + 1 (residual arc 1->0 via the mate)
         assert_eq!(h[2], 8); // 2n: no flow ever reached 2, inert
         assert_eq!(out.gap_lifted, 2);
+    }
+
+    #[test]
+    fn striped_twin_matches_sequential_on_unit_cases() {
+        // The two unit instances above, plus a partially pushed chain,
+        // across lane kinds and (via lane width) stripe counts.
+        let cases: Vec<FlowNetwork> = {
+            let mut v = Vec::new();
+            let mut b = NetworkBuilder::new(4, 0, 3);
+            b.add_edge(0, 1, 5, 0);
+            b.add_edge(1, 2, 5, 0);
+            b.add_edge(2, 3, 5, 0);
+            v.push(b.build().unwrap());
+            let mut b = NetworkBuilder::new(4, 0, 3);
+            let e01 = b.add_edge(0, 1, 5, 0);
+            let e13 = b.add_edge(1, 3, 5, 0);
+            b.add_edge(0, 2, 5, 0);
+            let mut g = b.build().unwrap();
+            g.push(e01, 5);
+            g.push(e13, 5);
+            v.push(g);
+            v
+        };
+        let pool = WorkerPool::new(3);
+        for (i, g) in cases.iter().enumerate() {
+            let mut h_seq = vec![0i64; g.node_count()];
+            let want = global_relabel(g, &mut h_seq);
+            for lanes in [Lanes::Seq, Lanes::Scoped { threads: 3 }, Lanes::Pool(&pool)] {
+                let mut h_par = vec![0i64; g.node_count()];
+                let mut scratch = RelabelScratch::default();
+                let got = global_relabel_striped(g, &mut h_par, &mut scratch, &lanes);
+                assert_eq!(h_par, h_seq, "case {i} lanes={}", lanes.width());
+                assert_eq!(got, want, "case {i} outcome");
+                // Scratch reuse: a second run must be idempotent.
+                let again = global_relabel_striped(g, &mut h_par, &mut scratch, &lanes);
+                assert_eq!(h_par, h_seq, "case {i} reuse");
+                assert_eq!(again.reached, want.reached, "case {i} reuse outcome");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_routes_by_size_and_stays_exact() {
+        // A long chain over the striped threshold: auto must take the
+        // striped path on a pool and still match the sequential twin.
+        let n = STRIPED_RELABEL_MIN_NODES + 20;
+        let mut b = NetworkBuilder::new(n, 0, n - 1);
+        for i in 0..n - 1 {
+            b.add_edge(i, i + 1, 3, 1);
+        }
+        let g = b.build().unwrap();
+        let mut h_seq = vec![0i64; n];
+        let want = global_relabel(&g, &mut h_seq);
+        let pool = WorkerPool::new(4);
+        let mut h_auto = vec![0i64; n];
+        let mut scratch = RelabelScratch::default();
+        let got = global_relabel_auto(&g, &mut h_auto, Some(&pool), &mut scratch);
+        assert_eq!(h_auto, h_seq);
+        assert_eq!(got, want);
     }
 
     #[test]

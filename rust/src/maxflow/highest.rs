@@ -3,11 +3,14 @@
 //! variant in the comparison ([Cherkassky & Goldberg 1995], the paper's
 //! reference [3]).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::graph::csr::FlowNetwork;
+use crate::service::pool::WorkerPool;
 
-use super::global_relabel::global_relabel;
+use super::global_relabel::{global_relabel_auto, RelabelScratch};
 use super::{FlowStats, MaxFlowSolver};
 
 /// Highest-label engine with gap relabeling; global relabel every
@@ -17,6 +20,8 @@ pub struct HighestLabel {
     pub global_relabel_freq: Option<f64>,
     /// Enable the label-count gap heuristic.
     pub gap: bool,
+    /// Worker pool for the striped global relabel on large instances.
+    pub relabel_pool: Option<Arc<WorkerPool>>,
 }
 
 impl Default for HighestLabel {
@@ -24,6 +29,7 @@ impl Default for HighestLabel {
         Self {
             global_relabel_freq: Some(1.0),
             gap: true,
+            relabel_pool: None,
         }
     }
 }
@@ -31,9 +37,14 @@ impl Default for HighestLabel {
 impl HighestLabel {
     pub fn no_gap() -> Self {
         Self {
-            global_relabel_freq: Some(1.0),
             gap: false,
+            ..Self::default()
         }
+    }
+
+    pub fn with_relabel_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.relabel_pool = Some(pool);
+        self
     }
 }
 
@@ -109,8 +120,9 @@ impl MaxFlowSolver for HighestLabel {
                 stats.pushes += 1;
             }
         }
+        let mut rscratch = RelabelScratch::default();
         if self.global_relabel_freq.is_some() {
-            let out = global_relabel(g, &mut h);
+            let out = global_relabel_auto(g, &mut h, self.relabel_pool.as_deref(), &mut rscratch);
             stats.global_relabels += 1;
             stats.gap_nodes += out.gap_lifted as u64;
         }
@@ -178,7 +190,12 @@ impl MaxFlowSolver for HighestLabel {
                     }
                     if let Some(b) = budget {
                         if relabels_since_global >= b {
-                            let out = global_relabel(g, &mut h);
+                            let out = global_relabel_auto(
+                                g,
+                                &mut h,
+                                self.relabel_pool.as_deref(),
+                                &mut rscratch,
+                            );
                             stats.global_relabels += 1;
                             stats.gap_nodes += out.gap_lifted as u64;
                             relabels_since_global = 0;

@@ -8,11 +8,14 @@
 //! `coordinator::maxflow_driver`; this engine is its general-graph twin
 //! and the reference for the E4 CYCLE sweep on CSR instances.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::graph::csr::FlowNetwork;
+use crate::service::pool::WorkerPool;
 
-use super::global_relabel::{cancel_violations, global_relabel};
+use super::global_relabel::{cancel_violations, global_relabel_auto, RelabelScratch};
 use super::{FlowStats, MaxFlowSolver};
 
 #[derive(Debug, Clone)]
@@ -21,6 +24,10 @@ pub struct Hybrid {
     pub cycle: u64,
     /// Run the global relabel + gap heuristics between rounds.
     pub heuristics: bool,
+    /// Worker pool for the striped host-round relabel on large
+    /// instances (the general-graph twin of the grid solver's striped
+    /// host rounds).
+    pub relabel_pool: Option<Arc<WorkerPool>>,
 }
 
 impl Default for Hybrid {
@@ -28,6 +35,7 @@ impl Default for Hybrid {
         Self {
             cycle: 7000,
             heuristics: true,
+            relabel_pool: None,
         }
     }
 }
@@ -36,7 +44,7 @@ impl Hybrid {
     pub fn with_cycle(cycle: u64) -> Self {
         Self {
             cycle,
-            heuristics: true,
+            ..Self::default()
         }
     }
 
@@ -44,7 +52,13 @@ impl Hybrid {
         Self {
             cycle,
             heuristics: false,
+            ..Self::default()
         }
+    }
+
+    pub fn with_relabel_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.relabel_pool = Some(pool);
+        self
     }
 }
 
@@ -78,6 +92,7 @@ impl MaxFlowSolver for Hybrid {
         }
 
         // e(s) counts flow returned to the source.
+        let mut rscratch = RelabelScratch::default();
         let height_cap = 4 * n as i64;
         while excess[s] + excess[t] < excess_total {
             // "Device" phase: CYCLE Hong operations, round-robin.
@@ -128,7 +143,8 @@ impl MaxFlowSolver for Hybrid {
             if self.heuristics {
                 let cancelled = cancel_violations(g, &h, &mut excess);
                 let _ = cancelled;
-                let out = global_relabel(g, &mut h);
+                let out =
+                    global_relabel_auto(g, &mut h, self.relabel_pool.as_deref(), &mut rscratch);
                 stats.global_relabels += 1;
                 stats.gap_nodes += out.gap_lifted as u64;
             } else if !progress && ops == 0 {

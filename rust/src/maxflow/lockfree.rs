@@ -50,10 +50,13 @@
 //!   joins (a full synchronisation point), so it can be `Relaxed`.
 
 use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::graph::csr::FlowNetwork;
+use crate::parallel::{deal, Lanes, Stripes, StripedFrontier};
+use crate::service::pool::WorkerPool;
 
 use super::{FlowStats, MaxFlowSolver};
 
@@ -69,6 +72,10 @@ pub struct LockFree {
     /// CUDA because of the global-memory queue; here it is an ablation
     /// option (off by default, like the paper's final implementation).
     pub arg: bool,
+    /// Worker pool the ARG thread's BFS borrows on large instances; the
+    /// BFS runs on the striped frontier substrate either way (`None` =
+    /// sequential lanes).
+    pub relabel_pool: Option<Arc<WorkerPool>>,
 }
 
 impl Default for LockFree {
@@ -76,6 +83,7 @@ impl Default for LockFree {
         Self {
             threads: 2,
             arg: false,
+            relabel_pool: None,
         }
     }
 }
@@ -84,7 +92,7 @@ impl LockFree {
     pub fn with_threads(threads: usize) -> Self {
         Self {
             threads: threads.max(1),
-            arg: false,
+            ..Self::default()
         }
     }
 
@@ -92,8 +100,25 @@ impl LockFree {
         Self {
             threads: threads.max(1),
             arg: true,
+            ..Self::default()
         }
     }
+
+    pub fn with_relabel_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.relabel_pool = Some(pool);
+        self
+    }
+}
+
+/// Reusable ARG-pass buffers, owned by the distinguished BFS thread.
+#[derive(Default)]
+struct ArgScratch {
+    dist: Vec<i32>,
+    /// Residual-capacity snapshot, refilled in place each pass (the
+    /// ARG thread loops continuously — a fresh |2E| Vec per pass would
+    /// be pure allocator churn).
+    snap: Vec<i64>,
+    frontier: StripedFrontier,
 }
 
 struct Shared<'a> {
@@ -181,12 +206,9 @@ impl<'a> Shared<'a> {
             >= self.excess_total
     }
 
-    /// One ARG pass (§4.5): BFS over a *snapshot* of the residual
-    /// capacities, then raise (never lower) heights to the exact
-    /// distances.  Raising-only keeps every worker-side invariant: a
-    /// stale-low height only costs extra work, a lowered height could
-    /// break termination.
-    fn arg_pass(&self, n: usize) {
+    /// One ARG pass (§4.5) with the classic queue BFS — the fast shape
+    /// on small graphs and the fallback when no pool is lent.
+    fn arg_pass_seq(&self, n: usize) {
         use std::collections::VecDeque;
         let (s, t) = (self.g.source(), self.g.sink());
         // The snapshot is heuristic (any plausible residual graph will
@@ -210,22 +232,87 @@ impl<'a> Shared<'a> {
                 continue;
             }
             let target = if dist[v] >= 0 { dist[v] } else { n as i64 };
-            // Monotone raise via CAS loop; no payload travels with the
-            // height, so Relaxed orderings are enough.
-            loop {
-                let cur = self.height[v].load(Ordering::Relaxed);
-                if cur >= target {
-                    break;
-                }
-                if self
-                    .height[v]
-                    .compare_exchange(cur, target, Ordering::Relaxed, Ordering::Relaxed)
-                    .is_ok()
-                {
-                    break;
-                }
+            self.raise_height(v, target);
+        }
+    }
+
+    /// Monotone raise via CAS loop; no payload travels with the height,
+    /// so Relaxed orderings are enough.
+    fn raise_height(&self, v: usize, target: i64) {
+        loop {
+            let cur = self.height[v].load(Ordering::Relaxed);
+            if cur >= target {
+                break;
+            }
+            if self.height[v]
+                .compare_exchange(cur, target, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                break;
             }
         }
+    }
+
+    /// One ARG pass (§4.5): BFS over a *snapshot* of the residual
+    /// capacities, then raise (never lower) heights to the exact
+    /// distances.  Raising-only keeps every worker-side invariant: a
+    /// stale-low height only costs extra work, a lowered height could
+    /// break termination.
+    ///
+    /// The BFS runs on the striped frontier substrate (level-synchronous
+    /// — identical distances to [`Self::arg_pass_seq`]), and the raise
+    /// sweep fans out over the same stripes; the CAS raises are
+    /// per-node atomics, so stripe order is irrelevant.  Only used on
+    /// large instances with a lent pool — below that the queue BFS wins
+    /// (same rationale as `global_relabel_auto`).
+    fn arg_pass_striped(&self, n: usize, scratch: &mut ArgScratch, lanes: &Lanes<'_>) {
+        let (s, t) = (self.g.source(), self.g.sink());
+        let stripes = Stripes::new(n, lanes.width() * 2);
+        let ArgScratch {
+            dist,
+            snap,
+            frontier,
+        } = scratch;
+        snap.clear();
+        snap.extend(self.cap.iter().map(|c| c.load(Ordering::Relaxed)));
+        let snap: &[i64] = snap;
+        dist.clear();
+        dist.resize(n, -1);
+        frontier.reset(stripes);
+        dist[t] = 0;
+        frontier.seed(t);
+        let g = self.g;
+        let neigh = |u: usize, emit: &mut dyn FnMut(usize)| {
+            for &e in g.out_edges(u) {
+                let v = g.edge_head(e);
+                if v != s && snap[(e ^ 1) as usize] > 0 {
+                    emit(v);
+                }
+            }
+        };
+        frontier.run(dist, 0, None, &neigh, lanes);
+
+        let sl = stripes.stripe_len();
+        let mut tasks = Vec::with_capacity(stripes.n_stripes());
+        for (o, chunk) in dist.chunks(sl).enumerate() {
+            tasks.push((o * sl, chunk));
+        }
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for group in deal(tasks, lanes.width()) {
+            jobs.push(Box::new(move || {
+                for (base, chunk) in group {
+                    for (lc, &d) in chunk.iter().enumerate() {
+                        let v = base + lc;
+                        if v == s || v == t {
+                            continue;
+                        }
+                        let target = if d >= 0 { d as i64 } else { n as i64 };
+                        self.raise_height(v, target);
+                    }
+                }
+            }));
+        }
+        lanes.run(jobs);
     }
 }
 
@@ -270,11 +357,26 @@ impl MaxFlowSolver for LockFree {
         std::thread::scope(|scope| {
             if self.arg {
                 // The distinguished ARG thread (§4.5) runs BFS passes
-                // concurrently until the workers finish.
+                // concurrently until the workers finish — striped on the
+                // lent pool for large instances, the classic queue BFS
+                // otherwise (the striped pass's per-level batches only
+                // pay off with real lanes and enough nodes).
                 let shared = &shared;
+                let relabel_pool = self.relabel_pool.clone();
                 scope.spawn(move || {
+                    let striped = relabel_pool.is_some()
+                        && n >= super::global_relabel::STRIPED_RELABEL_MIN_NODES;
+                    let mut scratch = ArgScratch::default();
+                    let lanes = match &relabel_pool {
+                        Some(p) if striped => Lanes::Pool(p.as_ref()),
+                        _ => Lanes::Seq,
+                    };
                     while !shared.done.load(Ordering::Acquire) {
-                        shared.arg_pass(n);
+                        if striped {
+                            shared.arg_pass_striped(n, &mut scratch, &lanes);
+                        } else {
+                            shared.arg_pass_seq(n);
+                        }
                         std::thread::yield_now();
                     }
                 });

@@ -53,13 +53,32 @@ pub trait MaxFlowSolver {
 
 /// All registered engines (for benches and parity tests).
 pub fn all_engines() -> Vec<Box<dyn MaxFlowSolver>> {
+    all_engines_with(None)
+}
+
+/// All engines, with the push-relabel family borrowing `pool` for their
+/// periodic global relabel (striped BFS on large instances; identical
+/// results, see [`global_relabel::global_relabel_auto`]).
+pub fn all_engines_with(
+    pool: Option<std::sync::Arc<crate::service::pool::WorkerPool>>,
+) -> Vec<Box<dyn MaxFlowSolver>> {
+    let mut fifo = fifo::FifoPushRelabel::default();
+    let mut highest = highest::HighestLabel::default();
+    let mut lockfree = lockfree::LockFree::default();
+    let mut hybrid = hybrid::Hybrid::default();
+    if let Some(pool) = pool {
+        fifo = fifo.with_relabel_pool(std::sync::Arc::clone(&pool));
+        highest = highest.with_relabel_pool(std::sync::Arc::clone(&pool));
+        lockfree = lockfree.with_relabel_pool(std::sync::Arc::clone(&pool));
+        hybrid = hybrid.with_relabel_pool(pool);
+    }
     vec![
         Box::new(edmonds_karp::EdmondsKarp),
         Box::new(dinic::Dinic),
-        Box::new(fifo::FifoPushRelabel::default()),
-        Box::new(highest::HighestLabel::default()),
-        Box::new(lockfree::LockFree::default()),
-        Box::new(hybrid::Hybrid::default()),
+        Box::new(fifo),
+        Box::new(highest),
+        Box::new(lockfree),
+        Box::new(hybrid),
     ]
 }
 

@@ -1,0 +1,427 @@
+//! The stripe-parallel frontier substrate.
+//!
+//! [`Stripes`] partitions `0..len` item indices (grid cells in row-major
+//! order, CSR node ids) into contiguous equal-length ranges, so every
+//! per-item array can be lent to workers as disjoint `chunks_mut`
+//! slices — the same trick the tiled wave engine uses for its state
+//! planes.
+//!
+//! [`StripedFrontier`] runs a level-synchronous multi-source BFS over
+//! that partition.  Each level is two (logically; three with the parity
+//! split) barriers:
+//!
+//! 1. **Expand** — every stripe drains its local queue, calling the
+//!    caller's neighbour closure per item.  Targets inside the owning
+//!    stripe are committed immediately (distance set, queued for the
+//!    next level); targets in a foreign stripe go to a per-(producer ×
+//!    owner) outbox — no shared writes anywhere.
+//! 2. **Commit** — the parity-coloured two-pass: stripes of even index
+//!    drain the outbox columns addressed to them, then the odd stripes.
+//!    Only the owner ever writes its distance chunk or queue, so both
+//!    passes are race-free; the parity split mirrors the border
+//!    reconciliation protocol of `gridflow::par_wave` (even tiles then
+//!    odd tiles own their borders) so the two layers share one shape.
+//!
+//! Bit-exactness with a sequential queue BFS is structural: BFS
+//! distances are the unique shortest-path distances from the seed set,
+//! independent of visit order, and duplicate candidates are deduped by
+//! the owner's distance check.  The differential tests in
+//! `gridflow::host`, `maxflow::global_relabel`, and
+//! `tests/prop_par_wave.rs` pin this for every consumer.
+
+use super::{deal, Lanes};
+
+/// A contiguous partition of `0..len` into equal-length stripes (the
+/// last stripe may be ragged).  `stripe_len` is the chunk size every
+/// parallel pass feeds to `chunks_mut`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Stripes {
+    len: usize,
+    stripe_len: usize,
+}
+
+impl Stripes {
+    /// Partition `len` items into (about) `target_stripes` stripes.
+    pub fn new(len: usize, target_stripes: usize) -> Self {
+        let stripe_len = len.div_ceil(target_stripes.max(1)).max(1);
+        Self { len, stripe_len }
+    }
+
+    /// Partition a `rows x width` row-major grid on row boundaries:
+    /// about `target_stripes` stripes of whole rows — the same shape as
+    /// the wave engine's row-stripe tiles.
+    pub fn rows(rows: usize, width: usize, target_stripes: usize) -> Self {
+        let stripe_rows = rows.div_ceil(target_stripes.max(1)).max(1);
+        Self {
+            len: rows * width,
+            stripe_len: (stripe_rows * width).max(1),
+        }
+    }
+
+    /// An explicit stripe length (e.g. the wave engine's
+    /// `tile_rows * width`).
+    pub fn with_stripe_len(len: usize, stripe_len: usize) -> Self {
+        Self {
+            len,
+            stripe_len: stripe_len.max(1),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn stripe_len(&self) -> usize {
+        self.stripe_len
+    }
+
+    pub fn n_stripes(&self) -> usize {
+        self.len.div_ceil(self.stripe_len)
+    }
+
+    /// Which stripe owns item `idx`.
+    #[inline]
+    pub fn owner(&self, idx: usize) -> usize {
+        idx / self.stripe_len
+    }
+}
+
+struct ExpandTask<'a> {
+    base: usize,
+    cur: &'a mut Vec<u32>,
+    nxt: &'a mut Vec<u32>,
+    /// This producer's outbox row: one box per owner stripe.
+    row: &'a mut [Vec<u32>],
+    dist: &'a mut [i32],
+    count: &'a mut u64,
+}
+
+struct CommitTask<'a> {
+    owner: usize,
+    base: usize,
+    nxt: &'a mut Vec<u32>,
+    dist: &'a mut [i32],
+    count: &'a mut u64,
+}
+
+/// Reusable level-synchronous BFS state: per-stripe current/next
+/// queues, the (producer × owner) outboxes, and per-stripe assignment
+/// counters.  Allocations survive across `reset` calls, so a solve
+/// pays for the queues once.
+#[derive(Debug, Default)]
+pub struct StripedFrontier {
+    stripes: Stripes,
+    current: Vec<Vec<u32>>,
+    next: Vec<Vec<u32>>,
+    /// Producer-major: `outbox[p * n_stripes + o]` holds targets stripe
+    /// `p` discovered that stripe `o` owns.
+    outbox: Vec<Vec<u32>>,
+    counts: Vec<u64>,
+}
+
+impl Default for Stripes {
+    fn default() -> Self {
+        Self { len: 0, stripe_len: 1 }
+    }
+}
+
+impl StripedFrontier {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn stripes(&self) -> Stripes {
+        self.stripes
+    }
+
+    /// Rebind to a partition and clear every queue/outbox (buffers are
+    /// kept when the stripe count is unchanged).
+    pub fn reset(&mut self, stripes: Stripes) {
+        self.stripes = stripes;
+        let ns = stripes.n_stripes();
+        self.current.iter_mut().for_each(Vec::clear);
+        self.next.iter_mut().for_each(Vec::clear);
+        self.outbox.iter_mut().for_each(Vec::clear);
+        self.current.resize_with(ns, Vec::new);
+        self.next.resize_with(ns, Vec::new);
+        self.outbox.resize_with(ns * ns, Vec::new);
+        self.counts.clear();
+        self.counts.resize(ns, 0);
+    }
+
+    /// Enqueue a seed item for level 0 of the run.  The caller must
+    /// have already assigned its distance (all seeds share one level).
+    pub fn seed(&mut self, idx: usize) {
+        let o = self.stripes.owner(idx);
+        self.current[o].push(idx as u32);
+    }
+
+    /// Run the BFS to exhaustion.  `dist` is the distance plane
+    /// (`-1` = unassigned); seeds carry `seed_level` and every item
+    /// discovered `r` rounds later gets `seed_level + r`.  `neighbours`
+    /// receives an item and an emit callback and must emit every raw
+    /// candidate (the substrate dedupes against `dist`).  `skip` names
+    /// an item that is assigned a distance but never expanded (the
+    /// source node in the reverse-residual BFS).  Returns the number of
+    /// distance assignments made (seeds not included).
+    pub fn run<F>(
+        &mut self,
+        dist: &mut [i32],
+        seed_level: i32,
+        skip: Option<usize>,
+        neighbours: &F,
+        lanes: &Lanes<'_>,
+    ) -> u64
+    where
+        F: Fn(usize, &mut dyn FnMut(usize)) + Sync,
+    {
+        let ns = self.stripes.n_stripes();
+        let sl = self.stripes.stripe_len();
+        debug_assert_eq!(dist.len(), self.stripes.len());
+        let width = lanes.width();
+        let mut level = seed_level;
+        loop {
+            if self.current.iter().all(|q| q.is_empty()) {
+                break;
+            }
+            let next_level = level + 1;
+
+            // --- Expand: parallel over producer stripes ------------------
+            {
+                let mut tasks = Vec::with_capacity(ns);
+                let iter = self
+                    .current
+                    .iter_mut()
+                    .zip(self.next.iter_mut())
+                    .zip(self.outbox.chunks_mut(ns))
+                    .zip(dist.chunks_mut(sl))
+                    .zip(self.counts.iter_mut())
+                    .enumerate();
+                for (s, ((((cur, nxt), row), dist), count)) in iter {
+                    tasks.push(ExpandTask {
+                        base: s * sl,
+                        cur,
+                        nxt,
+                        row,
+                        dist,
+                        count,
+                    });
+                }
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+                for group in deal(tasks, width) {
+                    jobs.push(Box::new(move || {
+                        for task in group {
+                            let ExpandTask {
+                                base,
+                                cur,
+                                nxt,
+                                row,
+                                dist,
+                                count,
+                            } = task;
+                            let end = base + dist.len();
+                            let mut emit = |v: usize| {
+                                if v >= base && v < end {
+                                    let lv = v - base;
+                                    if dist[lv] < 0 {
+                                        dist[lv] = next_level;
+                                        *count += 1;
+                                        if skip != Some(v) {
+                                            nxt.push(v as u32);
+                                        }
+                                    }
+                                } else {
+                                    row[v / sl].push(v as u32);
+                                }
+                            };
+                            for &u in cur.iter() {
+                                neighbours(u as usize, &mut emit);
+                            }
+                            cur.clear();
+                        }
+                    }));
+                }
+                lanes.run(jobs);
+            }
+
+            // --- Commit: the parity-coloured two-pass --------------------
+            // Owners drain the outbox columns addressed to them — even
+            // stripes first, then odd.  Writes stay owner-exclusive.
+            {
+                let outbox = &self.outbox;
+                let mut even = Vec::new();
+                let mut odd = Vec::new();
+                let iter = self
+                    .next
+                    .iter_mut()
+                    .zip(dist.chunks_mut(sl))
+                    .zip(self.counts.iter_mut())
+                    .enumerate();
+                for (o, ((nxt, dist), count)) in iter {
+                    let task = CommitTask {
+                        owner: o,
+                        base: o * sl,
+                        nxt,
+                        dist,
+                        count,
+                    };
+                    if o % 2 == 0 {
+                        even.push(task);
+                    } else {
+                        odd.push(task);
+                    }
+                }
+                for pass in [even, odd] {
+                    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+                    for group in deal(pass, width) {
+                        jobs.push(Box::new(move || {
+                            for task in group {
+                                for p in 0..ns {
+                                    for &v in &outbox[p * ns + task.owner] {
+                                        let lv = v as usize - task.base;
+                                        if task.dist[lv] < 0 {
+                                            task.dist[lv] = next_level;
+                                            *task.count += 1;
+                                            if skip != Some(v as usize) {
+                                                task.nxt.push(v);
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }));
+                    }
+                    lanes.run(jobs);
+                }
+            }
+
+            for b in &mut self.outbox {
+                b.clear();
+            }
+            std::mem::swap(&mut self.current, &mut self.next);
+            level = next_level;
+        }
+        let total = self.counts.iter().sum();
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::pool::WorkerPool;
+    use std::collections::VecDeque;
+
+    /// Sequential oracle: queue BFS over an adjacency list.
+    fn bfs_oracle(adj: &[Vec<usize>], seeds: &[usize], skip: Option<usize>) -> Vec<i32> {
+        let mut dist = vec![-1i32; adj.len()];
+        let mut q = VecDeque::new();
+        for &s in seeds {
+            dist[s] = 0;
+            q.push_back(s);
+        }
+        while let Some(u) = q.pop_front() {
+            for &v in &adj[u] {
+                if dist[v] < 0 {
+                    dist[v] = dist[u] + 1;
+                    if skip != Some(v) {
+                        q.push_back(v);
+                    }
+                }
+            }
+        }
+        dist
+    }
+
+    fn ring_with_chords(n: usize) -> Vec<Vec<usize>> {
+        let mut adj = vec![Vec::new(); n];
+        for v in 0..n {
+            adj[v].push((v + 1) % n);
+            adj[(v + 1) % n].push(v);
+            if v % 7 == 0 {
+                adj[v].push((v + n / 2) % n);
+            }
+        }
+        adj
+    }
+
+    fn run_striped(
+        adj: &[Vec<usize>],
+        seeds: &[usize],
+        skip: Option<usize>,
+        stripes: Stripes,
+        lanes: &Lanes<'_>,
+    ) -> (Vec<i32>, u64) {
+        let mut dist = vec![-1i32; adj.len()];
+        let mut fr = StripedFrontier::new();
+        fr.reset(stripes);
+        for &s in seeds {
+            dist[s] = 0;
+            fr.seed(s);
+        }
+        let neigh = |u: usize, emit: &mut dyn FnMut(usize)| {
+            for &v in &adj[u] {
+                emit(v);
+            }
+        };
+        let assigned = fr.run(&mut dist, 0, skip, &neigh, lanes);
+        (dist, assigned)
+    }
+
+    #[test]
+    fn matches_queue_bfs_across_stripe_counts_and_lanes() {
+        let adj = ring_with_chords(97);
+        let want = bfs_oracle(&adj, &[0, 40], None);
+        let pool = WorkerPool::new(3);
+        for n_stripes in [1, 2, 3, 5, 16, 97] {
+            for lanes in [Lanes::Seq, Lanes::Scoped { threads: 3 }, Lanes::Pool(&pool)] {
+                let (dist, assigned) =
+                    run_striped(&adj, &[0, 40], None, Stripes::new(97, n_stripes), &lanes);
+                assert_eq!(dist, want, "stripes={n_stripes}");
+                let reach = want.iter().filter(|&&d| d >= 0).count() as u64;
+                assert_eq!(assigned + 2, reach, "stripes={n_stripes}");
+            }
+        }
+    }
+
+    #[test]
+    fn skip_is_assigned_but_not_expanded() {
+        // 0 - 1 - 2 - 3 chain; skipping 1 cuts 2 and 3 off.
+        let adj = vec![vec![1], vec![0, 2], vec![1, 3], vec![2]];
+        let want = bfs_oracle(&adj, &[0], Some(1));
+        assert_eq!(want, vec![0, 1, -1, -1]);
+        for n_stripes in [1, 2, 4] {
+            let (dist, _) = run_striped(&adj, &[0], Some(1), Stripes::new(4, n_stripes), &Lanes::Seq);
+            assert_eq!(dist, want, "stripes={n_stripes}");
+        }
+    }
+
+    #[test]
+    fn cross_stripe_duplicates_dedupe_to_one_assignment() {
+        // Two nodes in stripe 0 both point at the same node in stripe 1.
+        let adj = vec![vec![2], vec![2], vec![]];
+        let (dist, assigned) =
+            run_striped(&adj, &[0, 1], None, Stripes::with_stripe_len(3, 2), &Lanes::Seq);
+        assert_eq!(dist, vec![0, 0, 1]);
+        assert_eq!(assigned, 1);
+    }
+
+    #[test]
+    fn stripes_geometry() {
+        let s = Stripes::rows(10, 4, 3);
+        assert_eq!(s.len(), 40);
+        assert_eq!(s.stripe_len(), 16); // 4 rows per stripe
+        assert_eq!(s.n_stripes(), 3);
+        assert_eq!(s.owner(0), 0);
+        assert_eq!(s.owner(16), 1);
+        assert_eq!(s.owner(39), 2);
+        let s = Stripes::new(7, 16);
+        assert_eq!(s.stripe_len(), 1);
+        assert_eq!(s.n_stripes(), 7);
+    }
+}

@@ -1,0 +1,146 @@
+//! Host-side parallel substrates shared by the engines.
+//!
+//! Two pieces live here:
+//!
+//! * [`Lanes`] — where a batch of jobs runs: inline on the calling
+//!   thread, on freshly scoped threads, or on a borrowed persistent
+//!   [`WorkerPool`] (the service's wave pool, exactly like
+//!   `NativeParGridExecutor::with_pool`).  Every striped algorithm is
+//!   written against `Lanes`, so the same code path serves the
+//!   sequential fallback and the pooled production shape.
+//! * [`frontier`] — the stripe-parallel frontier substrate: a
+//!   contiguous-range partition ([`Stripes`]) plus a level-synchronous
+//!   BFS engine ([`StripedFrontier`]) with per-stripe local queues and
+//!   a parity-coloured two-pass commit for cross-stripe edges.  The
+//!   grid host rounds (`gridflow::host`), the tiled wave engine's
+//!   border reconciliation (`gridflow::par_wave`), and the
+//!   general-graph global relabel (`maxflow::global_relabel`) all
+//!   partition over it.
+//!
+//! Why stripes: in the hybrid scheme the host-side BFS is the dominant
+//! serial fraction once the wave itself is parallel (Baumstark et al.,
+//! arXiv:1507.01926), and contiguous-range stripes make every write
+//! owner-exclusive — workers mutate disjoint `chunks_mut` slices, no
+//! atomics, no locks — while cross-stripe effects are deferred to
+//! outboxes and committed by the owning stripe.  Results are
+//! *bit-exact* with the sequential twins for every consumer in the
+//! tree: BFS levels assign unique shortest distances regardless of
+//! visit order, and the deferred ops are additive.
+
+pub mod frontier;
+
+pub use frontier::{Stripes, StripedFrontier};
+
+use crate::service::pool::WorkerPool;
+
+/// Receive side of one cross-stripe operation, deferred to the owning
+/// stripe's parity commit: `cap[arc * cells + cell] += delta` and
+/// `e[cell] += delta`.  Shared by the wave engine's border pushes and
+/// the host round's violation-cancel receive sides — one type, one
+/// protocol.
+#[derive(Debug, Clone, Copy)]
+pub struct CrossOp {
+    pub cell: u32,
+    /// Arc plane of the *reverse* arc at the receiving cell.
+    pub arc: u8,
+    pub delta: i32,
+}
+
+/// Execution lanes for one batch of independent jobs.
+///
+/// `Seq` is the fallback when no pool is supplied: jobs run inline, in
+/// order, on the calling thread — same results (the striped algorithms
+/// are execution-order independent), no threads.  `Scoped` spawns a
+/// fresh `std::thread::scope` per batch (the pre-pool engine shape).
+/// `Pool` borrows the persistent service pool: a batch costs one
+/// condvar wakeup round instead of a spawn/join round.
+pub enum Lanes<'p> {
+    Seq,
+    Scoped { threads: usize },
+    Pool(&'p WorkerPool),
+}
+
+/// Round-robin task grouping: stripe tasks dealt across `width`
+/// workers, exactly like the wave engine deals tiles.  Empty groups
+/// are dropped so `Lanes::run` never schedules a no-op job.
+pub fn deal<T>(tasks: Vec<T>, width: usize) -> Vec<Vec<T>> {
+    let width = width.max(1);
+    let mut groups: Vec<Vec<T>> = (0..width).map(|_| Vec::new()).collect();
+    for (i, t) in tasks.into_iter().enumerate() {
+        groups[i % width].push(t);
+    }
+    groups.retain(|g| !g.is_empty());
+    groups
+}
+
+impl Lanes<'_> {
+    /// How many jobs can usefully run at once — the partitioning width
+    /// striped algorithms size their batches for.
+    pub fn width(&self) -> usize {
+        match self {
+            Lanes::Seq => 1,
+            Lanes::Scoped { threads } => (*threads).max(1),
+            Lanes::Pool(p) => p.threads().max(1),
+        }
+    }
+
+    /// Run every job to completion (the batch barrier all striped
+    /// passes rely on).  A job must never re-enter the same pool.
+    pub fn run<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        match self {
+            Lanes::Seq => {
+                for job in jobs {
+                    job();
+                }
+            }
+            Lanes::Scoped { .. } => {
+                std::thread::scope(|s| {
+                    for job in jobs {
+                        s.spawn(job);
+                    }
+                });
+            }
+            Lanes::Pool(p) => p.scope_run(jobs),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn fill_via(lanes: &Lanes<'_>) -> Vec<u64> {
+        let mut data = vec![0u64; 48];
+        let width = lanes.width().max(1);
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (i, chunk) in data.chunks_mut(48 / width.min(48)).enumerate() {
+                jobs.push(Box::new(move || {
+                    for (j, x) in chunk.iter_mut().enumerate() {
+                        *x = (i * 1000 + j) as u64;
+                    }
+                }));
+            }
+            lanes.run(jobs);
+        }
+        data
+    }
+
+    #[test]
+    fn all_lane_kinds_run_every_job() {
+        let pool = Arc::new(WorkerPool::new(3));
+        let seq = fill_via(&Lanes::Seq);
+        assert_eq!(seq, fill_via(&Lanes::Scoped { threads: 3 }));
+        assert_eq!(seq, fill_via(&Lanes::Pool(&pool)));
+    }
+
+    #[test]
+    fn widths() {
+        assert_eq!(Lanes::Seq.width(), 1);
+        assert_eq!(Lanes::Scoped { threads: 4 }.width(), 4);
+        assert_eq!(Lanes::Scoped { threads: 0 }.width(), 1);
+        let pool = WorkerPool::new(2);
+        assert_eq!(Lanes::Pool(&pool).width(), 2);
+    }
+}

@@ -42,6 +42,7 @@ use crate::assignment::AssignmentResult;
 use crate::config::Config;
 use crate::gridflow::GridSolveReport;
 
+pub use crate::gridflow::HostRounds;
 pub use crate::workloads::ProblemInstance;
 pub use adaptive::{RouteStat, RoutingMode, TelemetrySink};
 pub use loadgen::{replay, replay_spawn_baseline, ReplayError, ReplayOutcome};
@@ -154,6 +155,12 @@ impl PoolConfig {
                 cycle_waves: cfg.get_usize("service.cycle", d.router.cycle_waves)?,
                 par_threads: cfg.get_usize("service.threads", d.router.par_threads)?,
                 tile_rows: cfg.get_usize("service.tile_rows", d.router.tile_rows)?,
+                // Shared key with the coordinator path: one switch
+                // flips host rounds everywhere a hybrid solver runs.
+                host_rounds: match cfg.get("gridflow.host_rounds") {
+                    Some(name) => crate::gridflow::HostRounds::parse(name)?,
+                    None => d.router.host_rounds,
+                },
                 routing: match cfg.get("service.routing") {
                     Some(name) => RoutingMode::parse(name)?,
                     None => d.router.routing,
@@ -208,6 +215,18 @@ mod tests {
     fn bad_backend_name_rejected() {
         let cfg = Config::parse("[service]\nassign_small = \"nope\"\n").unwrap();
         assert!(PoolConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn host_rounds_key_from_config() {
+        let cfg = Config::parse("[gridflow]\nhost_rounds = \"striped\"\n").unwrap();
+        let pc = PoolConfig::from_config(&cfg).unwrap();
+        assert_eq!(pc.router.host_rounds, HostRounds::Striped);
+        // Absent key keeps the bit-exact sequential default.
+        let pc = PoolConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(pc.router.host_rounds, HostRounds::Seq);
+        let bad = Config::parse("[gridflow]\nhost_rounds = \"nope\"\n").unwrap();
+        assert!(PoolConfig::from_config(&bad).is_err());
     }
 
     #[test]

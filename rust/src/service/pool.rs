@@ -94,6 +94,17 @@ pub struct WorkerPool {
     workers: Vec<JoinHandle<()>>,
 }
 
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Engines that optionally borrow a pool derive Debug; the
+        // interesting facts are its width and current backlog.
+        f.debug_struct("WorkerPool")
+            .field("threads", &self.workers.len())
+            .field("pending", &self.pending())
+            .finish()
+    }
+}
+
 impl WorkerPool {
     pub fn new(threads: usize) -> Self {
         let shared = Arc::new(PoolShared {

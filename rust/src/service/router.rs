@@ -30,7 +30,7 @@ use crate::assignment::{self, AssignmentSolver};
 use crate::coordinator::PjrtAssignmentDriver;
 use crate::graph::GridNetwork;
 use crate::gridflow::{
-    GridSolveReport, HybridGridSolver, NativeGridExecutor, NativeParGridExecutor,
+    GridSolveReport, HostRounds, HybridGridSolver, NativeGridExecutor, NativeParGridExecutor,
 };
 use crate::maxflow::{self, MaxFlowSolver};
 use crate::runtime::ArtifactRegistry;
@@ -269,6 +269,10 @@ impl Backend for NativeGridBackend {
 struct NativeParGridBackend {
     exec: NativeParGridExecutor,
     cycle_waves: usize,
+    /// `Striped` wires the worker's wave pool into the host rounds too
+    /// (via `GridExecutor::host_pool`), so Large solves stop
+    /// serialising on the between-wave BFS.  Bit-exact with `Seq`.
+    host_rounds: HostRounds,
 }
 
 impl Backend for NativeParGridBackend {
@@ -283,7 +287,9 @@ impl Backend for NativeParGridBackend {
     fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome> {
         match instance {
             ProblemInstance::Grid(net) => Ok(SolveOutcome::Grid(
-                HybridGridSolver::with_cycle(self.cycle_waves).solve(net, &mut self.exec)?,
+                HybridGridSolver::with_cycle(self.cycle_waves)
+                    .with_host_rounds(self.host_rounds)
+                    .solve(net, &mut self.exec)?,
             )),
             other => Err(wrong_family(self.name(), other)),
         }
@@ -418,6 +424,7 @@ impl BackendRegistry {
             Some(Box::new(NativeParGridBackend {
                 exec,
                 cycle_waves: cfg.cycle_waves,
+                host_rounds: cfg.host_rounds,
             }))
         });
         r.register("fifo-lockfree", Family::Grid, |cfg, _| {
@@ -553,6 +560,10 @@ pub struct RouterConfig {
     /// Wave-pool width used by the `native-par` grid backend.
     pub par_threads: usize,
     pub tile_rows: usize,
+    /// Host-round policy of the hybrid grid solver behind `native-par`:
+    /// `Striped` runs the between-wave cancel/relabel on the worker's
+    /// wave pool (bit-exact with `Seq`; `[gridflow] host_rounds`).
+    pub host_rounds: HostRounds,
     /// Static (PR 3 tables) or adaptive (measurement-driven) routing.
     pub routing: RoutingMode,
     /// Adaptive mode: probe one decision in `probe_every` (0 disables
@@ -581,6 +592,7 @@ impl Default for RouterConfig {
             cycle_waves: 512,
             par_threads: 4,
             tile_rows: 16,
+            host_rounds: HostRounds::Seq,
             routing: RoutingMode::Static,
             probe_every: 8,
             spill_depth: 8,

@@ -111,6 +111,41 @@ fn mixed_trace_matches_sequential_oracles() {
     assert!(report.served_by("native-par") >= 1, "{:?}", report.backends);
 }
 
+/// Striped host rounds through the service: the native-par backend
+/// wires its worker's wave pool into the between-wave cancel/relabel
+/// (`[gridflow] host_rounds = striped`), and every grid reply must stay
+/// *full-report* bit-exact with the sequential-everything oracle.
+#[test]
+fn striped_host_rounds_stay_oracle_exact() {
+    use flowmatch::service::HostRounds;
+
+    let mut cfg = test_pool_config(3);
+    cfg.router.host_rounds = HostRounds::Striped;
+    let trace = mixed_trace(502);
+    let pool = SolverPool::start(cfg);
+    let out = replay(&pool, &trace, false);
+    let report = pool.shutdown();
+    assert_eq!(out.ok, trace.len(), "rejected={} failed={}", out.rejected, out.failed);
+    assert!(report.served_by("native-par") >= 1, "{:?}", report.backends);
+
+    for (id, reply) in &out.replies {
+        let reply = reply.as_ref().unwrap_or_else(|e| panic!("request {id}: {e}"));
+        if let ProblemInstance::Grid(net) = &trace.requests[*id].instance {
+            let (want, _) = solve_grid_with(net, CYCLE, None, GridEngine::Native).unwrap();
+            let got = reply.outcome.grid().expect("grid outcome");
+            assert_eq!(got.flow, want.flow, "request {id}: wrong flow");
+            if reply.backend == "native-par" {
+                assert_eq!(got.waves, want.waves, "request {id}");
+                assert_eq!(got.pushes, want.pushes, "request {id}");
+                assert_eq!(got.relabels, want.relabels, "request {id}");
+                assert_eq!(got.host_rounds, want.host_rounds, "request {id}");
+                assert_eq!(got.gap_cells, want.gap_cells, "request {id}");
+                assert_eq!(got.cancelled_arcs, want.cancelled_arcs, "request {id}");
+            }
+        }
+    }
+}
+
 /// The fifo-lockfree grid backend (Hong's CSR engine) agrees with the
 /// sequential path on the flow value when routed to from the pool.
 #[test]

@@ -134,6 +134,93 @@ fn prop_lockfree_any_thread_count() {
 }
 
 #[test]
+fn prop_striped_relabel_matches_sequential_heights() {
+    use flowmatch::maxflow::global_relabel::{
+        global_relabel, global_relabel_striped, RelabelScratch,
+    };
+    use flowmatch::parallel::Lanes;
+    use flowmatch::service::WorkerPool;
+
+    let pool = WorkerPool::new(3);
+    forall(
+        Config::cases(40).seed(0xF15).named("striped relabel parity"),
+        |rng| {
+            let base = random_network(rng);
+            let mut g = base.clone();
+            // Mid-solve residual state: a few augmentations in.
+            let _ = maxflow::edmonds_karp::EdmondsKarp.solve(&mut g);
+            let mut h_seq = vec![0i64; g.node_count()];
+            let want = global_relabel(&g, &mut h_seq);
+            let mut scratch = RelabelScratch::default();
+            for lanes in [Lanes::Seq, Lanes::Scoped { threads: 3 }, Lanes::Pool(&pool)] {
+                let mut h_par = vec![0i64; g.node_count()];
+                let got = global_relabel_striped(&g, &mut h_par, &mut scratch, &lanes);
+                prop_assert_eq!(&h_par, &h_seq, format!("lanes width {}", lanes.width()));
+                prop_assert_eq!(got.reached, want.reached, "reached");
+                prop_assert_eq!(got.gap_lifted, want.gap_lifted, "gap_lifted");
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Engines with a lent relabel pool must reproduce the pool-less run
+/// *exactly* (values and operation counters) — the striped relabel is a
+/// drop-in — on an instance large enough to cross the striped-path
+/// size threshold.
+#[test]
+fn pooled_engines_bit_exact_on_large_instance() {
+    use flowmatch::maxflow::global_relabel::STRIPED_RELABEL_MIN_NODES;
+    use flowmatch::service::WorkerPool;
+    use std::sync::Arc;
+
+    let n = STRIPED_RELABEL_MIN_NODES + 64;
+    let mut rng = Rng::seeded(0xF16);
+    let mut b = NetworkBuilder::new(n, 0, n - 1);
+    for i in 0..n - 1 {
+        b.add_edge(i, i + 1, rng.range_i64(1, 12), 0);
+    }
+    for _ in 0..3 * n {
+        let u = rng.index(n);
+        let mut v = rng.index(n);
+        if u == v {
+            v = (v + 1) % n;
+        }
+        b.add_edge(u, v, rng.range_i64(0, 9), 0);
+    }
+    let base = b.build().unwrap();
+
+    let pool = Arc::new(WorkerPool::new(4));
+    let seq_engines = maxflow::all_engines();
+    let pooled_engines = maxflow::all_engines_with(Some(Arc::clone(&pool)));
+    for (seq, pooled) in seq_engines.iter().zip(&pooled_engines) {
+        let mut g1 = base.clone();
+        let want = seq.solve(&mut g1).unwrap();
+        let mut g2 = base.clone();
+        let got = pooled.solve(&mut g2).unwrap();
+        assert_eq!(got.value, want.value, "{} value", seq.name());
+        // The deterministic engines must match work counters too; the
+        // lock-free engine's counters are scheduling-dependent either
+        // way, so only its value is pinned.
+        if seq.name() != "lockfree-hong" {
+            assert_eq!(got, want, "{} stats", seq.name());
+        }
+        assert_max_flow(&g2, got.value).unwrap();
+    }
+
+    // The ARG ablation with a pooled striped BFS stays correct too.
+    let mut g = base.clone();
+    let stats = maxflow::lockfree::LockFree::with_arg(3)
+        .with_relabel_pool(pool)
+        .solve(&mut g)
+        .unwrap();
+    let mut g0 = base.clone();
+    let want = maxflow::dinic::Dinic.solve(&mut g0).unwrap();
+    assert_eq!(stats.value, want.value, "arg+pool value");
+    assert_max_flow(&g, stats.value).unwrap();
+}
+
+#[test]
 fn prop_global_relabel_heights_are_valid_distances() {
     forall(
         Config::cases(40).seed(0xF14).named("global relabel validity"),

@@ -4,13 +4,17 @@
 //! trajectory, identical surviving active set, across thread counts and
 //! tile sizes, on seeded random grids.
 
+use std::sync::Arc;
+
 use flowmatch::gridflow::wave::{active_cells, native_wave_with, WaveScratch};
 use flowmatch::gridflow::{
-    host, init_state, par_wave_with, HybridGridSolver, NativeGridExecutor, NativeParGridExecutor,
-    ParWaveScratch,
+    host, init_state, par_wave_pooled, par_wave_with, HostRounds, HybridGridSolver,
+    NativeGridExecutor, NativeParGridExecutor, ParWaveScratch,
 };
 use flowmatch::maxflow::{self, MaxFlowSolver};
+use flowmatch::parallel::Lanes;
 use flowmatch::runtime::device::GridWireState;
+use flowmatch::service::WorkerPool;
 use flowmatch::util::Rng;
 use flowmatch::workloads::random_grid;
 
@@ -96,6 +100,120 @@ fn full_solver_reports_identical() {
             assert_eq!(got.host_rounds, want.host_rounds, "{ctx}: host rounds");
             assert_eq!(got.gap_cells, want.gap_cells, "{ctx}: gap cells");
             assert_eq!(got.cancelled_arcs, want.cancelled_arcs, "{ctx}: cancels");
+        }
+    }
+}
+
+/// The parity-coloured border reconciliation against the sequential
+/// oracle on tall skinny grids with `tile_rows = 1` — every N/S push is
+/// a cross-tile op, so the reconcile pass carries the whole trajectory.
+/// Pinned wave-by-wave (state + stats + active sets), pooled and
+/// unpooled, which is exactly the contract the retired serial apply
+/// loop satisfied.
+#[test]
+fn parity_border_reconcile_bit_exact_on_tall_grids() {
+    let pool = Arc::new(WorkerPool::new(3));
+    for (seed, h, w) in [(41u64, 24usize, 2usize), (42, 31, 1), (43, 17, 3)] {
+        let mut rng = Rng::seeded(seed);
+        let net = random_grid(&mut rng, h, w, 9, 0.35, 0.35);
+        let (st0, _) = init_state(&net);
+        for pooled in [false, true] {
+            let mut seq = st0.clone();
+            let mut par = st0.clone();
+            host::global_relabel(&mut seq);
+            host::global_relabel(&mut par);
+            let mut ss = WaveScratch::default();
+            let mut ps = ParWaveScratch::new(1);
+            let ctx = format!("seed={seed} {h}x{w} pooled={pooled}");
+            for wave in 0..800 {
+                if active_cells(&seq) == 0 {
+                    break;
+                }
+                let a = native_wave_with(&mut seq, &mut ss);
+                let b = if pooled {
+                    par_wave_pooled(&mut par, &mut ps, &pool)
+                } else {
+                    par_wave_with(&mut par, &mut ps, 4)
+                };
+                assert_eq!(a, b, "{ctx}: stats at wave {wave}");
+                assert_states_eq(&seq, &par, &format!("{ctx} wave {wave}"));
+                assert_eq!(ss.active_count(), ps.active_count(), "{ctx} wave {wave}");
+            }
+            assert_eq!(active_cells(&par), 0, "{ctx}: drained");
+        }
+    }
+}
+
+/// Striped host rounds through the full solver: every report counter
+/// must equal the sequential-host-round run — with no pool (sequential
+/// lanes), with the executor's own pool, and mixed across engines.
+#[test]
+fn striped_host_rounds_full_solver_bit_exact() {
+    let pool = Arc::new(WorkerPool::new(3));
+    for (seed, h, w, cap) in grid_cases() {
+        let mut rng = Rng::seeded(seed);
+        let net = random_grid(&mut rng, h, w, cap, 0.3, 0.3);
+        let solver_seq = HybridGridSolver::with_cycle(64);
+        let solver_str = HybridGridSolver::with_cycle(64).with_host_rounds(HostRounds::Striped);
+        let mut seq_exec = NativeGridExecutor::default();
+        let want = solver_seq.solve(&net, &mut seq_exec).unwrap();
+
+        // Striped on the sequential executor: Lanes::Seq fallback.
+        let mut exec = NativeGridExecutor::default();
+        let got = solver_str.solve(&net, &mut exec).unwrap();
+        let ctx = format!("seed={seed} {h}x{w} native+striped");
+        assert_eq!(got.flow, want.flow, "{ctx}");
+        assert_eq!(got.waves, want.waves, "{ctx}");
+        assert_eq!(got.gap_cells, want.gap_cells, "{ctx}");
+        assert_eq!(got.cancelled_arcs, want.cancelled_arcs, "{ctx}");
+
+        // Striped on the pooled tiled executor: host rounds actually
+        // fan out on the pool.
+        let mut exec = NativeParGridExecutor::new(2, 3).with_pool(Arc::clone(&pool));
+        let got = solver_str.solve(&net, &mut exec).unwrap();
+        let ctx = format!("seed={seed} {h}x{w} native-par-pooled+striped");
+        assert_eq!(got.flow, want.flow, "{ctx}");
+        assert_eq!(got.waves, want.waves, "{ctx}");
+        assert_eq!(got.pushes, want.pushes, "{ctx}");
+        assert_eq!(got.relabels, want.relabels, "{ctx}");
+        assert_eq!(got.host_rounds, want.host_rounds, "{ctx}");
+        assert_eq!(got.gap_cells, want.gap_cells, "{ctx}");
+        assert_eq!(got.cancelled_arcs, want.cancelled_arcs, "{ctx}");
+    }
+}
+
+/// The striped host passes against mid-solve states reached by real
+/// waves (not just synthetic states): run waves, then compare one
+/// striped round against one sequential round on clones.
+#[test]
+fn striped_host_round_matches_on_wave_reached_states() {
+    let pool = Arc::new(WorkerPool::new(2));
+    let lanes = Lanes::Pool(&pool);
+    for (seed, h, w, cap) in grid_cases() {
+        let mut rng = Rng::seeded(seed ^ 0xA5);
+        let net = random_grid(&mut rng, h, w, cap, 0.3, 0.3);
+        let (mut st, _) = init_state(&net);
+        host::global_relabel(&mut st);
+        let mut ws = WaveScratch::default();
+        for burst in 0..4 {
+            for _ in 0..12 {
+                if active_cells(&st) == 0 {
+                    break;
+                }
+                native_wave_with(&mut st, &mut ws);
+            }
+            let mut seq = st.clone();
+            let mut par = st.clone();
+            let mut ss = host::HostScratch::for_state(&seq);
+            let mut ps = host::HostScratch::for_state(&par);
+            let a = host::host_round_with(&mut seq, &mut ss);
+            let b = host::host_round_par(&mut par, &mut ps, &lanes);
+            let ctx = format!("seed={seed} {h}x{w} burst={burst}");
+            assert_eq!(a, b, "{ctx}: stats");
+            assert_states_eq(&seq, &par, &ctx);
+            // Continue from the (identical) post-round state.
+            st = seq;
+            ws = WaveScratch::default();
         }
     }
 }
