@@ -56,6 +56,7 @@ fn main() -> anyhow::Result<()> {
         grid_arrival_gap: 0.3,
         large_every: 4,
         large_size: 96,
+        deadline: 0.0,
     };
     let mut rng = Rng::seeded(2026);
     let trace = MixedTrace::generate(&mut rng, &cfg);

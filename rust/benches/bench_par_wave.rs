@@ -40,7 +40,7 @@ fn run_par(st0: &GridWireState, waves: usize, threads: usize, tile_rows: usize) 
     let mut scratch = ParWaveScratch::new(tile_rows);
     let mut pushes = 0;
     for _ in 0..waves {
-        pushes += par_wave_with(&mut st, &mut scratch, threads).pushes;
+        pushes += par_wave_with(&mut st, &mut scratch, threads).unwrap().pushes;
     }
     pushes
 }

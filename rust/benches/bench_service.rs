@@ -94,6 +94,9 @@ fn row(table: &mut Table, trace: &str, path: &str, workers: i64, out: &ReplayOut
             None => Cell::Missing,
         },
         Cell::Float(out.throughput_rps),
+        Cell::Int(out.retries as i64),
+        Cell::Int(out.deadline_misses as i64),
+        Cell::Int(out.lost as i64),
     ]);
 }
 
@@ -137,6 +140,9 @@ fn main() {
             "assign p99 ms",
             "assign max ms",
             "throughput rps",
+            "retries",
+            "deadline miss",
+            "lost",
         ],
     );
 

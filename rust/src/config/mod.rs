@@ -132,7 +132,9 @@ pub fn preset(name: &str) -> Result<Config> {
              assign_large = \"csa-lockfree\"\ngrid_small = \"native\"\n\
              grid_medium = \"native-par\"\ngrid_large = \"native-par\"\n\
              cycle = 1024\nthreads = 4\ntile_rows = 16\nalpha = 10\n\
-             routing = \"static\"\nprobe_every = 8\nspill_depth = 8\n"
+             routing = \"static\"\nprobe_every = 8\nspill_depth = 8\n\
+             max_retries = 2\nretry_backoff_ms = 2\n\
+             breaker_threshold = 3\nbreaker_cooldown = 8\n"
         }
         // Small smoke setting for CI.
         "smoke" => {
@@ -143,7 +145,9 @@ pub fn preset(name: &str) -> Result<Config> {
              [service]\nworkers = 2\nqueue_depth = 16\nsmall_units = 512\n\
              medium_units = 4096\nmax_units = 65536\nuse_pjrt = false\n\
              cycle = 128\nthreads = 2\ntile_rows = 4\n\
-             routing = \"static\"\nprobe_every = 4\nspill_depth = 4\n"
+             routing = \"static\"\nprobe_every = 4\nspill_depth = 4\n\
+             max_retries = 1\nretry_backoff_ms = 1\n\
+             breaker_threshold = 2\nbreaker_cooldown = 4\n"
         }
         other => bail!("unknown preset {other:?} (try: paper, smoke)"),
     };

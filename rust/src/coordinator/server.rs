@@ -18,8 +18,8 @@ use anyhow::Result;
 
 use crate::graph::AssignmentInstance;
 use crate::service::{
-    AssignBackend, PoolConfig, ProblemInstance, RouterConfig, ShardConfig, SolveOutcome,
-    SolveReply, SolverPool,
+    AssignBackend, PoolConfig, ProblemInstance, ReplyError, RouterConfig, ShardConfig,
+    SolveOutcome, SolveReply, SolverPool,
 };
 
 /// Service configuration (legacy shape).
@@ -72,17 +72,28 @@ pub struct ServiceReport {
     /// telemetry (the legacy `backend` field keeps the old pjrt/native
     /// dichotomy).
     pub backends: Vec<(&'static str, usize)>,
+    /// Retry attempts the pool made across all requests.
+    pub retries: u64,
+    /// Circuit breakers not closed at shutdown.
+    pub breakers_open: usize,
 }
 
 /// Receiver for one reply; adapts the pool's [`SolveReply`] to the
 /// legacy [`ServiceReply`] at `recv` time.
 pub struct ReplyReceiver {
-    rx: mpsc::Receiver<Result<SolveReply, String>>,
+    rx: mpsc::Receiver<Result<SolveReply, ReplyError>>,
 }
 
 impl ReplyReceiver {
     pub fn recv(&self) -> Result<Result<ServiceReply, String>, mpsc::RecvError> {
-        Ok(self.rx.recv()?.and_then(convert_reply))
+        // The legacy API reports errors as strings; the typed
+        // `ReplyError` renders the same "too large" / "queue full"
+        // messages old callers match on.
+        Ok(self
+            .rx
+            .recv()?
+            .map_err(|e| e.to_string())
+            .and_then(convert_reply))
     }
 }
 
@@ -166,6 +177,8 @@ impl AssignmentService {
             mean_latency: s.as_ref().map_or(0.0, |s| s.mean),
             throughput_rps: report.throughput_rps,
             backend,
+            retries: report.retries,
+            breakers_open: report.breakers_open(),
             backends: report.backends,
         })
     }

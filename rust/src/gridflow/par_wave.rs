@@ -221,28 +221,41 @@ fn apply_tile(job: TileJob<'_>, ww: usize) {
 
 /// Execute one batch of per-worker jobs: on the persistent pool when
 /// one is lent, otherwise on freshly scoped threads (the original
-/// engine shape, still used when no pool exists).
-fn run_workers<'env>(pool: Option<&WorkerPool>, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+/// engine shape, still used when no pool exists).  Returns how many
+/// jobs panicked — the wave propagates that as a solver error instead
+/// of unwinding the caller (a panicked tile job must not take a
+/// request worker down with it).
+fn run_workers<'env>(pool: Option<&WorkerPool>, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) -> usize {
     match pool {
-        Some(p) => p.scope_run(jobs),
+        Some(p) => p.try_run_batch(jobs),
         None => {
+            let panicked = std::sync::atomic::AtomicUsize::new(0);
+            let panicked_ref = &panicked;
             std::thread::scope(|s| {
                 for job in jobs {
-                    s.spawn(job);
+                    s.spawn(move || {
+                        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
+                            panicked_ref.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    });
                 }
             });
+            panicked.load(std::sync::atomic::Ordering::Relaxed)
         }
     }
 }
 
 /// One synchronous wave executed by `threads` workers over row-stripe
 /// tiles; bit-exact with [`super::wave::native_wave_with`] (same stats,
-/// same state trajectory, same surviving active set).
+/// same state trajectory, same surviving active set).  `Err` means a
+/// tile job panicked and the state may be torn — the caller must
+/// discard this solve (the hybrid solver rebuilds from `init_state`
+/// on the next attempt).
 pub fn par_wave_with(
     st: &mut GridWireState,
     scratch: &mut ParWaveScratch,
     threads: usize,
-) -> WaveStats {
+) -> Result<WaveStats> {
     par_wave_exec(st, scratch, threads, None)
 }
 
@@ -255,7 +268,7 @@ pub fn par_wave_pooled(
     st: &mut GridWireState,
     scratch: &mut ParWaveScratch,
     pool: &WorkerPool,
-) -> WaveStats {
+) -> Result<WaveStats> {
     par_wave_exec(st, scratch, pool.threads(), Some(pool))
 }
 
@@ -264,7 +277,7 @@ fn par_wave_exec(
     scratch: &mut ParWaveScratch,
     threads: usize,
     pool: Option<&WorkerPool>,
-) -> WaveStats {
+) -> Result<WaveStats> {
     let (hh, ww) = (st.height, st.width);
     let cells = hh * ww;
     if scratch.built_for != Some((hh, ww)) {
@@ -300,7 +313,8 @@ fn par_wave_exec(
                 }
             }));
         }
-        run_workers(pool, jobs);
+        let panicked = run_workers(pool, jobs);
+        anyhow::ensure!(panicked == 0, "{panicked} decision job(s) panicked");
     }
 
     // --- Phase 2: apply, parallel with owned interiors ------------------
@@ -352,7 +366,8 @@ fn par_wave_exec(
                 }
             }));
         }
-        run_workers(pool, jobs);
+        let panicked = run_workers(pool, jobs);
+        anyhow::ensure!(panicked == 0, "{panicked} apply job(s) panicked");
     }
 
     // --- Phase 3: parity-coloured border reconciliation -----------------
@@ -442,8 +457,14 @@ fn par_wave_exec(
             // run the owner jobs inline (owner-disjoint, so execution
             // order is irrelevant).
             match pool {
-                Some(p) => p.scope_run(jobs),
+                Some(p) => {
+                    let panicked = p.try_run_batch(jobs);
+                    anyhow::ensure!(panicked == 0, "{panicked} reconcile job(s) panicked");
+                }
                 None => {
+                    // Inline on the caller's thread: a panic here
+                    // unwinds into the per-attempt catch in the service
+                    // router, not into a shared worker.
                     for job in jobs {
                         job();
                     }
@@ -473,7 +494,7 @@ fn par_wave_exec(
         }
         tile.active.truncate(w);
     }
-    stats
+    Ok(stats)
 }
 
 /// Multi-threaded tiled executor: a drop-in [`GridExecutor`] whose
@@ -573,7 +594,13 @@ impl GridExecutor for NativeParGridExecutor {
             let w = match &self.pool {
                 Some(pool) => par_wave_pooled(st, &mut self.scratch, pool),
                 None => par_wave_with(st, &mut self.scratch, self.threads),
-            };
+            }
+            .map_err(|e| {
+                // A torn wave leaves the scratch unusable; make sure the
+                // next solve on this cached executor rebuilds.
+                self.needs_rebuild = true;
+                e
+            })?;
             stats.sink_flow += w.sink_flow;
             stats.src_flow += w.src_flow;
             stats.pushes += w.pushes;
@@ -618,7 +645,7 @@ mod tests {
                 break;
             }
             let a = native_wave_with(&mut seq, &mut ss);
-            let b = par_wave_with(&mut par, &mut ps, 2);
+            let b = par_wave_with(&mut par, &mut ps, 2).unwrap();
             assert_eq!(a, b);
             assert_eq!(seq.h, par.h);
             assert_eq!(seq.e, par.e);
@@ -650,7 +677,7 @@ mod tests {
                 break;
             }
             let a = native_wave_with(&mut seq, &mut ss);
-            let b = par_wave_with(&mut par, &mut ps, 3);
+            let b = par_wave_with(&mut par, &mut ps, 3).unwrap();
             assert_eq!(a, b);
             assert_eq!(seq.e, par.e);
             assert_eq!(seq.h, par.h);

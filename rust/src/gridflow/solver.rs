@@ -10,6 +10,7 @@ use crate::graph::GridNetwork;
 use crate::parallel::Lanes;
 use crate::runtime::device::{GridStepStats, GridWireState};
 use crate::service::pool::WorkerPool;
+use crate::util::CancelToken;
 
 use super::host;
 use super::state::init_state;
@@ -180,6 +181,10 @@ pub struct HybridGridSolver {
     /// callers parallelise host rounds behind executors that have no
     /// worker threads of their own (sequential native, PJRT).
     pub host_pool: Option<Arc<WorkerPool>>,
+    /// Cooperative cancellation (deadline / caller gave up), polled at
+    /// host-round boundaries.  A cancelled solve returns the typed
+    /// [`crate::util::Cancelled`] error.
+    pub cancel: Option<CancelToken>,
 }
 
 impl Default for HybridGridSolver {
@@ -190,6 +195,7 @@ impl Default for HybridGridSolver {
             max_rounds: 100_000,
             host_rounds: HostRounds::Seq,
             host_pool: None,
+            cancel: None,
         }
     }
 }
@@ -217,6 +223,11 @@ impl HybridGridSolver {
 
     pub fn with_host_pool(mut self, pool: Arc<WorkerPool>) -> Self {
         self.host_pool = Some(pool);
+        self
+    }
+
+    pub fn with_cancel(mut self, token: CancelToken) -> Self {
+        self.cancel = Some(token);
         self
     }
 
@@ -249,6 +260,9 @@ impl HybridGridSolver {
 
         // Exact initial heights (the hybrid scheme begins with a global
         // relabel — same as copying h to the device in Algorithm 4.6).
+        if let Some(c) = &self.cancel {
+            c.check()?;
+        }
         if self.heuristics {
             let t = crate::util::Timer::start();
             let out = if striped {
@@ -265,6 +279,11 @@ impl HybridGridSolver {
         let mut src_total = 0i64;
 
         loop {
+            // Host-round boundary: the cheapest safe point to give up —
+            // the state is consistent and no device step is in flight.
+            if let Some(c) = &self.cancel {
+                c.check()?;
+            }
             let t = crate::util::Timer::start();
             let stats = exec.superstep(&mut st, outer as i32)?;
             report.device_seconds += t.elapsed();
@@ -378,6 +397,19 @@ mod tests {
         let mut g = net.to_flow_network();
         let want = maxflow::dinic::Dinic.solve(&mut g).unwrap();
         assert_eq!(report.flow, want.value);
+    }
+
+    #[test]
+    fn cancelled_token_aborts_solve_with_typed_error() {
+        let net = demo_net();
+        let mut exec = NativeGridExecutor::default();
+        let token = CancelToken::new();
+        token.cancel();
+        let err = HybridGridSolver::with_cycle(32)
+            .with_cancel(token)
+            .solve(&net, &mut exec)
+            .unwrap_err();
+        assert!(crate::util::Cancelled::caused(&err), "{err:#}");
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! flowmatch artifacts
 //! ```
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use flowmatch::assignment::{self, AssignmentSolver};
 use flowmatch::cli::Args;
@@ -69,7 +69,9 @@ const USAGE: &str = "flowmatch <info|maxflow|assign|segment|optflow|serve|solver
             [--workers W] [--requests R] [--grid-requests G] [--n N] [--grid S]
             [--large-grid S] [--fps F] [--queue-depth D] [--max-units U] [--seed S]
             [--routing static|adaptive] [--probe-every N] [--spill-depth D]
-            [--host-rounds seq|striped] [--native] [--preset paper|smoke] [--baseline (loadgen)]";
+            [--host-rounds seq|striped] [--native] [--preset paper|smoke] [--baseline (loadgen)]
+            [--max-retries N] [--deadline-ms MS] [--chaos SEED (loadgen; seeded fault injection,
+            asserts zero lost replies)]";
 
 fn cmd_info() -> Result<()> {
     println!("flowmatch — parallel flow and matching algorithms (Łupińska 2011 reproduction)");
@@ -433,6 +435,9 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
         "probe-every",
         "spill-depth",
         "host-rounds",
+        "max-retries",
+        "deadline-ms",
+        "chaos",
     ])?;
     let action = args
         .positional
@@ -464,6 +469,24 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
     if args.flag("native") {
         pool_cfg.router.use_pjrt = false;
     }
+    pool_cfg.router.max_retries = args.get_usize("max-retries", pool_cfg.router.max_retries)?;
+    // Chaos mode: wrap one backend in a seeded deterministic fault plan
+    // (periodic panics + injected failures, never corrupted answers) so
+    // the retry/breaker machinery is exercised end to end.
+    let chaos = args.get("chaos").is_some();
+    if chaos {
+        if action != "loadgen" {
+            bail!("--chaos is a loadgen option (open-loop serve timing would mask faults)");
+        }
+        let chaos_seed = args.get_u64("chaos", 0)?;
+        let plan = flowmatch::service::FaultPlan::chaos(chaos_seed);
+        println!(
+            "chaos: seed {chaos_seed} -> {} panics every {} solves, fails every {}",
+            plan.target, plan.panic_every, plan.fail_every
+        );
+        pool_cfg.router.fault = Some(plan);
+    }
+    let deadline_ms = args.get_f64("deadline-ms", 0.0)?;
 
     let requests = args.get_usize("requests", 40)?;
     let grid_requests = args.get_usize("grid-requests", 8)?;
@@ -491,6 +514,7 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
         grid_size: grid,
         large_size: large_grid,
         grid_arrival_gap: if open_loop { 3.0 * gap } else { 0.0 },
+        deadline: deadline_ms / 1000.0,
         ..Default::default()
     };
     let mut rng = Rng::seeded(seed);
@@ -545,6 +569,31 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
             report.spilled
         );
     }
+    // Fault-tolerance counters: printed whenever anything non-trivial
+    // happened, so a clean run stays a clean report.
+    if out.retries > 0
+        || out.breaker_skips > 0
+        || out.deadline_misses > 0
+        || out.lost > 0
+        || report.failed > 0
+        || report.respawns > 0
+    {
+        println!(
+            "  faults : retries={} breaker_skips={} deadline_miss={} lost={} failed={} respawns={}",
+            out.retries, out.breaker_skips, out.deadline_misses, out.lost, report.failed, report.respawns
+        );
+    }
+    for b in report.breakers.iter().filter(|b| b.state != "closed") {
+        println!(
+            "  breaker: {}/{} {} is {} (streak {}, opened {}x)",
+            b.family.name(),
+            b.class.name(),
+            b.backend,
+            b.state,
+            b.consecutive_failures,
+            b.opened_total
+        );
+    }
     // Routing telemetry: one line per (family, class) with each
     // backend's route count and latency EWMA.
     for family in flowmatch::service::Family::ALL {
@@ -593,6 +642,24 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
                 base.wall_seconds / out.wall_seconds
             );
         }
+    }
+    if chaos {
+        // The whole point of chaos mode: injected faults may slow
+        // requests down but must never lose one, and the retry path
+        // must actually fire.  CI runs this as a self-asserting smoke.
+        ensure!(
+            out.lost == 0,
+            "chaos run lost {} repl(ies) — every request must get exactly one reply",
+            out.lost
+        );
+        ensure!(
+            out.retries >= 1,
+            "chaos run never retried — the fault plan failed to inject"
+        );
+        println!(
+            "chaos: OK — {} retries, 0 lost replies across {} requests",
+            out.retries, out.sent
+        );
     }
     Ok(())
 }

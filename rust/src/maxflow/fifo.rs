@@ -9,6 +9,7 @@ use anyhow::Result;
 
 use crate::graph::csr::FlowNetwork;
 use crate::service::pool::WorkerPool;
+use crate::util::CancelToken;
 
 use super::global_relabel::{global_relabel_auto, RelabelScratch};
 use super::{FlowStats, MaxFlowSolver};
@@ -23,6 +24,9 @@ pub struct FifoPushRelabel {
     /// instances (`None` = always the sequential BFS; results are
     /// identical either way).
     pub relabel_pool: Option<Arc<WorkerPool>>,
+    /// Cooperative cancellation, polled at the global-relabel entry
+    /// points (the engine's natural round boundaries).
+    pub cancel: Option<CancelToken>,
 }
 
 impl Default for FifoPushRelabel {
@@ -30,6 +34,7 @@ impl Default for FifoPushRelabel {
         Self {
             global_relabel_freq: Some(1.0),
             relabel_pool: None,
+            cancel: None,
         }
     }
 }
@@ -38,12 +43,17 @@ impl FifoPushRelabel {
     pub fn generic() -> Self {
         Self {
             global_relabel_freq: None,
-            relabel_pool: None,
+            ..Self::default()
         }
     }
 
     pub fn with_relabel_pool(mut self, pool: Arc<WorkerPool>) -> Self {
         self.relabel_pool = Some(pool);
+        self
+    }
+
+    pub fn with_cancel(mut self, token: CancelToken) -> Self {
+        self.cancel = Some(token);
         self
     }
 }
@@ -86,6 +96,9 @@ impl MaxFlowSolver for FifoPushRelabel {
             }
         }
         let mut rscratch = RelabelScratch::default();
+        if let Some(c) = &self.cancel {
+            c.check()?;
+        }
         if let Some(freq) = self.global_relabel_freq {
             // Initial exact heights help as much as the periodic ones.
             let out = global_relabel_auto(g, &mut h, self.relabel_pool.as_deref(), &mut rscratch);
@@ -122,6 +135,9 @@ impl MaxFlowSolver for FifoPushRelabel {
                     relabels_since_global += 1;
                     if let Some(freq) = self.global_relabel_freq {
                         if relabels_since_global >= relabel_budget(freq) {
+                            if let Some(c) = &self.cancel {
+                                c.check()?;
+                            }
                             let out = global_relabel_auto(
                                 g,
                                 &mut h,

@@ -9,6 +9,7 @@ use anyhow::Result;
 
 use crate::graph::csr::FlowNetwork;
 use crate::service::pool::WorkerPool;
+use crate::util::CancelToken;
 
 use super::global_relabel::{global_relabel_auto, RelabelScratch};
 use super::{FlowStats, MaxFlowSolver};
@@ -22,6 +23,9 @@ pub struct HighestLabel {
     pub gap: bool,
     /// Worker pool for the striped global relabel on large instances.
     pub relabel_pool: Option<Arc<WorkerPool>>,
+    /// Cooperative cancellation, polled at the global-relabel entry
+    /// points.
+    pub cancel: Option<CancelToken>,
 }
 
 impl Default for HighestLabel {
@@ -30,6 +34,7 @@ impl Default for HighestLabel {
             global_relabel_freq: Some(1.0),
             gap: true,
             relabel_pool: None,
+            cancel: None,
         }
     }
 }
@@ -44,6 +49,11 @@ impl HighestLabel {
 
     pub fn with_relabel_pool(mut self, pool: Arc<WorkerPool>) -> Self {
         self.relabel_pool = Some(pool);
+        self
+    }
+
+    pub fn with_cancel(mut self, token: CancelToken) -> Self {
+        self.cancel = Some(token);
         self
     }
 }
@@ -121,6 +131,9 @@ impl MaxFlowSolver for HighestLabel {
             }
         }
         let mut rscratch = RelabelScratch::default();
+        if let Some(c) = &self.cancel {
+            c.check()?;
+        }
         if self.global_relabel_freq.is_some() {
             let out = global_relabel_auto(g, &mut h, self.relabel_pool.as_deref(), &mut rscratch);
             stats.global_relabels += 1;
@@ -190,6 +203,9 @@ impl MaxFlowSolver for HighestLabel {
                     }
                     if let Some(b) = budget {
                         if relabels_since_global >= b {
+                            if let Some(c) = &self.cancel {
+                                c.check()?;
+                            }
                             let out = global_relabel_auto(
                                 g,
                                 &mut h,

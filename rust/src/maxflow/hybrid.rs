@@ -14,6 +14,7 @@ use anyhow::Result;
 
 use crate::graph::csr::FlowNetwork;
 use crate::service::pool::WorkerPool;
+use crate::util::CancelToken;
 
 use super::global_relabel::{cancel_violations, global_relabel_auto, RelabelScratch};
 use super::{FlowStats, MaxFlowSolver};
@@ -28,6 +29,8 @@ pub struct Hybrid {
     /// instances (the general-graph twin of the grid solver's striped
     /// host rounds).
     pub relabel_pool: Option<Arc<WorkerPool>>,
+    /// Cooperative cancellation, polled once per host round.
+    pub cancel: Option<CancelToken>,
 }
 
 impl Default for Hybrid {
@@ -36,6 +39,7 @@ impl Default for Hybrid {
             cycle: 7000,
             heuristics: true,
             relabel_pool: None,
+            cancel: None,
         }
     }
 }
@@ -58,6 +62,11 @@ impl Hybrid {
 
     pub fn with_relabel_pool(mut self, pool: Arc<WorkerPool>) -> Self {
         self.relabel_pool = Some(pool);
+        self
+    }
+
+    pub fn with_cancel(mut self, token: CancelToken) -> Self {
+        self.cancel = Some(token);
         self
     }
 }
@@ -95,6 +104,11 @@ impl MaxFlowSolver for Hybrid {
         let mut rscratch = RelabelScratch::default();
         let height_cap = 4 * n as i64;
         while excess[s] + excess[t] < excess_total {
+            // Host-round boundary: the same safe give-up point as the
+            // grid solver's.
+            if let Some(c) = &self.cancel {
+                c.check()?;
+            }
             // "Device" phase: CYCLE Hong operations, round-robin.
             let mut ops = 0u64;
             let mut progress = true;

@@ -57,6 +57,7 @@ use anyhow::Result;
 use crate::graph::csr::FlowNetwork;
 use crate::parallel::{deal, Lanes, Stripes, StripedFrontier};
 use crate::service::pool::WorkerPool;
+use crate::util::{CancelToken, Cancelled};
 
 use super::{FlowStats, MaxFlowSolver};
 
@@ -76,6 +77,10 @@ pub struct LockFree {
     /// BFS runs on the striped frontier substrate either way (`None` =
     /// sequential lanes).
     pub relabel_pool: Option<Arc<WorkerPool>>,
+    /// Cooperative cancellation, polled by every worker once per sweep:
+    /// a cancelled solve joins its threads and returns the typed
+    /// [`Cancelled`] error instead of a flow.
+    pub cancel: Option<CancelToken>,
 }
 
 impl Default for LockFree {
@@ -84,6 +89,7 @@ impl Default for LockFree {
             threads: 2,
             arg: false,
             relabel_pool: None,
+            cancel: None,
         }
     }
 }
@@ -106,6 +112,11 @@ impl LockFree {
 
     pub fn with_relabel_pool(mut self, pool: Arc<WorkerPool>) -> Self {
         self.relabel_pool = Some(pool);
+        self
+    }
+
+    pub fn with_cancel(mut self, token: CancelToken) -> Self {
+        self.cancel = Some(token);
         self
     }
 }
@@ -354,6 +365,8 @@ impl MaxFlowSolver for LockFree {
         };
 
         let workers = self.threads.max(1);
+        let cancel = self.cancel.as_ref();
+        let was_cancelled = AtomicBool::new(false);
         std::thread::scope(|scope| {
             if self.arg {
                 // The distinguished ARG thread (§4.5) runs BFS passes
@@ -383,6 +396,7 @@ impl MaxFlowSolver for LockFree {
             }
             for w in 0..workers {
                 let shared = &shared;
+                let was_cancelled = &was_cancelled;
                 scope.spawn(move || {
                     // Round-robin over this worker's node stripe.
                     let mine: Vec<usize> = (0..n)
@@ -391,6 +405,13 @@ impl MaxFlowSolver for LockFree {
                     let mut idle_sweeps = 0u32;
                     loop {
                         if shared.done.load(Ordering::Acquire) {
+                            break;
+                        }
+                        // Once per sweep: cheap relative to the node
+                        // scan, prompt enough for deadline enforcement.
+                        if cancel.is_some_and(|c| c.is_cancelled()) {
+                            was_cancelled.store(true, Ordering::Release);
+                            shared.done.store(true, Ordering::Release);
                             break;
                         }
                         let mut did_work = false;
@@ -422,6 +443,12 @@ impl MaxFlowSolver for LockFree {
                 });
             }
         });
+
+        // A cancelled solve stops with flow still in transit: report the
+        // typed error and leave the caller's network untouched.
+        if was_cancelled.load(Ordering::Acquire) {
+            return Err(anyhow::Error::new(Cancelled));
+        }
 
         // Write the state back into the network.  `thread::scope` has
         // joined every worker, which synchronises-with all their writes,
@@ -526,6 +553,18 @@ mod tests {
                 assert_max_flow(&g, stats.value).unwrap();
             }
         }
+    }
+
+    #[test]
+    fn cancelled_solve_returns_typed_error() {
+        let mut g = crate::maxflow::tests::clrs();
+        let token = CancelToken::new();
+        token.cancel();
+        let err = LockFree::with_threads(2)
+            .with_cancel(token)
+            .solve(&mut g)
+            .unwrap_err();
+        assert!(Cancelled::caused(&err), "{err:#}");
     }
 
     #[test]

@@ -103,14 +103,18 @@ mod tests {
     }
 
     #[test]
-    fn every_engine_solves_clrs() {
+    fn every_engine_solves_clrs() -> Result<()> {
+        use anyhow::Context;
         for engine in all_engines() {
             let mut g = clrs();
-            let stats = engine.solve(&mut g).unwrap();
+            let stats = engine
+                .solve(&mut g)
+                .with_context(|| format!("{} solve", engine.name()))?;
             assert_eq!(stats.value, 23, "{} value", engine.name());
             crate::graph::validate::assert_max_flow(&g, 23)
-                .unwrap_or_else(|e| panic!("{}: {e}", engine.name()));
+                .with_context(|| format!("{} certificate", engine.name()))?;
         }
+        Ok(())
     }
 
     #[test]

@@ -85,6 +85,58 @@ pub struct RouteStat {
     pub ewma_seconds: Option<f64>,
 }
 
+/// Circuit-breaker lifecycle for one (family, class, backend) triple.
+///
+/// `Closed` → (threshold consecutive failures) → `Open` → (cooldown
+/// *completed requests* for the pair, not wall clock, so tests are
+/// deterministic) → `HalfOpen` → one probe decides: success re-closes,
+/// failure re-opens with a fresh cooldown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BreakerState {
+    Closed,
+    /// Routed around until `remaining` completed requests pass.
+    Open { remaining: usize },
+    /// The next attempt is the probe.
+    HalfOpen,
+}
+
+#[derive(Debug, Clone)]
+struct BreakerEntry {
+    consecutive_failures: usize,
+    state: BreakerState,
+    opened_total: u64,
+}
+
+impl Default for BreakerEntry {
+    fn default() -> Self {
+        Self {
+            consecutive_failures: 0,
+            state: BreakerState::Closed,
+            opened_total: 0,
+        }
+    }
+}
+
+/// One row of the breaker health snapshot surfaced in
+/// `PoolReport::breakers` and the CLI.
+#[derive(Debug, Clone)]
+pub struct BreakerStat {
+    pub family: Family,
+    pub class: SizeClass,
+    pub backend: &'static str,
+    /// "closed" / "open" / "half-open".
+    pub state: &'static str,
+    pub consecutive_failures: usize,
+    /// Times this breaker has tripped over the pool's lifetime.
+    pub opened_total: u64,
+}
+
+impl BreakerStat {
+    pub fn is_open(&self) -> bool {
+        self.state == "open"
+    }
+}
+
 #[derive(Default)]
 struct SinkState {
     /// Keyed by (family index, class index, backend name); BTreeMap so
@@ -93,21 +145,39 @@ struct SinkState {
     /// Decision counters per (family, class) — the probe clock.
     decisions: [[u64; 3]; 2],
     spills: u64,
+    /// Circuit breakers, same key shape as `routes`.  Entries only
+    /// exist for backends that have failed at least once.
+    breakers: BTreeMap<(usize, usize, &'static str), BreakerEntry>,
 }
 
 /// The shared measurement sink: one per [`SolverPool`](super::SolverPool),
 /// written by every worker after every solve.
 pub struct TelemetrySink {
     probe_every: u64,
+    /// Consecutive failures that trip a breaker (0 disables breakers).
+    breaker_threshold: usize,
+    /// Completed requests an open breaker waits before half-open.
+    breaker_cooldown: usize,
     state: Mutex<SinkState>,
 }
 
 impl TelemetrySink {
     /// `probe_every = N` probes one decision in `N` (ε = 1/N); 0
     /// disables probing entirely (cold-start measurement still runs).
+    /// Breakers use the [`RouterConfig`](super::RouterConfig) defaults;
+    /// [`TelemetrySink::with_breaker`] sets them explicitly.
     pub fn new(probe_every: usize) -> Self {
+        Self::with_breaker(probe_every, 3, 8)
+    }
+
+    /// Full constructor: probe cadence plus the breaker trip threshold
+    /// (consecutive failures; 0 disables) and cooldown (completed
+    /// requests before an open breaker goes half-open).
+    pub fn with_breaker(probe_every: usize, threshold: usize, cooldown: usize) -> Self {
         Self {
             probe_every: probe_every as u64,
+            breaker_threshold: threshold,
+            breaker_cooldown: cooldown.max(1),
             state: Mutex::new(SinkState::default()),
         }
     }
@@ -125,6 +195,114 @@ impl TelemetrySink {
     /// Count one saturation spill (router decided it; see module doc).
     pub fn record_spill(&self) {
         self.state.lock().unwrap().spills += 1;
+    }
+
+    /// Whether the breaker for this triple admits traffic (`Closed` or
+    /// `HalfOpen`; an open breaker is routed around).
+    pub fn breaker_allows(&self, family: Family, class: SizeClass, backend: &'static str) -> bool {
+        let st = self.state.lock().unwrap();
+        match st.breakers.get(&(family.index(), class.index(), backend)) {
+            Some(e) => !matches!(e.state, BreakerState::Open { .. }),
+            None => true,
+        }
+    }
+
+    /// Record one failed (errored or panicked) attempt against the
+    /// breaker.  `threshold` consecutive failures trip it; a failed
+    /// half-open probe re-trips it immediately.
+    pub fn record_breaker_failure(&self, family: Family, class: SizeClass, backend: &'static str) {
+        let mut st = self.state.lock().unwrap();
+        let e = st
+            .breakers
+            .entry((family.index(), class.index(), backend))
+            .or_default();
+        e.consecutive_failures += 1;
+        if self.breaker_threshold == 0 {
+            return; // breakers disabled: count only
+        }
+        match e.state {
+            BreakerState::HalfOpen => {
+                // Failed probe: straight back to open, fresh cooldown.
+                e.state = BreakerState::Open {
+                    remaining: self.breaker_cooldown,
+                };
+                e.opened_total += 1;
+            }
+            BreakerState::Closed if e.consecutive_failures >= self.breaker_threshold => {
+                e.state = BreakerState::Open {
+                    remaining: self.breaker_cooldown,
+                };
+                e.opened_total += 1;
+            }
+            // An all-open fallback attempt failed while already open:
+            // restart the cooldown so the probe waits for fresh traffic.
+            BreakerState::Open { .. } => {
+                e.state = BreakerState::Open {
+                    remaining: self.breaker_cooldown,
+                };
+            }
+            BreakerState::Closed => {}
+        }
+    }
+
+    /// Record one successful attempt: closes the breaker (including a
+    /// successful half-open probe) and resets the failure streak.
+    pub fn record_breaker_success(&self, family: Family, class: SizeClass, backend: &'static str) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(e) = st
+            .breakers
+            .get_mut(&(family.index(), class.index(), backend))
+        {
+            e.consecutive_failures = 0;
+            e.state = BreakerState::Closed;
+        }
+    }
+
+    /// Advance the open-breaker cooldown clock for one (family, class)
+    /// pair: called once per *completed request* (success or failure),
+    /// so half-open probing is deterministic under test — no wall time.
+    pub fn request_completed(&self, family: Family, class: SizeClass) {
+        let mut st = self.state.lock().unwrap();
+        for ((f, c, _), e) in st.breakers.iter_mut() {
+            if *f != family.index() || *c != class.index() {
+                continue;
+            }
+            if let BreakerState::Open { remaining } = &mut e.state {
+                *remaining = remaining.saturating_sub(1);
+                if *remaining == 0 {
+                    e.state = BreakerState::HalfOpen;
+                }
+            }
+        }
+    }
+
+    /// Stable-ordered copy of every breaker row, for health reports.
+    pub fn breaker_snapshot(&self) -> Vec<BreakerStat> {
+        let st = self.state.lock().unwrap();
+        st.breakers
+            .iter()
+            .map(|(&(f, c, backend), e)| BreakerStat {
+                family: Family::ALL[f],
+                class: SizeClass::ALL[c],
+                backend,
+                state: match e.state {
+                    BreakerState::Closed => "closed",
+                    BreakerState::Open { .. } => "open",
+                    BreakerState::HalfOpen => "half-open",
+                },
+                consecutive_failures: e.consecutive_failures,
+                opened_total: e.opened_total,
+            })
+            .collect()
+    }
+
+    /// How many breakers are currently open.
+    pub fn breakers_open(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.breakers
+            .values()
+            .filter(|e| matches!(e.state, BreakerState::Open { .. }))
+            .count()
     }
 
     /// Pick a backend for a (family, class) request from `candidates`
@@ -260,6 +438,76 @@ mod tests {
         assert_eq!(sink.choose(Family::Grid, SizeClass::Large, &[A, B]), B);
         // Small never saw B: cold start takes it there.
         assert_eq!(sink.choose(Family::Grid, SizeClass::Small, &[A, B]), B);
+    }
+
+    /// The full breaker lifecycle: trip on consecutive failures, cool
+    /// down on *completed requests* (no wall clock), half-open probe,
+    /// close on success.
+    #[test]
+    fn breaker_trips_cools_down_and_recovers() {
+        let sink = TelemetrySink::with_breaker(0, 2, 3);
+        let (fam, class) = (Family::Grid, SizeClass::Medium);
+        assert!(sink.breaker_allows(fam, class, A));
+        // One failure: still closed (threshold 2).
+        sink.record_breaker_failure(fam, class, A);
+        assert!(sink.breaker_allows(fam, class, A));
+        // Second consecutive failure: open.
+        sink.record_breaker_failure(fam, class, A);
+        assert!(!sink.breaker_allows(fam, class, A));
+        assert_eq!(sink.breakers_open(), 1);
+        let snap = sink.breaker_snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!((snap[0].backend, snap[0].state), (A, "open"));
+        assert_eq!(snap[0].opened_total, 1);
+        // Cooldown = 3 completed requests for the pair; requests in a
+        // *different* pair do not advance this breaker's clock.
+        sink.request_completed(Family::Assignment, SizeClass::Small);
+        sink.request_completed(fam, class);
+        sink.request_completed(fam, class);
+        assert!(!sink.breaker_allows(fam, class, A), "2 of 3 ticks passed");
+        sink.request_completed(fam, class);
+        assert!(sink.breaker_allows(fam, class, A), "half-open admits a probe");
+        assert_eq!(sink.breaker_snapshot()[0].state, "half-open");
+        // Successful probe: closed, streak reset.
+        sink.record_breaker_success(fam, class, A);
+        assert_eq!(sink.breaker_snapshot()[0].state, "closed");
+        assert_eq!(sink.breaker_snapshot()[0].consecutive_failures, 0);
+        assert_eq!(sink.breakers_open(), 0);
+    }
+
+    /// A failed half-open probe re-opens the breaker immediately with a
+    /// fresh cooldown (no threshold-many failures needed the 2nd time).
+    #[test]
+    fn failed_half_open_probe_reopens() {
+        let sink = TelemetrySink::with_breaker(0, 2, 2);
+        let (fam, class) = (Family::Assignment, SizeClass::Small);
+        sink.record_breaker_failure(fam, class, A);
+        sink.record_breaker_failure(fam, class, A);
+        sink.request_completed(fam, class);
+        sink.request_completed(fam, class);
+        assert!(sink.breaker_allows(fam, class, A), "half-open");
+        sink.record_breaker_failure(fam, class, A);
+        assert!(!sink.breaker_allows(fam, class, A), "probe failed: open again");
+        assert_eq!(sink.breaker_snapshot()[0].opened_total, 2);
+    }
+
+    /// Intervening successes reset the consecutive-failure streak, and
+    /// threshold 0 disables tripping entirely.
+    #[test]
+    fn success_resets_streak_and_zero_threshold_disables() {
+        let sink = TelemetrySink::with_breaker(0, 2, 2);
+        let (fam, class) = (Family::Grid, SizeClass::Large);
+        sink.record_breaker_failure(fam, class, A);
+        sink.record_breaker_success(fam, class, A);
+        sink.record_breaker_failure(fam, class, A);
+        assert!(sink.breaker_allows(fam, class, A), "streak never reached 2");
+
+        let off = TelemetrySink::with_breaker(0, 0, 2);
+        for _ in 0..10 {
+            off.record_breaker_failure(fam, class, A);
+        }
+        assert!(off.breaker_allows(fam, class, A), "threshold 0 never trips");
+        assert_eq!(off.breaker_snapshot()[0].consecutive_failures, 10);
     }
 
     #[test]

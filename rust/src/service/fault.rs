@@ -1,0 +1,297 @@
+//! Deterministic fault injection for the service stack.
+//!
+//! A [`FaultPlan`] describes *when* a targeted backend misbehaves —
+//! panic every k-th solve, fail every m-th, sleep, or corrupt the
+//! result — as pure functions of a shared solve counter, so a chaos run
+//! with a fixed seed replays identically: no RNG, no wall clock in the
+//! decision path.  [`FaultyBackend`] wraps the real backend inside the
+//! registry (see `BackendRegistry::instantiate`), so injected faults
+//! exercise exactly the production retry / breaker / respawn paths.
+//!
+//! [`backoff_delay`] is the retry schedule used by the router: plain
+//! deterministic exponential backoff, unit-tested here.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::util::CancelToken;
+use crate::workloads::ProblemInstance;
+
+use super::router::{Backend, Family};
+use super::SolveOutcome;
+
+/// Deterministic exponential backoff before retry number `attempt`
+/// (1-based): `base_ms`, `2*base_ms`, `4*base_ms`, ...  The shift is
+/// capped so the delay never overflows; `base_ms = 0` disables waiting.
+pub fn backoff_delay(base_ms: u64, attempt: u32) -> Duration {
+    if base_ms == 0 || attempt == 0 {
+        return Duration::ZERO;
+    }
+    let shift = (attempt - 1).min(10);
+    Duration::from_millis(base_ms.saturating_mul(1u64 << shift))
+}
+
+/// A seeded, deterministic misbehaviour schedule for one backend.
+///
+/// The counters are shared (`Arc`) across every clone of the plan, so
+/// all workers wrapping the same target draw from one global solve
+/// sequence — which solve panics does not depend on how requests were
+/// spread over workers.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Registry name of the backend to wrap (e.g. "native-par").
+    pub target: String,
+    /// Panic on every `panic_every`-th solve (0 = never).
+    pub panic_every: u64,
+    /// Return an error on every `fail_every`-th solve (0 = never).
+    pub fail_every: u64,
+    /// Sleep `delay_ms` on every `delay_every`-th solve (0 = never).
+    pub delay_every: u64,
+    pub delay_ms: u64,
+    /// Corrupt the result (weight/flow + 1) on every `wrong_every`-th
+    /// solve (0 = never) — for oracle-detection tests only; chaos mode
+    /// never sets it, so successful chaos solves stay bit-exact.
+    pub wrong_every: u64,
+    counter: Arc<AtomicU64>,
+    injected: Arc<AtomicU64>,
+}
+
+impl FaultPlan {
+    /// A plan that never misbehaves; combine with the `with_*` builders.
+    pub fn new(target: impl Into<String>) -> Self {
+        Self {
+            target: target.into(),
+            panic_every: 0,
+            fail_every: 0,
+            delay_every: 0,
+            delay_ms: 0,
+            wrong_every: 0,
+            counter: Arc::new(AtomicU64::new(0)),
+            injected: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    pub fn with_panic_every(mut self, k: u64) -> Self {
+        self.panic_every = k;
+        self
+    }
+
+    pub fn with_fail_every(mut self, k: u64) -> Self {
+        self.fail_every = k;
+        self
+    }
+
+    pub fn with_delay_every(mut self, k: u64, ms: u64) -> Self {
+        self.delay_every = k;
+        self.delay_ms = ms;
+        self
+    }
+
+    pub fn with_wrong_every(mut self, k: u64) -> Self {
+        self.wrong_every = k;
+        self
+    }
+
+    /// The `loadgen --chaos <seed>` schedule: panics plus plain errors
+    /// on the parallel grid backend, never corrupted results (so every
+    /// success stays oracle-exact).  The cadences are derived from the
+    /// seed but always ≥ 2, so some solves also succeed and the
+    /// breaker/telemetry see a mixed diet.
+    pub fn chaos(seed: u64) -> Self {
+        Self::new("native-par")
+            .with_panic_every(2 + seed % 3)
+            .with_fail_every(7 + (seed >> 2) % 4)
+    }
+
+    /// Total faults injected so far (panics + errors + delays + wrongs).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::SeqCst)
+    }
+
+    /// Solves the wrapped backend has been offered so far.
+    pub fn solves(&self) -> u64 {
+        self.counter.load(Ordering::SeqCst)
+    }
+}
+
+/// Wraps a real backend and misbehaves per its [`FaultPlan`].  Keeps
+/// the inner backend's name, so routing tables, telemetry, and breakers
+/// all attribute the faults to the real engine — the whole point.
+pub struct FaultyBackend {
+    inner: Box<dyn Backend>,
+    plan: FaultPlan,
+}
+
+impl FaultyBackend {
+    pub fn wrap(inner: Box<dyn Backend>, plan: FaultPlan) -> Self {
+        Self { inner, plan }
+    }
+}
+
+impl Backend for FaultyBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn family(&self) -> Family {
+        self.inner.family()
+    }
+
+    fn accepts(&self, instance: &ProblemInstance) -> bool {
+        self.inner.accepts(instance)
+    }
+
+    fn solve(&mut self, instance: &ProblemInstance, cancel: &CancelToken) -> Result<SolveOutcome> {
+        // 1-based global solve number: deterministic across workers.
+        let k = self.plan.counter.fetch_add(1, Ordering::SeqCst) + 1;
+        let hit = |every: u64| every > 0 && k % every == 0;
+        if hit(self.plan.delay_every) {
+            self.plan.injected.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(self.plan.delay_ms));
+        }
+        if hit(self.plan.panic_every) {
+            self.plan.injected.fetch_add(1, Ordering::SeqCst);
+            panic!(
+                "fault injection: backend {} panicked on solve #{k}",
+                self.inner.name()
+            );
+        }
+        if hit(self.plan.fail_every) {
+            self.plan.injected.fetch_add(1, Ordering::SeqCst);
+            bail!(
+                "fault injection: backend {} failed on solve #{k}",
+                self.inner.name()
+            );
+        }
+        let mut out = self.inner.solve(instance, cancel)?;
+        if hit(self.plan.wrong_every) {
+            self.plan.injected.fetch_add(1, Ordering::SeqCst);
+            match &mut out {
+                SolveOutcome::Assignment(r) => r.weight += 1,
+                SolveOutcome::Grid(r) => r.flow += 1,
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gridflow::GridSolveReport;
+    use crate::util::Rng;
+    use crate::workloads::random_grid;
+
+    /// Backoff is a pure function of (base, attempt): the retry
+    /// schedule replays identically run to run.
+    #[test]
+    fn backoff_is_deterministic_and_exponential() {
+        assert_eq!(backoff_delay(2, 1), Duration::from_millis(2));
+        assert_eq!(backoff_delay(2, 2), Duration::from_millis(4));
+        assert_eq!(backoff_delay(2, 3), Duration::from_millis(8));
+        assert_eq!(backoff_delay(5, 4), Duration::from_millis(40));
+        // Disabled / degenerate inputs.
+        assert_eq!(backoff_delay(0, 3), Duration::ZERO);
+        assert_eq!(backoff_delay(2, 0), Duration::ZERO);
+        // The shift cap keeps huge attempt numbers finite (no overflow).
+        assert_eq!(backoff_delay(1, 64), Duration::from_millis(1 << 10));
+        // Same inputs, same answer — twice.
+        for attempt in 1..8 {
+            assert_eq!(backoff_delay(3, attempt), backoff_delay(3, attempt));
+        }
+    }
+
+    /// A stub backend that always succeeds with a fixed flow.
+    struct Steady;
+
+    impl Backend for Steady {
+        fn name(&self) -> &'static str {
+            "steady"
+        }
+
+        fn family(&self) -> Family {
+            Family::Grid
+        }
+
+        fn solve(&mut self, _: &ProblemInstance, _: &CancelToken) -> Result<SolveOutcome> {
+            Ok(SolveOutcome::Grid(GridSolveReport {
+                flow: 7,
+                ..Default::default()
+            }))
+        }
+    }
+
+    fn grid_instance() -> ProblemInstance {
+        let mut rng = Rng::seeded(1);
+        ProblemInstance::Grid(random_grid(&mut rng, 4, 4, 5, 0.3, 0.3))
+    }
+
+    #[test]
+    fn fail_schedule_hits_exact_solves() {
+        let plan = FaultPlan::new("steady").with_fail_every(3);
+        let mut b = FaultyBackend::wrap(Box::new(Steady), plan.clone());
+        let inst = grid_instance();
+        let cancel = CancelToken::new();
+        let mut outcomes = Vec::new();
+        for _ in 0..9 {
+            outcomes.push(b.solve(&inst, &cancel).is_ok());
+        }
+        // Solves 3, 6, 9 fail; everything else succeeds.
+        assert_eq!(
+            outcomes,
+            [true, true, false, true, true, false, true, true, false]
+        );
+        assert_eq!(plan.injected(), 3);
+        assert_eq!(plan.solves(), 9);
+    }
+
+    #[test]
+    fn panic_schedule_panics_on_the_kth_solve() {
+        let plan = FaultPlan::new("steady").with_panic_every(2);
+        let mut b = FaultyBackend::wrap(Box::new(Steady), plan);
+        let inst = grid_instance();
+        let cancel = CancelToken::new();
+        assert!(b.solve(&inst, &cancel).is_ok());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = b.solve(&inst, &cancel);
+        }));
+        assert!(r.is_err(), "solve #2 must panic");
+        assert!(b.solve(&inst, &cancel).is_ok(), "solve #3 succeeds again");
+    }
+
+    #[test]
+    fn wrong_schedule_corrupts_the_result() {
+        let plan = FaultPlan::new("steady").with_wrong_every(1);
+        let mut b = FaultyBackend::wrap(Box::new(Steady), plan);
+        let out = b.solve(&grid_instance(), &CancelToken::new()).unwrap();
+        assert_eq!(out.flow(), Some(8), "flow 7 corrupted to 8");
+    }
+
+    #[test]
+    fn shared_counters_survive_cloning() {
+        // Two wrappers from clones of one plan (two workers) share the
+        // schedule: the global 2nd solve fails no matter who runs it.
+        let plan = FaultPlan::new("steady").with_fail_every(2);
+        let mut w0 = FaultyBackend::wrap(Box::new(Steady), plan.clone());
+        let mut w1 = FaultyBackend::wrap(Box::new(Steady), plan.clone());
+        let inst = grid_instance();
+        let cancel = CancelToken::new();
+        assert!(w0.solve(&inst, &cancel).is_ok()); // global #1
+        assert!(w1.solve(&inst, &cancel).is_err()); // global #2
+        assert_eq!(plan.solves(), 2);
+    }
+
+    #[test]
+    fn chaos_plan_is_seed_deterministic() {
+        let a = FaultPlan::chaos(7);
+        let b = FaultPlan::chaos(7);
+        assert_eq!(a.target, "native-par");
+        assert_eq!((a.panic_every, a.fail_every), (b.panic_every, b.fail_every));
+        assert_eq!((a.panic_every, a.fail_every), (3, 8));
+        assert_eq!(a.wrong_every, 0, "chaos never corrupts results");
+        assert!(a.panic_every >= 2 && a.fail_every >= 2);
+    }
+}

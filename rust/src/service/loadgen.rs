@@ -12,10 +12,10 @@
 //! fresh thread and fresh solver state per request — kept as the
 //! benchmark baseline for `bench_service`.
 
-use std::fmt;
+use std::time::Duration;
 
 use crate::util::stats::Summary;
-use crate::util::Timer;
+use crate::util::{CancelToken, Timer};
 use crate::workloads::{MixedTrace, ProblemInstance};
 
 use super::pool::SolverPool;
@@ -23,24 +23,9 @@ use super::router::{RouterConfig, WorkerBackends};
 use super::shard::{RejectReason, ShardConfig};
 use super::SolveReply;
 
-/// Why a replayed request produced no reply.
-#[derive(Debug, Clone)]
-pub enum ReplayError {
-    /// Shed by admission control (the typed reason, not a re-parsed
-    /// message).
-    Rejected(RejectReason),
-    /// The solve itself failed (solver error, panic, dropped reply).
-    Failed(String),
-}
-
-impl fmt::Display for ReplayError {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        match self {
-            ReplayError::Rejected(r) => write!(f, "rejected: {r}"),
-            ReplayError::Failed(msg) => write!(f, "{msg}"),
-        }
-    }
-}
+/// Why a replayed request produced no reply — the service-wide typed
+/// reply error, re-exported under the historical loadgen name.
+pub use super::ReplyError as ReplayError;
 
 /// Outcome of one replay run, measured at the client.
 #[derive(Debug, Clone)]
@@ -49,6 +34,17 @@ pub struct ReplayOutcome {
     pub ok: usize,
     pub rejected: usize,
     pub failed: usize,
+    /// Requests whose reply channel was dropped without an answer —
+    /// zero unless the service lost a request worker mid-solve.
+    pub lost: usize,
+    /// Retry attempts the service made across all replies (successes
+    /// and exhausted failures both report their count).
+    pub retries: u64,
+    /// Candidate backends the router skipped because a circuit breaker
+    /// was open.
+    pub breaker_skips: u64,
+    /// Requests shed because their deadline passed before dispatch.
+    pub deadline_misses: usize,
     pub wall_seconds: f64,
     /// Served requests per wall-clock second.
     pub throughput_rps: f64,
@@ -71,11 +67,17 @@ impl ReplayOutcome {
         let mut grid = Vec::new();
         let mut rejected = 0usize;
         let mut failed = 0usize;
+        let mut lost = 0usize;
+        let mut retries = 0u64;
+        let mut breaker_skips = 0u64;
+        let mut deadline_misses = 0usize;
         let mut reasons: std::collections::BTreeMap<&'static str, usize> =
             std::collections::BTreeMap::new();
         for (_, r) in &replies {
             match r {
                 Ok(reply) => {
+                    retries += u64::from(reply.retries);
+                    breaker_skips += u64::from(reply.breaker_skips);
                     if reply.outcome.family() == "assignment" {
                         assign.push(reply.latency);
                     } else {
@@ -84,9 +86,19 @@ impl ReplayOutcome {
                 }
                 Err(ReplayError::Rejected(reason)) => {
                     rejected += 1;
+                    if matches!(reason, RejectReason::DeadlineExceeded) {
+                        deadline_misses += 1;
+                    }
                     *reasons.entry(reason.label()).or_insert(0) += 1;
                 }
-                Err(ReplayError::Failed(_)) => failed += 1,
+                Err(ReplayError::Failed { retries: r, .. }) => {
+                    failed += 1;
+                    retries += u64::from(*r);
+                }
+                Err(ReplayError::Lost) => {
+                    failed += 1;
+                    lost += 1;
+                }
             }
         }
         let ok = assign.len() + grid.len();
@@ -96,6 +108,10 @@ impl ReplayOutcome {
             ok,
             rejected,
             failed,
+            lost,
+            retries,
+            breaker_skips,
+            deadline_misses,
             wall_seconds: wall,
             throughput_rps: if wall > 0.0 { ok as f64 / wall } else { 0.0 },
             overall: Summary::of(&all),
@@ -126,8 +142,9 @@ pub fn replay(pool: &SolverPool, trace: &MixedTrace, open_loop: bool) -> ReplayO
                 std::thread::sleep(std::time::Duration::from_secs_f64(req.arrival - now));
             }
         }
+        let deadline = req.deadline.map(Duration::from_secs_f64);
         let slot = loop {
-            match pool.try_submit(req.instance.clone()) {
+            match pool.try_submit_with_deadline(req.instance.clone(), deadline) {
                 Ok(rx) => break Ok(rx),
                 // Pace only when something is draining: a 0-worker
                 // pool (admission-only test mode) must still reject.
@@ -146,8 +163,8 @@ pub fn replay(pool: &SolverPool, trace: &MixedTrace, open_loop: bool) -> ReplayO
     for (id, slot) in pending {
         let outcome = match slot {
             Ok(rx) => match rx.recv() {
-                Ok(reply) => reply.map_err(ReplayError::Failed),
-                Err(_) => Err(ReplayError::Failed("service dropped the reply".to_string())),
+                Ok(reply) => reply,
+                Err(_) => Err(ReplayError::Lost),
             },
             Err(err) => Err(err),
         };
@@ -176,19 +193,24 @@ pub fn replay_spawn_baseline(
             std::thread::spawn(move || {
                 let t = Timer::start();
                 let mut backends = WorkerBackends::new(rcfg, None);
-                let solved = backends.solve(class, &instance);
+                let solved = backends.solve(class, &instance, &CancelToken::new());
                 let latency = t.elapsed();
                 solved
-                    .map(|(outcome, backend)| SolveReply {
+                    .map(|served| SolveReply {
                         id: id as u64,
                         class,
                         worker: usize::MAX,
-                        backend,
+                        backend: served.backend,
                         latency,
                         queue_delay: 0.0,
-                        outcome,
+                        retries: served.retries,
+                        breaker_skips: served.breaker_skips,
+                        outcome: served.outcome,
                     })
-                    .map_err(|e| ReplayError::Failed(format!("solver error: {e:#}")))
+                    .map_err(|fail| ReplayError::Failed {
+                        message: fail.error,
+                        retries: fail.retries,
+                    })
             }),
         ));
     }
@@ -196,7 +218,10 @@ pub fn replay_spawn_baseline(
     for (id, handle) in handles {
         let outcome = match handle.join() {
             Ok(r) => r,
-            Err(_) => Err(ReplayError::Failed("solver panicked".to_string())),
+            Err(_) => Err(ReplayError::Failed {
+                message: "solver panicked".to_string(),
+                retries: 0,
+            }),
         };
         replies.push((id, outcome));
     }

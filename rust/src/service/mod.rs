@@ -31,10 +31,13 @@
 //! is now a thin shim over [`SolverPool`].
 
 pub mod adaptive;
+pub mod fault;
 pub mod loadgen;
 pub mod pool;
 pub mod router;
 pub mod shard;
+
+use std::fmt;
 
 use anyhow::Result;
 
@@ -43,8 +46,10 @@ use crate::config::Config;
 use crate::gridflow::GridSolveReport;
 
 pub use crate::gridflow::HostRounds;
+pub use crate::util::{CancelToken, Cancelled};
 pub use crate::workloads::ProblemInstance;
-pub use adaptive::{RouteStat, RoutingMode, TelemetrySink};
+pub use adaptive::{BreakerStat, RouteStat, RoutingMode, TelemetrySink};
+pub use fault::{backoff_delay, FaultPlan, FaultyBackend};
 pub use loadgen::{replay, replay_spawn_baseline, ReplayError, ReplayOutcome};
 pub use pool::{PoolReport, SolverPool, WorkerPool};
 pub use router::{AssignBackend, Backend, BackendRegistry, Family, GridBackend, RouterConfig};
@@ -96,6 +101,41 @@ impl SolveOutcome {
     }
 }
 
+/// Why a submitted request produced no successful reply.  This is the
+/// typed error side of the reply channel (PR 6; previously a bare
+/// `String`), so clients can distinguish shed load from solve failures
+/// without re-parsing messages.
+#[derive(Debug, Clone)]
+pub enum ReplyError {
+    /// Shed before solving: admission control or a pre-dispatch
+    /// deadline miss ([`RejectReason::DeadlineExceeded`]).
+    Rejected(RejectReason),
+    /// Every attempt failed (after `retries` retries), or the solve
+    /// was cancelled mid-flight by its deadline.
+    Failed { message: String, retries: u32 },
+    /// The reply channel closed without a reply — the invariant the
+    /// fault tests assert never happens (a worker died mid-request).
+    Lost,
+}
+
+impl fmt::Display for ReplyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReplyError::Rejected(r) => write!(f, "rejected: {r}"),
+            ReplyError::Failed { message, retries } => {
+                if *retries > 0 {
+                    write!(f, "{message} (after {retries} retries)")
+                } else {
+                    write!(f, "{message}")
+                }
+            }
+            ReplyError::Lost => write!(f, "service dropped the reply"),
+        }
+    }
+}
+
+impl std::error::Error for ReplyError {}
+
 /// One reply from the pool.
 #[derive(Debug, Clone)]
 pub struct SolveReply {
@@ -111,6 +151,10 @@ pub struct SolveReply {
     pub latency: f64,
     /// Seconds spent queued before a worker picked the request up.
     pub queue_delay: f64,
+    /// Failed attempts absorbed before this reply (fallback retries).
+    pub retries: u32,
+    /// Open circuit breakers routed around while placing the request.
+    pub breaker_skips: u32,
     pub outcome: SolveOutcome,
 }
 
@@ -167,6 +211,16 @@ impl PoolConfig {
                 },
                 probe_every: cfg.get_usize("service.probe_every", d.router.probe_every)?,
                 spill_depth: cfg.get_usize("service.spill_depth", d.router.spill_depth)?,
+                max_retries: cfg.get_usize("service.max_retries", d.router.max_retries as usize)?
+                    as u32,
+                retry_backoff_ms: cfg.get_usize(
+                    "service.retry_backoff_ms",
+                    d.router.retry_backoff_ms as usize,
+                )? as u64,
+                breaker_threshold: cfg
+                    .get_usize("service.breaker_threshold", d.router.breaker_threshold)?,
+                breaker_cooldown: cfg
+                    .get_usize("service.breaker_cooldown", d.router.breaker_cooldown)?,
                 ..d.router
             },
         };
@@ -244,6 +298,40 @@ mod tests {
         assert_eq!(pc.router.routing, RoutingMode::Static);
         let bad = Config::parse("[service]\nrouting = \"nope\"\n").unwrap();
         assert!(PoolConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn fault_tolerance_keys_from_config() {
+        let cfg = Config::parse(
+            "[service]\nmax_retries = 5\nretry_backoff_ms = 9\n\
+             breaker_threshold = 4\nbreaker_cooldown = 12\n",
+        )
+        .unwrap();
+        let pc = PoolConfig::from_config(&cfg).unwrap();
+        assert_eq!(pc.router.max_retries, 5);
+        assert_eq!(pc.router.retry_backoff_ms, 9);
+        assert_eq!(pc.router.breaker_threshold, 4);
+        assert_eq!(pc.router.breaker_cooldown, 12);
+        // Absent keys keep the defaults; no fault plan unless injected.
+        let pc = PoolConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(pc.router.max_retries, 2);
+        assert_eq!(pc.router.breaker_threshold, 3);
+        assert!(pc.router.fault.is_none());
+    }
+
+    #[test]
+    fn reply_error_renders() {
+        let rejected = ReplyError::Rejected(RejectReason::TooLarge {
+            units: 9,
+            max_units: 4,
+        });
+        assert!(rejected.to_string().contains("too large"));
+        let failed = ReplyError::Failed {
+            message: "solver error: boom".into(),
+            retries: 2,
+        };
+        assert!(failed.to_string().contains("after 2 retries"));
+        assert!(ReplyError::Lost.to_string().contains("dropped"));
     }
 
     #[test]

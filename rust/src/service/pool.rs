@@ -19,15 +19,16 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::util::stats::{LatencyRecorder, Summary};
+use crate::util::CancelToken;
 use crate::workloads::ProblemInstance;
 
-use super::adaptive::{RouteStat, TelemetrySink};
+use super::adaptive::{BreakerStat, RouteStat, TelemetrySink};
 use super::router::{RouterConfig, WorkerBackends};
 use super::shard::{QueuedJob, RejectReason, ShardedQueues, SizeClass};
-use super::{PoolConfig, SolveReply};
+use super::{PoolConfig, ReplyError, SolveReply};
 
 // ---------------------------------------------------------------------------
 // WorkerPool: persistent threads executing scoped job batches
@@ -78,6 +79,10 @@ struct PoolQueue {
 struct PoolShared {
     queue: Mutex<PoolQueue>,
     work_cv: Condvar,
+    /// Worker threads respawned after dying mid-job (a panic that
+    /// escaped the per-job catch, e.g. a panic payload whose `Drop`
+    /// panics).  Capacity self-heals instead of silently shrinking.
+    respawns: AtomicU64,
 }
 
 /// A fixed set of long-lived worker threads that run scoped job
@@ -113,6 +118,7 @@ impl WorkerPool {
                 shutdown: false,
             }),
             work_cv: Condvar::new(),
+            respawns: AtomicU64::new(0),
         });
         let workers = (0..threads.max(1))
             .map(|i| {
@@ -138,22 +144,29 @@ impl WorkerPool {
         self.shared.queue.lock().unwrap().jobs.len()
     }
 
+    /// Worker threads respawned after dying mid-job.
+    pub fn respawns(&self) -> u64 {
+        self.shared.respawns.load(Ordering::SeqCst)
+    }
+
     /// Run every job to completion on the pool, blocking until all are
-    /// done.  Propagates a panic if any job panicked.
+    /// done; returns how many panicked instead of panicking the caller.
+    /// This is the service-path entry point: one bad tile job becomes a
+    /// reportable error, not a dead request worker.
     ///
     /// The jobs may borrow from the caller's stack (`'env`): the
     /// lifetime erasure below is sound because this function does not
     /// return until every job has finished executing, so no borrow
     /// escapes the frame that owns it — the same contract
     /// `std::thread::scope` enforces.
-    pub fn scope_run<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+    pub fn try_run_batch<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) -> usize {
         if jobs.is_empty() {
-            return;
+            return 0;
         }
         let latch = Latch::new(jobs.len());
         {
             let mut q = self.shared.queue.lock().unwrap();
-            assert!(!q.shutdown, "scope_run on a shut-down WorkerPool");
+            assert!(!q.shutdown, "batch run on a shut-down WorkerPool");
             for job in jobs {
                 // SAFETY: `latch.wait()` below blocks until this job has
                 // run to completion (or panicked), so the 'env borrows
@@ -165,7 +178,13 @@ impl WorkerPool {
             }
         }
         self.shared.work_cv.notify_all();
-        let panicked = latch.wait();
+        latch.wait()
+    }
+
+    /// [`WorkerPool::try_run_batch`] with the legacy contract:
+    /// propagates a panic if any job panicked.
+    pub fn scope_run<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        let panicked = self.try_run_batch(jobs);
         if panicked > 0 {
             panic!("{panicked} WorkerPool job(s) panicked");
         }
@@ -185,7 +204,43 @@ impl Drop for WorkerPool {
     }
 }
 
+/// Replaces a pool worker that dies mid-loop.  The per-job
+/// `catch_unwind` absorbs ordinary job panics, but a hostile panic
+/// *payload* (one whose `Drop` itself panics) still unwinds the worker
+/// thread — without this guard the pool's capacity would silently
+/// shrink by one thread per such incident.
+struct RespawnGuard {
+    shared: Arc<PoolShared>,
+}
+
+impl Drop for RespawnGuard {
+    fn drop(&mut self) {
+        if !std::thread::panicking() {
+            return; // normal shutdown exit
+        }
+        // Poisoned lock or shutdown in progress: nothing to revive.
+        let shutting_down = self
+            .shared
+            .queue
+            .lock()
+            .map(|q| q.shutdown)
+            .unwrap_or(true);
+        if shutting_down {
+            return;
+        }
+        let n = self.shared.respawns.fetch_add(1, Ordering::SeqCst);
+        let shared = Arc::clone(&self.shared);
+        // Detached: it exits via the shutdown flag like any worker.
+        let _ = std::thread::Builder::new()
+            .name(format!("flowmatch-pool-respawn-{n}"))
+            .spawn(move || pool_worker_loop(shared));
+    }
+}
+
 fn pool_worker_loop(shared: Arc<PoolShared>) {
+    let _guard = RespawnGuard {
+        shared: Arc::clone(&shared),
+    };
     loop {
         let (job, latch) = {
             let mut q = shared.queue.lock().unwrap();
@@ -200,6 +255,9 @@ fn pool_worker_loop(shared: Arc<PoolShared>) {
             }
         };
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        // Complete the latch before dropping the panic payload: even a
+        // payload whose Drop panics (killing this thread) cannot leave
+        // the batch's caller blocked.
         latch.complete(outcome.is_err());
     }
 }
@@ -214,6 +272,10 @@ struct PoolMetrics {
     grid: LatencyRecorder,
     per_class: [LatencyRecorder; 3],
     rejected: usize,
+    failed: usize,
+    retries: u64,
+    breaker_skips: u64,
+    deadline_misses: usize,
     backends: BTreeMap<&'static str, usize>,
 }
 
@@ -229,6 +291,10 @@ impl PoolMetrics {
                 LatencyRecorder::new(),
             ],
             rejected: 0,
+            failed: 0,
+            retries: 0,
+            breaker_skips: 0,
+            deadline_misses: 0,
             backends: BTreeMap::new(),
         }
     }
@@ -268,6 +334,20 @@ pub struct PoolReport {
     /// Large grid solves the adaptive router spilled to
     /// `fifo-lockfree` because the wave pool was saturated.
     pub spilled: usize,
+    /// Requests that exhausted their retry budget (replied `Failed`).
+    pub failed: usize,
+    /// Retry attempts across all requests (successful or not).
+    pub retries: u64,
+    /// Candidate backends skipped because their circuit breaker was open.
+    pub breaker_skips: u64,
+    /// Requests shed before dispatch or cancelled mid-solve because
+    /// their deadline passed.
+    pub deadline_misses: usize,
+    /// Circuit-breaker states per (family × class × backend) at
+    /// shutdown, in stable order.
+    pub breakers: Vec<BreakerStat>,
+    /// Wave-pool worker threads respawned after a hostile panic.
+    pub respawns: u64,
 }
 
 impl PoolReport {
@@ -276,6 +356,11 @@ impl PoolReport {
             .iter()
             .find(|(b, _)| *b == backend)
             .map_or(0, |(_, n)| *n)
+    }
+
+    /// Breakers currently open (half-open ones already admit traffic).
+    pub fn breakers_open(&self) -> usize {
+        self.breakers.iter().filter(|b| b.is_open()).count()
     }
 }
 
@@ -300,9 +385,14 @@ impl SolverPool {
     pub fn start(cfg: PoolConfig) -> Self {
         let queues = Arc::new(ShardedQueues::new(cfg.shard.clone()));
         let metrics = Arc::new(Mutex::new(PoolMetrics::new()));
-        // One telemetry sink shared by every worker: route decisions
-        // and EWMAs are pool-global, not per-worker.
-        let telemetry = Arc::new(TelemetrySink::new(cfg.router.probe_every));
+        // One telemetry sink shared by every worker: route decisions,
+        // EWMAs, and circuit-breaker state are pool-global, not
+        // per-worker.
+        let telemetry = Arc::new(TelemetrySink::with_breaker(
+            cfg.router.probe_every,
+            cfg.router.breaker_threshold,
+            cfg.router.breaker_cooldown,
+        ));
         let wave_pool = Arc::new(WorkerPool::new(cfg.router.par_threads));
         let workers = (0..cfg.workers)
             .map(|idx| {
@@ -345,7 +435,20 @@ impl SolverPool {
     pub fn try_submit(
         &self,
         instance: ProblemInstance,
-    ) -> Result<mpsc::Receiver<Result<SolveReply, String>>, RejectReason> {
+    ) -> Result<mpsc::Receiver<Result<SolveReply, ReplyError>>, RejectReason> {
+        self.try_submit_with_deadline(instance, None)
+    }
+
+    /// [`SolverPool::try_submit`] with an optional per-request deadline
+    /// budget.  A request whose deadline passes while it is still
+    /// queued is shed at dispatch (`RejectReason::DeadlineExceeded`)
+    /// instead of occupying a worker; one that is already solving is
+    /// cancelled cooperatively at the next host-round boundary.
+    pub fn try_submit_with_deadline(
+        &self,
+        instance: ProblemInstance,
+        timeout: Option<Duration>,
+    ) -> Result<mpsc::Receiver<Result<SolveReply, ReplyError>>, RejectReason> {
         let cfg = self.queues.config();
         let units = instance.work_units();
         if units > cfg.max_units {
@@ -358,11 +461,13 @@ impl SolverPool {
         }
         let class = cfg.classify(units);
         let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
         let job = QueuedJob {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             class,
             instance,
-            submitted: Instant::now(),
+            submitted: now,
+            deadline: timeout.map(|t| now + t),
             reply: tx,
         };
         match self.queues.push(job) {
@@ -376,14 +481,17 @@ impl SolverPool {
     }
 
     /// Submit returning a receiver unconditionally: a rejection arrives
-    /// through the channel as `Err(reason string)` (the legacy
-    /// `AssignmentService` shape).
-    pub fn submit(&self, instance: ProblemInstance) -> mpsc::Receiver<Result<SolveReply, String>> {
+    /// through the channel as `Err(ReplyError::Rejected(..))` (the
+    /// legacy `AssignmentService` shape).
+    pub fn submit(
+        &self,
+        instance: ProblemInstance,
+    ) -> mpsc::Receiver<Result<SolveReply, ReplyError>> {
         match self.try_submit(instance) {
             Ok(rx) => rx,
             Err(reason) => {
                 let (tx, rx) = mpsc::channel();
-                let _ = tx.send(Err(reason.to_string()));
+                let _ = tx.send(Err(ReplyError::Rejected(reason)));
                 rx
             }
         }
@@ -394,10 +502,18 @@ impl SolverPool {
         self.finish();
         let routes = self.telemetry.snapshot();
         let spilled = self.telemetry.spills();
+        let breakers = self.telemetry.breaker_snapshot();
+        let respawns = self.wave_pool.respawns();
         let m = self.metrics.lock().unwrap();
         PoolReport {
             routes,
             spilled,
+            breakers,
+            respawns,
+            failed: m.failed,
+            retries: m.retries,
+            breaker_skips: m.breaker_skips,
+            deadline_misses: m.deadline_misses,
             served: m.overall.count(),
             rejected: m.rejected,
             assign_served: m.assign.count(),
@@ -446,28 +562,67 @@ fn solver_worker_loop(
     let mut backends = WorkerBackends::with_telemetry(rcfg, Some(&wave_pool), telemetry);
     while let Some(job) = queues.pop(idx, total) {
         let queue_delay = job.submitted.elapsed().as_secs_f64();
+        // Deadline shed: a request whose budget expired while queued is
+        // answered without ever touching a backend.
+        if let Some(dl) = job.deadline {
+            if Instant::now() >= dl {
+                let mut m = metrics.lock().unwrap();
+                m.rejected += 1;
+                m.deadline_misses += 1;
+                drop(m);
+                let _ = job
+                    .reply
+                    .send(Err(ReplyError::Rejected(RejectReason::DeadlineExceeded)));
+                continue;
+            }
+        }
+        let cancel = CancelToken::with_deadline(job.deadline);
+        // `WorkerBackends::solve` catches per-attempt panics itself;
+        // this outer catch is the last-resort guard keeping the request
+        // worker alive if the retry machinery itself blows up.
         let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            backends.solve(job.class, &job.instance)
+            backends.solve(job.class, &job.instance, &cancel)
         }));
         let latency = job.submitted.elapsed().as_secs_f64();
         let reply = match solved {
-            Ok(Ok((outcome, backend))) => {
-                metrics
-                    .lock()
-                    .unwrap()
-                    .record(job.class, outcome.family(), backend, latency);
+            Ok(Ok(served)) => {
+                let mut m = metrics.lock().unwrap();
+                m.record(job.class, served.outcome.family(), served.backend, latency);
+                m.retries += u64::from(served.retries);
+                m.breaker_skips += u64::from(served.breaker_skips);
+                drop(m);
                 Ok(SolveReply {
                     id: job.id,
                     class: job.class,
                     worker: idx,
-                    backend,
+                    backend: served.backend,
                     latency,
                     queue_delay,
-                    outcome,
+                    retries: served.retries,
+                    breaker_skips: served.breaker_skips,
+                    outcome: served.outcome,
                 })
             }
-            Ok(Err(e)) => Err(format!("solver error: {e:#}")),
-            Err(_) => Err("solver panicked".to_string()),
+            Ok(Err(fail)) => {
+                let mut m = metrics.lock().unwrap();
+                m.failed += 1;
+                m.retries += u64::from(fail.retries);
+                if fail.cancelled {
+                    m.deadline_misses += 1;
+                }
+                drop(m);
+                Err(ReplyError::Failed {
+                    message: fail.error,
+                    retries: fail.retries,
+                })
+            }
+            Err(_) => {
+                metrics.lock().unwrap().failed += 1;
+                Err(ReplyError::Failed {
+                    message: "solver panicked".to_string(),
+                    retries: 0,
+                })
+            }
         };
         let _ = job.reply.send(reply);
     }
@@ -547,5 +702,50 @@ mod tests {
         // The pool survives a panicked batch.
         let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![Box::new(|| {})];
         pool.scope_run(jobs);
+    }
+
+    #[test]
+    fn try_run_batch_counts_panics_without_panicking_caller() {
+        let pool = WorkerPool::new(2);
+        let done = std::sync::atomic::AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| {
+                done.fetch_add(1, Ordering::Relaxed);
+            }),
+            Box::new(|| panic!("boom")),
+            Box::new(|| panic!("boom again")),
+        ];
+        assert_eq!(pool.try_run_batch(jobs), 2);
+        assert_eq!(done.load(Ordering::Relaxed), 1);
+        assert_eq!(pool.respawns(), 0, "ordinary panics are caught per-job");
+    }
+
+    /// A panic payload whose own `Drop` panics escapes the per-job
+    /// `catch_unwind` (the second panic starts while the caught payload
+    /// is being discarded) and kills the worker thread.
+    struct HostilePayload;
+
+    impl Drop for HostilePayload {
+        fn drop(&mut self) {
+            panic!("payload drop bomb");
+        }
+    }
+
+    #[test]
+    fn worker_killed_by_hostile_payload_is_respawned() {
+        let pool = WorkerPool::new(1);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            vec![Box::new(|| std::panic::panic_any(HostilePayload))];
+        assert_eq!(pool.try_run_batch(jobs), 1);
+        // The sole worker thread died dropping the payload.  The
+        // respawn guard replaces it, so the next batch still runs —
+        // this blocks forever if no replacement thread comes up.
+        let done = std::sync::atomic::AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![Box::new(|| {
+            done.fetch_add(1, Ordering::Relaxed);
+        })];
+        assert_eq!(pool.try_run_batch(jobs), 0);
+        assert_eq!(done.load(Ordering::Relaxed), 1);
+        assert_eq!(pool.respawns(), 1);
     }
 }

@@ -34,9 +34,11 @@ use crate::gridflow::{
 };
 use crate::maxflow::{self, MaxFlowSolver};
 use crate::runtime::ArtifactRegistry;
+use crate::util::{CancelToken, Cancelled};
 use crate::workloads::ProblemInstance;
 
 use super::adaptive::{RoutingMode, TelemetrySink};
+use super::fault::{backoff_delay, FaultPlan, FaultyBackend};
 use super::pool::WorkerPool;
 use super::shard::SizeClass;
 use super::SolveOutcome;
@@ -93,7 +95,13 @@ pub trait Backend {
         true
     }
 
-    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome>;
+    /// Solve, polling `cancel` at whatever pause points the engine has
+    /// (host-round boundaries for the iterative grid/CSR engines; fast
+    /// direct solvers just check on entry).  A cancelled solve returns
+    /// the typed [`Cancelled`] error — the router treats it as a
+    /// deadline miss, not a backend fault (no penalty, no breaker, no
+    /// retry).
+    fn solve(&mut self, instance: &ProblemInstance, cancel: &CancelToken) -> Result<SolveOutcome>;
 }
 
 fn wrong_family(backend: &'static str, instance: &ProblemInstance) -> anyhow::Error {
@@ -118,7 +126,8 @@ impl Backend for HungarianBackend {
         Family::Assignment
     }
 
-    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome> {
+    fn solve(&mut self, instance: &ProblemInstance, cancel: &CancelToken) -> Result<SolveOutcome> {
+        cancel.check()?;
         match instance {
             ProblemInstance::Assignment(inst) => Ok(SolveOutcome::Assignment(
                 assignment::hungarian::Hungarian.solve(inst)?,
@@ -141,7 +150,8 @@ impl Backend for CsaSeqBackend {
         Family::Assignment
     }
 
-    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome> {
+    fn solve(&mut self, instance: &ProblemInstance, cancel: &CancelToken) -> Result<SolveOutcome> {
+        cancel.check()?;
         match instance {
             ProblemInstance::Assignment(inst) => Ok(SolveOutcome::Assignment(
                 assignment::csa::SequentialCsa::with_alpha(self.alpha).solve(inst)?,
@@ -165,7 +175,8 @@ impl Backend for CsaLockfreeBackend {
         Family::Assignment
     }
 
-    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome> {
+    fn solve(&mut self, instance: &ProblemInstance, cancel: &CancelToken) -> Result<SolveOutcome> {
+        cancel.check()?;
         match instance {
             ProblemInstance::Assignment(inst) => Ok(SolveOutcome::Assignment(
                 assignment::csa_lockfree::LockFreeCsa {
@@ -192,7 +203,8 @@ impl Backend for WaveCsaBackend {
         Family::Assignment
     }
 
-    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome> {
+    fn solve(&mut self, instance: &ProblemInstance, cancel: &CancelToken) -> Result<SolveOutcome> {
+        cancel.check()?;
         match instance {
             ProblemInstance::Assignment(inst) => Ok(SolveOutcome::Assignment(
                 assignment::wave::WaveCsa {
@@ -227,7 +239,8 @@ impl Backend for PjrtBackend {
         }
     }
 
-    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome> {
+    fn solve(&mut self, instance: &ProblemInstance, cancel: &CancelToken) -> Result<SolveOutcome> {
+        cancel.check()?;
         match instance {
             ProblemInstance::Assignment(inst) => {
                 let (result, _tel) = self.driver.solve(inst)?;
@@ -256,10 +269,12 @@ impl Backend for NativeGridBackend {
         Family::Grid
     }
 
-    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome> {
+    fn solve(&mut self, instance: &ProblemInstance, cancel: &CancelToken) -> Result<SolveOutcome> {
         match instance {
             ProblemInstance::Grid(net) => Ok(SolveOutcome::Grid(
-                HybridGridSolver::with_cycle(self.cycle_waves).solve(net, &mut self.exec)?,
+                HybridGridSolver::with_cycle(self.cycle_waves)
+                    .with_cancel(cancel.clone())
+                    .solve(net, &mut self.exec)?,
             )),
             other => Err(wrong_family(self.name(), other)),
         }
@@ -284,11 +299,12 @@ impl Backend for NativeParGridBackend {
         Family::Grid
     }
 
-    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome> {
+    fn solve(&mut self, instance: &ProblemInstance, cancel: &CancelToken) -> Result<SolveOutcome> {
         match instance {
             ProblemInstance::Grid(net) => Ok(SolveOutcome::Grid(
                 HybridGridSolver::with_cycle(self.cycle_waves)
                     .with_host_rounds(self.host_rounds)
+                    .with_cancel(cancel.clone())
                     .solve(net, &mut self.exec)?,
             )),
             other => Err(wrong_family(self.name(), other)),
@@ -304,10 +320,11 @@ struct FifoLockfreeBackend {
 }
 
 impl FifoLockfreeBackend {
-    fn solve_grid(&self, net: &GridNetwork) -> Result<GridSolveReport> {
+    fn solve_grid(&self, net: &GridNetwork, cancel: &CancelToken) -> Result<GridSolveReport> {
         let mut g = net.to_flow_network();
         let stats = maxflow::lockfree::LockFree {
             threads: self.threads.max(1),
+            cancel: Some(cancel.clone()),
             ..Default::default()
         }
         .solve(&mut g)?;
@@ -331,9 +348,9 @@ impl Backend for FifoLockfreeBackend {
         Family::Grid
     }
 
-    fn solve(&mut self, instance: &ProblemInstance) -> Result<SolveOutcome> {
+    fn solve(&mut self, instance: &ProblemInstance, cancel: &CancelToken) -> Result<SolveOutcome> {
         match instance {
-            ProblemInstance::Grid(net) => Ok(SolveOutcome::Grid(self.solve_grid(net)?)),
+            ProblemInstance::Grid(net) => Ok(SolveOutcome::Grid(self.solve_grid(net, cancel)?)),
             other => Err(wrong_family(self.name(), other)),
         }
     }
@@ -446,7 +463,10 @@ impl BackendRegistry {
     }
 
     /// Build every available backend for one worker, in registration
-    /// order.
+    /// order.  When a [`FaultPlan`] targets one of them, the built
+    /// backend is wrapped in a [`FaultyBackend`] — the injection point
+    /// of the chaos harness, inside the registry so faults flow through
+    /// the production routing/retry/breaker machinery.
     fn instantiate(
         &self,
         cfg: &RouterConfig,
@@ -454,7 +474,15 @@ impl BackendRegistry {
     ) -> Vec<Box<dyn Backend>> {
         self.specs
             .iter()
-            .filter_map(|s| (s.build)(cfg, pool))
+            .filter_map(|s| {
+                let built = (s.build)(cfg, pool)?;
+                Some(match &cfg.fault {
+                    Some(plan) if plan.target == s.name => {
+                        Box::new(FaultyBackend::wrap(built, plan.clone())) as Box<dyn Backend>
+                    }
+                    _ => built,
+                })
+            })
             .collect()
     }
 }
@@ -574,6 +602,21 @@ pub struct RouterConfig {
     /// spill whenever the check runs, useful in tests; has no effect in
     /// static mode).
     pub spill_depth: usize,
+    /// Retries after a failed/panicked solve, each routed to the
+    /// next-best *different* backend (0 = fail fast).
+    pub max_retries: u32,
+    /// Base of the deterministic exponential backoff between retries,
+    /// in milliseconds (0 = retry immediately).
+    pub retry_backoff_ms: u64,
+    /// Consecutive failures that trip a per-(family × class × backend)
+    /// circuit breaker (0 disables breakers).
+    pub breaker_threshold: usize,
+    /// Completed requests an open breaker waits before admitting a
+    /// half-open probe (request-counted, not wall clock).
+    pub breaker_cooldown: usize,
+    /// Chaos harness: wrap the targeted backend in a [`FaultyBackend`]
+    /// driven by this plan (`loadgen --chaos <seed>`).
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for RouterConfig {
@@ -596,6 +639,11 @@ impl Default for RouterConfig {
             routing: RoutingMode::Static,
             probe_every: 8,
             spill_depth: 8,
+            max_retries: 2,
+            retry_backoff_ms: 2,
+            breaker_threshold: 3,
+            breaker_cooldown: 8,
+            fault: None,
         }
     }
 }
@@ -610,6 +658,43 @@ impl Default for RouterConfig {
 /// loses the winner contest until probes see it succeed again.
 const FAILURE_PENALTY: f64 = 8.0;
 const MIN_FAILURE_SECS: f64 = 0.050;
+
+/// A served request: the outcome plus how hard the service had to work
+/// for it (retries taken, open breakers routed around).
+#[derive(Debug)]
+pub(crate) struct SolveAttempts {
+    pub outcome: SolveOutcome,
+    /// Backend that finally served the request.
+    pub backend: &'static str,
+    pub retries: u32,
+    pub breaker_skips: u32,
+}
+
+/// A request that exhausted its attempts (or was cancelled).
+#[derive(Debug)]
+pub(crate) struct SolveFailure {
+    /// Human-readable description of the *last* attempt's failure.
+    pub error: String,
+    pub retries: u32,
+    /// The solve was cancelled (deadline), not a backend fault.
+    pub cancelled: bool,
+}
+
+impl std::fmt::Display for SolveFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.error)
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
 
 /// Per-worker backend state: every available engine instantiated from
 /// the registry (scratch survives across requests), the routing config,
@@ -629,7 +714,11 @@ impl WorkerBackends {
     /// pool the `native-par` backend borrows (None: fall back to
     /// per-wave scoped threads).
     pub fn new(cfg: RouterConfig, wave_pool: Option<&Arc<WorkerPool>>) -> Self {
-        let sink = Arc::new(TelemetrySink::new(cfg.probe_every));
+        let sink = Arc::new(TelemetrySink::with_breaker(
+            cfg.probe_every,
+            cfg.breaker_threshold,
+            cfg.breaker_cooldown,
+        ));
         Self::with_telemetry(cfg, wave_pool, sink)
     }
 
@@ -670,9 +759,26 @@ impl WorkerBackends {
         }
     }
 
+    /// Registered backends that can serve this instance, in
+    /// registration order — the fallback chain.
+    fn family_candidates(&self, family: Family, instance: &ProblemInstance) -> Vec<&'static str> {
+        self.backends
+            .iter()
+            .filter(|b| b.family() == family && b.accepts(instance))
+            .map(|b| b.name())
+            .collect()
+    }
+
     /// Adaptive routing: saturation spill first, then the telemetry
-    /// sink's cold-start / probe / winner decision.
-    fn route_adaptive(&self, class: SizeClass, instance: &ProblemInstance) -> &'static str {
+    /// sink's cold-start / probe / winner decision over the candidates
+    /// whose breakers admit traffic (all of them, if every breaker for
+    /// the pair is open — a guess beats an unconditional failure).
+    fn route_adaptive(
+        &self,
+        class: SizeClass,
+        instance: &ProblemInstance,
+        skips: &mut u32,
+    ) -> &'static str {
         let family = Family::of(instance);
         if family == Family::Grid && class == SizeClass::Large {
             if let Some(pool) = &self.wave_pool {
@@ -682,61 +788,199 @@ impl WorkerBackends {
                 }
             }
         }
-        let candidates: Vec<&'static str> = self
-            .backends
+        let candidates = self.family_candidates(family, instance);
+        let allowed: Vec<&'static str> = candidates
             .iter()
-            .filter(|b| b.family() == family && b.accepts(instance))
-            .map(|b| b.name())
+            .copied()
+            .filter(|&n| self.telemetry.breaker_allows(family, class, n))
             .collect();
-        self.telemetry.choose(family, class, &candidates)
+        let pick_from = if allowed.is_empty() { &candidates } else { &allowed };
+        *skips += (candidates.len() - pick_from.len()) as u32;
+        self.telemetry.choose(family, class, pick_from)
     }
 
-    /// Solve one request; returns the outcome plus the backend name
-    /// that actually served it.  Every solve's latency (excluding queue
-    /// delay) feeds the telemetry sink in both routing modes — that is
-    /// what populates the per-backend route counts and EWMAs surfaced
-    /// in `PoolReport::routes` and the CLI route table.
+    /// First-attempt route: the mode's usual decision, with open
+    /// breakers routed around in both modes.
+    fn primary_route(
+        &self,
+        class: SizeClass,
+        instance: &ProblemInstance,
+        skips: &mut u32,
+    ) -> &'static str {
+        match self.cfg.routing {
+            RoutingMode::Adaptive => self.route_adaptive(class, instance, skips),
+            RoutingMode::Static => {
+                let name = self.route_static(class, instance);
+                let family = Family::of(instance);
+                if self.telemetry.breaker_allows(family, class, name) {
+                    return name;
+                }
+                // The table's pick has an open breaker: take the first
+                // registered alternative whose breaker admits traffic
+                // (or the original pick if every breaker is open).
+                match self
+                    .family_candidates(family, instance)
+                    .into_iter()
+                    .find(|&n| n != name && self.telemetry.breaker_allows(family, class, n))
+                {
+                    Some(alt) => {
+                        *skips += 1;
+                        alt
+                    }
+                    None => name,
+                }
+            }
+        }
+    }
+
+    /// Next backend for a retry: the first candidate (registration
+    /// order) not yet tried for this request, preferring ones whose
+    /// breaker admits traffic.  `None` once every candidate was tried.
+    fn next_fallback(
+        &self,
+        family: Family,
+        class: SizeClass,
+        instance: &ProblemInstance,
+        tried: &[&'static str],
+        skips: &mut u32,
+    ) -> Option<&'static str> {
+        let untried: Vec<&'static str> = self
+            .family_candidates(family, instance)
+            .into_iter()
+            .filter(|n| !tried.contains(n))
+            .collect();
+        match untried
+            .iter()
+            .position(|&n| self.telemetry.breaker_allows(family, class, n))
+        {
+            Some(i) => {
+                *skips += i as u32;
+                Some(untried[i])
+            }
+            None => untried.first().copied(),
+        }
+    }
+
+    /// Serve one request end to end: route (around open breakers),
+    /// solve with per-attempt panic isolation, and on failure retry up
+    /// to `max_retries` times with deterministic exponential backoff,
+    /// each retry on the next untried backend of the fallback chain.
+    ///
+    /// Every attempt's latency (excluding queue delay) feeds the
+    /// telemetry sink in both routing modes — that is what populates
+    /// the per-backend route counts and EWMAs surfaced in
+    /// `PoolReport::routes` and the CLI route table.  Failed attempts
+    /// are measured with the failure penalty (a failing backend must
+    /// not look cheap, nor stay unmeasured and cold-start forever) and
+    /// advance that backend's breaker; a [`Cancelled`] solve is a
+    /// deadline miss, not a backend fault — no penalty, no breaker
+    /// strike, no retry.
     pub fn solve(
         &mut self,
         class: SizeClass,
         instance: &ProblemInstance,
-    ) -> Result<(SolveOutcome, &'static str)> {
-        let name = match self.cfg.routing {
-            RoutingMode::Static => self.route_static(class, instance),
-            RoutingMode::Adaptive => self.route_adaptive(class, instance),
-        };
-        let idx = self
-            .index_of(name)
-            .ok_or_else(|| anyhow::anyhow!("backend {name:?} not available on this worker"))?;
-        let t = Instant::now();
-        let outcome = self.backends[idx].solve(instance);
-        let elapsed = t.elapsed().as_secs_f64();
-        match outcome {
-            Ok(out) => {
-                self.telemetry.record(Family::of(instance), class, name, elapsed);
-                Ok((out, name))
+        cancel: &CancelToken,
+    ) -> Result<SolveAttempts, SolveFailure> {
+        let family = Family::of(instance);
+        let mut tried: Vec<&'static str> = Vec::new();
+        let mut breaker_skips = 0u32;
+        let mut retries = 0u32;
+        let mut last_err = String::from("no backend available for this request");
+        for attempt in 0..=self.cfg.max_retries {
+            let name = if attempt == 0 {
+                self.primary_route(class, instance, &mut breaker_skips)
+            } else {
+                match self.next_fallback(family, class, instance, &tried, &mut breaker_skips) {
+                    Some(n) => n,
+                    None => break, // fallback chain exhausted
+                }
+            };
+            if attempt > 0 {
+                if cancel.is_cancelled() {
+                    self.telemetry.request_completed(family, class);
+                    return Err(SolveFailure {
+                        error: Cancelled.to_string(),
+                        retries,
+                        cancelled: true,
+                    });
+                }
+                std::thread::sleep(backoff_delay(self.cfg.retry_backoff_ms, attempt));
+                retries += 1;
             }
-            Err(e) => {
-                // A failing backend must still be measured: with no
-                // sample its count stays 0 and adaptive cold start
-                // would re-select it forever.  The penalty is finite
-                // (not ∞) so later successful probes can rehabilitate
-                // a backend that recovers.
-                self.telemetry.record(
-                    Family::of(instance),
-                    class,
-                    name,
-                    elapsed.max(MIN_FAILURE_SECS) * FAILURE_PENALTY,
-                );
-                Err(e)
+            let Some(idx) = self.index_of(name) else {
+                tried.push(name);
+                last_err = format!("backend {name:?} not available on this worker");
+                continue;
+            };
+            tried.push(name);
+            let t = Instant::now();
+            // Panic isolation per attempt: a panicking backend becomes
+            // a failed attempt (retried on the fallback), not a dead
+            // solver worker.  The engine's scratch is rebuilt lazily by
+            // its next solve, so unwind-safety is not a concern here.
+            let backend = &mut self.backends[idx];
+            let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                backend.solve(instance, cancel)
+            }));
+            let elapsed = t.elapsed().as_secs_f64();
+            match solved {
+                Ok(Ok(out)) => {
+                    self.telemetry.record(family, class, name, elapsed);
+                    self.telemetry.record_breaker_success(family, class, name);
+                    self.telemetry.request_completed(family, class);
+                    return Ok(SolveAttempts {
+                        outcome: out,
+                        backend: name,
+                        retries,
+                        breaker_skips,
+                    });
+                }
+                Ok(Err(e)) if Cancelled::caused(&e) => {
+                    self.telemetry.request_completed(family, class);
+                    return Err(SolveFailure {
+                        error: format!("{e:#}"),
+                        retries,
+                        cancelled: true,
+                    });
+                }
+                Ok(Err(e)) => {
+                    self.telemetry.record(
+                        family,
+                        class,
+                        name,
+                        elapsed.max(MIN_FAILURE_SECS) * FAILURE_PENALTY,
+                    );
+                    self.telemetry.record_breaker_failure(family, class, name);
+                    last_err = format!("solver error: {e:#}");
+                }
+                Err(payload) => {
+                    self.telemetry.record(
+                        family,
+                        class,
+                        name,
+                        elapsed.max(MIN_FAILURE_SECS) * FAILURE_PENALTY,
+                    );
+                    self.telemetry.record_breaker_failure(family, class, name);
+                    last_err = format!("solver panicked: {}", panic_message(payload.as_ref()));
+                }
             }
         }
+        self.telemetry.request_completed(family, class);
+        Err(SolveFailure {
+            error: last_err,
+            retries,
+            cancelled: false,
+        })
     }
 
     /// Test hook: build against an arbitrary registry (fault injection).
     #[cfg(test)]
     fn with_registry_for_tests(cfg: RouterConfig, registry: &BackendRegistry) -> Self {
-        let telemetry = Arc::new(TelemetrySink::new(cfg.probe_every));
+        let telemetry = Arc::new(TelemetrySink::with_breaker(
+            cfg.probe_every,
+            cfg.breaker_threshold,
+            cfg.breaker_cooldown,
+        ));
         let backends = registry.instantiate(&cfg, None);
         Self {
             cfg,
@@ -751,7 +995,12 @@ impl WorkerBackends {
         let idx = self
             .index_of(name)
             .ok_or_else(|| anyhow::anyhow!("backend {name:?} not available"))?;
-        self.backends[idx].solve(instance)
+        self.backends[idx].solve(instance, &CancelToken::new())
+    }
+
+    #[cfg(test)]
+    fn telemetry(&self) -> &TelemetrySink {
+        &self.telemetry
     }
 }
 
@@ -814,16 +1063,19 @@ mod tests {
     #[test]
     fn routes_by_class_and_solves_optimally() {
         let mut backends = WorkerBackends::new(RouterConfig::default(), None);
+        let cancel = CancelToken::new();
         let mut rng = Rng::seeded(11);
         let inst = uniform_costs(&mut rng, 12, 50);
         let want = Hungarian.solve(&inst).unwrap().weight;
         for class in SizeClass::ALL {
-            let (out, name) = backends
-                .solve(class, &ProblemInstance::Assignment(inst.clone()))
+            let served = backends
+                .solve(class, &ProblemInstance::Assignment(inst.clone()), &cancel)
                 .unwrap();
-            assert_eq!(out.weight(), Some(want), "class {}", class.name());
+            assert_eq!(served.outcome.weight(), Some(want), "class {}", class.name());
             let expected = RouterConfig::default().assign[class.index()].name();
-            assert_eq!(name, expected);
+            assert_eq!(served.backend, expected);
+            assert_eq!(served.retries, 0);
+            assert_eq!(served.breaker_skips, 0);
         }
     }
 
@@ -869,12 +1121,22 @@ mod tests {
         let inst = uniform_costs(&mut rng, 10, 40);
         let want = Hungarian.solve(&inst).unwrap().weight;
         let mut seen = std::collections::BTreeSet::new();
+        let cancel = CancelToken::new();
         for _ in 0..4 {
-            let (out, name) = backends
-                .solve(SizeClass::Small, &ProblemInstance::Assignment(inst.clone()))
+            let served = backends
+                .solve(
+                    SizeClass::Small,
+                    &ProblemInstance::Assignment(inst.clone()),
+                    &cancel,
+                )
                 .unwrap();
-            assert_eq!(out.weight(), Some(want), "backend {name} suboptimal");
-            seen.insert(name);
+            assert_eq!(
+                served.outcome.weight(),
+                Some(want),
+                "backend {} suboptimal",
+                served.backend
+            );
+            seen.insert(served.backend);
         }
         // use_pjrt = false → exactly the four native engines, each
         // probed once during cold start.
@@ -895,16 +1157,12 @@ mod tests {
             Family::Assignment
         }
 
-        fn solve(&mut self, _instance: &ProblemInstance) -> Result<SolveOutcome> {
+        fn solve(&mut self, _: &ProblemInstance, _: &CancelToken) -> Result<SolveOutcome> {
             bail!("injected failure")
         }
     }
 
-    /// A backend whose every solve errors must still get measured (with
-    /// the failure penalty) — otherwise adaptive cold start, which
-    /// prefers unmeasured candidates, would re-select it forever.
-    #[test]
-    fn failing_backend_is_demoted_not_repinned() {
+    fn broken_plus_hungarian() -> BackendRegistry {
         let mut reg = BackendRegistry::new();
         reg.register("always-fails", Family::Assignment, |_, _| {
             Some(Box::new(AlwaysFails))
@@ -912,24 +1170,207 @@ mod tests {
         reg.register("hungarian", Family::Assignment, |_, _| {
             Some(Box::new(HungarianBackend))
         });
+        reg
+    }
+
+    /// A backend whose every solve errors must still get measured (with
+    /// the failure penalty) — otherwise adaptive cold start, which
+    /// prefers unmeasured candidates, would re-select it forever.
+    /// `max_retries = 0` isolates the routing behaviour from the retry
+    /// machinery (which would otherwise mask the first failure).
+    #[test]
+    fn failing_backend_is_demoted_not_repinned() {
         let cfg = RouterConfig {
             routing: RoutingMode::Adaptive,
             probe_every: 0,
+            max_retries: 0,
+            breaker_threshold: 0,
             ..RouterConfig::default()
         };
-        let mut backends = WorkerBackends::with_registry_for_tests(cfg, &reg);
+        let mut backends = WorkerBackends::with_registry_for_tests(cfg, &broken_plus_hungarian());
+        let cancel = CancelToken::new();
         let mut rng = Rng::seeded(16);
         let inst = ProblemInstance::Assignment(uniform_costs(&mut rng, 6, 20));
         // Cold start hits the broken engine first; the error propagates.
-        let err = backends.solve(SizeClass::Small, &inst).unwrap_err();
-        assert!(err.to_string().contains("injected failure"), "{err}");
+        let err = backends.solve(SizeClass::Small, &inst, &cancel).unwrap_err();
+        assert!(err.error.contains("injected failure"), "{}", err.error);
+        assert!(!err.cancelled);
         // But the failure was recorded (penalised), so the router cold
         // starts the healthy engine next and then keeps winning with it
         // instead of re-pinning the broken one.
         for _ in 0..3 {
-            let (_, name) = backends.solve(SizeClass::Small, &inst).unwrap();
-            assert_eq!(name, "hungarian");
+            let served = backends.solve(SizeClass::Small, &inst, &cancel).unwrap();
+            assert_eq!(served.backend, "hungarian");
         }
+    }
+
+    /// Retry-with-fallback: the first attempt lands on the broken
+    /// engine (adaptive cold start, registration order), the retry goes
+    /// to the next *different* backend and succeeds.
+    #[test]
+    fn retry_falls_back_to_next_backend() {
+        let cfg = RouterConfig {
+            routing: RoutingMode::Adaptive,
+            probe_every: 0,
+            max_retries: 2,
+            retry_backoff_ms: 0,
+            breaker_threshold: 0,
+            ..RouterConfig::default()
+        };
+        let mut backends = WorkerBackends::with_registry_for_tests(cfg, &broken_plus_hungarian());
+        let mut rng = Rng::seeded(17);
+        let raw = uniform_costs(&mut rng, 6, 20);
+        let want = Hungarian.solve(&raw).unwrap().weight;
+        let inst = ProblemInstance::Assignment(raw);
+        let served = backends
+            .solve(SizeClass::Small, &inst, &CancelToken::new())
+            .unwrap();
+        assert_eq!(served.backend, "hungarian");
+        assert_eq!(served.retries, 1, "exactly one retry");
+        assert_eq!(served.outcome.weight(), Some(want));
+    }
+
+    /// Circuit breaker: after `breaker_threshold` consecutive failures
+    /// the broken engine's breaker opens and the router stops offering
+    /// it first attempts — requests go straight to the fallback with no
+    /// retries, and the skip is counted.
+    #[test]
+    fn breaker_opens_and_routes_around() {
+        let cfg = RouterConfig {
+            routing: RoutingMode::Adaptive,
+            probe_every: 0,
+            max_retries: 1,
+            retry_backoff_ms: 0,
+            breaker_threshold: 2,
+            breaker_cooldown: 100, // stays open for the whole test
+            ..RouterConfig::default()
+        };
+        let mut backends = WorkerBackends::with_registry_for_tests(cfg, &broken_plus_hungarian());
+        let cancel = CancelToken::new();
+        let mut rng = Rng::seeded(18);
+        let inst = ProblemInstance::Assignment(uniform_costs(&mut rng, 6, 20));
+        // Two requests fail over to hungarian, each charging the broken
+        // engine one breaker strike...
+        for _ in 0..2 {
+            let served = backends.solve(SizeClass::Small, &inst, &cancel).unwrap();
+            assert_eq!(served.backend, "hungarian");
+            assert_eq!(served.retries, 1);
+        }
+        assert!(!backends.telemetry().breaker_allows(
+            Family::Assignment,
+            SizeClass::Small,
+            "always-fails"
+        ));
+        // ...after which the open breaker is routed around up front.
+        let served = backends.solve(SizeClass::Small, &inst, &cancel).unwrap();
+        assert_eq!(served.backend, "hungarian");
+        assert_eq!(served.retries, 0, "no retry needed once the breaker is open");
+        assert!(served.breaker_skips >= 1);
+        let snap = backends.telemetry().breaker_snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].state, "open");
+        assert_eq!(snap[0].backend, "always-fails");
+    }
+
+    /// A panicking backend is a failed attempt, not a dead worker: the
+    /// panic is caught, penalised, and retried on the fallback.
+    struct AlwaysPanics;
+
+    impl Backend for AlwaysPanics {
+        fn name(&self) -> &'static str {
+            "always-panics"
+        }
+
+        fn family(&self) -> Family {
+            Family::Assignment
+        }
+
+        fn solve(&mut self, _: &ProblemInstance, _: &CancelToken) -> Result<SolveOutcome> {
+            panic!("injected panic")
+        }
+    }
+
+    #[test]
+    fn panicking_backend_is_caught_and_retried() {
+        let mut reg = BackendRegistry::new();
+        reg.register("always-panics", Family::Assignment, |_, _| {
+            Some(Box::new(AlwaysPanics))
+        });
+        reg.register("hungarian", Family::Assignment, |_, _| {
+            Some(Box::new(HungarianBackend))
+        });
+        let cfg = RouterConfig {
+            routing: RoutingMode::Adaptive,
+            probe_every: 0,
+            max_retries: 1,
+            retry_backoff_ms: 0,
+            ..RouterConfig::default()
+        };
+        let mut backends = WorkerBackends::with_registry_for_tests(cfg, &reg);
+        let mut rng = Rng::seeded(19);
+        let inst = ProblemInstance::Assignment(uniform_costs(&mut rng, 6, 20));
+        let served = backends
+            .solve(SizeClass::Small, &inst, &CancelToken::new())
+            .unwrap();
+        assert_eq!(served.backend, "hungarian");
+        assert_eq!(served.retries, 1);
+
+        // With retries off, the panic surfaces as a failure message.
+        let cfg = RouterConfig {
+            routing: RoutingMode::Adaptive,
+            probe_every: 0,
+            max_retries: 0,
+            ..RouterConfig::default()
+        };
+        let mut backends = WorkerBackends::with_registry_for_tests(cfg, &reg);
+        let err = backends
+            .solve(SizeClass::Small, &inst, &CancelToken::new())
+            .unwrap_err();
+        assert!(err.error.contains("injected panic"), "{}", err.error);
+    }
+
+    /// A pre-expired deadline cancels instead of failing: no retry, no
+    /// breaker strike, and the failure is marked `cancelled`.
+    #[test]
+    fn cancelled_solve_is_not_retried() {
+        let cfg = RouterConfig {
+            routing: RoutingMode::Adaptive,
+            probe_every: 0,
+            max_retries: 2,
+            ..RouterConfig::default()
+        };
+        let mut backends = WorkerBackends::new(cfg, None);
+        let expired =
+            CancelToken::with_deadline(Some(Instant::now() - std::time::Duration::from_millis(1)));
+        let mut rng = Rng::seeded(20);
+        let inst = ProblemInstance::Assignment(uniform_costs(&mut rng, 6, 20));
+        let err = backends.solve(SizeClass::Small, &inst, &expired).unwrap_err();
+        assert!(err.cancelled, "{}", err.error);
+        assert_eq!(err.retries, 0, "cancellation must not burn retries");
+        assert_eq!(backends.telemetry().breaker_snapshot().len(), 0);
+    }
+
+    /// The chaos wrapper sits inside the registry: a `FaultPlan`
+    /// targeting a backend makes exactly that backend misbehave on
+    /// schedule, and the retry path absorbs it.
+    #[test]
+    fn fault_plan_wraps_target_in_registry() {
+        let cfg = RouterConfig {
+            max_retries: 1,
+            retry_backoff_ms: 0,
+            fault: Some(FaultPlan::new("native").with_fail_every(1)),
+            ..RouterConfig::default()
+        };
+        let mut backends = WorkerBackends::new(cfg, None);
+        let mut rng = Rng::seeded(21);
+        let net = random_grid(&mut rng, 6, 6, 5, 0.3, 0.3);
+        // Static Small grid route is "native" — every solve fails, so
+        // the retry lands on the next grid backend.
+        let served = backends
+            .solve(SizeClass::Small, &ProblemInstance::Grid(net), &CancelToken::new())
+            .unwrap();
+        assert_eq!(served.retries, 1);
+        assert_ne!(served.backend, "native");
     }
 
     /// Saturation spill: with the shared wave pool's queue backed up
@@ -980,11 +1421,19 @@ mod tests {
             std::thread::yield_now();
         }
 
-        let (out, name) = backends
-            .solve(SizeClass::Large, &ProblemInstance::Grid(net.clone()))
+        let served = backends
+            .solve(
+                SizeClass::Large,
+                &ProblemInstance::Grid(net.clone()),
+                &CancelToken::new(),
+            )
             .unwrap();
-        assert_eq!(name, "fifo-lockfree", "saturated pool must spill");
-        assert_eq!(out.flow(), Some(want), "spilled solve changed the flow");
+        assert_eq!(served.backend, "fifo-lockfree", "saturated pool must spill");
+        assert_eq!(
+            served.outcome.flow(),
+            Some(want),
+            "spilled solve changed the flow"
+        );
 
         // Open the gate; once the pool drains, Large grids route
         // normally again (cold start: first un-measured grid engine).
@@ -995,9 +1444,9 @@ mod tests {
         }
         blocked.join().unwrap();
         assert_eq!(pool.pending(), 0);
-        let (_, name) = backends
-            .solve(SizeClass::Large, &ProblemInstance::Grid(net))
+        let served = backends
+            .solve(SizeClass::Large, &ProblemInstance::Grid(net), &CancelToken::new())
             .unwrap();
-        assert_ne!(name, "fifo-lockfree", "drained pool must not spill");
+        assert_ne!(served.backend, "fifo-lockfree", "drained pool must not spill");
     }
 }

@@ -19,7 +19,7 @@ use std::time::Instant;
 
 use crate::workloads::ProblemInstance;
 
-use super::SolveReply;
+use super::{ReplyError, SolveReply};
 
 /// The three shard classes, by work units.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -102,6 +102,10 @@ pub enum RejectReason {
     QueueFull { class: SizeClass, depth: usize },
     /// The instance exceeds the admission cap.
     TooLarge { units: usize, max_units: usize },
+    /// The request's deadline passed before a worker picked it up, so
+    /// the solve was shed instead of burning a worker on a result the
+    /// client has already given up on.
+    DeadlineExceeded,
     /// The pool is shutting down.
     ShuttingDown,
 }
@@ -113,6 +117,7 @@ impl RejectReason {
         match self {
             RejectReason::QueueFull { .. } => "queue-full",
             RejectReason::TooLarge { .. } => "too-large",
+            RejectReason::DeadlineExceeded => "deadline",
             RejectReason::ShuttingDown => "shutting-down",
         }
     }
@@ -130,6 +135,9 @@ impl fmt::Display for RejectReason {
                 f,
                 "instance too large: {units} work units exceed the admission cap {max_units}"
             ),
+            RejectReason::DeadlineExceeded => {
+                write!(f, "deadline exceeded before dispatch (request shed)")
+            }
             RejectReason::ShuttingDown => write!(f, "solver pool is shutting down"),
         }
     }
@@ -141,7 +149,11 @@ pub(crate) struct QueuedJob {
     pub class: SizeClass,
     pub instance: ProblemInstance,
     pub submitted: Instant,
-    pub reply: std::sync::mpsc::Sender<Result<SolveReply, String>>,
+    /// Absolute deadline; a worker that pops the job after this instant
+    /// sheds it with [`RejectReason::DeadlineExceeded`], and a solve in
+    /// flight past it is cancelled at the next poll point.
+    pub deadline: Option<Instant>,
+    pub reply: std::sync::mpsc::Sender<Result<SolveReply, ReplyError>>,
 }
 
 struct State {
@@ -258,6 +270,7 @@ mod tests {
             class,
             instance: ProblemInstance::Assignment(AssignmentInstance::new(2, vec![0; 4])),
             submitted: Instant::now(),
+            deadline: None,
             reply: tx,
         }
     }
@@ -365,5 +378,9 @@ mod tests {
         assert!(large.to_string().contains("too large"));
         assert_eq!(large.label(), "too-large");
         assert_eq!(RejectReason::ShuttingDown.label(), "shutting-down");
+        assert_eq!(RejectReason::DeadlineExceeded.label(), "deadline");
+        assert!(RejectReason::DeadlineExceeded
+            .to_string()
+            .contains("deadline exceeded"));
     }
 }

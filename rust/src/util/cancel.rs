@@ -1,0 +1,137 @@
+//! Cooperative cancellation: a cloneable token long-running solves poll
+//! at their natural pause points (host-round boundaries, global-relabel
+//! entry points).
+//!
+//! A token is cancelled either explicitly ([`CancelToken::cancel`], any
+//! clone observes it) or implicitly by an attached deadline.  Engines
+//! call [`CancelToken::check`] and propagate the typed [`Cancelled`]
+//! error through their ordinary `Result` plumbing; the service detects
+//! it by downcast ([`Cancelled::caused`]) and turns it into a
+//! deadline-exceeded reply instead of a retryable backend failure.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The typed cancellation error.  Kept payload-free so it survives any
+/// number of `anyhow` context layers and can be recognised by downcast.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cancelled;
+
+impl fmt::Display for Cancelled {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "solve cancelled (deadline exceeded or caller gave up)")
+    }
+}
+
+impl std::error::Error for Cancelled {}
+
+impl Cancelled {
+    /// Whether `err` is (or wraps) a cancellation.  `anyhow` preserves
+    /// downcast through `.context(...)` layers, so engines may annotate
+    /// the error freely as long as they propagate it with `?`.
+    pub fn caused(err: &anyhow::Error) -> bool {
+        err.downcast_ref::<Cancelled>().is_some()
+    }
+}
+
+/// A cloneable cancel token: all clones share one flag, and an optional
+/// deadline cancels the token implicitly once it passes.  There is no
+/// timer thread — the deadline is evaluated lazily at each poll, which
+/// is exactly the granularity cooperative cancellation can honour.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    /// A token that only cancels explicitly.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A token that also cancels once `deadline` passes (`None` behaves
+    /// like [`CancelToken::new`]).
+    pub fn with_deadline(deadline: Option<Instant>) -> Self {
+        Self {
+            flag: Arc::new(AtomicBool::new(false)),
+            deadline,
+        }
+    }
+
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    /// Cancel explicitly; every clone observes it.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        if self.flag.load(Ordering::Acquire) {
+            return true;
+        }
+        match self.deadline {
+            Some(dl) => Instant::now() >= dl,
+            None => false,
+        }
+    }
+
+    /// Poll point: `Err(Cancelled)` once the token is cancelled.  The
+    /// `?` operator converts into `anyhow::Error` at engine call sites.
+    pub fn check(&self) -> Result<(), Cancelled> {
+        if self.is_cancelled() {
+            Err(Cancelled)
+        } else {
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fresh_token_is_live() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        assert!(t.check().is_ok());
+    }
+
+    #[test]
+    fn explicit_cancel_is_shared_across_clones() {
+        let t = CancelToken::new();
+        let clone = t.clone();
+        clone.cancel();
+        assert!(t.is_cancelled());
+        assert_eq!(t.check(), Err(Cancelled));
+    }
+
+    #[test]
+    fn past_deadline_cancels_implicitly() {
+        let t = CancelToken::with_deadline(Some(Instant::now() - Duration::from_millis(1)));
+        assert!(t.is_cancelled());
+        let future = CancelToken::with_deadline(Some(Instant::now() + Duration::from_secs(3600)));
+        assert!(!future.is_cancelled());
+    }
+
+    #[test]
+    fn cancelled_survives_anyhow_context() {
+        use anyhow::Context;
+        let t = CancelToken::new();
+        t.cancel();
+        let err: anyhow::Error = t
+            .check()
+            .context("inside the hybrid loop")
+            .context("request 42")
+            .unwrap_err();
+        assert!(Cancelled::caused(&err), "{err:#}");
+        let other = anyhow::anyhow!("unrelated");
+        assert!(!Cancelled::caused(&other));
+    }
+}

@@ -4,11 +4,13 @@
 //! the crates a project would normally pull in (`rand`, `log`, `criterion`
 //! internals) are provided here as minimal, well-tested equivalents.
 
+pub mod cancel;
 pub mod logging;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
+pub use cancel::{CancelToken, Cancelled};
 pub use rng::Rng;
 pub use stats::Summary;
 pub use timer::Timer;

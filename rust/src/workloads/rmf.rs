@@ -64,20 +64,24 @@ mod tests {
     }
 
     #[test]
-    fn engines_agree_on_rmf() {
+    fn engines_agree_on_rmf() -> anyhow::Result<()> {
+        use anyhow::Context;
         let mut rng = Rng::seeded(3);
         let base = rmf_network(&mut rng, 3, 3, 8);
         let mut value = None;
         for engine in maxflow::all_engines() {
             let mut g = base.clone();
-            let stats = engine.solve(&mut g).unwrap();
+            let stats = engine
+                .solve(&mut g)
+                .with_context(|| format!("{} solve", engine.name()))?;
             crate::graph::validate::assert_max_flow(&g, stats.value)
-                .unwrap_or_else(|e| panic!("{}: {e}", engine.name()));
+                .with_context(|| format!("{} certificate", engine.name()))?;
             match value {
                 None => value = Some(stats.value),
                 Some(v) => assert_eq!(stats.value, v, "{}", engine.name()),
             }
         }
         assert!(value.unwrap() > 0);
+        Ok(())
     }
 }

@@ -126,6 +126,9 @@ pub struct MixedTraceConfig {
     /// `grid_size` (0 disables the oversized requests).
     pub large_every: usize,
     pub large_size: usize,
+    /// Per-request deadline budget in seconds, stamped on every request
+    /// of both sub-streams; 0 = no deadlines.
+    pub deadline: f64,
 }
 
 impl Default for MixedTraceConfig {
@@ -138,6 +141,7 @@ impl Default for MixedTraceConfig {
             grid_arrival_gap: 0.3,
             large_every: 4,
             large_size: 48,
+            deadline: 0.0,
         }
     }
 }
@@ -149,6 +153,8 @@ pub struct MixedRequest {
     pub id: usize,
     /// Arrival time offset from trace start, seconds.
     pub arrival: f64,
+    /// Deadline budget in seconds from submission, if any.
+    pub deadline: Option<f64>,
     pub instance: ProblemInstance,
 }
 
@@ -160,6 +166,7 @@ pub struct MixedTrace {
 
 impl MixedTrace {
     pub fn generate(rng: &mut Rng, cfg: &MixedTraceConfig) -> Self {
+        let deadline = (cfg.deadline > 0.0).then_some(cfg.deadline);
         let assign = RequestTrace::generate(rng, &cfg.assign);
         let mut requests: Vec<MixedRequest> = assign
             .requests
@@ -167,6 +174,7 @@ impl MixedTrace {
             .map(|r| MixedRequest {
                 id: 0,
                 arrival: r.arrival,
+                deadline,
                 instance: ProblemInstance::Assignment(r.instance),
             })
             .collect();
@@ -180,6 +188,7 @@ impl MixedTrace {
             requests.push(MixedRequest {
                 id: 0,
                 arrival: k as f64 * cfg.grid_arrival_gap,
+                deadline,
                 instance: ProblemInstance::Grid(net),
             });
         }

@@ -63,6 +63,7 @@ fn mixed_trace(seed: u64, assign_requests: usize, grid_requests: usize) -> Mixed
             grid_arrival_gap: 0.0,
             large_every: 3,
             large_size: 48,
+            ..Default::default()
         },
     )
 }

@@ -1,0 +1,243 @@
+//! Integration tests for the fault-tolerant serving layer: a seeded
+//! chaos trace through the pool (deterministic panics + injected
+//! errors) with every surviving reply checked bit-exact against the
+//! sequential oracles, breaker trip + route-around under a permanently
+//! broken backend, oracle detection of corrupted results, and
+//! deadline shedding under an induced stall.
+
+use std::collections::BTreeSet;
+
+use flowmatch::assignment::hungarian::Hungarian;
+use flowmatch::assignment::AssignmentSolver;
+use flowmatch::coordinator::{solve_grid_with, GridEngine};
+use flowmatch::service::{
+    replay, FaultPlan, PoolConfig, ProblemInstance, RouterConfig, ShardConfig, SolverPool,
+};
+use flowmatch::util::Rng;
+use flowmatch::workloads::{MixedTrace, MixedTraceConfig, TraceConfig};
+
+const CYCLE: usize = 128;
+
+fn pool_config(workers: usize) -> PoolConfig {
+    PoolConfig {
+        workers,
+        shard: ShardConfig {
+            // n=10 assignment (100 units) is Small, 24² grids (576)
+            // are Medium, 48² grids (2304) are Large.
+            small_max_units: 256,
+            medium_max_units: 1024,
+            queue_depth: 64,
+            max_units: 1 << 16,
+        },
+        router: RouterConfig {
+            use_pjrt: false, // keep the oracle artifact-free
+            cycle_waves: CYCLE,
+            par_threads: 2,
+            tile_rows: 4,
+            retry_backoff_ms: 0, // keep the suite fast; determinism is unit-tested
+            ..Default::default()
+        },
+    }
+}
+
+fn mixed_trace(seed: u64, assign_requests: usize, grid_requests: usize) -> MixedTrace {
+    let mut rng = Rng::seeded(seed);
+    MixedTrace::generate(
+        &mut rng,
+        &MixedTraceConfig {
+            assign: TraceConfig {
+                requests: assign_requests,
+                n: 10,
+                max_weight: 60,
+                arrival_gap: 0.0,
+                ..Default::default()
+            },
+            grid_requests,
+            grid_size: 24,
+            grid_max_cap: 12,
+            grid_arrival_gap: 0.0,
+            large_every: 3,
+            large_size: 48,
+            ..Default::default()
+        },
+    )
+}
+
+/// The ISSUE acceptance scenario: a fixed chaos seed injects panics
+/// and errors into the `native-par` backend mid-trace.  Every request
+/// must get exactly one reply, none may be lost, at least one retry
+/// must fire, and every success must still match the sequential
+/// oracles exactly — faults cost latency, never answers.
+#[test]
+fn chaos_trace_loses_nothing_and_stays_oracle_exact() {
+    let mut cfg = pool_config(3);
+    cfg.router.fault = Some(FaultPlan::chaos(7));
+    let trace = mixed_trace(701, 12, 6);
+    let pool = SolverPool::start(cfg);
+    let out = replay(&pool, &trace, false);
+    let report = pool.shutdown();
+
+    // Exactly one reply per request, in trace order; nothing dropped.
+    assert_eq!(out.sent, trace.len());
+    assert_eq!(out.replies.len(), trace.len());
+    let ids: BTreeSet<usize> = out.replies.iter().map(|(id, _)| *id).collect();
+    assert_eq!(ids.len(), trace.len(), "duplicate or missing reply ids");
+    assert_eq!(out.lost, 0, "a chaos run must never lose a reply");
+
+    // chaos(7) panics native-par every 3rd solve; the retry path must
+    // have fired and absorbed every fault (fallback engines are clean).
+    assert!(report.retries >= 1, "fault plan failed to inject");
+    assert_eq!(out.ok, trace.len(), "rejected={} failed={}", out.rejected, out.failed);
+    assert_eq!(out.retries, report.retries);
+
+    // Successes are bit-exact against the sequential single-solver
+    // oracles — including replies that went through a retry.
+    for (id, reply) in &out.replies {
+        let reply = reply.as_ref().unwrap_or_else(|e| panic!("request {id}: {e}"));
+        match &trace.requests[*id].instance {
+            ProblemInstance::Assignment(inst) => {
+                let exact = Hungarian.solve(inst).unwrap();
+                assert_eq!(
+                    reply.outcome.weight(),
+                    Some(exact.weight),
+                    "request {id}: backend {} suboptimal after {} retries",
+                    reply.backend,
+                    reply.retries
+                );
+            }
+            ProblemInstance::Grid(net) => {
+                let (want, _) = solve_grid_with(net, CYCLE, None, GridEngine::Native).unwrap();
+                assert_eq!(
+                    reply.outcome.flow(),
+                    Some(want.flow),
+                    "request {id}: backend {} wrong flow after {} retries",
+                    reply.backend,
+                    reply.retries
+                );
+            }
+        }
+    }
+}
+
+/// A backend that panics on *every* solve trips its breaker after
+/// `breaker_threshold` consecutive failures; from then on the router
+/// skips it up front and traffic converges on the fallback — every
+/// request still succeeds, and the report shows the breaker open.
+#[test]
+fn always_panicking_backend_trips_breaker_and_traffic_converges() {
+    let mut cfg = pool_config(1); // single worker: deterministic order
+    cfg.router.fault = Some(FaultPlan::new("native-par").with_panic_every(1));
+    cfg.router.max_retries = 1;
+    cfg.router.breaker_threshold = 2;
+    cfg.router.breaker_cooldown = 100; // stays open for the whole run
+    let trace = mixed_trace(702, 0, 6);
+    let grids = trace.len();
+    let pool = SolverPool::start(cfg);
+    let out = replay(&pool, &trace, false);
+    let report = pool.shutdown();
+
+    assert_eq!(out.ok, grids, "rejected={} failed={}", out.rejected, out.failed);
+    assert_eq!(out.lost, 0);
+    // The first two requests each burn one retry tripping the breaker;
+    // after that native-par is skipped pre-dispatch, not attempted.
+    assert_eq!(report.retries, 2);
+    assert!(report.breaker_skips >= 1, "open breaker was never routed around");
+    // Every reply came from a fallback engine, never the broken one.
+    for (id, reply) in &out.replies {
+        let reply = reply.as_ref().unwrap_or_else(|e| panic!("request {id}: {e}"));
+        assert_ne!(reply.backend, "native-par", "request {id} served by the broken engine");
+        if let ProblemInstance::Grid(net) = &trace.requests[*id].instance {
+            let (want, _) = solve_grid_with(net, CYCLE, None, GridEngine::Native).unwrap();
+            assert_eq!(reply.outcome.flow(), Some(want.flow), "request {id}");
+        }
+    }
+    // The report carries the breaker state for observability.
+    assert!(report.breakers_open() >= 1, "{:?}", report.breakers);
+    let b = report
+        .breakers
+        .iter()
+        .find(|b| b.backend == "native-par" && b.is_open())
+        .expect("native-par breaker open in the report");
+    assert!(b.opened_total >= 1);
+}
+
+/// Result corruption (wrong-cost faults) is visible to the oracles:
+/// the service returns the corrupted answer (it cannot know), and the
+/// differential check catches it — the reason chaos mode never sets
+/// `wrong_every`, and the knob exists for harness self-tests like this.
+#[test]
+fn corrupted_results_are_caught_by_the_oracle() {
+    let mut cfg = pool_config(1);
+    cfg.router.fault = Some(FaultPlan::new("hungarian").with_wrong_every(1));
+    cfg.router.max_retries = 0;
+    let trace = mixed_trace(703, 5, 0); // Small matchings route to hungarian
+    let pool = SolverPool::start(cfg);
+    let out = replay(&pool, &trace, false);
+    drop(pool.shutdown());
+
+    assert_eq!(out.ok, trace.len());
+    for (id, reply) in &out.replies {
+        let reply = reply.as_ref().unwrap();
+        let ProblemInstance::Assignment(inst) = &trace.requests[*id].instance else {
+            unreachable!("assignment-only trace");
+        };
+        let exact = Hungarian.solve(inst).unwrap();
+        // Every solve was corrupted by +1: the differential oracle
+        // detects all of them.
+        assert_eq!(
+            reply.outcome.weight(),
+            Some(exact.weight + 1),
+            "request {id}: corruption not applied — oracle detection untestable"
+        );
+    }
+}
+
+/// Deadlines shed stale work: with one worker stalled by an injected
+/// delay longer than every deadline, the queued requests are shed
+/// pre-dispatch (`deadline` reject reason) and the stalled solve is
+/// cancelled at its next poll point — no worker time is burned on
+/// answers the client has given up on, and nothing is lost.
+#[test]
+fn deadline_sheds_queued_requests_under_stall() {
+    let mut cfg = pool_config(1);
+    // Every native solve stalls 80ms; deadlines are 25ms.
+    cfg.router.fault = Some(FaultPlan::new("native").with_delay_every(1, 80));
+    cfg.router.max_retries = 1;
+    let mut rng = Rng::seeded(704);
+    let trace = MixedTrace::generate(
+        &mut rng,
+        &MixedTraceConfig {
+            assign: TraceConfig {
+                requests: 0,
+                ..Default::default()
+            },
+            grid_requests: 4,
+            grid_size: 12, // 144 units: Small lane -> the native backend
+            grid_max_cap: 8,
+            grid_arrival_gap: 0.0,
+            large_every: 0,
+            deadline: 0.025,
+            ..Default::default()
+        },
+    );
+    let pool = SolverPool::start(cfg);
+    let out = replay(&pool, &trace, false);
+    let report = pool.shutdown();
+
+    assert_eq!(out.ok + out.rejected + out.failed, out.sent);
+    assert_eq!(out.lost, 0);
+    // The requests queued behind the stalled solve passed their
+    // deadline waiting and were shed before dispatch.
+    assert!(
+        out.deadline_misses >= 2,
+        "expected pre-dispatch sheds, got {:?}",
+        out.reject_reasons
+    );
+    assert!(out
+        .reject_reasons
+        .iter()
+        .any(|(label, n)| *label == "deadline" && *n >= 2));
+    // The server saw at least as many misses (sheds + mid-flight
+    // cancellations of the stalled solve).
+    assert!(report.deadline_misses >= out.deadline_misses);
+}

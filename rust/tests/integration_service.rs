@@ -56,6 +56,7 @@ fn mixed_trace(seed: u64) -> MixedTrace {
             grid_arrival_gap: 0.0,
             large_every: 3,
             large_size: 48,
+            ..Default::default()
         },
     )
 }
@@ -224,7 +225,7 @@ fn channel_submit_reports_rejection_string() {
         flowmatch::graph::GridNetwork::zeros(300, 300),
     ));
     let err = rx.recv().unwrap().unwrap_err();
-    assert!(err.contains("too large"), "{err}");
+    assert!(err.to_string().contains("too large"), "{err}");
 }
 
 /// Small requests do not queue behind a Large flood: with two workers,

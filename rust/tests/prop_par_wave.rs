@@ -64,7 +64,7 @@ fn wave_by_wave_bit_exact_across_threads_and_tiles() {
                         break;
                     }
                     let a = native_wave_with(&mut seq, &mut ss);
-                    let b = par_wave_with(&mut par, &mut ps, threads);
+                    let b = par_wave_with(&mut par, &mut ps, threads).unwrap();
                     assert_eq!(a, b, "{ctx}: stats at wave {wave}");
                     assert_states_eq(&seq, &par, &format!("{ctx} wave {wave}"));
                     assert_eq!(
@@ -134,7 +134,8 @@ fn parity_border_reconcile_bit_exact_on_tall_grids() {
                     par_wave_pooled(&mut par, &mut ps, &pool)
                 } else {
                     par_wave_with(&mut par, &mut ps, 4)
-                };
+                }
+                .unwrap();
                 assert_eq!(a, b, "{ctx}: stats at wave {wave}");
                 assert_states_eq(&seq, &par, &format!("{ctx} wave {wave}"));
                 assert_eq!(ss.active_count(), ps.active_count(), "{ctx} wave {wave}");
