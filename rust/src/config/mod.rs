@@ -134,7 +134,8 @@ pub fn preset(name: &str) -> Result<Config> {
              cycle = 1024\nthreads = 4\ntile_rows = 16\nalpha = 10\n\
              routing = \"static\"\nprobe_every = 8\nspill_depth = 8\n\
              max_retries = 2\nretry_backoff_ms = 2\n\
-             breaker_threshold = 3\nbreaker_cooldown = 8\n"
+             breaker_threshold = 3\nbreaker_cooldown = 8\n\
+             session_budget_mb = 64\n"
         }
         // Small smoke setting for CI.
         "smoke" => {
@@ -147,7 +148,8 @@ pub fn preset(name: &str) -> Result<Config> {
              cycle = 128\nthreads = 2\ntile_rows = 4\n\
              routing = \"static\"\nprobe_every = 4\nspill_depth = 4\n\
              max_retries = 1\nretry_backoff_ms = 1\n\
-             breaker_threshold = 2\nbreaker_cooldown = 4\n"
+             breaker_threshold = 2\nbreaker_cooldown = 4\n\
+             session_budget_mb = 8\n"
         }
         other => bail!("unknown preset {other:?} (try: paper, smoke)"),
     };

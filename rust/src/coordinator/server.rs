@@ -143,6 +143,7 @@ impl AssignmentService {
                 pjrt_max_n: cfg.max_n,
                 ..RouterConfig::default()
             },
+            session_budget_mb: 64,
         };
         Self {
             pool: SolverPool::start(pool_cfg),

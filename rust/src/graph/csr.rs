@@ -87,6 +87,17 @@ impl FlowNetwork {
         self.cap.copy_from_slice(&self.cap0);
     }
 
+    /// Overwrite one edge's build-time capacity *and* residual — the
+    /// primitive warm-start repair uses to re-point an edited edge at
+    /// its new capacity while preserving the flow it decides to keep
+    /// (`maxflow::warm`).  The mate is untouched; callers move flow
+    /// with [`FlowNetwork::push`] first so the pair stays consistent.
+    pub fn set_capacity(&mut self, e: EdgeId, cap0: i64, residual: i64) {
+        assert!(cap0 >= 0 && residual >= 0, "negative capacity");
+        self.cap0[e as usize] = cap0;
+        self.cap[e as usize] = residual;
+    }
+
     /// Value currently flowing out of the source (net).
     pub fn source_outflow(&self) -> i64 {
         self.out_edges(self.s).iter().map(|&e| self.flow(e)).sum()

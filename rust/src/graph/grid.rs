@@ -3,7 +3,7 @@
 //! uses, with converters to the general CSR representation for the
 //! sequential baselines.
 
-use super::csr::{FlowNetwork, NetworkBuilder};
+use super::csr::{EdgeId, FlowNetwork, NetworkBuilder};
 
 /// Arc directions, matching python/compile/kernels/grid_wave.py.
 pub const N: usize = 0;
@@ -143,6 +143,86 @@ impl GridNetwork {
             }
         }
         b.build().expect("grid network is well-formed")
+    }
+
+    /// Like [`GridNetwork::to_flow_network`], but *delta-complete*: every
+    /// neighbour pair and every terminal arc is emitted even at capacity
+    /// zero, and the returned [`GridCsrIndex`] maps grid arcs to their
+    /// CSR edge ids.  Warm-start sessions need both — an edit stream may
+    /// raise an arc that started at zero, and the repair addresses edges
+    /// by id (`maxflow::warm`).
+    pub fn to_flow_network_indexed(&self) -> (FlowNetwork, GridCsrIndex) {
+        let n = self.cells() + 2;
+        let cells = self.cells();
+        let mut b = NetworkBuilder::new(n, self.source_id(), self.sink_id());
+        let mut idx = GridCsrIndex {
+            height: self.height,
+            width: self.width,
+            arc_edge: vec![EdgeId::MAX; 4 * cells],
+            source_edge: vec![EdgeId::MAX; cells],
+            sink_edge: vec![EdgeId::MAX; cells],
+        };
+        for i in 0..self.height {
+            for j in 0..self.width {
+                let u = self.cell(i, j);
+                for &d in &[S, E] {
+                    if let Some((ni, nj)) = self.neighbour(i, j, d) {
+                        let fwd = self.cap[self.arc(d, i, j)];
+                        let bwd = self.cap[self.arc(OPP[d], ni, nj)];
+                        let ef = b.add_edge(u, self.cell(ni, nj), fwd, bwd);
+                        idx.arc_edge[self.arc(d, i, j)] = ef;
+                        idx.arc_edge[self.arc(OPP[d], ni, nj)] = ef ^ 1;
+                    }
+                }
+                idx.source_edge[u] = b.add_edge(self.source_id(), u, self.cap_source[u], 0);
+                idx.sink_edge[u] = b.add_edge(u, self.sink_id(), self.cap_sink[u], 0);
+            }
+        }
+        (b.build().expect("grid network is well-formed"), idx)
+    }
+}
+
+/// Grid arc → CSR edge id map produced by
+/// [`GridNetwork::to_flow_network_indexed`].
+#[derive(Debug, Clone)]
+pub struct GridCsrIndex {
+    height: usize,
+    width: usize,
+    /// Arc-major (`dir * cells + cell`), `EdgeId::MAX` where the arc
+    /// leaves the grid.
+    arc_edge: Vec<EdgeId>,
+    source_edge: Vec<EdgeId>,
+    sink_edge: Vec<EdgeId>,
+}
+
+impl GridCsrIndex {
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Edge id of the directed neighbour arc `dir` out of `(i, j)`;
+    /// `None` when it leaves the grid.
+    pub fn arc(&self, dir: usize, i: usize, j: usize) -> Option<EdgeId> {
+        assert!(dir < 4 && i < self.height && j < self.width, "arc off-grid");
+        let cells = self.height * self.width;
+        let e = self.arc_edge[dir * cells + i * self.width + j];
+        (e != EdgeId::MAX).then_some(e)
+    }
+
+    /// Edge id of the `(s, x)` arc of cell `(i, j)`.
+    pub fn source(&self, i: usize, j: usize) -> EdgeId {
+        assert!(i < self.height && j < self.width, "cell off-grid");
+        self.source_edge[i * self.width + j]
+    }
+
+    /// Edge id of the `(x, t)` arc of cell `(i, j)`.
+    pub fn sink(&self, i: usize, j: usize) -> EdgeId {
+        assert!(i < self.height && j < self.width, "cell off-grid");
+        self.sink_edge[i * self.width + j]
     }
 }
 

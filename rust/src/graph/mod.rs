@@ -9,4 +9,4 @@ pub mod validate;
 
 pub use bipartite::AssignmentInstance;
 pub use csr::{EdgeId, FlowNetwork, NetworkBuilder};
-pub use grid::GridNetwork;
+pub use grid::{GridCsrIndex, GridNetwork};

@@ -7,9 +7,11 @@ pub mod host;
 pub mod par_wave;
 pub mod solver;
 pub mod state;
+pub mod warm;
 pub mod wave;
 
 pub use par_wave::{par_wave_pooled, par_wave_with, NativeParGridExecutor, ParWaveScratch};
 pub use solver::{GridExecutor, GridSolveReport, HostRounds, HybridGridSolver, NativeGridExecutor};
 pub use state::init_state;
+pub use warm::{CapacityDelta, WarmState};
 pub use wave::{native_wave, WaveStats};

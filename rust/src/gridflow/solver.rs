@@ -233,15 +233,50 @@ impl HybridGridSolver {
 
     /// Run to completion on `net` using `exec` for the device phase.
     pub fn solve(&self, net: &GridNetwork, exec: &mut dyn GridExecutor) -> Result<GridSolveReport> {
+        self.solve_state(net, exec).map(|(report, _)| report)
+    }
+
+    /// Like [`HybridGridSolver::solve`], but also hands back the final
+    /// wire state (residual caps, heights, zero excess) — the snapshot
+    /// warm-start sessions keep to repair and resume after graph edits
+    /// (`super::warm`).
+    pub fn solve_state(
+        &self,
+        net: &GridNetwork,
+        exec: &mut dyn GridExecutor,
+    ) -> Result<(GridSolveReport, GridWireState)> {
         let (mut st, excess_total) = init_state(net);
+        let report = self.resume(&mut st, excess_total, 0, 0, exec)?;
+        Ok((report, st))
+    }
+
+    /// Run the hybrid loop from an arbitrary preflow state.  A cold
+    /// solve is `resume(init_state(net), excess_total, 0, 0)`; a warm
+    /// resume seeds the mass accounting with the flow the repaired state
+    /// already commits: `sink_committed` units sitting at the sink
+    /// (`Σ net.cap_sink − st.cap_sink`) and `src_committed` units
+    /// already returned to the source (`Σ net.cap_source − st.cap_src`).
+    /// The loop's invariant `sink + src + in-flight excess ==
+    /// excess_total` is unchanged — only the starting totals move.
+    pub fn resume(
+        &self,
+        st: &mut GridWireState,
+        excess_total: i64,
+        sink_committed: i64,
+        src_committed: i64,
+        exec: &mut dyn GridExecutor,
+    ) -> Result<GridSolveReport> {
         let mut report = GridSolveReport {
             excess_total,
             ..Default::default()
         };
-        // Fresh state: whatever the executor cached belongs to a
-        // previous solve.
+        // Unknown state: whatever the executor cached belongs to a
+        // previous solve (or to the pre-repair state).
         exec.invalidate();
-        let mut hscratch = host::HostScratch::for_state(&st);
+        // Fresh scratch: the cached terminal seed lists are only valid
+        // for states whose terminal caps never grow, which holds from
+        // here on but not across an edit that raised them.
+        let mut hscratch = host::HostScratch::for_state(st);
 
         // Striped host rounds run on the solver's explicit pool, else
         // the executor's (the service's native-par backend); with
@@ -266,17 +301,17 @@ impl HybridGridSolver {
         if self.heuristics {
             let t = crate::util::Timer::start();
             let out = if striped {
-                host::global_relabel_par(&mut st, &mut hscratch, &lanes)
+                host::global_relabel_par(st, &mut hscratch, &lanes)
             } else {
-                host::global_relabel_with(&mut st, &mut hscratch)
+                host::global_relabel_with(st, &mut hscratch)
             };
             report.gap_cells += out.gap_cells;
             report.host_seconds += t.elapsed();
         }
 
         let outer = (self.cycle_waves as i64 + exec.k_inner() as i64 - 1) / exec.k_inner() as i64;
-        let mut sink_total = 0i64;
-        let mut src_total = 0i64;
+        let mut sink_total = sink_committed;
+        let mut src_total = src_committed;
 
         loop {
             // Host-round boundary: the cheapest safe point to give up —
@@ -285,7 +320,7 @@ impl HybridGridSolver {
                 c.check()?;
             }
             let t = crate::util::Timer::start();
-            let stats = exec.superstep(&mut st, outer as i32)?;
+            let stats = exec.superstep(st, outer as i32)?;
             report.device_seconds += t.elapsed();
             sink_total += stats.sink_flow;
             src_total += stats.src_flow;
@@ -309,9 +344,9 @@ impl HybridGridSolver {
             if self.heuristics {
                 let t = crate::util::Timer::start();
                 let out = if striped {
-                    host::host_round_par(&mut st, &mut hscratch, &lanes)
+                    host::host_round_par(st, &mut hscratch, &lanes)
                 } else {
-                    host::host_round_with(&mut st, &mut hscratch)
+                    host::host_round_with(st, &mut hscratch)
                 };
                 src_total += out.src_returned;
                 report.gap_cells += out.gap_cells;

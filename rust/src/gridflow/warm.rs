@@ -1,0 +1,477 @@
+//! Warm-start solving for dynamic grids: keep the final preflow state
+//! of a completed solve, repair it locally when the instance's
+//! capacities change, and resume the hybrid loop from the affected
+//! frontier instead of from scratch ("Scalable Maxflow Processing for
+//! Dynamic Graphs" — retain residuals, repair, re-run).
+//!
+//! The repair is purely local arithmetic on the edited arcs plus a
+//! deficit-pullback cascade:
+//!
+//! * **Neighbour arc** set to `u'`: with pair flow `f = u - resid`
+//!   (negative when the mate carries the flow), the flow is clamped to
+//!   `f' = min(f, u')` and the over-commitment `f - f'` refunded as
+//!   excess at the tail / debited at the head.
+//! * **Sink cap** set to `u'`: flow already at the sink above `u'` is
+//!   refunded to the cell as excess.
+//! * **Source cap** set to `u'`: draw above `u'` is debited (a deficit).
+//! * **Re-saturation**: every source arc is then re-saturated to its new
+//!   capacity (Hong's Init does exactly this cold).  The wire state has
+//!   no representation of un-drawn forward source capacity — `cap_src`
+//!   *is* the draw — and an edit elsewhere can make previously-returned
+//!   supply routable, so all of it must re-enter the network.  The
+//!   resumed solve's first global relabel routes the hopeless part
+//!   straight back (`|V| + dist_s` heights).
+//! * **Deficits** (`e < 0`): resolved by taking flow back — first the
+//!   cell's own sink commitment, then outgoing neighbour flow, pulled
+//!   back along the cascade.  A deficit cell always has positive
+//!   outflow (`e = draw + in - out - sink < 0` forces `out + sink > 0`)
+//!   and every pullback strictly reduces total flow mass, so the
+//!   cascade terminates.
+//!
+//! After repair the state is a valid preflow of the edited network with
+//! `sink_committed + Σe == excess_total`, so
+//! [`HybridGridSolver::resume`] runs the unmodified hybrid loop seeded
+//! with the committed totals.  Heights are left stale on purpose: the
+//! resume's initial global relabel (stripe-parallel under
+//! `host_rounds = striped`) rebuilds an exact labeling, which is the
+//! repair BFS of the paper.  The max-flow *value* is unique, so a warm
+//! resume is bit-exact with a cold solve of the edited network — the
+//! differential oracle `tests/integration_sessions.rs` pins.
+
+use anyhow::{ensure, Result};
+
+use crate::graph::grid::OPP;
+use crate::graph::GridNetwork;
+use crate::runtime::device::GridWireState;
+
+use super::solver::{GridExecutor, GridSolveReport, HybridGridSolver};
+use super::state::init_state;
+
+/// One capacity edit: set an arc of the instance to a new capacity.
+/// Absolute (not additive) so a delta stream is replayable and the
+/// cold-solve oracle is trivial to materialise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CapacityDelta {
+    /// The directed neighbour arc `dir` out of cell `(i, j)`.
+    Arc { i: usize, j: usize, dir: usize, cap: i64 },
+    /// The `(x, t)` terminal arc of cell `(i, j)`.
+    Sink { i: usize, j: usize, cap: i64 },
+    /// The `(s, x)` terminal arc of cell `(i, j)`.
+    Source { i: usize, j: usize, cap: i64 },
+}
+
+impl CapacityDelta {
+    /// Apply the edit to a plain instance — the *definition* of the
+    /// edit's semantics, shared by the warm repair and the cold-solve
+    /// oracle (trace materialisation).
+    pub fn apply_to(&self, net: &mut GridNetwork) -> Result<()> {
+        match *self {
+            CapacityDelta::Arc { i, j, dir, cap } => {
+                ensure!(dir < 4, "bad arc direction {dir}");
+                ensure!(
+                    net.neighbour(i, j, dir).is_some(),
+                    "delta arc ({i},{j}) dir {dir} leaves the grid"
+                );
+                check_cap(cap)?;
+                let a = net.arc(dir, i, j);
+                net.cap[a] = cap;
+            }
+            CapacityDelta::Sink { i, j, cap } => {
+                ensure!(i < net.height && j < net.width, "delta cell off-grid");
+                check_cap(cap)?;
+                let c = net.cell(i, j);
+                net.cap_sink[c] = cap;
+            }
+            CapacityDelta::Source { i, j, cap } => {
+                ensure!(i < net.height && j < net.width, "delta cell off-grid");
+                check_cap(cap)?;
+                let c = net.cell(i, j);
+                net.cap_source[c] = cap;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn check_cap(cap: i64) -> Result<()> {
+    ensure!(cap >= 0, "negative capacity {cap}");
+    ensure!(cap <= i32::MAX as i64, "capacity too large for device i32");
+    Ok(())
+}
+
+/// Snapshot of a completed grid solve a session keeps between requests:
+/// the current (edited) instance plus the repaired preflow state.
+#[derive(Debug, Clone)]
+pub struct WarmState {
+    net: GridNetwork,
+    st: GridWireState,
+}
+
+impl WarmState {
+    /// Cold-solve `net` and keep the final state for later deltas.
+    pub fn solve_cold(
+        net: GridNetwork,
+        solver: &HybridGridSolver,
+        exec: &mut dyn GridExecutor,
+    ) -> Result<(GridSolveReport, WarmState)> {
+        let (report, st) = solver.solve_state(&net, exec)?;
+        Ok((report, WarmState { net, st }))
+    }
+
+    /// Adopt a completed state produced elsewhere (tests).
+    pub fn from_parts(net: GridNetwork, st: GridWireState) -> Self {
+        Self { net, st }
+    }
+
+    /// The current (post-edit) instance this state is a preflow of.
+    pub fn net(&self) -> &GridNetwork {
+        &self.net
+    }
+
+    /// Approximate resident size, for the session store's LRU budget:
+    /// 6 i64 lanes of the instance + 8 i32 lanes of the wire state.
+    pub fn approx_bytes(&self) -> usize {
+        self.net.cells() * 80 + 256
+    }
+
+    /// Edit the instance and repair the preflow locally (no solving).
+    /// After this the state satisfies `sink_committed + Σe ==
+    /// excess_total` for the edited network and [`WarmState::resume`]
+    /// can pick it up.
+    pub fn apply_deltas(&mut self, deltas: &[CapacityDelta]) -> Result<()> {
+        let ww = self.net.width;
+        let cells = self.net.cells();
+        for d in deltas {
+            match *d {
+                CapacityDelta::Arc { i, j, dir, cap } => {
+                    // Repair against the *current* stored capacity, then
+                    // commit the new one, so repeated edits of one arc
+                    // compose.
+                    ensure!(dir < 4, "bad arc direction {dir}");
+                    ensure!(
+                        self.net.neighbour(i, j, dir).is_some(),
+                        "delta arc ({i},{j}) dir {dir} leaves the grid"
+                    );
+                    check_cap(cap)?;
+                    let c = i * ww + j;
+                    let a = dir * cells + c;
+                    let (ni, nj) = self.net.neighbour(i, j, dir).unwrap();
+                    let nc = ni * ww + nj;
+                    let mate = OPP[dir] * cells + nc;
+                    let old = self.net.cap[a];
+                    // Pair flow oriented c -> nc (negative: the mate
+                    // carries it); only clamping from above can be
+                    // needed, since resid_bwd = o_bwd + f >= 0 already
+                    // bounds f from below.
+                    let f = old - self.st.cap[a] as i64;
+                    let f_new = f.min(cap);
+                    self.st.cap[a] = (cap - f_new) as i32;
+                    self.st.cap[mate] -= (f - f_new) as i32;
+                    let refund = (f - f_new) as i32;
+                    self.st.e[c] += refund;
+                    self.st.e[nc] -= refund;
+                    self.net.cap[a] = cap;
+                }
+                CapacityDelta::Sink { i, j, cap } => {
+                    ensure!(i < self.net.height && j < self.net.width, "delta cell off-grid");
+                    check_cap(cap)?;
+                    let c = i * ww + j;
+                    let consumed = self.net.cap_sink[c] - self.st.cap_sink[c] as i64;
+                    let refund = (consumed - cap).max(0);
+                    self.st.cap_sink[c] = (cap - consumed.min(cap)) as i32;
+                    self.st.e[c] += refund as i32;
+                    self.net.cap_sink[c] = cap;
+                }
+                CapacityDelta::Source { i, j, cap } => {
+                    ensure!(i < self.net.height && j < self.net.width, "delta cell off-grid");
+                    check_cap(cap)?;
+                    let c = i * ww + j;
+                    let drawn = self.st.cap_src[c] as i64;
+                    if cap < drawn {
+                        // Draw above the new cap is debited; the deficit
+                        // pass below takes the flow back.
+                        self.st.cap_src[c] = cap as i32;
+                        self.st.e[c] -= (drawn - cap) as i32;
+                    }
+                    self.net.cap_source[c] = cap;
+                }
+            }
+        }
+
+        // Re-saturate every source arc to its (possibly new) capacity —
+        // exactly Hong's Init, applied to the difference.
+        for c in 0..cells {
+            let y = self.net.cap_source[c] - self.st.cap_src[c] as i64;
+            debug_assert!(y >= 0, "source draw above capacity at cell {c}");
+            if y > 0 {
+                self.st.cap_src[c] = self.net.cap_source[c] as i32;
+                self.st.e[c] += y as i32;
+            }
+        }
+
+        self.resolve_deficits()?;
+
+        // The repaired state must be a preflow of the edited network
+        // with consistent mass accounting; resume() re-checks the same
+        // identity at termination.
+        debug_assert_eq!(
+            self.sink_committed() + self.excess_sum(),
+            self.net.excess_total(),
+            "repair broke mass accounting"
+        );
+        Ok(())
+    }
+
+    /// Pull flow back out of deficit cells until every excess is
+    /// non-negative again.
+    fn resolve_deficits(&mut self) -> Result<()> {
+        let ww = self.net.width;
+        let cells = self.net.cells();
+        let mut work: Vec<usize> = (0..cells).filter(|&c| self.st.e[c] < 0).collect();
+        while let Some(c) = work.pop() {
+            // A cascade may have refilled it since it was queued.
+            if self.st.e[c] >= 0 {
+                continue;
+            }
+            // 1. Reclaim the cell's own sink commitment.
+            let committed = self.net.cap_sink[c] - self.st.cap_sink[c] as i64;
+            if committed > 0 {
+                let z = committed.min(-(self.st.e[c] as i64));
+                self.st.cap_sink[c] += z as i32;
+                self.st.e[c] += z as i32;
+            }
+            // 2. Pull back outgoing neighbour flow (debiting the head,
+            //    which may cascade).
+            for dir in 0..4 {
+                if self.st.e[c] >= 0 {
+                    break;
+                }
+                let (i, j) = (c / ww, c % ww);
+                let Some((ni, nj)) = self.net.neighbour(i, j, dir) else {
+                    continue;
+                };
+                let a = dir * cells + c;
+                let out = self.net.cap[a] - self.st.cap[a] as i64;
+                if out <= 0 {
+                    continue;
+                }
+                let w = out.min(-(self.st.e[c] as i64));
+                let nc = ni * ww + nj;
+                let mate = OPP[dir] * cells + nc;
+                self.st.cap[a] += w as i32;
+                self.st.cap[mate] -= w as i32;
+                self.st.e[c] += w as i32;
+                self.st.e[nc] -= w as i32;
+                if self.st.e[nc] < 0 {
+                    work.push(nc);
+                }
+            }
+            // Always resolvable: a deficit cell has positive outflow.
+            ensure!(
+                self.st.e[c] >= 0,
+                "unresolvable deficit {} at cell {c}",
+                self.st.e[c]
+            );
+        }
+        Ok(())
+    }
+
+    fn sink_committed(&self) -> i64 {
+        (0..self.net.cells())
+            .map(|c| self.net.cap_sink[c] - self.st.cap_sink[c] as i64)
+            .sum()
+    }
+
+    fn src_committed(&self) -> i64 {
+        (0..self.net.cells())
+            .map(|c| self.net.cap_source[c] - self.st.cap_src[c] as i64)
+            .sum()
+    }
+
+    fn excess_sum(&self) -> i64 {
+        self.st.e.iter().map(|&e| e as i64).sum()
+    }
+
+    /// Resume the hybrid loop on the repaired state.  Requires the
+    /// solver's heuristics: the stale heights are only made valid again
+    /// by the initial global relabel.
+    pub fn resume(
+        &mut self,
+        solver: &HybridGridSolver,
+        exec: &mut dyn GridExecutor,
+    ) -> Result<GridSolveReport> {
+        ensure!(
+            solver.heuristics,
+            "warm resume needs host heuristics (stale heights are only \
+             repaired by the initial global relabel)"
+        );
+        let excess_total = self.net.excess_total();
+        let sink_committed = self.sink_committed();
+        let src_committed = self.src_committed();
+        solver.resume(&mut self.st, excess_total, sink_committed, src_committed, exec)
+    }
+
+    /// Edit + repair + resume in one call — the session update path.
+    pub fn update(
+        &mut self,
+        deltas: &[CapacityDelta],
+        solver: &HybridGridSolver,
+        exec: &mut dyn GridExecutor,
+    ) -> Result<GridSolveReport> {
+        self.apply_deltas(deltas)?;
+        self.resume(solver, exec)
+    }
+}
+
+/// Rebuild a [`WarmState`] from scratch — the cold baseline the
+/// differential tests compare against (also exercises `solve_state`).
+pub fn cold_state(net: &GridNetwork) -> (GridWireState, i64) {
+    init_state(net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::grid::{E, S};
+    use crate::gridflow::NativeGridExecutor;
+    use crate::maxflow::{self, MaxFlowSolver};
+    use crate::util::Rng;
+    use crate::workloads::random_grid;
+
+    fn cold_flow(net: &GridNetwork) -> i64 {
+        let mut g = net.to_flow_network();
+        maxflow::dinic::Dinic.solve(&mut g).unwrap().value
+    }
+
+    fn random_deltas(rng: &mut Rng, net: &GridNetwork, count: usize, max_cap: i64) -> Vec<CapacityDelta> {
+        let mut out = Vec::new();
+        while out.len() < count {
+            let i = (rng.next_u64() % net.height as u64) as usize;
+            let j = (rng.next_u64() % net.width as u64) as usize;
+            let cap = (rng.next_u64() % (max_cap as u64 + 1)) as i64;
+            let d = match rng.next_u64() % 6 {
+                0 => CapacityDelta::Sink { i, j, cap },
+                1 => CapacityDelta::Source { i, j, cap },
+                k => {
+                    let dir = (k as usize - 2) % 4;
+                    if net.neighbour(i, j, dir).is_none() {
+                        continue;
+                    }
+                    CapacityDelta::Arc { i, j, dir, cap }
+                }
+            };
+            out.push(d);
+        }
+        out
+    }
+
+    #[test]
+    fn warm_matches_cold_over_random_edit_stream() {
+        for seed in [1u64, 2, 3] {
+            let mut rng = Rng::seeded(seed);
+            let net = random_grid(&mut rng, 8, 7, 9, 0.3, 0.3);
+            let solver = HybridGridSolver::with_cycle(64);
+            let mut exec = NativeGridExecutor::default();
+            let (_, mut warm) = WarmState::solve_cold(net, &solver, &mut exec).unwrap();
+            for step in 0..4 {
+                let deltas = random_deltas(&mut rng, warm.net(), 5, 9);
+                let report = warm.update(&deltas, &solver, &mut exec).unwrap();
+                let want = cold_flow(warm.net());
+                assert_eq!(report.flow, want, "seed {seed} step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn arc_decrease_under_flow_refunds_and_cascades() {
+        // A single 3-cell path s -> (0,0) -> (0,1) -> (0,2) -> t carrying
+        // 4 units; cutting the middle arc to 1 must pull 3 units all the
+        // way back and re-settle at flow 1.
+        let mut net = GridNetwork::zeros(1, 3);
+        net.cap_source[0] = 4;
+        net.cap_sink[2] = 4;
+        net.set_neighbour_cap(0, 0, E, 4);
+        net.set_neighbour_cap(0, 1, E, 4);
+        let solver = HybridGridSolver::with_cycle(16);
+        let mut exec = NativeGridExecutor::default();
+        let (first, mut warm) = WarmState::solve_cold(net, &solver, &mut exec).unwrap();
+        assert_eq!(first.flow, 4);
+        let report = warm
+            .update(&[CapacityDelta::Arc { i: 0, j: 1, dir: E, cap: 1 }], &solver, &mut exec)
+            .unwrap();
+        assert_eq!(report.flow, 1);
+        assert_eq!(cold_flow(warm.net()), 1);
+    }
+
+    #[test]
+    fn sink_and_source_cuts_refund() {
+        let mut net = GridNetwork::zeros(2, 2);
+        net.cap_source[0] = 5;
+        net.cap_sink[3] = 5;
+        net.set_neighbour_cap(0, 0, S, 5);
+        net.set_neighbour_cap(1, 0, E, 5);
+        let solver = HybridGridSolver::with_cycle(16);
+        let mut exec = NativeGridExecutor::default();
+        let (first, mut warm) = WarmState::solve_cold(net, &solver, &mut exec).unwrap();
+        assert_eq!(first.flow, 5);
+        // Halve the sink side, then the source side.
+        let r = warm
+            .update(&[CapacityDelta::Sink { i: 1, j: 1, cap: 2 }], &solver, &mut exec)
+            .unwrap();
+        assert_eq!(r.flow, 2);
+        let r = warm
+            .update(&[CapacityDelta::Source { i: 0, j: 0, cap: 1 }], &solver, &mut exec)
+            .unwrap();
+        assert_eq!(r.flow, 1);
+        assert_eq!(cold_flow(warm.net()), 1);
+    }
+
+    #[test]
+    fn capacity_increase_reuses_committed_flow() {
+        // Widening a saturated bottleneck lets previously returned
+        // supply through — the re-saturation step must re-inject it.
+        let mut net = GridNetwork::zeros(1, 2);
+        net.cap_source[0] = 6;
+        net.cap_sink[1] = 6;
+        net.set_neighbour_cap(0, 0, E, 2);
+        let solver = HybridGridSolver::with_cycle(16);
+        let mut exec = NativeGridExecutor::default();
+        let (first, mut warm) = WarmState::solve_cold(net, &solver, &mut exec).unwrap();
+        assert_eq!(first.flow, 2);
+        let r = warm
+            .update(&[CapacityDelta::Arc { i: 0, j: 0, dir: E, cap: 6 }], &solver, &mut exec)
+            .unwrap();
+        assert_eq!(r.flow, 6);
+    }
+
+    #[test]
+    fn off_grid_delta_rejected() {
+        let mut net = GridNetwork::zeros(2, 2);
+        net.cap_source[0] = 1;
+        let solver = HybridGridSolver::with_cycle(16);
+        let mut exec = NativeGridExecutor::default();
+        let (_, mut warm) = WarmState::solve_cold(net, &solver, &mut exec).unwrap();
+        assert!(warm
+            .apply_deltas(&[CapacityDelta::Arc { i: 0, j: 0, dir: 0, cap: 1 }])
+            .is_err(), "N arc out of the top row leaves the grid");
+        assert!(warm
+            .apply_deltas(&[CapacityDelta::Sink { i: 5, j: 0, cap: 1 }])
+            .is_err());
+        assert!(warm
+            .apply_deltas(&[CapacityDelta::Source { i: 0, j: 0, cap: -1 }])
+            .is_err());
+    }
+
+    #[test]
+    fn warm_resume_requires_heuristics() {
+        let mut net = GridNetwork::zeros(1, 2);
+        net.cap_source[0] = 1;
+        net.cap_sink[1] = 1;
+        net.set_neighbour_cap(0, 0, E, 1);
+        let solver = HybridGridSolver::with_cycle(16);
+        let mut exec = NativeGridExecutor::default();
+        let (_, mut warm) = WarmState::solve_cold(net, &solver, &mut exec).unwrap();
+        let bare = HybridGridSolver::no_heuristics(16);
+        assert!(warm.resume(&bare, &mut exec).is_err());
+    }
+}

@@ -10,6 +10,7 @@
 //! flowmatch serve     --requests 50 --n 30 [--fps 20] [--native]
 //! flowmatch solver-pool serve   --workers 4 --requests 40 --grid-requests 8 [--fps 20]
 //! flowmatch solver-pool loadgen --workers 4 --requests 200 [--baseline] [--routing adaptive]
+//! flowmatch solver-pool loadgen --workers 4 --sessions 4 --session-updates 8 [--session-budget-mb 64]
 //! flowmatch artifacts
 //! ```
 
@@ -71,7 +72,9 @@ const USAGE: &str = "flowmatch <info|maxflow|assign|segment|optflow|serve|solver
             [--routing static|adaptive] [--probe-every N] [--spill-depth D]
             [--host-rounds seq|striped] [--native] [--preset paper|smoke] [--baseline (loadgen)]
             [--max-retries N] [--deadline-ms MS] [--chaos SEED (loadgen; seeded fault injection,
-            asserts zero lost replies)]";
+            asserts zero lost replies)]
+            [--sessions K (loadgen; warm-start delta-trace smoke, asserts warm hits + zero lost)]
+            [--session-updates U] [--session-edits E] [--session-budget-mb MB]";
 
 fn cmd_info() -> Result<()> {
     println!("flowmatch — parallel flow and matching algorithms (Łupińska 2011 reproduction)");
@@ -438,6 +441,10 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
         "max-retries",
         "deadline-ms",
         "chaos",
+        "sessions",
+        "session-updates",
+        "session-edits",
+        "session-budget-mb",
     ])?;
     let action = args
         .positional
@@ -498,6 +505,77 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
     let fps = args.get_f64("fps", 20.0)?;
     let seed = args.get_u64("seed", 1)?;
     pool_cfg.router.pjrt_max_n = pool_cfg.router.pjrt_max_n.max(n);
+
+    // Warm-start session smoke: replay a delta trace through the
+    // session API instead of the mixed cold trace.  Self-asserting
+    // like --chaos, so CI can run it as a one-liner.
+    let sessions = args.get_usize("sessions", 0)?;
+    pool_cfg.session_budget_mb =
+        args.get_usize("session-budget-mb", pool_cfg.session_budget_mb)?;
+    if sessions > 0 {
+        if action != "loadgen" {
+            bail!("--sessions is a loadgen option");
+        }
+        if chaos {
+            bail!("--chaos and --sessions are separate smokes (sessions bypass the fault-injected backend registry)");
+        }
+        let dcfg = workloads::DeltaTraceConfig {
+            sessions,
+            updates_per_session: args.get_usize("session-updates", 8)?,
+            edits_per_update: args.get_usize("session-edits", 4)?,
+            grid_size: grid,
+            deadline: deadline_ms / 1000.0,
+            ..Default::default()
+        };
+        let mut rng = Rng::seeded(seed);
+        let trace = workloads::DeltaTrace::generate(&mut rng, &dcfg);
+        println!(
+            "solver-pool sessions: {} requests ({sessions} opens + {} updates) on {grid}² grids, \
+             {} workers, session budget {} MiB",
+            trace.len(),
+            trace.update_count(),
+            pool_cfg.workers,
+            pool_cfg.session_budget_mb
+        );
+        let pool = flowmatch::service::SolverPool::start(pool_cfg);
+        let out = flowmatch::service::replay_sessions(&pool, &trace);
+        let report = pool.shutdown();
+        println!(
+            "client : opens={} warm={} cold_fallback={} rejected={} failed={} lost={} \
+             warm_rate={:.0}% wall={}",
+            out.opens,
+            out.warm_hits,
+            out.cold_fallbacks,
+            out.rejected,
+            out.failed,
+            out.lost,
+            100.0 * out.warm_rate(),
+            fmt_duration(out.wall_seconds)
+        );
+        println!("  {}", fmt_lat("sessions  ", &out.overall));
+        println!(
+            "server : served={} warm_served={} sessions_evicted={} via [{}]",
+            report.served,
+            report.warm_served,
+            report.sessions_evicted,
+            fmt_count_pairs(&report.backends)
+        );
+        ensure!(
+            out.lost == 0,
+            "session run lost {} repl(ies) — every request must get exactly one reply",
+            out.lost
+        );
+        ensure!(
+            out.warm_hits > 0,
+            "session run served no update warm — the residual caches never hit"
+        );
+        println!(
+            "sessions: OK — {} of {} updates served warm, 0 lost replies",
+            out.warm_hits,
+            trace.update_count()
+        );
+        return Ok(());
+    }
 
     // serve = open-loop at the trace's frame rate (the §6 real-time
     // shape); loadgen = closed-loop (the throughput shape).

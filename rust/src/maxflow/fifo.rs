@@ -74,7 +74,6 @@ impl MaxFlowSolver for FifoPushRelabel {
 
         let mut h = vec![0i64; n];
         let mut excess = vec![0i64; n];
-        let mut cur = vec![0usize; n]; // current-arc pointers
         let mut in_queue = vec![false; n];
         let mut queue = VecDeque::new();
 
@@ -107,6 +106,90 @@ impl MaxFlowSolver for FifoPushRelabel {
             let _ = freq;
         }
 
+        self.discharge(g, &mut h, &mut excess, &mut queue, &mut in_queue, &mut rscratch, &mut stats)?;
+
+        stats.value = excess[t];
+        Ok(stats)
+    }
+}
+
+impl FifoPushRelabel {
+    /// Warm resume: continue the FIFO engine from an arbitrary preflow
+    /// already stored in `g`'s residuals, with `excess` tracking each
+    /// node's outstanding excess (interior entries must be
+    /// non-negative — the repair in [`crate::maxflow::warm`] guarantees
+    /// it).  Source arcs are re-saturated first (edits may have opened
+    /// residual capacity there; Hong's Init applied to the difference)
+    /// and heights are rebuilt from scratch by an exact global relabel —
+    /// whatever labeling the previous run ended with is stale after a
+    /// repair.  The returned `value` is read off the sink's incident
+    /// residuals, so it includes the flow the warm state already
+    /// committed, and equals a cold solve of the edited network exactly
+    /// (the max-flow value is unique).
+    pub fn resume(&self, g: &mut FlowNetwork, excess: &mut [i64]) -> Result<FlowStats> {
+        let mut stats = FlowStats::default();
+        let n = g.node_count();
+        let (s, t) = (g.source(), g.sink());
+        assert_eq!(excess.len(), n, "excess length mismatch");
+
+        let mut h = vec![0i64; n];
+        h[s] = n as i64;
+        let mut in_queue = vec![false; n];
+        let mut queue = VecDeque::new();
+
+        for idx in 0..g.out_edges(s).len() {
+            let e = g.out_edges(s)[idx];
+            let c = g.residual(e);
+            if c > 0 {
+                let v = g.edge_head(e);
+                g.push(e, c);
+                excess[v] += c;
+                excess[s] -= c;
+                stats.pushes += 1;
+            }
+        }
+        for v in 0..n {
+            if v != s && v != t && excess[v] > 0 {
+                in_queue[v] = true;
+                queue.push_back(v);
+            }
+        }
+        if let Some(c) = &self.cancel {
+            c.check()?;
+        }
+        // Always rebuild heights, even for the "generic" configuration:
+        // a warm resume has no valid labeling to start from.
+        let mut rscratch = RelabelScratch::default();
+        let out = global_relabel_auto(g, &mut h, self.relabel_pool.as_deref(), &mut rscratch);
+        stats.global_relabels += 1;
+        stats.gap_nodes += out.gap_lifted as u64;
+
+        self.discharge(g, &mut h, excess, &mut queue, &mut in_queue, &mut rscratch, &mut stats)?;
+
+        stats.value = g
+            .out_edges(t)
+            .iter()
+            .map(|&e| g.residual(e) - g.capacity0(e))
+            .sum();
+        Ok(stats)
+    }
+
+    /// The FIFO discharge loop shared by cold [`MaxFlowSolver::solve`]
+    /// and warm [`FifoPushRelabel::resume`].
+    #[allow(clippy::too_many_arguments)]
+    fn discharge(
+        &self,
+        g: &mut FlowNetwork,
+        h: &mut [i64],
+        excess: &mut [i64],
+        queue: &mut VecDeque<usize>,
+        in_queue: &mut [bool],
+        rscratch: &mut RelabelScratch,
+        stats: &mut FlowStats,
+    ) -> Result<()> {
+        let n = g.node_count();
+        let (s, t) = (g.source(), g.sink());
+        let mut cur = vec![0usize; n]; // current-arc pointers
         let relabel_budget = |freq: f64| (freq * n as f64).max(1.0) as u64;
         let mut relabels_since_global = 0u64;
 
@@ -168,9 +251,7 @@ impl MaxFlowSolver for FifoPushRelabel {
                 }
             }
         }
-
-        stats.value = excess[t];
-        Ok(stats)
+        Ok(())
     }
 }
 

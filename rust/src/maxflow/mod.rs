@@ -14,6 +14,7 @@ pub mod global_relabel;
 pub mod highest;
 pub mod hybrid;
 pub mod lockfree;
+pub mod warm;
 
 use anyhow::Result;
 

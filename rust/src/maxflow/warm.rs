@@ -1,0 +1,246 @@
+//! Warm-start solving on the general CSR network: the [`FlowNetwork`]
+//! *is* the residual state, so a session keeps the solved network plus
+//! a per-node excess ledger, repairs both when edge capacities change,
+//! and resumes the FIFO engine from the affected nodes
+//! ([`FifoPushRelabel::resume`]) instead of re-solving cold.
+//!
+//! The repair is the CSR twin of `gridflow::warm` and is pleasantly
+//! uniform because terminals are ordinary nodes here: an edge set to
+//! `u'` keeps `f' = min(f, u')` of its flow and refunds the rest along
+//! the reverse mate (`push(e ^ 1, f - f')` — always legal, the mate's
+//! residual is `rcap + f`); nodes driven negative pull their own
+//! outgoing flow back, cascading, until every interior excess is
+//! non-negative again.  Each pullback strictly reduces total flow mass
+//! and a deficit node always has positive outflow, so the cascade
+//! terminates.  The resumed engine re-saturates source arcs and
+//! rebuilds heights with an exact global relabel, and the max-flow
+//! value is unique, so warm ≡ cold on the edited network — the
+//! differential oracle `tests/integration_sessions.rs` pins.
+
+use anyhow::{ensure, Result};
+
+use crate::graph::csr::{EdgeId, FlowNetwork};
+
+use super::fifo::FifoPushRelabel;
+use super::FlowStats;
+
+/// One capacity edit: set edge `edge`'s capacity to `cap` (absolute,
+/// not additive).  `edge` addresses either orientation of a pair; its
+/// mate's capacity is independent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CsrDelta {
+    pub edge: EdgeId,
+    pub cap: i64,
+}
+
+/// Snapshot of a completed CSR solve a session keeps between requests:
+/// the solved (residual) network plus the excess ledger the repair and
+/// resume share.
+#[derive(Debug, Clone)]
+pub struct CsrWarmState {
+    g: FlowNetwork,
+    excess: Vec<i64>,
+}
+
+impl CsrWarmState {
+    /// Cold-solve `g` with `engine` and keep the final residual state.
+    pub fn solve_cold(mut g: FlowNetwork, engine: &FifoPushRelabel) -> Result<(FlowStats, CsrWarmState)> {
+        use super::MaxFlowSolver;
+        let stats = engine.solve(&mut g)?;
+        // A completed solve leaves zero excess everywhere that matters;
+        // the terminals' entries are bookkeeping the resume never reads.
+        let excess = vec![0i64; g.node_count()];
+        Ok((stats, CsrWarmState { g, excess }))
+    }
+
+    /// The current residual network (for inspection and oracles).
+    pub fn network(&self) -> &FlowNetwork {
+        &self.g
+    }
+
+    /// Approximate resident size for the session store's LRU budget:
+    /// per edge two i64 capacity lanes + id/head u32 lanes, per node
+    /// the excess ledger and CSR offsets.
+    pub fn approx_bytes(&self) -> usize {
+        self.g.edge_pair_count() * 2 * 24 + self.g.node_count() * 16 + 256
+    }
+
+    /// Edit capacities and repair the preflow locally (no solving).
+    pub fn apply_deltas(&mut self, deltas: &[CsrDelta]) -> Result<()> {
+        let m2 = self.g.edge_pair_count() * 2;
+        let mut work: Vec<usize> = Vec::new();
+        for d in deltas {
+            ensure!((d.edge as usize) < m2, "edge id {} out of range", d.edge);
+            ensure!(d.cap >= 0, "negative capacity {}", d.cap);
+            let e = d.edge;
+            let tail = self.g.edge_head(e ^ 1);
+            let head = self.g.edge_head(e);
+            let f = self.g.flow(e);
+            // Keep what fits under the new capacity, refund the rest to
+            // the tail (debiting the head, possibly into deficit).
+            let f_new = f.min(d.cap);
+            let w = f - f_new;
+            if w > 0 {
+                self.g.push(e ^ 1, w);
+                self.excess[tail] += w;
+                self.excess[head] -= w;
+                if self.excess[head] < 0 {
+                    work.push(head);
+                }
+            }
+            self.g.set_capacity(e, d.cap, d.cap - f_new);
+        }
+        self.resolve_deficits(work)
+    }
+
+    /// Pull flow back out of deficit nodes until every interior excess
+    /// is non-negative again.
+    fn resolve_deficits(&mut self, mut work: Vec<usize>) -> Result<()> {
+        let (s, t) = (self.g.source(), self.g.sink());
+        while let Some(u) = work.pop() {
+            // Terminals absorb imbalance by definition; a cascade may
+            // also have refilled u since it was queued.
+            if u == s || u == t || self.excess[u] >= 0 {
+                continue;
+            }
+            for idx in 0..self.g.out_edges(u).len() {
+                if self.excess[u] >= 0 {
+                    break;
+                }
+                let e = self.g.out_edges(u)[idx];
+                let f = self.g.flow(e);
+                if f <= 0 {
+                    continue;
+                }
+                let w = f.min(-self.excess[u]);
+                let v = self.g.edge_head(e);
+                self.g.push(e ^ 1, w);
+                self.excess[u] += w;
+                self.excess[v] -= w;
+                if v != s && v != t && self.excess[v] < 0 {
+                    work.push(v);
+                }
+            }
+            // Always resolvable: a deficit node has positive outflow.
+            ensure!(
+                self.excess[u] >= 0,
+                "unresolvable deficit {} at node {u}",
+                self.excess[u]
+            );
+        }
+        Ok(())
+    }
+
+    /// Resume the engine on the repaired state.
+    pub fn resume(&mut self, engine: &FifoPushRelabel) -> Result<FlowStats> {
+        engine.resume(&mut self.g, &mut self.excess)
+    }
+
+    /// Edit + repair + resume in one call — the session update path.
+    pub fn update(&mut self, deltas: &[CsrDelta], engine: &FifoPushRelabel) -> Result<FlowStats> {
+        self.apply_deltas(deltas)?;
+        self.resume(engine)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::NetworkBuilder;
+    use crate::graph::grid::E;
+    use crate::maxflow::{dinic::Dinic, MaxFlowSolver};
+    use crate::util::Rng;
+    use crate::workloads::random_grid;
+
+    fn cold_value(g: &FlowNetwork) -> i64 {
+        let mut fresh = g.clone();
+        fresh.reset();
+        Dinic.solve(&mut fresh).unwrap().value
+    }
+
+    #[test]
+    fn diamond_edit_stream_matches_cold() {
+        let mut b = NetworkBuilder::new(4, 0, 3);
+        let e_top_in = b.add_edge(0, 1, 3, 0);
+        let e_top_out = b.add_edge(1, 3, 3, 0);
+        b.add_edge(0, 2, 2, 0);
+        let e_bot_out = b.add_edge(2, 3, 2, 0);
+        let g = b.build().unwrap();
+        let engine = FifoPushRelabel::default();
+        let (first, mut warm) = CsrWarmState::solve_cold(g, &engine).unwrap();
+        assert_eq!(first.value, 5);
+        // Cut the top path's exit under full flow: 3 units pulled back.
+        let s = warm.update(&[CsrDelta { edge: e_top_out, cap: 1 }], &engine).unwrap();
+        assert_eq!(s.value, 3);
+        assert_eq!(cold_value(warm.network()), 3);
+        // Re-widen it and also widen the bottom exit.
+        let s = warm
+            .update(
+                &[CsrDelta { edge: e_top_out, cap: 4 }, CsrDelta { edge: e_bot_out, cap: 9 }],
+                &engine,
+            )
+            .unwrap();
+        assert_eq!(s.value, 5, "still limited by the 3+2 source edges");
+        let s = warm.update(&[CsrDelta { edge: e_top_in, cap: 9 }], &engine).unwrap();
+        assert_eq!(s.value, 6);
+        assert_eq!(cold_value(warm.network()), 6);
+    }
+
+    #[test]
+    fn random_grid_edit_stream_matches_cold() {
+        for seed in [11u64, 12, 13] {
+            let mut rng = Rng::seeded(seed);
+            let net = random_grid(&mut rng, 6, 6, 9, 0.3, 0.3);
+            let (g, idx) = net.to_flow_network_indexed();
+            let engine = FifoPushRelabel::default();
+            let (_, mut warm) = CsrWarmState::solve_cold(g, &engine).unwrap();
+            for step in 0..4 {
+                let mut deltas = Vec::new();
+                while deltas.len() < 4 {
+                    let i = (rng.next_u64() % 6) as usize;
+                    let j = (rng.next_u64() % 6) as usize;
+                    let cap = (rng.next_u64() % 10) as i64;
+                    let e = match rng.next_u64() % 3 {
+                        0 => idx.source(i, j),
+                        1 => idx.sink(i, j),
+                        _ => match idx.arc(E, i, j) {
+                            Some(e) => e,
+                            None => continue,
+                        },
+                    };
+                    deltas.push(CsrDelta { edge: e, cap });
+                }
+                let s = warm.update(&deltas, &engine).unwrap();
+                assert_eq!(s.value, cold_value(warm.network()), "seed {seed} step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_cap_pairs_are_editable_via_index() {
+        // to_flow_network_indexed emits zero-capacity pairs, so an edit
+        // stream can grow arcs that started absent.
+        let mut net = crate::graph::GridNetwork::zeros(1, 2);
+        net.cap_source[0] = 5;
+        net.cap_sink[1] = 5;
+        // No interior arc at all: flow 0.
+        let (g, idx) = net.to_flow_network_indexed();
+        let engine = FifoPushRelabel::default();
+        let (first, mut warm) = CsrWarmState::solve_cold(g, &engine).unwrap();
+        assert_eq!(first.value, 0);
+        let e = idx.arc(E, 0, 0).unwrap();
+        let s = warm.update(&[CsrDelta { edge: e, cap: 4 }], &engine).unwrap();
+        assert_eq!(s.value, 4);
+    }
+
+    #[test]
+    fn bad_delta_rejected() {
+        let mut b = NetworkBuilder::new(3, 0, 2);
+        let e = b.add_edge(0, 1, 1, 0);
+        b.add_edge(1, 2, 1, 0);
+        let engine = FifoPushRelabel::default();
+        let (_, mut warm) = CsrWarmState::solve_cold(b.build().unwrap(), &engine).unwrap();
+        assert!(warm.apply_deltas(&[CsrDelta { edge: 99, cap: 1 }]).is_err());
+        assert!(warm.apply_deltas(&[CsrDelta { edge: e, cap: -1 }]).is_err());
+    }
+}

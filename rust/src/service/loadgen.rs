@@ -16,7 +16,7 @@ use std::time::Duration;
 
 use crate::util::stats::Summary;
 use crate::util::{CancelToken, Timer};
-use crate::workloads::{MixedTrace, ProblemInstance};
+use crate::workloads::{DeltaKind, DeltaTrace, MixedTrace, ProblemInstance};
 
 use super::pool::SolverPool;
 use super::router::{RouterConfig, WorkerBackends};
@@ -99,6 +99,9 @@ impl ReplayOutcome {
                     failed += 1;
                     lost += 1;
                 }
+                // Cold-fallback bookkeeping lives in `replay_sessions`;
+                // in a plain replay an evicted session is just a miss.
+                Err(ReplayError::SessionEvicted) => failed += 1,
             }
         }
         let ok = assign.len() + grid.len();
@@ -173,6 +176,149 @@ pub fn replay(pool: &SolverPool, trace: &MixedTrace, open_loop: bool) -> ReplayO
     ReplayOutcome::from_replies(replies, start.elapsed())
 }
 
+/// Outcome of a delta-trace (warm-start session) replay, measured at
+/// the client: how much of the update stream was actually served warm,
+/// and how often the client had to fall back to a cold re-solve of its
+/// edited graph because the session was evicted.
+#[derive(Debug, Clone)]
+pub struct SessionReplayOutcome {
+    pub sent: usize,
+    /// Session opens that succeeded (cold solves retaining state).
+    pub opens: usize,
+    /// Updates served warm from a retained residual cache.
+    pub warm_hits: usize,
+    /// Updates answered `SessionEvicted` and re-solved cold from the
+    /// trace's materialised edited instance.
+    pub cold_fallbacks: usize,
+    pub rejected: usize,
+    pub failed: usize,
+    /// Reply channels dropped without an answer — must stay zero.
+    pub lost: usize,
+    pub wall_seconds: f64,
+    /// Latencies over successful replies (warm and cold alike).
+    pub overall: Option<Summary>,
+    /// Per-request outcomes in trace order; a cold fallback's reply
+    /// replaces the evicted one at the same trace id.
+    pub replies: Vec<(usize, Result<SolveReply, ReplayError>)>,
+}
+
+impl SessionReplayOutcome {
+    /// warm_hits / updates-that-got-an-answer — the headline E13 rate.
+    pub fn warm_rate(&self) -> f64 {
+        let answered = self.warm_hits + self.cold_fallbacks;
+        if answered == 0 {
+            0.0
+        } else {
+            self.warm_hits as f64 / answered as f64
+        }
+    }
+}
+
+/// Replay a delta trace through the pool's session API.
+///
+/// Sequential by session-dependency: an update cannot be submitted
+/// before its open's reply carries the service-assigned session id.
+/// Requests still honour arrival offsets when the trace has them.  An
+/// update answered [`ReplayError::SessionEvicted`] falls back to a cold
+/// solve of the trace's materialised edited instance — the degraded
+/// mode the eviction reply is designed for — and the session id is
+/// re-learned if the fallback reopened it.
+pub fn replay_sessions(pool: &SolverPool, trace: &DeltaTrace) -> SessionReplayOutcome {
+    let start = Timer::start();
+    // Logical trace session → service session id (from the open reply).
+    let mut session_ids: Vec<Option<u64>> = Vec::new();
+    let mut opens = 0usize;
+    let mut warm_hits = 0usize;
+    let mut cold_fallbacks = 0usize;
+    let mut rejected = 0usize;
+    let mut failed = 0usize;
+    let mut lost = 0usize;
+    let mut latencies = Vec::new();
+    let mut replies = Vec::with_capacity(trace.len());
+    for req in &trace.requests {
+        let now = start.elapsed();
+        if req.arrival > now {
+            std::thread::sleep(Duration::from_secs_f64(req.arrival - now));
+        }
+        let deadline = req.deadline.map(Duration::from_secs_f64);
+        if session_ids.len() <= req.session {
+            session_ids.resize(req.session + 1, None);
+        }
+        let slot = match &req.kind {
+            DeltaKind::Open(net) => {
+                pool.try_submit_session(ProblemInstance::Grid(net.clone()), deadline)
+            }
+            DeltaKind::Update(deltas) => match session_ids[req.session] {
+                // No live session (open failed or was rejected): go
+                // straight to the cold fallback below via an
+                // immediately-evicted receiver.
+                None => {
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    let _ = tx.send(Err(ReplayError::SessionEvicted));
+                    Ok(rx)
+                }
+                Some(sid) => pool.try_submit_update(sid, deltas.clone(), deadline),
+            },
+        };
+        let mut outcome = match slot {
+            Ok(rx) => rx.recv().unwrap_or(Err(ReplayError::Lost)),
+            Err(reason) => Err(ReplayError::Rejected(reason)),
+        };
+        if matches!(outcome, Err(ReplayError::SessionEvicted)) {
+            // Cold fallback: re-open a session on the edited instance
+            // so later updates of this session can go warm again.
+            session_ids[req.session] = None;
+            let edited = trace.edited[req.id].clone();
+            outcome = match pool.try_submit_session(ProblemInstance::Grid(edited), deadline) {
+                Ok(rx) => rx.recv().unwrap_or(Err(ReplayError::Lost)),
+                Err(reason) => Err(ReplayError::Rejected(reason)),
+            };
+            if outcome.is_ok() {
+                cold_fallbacks += 1;
+            }
+        }
+        match &outcome {
+            Ok(reply) => {
+                latencies.push(reply.latency);
+                if reply.warm {
+                    warm_hits += 1;
+                } else {
+                    opens += 1;
+                }
+                session_ids[req.session] = reply.session;
+            }
+            Err(ReplayError::Rejected(_)) => rejected += 1,
+            Err(ReplayError::Failed { .. }) => {
+                // The pool drops a session on any failed update.
+                session_ids[req.session] = None;
+                failed += 1;
+            }
+            Err(ReplayError::Lost) => {
+                failed += 1;
+                lost += 1;
+            }
+            Err(ReplayError::SessionEvicted) => {
+                // Fallback above also missed (rejected/failed): count
+                // it once here as a failure.
+                failed += 1;
+            }
+        }
+        replies.push((req.id, outcome));
+    }
+    SessionReplayOutcome {
+        sent: trace.len(),
+        opens,
+        warm_hits,
+        cold_fallbacks,
+        rejected,
+        failed,
+        lost,
+        wall_seconds: start.elapsed(),
+        overall: Summary::of(&latencies),
+        replies,
+    }
+}
+
 /// The pre-pool deployment shape, kept as the benchmark baseline: one
 /// fresh OS thread *and one fresh backend state* per request (no
 /// worker reuse, no scratch/artifact caching, no admission control).
@@ -205,6 +351,8 @@ pub fn replay_spawn_baseline(
                         queue_delay: 0.0,
                         retries: served.retries,
                         breaker_skips: served.breaker_skips,
+                        session: None,
+                        warm: false,
                         outcome: served.outcome,
                     })
                     .map_err(|fail| ReplayError::Failed {

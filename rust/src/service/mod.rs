@@ -50,7 +50,10 @@ pub use crate::util::{CancelToken, Cancelled};
 pub use crate::workloads::ProblemInstance;
 pub use adaptive::{BreakerStat, RouteStat, RoutingMode, TelemetrySink};
 pub use fault::{backoff_delay, FaultPlan, FaultyBackend};
-pub use loadgen::{replay, replay_spawn_baseline, ReplayError, ReplayOutcome};
+pub use loadgen::{
+    replay, replay_sessions, replay_spawn_baseline, ReplayError, ReplayOutcome,
+    SessionReplayOutcome,
+};
 pub use pool::{PoolReport, SolverPool, WorkerPool};
 pub use router::{AssignBackend, Backend, BackendRegistry, Family, GridBackend, RouterConfig};
 pub use shard::{RejectReason, ShardConfig, SizeClass};
@@ -116,6 +119,11 @@ pub enum ReplyError {
     /// The reply channel closed without a reply — the invariant the
     /// fault tests assert never happens (a worker died mid-request).
     Lost,
+    /// A session update addressed a warm-start session the pool no
+    /// longer holds (LRU-evicted under the memory budget, dropped
+    /// after a failed update, or never opened).  The client falls back
+    /// to a cold solve of its edited graph.
+    SessionEvicted,
 }
 
 impl fmt::Display for ReplyError {
@@ -130,6 +138,9 @@ impl fmt::Display for ReplyError {
                 }
             }
             ReplyError::Lost => write!(f, "service dropped the reply"),
+            ReplyError::SessionEvicted => {
+                write!(f, "session evicted: resubmit the edited graph cold")
+            }
         }
     }
 }
@@ -155,6 +166,12 @@ pub struct SolveReply {
     pub retries: u32,
     /// Open circuit breakers routed around while placing the request.
     pub breaker_skips: u32,
+    /// Warm-start session this reply belongs to: `Some(id)` when the
+    /// request opened a session or updated one.
+    pub session: Option<u64>,
+    /// True when the reply came from an incremental (delta) solve of a
+    /// retained residual cache rather than a cold solve.
+    pub warm: bool,
     pub outcome: SolveOutcome,
 }
 
@@ -164,6 +181,10 @@ pub struct PoolConfig {
     pub workers: usize,
     pub shard: ShardConfig,
     pub router: RouterConfig,
+    /// Per-worker memory budget for retained warm-start session state,
+    /// in MiB; the least-recently-used session is evicted when a new
+    /// one would exceed it.
+    pub session_budget_mb: usize,
 }
 
 impl Default for PoolConfig {
@@ -172,6 +193,7 @@ impl Default for PoolConfig {
             workers: 4,
             shard: ShardConfig::default(),
             router: RouterConfig::default(),
+            session_budget_mb: 64,
         }
     }
 }
@@ -183,6 +205,8 @@ impl PoolConfig {
         let d = PoolConfig::default();
         let mut out = PoolConfig {
             workers: cfg.get_usize("service.workers", d.workers)?,
+            session_budget_mb: cfg
+                .get_usize("service.session_budget_mb", d.session_budget_mb)?,
             shard: ShardConfig {
                 small_max_units: cfg
                     .get_usize("service.small_units", d.shard.small_max_units)?,
@@ -332,6 +356,16 @@ mod tests {
         };
         assert!(failed.to_string().contains("after 2 retries"));
         assert!(ReplyError::Lost.to_string().contains("dropped"));
+        assert!(ReplyError::SessionEvicted.to_string().contains("session evicted"));
+    }
+
+    #[test]
+    fn session_budget_from_config() {
+        let cfg = Config::parse("[service]\nsession_budget_mb = 7\n").unwrap();
+        let pc = PoolConfig::from_config(&cfg).unwrap();
+        assert_eq!(pc.session_budget_mb, 7);
+        let pc = PoolConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(pc.session_budget_mb, 64);
     }
 
     #[test]

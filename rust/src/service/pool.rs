@@ -21,13 +21,14 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::gridflow::CapacityDelta;
 use crate::util::stats::{LatencyRecorder, Summary};
-use crate::util::CancelToken;
+use crate::util::{CancelToken, Cancelled};
 use crate::workloads::ProblemInstance;
 
 use super::adaptive::{BreakerStat, RouteStat, TelemetrySink};
-use super::router::{RouterConfig, WorkerBackends};
-use super::shard::{QueuedJob, RejectReason, ShardedQueues, SizeClass};
+use super::router::{RouterConfig, SessionDirectory, SessionStore, WorkerBackends};
+use super::shard::{JobPayload, QueuedJob, RejectReason, ShardedQueues, SizeClass};
 use super::{PoolConfig, ReplyError, SolveReply};
 
 // ---------------------------------------------------------------------------
@@ -276,6 +277,8 @@ struct PoolMetrics {
     retries: u64,
     breaker_skips: u64,
     deadline_misses: usize,
+    warm_served: usize,
+    sessions_evicted: usize,
     backends: BTreeMap<&'static str, usize>,
 }
 
@@ -295,6 +298,8 @@ impl PoolMetrics {
             retries: 0,
             breaker_skips: 0,
             deadline_misses: 0,
+            warm_served: 0,
+            sessions_evicted: 0,
             backends: BTreeMap::new(),
         }
     }
@@ -343,6 +348,11 @@ pub struct PoolReport {
     /// Requests shed before dispatch or cancelled mid-solve because
     /// their deadline passed.
     pub deadline_misses: usize,
+    /// Session updates served warm (incremental delta solves on a
+    /// retained residual cache).
+    pub warm_served: usize,
+    /// Warm-start sessions evicted by the per-worker LRU byte budget.
+    pub sessions_evicted: usize,
     /// Circuit-breaker states per (family × class × backend) at
     /// shutdown, in stable order.
     pub breakers: Vec<BreakerStat>,
@@ -373,6 +383,7 @@ pub struct SolverPool {
     metrics: Arc<Mutex<PoolMetrics>>,
     telemetry: Arc<TelemetrySink>,
     wave_pool: Arc<WorkerPool>,
+    directory: Arc<SessionDirectory>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
 }
@@ -383,7 +394,7 @@ impl SolverPool {
     /// drains) plus one shared wave [`WorkerPool`] that the grid
     /// `native-par` backend borrows for its tile phases.
     pub fn start(cfg: PoolConfig) -> Self {
-        let queues = Arc::new(ShardedQueues::new(cfg.shard.clone()));
+        let queues = Arc::new(ShardedQueues::new(cfg.shard.clone(), cfg.workers));
         let metrics = Arc::new(Mutex::new(PoolMetrics::new()));
         // One telemetry sink shared by every worker: route decisions,
         // EWMAs, and circuit-breaker state are pool-global, not
@@ -394,18 +405,31 @@ impl SolverPool {
             cfg.router.breaker_cooldown,
         ));
         let wave_pool = Arc::new(WorkerPool::new(cfg.router.par_threads));
+        let directory = Arc::new(SessionDirectory::default());
+        let session_budget = cfg.session_budget_mb.saturating_mul(1 << 20);
         let workers = (0..cfg.workers)
             .map(|idx| {
                 let queues = Arc::clone(&queues);
                 let metrics = Arc::clone(&metrics);
                 let telemetry = Arc::clone(&telemetry);
                 let wave_pool = Arc::clone(&wave_pool);
+                let directory = Arc::clone(&directory);
                 let rcfg = cfg.router.clone();
                 let total = cfg.workers;
                 std::thread::Builder::new()
                     .name(format!("flowmatch-solver-{idx}"))
                     .spawn(move || {
-                        solver_worker_loop(idx, total, queues, metrics, telemetry, rcfg, wave_pool)
+                        solver_worker_loop(
+                            idx,
+                            total,
+                            queues,
+                            metrics,
+                            telemetry,
+                            rcfg,
+                            wave_pool,
+                            directory,
+                            session_budget,
+                        )
                     })
                     .expect("spawn solver worker")
             })
@@ -415,6 +439,7 @@ impl SolverPool {
             metrics,
             telemetry,
             wave_pool,
+            directory,
             workers,
             next_id: AtomicU64::new(0),
         }
@@ -449,6 +474,68 @@ impl SolverPool {
         instance: ProblemInstance,
         timeout: Option<Duration>,
     ) -> Result<mpsc::Receiver<Result<SolveReply, ReplyError>>, RejectReason> {
+        self.submit_solve(instance, timeout, false)
+    }
+
+    /// Submit a grid instance *and open a warm-start session* for it:
+    /// the worker keeps the solved residual state, and the reply's
+    /// `session` field carries the id to address updates to.  On a
+    /// non-grid instance the request degrades to a plain cold solve
+    /// (assignment solves have no residual state worth keeping).
+    pub fn try_submit_session(
+        &self,
+        instance: ProblemInstance,
+        timeout: Option<Duration>,
+    ) -> Result<mpsc::Receiver<Result<SolveReply, ReplyError>>, RejectReason> {
+        let open = matches!(instance, ProblemInstance::Grid(_));
+        self.submit_solve(instance, timeout, open)
+    }
+
+    /// Submit a delta update against an open session.  Routed sticky to
+    /// the worker holding the session's residual cache; if the session
+    /// is unknown (never opened, LRU-evicted, or dropped after a failed
+    /// update) the receiver yields [`ReplyError::SessionEvicted`] and
+    /// the caller falls back to a cold solve of its edited graph.
+    pub fn try_submit_update(
+        &self,
+        session_id: u64,
+        deltas: Vec<CapacityDelta>,
+        timeout: Option<Duration>,
+    ) -> Result<mpsc::Receiver<Result<SolveReply, ReplyError>>, RejectReason> {
+        let Some((worker, class)) = self.directory.lookup(session_id) else {
+            let (tx, rx) = mpsc::channel();
+            let _ = tx.send(Err(ReplyError::SessionEvicted));
+            return Ok(rx);
+        };
+        let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
+        let job = QueuedJob {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            class,
+            payload: JobPayload::Update { session_id, deltas },
+            submitted: now,
+            deadline: timeout.map(|t| now + t),
+            reply: tx,
+        };
+        let mut shed = Vec::new();
+        let pushed = self.queues.push_pinned(job, worker, &mut shed);
+        shed_expired(&self.metrics, &mut shed);
+        match pushed {
+            Ok(()) => Ok(rx),
+            Err((job, reason)) => {
+                drop(job);
+                self.metrics.lock().unwrap().rejected += 1;
+                Err(reason)
+            }
+        }
+    }
+
+    fn submit_solve(
+        &self,
+        instance: ProblemInstance,
+        timeout: Option<Duration>,
+        open_session: bool,
+    ) -> Result<mpsc::Receiver<Result<SolveReply, ReplyError>>, RejectReason> {
         let cfg = self.queues.config();
         let units = instance.work_units();
         if units > cfg.max_units {
@@ -465,12 +552,18 @@ impl SolverPool {
         let job = QueuedJob {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             class,
-            instance,
+            payload: JobPayload::Solve {
+                instance,
+                open_session,
+            },
             submitted: now,
             deadline: timeout.map(|t| now + t),
             reply: tx,
         };
-        match self.queues.push(job) {
+        let mut shed = Vec::new();
+        let pushed = self.queues.push(job, &mut shed);
+        shed_expired(&self.metrics, &mut shed);
+        match pushed {
             Ok(()) => Ok(rx),
             Err((job, reason)) => {
                 drop(job);
@@ -514,6 +607,8 @@ impl SolverPool {
             retries: m.retries,
             breaker_skips: m.breaker_skips,
             deadline_misses: m.deadline_misses,
+            warm_served: m.warm_served,
+            sessions_evicted: m.sessions_evicted,
             served: m.overall.count(),
             rejected: m.rejected,
             assign_served: m.assign.count(),
@@ -545,6 +640,26 @@ impl Drop for SolverPool {
     }
 }
 
+/// Reply `DeadlineExceeded` to every job the queue scans shed, and
+/// count the misses.  Shared by the submit paths (full-shard sweep)
+/// and the worker loop (pop-scan sweep).
+fn shed_expired(metrics: &Mutex<PoolMetrics>, shed: &mut Vec<QueuedJob>) {
+    if shed.is_empty() {
+        return;
+    }
+    {
+        let mut m = metrics.lock().unwrap();
+        m.rejected += shed.len();
+        m.deadline_misses += shed.len();
+    }
+    for job in shed.drain(..) {
+        let _ = job
+            .reply
+            .send(Err(ReplyError::Rejected(RejectReason::DeadlineExceeded)));
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn solver_worker_loop(
     idx: usize,
     total: usize,
@@ -553,6 +668,8 @@ fn solver_worker_loop(
     telemetry: Arc<TelemetrySink>,
     rcfg: RouterConfig,
     wave_pool: Arc<WorkerPool>,
+    directory: Arc<SessionDirectory>,
+    session_budget: usize,
 ) {
     // Per-worker backend state: cached executors/scratch and (when
     // configured and discoverable) a PJRT driver.  The `xla` handles
@@ -560,10 +677,26 @@ fn solver_worker_loop(
     // this thread.  The telemetry sink is the one shared measurement
     // store behind adaptive routing.
     let mut backends = WorkerBackends::with_telemetry(rcfg, Some(&wave_pool), telemetry);
-    while let Some(job) = queues.pop(idx, total) {
+    // Warm-start sessions live with the worker that opened them (the
+    // directory routes updates here); the LRU byte budget bounds their
+    // resident residual caches.
+    let mut sessions = SessionStore::new(session_budget);
+    let mut shed = Vec::new();
+    loop {
+        let popped = queues.pop(idx, total, &mut shed);
+        // Jobs whose deadline passed while queued are answered without
+        // ever touching a backend — including when the scan found no
+        // live job at all (`pop` hands them back instead of blocking).
+        let had_shed = !shed.is_empty();
+        shed_expired(&metrics, &mut shed);
+        let Some(job) = popped else {
+            if had_shed {
+                continue; // swept expired jobs; scan again
+            }
+            break; // shutdown and drained
+        };
         let queue_delay = job.submitted.elapsed().as_secs_f64();
-        // Deadline shed: a request whose budget expired while queued is
-        // answered without ever touching a backend.
+        // Second-chance deadline shed for the job we are about to run.
         if let Some(dl) = job.deadline {
             if Instant::now() >= dl {
                 let mut m = metrics.lock().unwrap();
@@ -577,54 +710,187 @@ fn solver_worker_loop(
             }
         }
         let cancel = CancelToken::with_deadline(job.deadline);
-        // `WorkerBackends::solve` catches per-attempt panics itself;
-        // this outer catch is the last-resort guard keeping the request
-        // worker alive if the retry machinery itself blows up.
-        let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            backends.solve(job.class, &job.instance, &cancel)
-        }));
-        let latency = job.submitted.elapsed().as_secs_f64();
-        let reply = match solved {
-            Ok(Ok(served)) => {
-                let mut m = metrics.lock().unwrap();
-                m.record(job.class, served.outcome.family(), served.backend, latency);
-                m.retries += u64::from(served.retries);
-                m.breaker_skips += u64::from(served.breaker_skips);
-                drop(m);
-                Ok(SolveReply {
-                    id: job.id,
-                    class: job.class,
-                    worker: idx,
-                    backend: served.backend,
-                    latency,
-                    queue_delay,
-                    retries: served.retries,
-                    breaker_skips: served.breaker_skips,
-                    outcome: served.outcome,
-                })
+        match job.payload {
+            JobPayload::Solve {
+                ref instance,
+                open_session: true,
+            } if matches!(instance, ProblemInstance::Grid(_)) => {
+                let ProblemInstance::Grid(net) = instance else {
+                    unreachable!("guarded by the match arm");
+                };
+                // Session opens bypass the retry/fallback machinery:
+                // the residual cache is engine-shaped, so the solve
+                // must run on the engine that will serve the updates.
+                let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    backends.solve_session_open(job.class, net, &cancel)
+                }));
+                let latency = job.submitted.elapsed().as_secs_f64();
+                let reply = match solved {
+                    Ok(Ok((outcome, state, backend))) => {
+                        let evicted = sessions.insert(job.id, state);
+                        for ev in &evicted {
+                            directory.remove(*ev);
+                        }
+                        directory.insert(job.id, idx, job.class);
+                        let mut m = metrics.lock().unwrap();
+                        m.sessions_evicted += evicted.len();
+                        m.record(job.class, outcome.family(), backend, latency);
+                        drop(m);
+                        Ok(SolveReply {
+                            id: job.id,
+                            class: job.class,
+                            worker: idx,
+                            backend,
+                            latency,
+                            queue_delay,
+                            retries: 0,
+                            breaker_skips: 0,
+                            session: Some(job.id),
+                            warm: false,
+                            outcome,
+                        })
+                    }
+                    Ok(Err(err)) => {
+                        let cancelled = Cancelled::caused(&err);
+                        let mut m = metrics.lock().unwrap();
+                        m.failed += 1;
+                        if cancelled {
+                            m.deadline_misses += 1;
+                        }
+                        drop(m);
+                        Err(ReplyError::Failed {
+                            message: format!("{err:#}"),
+                            retries: 0,
+                        })
+                    }
+                    Err(_) => {
+                        metrics.lock().unwrap().failed += 1;
+                        Err(ReplyError::Failed {
+                            message: "solver panicked".to_string(),
+                            retries: 0,
+                        })
+                    }
+                };
+                let _ = job.reply.send(reply);
             }
-            Ok(Err(fail)) => {
-                let mut m = metrics.lock().unwrap();
-                m.failed += 1;
-                m.retries += u64::from(fail.retries);
-                if fail.cancelled {
-                    m.deadline_misses += 1;
-                }
-                drop(m);
-                Err(ReplyError::Failed {
-                    message: fail.error,
-                    retries: fail.retries,
-                })
+            JobPayload::Solve { ref instance, .. } => {
+                // `WorkerBackends::solve` catches per-attempt panics
+                // itself; this outer catch is the last-resort guard
+                // keeping the request worker alive if the retry
+                // machinery itself blows up.
+                let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    backends.solve(job.class, instance, &cancel)
+                }));
+                let latency = job.submitted.elapsed().as_secs_f64();
+                let reply = match solved {
+                    Ok(Ok(served)) => {
+                        let mut m = metrics.lock().unwrap();
+                        m.record(job.class, served.outcome.family(), served.backend, latency);
+                        m.retries += u64::from(served.retries);
+                        m.breaker_skips += u64::from(served.breaker_skips);
+                        drop(m);
+                        Ok(SolveReply {
+                            id: job.id,
+                            class: job.class,
+                            worker: idx,
+                            backend: served.backend,
+                            latency,
+                            queue_delay,
+                            retries: served.retries,
+                            breaker_skips: served.breaker_skips,
+                            session: None,
+                            warm: false,
+                            outcome: served.outcome,
+                        })
+                    }
+                    Ok(Err(fail)) => {
+                        let mut m = metrics.lock().unwrap();
+                        m.failed += 1;
+                        m.retries += u64::from(fail.retries);
+                        if fail.cancelled {
+                            m.deadline_misses += 1;
+                        }
+                        drop(m);
+                        Err(ReplyError::Failed {
+                            message: fail.error,
+                            retries: fail.retries,
+                        })
+                    }
+                    Err(_) => {
+                        metrics.lock().unwrap().failed += 1;
+                        Err(ReplyError::Failed {
+                            message: "solver panicked".to_string(),
+                            retries: 0,
+                        })
+                    }
+                };
+                let _ = job.reply.send(reply);
             }
-            Err(_) => {
-                metrics.lock().unwrap().failed += 1;
-                Err(ReplyError::Failed {
-                    message: "solver panicked".to_string(),
-                    retries: 0,
-                })
+            JobPayload::Update {
+                session_id,
+                ref deltas,
+            } => {
+                let Some(state) = sessions.get_mut(session_id) else {
+                    // Evicted (or never here): the client resubmits its
+                    // edited graph cold.
+                    directory.remove(session_id);
+                    let _ = job.reply.send(Err(ReplyError::SessionEvicted));
+                    continue;
+                };
+                let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    backends.solve_session_update(job.class, state, deltas, &cancel)
+                }));
+                let latency = job.submitted.elapsed().as_secs_f64();
+                let reply = match solved {
+                    Ok(Ok((outcome, backend))) => {
+                        let mut m = metrics.lock().unwrap();
+                        m.warm_served += 1;
+                        m.record(job.class, outcome.family(), backend, latency);
+                        drop(m);
+                        Ok(SolveReply {
+                            id: job.id,
+                            class: job.class,
+                            worker: idx,
+                            backend,
+                            latency,
+                            queue_delay,
+                            retries: 0,
+                            breaker_skips: 0,
+                            session: Some(session_id),
+                            warm: true,
+                            outcome,
+                        })
+                    }
+                    Ok(Err(err)) => {
+                        // The repair may have half-applied the deltas:
+                        // the cache is no longer trustworthy, drop it.
+                        sessions.remove(session_id);
+                        directory.remove(session_id);
+                        let cancelled = Cancelled::caused(&err);
+                        let mut m = metrics.lock().unwrap();
+                        m.failed += 1;
+                        if cancelled {
+                            m.deadline_misses += 1;
+                        }
+                        drop(m);
+                        Err(ReplyError::Failed {
+                            message: format!("{err:#}"),
+                            retries: 0,
+                        })
+                    }
+                    Err(_) => {
+                        sessions.remove(session_id);
+                        directory.remove(session_id);
+                        metrics.lock().unwrap().failed += 1;
+                        Err(ReplyError::Failed {
+                            message: "solver panicked".to_string(),
+                            retries: 0,
+                        })
+                    }
+                };
+                let _ = job.reply.send(reply);
             }
-        };
-        let _ = job.reply.send(reply);
+        }
     }
 }
 

@@ -21,17 +21,22 @@
 //!   (a saturated pool means `native-par`'s tile phases would queue
 //!   behind other solves, so Hong's self-threaded CSR engine wins).
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::assignment::{self, AssignmentSolver};
 use crate::coordinator::PjrtAssignmentDriver;
-use crate::graph::GridNetwork;
+use crate::graph::{GridCsrIndex, GridNetwork};
+use crate::gridflow::warm::WarmState;
 use crate::gridflow::{
-    GridSolveReport, HostRounds, HybridGridSolver, NativeGridExecutor, NativeParGridExecutor,
+    CapacityDelta, GridSolveReport, HostRounds, HybridGridSolver, NativeGridExecutor,
+    NativeParGridExecutor,
 };
+use crate::maxflow::fifo::FifoPushRelabel;
+use crate::maxflow::warm::{CsrDelta, CsrWarmState};
 use crate::maxflow::{self, MaxFlowSolver};
 use crate::runtime::ArtifactRegistry;
 use crate::util::{CancelToken, Cancelled};
@@ -904,7 +909,26 @@ impl WorkerBackends {
                         cancelled: true,
                     });
                 }
-                std::thread::sleep(backoff_delay(self.cfg.retry_backoff_ms, attempt));
+                // Back off — but never past the request's deadline: the
+                // sleep is clamped to the remaining budget, and a
+                // request whose budget dies mid-backoff is reported as a
+                // deadline miss without burning a retry on an attempt
+                // the client has already given up on.
+                let mut delay = backoff_delay(self.cfg.retry_backoff_ms, attempt);
+                if let Some(dl) = cancel.deadline() {
+                    delay = delay.min(dl.saturating_duration_since(Instant::now()));
+                }
+                if !delay.is_zero() {
+                    std::thread::sleep(delay);
+                }
+                if cancel.is_cancelled() {
+                    self.telemetry.request_completed(family, class);
+                    return Err(SolveFailure {
+                        error: Cancelled.to_string(),
+                        retries,
+                        cancelled: true,
+                    });
+                }
                 retries += 1;
             }
             let Some(idx) = self.index_of(name) else {
@@ -1001,6 +1025,315 @@ impl WorkerBackends {
     #[cfg(test)]
     fn telemetry(&self) -> &TelemetrySink {
         &self.telemetry
+    }
+
+    /// Cold-solve a grid instance and open a warm-start session for it.
+    ///
+    /// Sessions bypass adaptive routing, retries, and telemetry on
+    /// purpose: the residual cache is engine-shaped, so the engine must
+    /// stay fixed for the session's life — the static grid table for
+    /// this size class decides it, even in adaptive mode.  `native` and
+    /// `native-par` keep a [`WarmState`] of the wire state;
+    /// `fifo-lockfree` keeps a [`CsrWarmState`] served by the
+    /// *sequential* FIFO engine (`fifo+global`) — the lock-free engine
+    /// snapshots capacities into atomics and cannot resume a repaired
+    /// preflow, and the max-flow value is unique, so the session's
+    /// replies still match the cold backend exactly.
+    pub fn solve_session_open(
+        &mut self,
+        class: SizeClass,
+        net: &GridNetwork,
+        cancel: &CancelToken,
+    ) -> Result<(SolveOutcome, SessionState, &'static str)> {
+        match self.cfg.grid[class.index()] {
+            GridBackend::Native => {
+                let solver = HybridGridSolver::with_cycle(self.cfg.cycle_waves)
+                    .with_cancel(cancel.clone());
+                let mut exec = NativeGridExecutor::default();
+                let (report, warm) = WarmState::solve_cold(net.clone(), &solver, &mut exec)?;
+                Ok((
+                    SolveOutcome::Grid(report),
+                    SessionState::Grid(Box::new(warm)),
+                    "native",
+                ))
+            }
+            GridBackend::NativePar => {
+                let solver = HybridGridSolver::with_cycle(self.cfg.cycle_waves)
+                    .with_host_rounds(self.cfg.host_rounds)
+                    .with_cancel(cancel.clone());
+                let mut exec = self.session_par_exec();
+                let (report, warm) = WarmState::solve_cold(net.clone(), &solver, &mut exec)?;
+                Ok((
+                    SolveOutcome::Grid(report),
+                    SessionState::Grid(Box::new(warm)),
+                    "native-par",
+                ))
+            }
+            GridBackend::FifoLockfree => {
+                let (g, index) = net.to_flow_network_indexed();
+                let engine = self.session_fifo(cancel);
+                let (stats, warm) = CsrWarmState::solve_cold(g, &engine)?;
+                let report = GridSolveReport {
+                    flow: stats.value,
+                    excess_total: net.excess_total(),
+                    host_rounds: stats.rounds,
+                    pushes: stats.pushes as i64,
+                    relabels: stats.relabels as i64,
+                    ..Default::default()
+                };
+                Ok((
+                    SolveOutcome::Grid(report),
+                    SessionState::Csr {
+                        warm: Box::new(warm),
+                        index,
+                    },
+                    "fifo+global",
+                ))
+            }
+        }
+    }
+
+    /// Apply a delta update to an open session: repair the cached
+    /// residual state locally and resume the engine from the affected
+    /// frontier.  The caller owns error handling; on any `Err` the
+    /// session state may be partially repaired and must be dropped.
+    pub fn solve_session_update(
+        &mut self,
+        class: SizeClass,
+        state: &mut SessionState,
+        deltas: &[CapacityDelta],
+        cancel: &CancelToken,
+    ) -> Result<(SolveOutcome, &'static str)> {
+        match state {
+            SessionState::Grid(warm) => {
+                let (solver, name) = match self.cfg.grid[class.index()] {
+                    GridBackend::NativePar => (
+                        HybridGridSolver::with_cycle(self.cfg.cycle_waves)
+                            .with_host_rounds(self.cfg.host_rounds)
+                            .with_cancel(cancel.clone()),
+                        "native-par",
+                    ),
+                    _ => (
+                        HybridGridSolver::with_cycle(self.cfg.cycle_waves)
+                            .with_cancel(cancel.clone()),
+                        "native",
+                    ),
+                };
+                let report = if name == "native-par" {
+                    let mut exec = self.session_par_exec();
+                    warm.update(deltas, &solver, &mut exec)?
+                } else {
+                    let mut exec = NativeGridExecutor::default();
+                    warm.update(deltas, &solver, &mut exec)?
+                };
+                Ok((SolveOutcome::Grid(report), name))
+            }
+            SessionState::Csr { warm, index } => {
+                let translated = translate_deltas(index, deltas)?;
+                let engine = self.session_fifo(cancel);
+                let stats = warm.update(&translated, &engine)?;
+                let net = warm.network();
+                let report = GridSolveReport {
+                    flow: stats.value,
+                    excess_total: net
+                        .out_edges(net.source())
+                        .iter()
+                        .map(|&e| net.capacity0(e))
+                        .sum(),
+                    host_rounds: stats.rounds,
+                    pushes: stats.pushes as i64,
+                    relabels: stats.relabels as i64,
+                    ..Default::default()
+                };
+                Ok((SolveOutcome::Grid(report), "fifo+global"))
+            }
+        }
+    }
+
+    /// Fresh tiled executor for a session solve, borrowing the worker's
+    /// wave pool like the `native-par` backend does.
+    fn session_par_exec(&self) -> NativeParGridExecutor {
+        let mut exec = NativeParGridExecutor::new(self.cfg.par_threads, self.cfg.tile_rows);
+        if let Some(pool) = &self.wave_pool {
+            exec = exec.with_pool(Arc::clone(pool));
+        }
+        exec
+    }
+
+    /// Sequential FIFO engine for CSR sessions, with the worker's wave
+    /// pool lent to its periodic global relabel.
+    fn session_fifo(&self, cancel: &CancelToken) -> FifoPushRelabel {
+        let mut engine = FifoPushRelabel::default().with_cancel(cancel.clone());
+        if let Some(pool) = &self.wave_pool {
+            engine = engine.with_relabel_pool(Arc::clone(pool));
+        }
+        engine
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Warm-start sessions: residual caches, LRU store, sticky directory
+// ---------------------------------------------------------------------------
+
+/// The residual cache of one open session, shaped by the engine that
+/// serves it.
+pub(crate) enum SessionState {
+    /// Wire-state snapshot for the hybrid wave engines.
+    Grid(Box<WarmState>),
+    /// CSR residual snapshot for the FIFO engine, with the grid-arc →
+    /// edge-id index that translates [`CapacityDelta`]s.
+    Csr {
+        warm: Box<CsrWarmState>,
+        index: GridCsrIndex,
+    },
+}
+
+impl SessionState {
+    fn approx_bytes(&self) -> usize {
+        match self {
+            SessionState::Grid(warm) => warm.approx_bytes(),
+            SessionState::Csr { warm, index } => {
+                warm.approx_bytes() + index.height() * index.width() * 24 + 64
+            }
+        }
+    }
+}
+
+/// Translate grid-level deltas to CSR edge edits through the index.
+fn translate_deltas(index: &GridCsrIndex, deltas: &[CapacityDelta]) -> Result<Vec<CsrDelta>> {
+    deltas
+        .iter()
+        .map(|d| match *d {
+            CapacityDelta::Arc { i, j, dir, cap } => {
+                ensure!(
+                    dir < 4 && i < index.height() && j < index.width(),
+                    "delta arc ({i},{j}) dir {dir} off-grid"
+                );
+                let edge = index
+                    .arc(dir, i, j)
+                    .ok_or_else(|| anyhow!("delta arc ({i},{j}) dir {dir} leaves the grid"))?;
+                Ok(CsrDelta { edge, cap })
+            }
+            CapacityDelta::Sink { i, j, cap } => {
+                ensure!(i < index.height() && j < index.width(), "delta cell off-grid");
+                Ok(CsrDelta {
+                    edge: index.sink(i, j),
+                    cap,
+                })
+            }
+            CapacityDelta::Source { i, j, cap } => {
+                ensure!(i < index.height() && j < index.width(), "delta cell off-grid");
+                Ok(CsrDelta {
+                    edge: index.source(i, j),
+                    cap,
+                })
+            }
+        })
+        .collect()
+}
+
+struct SessionEntry {
+    state: SessionState,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// Per-worker LRU of open sessions under a byte budget.  The budget
+/// counts the residual caches' approximate resident sizes; the newest
+/// session is never evicted by its own insert (a budget smaller than
+/// one session would otherwise make sessions unopenable).
+pub(crate) struct SessionStore {
+    budget_bytes: usize,
+    clock: u64,
+    bytes: usize,
+    entries: HashMap<u64, SessionEntry>,
+}
+
+impl SessionStore {
+    pub fn new(budget_bytes: usize) -> Self {
+        Self {
+            budget_bytes,
+            clock: 0,
+            bytes: 0,
+            entries: HashMap::new(),
+        }
+    }
+
+    /// Insert (or replace) a session, then evict least-recently-used
+    /// sessions until the store is back under budget.  Returns the
+    /// evicted session ids so the caller can clean the directory.
+    pub fn insert(&mut self, id: u64, state: SessionState) -> Vec<u64> {
+        if let Some(old) = self.entries.remove(&id) {
+            self.bytes -= old.bytes;
+        }
+        self.clock += 1;
+        let bytes = state.approx_bytes();
+        self.bytes += bytes;
+        self.entries.insert(
+            id,
+            SessionEntry {
+                state,
+                bytes,
+                last_used: self.clock,
+            },
+        );
+        let mut evicted = Vec::new();
+        while self.bytes > self.budget_bytes && self.entries.len() > 1 {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(&k, _)| k != id)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&k, _)| k)
+                .expect("len > 1 guarantees a victim");
+            let e = self.entries.remove(&victim).unwrap();
+            self.bytes -= e.bytes;
+            evicted.push(victim);
+        }
+        evicted
+    }
+
+    /// Borrow a session's state, refreshing its recency.
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut SessionState> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.entries.get_mut(&id).map(|e| {
+            e.last_used = clock;
+            &mut e.state
+        })
+    }
+
+    pub fn remove(&mut self, id: u64) {
+        if let Some(e) = self.entries.remove(&id) {
+            self.bytes -= e.bytes;
+        }
+    }
+
+    #[cfg(test)]
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+/// Pool-global map from session id to the worker holding its residual
+/// cache (and the size class it was admitted at).  Submits consult it
+/// to route updates sticky; workers prune it as the LRU evicts.
+#[derive(Default)]
+pub(crate) struct SessionDirectory {
+    map: Mutex<HashMap<u64, (usize, SizeClass)>>,
+}
+
+impl SessionDirectory {
+    pub fn insert(&self, id: u64, worker: usize, class: SizeClass) {
+        self.map.lock().unwrap().insert(id, (worker, class));
+    }
+
+    pub fn lookup(&self, id: u64) -> Option<(usize, SizeClass)> {
+        self.map.lock().unwrap().get(&id).copied()
+    }
+
+    pub fn remove(&self, id: u64) {
+        self.map.lock().unwrap().remove(&id);
     }
 }
 

@@ -17,6 +17,7 @@ use std::fmt;
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
+use crate::gridflow::CapacityDelta;
 use crate::workloads::ProblemInstance;
 
 use super::{ReplyError, SolveReply};
@@ -143,21 +144,50 @@ impl fmt::Display for RejectReason {
     }
 }
 
+/// What a queued job asks the worker to do.
+pub(crate) enum JobPayload {
+    /// Solve an instance cold; `open_session` additionally keeps the
+    /// final residual state as a warm-start session (grid instances
+    /// only — the reply's `session` field carries the new id).
+    Solve {
+        instance: ProblemInstance,
+        open_session: bool,
+    },
+    /// Apply capacity deltas to an open session's residual cache and
+    /// resume from the affected frontier.  Routed sticky (pinned) to
+    /// the worker holding the cache.
+    Update {
+        session_id: u64,
+        deltas: Vec<CapacityDelta>,
+    },
+}
+
 /// A queued request, owned by a shard until a worker pops it.
 pub(crate) struct QueuedJob {
     pub id: u64,
     pub class: SizeClass,
-    pub instance: ProblemInstance,
+    pub payload: JobPayload,
     pub submitted: Instant,
-    /// Absolute deadline; a worker that pops the job after this instant
-    /// sheds it with [`RejectReason::DeadlineExceeded`], and a solve in
-    /// flight past it is cancelled at the next poll point.
+    /// Absolute deadline; a job still queued past this instant is shed
+    /// during the queue scans (push-when-full and every pop) with
+    /// [`RejectReason::DeadlineExceeded`], and a solve in flight past
+    /// it is cancelled at the next poll point.
     pub deadline: Option<Instant>,
     pub reply: std::sync::mpsc::Sender<Result<SolveReply, ReplyError>>,
 }
 
+impl QueuedJob {
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.map_or(false, |dl| now >= dl)
+    }
+}
+
 struct State {
     queues: [VecDeque<QueuedJob>; 3],
+    /// Per-worker pinned lanes for sticky session updates: a worker
+    /// drains its own lane before the class scan, bounded like the
+    /// class shards.
+    pinned: Vec<VecDeque<QueuedJob>>,
     shutdown: bool,
 }
 
@@ -189,13 +219,27 @@ pub(crate) fn scan_order(worker: usize, workers: usize) -> &'static [SizeClass] 
     }
 }
 
+/// Move every already-expired job out of `q` into `shed` (the caller
+/// replies `DeadlineExceeded` and counts the misses, outside the lock).
+fn drain_expired(q: &mut VecDeque<QueuedJob>, now: Instant, shed: &mut Vec<QueuedJob>) {
+    let mut i = 0;
+    while i < q.len() {
+        if q[i].expired(now) {
+            shed.push(q.remove(i).expect("index in bounds"));
+        } else {
+            i += 1;
+        }
+    }
+}
+
 impl ShardedQueues {
-    pub fn new(mut cfg: ShardConfig) -> Self {
+    pub fn new(mut cfg: ShardConfig, workers: usize) -> Self {
         cfg.queue_depth = cfg.queue_depth.max(1);
         Self {
             cfg,
             state: Mutex::new(State {
                 queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                pinned: (0..workers).map(|_| VecDeque::new()).collect(),
                 shutdown: false,
             }),
             cv: Condvar::new(),
@@ -207,16 +251,29 @@ impl ShardedQueues {
     }
 
     /// Admit `job` into its shard, or hand it back with the reason.
-    pub fn push(&self, job: QueuedJob) -> Result<(), (QueuedJob, RejectReason)> {
+    ///
+    /// A full shard is swept for already-expired jobs first (into
+    /// `shed`): dead work must not hold depth slots and turn into
+    /// spurious `QueueFull` rejections for live requests while the
+    /// workers are stalled.
+    pub fn push(
+        &self,
+        job: QueuedJob,
+        shed: &mut Vec<QueuedJob>,
+    ) -> Result<(), (QueuedJob, RejectReason)> {
         let mut st = self.state.lock().unwrap();
         if st.shutdown {
             return Err((job, RejectReason::ShuttingDown));
         }
+        let depth = self.cfg.queue_depth;
         let q = &mut st.queues[job.class.index()];
-        if q.len() >= self.cfg.queue_depth {
+        if q.len() >= depth {
+            drain_expired(q, Instant::now(), shed);
+        }
+        if q.len() >= depth {
             let reason = RejectReason::QueueFull {
                 class: job.class,
-                depth: self.cfg.queue_depth,
+                depth,
             };
             return Err((job, reason));
         }
@@ -228,16 +285,87 @@ impl ShardedQueues {
         Ok(())
     }
 
-    /// Block until a job this worker may take is available; `None` once
-    /// the pool is shutting down and this worker's shards are drained.
-    pub fn pop(&self, worker: usize, workers: usize) -> Option<QueuedJob> {
+    /// Admit a sticky job into `worker`'s pinned lane (session updates
+    /// must reach the worker holding the residual cache), with the same
+    /// bounded depth and expired-sweep as the class shards.
+    pub fn push_pinned(
+        &self,
+        job: QueuedJob,
+        worker: usize,
+        shed: &mut Vec<QueuedJob>,
+    ) -> Result<(), (QueuedJob, RejectReason)> {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return Err((job, RejectReason::ShuttingDown));
+        }
+        if worker >= st.pinned.len() {
+            // Directory pointed at a worker this pool does not have
+            // (can only happen across a restart); treat as shed.
+            return Err((job, RejectReason::ShuttingDown));
+        }
+        let depth = self.cfg.queue_depth;
+        let q = &mut st.pinned[worker];
+        if q.len() >= depth {
+            drain_expired(q, Instant::now(), shed);
+        }
+        if q.len() >= depth {
+            let reason = RejectReason::QueueFull {
+                class: job.class,
+                depth,
+            };
+            return Err((job, reason));
+        }
+        q.push_back(job);
+        drop(st);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Block until a job this worker may take is available.
+    ///
+    /// Jobs whose deadline already passed are moved into `shed` during
+    /// the scan instead of being returned: they never consume a worker
+    /// wakeup or occupy a depth slot a live request could use.  Returns
+    /// `None` in two cases the caller must distinguish: `shed` is
+    /// non-empty (expired jobs were swept — reply to them and call
+    /// `pop` again) or, with `shed` empty, the pool is shutting down
+    /// and this worker's shards are drained.
+    pub fn pop(
+        &self,
+        worker: usize,
+        workers: usize,
+        shed: &mut Vec<QueuedJob>,
+    ) -> Option<QueuedJob> {
         let order = scan_order(worker, workers);
         let mut st = self.state.lock().unwrap();
         loop {
-            for &class in order {
-                if let Some(job) = st.queues[class.index()].pop_front() {
+            let now = Instant::now();
+            // The worker's pinned session lane first: sticky updates
+            // are small and latency-sensitive, and nobody else can
+            // serve them.
+            if worker < st.pinned.len() {
+                while let Some(job) = st.pinned[worker].pop_front() {
+                    if job.expired(now) {
+                        shed.push(job);
+                        continue;
+                    }
                     return Some(job);
                 }
+            }
+            for &class in order {
+                while let Some(job) = st.queues[class.index()].pop_front() {
+                    if job.expired(now) {
+                        shed.push(job);
+                        continue;
+                    }
+                    return Some(job);
+                }
+            }
+            // Hand shed jobs back *before* blocking: their rejection
+            // replies must not wait for the next live submit.  The
+            // caller replies to them and calls `pop` again.
+            if !shed.is_empty() {
+                return None;
             }
             if st.shutdown {
                 return None;
@@ -268,11 +396,35 @@ mod tests {
         QueuedJob {
             id: 0,
             class,
-            instance: ProblemInstance::Assignment(AssignmentInstance::new(2, vec![0; 4])),
+            payload: JobPayload::Solve {
+                instance: ProblemInstance::Assignment(AssignmentInstance::new(2, vec![0; 4])),
+                open_session: false,
+            },
             submitted: Instant::now(),
             deadline: None,
             reply: tx,
         }
+    }
+
+    fn expired_job(class: SizeClass) -> QueuedJob {
+        let mut j = job(class);
+        // An instant already in the past: expired the moment it queues.
+        j.deadline = Some(Instant::now() - std::time::Duration::from_millis(10));
+        j
+    }
+
+    fn push(q: &ShardedQueues, j: QueuedJob) -> Result<(), RejectReason> {
+        let mut shed = Vec::new();
+        let r = q.push(j, &mut shed).map_err(|(_, reason)| reason);
+        assert!(shed.is_empty(), "unexpected shed during test push");
+        r
+    }
+
+    fn pop(q: &ShardedQueues, worker: usize, workers: usize) -> Option<QueuedJob> {
+        let mut shed = Vec::new();
+        let got = q.pop(worker, workers, &mut shed);
+        assert!(shed.is_empty(), "unexpected shed during test pop");
+        got
     }
 
     #[test]
@@ -291,13 +443,16 @@ mod tests {
 
     #[test]
     fn bounded_depth_rejects() {
-        let q = ShardedQueues::new(ShardConfig {
-            queue_depth: 2,
-            ..Default::default()
-        });
-        assert!(q.push(job(SizeClass::Small)).is_ok());
-        assert!(q.push(job(SizeClass::Small)).is_ok());
-        let (_, reason) = q.push(job(SizeClass::Small)).unwrap_err();
+        let q = ShardedQueues::new(
+            ShardConfig {
+                queue_depth: 2,
+                ..Default::default()
+            },
+            1,
+        );
+        assert!(push(&q, job(SizeClass::Small)).is_ok());
+        assert!(push(&q, job(SizeClass::Small)).is_ok());
+        let reason = push(&q, job(SizeClass::Small)).unwrap_err();
         assert_eq!(
             reason,
             RejectReason::QueueFull {
@@ -306,22 +461,22 @@ mod tests {
             }
         );
         // Other shards are independent.
-        assert!(q.push(job(SizeClass::Large)).is_ok());
+        assert!(push(&q, job(SizeClass::Large)).is_ok());
         assert_eq!(q.depth(SizeClass::Small), 2);
         assert_eq!(q.depth(SizeClass::Large), 1);
     }
 
     #[test]
     fn shutdown_rejects_new_and_drains_old() {
-        let q = ShardedQueues::new(ShardConfig::default());
-        assert!(q.push(job(SizeClass::Medium)).is_ok());
+        let q = ShardedQueues::new(ShardConfig::default(), 1);
+        assert!(push(&q, job(SizeClass::Medium)).is_ok());
         q.shutdown();
-        let (_, reason) = q.push(job(SizeClass::Small)).unwrap_err();
+        let reason = push(&q, job(SizeClass::Small)).unwrap_err();
         assert_eq!(reason, RejectReason::ShuttingDown);
         // The queued job is still drained...
-        assert!(q.pop(0, 1).is_some());
+        assert!(pop(&q, 0, 1).is_some());
         // ...then workers see the shutdown.
-        assert!(q.pop(0, 1).is_none());
+        assert!(pop(&q, 0, 1).is_none());
     }
 
     #[test]
@@ -336,23 +491,90 @@ mod tests {
 
     #[test]
     fn pop_prefers_small_on_lane_zero() {
-        let q = ShardedQueues::new(ShardConfig::default());
-        q.push(job(SizeClass::Medium)).unwrap();
-        q.push(job(SizeClass::Small)).unwrap();
-        let got = q.pop(0, 2).unwrap();
+        let q = ShardedQueues::new(ShardConfig::default(), 2);
+        push(&q, job(SizeClass::Medium)).unwrap();
+        push(&q, job(SizeClass::Small)).unwrap();
+        let got = pop(&q, 0, 2).unwrap();
         assert_eq!(got.class, SizeClass::Small);
-        let got = q.pop(0, 2).unwrap();
+        let got = pop(&q, 0, 2).unwrap();
         assert_eq!(got.class, SizeClass::Medium);
     }
 
     #[test]
     fn zero_depth_clamped_to_one() {
-        let q = ShardedQueues::new(ShardConfig {
-            queue_depth: 0,
-            ..Default::default()
-        });
-        assert!(q.push(job(SizeClass::Small)).is_ok());
-        assert!(q.push(job(SizeClass::Small)).is_err());
+        let q = ShardedQueues::new(
+            ShardConfig {
+                queue_depth: 0,
+                ..Default::default()
+            },
+            1,
+        );
+        assert!(push(&q, job(SizeClass::Small)).is_ok());
+        assert!(push(&q, job(SizeClass::Small)).is_err());
+    }
+
+    /// Regression (deadline-clogged shards): a shard full of jobs whose
+    /// deadlines already passed must not reject a live request — the
+    /// full-shard push sweeps the dead jobs into `shed` and admits it.
+    #[test]
+    fn full_shard_of_expired_jobs_admits_fresh_request() {
+        let q = ShardedQueues::new(
+            ShardConfig {
+                queue_depth: 2,
+                ..Default::default()
+            },
+            1,
+        );
+        // Not full yet, so the expired jobs queue without a sweep.
+        push(&q, expired_job(SizeClass::Small)).unwrap();
+        push(&q, expired_job(SizeClass::Small)).unwrap();
+        assert_eq!(q.depth(SizeClass::Small), 2);
+        let mut shed = Vec::new();
+        q.push(job(SizeClass::Small), &mut shed).unwrap();
+        assert_eq!(shed.len(), 2, "both expired jobs swept");
+        assert!(shed.iter().all(|j| j.expired(Instant::now())));
+        assert_eq!(q.depth(SizeClass::Small), 1);
+        // The admitted job is live and served.
+        let got = pop(&q, 0, 1).unwrap();
+        assert!(got.deadline.is_none());
+    }
+
+    /// Pop sweeps expired jobs instead of returning them, and — when the
+    /// sweep leaves nothing live — returns `None` with `shed` populated
+    /// rather than blocking, so their rejection replies go out now.
+    #[test]
+    fn pop_sheds_expired_jobs_without_blocking() {
+        let q = ShardedQueues::new(ShardConfig::default(), 1);
+        push(&q, expired_job(SizeClass::Small)).unwrap();
+        push(&q, job(SizeClass::Small)).unwrap();
+        let mut shed = Vec::new();
+        let got = q.pop(0, 1, &mut shed).unwrap();
+        assert!(got.deadline.is_none(), "live job served");
+        assert_eq!(shed.len(), 1, "expired job swept in the same scan");
+        // Only expired jobs left: pop must hand them back, not block.
+        push(&q, expired_job(SizeClass::Medium)).unwrap();
+        let mut shed = Vec::new();
+        assert!(q.pop(0, 1, &mut shed).is_none());
+        assert_eq!(shed.len(), 1);
+    }
+
+    #[test]
+    fn pinned_lane_is_sticky_and_preferred() {
+        let q = ShardedQueues::new(ShardConfig::default(), 2);
+        push(&q, job(SizeClass::Small)).unwrap();
+        let mut shed = Vec::new();
+        q.push_pinned(job(SizeClass::Medium), 1, &mut shed).unwrap();
+        assert!(shed.is_empty());
+        // Worker 0 never sees worker 1's pinned job.
+        assert_eq!(pop(&q, 0, 2).unwrap().class, SizeClass::Small);
+        // Worker 1 drains its pinned lane before the class shards.
+        push(&q, job(SizeClass::Large)).unwrap();
+        assert_eq!(pop(&q, 1, 2).unwrap().class, SizeClass::Medium);
+        assert_eq!(pop(&q, 1, 2).unwrap().class, SizeClass::Large);
+        // Pinned pushes to a worker the pool does not have are refused.
+        let mut shed = Vec::new();
+        let (_, reason) = q.push_pinned(job(SizeClass::Small), 7, &mut shed).unwrap_err();
+        assert_eq!(reason, RejectReason::ShuttingDown);
     }
 
     #[test]

@@ -12,5 +12,6 @@ pub use bipartite_gen::{geometric_costs, uniform_costs};
 pub use grid_gen::{random_grid, segmentation_grid};
 pub use rmf::rmf_network;
 pub use traces::{
-    MixedRequest, MixedTrace, MixedTraceConfig, ProblemInstance, RequestTrace, TraceConfig,
+    DeltaKind, DeltaRequest, DeltaTrace, DeltaTraceConfig, MixedRequest, MixedTrace,
+    MixedTraceConfig, ProblemInstance, RequestTrace, TraceConfig,
 };

@@ -6,6 +6,7 @@
 //! matchings interleaved with heavyweight grid max-flow solves).
 
 use crate::graph::{AssignmentInstance, GridNetwork};
+use crate::gridflow::CapacityDelta;
 use crate::util::Rng;
 
 use super::bipartite_gen::{geometric_costs, uniform_costs};
@@ -221,6 +222,168 @@ impl MixedTrace {
     }
 }
 
+/// Delta-trace parameters for warm-start sessions (E13): each session
+/// opens a grid instance, then streams small capacity-edit updates
+/// against it.
+#[derive(Debug, Clone)]
+pub struct DeltaTraceConfig {
+    /// Concurrently open sessions (interleaved round-robin, so sticky
+    /// routing and the LRU store see several at once).
+    pub sessions: usize,
+    /// Updates per session after the open.
+    pub updates_per_session: usize,
+    /// Capacity edits bundled into each update.
+    pub edits_per_update: usize,
+    /// Grid side length (height = width).
+    pub grid_size: usize,
+    /// Max arc capacity, for both the base grids and the edits.
+    pub grid_max_cap: i64,
+    /// Inter-arrival gap in seconds; 0 = closed-loop.
+    pub arrival_gap: f64,
+    /// Per-request deadline budget in seconds; 0 = no deadlines.
+    pub deadline: f64,
+}
+
+impl Default for DeltaTraceConfig {
+    fn default() -> Self {
+        Self {
+            sessions: 4,
+            updates_per_session: 8,
+            edits_per_update: 4,
+            grid_size: 24,
+            grid_max_cap: 16,
+            arrival_gap: 0.0,
+            deadline: 0.0,
+        }
+    }
+}
+
+/// What one delta-trace request asks of the service.
+#[derive(Debug, Clone)]
+pub enum DeltaKind {
+    /// Cold-solve this instance and open a warm-start session.
+    Open(GridNetwork),
+    /// Apply these edits to the session's graph and re-solve.
+    Update(Vec<CapacityDelta>),
+}
+
+/// One request of a delta trace.  `session` indexes the trace's logical
+/// sessions (the service assigns its own session ids at open time).
+#[derive(Debug, Clone)]
+pub struct DeltaRequest {
+    pub id: usize,
+    /// Arrival time offset from trace start, seconds.
+    pub arrival: f64,
+    /// Deadline budget in seconds from submission, if any.
+    pub deadline: Option<f64>,
+    pub session: usize,
+    pub kind: DeltaKind,
+}
+
+/// A generated delta trace, with the fully-materialised edited instance
+/// after every request — the cold-solve oracle the warm replies must
+/// match bit-for-bit, and the fallback instance a client resubmits when
+/// its session was evicted.
+#[derive(Debug, Clone)]
+pub struct DeltaTrace {
+    pub requests: Vec<DeltaRequest>,
+    /// `edited[k]` is the instance as of request `k` (for an open, the
+    /// opened instance itself).
+    pub edited: Vec<GridNetwork>,
+}
+
+impl DeltaTrace {
+    pub fn generate(rng: &mut Rng, cfg: &DeltaTraceConfig) -> Self {
+        assert!(cfg.sessions > 0 && cfg.grid_size > 0);
+        let deadline = (cfg.deadline > 0.0).then_some(cfg.deadline);
+        // `cur[s]` tracks session s's graph as the edits accumulate;
+        // CapacityDelta::apply_to *defines* the edit semantics, so the
+        // materialised oracle and the service's warm repair agree.
+        let mut cur: Vec<GridNetwork> = (0..cfg.sessions)
+            .map(|_| {
+                random_grid(
+                    rng,
+                    cfg.grid_size,
+                    cfg.grid_size,
+                    cfg.grid_max_cap,
+                    0.25,
+                    0.25,
+                )
+            })
+            .collect();
+        let mut requests = Vec::new();
+        let mut edited = Vec::new();
+        for (s, net) in cur.iter().enumerate() {
+            requests.push(DeltaRequest {
+                id: 0,
+                arrival: 0.0,
+                deadline,
+                session: s,
+                kind: DeltaKind::Open(net.clone()),
+            });
+            edited.push(net.clone());
+        }
+        for _ in 0..cfg.updates_per_session {
+            for (s, net) in cur.iter_mut().enumerate() {
+                let deltas: Vec<CapacityDelta> = (0..cfg.edits_per_update)
+                    .map(|_| random_delta(rng, net, cfg.grid_max_cap))
+                    .collect();
+                for d in &deltas {
+                    d.apply_to(net).expect("generated deltas are in-grid");
+                }
+                requests.push(DeltaRequest {
+                    id: 0,
+                    arrival: 0.0,
+                    deadline,
+                    session: s,
+                    kind: DeltaKind::Update(deltas),
+                });
+                edited.push(net.clone());
+            }
+        }
+        for (id, req) in requests.iter_mut().enumerate() {
+            req.id = id;
+            req.arrival = id as f64 * cfg.arrival_gap;
+        }
+        Self { requests, edited }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn update_count(&self) -> usize {
+        self.requests
+            .iter()
+            .filter(|r| matches!(r.kind, DeltaKind::Update(_)))
+            .count()
+    }
+}
+
+/// A uniformly random in-grid capacity edit.
+fn random_delta(rng: &mut Rng, net: &GridNetwork, max_cap: i64) -> CapacityDelta {
+    let span = max_cap.max(0) as u64 + 1;
+    loop {
+        let i = (rng.next_u64() as usize) % net.height;
+        let j = (rng.next_u64() as usize) % net.width;
+        let cap = (rng.next_u64() % span) as i64;
+        match rng.next_u64() % 4 {
+            0 => return CapacityDelta::Source { i, j, cap },
+            1 => return CapacityDelta::Sink { i, j, cap },
+            _ => {
+                let dir = (rng.next_u64() as usize) % 4;
+                if net.neighbour(i, j, dir).is_some() {
+                    return CapacityDelta::Arc { i, j, dir, cap };
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -278,6 +441,46 @@ mod tests {
             })
             .collect();
         assert!(sizes.contains(&6) && sizes.contains(&10));
+    }
+
+    #[test]
+    fn delta_trace_materialises_cumulative_edits() {
+        let mut rng = Rng::seeded(44);
+        let cfg = DeltaTraceConfig {
+            sessions: 2,
+            updates_per_session: 3,
+            edits_per_update: 2,
+            grid_size: 5,
+            grid_max_cap: 9,
+            arrival_gap: 0.01,
+            ..Default::default()
+        };
+        let trace = DeltaTrace::generate(&mut rng, &cfg);
+        assert_eq!(trace.len(), 2 + 2 * 3);
+        assert_eq!(trace.edited.len(), trace.len());
+        assert_eq!(trace.update_count(), 6);
+        assert!(trace.requests.iter().enumerate().all(|(i, r)| r.id == i));
+        assert!(matches!(trace.requests[0].kind, DeltaKind::Open(_)));
+        assert!(matches!(trace.requests[1].kind, DeltaKind::Open(_)));
+        // Re-applying each update's deltas to the session's previous
+        // materialised instance reproduces the stored one: `edited` is
+        // cumulative per session, in request order.
+        for (k, req) in trace.requests.iter().enumerate() {
+            let DeltaKind::Update(deltas) = &req.kind else {
+                continue;
+            };
+            let prev = trace.requests[..k]
+                .iter()
+                .rposition(|r| r.session == req.session)
+                .expect("every update follows its session's open");
+            let mut net = trace.edited[prev].clone();
+            for d in deltas {
+                d.apply_to(&mut net).unwrap();
+            }
+            assert_eq!(net.cap, trace.edited[k].cap);
+            assert_eq!(net.cap_source, trace.edited[k].cap_source);
+            assert_eq!(net.cap_sink, trace.edited[k].cap_sink);
+        }
     }
 
     #[test]

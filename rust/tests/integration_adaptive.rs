@@ -42,6 +42,7 @@ fn pool_config(workers: usize, routing: RoutingMode) -> PoolConfig {
             probe_every: 2,
             ..Default::default()
         },
+        session_budget_mb: 64,
     }
 }
 

@@ -6,15 +6,17 @@
 //! deadline shedding under an induced stall.
 
 use std::collections::BTreeSet;
+use std::time::{Duration, Instant};
 
 use flowmatch::assignment::hungarian::Hungarian;
 use flowmatch::assignment::AssignmentSolver;
 use flowmatch::coordinator::{solve_grid_with, GridEngine};
 use flowmatch::service::{
-    replay, FaultPlan, PoolConfig, ProblemInstance, RouterConfig, ShardConfig, SolverPool,
+    replay, FaultPlan, PoolConfig, ProblemInstance, RejectReason, ReplyError, RouterConfig,
+    ShardConfig, SolverPool,
 };
 use flowmatch::util::Rng;
-use flowmatch::workloads::{MixedTrace, MixedTraceConfig, TraceConfig};
+use flowmatch::workloads::{random_grid, MixedTrace, MixedTraceConfig, TraceConfig};
 
 const CYCLE: usize = 128;
 
@@ -37,6 +39,7 @@ fn pool_config(workers: usize) -> PoolConfig {
             retry_backoff_ms: 0, // keep the suite fast; determinism is unit-tested
             ..Default::default()
         },
+        session_budget_mb: 64,
     }
 }
 
@@ -240,4 +243,145 @@ fn deadline_sheds_queued_requests_under_stall() {
     // The server saw at least as many misses (sheds + mid-flight
     // cancellations of the stalled solve).
     assert!(report.deadline_misses >= out.deadline_misses);
+}
+
+/// A solve cancelled mid-flight by its deadline is a *client* problem,
+/// not a backend fault: it must not charge the backend a breaker
+/// strike, must not burn a retry attempt on a fallback engine, and is
+/// accounted server-side as a deadline miss.  With `breaker_threshold
+/// = 1` a single wrongly-charged strike would open the breaker, so the
+/// closed-breaker assertion below is sharp.
+#[test]
+fn midflight_cancel_charges_no_strike_and_burns_no_retry() {
+    let mut cfg = pool_config(1);
+    // The solve itself stalls past the deadline (80ms vs 25ms), so the
+    // request is dispatched live and cancelled at the next poll point.
+    cfg.router.fault = Some(FaultPlan::new("native").with_delay_every(1, 80));
+    cfg.router.max_retries = 2;
+    cfg.router.breaker_threshold = 1;
+    let mut rng = Rng::seeded(705);
+    let trace = MixedTrace::generate(
+        &mut rng,
+        &MixedTraceConfig {
+            assign: TraceConfig {
+                requests: 0,
+                ..Default::default()
+            },
+            grid_requests: 1, // a single request: nothing queues behind it
+            grid_size: 12,    // 144 units: Small lane -> the native backend
+            grid_max_cap: 8,
+            grid_arrival_gap: 0.0,
+            large_every: 0,
+            deadline: 0.025,
+            ..Default::default()
+        },
+    );
+    let pool = SolverPool::start(cfg);
+    let out = replay(&pool, &trace, false);
+    let report = pool.shutdown();
+
+    assert_eq!(out.sent, 1);
+    assert_eq!(out.lost, 0);
+    // The reply is a cancellation-shaped failure that burned no retry
+    // (a fallback attempt could not beat the already-expired deadline).
+    match &out.replies[0].1 {
+        Err(ReplyError::Failed { retries, .. }) => assert_eq!(*retries, 0),
+        // Tight schedules may shed at dispatch instead; both shapes
+        // count as a server-side deadline miss and charge no strike.
+        Err(ReplyError::Rejected(RejectReason::DeadlineExceeded)) => {}
+        other => panic!("expected a cancelled solve, got {other:?}"),
+    }
+    assert_eq!(report.retries, 0, "cancellation burned a retry");
+    assert!(report.deadline_misses >= 1, "miss not accounted server-side");
+    // No breaker strike: with threshold 1 any strike would show here.
+    assert_eq!(report.breakers_open(), 0, "{:?}", report.breakers);
+    assert!(
+        report.breakers.iter().all(|b| b.opened_total == 0),
+        "cancellation charged a breaker strike: {:?}",
+        report.breakers
+    );
+}
+
+/// Regression for the shard-clog bug: a bounded shard packed with jobs
+/// whose deadlines have already passed must not reject fresh work.  The
+/// push sweeps the expired jobs out (each replied `DeadlineExceeded`
+/// and counted as a miss) and admits the new request, which is then
+/// actually served.
+#[test]
+fn expired_queue_backlog_does_not_block_admission() {
+    let mut cfg = pool_config(1);
+    cfg.shard.queue_depth = 2;
+    // The single worker stalls 150ms on every native solve, keeping it
+    // busy while the queue behind it fills and expires.
+    cfg.router.fault = Some(FaultPlan::new("native").with_delay_every(1, 150));
+    let mut rng = Rng::seeded(706);
+    let net = random_grid(&mut rng, 12, 12, 8, 0.25, 0.25);
+    let pool = SolverPool::start(cfg);
+    // Occupy the worker with a no-deadline solve.
+    let busy = pool
+        .try_submit_with_deadline(ProblemInstance::Grid(net.clone()), None)
+        .expect("first request admitted");
+    std::thread::sleep(Duration::from_millis(30)); // worker picks it up
+    // Fill the Small shard to its depth with jobs that expire at once.
+    let stale: Vec<_> = (0..2)
+        .map(|_| {
+            pool.try_submit_with_deadline(
+                ProblemInstance::Grid(net.clone()),
+                Some(Duration::from_millis(1)),
+            )
+            .expect("admitted up to queue depth")
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(10)); // let them expire
+    // The regression: before the sweep this was `QueueFull` — dead jobs
+    // holding capacity against live traffic.
+    let fresh = pool
+        .try_submit_with_deadline(ProblemInstance::Grid(net.clone()), None)
+        .expect("expired jobs may not hold shard capacity");
+    // The swept jobs were answered, not dropped.
+    for rx in stale {
+        match rx.recv().expect("swept job still gets a reply") {
+            Err(ReplyError::Rejected(RejectReason::DeadlineExceeded)) => {}
+            other => panic!("expected a deadline shed, got {other:?}"),
+        }
+    }
+    let reply = fresh.recv().expect("fresh reply");
+    assert!(reply.is_ok(), "fresh request not served: {reply:?}");
+    assert!(busy.recv().expect("busy reply").is_ok());
+    let report = pool.shutdown();
+    assert!(report.deadline_misses >= 2, "sweep misses not counted");
+    assert_eq!(report.served, 2);
+}
+
+/// Regression for the backoff-ignores-deadline bug: with a first
+/// backend that fails instantly and a retry backoff far longer than the
+/// request's deadline, the reply must arrive about when the deadline
+/// passes — the backoff sleep is clamped to the remaining budget and
+/// the post-sleep cancellation check returns without burning the retry.
+#[test]
+fn retry_backoff_respects_the_deadline() {
+    let mut cfg = pool_config(1);
+    cfg.router.fault = Some(FaultPlan::new("native").with_panic_every(1));
+    cfg.router.max_retries = 2;
+    cfg.router.retry_backoff_ms = 10_000; // would dwarf the 30ms deadline
+    let mut rng = Rng::seeded(707);
+    let net = random_grid(&mut rng, 12, 12, 8, 0.25, 0.25);
+    let pool = SolverPool::start(cfg);
+    let t = Instant::now();
+    let rx = pool
+        .try_submit_with_deadline(ProblemInstance::Grid(net), Some(Duration::from_millis(30)))
+        .expect("admitted");
+    let reply = rx.recv().expect("reply channel dropped");
+    let elapsed = t.elapsed();
+    let report = pool.shutdown();
+    match reply {
+        Err(ReplyError::Failed { retries, .. }) => {
+            assert_eq!(retries, 0, "cancelled request burned a retry")
+        }
+        other => panic!("expected a cancelled failure, got {other:?}"),
+    }
+    // Far under the 10s backoff; generous slack for a loaded CI box.
+    assert!(elapsed < Duration::from_secs(2), "backoff ignored the deadline: {elapsed:?}");
+    assert_eq!(report.retries, 0);
+    assert!(report.deadline_misses >= 1, "miss not accounted server-side");
 }

@@ -35,6 +35,7 @@ fn test_pool_config(workers: usize) -> PoolConfig {
             tile_rows: 4,
             ..Default::default()
         },
+        session_budget_mb: 64,
     }
 }
 

@@ -1,0 +1,155 @@
+//! Integration tests for warm-start sessions on dynamic graphs: a
+//! delta trace (session opens + capacity-edit updates) replayed through
+//! the pool's session API, with every reply — warm or cold — checked
+//! against a cold solve of the fully-materialised edited instance.  The
+//! oracle runs for every grid engine and both host-round policies, plus
+//! the LRU-eviction degraded mode (cold fallback stays correct).
+
+use flowmatch::coordinator::{solve_grid_with, GridEngine};
+use flowmatch::service::{
+    replay_sessions, GridBackend, HostRounds, PoolConfig, RouterConfig, SessionReplayOutcome,
+    ShardConfig, SolverPool,
+};
+use flowmatch::util::Rng;
+use flowmatch::workloads::{DeltaTrace, DeltaTraceConfig};
+
+const CYCLE: usize = 128;
+
+fn pool_config(workers: usize) -> PoolConfig {
+    PoolConfig {
+        workers,
+        shard: ShardConfig {
+            small_max_units: 256,
+            medium_max_units: 1024,
+            queue_depth: 64,
+            max_units: 1 << 16,
+        },
+        router: RouterConfig {
+            use_pjrt: false, // keep the oracle artifact-free
+            cycle_waves: CYCLE,
+            par_threads: 2,
+            tile_rows: 4,
+            retry_backoff_ms: 0,
+            ..Default::default()
+        },
+        session_budget_mb: 64,
+    }
+}
+
+fn delta_trace(seed: u64, sessions: usize, updates: usize, size: usize) -> DeltaTrace {
+    let mut rng = Rng::seeded(seed);
+    DeltaTrace::generate(
+        &mut rng,
+        &DeltaTraceConfig {
+            sessions,
+            updates_per_session: updates,
+            edits_per_update: 3,
+            grid_size: size,
+            grid_max_cap: 12,
+            arrival_gap: 0.0,
+            deadline: 0.0,
+        },
+    )
+}
+
+/// The differential oracle: every successful reply's flow equals a cold
+/// sequential solve of the trace's materialised edited instance at that
+/// request.  Max-flow *value* is unique, so this holds for warm repairs
+/// and cold fallbacks alike, on every engine.
+fn assert_oracle(trace: &DeltaTrace, out: &SessionReplayOutcome, label: &str) {
+    assert_eq!(out.lost, 0, "{label}: lost replies");
+    for (id, reply) in &out.replies {
+        let reply = reply
+            .as_ref()
+            .unwrap_or_else(|e| panic!("{label}: request {id}: {e}"));
+        let (want, _) =
+            solve_grid_with(&trace.edited[*id], CYCLE, None, GridEngine::Native).unwrap();
+        assert_eq!(
+            reply.outcome.flow(),
+            Some(want.flow),
+            "{label}: request {id} (warm={}, backend {}) diverged from the cold oracle",
+            reply.warm,
+            reply.backend
+        );
+    }
+}
+
+/// The ISSUE acceptance matrix: delta-solve ≡ cold-solve on the edited
+/// graph for every engine × both host-round policies.  With a generous
+/// budget nothing evicts, so every update is served warm.
+#[test]
+fn warm_updates_match_cold_oracle_for_every_engine_and_host_rounds() {
+    for backend in [
+        GridBackend::Native,
+        GridBackend::NativePar,
+        GridBackend::FifoLockfree,
+    ] {
+        for rounds in [HostRounds::Seq, HostRounds::Striped] {
+            let label = format!("{}/{rounds:?}", backend.name());
+            let mut cfg = pool_config(2);
+            cfg.router.grid = [backend; 3];
+            cfg.router.host_rounds = rounds;
+            let trace = delta_trace(801, 3, 4, 16);
+            let pool = SolverPool::start(cfg);
+            let out = replay_sessions(&pool, &trace);
+            let report = pool.shutdown();
+
+            assert_eq!(out.sent, trace.len(), "{label}");
+            assert_eq!(out.failed, 0, "{label}: failed replies");
+            assert_oracle(&trace, &out, &label);
+            // Nothing evicts under a 64MB budget: the whole update
+            // stream is served warm, from sticky-routed residual caches.
+            assert_eq!(out.opens, 3, "{label}: every open succeeds");
+            assert_eq!(out.cold_fallbacks, 0, "{label}");
+            assert_eq!(out.warm_hits, trace.update_count(), "{label}");
+            assert_eq!(report.warm_served, out.warm_hits, "{label}");
+            assert_eq!(report.sessions_evicted, 0, "{label}");
+            assert!((out.warm_rate() - 1.0).abs() < 1e-12, "{label}");
+        }
+    }
+}
+
+/// Interleaved sessions under a zero-byte budget: every open evicts the
+/// previous session, every update comes back `SessionEvicted`, and the
+/// client's cold fallback (re-solving the materialised edited instance)
+/// keeps every answer oracle-correct — the degraded mode loses warmth,
+/// never correctness.
+#[test]
+fn evicted_sessions_fall_back_cold_and_stay_oracle_correct() {
+    let mut cfg = pool_config(1); // one worker: both sessions share one LRU
+    cfg.session_budget_mb = 0; // the store retains only the latest session
+    let trace = delta_trace(802, 2, 4, 12);
+    let pool = SolverPool::start(cfg);
+    let out = replay_sessions(&pool, &trace);
+    let report = pool.shutdown();
+
+    assert_eq!(out.sent, trace.len());
+    assert_eq!(out.failed, 0, "cold fallback must absorb every eviction");
+    assert_oracle(&trace, &out, "evicting");
+    // Two sessions round-robin against a one-session store: the replay
+    // must have hit the eviction path and recovered.
+    assert!(out.cold_fallbacks > 0, "budget never evicted");
+    assert!(report.sessions_evicted > 0, "evictions not reported");
+    // Every update got exactly one answer, warm or fallback-cold.
+    assert_eq!(out.warm_hits + out.cold_fallbacks, trace.update_count());
+    assert!(out.warm_rate() < 1.0);
+}
+
+/// Sticky routing across a multi-worker pool: with several workers and
+/// several sessions, updates still reach the worker holding their
+/// residual cache (a miss would surface as `SessionEvicted` and a cold
+/// fallback).  Warmth is total under a generous budget.
+#[test]
+fn sticky_routing_keeps_updates_warm_across_workers() {
+    let cfg = pool_config(3);
+    let trace = delta_trace(803, 5, 3, 16);
+    let pool = SolverPool::start(cfg);
+    let out = replay_sessions(&pool, &trace);
+    let report = pool.shutdown();
+
+    assert_eq!(out.failed, 0);
+    assert_oracle(&trace, &out, "sticky");
+    assert_eq!(out.cold_fallbacks, 0, "sticky delivery missed its worker");
+    assert_eq!(out.warm_hits, trace.update_count());
+    assert_eq!(report.warm_served, out.warm_hits);
+}
