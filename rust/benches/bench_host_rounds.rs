@@ -38,22 +38,42 @@ fn mid_solve_state(seed: u64, h: usize, w: usize) -> GridWireState {
 
 const ROUNDS: usize = 4;
 
-fn run_seq(st0: &GridWireState) -> GridWireState {
+fn run_seq(st0: &GridWireState) -> (GridWireState, host::HostScratch) {
     let mut st = st0.clone();
     let mut scratch = host::HostScratch::for_state(&st);
     for _ in 0..ROUNDS {
         host::host_round_with(&mut st, &mut scratch);
     }
-    st
+    (st, scratch)
 }
 
-fn run_striped(st0: &GridWireState, lanes: &Lanes<'_>) -> GridWireState {
+fn run_striped(st0: &GridWireState, lanes: &Lanes<'_>) -> (GridWireState, host::HostScratch) {
     let mut st = st0.clone();
     let mut scratch = host::HostScratch::for_state(&st);
     for _ in 0..ROUNDS {
         host::host_round_par(&mut st, &mut scratch, lanes);
     }
-    st
+    (st, scratch)
+}
+
+/// Phase split of one instrumented run: the scratch accumulates cancel
+/// vs global-relabel seconds across the rounds, so alongside the total
+/// times above the JSON also says *which* host phase the striping buys
+/// back.
+fn phase_row(table: &mut Table, size: usize, mode: &str, threads: usize, sc: &host::HostScratch) {
+    let total = sc.cancel_seconds + sc.relabel_seconds;
+    table.row(vec![
+        format!("{size}x{size}").into(),
+        mode.into(),
+        Cell::Int(threads as i64),
+        Cell::Float(sc.cancel_seconds * 1e3),
+        Cell::Float(sc.relabel_seconds * 1e3),
+        Cell::Float(if total > 0.0 {
+            sc.relabel_seconds / total
+        } else {
+            0.0
+        }),
+    ]);
 }
 
 fn main() {
@@ -65,10 +85,15 @@ fn main() {
         &format!("Host rounds: seq vs striped ({ROUNDS} rounds on a mid-solve state)"),
         &["grid", "mode", "threads", "time", "speedup"],
     );
+    let mut phase_table = Table::new(
+        &format!("E14: host-round phase split ({ROUNDS} rounds, one instrumented run)"),
+        &["grid", "mode", "threads", "cancel ms", "relabel ms", "relabel share"],
+    );
 
     for &size in sizes {
         let st0 = mid_solve_state(9, size, size);
-        let seq_state = run_seq(&st0);
+        let (seq_state, seq_scratch) = run_seq(&st0);
+        phase_row(&mut phase_table, size, "seq", 1, &seq_scratch);
         let seq_times = measure.run(|| run_seq(&st0));
         let seq_summary = Summary::of(&seq_times).unwrap();
         let seq_mean = seq_summary.mean;
@@ -84,7 +109,8 @@ fn main() {
             let lanes = Lanes::Pool(&pool);
             // The differential contract, enforced even while
             // benchmarking: identical post-round state.
-            let striped_state = run_striped(&st0, &lanes);
+            let (striped_state, striped_scratch) = run_striped(&st0, &lanes);
+            phase_row(&mut phase_table, size, "striped", threads, &striped_scratch);
             assert_eq!(
                 striped_state.h, seq_state.h,
                 "striped host rounds diverged at {size}x{size} t={threads}"
@@ -105,10 +131,11 @@ fn main() {
     }
 
     table.print();
+    phase_table.print();
     let path = std::env::var("FLOWMATCH_BENCH_JSON")
         .unwrap_or_else(|_| "benches/data/bench_host_rounds.json".to_string());
     let path = std::path::PathBuf::from(path);
-    match write_json(&path, &[&table]) {
+    match write_json(&path, &[&table, &phase_table]) {
         Ok(()) => println!("\nbenchkit JSON written to {}", path.display()),
         Err(e) => eprintln!("\nwarning: could not write benchkit JSON: {e}"),
     }

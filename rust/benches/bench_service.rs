@@ -106,6 +106,35 @@ fn print_rejects(out: &ReplayOutcome) {
     }
 }
 
+/// One row per nonzero phase: where the served replies' time went,
+/// client-aggregated across the whole trace (§E14).  The spawn
+/// baseline traces nothing, so it contributes no rows.
+fn phase_rows(table: &mut Table, trace: &str, path: &str, out: &ReplayOutcome) {
+    let total = out.phases.total_seconds();
+    if total <= 0.0 {
+        return;
+    }
+    for (phase, secs) in out.phases.entries() {
+        if secs > 0.0 {
+            table.row(vec![
+                trace.into(),
+                path.into(),
+                phase.into(),
+                Cell::Float(secs * 1e3),
+                Cell::Float(secs / total),
+            ]);
+        }
+    }
+    println!(
+        "  phases [{path}]: {} (waves={} pushes={} relabels={} global_relabels={})",
+        out.phases.fmt_compact(),
+        out.phases.waves,
+        out.phases.pushes,
+        out.phases.relabels,
+        out.phases.global_relabels
+    );
+}
+
 fn verify_sample(trace: &MixedTrace, out: &ReplayOutcome) {
     // Spot-check optimality so the bench cannot silently measure a
     // broken path (full verification lives in integration_service.rs
@@ -146,6 +175,11 @@ fn main() {
         ],
     );
 
+    let mut phase_table = Table::new(
+        "E14: per-phase time split, summed over served replies",
+        &["trace", "path", "phase", "total ms", "share"],
+    );
+
     // --- small-instance trace: pooled vs per-request spawn ---------------
     let trace = small_trace(small_requests, 7);
     let cfg = PoolConfig {
@@ -159,6 +193,7 @@ fn main() {
     let _ = pool.shutdown();
     verify_sample(&trace, &pooled);
     row(&mut table, "small n=16", "pooled", 4, &pooled);
+    phase_rows(&mut phase_table, "small n=16", "pooled", &pooled);
 
     let baseline = replay_spawn_baseline(&trace, &shard, &router);
     verify_sample(&trace, &baseline);
@@ -189,6 +224,7 @@ fn main() {
     verify_sample(&trace, &static_out);
     print_rejects(&static_out);
     row(&mut table, "mixed asn+grid", "pooled-static", 4, &static_out);
+    phase_rows(&mut phase_table, "mixed asn+grid", "pooled-static", &static_out);
 
     let mut adaptive_cfg = cfg;
     adaptive_cfg.router.routing = RoutingMode::Adaptive;
@@ -204,6 +240,7 @@ fn main() {
         4,
         &adaptive_out,
     );
+    phase_rows(&mut phase_table, "mixed asn+grid", "pooled-adaptive", &adaptive_out);
 
     for (mode, report) in [("static", &static_report), ("adaptive", &adaptive_report)] {
         println!(
@@ -214,10 +251,11 @@ fn main() {
     }
 
     table.print();
+    phase_table.print();
     let path = std::env::var("FLOWMATCH_BENCH_SERVICE_JSON")
         .unwrap_or_else(|_| "benches/data/bench_service.json".to_string());
     let path = std::path::PathBuf::from(path);
-    match write_json(&path, &[&table]) {
+    match write_json(&path, &[&table, &phase_table]) {
         Ok(()) => println!("\nbenchkit JSON written to {}", path.display()),
         Err(e) => eprintln!("\nwarning: could not write benchkit JSON: {e}"),
     }

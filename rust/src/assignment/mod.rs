@@ -55,6 +55,16 @@ pub struct AssignmentResult {
 pub trait AssignmentSolver {
     fn name(&self) -> &'static str;
     fn solve(&self, inst: &AssignmentInstance) -> Result<AssignmentResult>;
+
+    /// [`AssignmentSolver::solve`], plus a flush of the op counters into
+    /// the global metrics registry under this engine's name
+    /// (`flowmatch_engine_*_total{engine="auction"}`, …).  One registry
+    /// touch per solve; the solve itself is unchanged.
+    fn solve_traced(&self, inst: &AssignmentInstance) -> Result<AssignmentResult> {
+        let result = self.solve(inst)?;
+        crate::obs::record_assignment_stats(self.name(), &result.stats);
+        Ok(result)
+    }
 }
 
 /// All engines, for parity tests and the E5 bench.

@@ -67,6 +67,13 @@ pub struct HostScratch {
     cancel_out: Vec<Vec<CrossOp>>,
     stripe_cancel: Vec<(u64, i64)>,
     stripe_gap: Vec<u64>,
+    /// Cumulative seconds the cancel / relabel passes have run through
+    /// this scratch (filled by [`host_round_with`] / [`host_round_par`]).
+    /// The solver reads deltas into its phase breakdown; the timing
+    /// lives here and not on [`HostRoundStats`] so the stats stay a pure
+    /// `Eq` outcome value the seq-vs-par bit-exactness tests compare.
+    pub cancel_seconds: f64,
+    pub relabel_seconds: f64,
 }
 
 /// Row-stripe partition the striped host passes use: about twice as
@@ -253,8 +260,12 @@ pub fn global_relabel(st: &mut GridWireState) -> HostRoundStats {
 
 /// Full host round: cancel violations then global+gap relabel.
 pub fn host_round_with(st: &mut GridWireState, scratch: &mut HostScratch) -> HostRoundStats {
+    let t = crate::util::Timer::start();
     let (cancelled, src_returned) = cancel_violations_with(st, scratch);
+    scratch.cancel_seconds += t.elapsed();
+    let t = crate::util::Timer::start();
     let mut out = global_relabel_with(st, scratch);
+    scratch.relabel_seconds += t.elapsed();
     out.cancelled_arcs = cancelled;
     out.src_returned = src_returned;
     out
@@ -660,8 +671,12 @@ pub fn host_round_par(
     scratch: &mut HostScratch,
     lanes: &Lanes<'_>,
 ) -> HostRoundStats {
+    let t = crate::util::Timer::start();
     let (cancelled, src_returned) = cancel_violations_par(st, scratch, lanes);
+    scratch.cancel_seconds += t.elapsed();
+    let t = crate::util::Timer::start();
     let mut out = global_relabel_par(st, scratch, lanes);
+    scratch.relabel_seconds += t.elapsed();
     out.cancelled_arcs = cancelled;
     out.src_returned = src_returned;
     out

@@ -381,6 +381,12 @@ fn par_wave_exec(
     // additive, and per owner the activation append order (upper
     // neighbour's ops, then lower's) is exactly the serial order.
     let any_border = scratch.borders.iter().any(|b| !b.is_empty());
+    // Per-wave border timing is `obs-fine` only: a Timer read plus a
+    // registry lookup per wave is noise at service load but real in the
+    // micro-benches, so by default this block compiles to the plain
+    // reconcile.
+    #[cfg(feature = "obs-fine")]
+    let border_timer = crate::util::Timer::start();
     if any_border {
         struct ReconcileJob<'a> {
             t: usize,
@@ -471,6 +477,15 @@ fn par_wave_exec(
                 }
             }
         }
+    }
+
+    #[cfg(feature = "obs-fine")]
+    if any_border {
+        crate::obs::record_phase_secs(
+            "grid",
+            crate::obs::Phase::BorderReconcile,
+            border_timer.elapsed(),
+        );
     }
 
     // --- Phase 4: compaction + stats reduction --------------------------

@@ -7,6 +7,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::graph::GridNetwork;
+use crate::obs::{self, Phase, PhaseBreakdown};
 use crate::parallel::Lanes;
 use crate::runtime::device::{GridStepStats, GridWireState};
 use crate::service::pool::WorkerPool;
@@ -162,6 +163,9 @@ pub struct GridSolveReport {
     pub cancelled_arcs: u64,
     pub device_seconds: f64,
     pub host_seconds: f64,
+    /// Per-phase breakdown of the same wall-clock: `wave_compute` ≈
+    /// `device_seconds`, `cancel + global_relabel` ≈ `host_seconds`.
+    pub phases: PhaseBreakdown,
 }
 
 /// The hybrid solver (Algorithm 4.6 shape).
@@ -306,7 +310,10 @@ impl HybridGridSolver {
                 host::global_relabel_with(st, &mut hscratch)
             };
             report.gap_cells += out.gap_cells;
-            report.host_seconds += t.elapsed();
+            let secs = t.elapsed();
+            report.host_seconds += secs;
+            report.phases.add(Phase::GlobalRelabel, secs);
+            report.phases.global_relabels += 1;
         }
 
         let outer = (self.cycle_waves as i64 + exec.k_inner() as i64 - 1) / exec.k_inner() as i64;
@@ -321,7 +328,9 @@ impl HybridGridSolver {
             }
             let t = crate::util::Timer::start();
             let stats = exec.superstep(st, outer as i32)?;
-            report.device_seconds += t.elapsed();
+            let secs = t.elapsed();
+            report.device_seconds += secs;
+            report.phases.add(Phase::WaveCompute, secs);
             sink_total += stats.sink_flow;
             src_total += stats.src_flow;
             report.waves += stats.waves;
@@ -343,6 +352,9 @@ impl HybridGridSolver {
 
             if self.heuristics {
                 let t = crate::util::Timer::start();
+                // The round writes its split (cancel vs relabel) into the
+                // scratch's cumulative clocks; the deltas go to the phases.
+                let (c0, r0) = (hscratch.cancel_seconds, hscratch.relabel_seconds);
                 let out = if striped {
                     host::host_round_par(st, &mut hscratch, &lanes)
                 } else {
@@ -352,6 +364,11 @@ impl HybridGridSolver {
                 report.gap_cells += out.gap_cells;
                 report.cancelled_arcs += out.cancelled_arcs;
                 report.host_seconds += t.elapsed();
+                report.phases.add(Phase::Cancel, hscratch.cancel_seconds - c0);
+                report
+                    .phases
+                    .add(Phase::GlobalRelabel, hscratch.relabel_seconds - r0);
+                report.phases.global_relabels += 1;
                 exec.invalidate();
             }
         }
@@ -364,6 +381,10 @@ impl HybridGridSolver {
             excess_total
         );
         report.flow = sink_total;
+        report.phases.pushes = report.pushes.max(0) as u64;
+        report.phases.relabels = report.relabels.max(0) as u64;
+        report.phases.waves = report.waves.max(0) as u64;
+        obs::record_phases("grid", &report.phases);
         Ok(report)
     }
 }

@@ -26,6 +26,7 @@ pub mod config;
 pub mod coordinator;
 pub mod energy;
 pub mod graph;
+pub mod obs;
 pub mod opticalflow;
 pub mod parallel;
 pub mod reductions;

@@ -41,6 +41,9 @@ fn main() {
 }
 
 fn run(args: Args) -> Result<()> {
+    // Read FLOWMATCH_LOG once, up front, so every thread any command
+    // spawns inherits the same level.
+    flowmatch::util::logging::ensure_init();
     match args.command.as_deref() {
         Some("info") => cmd_info(),
         Some("maxflow") => cmd_maxflow(&args),
@@ -71,10 +74,14 @@ const USAGE: &str = "flowmatch <info|maxflow|assign|segment|optflow|serve|solver
             [--large-grid S] [--fps F] [--queue-depth D] [--max-units U] [--seed S]
             [--routing static|adaptive] [--probe-every N] [--spill-depth D]
             [--host-rounds seq|striped] [--native] [--preset paper|smoke] [--baseline (loadgen)]
-            [--max-retries N] [--deadline-ms MS] [--chaos SEED (loadgen; seeded fault injection,
+            [--max-retries N] [--deadline-ms MS] [--breaker-threshold N (consecutive failures
+            that trip a circuit breaker; 0 disables)]
+            [--chaos SEED (loadgen; seeded fault injection,
             asserts zero lost replies)]
             [--sessions K (loadgen; warm-start delta-trace smoke, asserts warm hits + zero lost)]
-            [--session-updates U] [--session-edits E] [--session-budget-mb MB]";
+            [--session-updates U] [--session-edits E] [--session-budget-mb MB]
+            [--metrics-interval SECS (dump the metrics exposition every SECS and at shutdown)]
+            [--metrics-out FILE (write the exposition to FILE instead of stdout)]";
 
 fn cmd_info() -> Result<()> {
     println!("flowmatch — parallel flow and matching algorithms (Łupińska 2011 reproduction)");
@@ -401,6 +408,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Write the global registry's Prometheus-style exposition to `path`
+/// (replacing the previous dump) or to stdout.
+fn dump_metrics(path: Option<&str>) {
+    let text = flowmatch::obs::global().render_text();
+    match path {
+        Some(p) => {
+            if let Err(e) = std::fs::write(p, text.as_bytes()) {
+                eprintln!("metrics: failed to write {p}: {e}");
+            }
+        }
+        None => print!("{text}"),
+    }
+}
+
 fn fmt_lat(tag: &str, s: &Option<flowmatch::util::stats::Summary>) -> String {
     match s {
         Some(s) => format!(
@@ -440,11 +461,14 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
         "host-rounds",
         "max-retries",
         "deadline-ms",
+        "breaker-threshold",
         "chaos",
         "sessions",
         "session-updates",
         "session-edits",
         "session-budget-mb",
+        "metrics-interval",
+        "metrics-out",
     ])?;
     let action = args
         .positional
@@ -477,6 +501,8 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
         pool_cfg.router.use_pjrt = false;
     }
     pool_cfg.router.max_retries = args.get_usize("max-retries", pool_cfg.router.max_retries)?;
+    pool_cfg.router.breaker_threshold =
+        args.get_usize("breaker-threshold", pool_cfg.router.breaker_threshold)?;
     // Chaos mode: wrap one backend in a seeded deterministic fault plan
     // (periodic panics + injected failures, never corrupted answers) so
     // the retry/breaker machinery is exercised end to end.
@@ -610,9 +636,42 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
 
     let shard_cfg = pool_cfg.shard.clone();
     let router_cfg = pool_cfg.router.clone();
+    let metrics_interval = args.get_f64("metrics-interval", 0.0)?;
+    let metrics_out = args.get("metrics-out").map(|s| s.to_string());
     let pool = flowmatch::service::SolverPool::start(pool_cfg);
-    let out = flowmatch::service::replay(&pool, &trace, open_loop);
+    // Live introspection: a scoped sidecar thread refreshes the gauges
+    // and dumps the exposition every --metrics-interval seconds while
+    // the replay runs, then stops with it (the scope joins it).
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let out = std::thread::scope(|s| {
+        if metrics_interval > 0.0 {
+            let pool = &pool;
+            let stop = &stop;
+            let path = metrics_out.clone();
+            s.spawn(move || {
+                let tick = std::time::Duration::from_millis(25);
+                let mut since_dump = 0.0f64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    std::thread::sleep(tick);
+                    since_dump += tick.as_secs_f64();
+                    if since_dump >= metrics_interval {
+                        since_dump = 0.0;
+                        pool.publish_gauges();
+                        dump_metrics(path.as_deref());
+                    }
+                }
+            });
+        }
+        let out = flowmatch::service::replay(&pool, &trace, open_loop);
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        out
+    });
     let report = pool.shutdown();
+    if metrics_interval > 0.0 || metrics_out.is_some() {
+        // Final exposition after shutdown: queues drained, gauges in
+        // their final state, counters equal to the report printed below.
+        dump_metrics(metrics_out.as_deref());
+    }
 
     println!(
         "client : ok={} rejected={} failed={} wall={} throughput={:.1} req/s",
@@ -627,6 +686,9 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
     }
     println!("  {}", fmt_lat("assignment", &out.assign));
     println!("  {}", fmt_lat("grid      ", &out.grid));
+    if !out.phases.is_zero() {
+        println!("  phases : {}", out.phases.fmt_compact());
+    }
     for class in flowmatch::service::SizeClass::ALL {
         println!(
             "  {}",

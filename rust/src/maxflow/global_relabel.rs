@@ -227,18 +227,27 @@ pub fn global_relabel_striped(
 /// What the engines call: the striped pass on the lent pool for large
 /// instances, the sequential queue BFS otherwise.  Identical results
 /// either way — this is purely a latency switch.
+///
+/// This is also where the CSR engines' global-relabel time enters the
+/// observability spine: one chokepoint instead of seven call sites
+/// across fifo/highest/hybrid.  Global relabels run every Θ(n)
+/// relabels, so the Timer read plus one registry touch is far off the
+/// push/relabel hot path.
 pub fn global_relabel_auto(
     g: &FlowNetwork,
     h: &mut [i64],
     pool: Option<&WorkerPool>,
     scratch: &mut RelabelScratch,
 ) -> GlobalRelabelOutcome {
-    match pool {
+    let t = crate::util::Timer::start();
+    let out = match pool {
         Some(pool) if g.node_count() >= STRIPED_RELABEL_MIN_NODES => {
             global_relabel_striped(g, h, scratch, &Lanes::Pool(pool))
         }
         _ => global_relabel(g, h),
-    }
+    };
+    crate::obs::record_phase_secs("csr", crate::obs::Phase::GlobalRelabel, t.elapsed());
+    out
 }
 
 /// Cancel height-violating residual arcs (`h(u) > h(v) + 1`) by pushing

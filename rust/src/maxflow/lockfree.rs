@@ -384,14 +384,25 @@ impl MaxFlowSolver for LockFree {
                         Some(p) if striped => Lanes::Pool(p.as_ref()),
                         _ => Lanes::Seq,
                     };
+                    // ARG passes run back-to-back until the workers
+                    // finish; accumulate their time locally and flush
+                    // once — a registry touch per pass would contend.
+                    let mut arg_secs = 0.0;
                     while !shared.done.load(Ordering::Acquire) {
+                        let t = crate::util::Timer::start();
                         if striped {
                             shared.arg_pass_striped(n, &mut scratch, &lanes);
                         } else {
                             shared.arg_pass_seq(n);
                         }
+                        arg_secs += t.elapsed();
                         std::thread::yield_now();
                     }
+                    crate::obs::record_phase_secs(
+                        "csr",
+                        crate::obs::Phase::GlobalRelabel,
+                        arg_secs,
+                    );
                 });
             }
             for w in 0..workers {

@@ -50,6 +50,18 @@ impl FlowStats {
 pub trait MaxFlowSolver {
     fn name(&self) -> &'static str;
     fn solve(&self, g: &mut FlowNetwork) -> Result<FlowStats>;
+
+    /// [`MaxFlowSolver::solve`], plus a flush of the op counters into
+    /// the global metrics registry under this engine's name
+    /// (`flowmatch_engine_*_total{engine="fifo"}`, …).  One registry
+    /// touch per solve; the solve itself is unchanged.  Serving layers
+    /// call this so every engine they route to is visible in the
+    /// exposition without per-engine wiring.
+    fn solve_traced(&self, g: &mut FlowNetwork) -> Result<FlowStats> {
+        let stats = self.solve(g)?;
+        crate::obs::record_flow_stats(self.name(), &stats);
+        Ok(stats)
+    }
 }
 
 /// All registered engines (for benches and parity tests).

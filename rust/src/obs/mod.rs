@@ -1,0 +1,75 @@
+//! One observability spine for engines, substrate, and service.
+//!
+//! * [`registry`] — the lock-free metrics registry (sharded counters,
+//!   gauges, fixed-bucket histograms) with Prometheus-style text
+//!   exposition and a benchkit-compatible JSON snapshot.
+//! * [`phase`] — per-solve phase tracing ([`PhaseBreakdown`], [`Span`],
+//!   [`PhaseTimer`]) and the solve-boundary flush into the registry.
+//!
+//! Conventions: metric families are `flowmatch_*`; service series carry
+//! a `pool="pN"` label (one per [`crate::service::SolverPool`] start,
+//! so concurrent pools and tests never share a series); seconds-valued
+//! counters are micro-unit fixed point (`*_micros_total`).  The full
+//! name catalogue lives in README "Observability".
+//!
+//! Cost model: hot paths touch one `Relaxed` atomic on a padded shard;
+//! registration is a mutex and happens at setup or solve boundaries;
+//! anything per-wave or per-stripe is behind the `obs-fine` feature and
+//! compiles out by default.
+
+pub mod phase;
+pub mod registry;
+
+pub use phase::{record_phase_secs, record_phases, Phase, PhaseBreakdown, PhaseTimer, Span};
+pub use registry::{global, Counter, Gauge, Histogram, Registry, LATENCY_BUCKETS};
+
+/// Flush a max-flow engine's end-of-solve counters into the global
+/// registry (one call per solve; never in the discharge loop).
+pub fn record_flow_stats(engine: &str, stats: &crate::maxflow::FlowStats) {
+    let reg = global();
+    if stats.pushes > 0 {
+        reg.counter(&format!("flowmatch_engine_pushes_total{{engine=\"{engine}\"}}"))
+            .add(stats.pushes);
+    }
+    if stats.relabels > 0 {
+        reg.counter(&format!("flowmatch_engine_relabels_total{{engine=\"{engine}\"}}"))
+            .add(stats.relabels);
+    }
+    if stats.global_relabels > 0 {
+        reg.counter(&format!(
+            "flowmatch_engine_global_relabels_total{{engine=\"{engine}\"}}"
+        ))
+        .add(stats.global_relabels);
+    }
+    if stats.gap_nodes > 0 {
+        reg.counter(&format!("flowmatch_engine_gap_nodes_total{{engine=\"{engine}\"}}"))
+            .add(stats.gap_nodes);
+    }
+    reg.counter(&format!("flowmatch_engine_solves_total{{engine=\"{engine}\"}}"))
+        .inc();
+}
+
+/// Flush an assignment engine's end-of-solve counters.
+pub fn record_assignment_stats(engine: &str, stats: &crate::assignment::AssignStats) {
+    let reg = global();
+    if stats.pushes > 0 {
+        reg.counter(&format!("flowmatch_engine_pushes_total{{engine=\"{engine}\"}}"))
+            .add(stats.pushes);
+    }
+    if stats.relabels > 0 {
+        reg.counter(&format!("flowmatch_engine_relabels_total{{engine=\"{engine}\"}}"))
+            .add(stats.relabels);
+    }
+    if stats.price_updates > 0 {
+        reg.counter(&format!(
+            "flowmatch_engine_price_updates_total{{engine=\"{engine}\"}}"
+        ))
+        .add(stats.price_updates);
+    }
+    if stats.waves > 0 {
+        reg.counter(&format!("flowmatch_engine_waves_total{{engine=\"{engine}\"}}"))
+            .add(stats.waves);
+    }
+    reg.counter(&format!("flowmatch_engine_solves_total{{engine=\"{engine}\"}}"))
+        .inc();
+}

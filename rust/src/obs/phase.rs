@@ -1,0 +1,297 @@
+//! Solve-phase tracing: a lightweight per-solve breakdown of where
+//! time goes — wave compute, border reconcile, violation cancel,
+//! global relabel, queue wait, session repair — plus the engine op
+//! counters the paper's complexity claims are stated in.
+//!
+//! A [`PhaseBreakdown`] is a plain value: engines accumulate into it
+//! with [`PhaseBreakdown::time`] / [`PhaseTimer`] / [`Span`] (no
+//! atomics, no allocation), it rides the solve reports up to the
+//! service reply, and [`record_phases`] flushes it into the global
+//! registry at the solve boundary.  Fine-grained per-wave/per-stripe
+//! instrumentation is gated behind the `obs-fine` cargo feature so the
+//! inner loops compile to the uninstrumented code by default.
+
+use crate::util::Timer;
+
+/// The traced solve phases, in display order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Device/wave super-steps (push-relabel waves, refine waves).
+    WaveCompute,
+    /// Cross-tile border reconciliation inside the tiled wave engine
+    /// (recorded only with the `obs-fine` feature).
+    BorderReconcile,
+    /// Host-round violation cancelling.
+    Cancel,
+    /// Host-round global relabel (BFS + gap).
+    GlobalRelabel,
+    /// Time a job sat in the shard queue before a worker picked it up.
+    QueueWait,
+    /// Warm-session delta apply + state repair before the resumed solve.
+    SessionRepair,
+}
+
+pub const N_PHASES: usize = 6;
+
+impl Phase {
+    pub const ALL: [Phase; N_PHASES] = [
+        Phase::WaveCompute,
+        Phase::BorderReconcile,
+        Phase::Cancel,
+        Phase::GlobalRelabel,
+        Phase::QueueWait,
+        Phase::SessionRepair,
+    ];
+
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            Phase::WaveCompute => 0,
+            Phase::BorderReconcile => 1,
+            Phase::Cancel => 2,
+            Phase::GlobalRelabel => 3,
+            Phase::QueueWait => 4,
+            Phase::SessionRepair => 5,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::WaveCompute => "wave_compute",
+            Phase::BorderReconcile => "border_reconcile",
+            Phase::Cancel => "cancel",
+            Phase::GlobalRelabel => "global_relabel",
+            Phase::QueueWait => "queue_wait",
+            Phase::SessionRepair => "session_repair",
+        }
+    }
+}
+
+/// Per-solve phase breakdown plus engine op counters.  A plain value —
+/// cheap to copy, merge, and compare; `Default` is the zero breakdown.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    seconds: [f64; N_PHASES],
+    pub pushes: u64,
+    pub relabels: u64,
+    pub global_relabels: u64,
+    pub waves: u64,
+}
+
+impl PhaseBreakdown {
+    #[inline]
+    pub fn add(&mut self, phase: Phase, secs: f64) {
+        self.seconds[phase.index()] += secs;
+    }
+
+    #[inline]
+    pub fn get(&self, phase: Phase) -> f64 {
+        self.seconds[phase.index()]
+    }
+
+    /// Time a closure into `phase`.
+    #[inline]
+    pub fn time<T, F: FnOnce() -> T>(&mut self, phase: Phase, f: F) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.add(phase, t.elapsed());
+        out
+    }
+
+    pub fn merge(&mut self, other: &PhaseBreakdown) {
+        for i in 0..N_PHASES {
+            self.seconds[i] += other.seconds[i];
+        }
+        self.pushes += other.pushes;
+        self.relabels += other.relabels;
+        self.global_relabels += other.global_relabels;
+        self.waves += other.waves;
+    }
+
+    /// Sum of all phase times (seconds).
+    pub fn total_seconds(&self) -> f64 {
+        self.seconds.iter().sum()
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.total_seconds() == 0.0 && self.pushes == 0 && self.relabels == 0 && self.waves == 0
+    }
+
+    /// `(phase name, seconds)` pairs in display order, zeros included.
+    pub fn entries(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        Phase::ALL.iter().map(move |&p| (p.name(), self.get(p)))
+    }
+
+    /// Compact one-line rendering of the nonzero phases, e.g.
+    /// `wave_compute=1.2ms global_relabel=340µs`.
+    pub fn fmt_compact(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        for (name, secs) in self.entries() {
+            if secs > 0.0 {
+                parts.push(format!("{name}={}", crate::util::stats::fmt_duration(secs)));
+            }
+        }
+        if parts.is_empty() {
+            "(no phases)".to_string()
+        } else {
+            parts.join(" ")
+        }
+    }
+}
+
+/// Free-standing phase stopwatch for code paths where the breakdown
+/// isn't borrowable across the timed region.
+#[derive(Debug)]
+pub struct PhaseTimer {
+    phase: Phase,
+    timer: Timer,
+}
+
+impl PhaseTimer {
+    pub fn start(phase: Phase) -> Self {
+        Self {
+            phase,
+            timer: Timer::start(),
+        }
+    }
+
+    /// Stop and accumulate into `into`; returns the elapsed seconds.
+    pub fn stop(self, into: &mut PhaseBreakdown) -> f64 {
+        let secs = self.timer.elapsed();
+        into.add(self.phase, secs);
+        secs
+    }
+}
+
+/// RAII span: accumulates into the borrowed breakdown on drop.
+#[derive(Debug)]
+pub struct Span<'a> {
+    breakdown: &'a mut PhaseBreakdown,
+    phase: Phase,
+    timer: Timer,
+}
+
+impl<'a> Span<'a> {
+    pub fn enter(breakdown: &'a mut PhaseBreakdown, phase: Phase) -> Self {
+        Self {
+            breakdown,
+            phase,
+            timer: Timer::start(),
+        }
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        self.breakdown.add(self.phase, self.timer.elapsed());
+    }
+}
+
+/// Record one already-measured phase duration straight into the global
+/// registry — for call sites (periodic global relabels inside the CSR
+/// engines) that have no breakdown in scope.
+pub fn record_phase_secs(family: &str, phase: Phase, secs: f64) {
+    if secs > 0.0 {
+        super::global()
+            .counter(&format!(
+                "flowmatch_phase_micros_total{{family=\"{family}\",phase=\"{}\"}}",
+                phase.name()
+            ))
+            .add_secs(secs);
+    }
+}
+
+/// Flush a solve's breakdown into the global registry under
+/// `family` (`"grid"`, `"assignment"`, ...): per-phase micro-second
+/// counters plus the op counters.  Called once per solve — a handful
+/// of relaxed adds plus one registry lookup per nonzero series.
+pub fn record_phases(family: &str, b: &PhaseBreakdown) {
+    let reg = super::global();
+    for (name, secs) in b.entries() {
+        if secs > 0.0 {
+            reg.counter(&format!(
+                "flowmatch_phase_micros_total{{family=\"{family}\",phase=\"{name}\"}}"
+            ))
+            .add_secs(secs);
+        }
+    }
+    if b.pushes > 0 {
+        reg.counter(&format!("flowmatch_engine_pushes_total{{family=\"{family}\"}}"))
+            .add(b.pushes);
+    }
+    if b.relabels > 0 {
+        reg.counter(&format!(
+            "flowmatch_engine_relabels_total{{family=\"{family}\"}}"
+        ))
+        .add(b.relabels);
+    }
+    if b.global_relabels > 0 {
+        reg.counter(&format!(
+            "flowmatch_engine_global_relabels_total{{family=\"{family}\"}}"
+        ))
+        .add(b.global_relabels);
+    }
+    if b.waves > 0 {
+        reg.counter(&format!("flowmatch_engine_waves_total{{family=\"{family}\"}}"))
+            .add(b.waves);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_merge_total() {
+        let mut a = PhaseBreakdown::default();
+        a.add(Phase::WaveCompute, 0.5);
+        a.add(Phase::Cancel, 0.25);
+        a.pushes = 10;
+        let mut b = PhaseBreakdown::default();
+        b.add(Phase::WaveCompute, 0.5);
+        b.relabels = 3;
+        a.merge(&b);
+        assert_eq!(a.get(Phase::WaveCompute), 1.0);
+        assert_eq!(a.get(Phase::Cancel), 0.25);
+        assert_eq!(a.total_seconds(), 1.25);
+        assert_eq!(a.pushes, 10);
+        assert_eq!(a.relabels, 3);
+        assert!(!a.is_zero());
+        assert!(PhaseBreakdown::default().is_zero());
+    }
+
+    #[test]
+    fn timers_accumulate_into_the_right_phase() {
+        let mut b = PhaseBreakdown::default();
+        b.time(Phase::GlobalRelabel, || std::thread::sleep(
+            std::time::Duration::from_millis(2),
+        ));
+        let t = PhaseTimer::start(Phase::QueueWait);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        t.stop(&mut b);
+        {
+            let _span = Span::enter(&mut b, Phase::Cancel);
+        }
+        assert!(b.get(Phase::GlobalRelabel) >= 0.002);
+        assert!(b.get(Phase::QueueWait) >= 0.001);
+        assert!(b.get(Phase::Cancel) >= 0.0);
+        assert_eq!(b.get(Phase::WaveCompute), 0.0);
+        assert!(b.fmt_compact().contains("global_relabel="));
+    }
+
+    #[test]
+    fn record_phases_lands_in_global_registry() {
+        let mut b = PhaseBreakdown::default();
+        b.add(Phase::WaveCompute, 0.125);
+        b.pushes = 7;
+        let reg = crate::obs::global();
+        let phase_name =
+            "flowmatch_phase_micros_total{family=\"test_phase\",phase=\"wave_compute\"}";
+        let push_name = "flowmatch_engine_pushes_total{family=\"test_phase\"}";
+        let before_phase = reg.counter_value(phase_name).unwrap_or(0);
+        let before_push = reg.counter_value(push_name).unwrap_or(0);
+        record_phases("test_phase", &b);
+        assert_eq!(reg.counter_value(phase_name), Some(before_phase + 125_000));
+        assert_eq!(reg.counter_value(push_name), Some(before_push + 7));
+    }
+}

@@ -1,0 +1,502 @@
+//! Lock-free metrics registry: monotonic counters, gauges, and
+//! fixed-bucket histograms, with a stable Prometheus-style text
+//! exposition and a benchkit-compatible JSON snapshot.
+//!
+//! Hot paths touch only a `Relaxed` atomic: counters and histograms are
+//! sharded across cache-line-padded slots (threads are assigned a shard
+//! round-robin on first use), so concurrent workers never contend on
+//! one line.  Aggregation happens at snapshot time, which is the slow
+//! path by construction.  Registration (`Registry::counter` & co.) goes
+//! through a mutex + name map and is meant for setup or solve
+//! boundaries, never inner loops — call sites that care cache the
+//! returned `Arc` handle.
+//!
+//! Metric names follow the Prometheus convention and may carry an
+//! inline label block: `flowmatch_pool_replies_total{pool="p1"}`.  The
+//! registry keys metrics by the full string; the exposition groups
+//! `# TYPE` lines by the family (the part before `{`).  Seconds-valued
+//! counters use micro-unit fixed point (see [`Counter::add_secs`]) so
+//! the hot-path add stays a single integer `fetch_add`.
+
+use std::collections::{BTreeMap, HashSet};
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::benchkit::{Cell, Table};
+
+/// Number of per-worker shards.  A power of two at least as wide as
+/// the service's worker counts; threads beyond it wrap and share.
+pub const SHARDS: usize = 16;
+
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+/// The calling thread's shard slot, assigned round-robin on first use.
+#[inline]
+fn shard_index() -> usize {
+    thread_local! {
+        static SHARD: usize = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % SHARDS;
+    }
+    SHARD.with(|s| *s)
+}
+
+/// One cache line per shard so neighbouring slots never false-share.
+#[repr(align(64))]
+#[derive(Debug)]
+struct PaddedU64(AtomicU64);
+
+/// Monotonic counter, sharded per worker thread.
+#[derive(Debug)]
+pub struct Counter {
+    shards: [PaddedU64; SHARDS],
+}
+
+impl Counter {
+    fn new() -> Self {
+        Self {
+            shards: std::array::from_fn(|_| PaddedU64(AtomicU64::new(0))),
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.shards[shard_index()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Accumulate a duration in micro-unit fixed point (1 count = 1 µs),
+    /// so seconds-valued series stay integer counters.
+    #[inline]
+    pub fn add_secs(&self, secs: f64) {
+        if secs > 0.0 {
+            self.add((secs * 1e6) as u64);
+        }
+    }
+
+    /// Aggregate across shards.  A snapshot taken while writers are hot
+    /// is a valid value between the pre- and post-snapshot totals
+    /// (every shard is read exactly once, each monotonic).
+    pub fn value(&self) -> u64 {
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Point-in-time gauge.  Set semantics don't shard, so a gauge is one
+/// atomic — gauges are updated at round boundaries, not inner loops.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.v.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn value(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Debug)]
+struct HistShard {
+    /// One slot per bound plus the overflow (+Inf) bucket.
+    counts: Vec<AtomicU64>,
+    sum_micro: AtomicU64,
+    total: AtomicU64,
+}
+
+/// Fixed-bucket histogram, sharded like [`Counter`].  Bounds are upper
+/// bounds (`v <= bound`), ascending; values above the last bound land
+/// in the implicit +Inf bucket.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    shards: Vec<HistShard>,
+}
+
+/// Aggregated histogram state: cumulative counts per bound (Prometheus
+/// `le` semantics), plus total count and sum.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSnapshot {
+    pub bounds: Vec<f64>,
+    /// `cumulative[i]` = observations `<= bounds[i]`; one extra entry
+    /// for +Inf (== `count`).
+    pub cumulative: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Self {
+        let mut b: Vec<f64> = bounds.to_vec();
+        b.sort_by(|x, y| x.partial_cmp(y).expect("histogram bounds must not be NaN"));
+        b.dedup();
+        let shards = (0..SHARDS)
+            .map(|_| HistShard {
+                counts: (0..=b.len()).map(|_| AtomicU64::new(0)).collect(),
+                sum_micro: AtomicU64::new(0),
+                total: AtomicU64::new(0),
+            })
+            .collect();
+        Self { bounds: b, shards }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: f64) {
+        let shard = &self.shards[shard_index()];
+        let mut i = self.bounds.len(); // +Inf bucket by default
+        for (k, &ub) in self.bounds.iter().enumerate() {
+            if v <= ub {
+                i = k;
+                break;
+            }
+        }
+        shard.counts[i].fetch_add(1, Ordering::Relaxed);
+        if v > 0.0 {
+            shard.sum_micro.fetch_add((v * 1e6) as u64, Ordering::Relaxed);
+        }
+        shard.total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let n = self.bounds.len();
+        let mut per_bucket = vec![0u64; n + 1];
+        let mut sum_micro = 0u64;
+        let mut count = 0u64;
+        for shard in &self.shards {
+            for (acc, c) in per_bucket.iter_mut().zip(shard.counts.iter()) {
+                *acc += c.load(Ordering::Relaxed);
+            }
+            sum_micro += shard.sum_micro.load(Ordering::Relaxed);
+            count += shard.total.load(Ordering::Relaxed);
+        }
+        let mut cumulative = per_bucket;
+        for i in 1..cumulative.len() {
+            cumulative[i] += cumulative[i - 1];
+        }
+        HistSnapshot {
+            bounds: self.bounds.clone(),
+            cumulative,
+            count,
+            sum: sum_micro as f64 / 1e6,
+        }
+    }
+}
+
+/// Default latency buckets (seconds) shared by the service histograms.
+pub const LATENCY_BUCKETS: &[f64] = &[
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0,
+];
+
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// The metric name map.  `get-or-create` by full name; the returned
+/// `Arc` handle is the hot-path object and never goes back through the
+/// registry.
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        let entry = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::new())));
+        match entry {
+            Metric::Counter(c) => Arc::clone(c),
+            other => panic!("metric {name:?} already registered as a {}", other.kind()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        let entry = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())));
+        match entry {
+            Metric::Gauge(g) => Arc::clone(g),
+            other => panic!("metric {name:?} already registered as a {}", other.kind()),
+        }
+    }
+
+    /// `bounds` is used only when the histogram is first created.
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().unwrap();
+        let entry = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new(bounds))));
+        match entry {
+            Metric::Histogram(h) => Arc::clone(h),
+            other => panic!("metric {name:?} already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Current value of a counter, if one with this exact name exists.
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        match self.metrics.lock().unwrap().get(name) {
+            Some(Metric::Counter(c)) => Some(c.value()),
+            _ => None,
+        }
+    }
+
+    /// Current value of a gauge, if one with this exact name exists.
+    pub fn gauge_value(&self, name: &str) -> Option<i64> {
+        match self.metrics.lock().unwrap().get(name) {
+            Some(Metric::Gauge(g)) => Some(g.value()),
+            _ => None,
+        }
+    }
+
+    /// All registered names, sorted (the registry key order).
+    pub fn names(&self) -> Vec<String> {
+        self.metrics.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Sum of every counter whose name starts with `prefix` — scrape
+    /// helper for labelled families (`flowmatch_route_total{...}`).
+    pub fn counter_sum(&self, prefix: &str) -> u64 {
+        self.metrics
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(name, _)| name.starts_with(prefix))
+            .filter_map(|(_, m)| match m {
+                Metric::Counter(c) => Some(c.value()),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Stable Prometheus-style text exposition: one `# TYPE` line per
+    /// family (first occurrence), then `name value` lines in sorted
+    /// name order.  Histograms expand to `_bucket{le=...}`, `_sum`,
+    /// `_count` series.
+    pub fn render_text(&self) -> String {
+        let m = self.metrics.lock().unwrap();
+        let mut out = String::new();
+        let mut typed: HashSet<String> = HashSet::new();
+        for (name, metric) in m.iter() {
+            let family = name.split('{').next().unwrap_or(name);
+            if typed.insert(family.to_string()) {
+                out.push_str(&format!("# TYPE {family} {}\n", metric.kind()));
+            }
+            match metric {
+                Metric::Counter(c) => out.push_str(&format!("{name} {}\n", c.value())),
+                Metric::Gauge(g) => out.push_str(&format!("{name} {}\n", g.value())),
+                Metric::Histogram(h) => {
+                    let snap = h.snapshot();
+                    let labels = match name.find('{') {
+                        // "family{a=\"b\"}" -> "a=\"b\","
+                        Some(i) => format!("{},", &name[i + 1..name.len() - 1]),
+                        None => String::new(),
+                    };
+                    for (bound, cum) in snap.bounds.iter().zip(snap.cumulative.iter()) {
+                        out.push_str(&format!(
+                            "{family}_bucket{{{labels}le=\"{bound}\"}} {cum}\n"
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{family}_bucket{{{labels}le=\"+Inf\"}} {}\n",
+                        snap.count
+                    ));
+                    let plain = match name.find('{') {
+                        Some(i) => format!("{{{}}}", &name[i + 1..name.len() - 1]),
+                        None => String::new(),
+                    };
+                    out.push_str(&format!("{family}_sum{plain} {}\n", snap.sum));
+                    out.push_str(&format!("{family}_count{plain} {}\n", snap.count));
+                }
+            }
+        }
+        out
+    }
+
+    /// Benchkit-compatible snapshot: one row per scalar series
+    /// (histograms contribute `_count` and `_sum` rows), renderable as
+    /// markdown and serialisable with [`crate::benchkit::write_json`].
+    pub fn to_table(&self, title: &str) -> Table {
+        let m = self.metrics.lock().unwrap();
+        let mut table = Table::new(title, &["metric", "type", "value"]);
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => table.row(vec![
+                    name.clone().into(),
+                    "counter".into(),
+                    Cell::Int(c.value() as i64),
+                ]),
+                Metric::Gauge(g) => table.row(vec![
+                    name.clone().into(),
+                    "gauge".into(),
+                    Cell::Int(g.value()),
+                ]),
+                Metric::Histogram(h) => {
+                    let snap = h.snapshot();
+                    table.row(vec![
+                        format!("{name}_count").into(),
+                        "histogram".into(),
+                        Cell::Int(snap.count as i64),
+                    ]);
+                    table.row(vec![
+                        format!("{name}_sum").into(),
+                        "histogram".into(),
+                        Cell::Float(snap.sum),
+                    ]);
+                }
+            }
+        }
+        table
+    }
+}
+
+/// The process-wide registry every layer shares.  Per-pool series are
+/// disambiguated by a `pool="pN"` label, so concurrent pools (and
+/// concurrent tests) never collide on a series.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concurrent_increments_are_exact() {
+        // N threads x M increments == N*M: no lost updates across shards.
+        let reg = Registry::new();
+        let c = reg.counter("t_concurrent_total");
+        const N: usize = 8;
+        const M: u64 = 10_000;
+        std::thread::scope(|s| {
+            for _ in 0..N {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    for _ in 0..M {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.value(), N as u64 * M);
+        assert_eq!(reg.counter_value("t_concurrent_total"), Some(N as u64 * M));
+    }
+
+    #[test]
+    fn snapshot_while_hot_is_monotonic_and_bounded() {
+        // Snapshots taken while writers run must land between the
+        // pre-read floor and the final total, and never decrease.
+        let reg = Registry::new();
+        let c = reg.counter("t_hot_total");
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = Arc::clone(&c);
+                let stop = &stop;
+                s.spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        c.add(3);
+                    }
+                });
+            }
+            let mut last = 0u64;
+            for _ in 0..200 {
+                let v = c.value();
+                assert!(v >= last, "snapshot went backwards: {v} < {last}");
+                assert_eq!(v % 3, 0, "torn aggregate: {v} not a multiple of 3");
+                last = v;
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+        assert!(c.value() >= 3);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        let h = Histogram::new(&[0.01, 0.1, 1.0]);
+        // Exactly on a bound counts into that bucket (le semantics).
+        h.observe(0.01);
+        h.observe(0.05);
+        h.observe(0.1);
+        h.observe(0.5);
+        h.observe(1.0);
+        h.observe(7.0); // +Inf
+        let snap = h.snapshot();
+        assert_eq!(snap.bounds, vec![0.01, 0.1, 1.0]);
+        assert_eq!(snap.cumulative, vec![1, 3, 5, 6]);
+        assert_eq!(snap.count, 6);
+        assert!((snap.sum - 7.66).abs() < 1e-3, "sum={}", snap.sum);
+    }
+
+    #[test]
+    fn gauge_set_and_add() {
+        let g = Gauge::default();
+        g.set(5);
+        g.add(-2);
+        assert_eq!(g.value(), 3);
+    }
+
+    #[test]
+    fn exposition_is_stable_and_grouped() {
+        let reg = Registry::new();
+        reg.counter("t_a_total{pool=\"p1\"}").add(2);
+        reg.counter("t_a_total{pool=\"p2\"}").add(3);
+        reg.gauge("t_depth").set(7);
+        reg.histogram("t_lat_seconds", &[0.5]).observe(0.25);
+        let text = reg.render_text();
+        let again = reg.render_text();
+        assert_eq!(text, again, "exposition must be deterministic");
+        assert!(text.contains("# TYPE t_a_total counter"));
+        assert_eq!(text.matches("# TYPE t_a_total").count(), 1);
+        assert!(text.contains("t_a_total{pool=\"p1\"} 2"));
+        assert!(text.contains("t_a_total{pool=\"p2\"} 3"));
+        assert!(text.contains("# TYPE t_depth gauge"));
+        assert!(text.contains("t_depth 7"));
+        assert!(text.contains("t_lat_seconds_bucket{le=\"0.5\"} 1"));
+        assert!(text.contains("t_lat_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("t_lat_seconds_count 1"));
+        assert_eq!(reg.counter_sum("t_a_total"), 5);
+    }
+
+    #[test]
+    fn table_snapshot_has_scalar_rows() {
+        let reg = Registry::new();
+        reg.counter("t_rows_total").add(4);
+        reg.histogram("t_rows_seconds", &[1.0]).observe(0.5);
+        let table = reg.to_table("snapshot");
+        let json = table.to_json();
+        assert!(json.contains("t_rows_total"));
+        assert!(json.contains("t_rows_seconds_count"));
+        assert!(json.contains("t_rows_seconds_sum"));
+    }
+}

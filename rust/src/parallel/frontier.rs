@@ -129,6 +129,13 @@ impl Default for Stripes {
     }
 }
 
+/// Frontier-width buckets (items per BFS level) for the `obs-fine`
+/// histogram: how much parallelism each level actually exposes.
+#[cfg(feature = "obs-fine")]
+const FRONTIER_LEVEL_BUCKETS: &[f64] = &[
+    1.0, 4.0, 16.0, 64.0, 256.0, 1024.0, 4096.0, 16384.0, 65536.0,
+];
+
 impl StripedFrontier {
     pub fn new() -> Self {
         Self::default()
@@ -188,6 +195,13 @@ impl StripedFrontier {
             if self.current.iter().all(|q| q.is_empty()) {
                 break;
             }
+            // `obs-fine` only: one histogram observation per BFS level
+            // (a registry lookup per level would be visible in the
+            // striped-relabel micro-benches, so it is off by default).
+            #[cfg(feature = "obs-fine")]
+            crate::obs::global()
+                .histogram("flowmatch_frontier_level_items", FRONTIER_LEVEL_BUCKETS)
+                .observe(self.current.iter().map(Vec::len).sum::<usize>() as f64);
             let next_level = level + 1;
 
             // --- Expand: parallel over producer stripes ------------------

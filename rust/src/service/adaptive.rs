@@ -137,6 +137,44 @@ impl BreakerStat {
     }
 }
 
+/// Mirror a breaker transition into the global metrics registry:
+/// `flowmatch_breaker_state{...}` (0 = closed, 1 = open, 2 = half-open)
+/// plus `flowmatch_breaker_opened_total{...}` when the transition is a
+/// trip.  Transitions are threshold-many failures apart, so the
+/// registry lookup here is nowhere near a hot path.
+fn publish_breaker_state(
+    family: Family,
+    class: SizeClass,
+    backend: &'static str,
+    state: BreakerState,
+    tripped: bool,
+) {
+    let labels = format!(
+        "{{family=\"{}\",class=\"{}\",backend=\"{}\"}}",
+        family.name(),
+        class.name(),
+        backend
+    );
+    let v = match state {
+        BreakerState::Closed => 0,
+        BreakerState::Open { .. } => 1,
+        BreakerState::HalfOpen => 2,
+    };
+    crate::obs::global()
+        .gauge(&format!("flowmatch_breaker_state{labels}"))
+        .set(v);
+    if tripped {
+        crate::log_warn!(
+            "circuit breaker opened for {}/{} backend {backend}",
+            family.name(),
+            class.name()
+        );
+        crate::obs::global()
+            .counter(&format!("flowmatch_breaker_opened_total{labels}"))
+            .inc();
+    }
+}
+
 #[derive(Default)]
 struct SinkState {
     /// Keyed by (family index, class index, backend name); BTreeMap so
@@ -227,12 +265,14 @@ impl TelemetrySink {
                     remaining: self.breaker_cooldown,
                 };
                 e.opened_total += 1;
+                publish_breaker_state(family, class, backend, e.state, true);
             }
             BreakerState::Closed if e.consecutive_failures >= self.breaker_threshold => {
                 e.state = BreakerState::Open {
                     remaining: self.breaker_cooldown,
                 };
                 e.opened_total += 1;
+                publish_breaker_state(family, class, backend, e.state, true);
             }
             // An all-open fallback attempt failed while already open:
             // restart the cooldown so the probe waits for fresh traffic.
@@ -254,7 +294,11 @@ impl TelemetrySink {
             .get_mut(&(family.index(), class.index(), backend))
         {
             e.consecutive_failures = 0;
+            let was_open = e.state != BreakerState::Closed;
             e.state = BreakerState::Closed;
+            if was_open {
+                publish_breaker_state(family, class, backend, e.state, false);
+            }
         }
     }
 
@@ -263,14 +307,15 @@ impl TelemetrySink {
     /// so half-open probing is deterministic under test — no wall time.
     pub fn request_completed(&self, family: Family, class: SizeClass) {
         let mut st = self.state.lock().unwrap();
-        for ((f, c, _), e) in st.breakers.iter_mut() {
-            if *f != family.index() || *c != class.index() {
+        for (&(f, c, backend), e) in st.breakers.iter_mut() {
+            if f != family.index() || c != class.index() {
                 continue;
             }
             if let BreakerState::Open { remaining } = &mut e.state {
                 *remaining = remaining.saturating_sub(1);
                 if *remaining == 0 {
                     e.state = BreakerState::HalfOpen;
+                    publish_breaker_state(family, class, backend, e.state, false);
                 }
             }
         }

@@ -55,6 +55,11 @@ pub struct ReplayOutcome {
     /// too-large / shutting-down), so backpressure behaviour is visible
     /// in summaries without reading per-request traces.
     pub reject_reasons: Vec<(&'static str, usize)>,
+    /// Sum of every served reply's phase breakdown — where the run's
+    /// solve time actually went (queue wait, wave compute, host
+    /// rounds), client-side.  Zero when no reply carried a breakdown
+    /// (e.g. the spawn baseline).
+    pub phases: crate::obs::PhaseBreakdown,
     /// Per-request outcomes in trace order, for oracle verification by
     /// the caller.
     pub replies: Vec<(usize, Result<SolveReply, ReplayError>)>,
@@ -73,11 +78,15 @@ impl ReplayOutcome {
         let mut deadline_misses = 0usize;
         let mut reasons: std::collections::BTreeMap<&'static str, usize> =
             std::collections::BTreeMap::new();
+        let mut phases = crate::obs::PhaseBreakdown::default();
         for (_, r) in &replies {
             match r {
                 Ok(reply) => {
                     retries += u64::from(reply.retries);
                     breaker_skips += u64::from(reply.breaker_skips);
+                    if let Some(p) = &reply.phases {
+                        phases.merge(p);
+                    }
                     if reply.outcome.family() == "assignment" {
                         assign.push(reply.latency);
                     } else {
@@ -121,6 +130,7 @@ impl ReplayOutcome {
             assign: Summary::of(&assign),
             grid: Summary::of(&grid),
             reject_reasons: reasons.into_iter().collect(),
+            phases,
             replies,
         }
     }
@@ -353,6 +363,7 @@ pub fn replay_spawn_baseline(
                         breaker_skips: served.breaker_skips,
                         session: None,
                         warm: false,
+                        phases: None,
                         outcome: served.outcome,
                     })
                     .map_err(|fail| ReplayError::Failed {

@@ -172,6 +172,10 @@ pub struct SolveReply {
     /// True when the reply came from an incremental (delta) solve of a
     /// retained residual cache rather than a cold solve.
     pub warm: bool,
+    /// Per-phase breakdown of this solve: queue wait plus the engine's
+    /// own phase timings for grid solves.  `None` from paths that don't
+    /// trace (the spawn baseline, rejected requests).
+    pub phases: Option<crate::obs::PhaseBreakdown>,
     pub outcome: SolveOutcome,
 }
 

@@ -22,6 +22,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::gridflow::CapacityDelta;
+use crate::obs::{self, Phase, PhaseBreakdown};
 use crate::util::stats::{LatencyRecorder, Summary};
 use crate::util::{CancelToken, Cancelled};
 use crate::workloads::ProblemInstance;
@@ -230,6 +231,7 @@ impl Drop for RespawnGuard {
             return;
         }
         let n = self.shared.respawns.fetch_add(1, Ordering::SeqCst);
+        crate::log_warn!("wave-pool worker died mid-job (hostile panic); respawning (total {})", n + 1);
         let shared = Arc::clone(&self.shared);
         // Detached: it exits via the shutdown flag like any worker.
         let _ = std::thread::Builder::new()
@@ -267,6 +269,55 @@ fn pool_worker_loop(shared: Arc<PoolShared>) {
 // SolverPool: the sharded request-serving runtime
 // ---------------------------------------------------------------------------
 
+/// One label per started pool (`pool="p0"`, `pool="p1"`, …) so
+/// concurrently running pools — parallel tests, the chaos harness —
+/// never alias each other's series in the global metrics registry.
+static POOL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Pre-registered registry twins for the [`PoolMetrics`] fields.  Every
+/// local field mutation bumps the matching `flowmatch_pool_*` series at
+/// the same call site, so the live exposition endpoint and the shutdown
+/// [`PoolReport`] can never disagree (`tests/integration_metrics.rs`
+/// holds them equal).
+struct MetricTwins {
+    label: String,
+    served: Arc<obs::Counter>,
+    rejected: Arc<obs::Counter>,
+    failed: Arc<obs::Counter>,
+    retries: Arc<obs::Counter>,
+    breaker_skips: Arc<obs::Counter>,
+    deadline_misses: Arc<obs::Counter>,
+    warm_served: Arc<obs::Counter>,
+    sessions_evicted: Arc<obs::Counter>,
+    latency: Arc<obs::Histogram>,
+}
+
+impl MetricTwins {
+    fn new(label: &str) -> Self {
+        let reg = obs::global();
+        let c = |field: &str| {
+            reg.counter(&format!(
+                "flowmatch_pool_{field}_total{{pool=\"{label}\"}}"
+            ))
+        };
+        Self {
+            label: label.to_string(),
+            served: c("served"),
+            rejected: c("rejected"),
+            failed: c("failed"),
+            retries: c("retries"),
+            breaker_skips: c("breaker_skips"),
+            deadline_misses: c("deadline_misses"),
+            warm_served: c("warm_served"),
+            sessions_evicted: c("sessions_evicted"),
+            latency: reg.histogram(
+                &format!("flowmatch_pool_latency_seconds{{pool=\"{label}\"}}"),
+                obs::LATENCY_BUCKETS,
+            ),
+        }
+    }
+}
+
 struct PoolMetrics {
     overall: LatencyRecorder,
     assign: LatencyRecorder,
@@ -280,10 +331,11 @@ struct PoolMetrics {
     warm_served: usize,
     sessions_evicted: usize,
     backends: BTreeMap<&'static str, usize>,
+    twins: MetricTwins,
 }
 
 impl PoolMetrics {
-    fn new() -> Self {
+    fn new(label: &str) -> Self {
         Self {
             overall: LatencyRecorder::new(),
             assign: LatencyRecorder::new(),
@@ -301,6 +353,7 @@ impl PoolMetrics {
             warm_served: 0,
             sessions_evicted: 0,
             backends: BTreeMap::new(),
+            twins: MetricTwins::new(label),
         }
     }
 
@@ -313,6 +366,61 @@ impl PoolMetrics {
         }
         self.per_class[class.index()].record(lat);
         *self.backends.entry(backend).or_insert(0) += 1;
+        self.twins.served.inc();
+        self.twins.latency.observe(lat);
+        // Per-family / per-class / per-backend served counts get their
+        // own families (not extra labels on `_served_total`) so prefix
+        // sums over one family never double count.
+        let reg = obs::global();
+        let pool = &self.twins.label;
+        reg.counter(&format!(
+            "flowmatch_pool_family_served_total{{pool=\"{pool}\",family=\"{family}\"}}"
+        ))
+        .inc();
+        reg.counter(&format!(
+            "flowmatch_pool_class_served_total{{pool=\"{pool}\",class=\"{}\"}}",
+            class.name()
+        ))
+        .inc();
+        reg.counter(&format!(
+            "flowmatch_pool_backend_served_total{{pool=\"{pool}\",backend=\"{backend}\"}}"
+        ))
+        .inc();
+    }
+
+    fn reject(&mut self, n: usize) {
+        self.rejected += n;
+        self.twins.rejected.add(n as u64);
+    }
+
+    fn deadline_miss(&mut self, n: usize) {
+        self.deadline_misses += n;
+        self.twins.deadline_misses.add(n as u64);
+    }
+
+    fn fail(&mut self) {
+        self.failed += 1;
+        self.twins.failed.inc();
+    }
+
+    fn add_retries(&mut self, n: u64) {
+        self.retries += n;
+        self.twins.retries.add(n);
+    }
+
+    fn add_breaker_skips(&mut self, n: u64) {
+        self.breaker_skips += n;
+        self.twins.breaker_skips.add(n);
+    }
+
+    fn warm(&mut self) {
+        self.warm_served += 1;
+        self.twins.warm_served.inc();
+    }
+
+    fn evict_sessions(&mut self, n: usize) {
+        self.sessions_evicted += n;
+        self.twins.sessions_evicted.add(n as u64);
     }
 }
 
@@ -386,6 +494,10 @@ pub struct SolverPool {
     directory: Arc<SessionDirectory>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
+    /// This pool's registry label value (`p0`, `p1`, …); every
+    /// `flowmatch_pool_*` series this pool writes carries
+    /// `pool="<label>"`.
+    label: String,
 }
 
 impl SolverPool {
@@ -394,8 +506,12 @@ impl SolverPool {
     /// drains) plus one shared wave [`WorkerPool`] that the grid
     /// `native-par` backend borrows for its tile phases.
     pub fn start(cfg: PoolConfig) -> Self {
+        // Pin the log level before the first worker spawns, so every
+        // worker thread observes the same `FLOWMATCH_LOG` decision.
+        crate::util::logging::ensure_init();
+        let label = format!("p{}", POOL_SEQ.fetch_add(1, Ordering::Relaxed));
         let queues = Arc::new(ShardedQueues::new(cfg.shard.clone(), cfg.workers));
-        let metrics = Arc::new(Mutex::new(PoolMetrics::new()));
+        let metrics = Arc::new(Mutex::new(PoolMetrics::new(&label)));
         // One telemetry sink shared by every worker: route decisions,
         // EWMAs, and circuit-breaker state are pool-global, not
         // per-worker.
@@ -416,6 +532,7 @@ impl SolverPool {
                 let directory = Arc::clone(&directory);
                 let rcfg = cfg.router.clone();
                 let total = cfg.workers;
+                let label = label.clone();
                 std::thread::Builder::new()
                     .name(format!("flowmatch-solver-{idx}"))
                     .spawn(move || {
@@ -429,6 +546,7 @@ impl SolverPool {
                             wave_pool,
                             directory,
                             session_budget,
+                            label,
                         )
                     })
                     .expect("spawn solver worker")
@@ -442,7 +560,36 @@ impl SolverPool {
             directory,
             workers,
             next_id: AtomicU64::new(0),
+            label,
         }
+    }
+
+    /// The `pool="..."` label value this pool's registry series carry.
+    pub fn metrics_label(&self) -> &str {
+        &self.label
+    }
+
+    /// Publish the point-in-time introspection gauges: per-class shard
+    /// depth, pinned-lane backlog, open breakers, and live warm-start
+    /// sessions.  The serve loop calls this on every metrics interval
+    /// (and once at shutdown); it reads queue locks only, never blocks
+    /// a solve.
+    pub fn publish_gauges(&self) {
+        let reg = obs::global();
+        let label = &self.label;
+        for class in SizeClass::ALL {
+            reg.gauge(&format!(
+                "flowmatch_shard_depth{{pool=\"{label}\",class=\"{}\"}}",
+                class.name()
+            ))
+            .set(self.queues.depth(class) as i64);
+        }
+        reg.gauge(&format!("flowmatch_pinned_depth{{pool=\"{label}\"}}"))
+            .set(self.queues.pinned_depth() as i64);
+        reg.gauge(&format!("flowmatch_breakers_open{{pool=\"{label}\"}}"))
+            .set(self.telemetry.breakers_open() as i64);
+        reg.gauge(&format!("flowmatch_sessions_live{{pool=\"{label}\"}}"))
+            .set(self.directory.len() as i64);
     }
 
     pub fn workers(&self) -> usize {
@@ -524,7 +671,7 @@ impl SolverPool {
             Ok(()) => Ok(rx),
             Err((job, reason)) => {
                 drop(job);
-                self.metrics.lock().unwrap().rejected += 1;
+                self.metrics.lock().unwrap().reject(1);
                 Err(reason)
             }
         }
@@ -543,7 +690,7 @@ impl SolverPool {
                 units,
                 max_units: cfg.max_units,
             };
-            self.metrics.lock().unwrap().rejected += 1;
+            self.metrics.lock().unwrap().reject(1);
             return Err(reason);
         }
         let class = cfg.classify(units);
@@ -567,7 +714,7 @@ impl SolverPool {
             Ok(()) => Ok(rx),
             Err((job, reason)) => {
                 drop(job);
-                self.metrics.lock().unwrap().rejected += 1;
+                self.metrics.lock().unwrap().reject(1);
                 Err(reason)
             }
         }
@@ -593,6 +740,9 @@ impl SolverPool {
     /// Drain the queues, stop the workers, and report.
     pub fn shutdown(mut self) -> PoolReport {
         self.finish();
+        // Final gauge states (depths drained to zero, surviving
+        // sessions) so a post-shutdown exposition dump is coherent.
+        self.publish_gauges();
         let routes = self.telemetry.snapshot();
         let spilled = self.telemetry.spills();
         let breakers = self.telemetry.breaker_snapshot();
@@ -649,14 +799,29 @@ fn shed_expired(metrics: &Mutex<PoolMetrics>, shed: &mut Vec<QueuedJob>) {
     }
     {
         let mut m = metrics.lock().unwrap();
-        m.rejected += shed.len();
-        m.deadline_misses += shed.len();
+        m.reject(shed.len());
+        m.deadline_miss(shed.len());
     }
     for job in shed.drain(..) {
         let _ = job
             .reply
             .send(Err(ReplyError::Rejected(RejectReason::DeadlineExceeded)));
     }
+}
+
+/// The reply's phase breakdown: the engine's own phase timings for
+/// grid solves (assignment engines report flat counters, not phases)
+/// plus the time this request spent queued.  Also flushes the queue
+/// wait into the registry under `family="service"` so queue pressure
+/// shows up in the exposition without a reply in hand.
+fn reply_phases(queue_delay: f64, outcome: &super::SolveOutcome) -> Option<PhaseBreakdown> {
+    let mut p = match outcome {
+        super::SolveOutcome::Grid(report) => report.phases,
+        _ => PhaseBreakdown::default(),
+    };
+    p.add(Phase::QueueWait, queue_delay);
+    obs::record_phase_secs("service", Phase::QueueWait, queue_delay);
+    Some(p)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -670,6 +835,7 @@ fn solver_worker_loop(
     wave_pool: Arc<WorkerPool>,
     directory: Arc<SessionDirectory>,
     session_budget: usize,
+    label: String,
 ) {
     // Per-worker backend state: cached executors/scratch and (when
     // configured and discoverable) a PJRT driver.  The `xla` handles
@@ -681,6 +847,15 @@ fn solver_worker_loop(
     // directory routes updates here); the LRU byte budget bounds their
     // resident residual caches.
     let mut sessions = SessionStore::new(session_budget);
+    // Session stores are per-worker (the residual caches are !Send in
+    // spirit: engine-shaped, owned here), so the occupancy gauges are
+    // set by this thread — nobody else can read the store.
+    let store_entries = obs::global().gauge(&format!(
+        "flowmatch_session_store_entries{{pool=\"{label}\",worker=\"{idx}\"}}"
+    ));
+    let store_bytes = obs::global().gauge(&format!(
+        "flowmatch_session_store_bytes{{pool=\"{label}\",worker=\"{idx}\"}}"
+    ));
     let mut shed = Vec::new();
     loop {
         let popped = queues.pop(idx, total, &mut shed);
@@ -700,8 +875,8 @@ fn solver_worker_loop(
         if let Some(dl) = job.deadline {
             if Instant::now() >= dl {
                 let mut m = metrics.lock().unwrap();
-                m.rejected += 1;
-                m.deadline_misses += 1;
+                m.reject(1);
+                m.deadline_miss(1);
                 drop(m);
                 let _ = job
                     .reply
@@ -728,12 +903,19 @@ fn solver_worker_loop(
                 let reply = match solved {
                     Ok(Ok((outcome, state, backend))) => {
                         let evicted = sessions.insert(job.id, state);
+                        if !evicted.is_empty() {
+                            crate::log_debug!(
+                                "worker {idx}: LRU evicted {} session(s) for session {}",
+                                evicted.len(),
+                                job.id
+                            );
+                        }
                         for ev in &evicted {
                             directory.remove(*ev);
                         }
                         directory.insert(job.id, idx, job.class);
                         let mut m = metrics.lock().unwrap();
-                        m.sessions_evicted += evicted.len();
+                        m.evict_sessions(evicted.len());
                         m.record(job.class, outcome.family(), backend, latency);
                         drop(m);
                         Ok(SolveReply {
@@ -747,15 +929,16 @@ fn solver_worker_loop(
                             breaker_skips: 0,
                             session: Some(job.id),
                             warm: false,
+                            phases: reply_phases(queue_delay, &outcome),
                             outcome,
                         })
                     }
                     Ok(Err(err)) => {
                         let cancelled = Cancelled::caused(&err);
                         let mut m = metrics.lock().unwrap();
-                        m.failed += 1;
+                        m.fail();
                         if cancelled {
-                            m.deadline_misses += 1;
+                            m.deadline_miss(1);
                         }
                         drop(m);
                         Err(ReplyError::Failed {
@@ -764,7 +947,8 @@ fn solver_worker_loop(
                         })
                     }
                     Err(_) => {
-                        metrics.lock().unwrap().failed += 1;
+                        crate::log_warn!("worker {idx}: solver panicked opening session {}", job.id);
+                        metrics.lock().unwrap().fail();
                         Err(ReplyError::Failed {
                             message: "solver panicked".to_string(),
                             retries: 0,
@@ -786,8 +970,8 @@ fn solver_worker_loop(
                     Ok(Ok(served)) => {
                         let mut m = metrics.lock().unwrap();
                         m.record(job.class, served.outcome.family(), served.backend, latency);
-                        m.retries += u64::from(served.retries);
-                        m.breaker_skips += u64::from(served.breaker_skips);
+                        m.add_retries(u64::from(served.retries));
+                        m.add_breaker_skips(u64::from(served.breaker_skips));
                         drop(m);
                         Ok(SolveReply {
                             id: job.id,
@@ -800,15 +984,16 @@ fn solver_worker_loop(
                             breaker_skips: served.breaker_skips,
                             session: None,
                             warm: false,
+                            phases: reply_phases(queue_delay, &served.outcome),
                             outcome: served.outcome,
                         })
                     }
                     Ok(Err(fail)) => {
                         let mut m = metrics.lock().unwrap();
-                        m.failed += 1;
-                        m.retries += u64::from(fail.retries);
+                        m.fail();
+                        m.add_retries(u64::from(fail.retries));
                         if fail.cancelled {
-                            m.deadline_misses += 1;
+                            m.deadline_miss(1);
                         }
                         drop(m);
                         Err(ReplyError::Failed {
@@ -817,7 +1002,8 @@ fn solver_worker_loop(
                         })
                     }
                     Err(_) => {
-                        metrics.lock().unwrap().failed += 1;
+                        crate::log_warn!("worker {idx}: retry machinery panicked on request {}", job.id);
+                        metrics.lock().unwrap().fail();
                         Err(ReplyError::Failed {
                             message: "solver panicked".to_string(),
                             retries: 0,
@@ -844,7 +1030,7 @@ fn solver_worker_loop(
                 let reply = match solved {
                     Ok(Ok((outcome, backend))) => {
                         let mut m = metrics.lock().unwrap();
-                        m.warm_served += 1;
+                        m.warm();
                         m.record(job.class, outcome.family(), backend, latency);
                         drop(m);
                         Ok(SolveReply {
@@ -858,19 +1044,23 @@ fn solver_worker_loop(
                             breaker_skips: 0,
                             session: Some(session_id),
                             warm: true,
+                            phases: reply_phases(queue_delay, &outcome),
                             outcome,
                         })
                     }
                     Ok(Err(err)) => {
                         // The repair may have half-applied the deltas:
                         // the cache is no longer trustworthy, drop it.
+                        crate::log_debug!(
+                            "worker {idx}: dropping session {session_id} after failed update"
+                        );
                         sessions.remove(session_id);
                         directory.remove(session_id);
                         let cancelled = Cancelled::caused(&err);
                         let mut m = metrics.lock().unwrap();
-                        m.failed += 1;
+                        m.fail();
                         if cancelled {
-                            m.deadline_misses += 1;
+                            m.deadline_miss(1);
                         }
                         drop(m);
                         Err(ReplyError::Failed {
@@ -879,9 +1069,12 @@ fn solver_worker_loop(
                         })
                     }
                     Err(_) => {
+                        crate::log_warn!(
+                            "worker {idx}: solver panicked updating session {session_id}; dropping it"
+                        );
                         sessions.remove(session_id);
                         directory.remove(session_id);
-                        metrics.lock().unwrap().failed += 1;
+                        metrics.lock().unwrap().fail();
                         Err(ReplyError::Failed {
                             message: "solver panicked".to_string(),
                             retries: 0,
@@ -891,6 +1084,8 @@ fn solver_worker_loop(
                 let _ = job.reply.send(reply);
             }
         }
+        store_entries.set(sessions.len() as i64);
+        store_bytes.set(sessions.bytes() as i64);
     }
 }
 

@@ -135,7 +135,7 @@ impl Backend for HungarianBackend {
         cancel.check()?;
         match instance {
             ProblemInstance::Assignment(inst) => Ok(SolveOutcome::Assignment(
-                assignment::hungarian::Hungarian.solve(inst)?,
+                assignment::hungarian::Hungarian.solve_traced(inst)?,
             )),
             other => Err(wrong_family(self.name(), other)),
         }
@@ -159,7 +159,7 @@ impl Backend for CsaSeqBackend {
         cancel.check()?;
         match instance {
             ProblemInstance::Assignment(inst) => Ok(SolveOutcome::Assignment(
-                assignment::csa::SequentialCsa::with_alpha(self.alpha).solve(inst)?,
+                assignment::csa::SequentialCsa::with_alpha(self.alpha).solve_traced(inst)?,
             )),
             other => Err(wrong_family(self.name(), other)),
         }
@@ -188,7 +188,7 @@ impl Backend for CsaLockfreeBackend {
                     alpha: self.alpha,
                     threads: self.threads,
                 }
-                .solve(inst)?,
+                .solve_traced(inst)?,
             )),
             other => Err(wrong_family(self.name(), other)),
         }
@@ -215,7 +215,7 @@ impl Backend for WaveCsaBackend {
                 assignment::wave::WaveCsa {
                     alpha: Some(self.alpha),
                 }
-                .solve(inst)?,
+                .solve_traced(inst)?,
             )),
             other => Err(wrong_family(self.name(), other)),
         }
@@ -249,6 +249,7 @@ impl Backend for PjrtBackend {
         match instance {
             ProblemInstance::Assignment(inst) => {
                 let (result, _tel) = self.driver.solve(inst)?;
+                crate::obs::record_assignment_stats("pjrt", &result.stats);
                 Ok(SolveOutcome::Assignment(result))
             }
             other => Err(wrong_family(self.name(), other)),
@@ -332,7 +333,7 @@ impl FifoLockfreeBackend {
             cancel: Some(cancel.clone()),
             ..Default::default()
         }
-        .solve(&mut g)?;
+        .solve_traced(&mut g)?;
         Ok(GridSolveReport {
             flow: stats.value,
             excess_total: net.excess_total(),
@@ -1119,13 +1120,19 @@ impl WorkerBackends {
                         "native",
                     ),
                 };
-                let report = if name == "native-par" {
+                let t = crate::util::Timer::start();
+                let mut report = if name == "native-par" {
                     let mut exec = self.session_par_exec();
                     warm.update(deltas, &solver, &mut exec)?
                 } else {
                     let mut exec = NativeGridExecutor::default();
                     warm.update(deltas, &solver, &mut exec)?
                 };
+                // Whatever `update` spent outside the traced engine
+                // phases is the delta apply + residual repair work.
+                let repair = (t.elapsed() - report.phases.total_seconds()).max(0.0);
+                report.phases.add(crate::obs::Phase::SessionRepair, repair);
+                crate::obs::record_phase_secs("grid", crate::obs::Phase::SessionRepair, repair);
                 Ok((SolveOutcome::Grid(report), name))
             }
             SessionState::Csr { warm, index } => {
@@ -1313,6 +1320,16 @@ impl SessionStore {
     pub fn len(&self) -> usize {
         self.entries.len()
     }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Resident bytes across every retained session (the LRU budget's
+    /// fill level) — read by the per-worker occupancy gauge.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
 }
 
 /// Pool-global map from session id to the worker holding its residual
@@ -1330,6 +1347,16 @@ impl SessionDirectory {
 
     pub fn lookup(&self, id: u64) -> Option<(usize, SizeClass)> {
         self.map.lock().unwrap().get(&id).copied()
+    }
+
+    /// Live (routable) warm-start sessions across the pool — the
+    /// `flowmatch_sessions_live` gauge.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.lock().unwrap().is_empty()
     }
 
     pub fn remove(&self, id: u64) {

@@ -380,9 +380,21 @@ impl ShardedQueues {
         self.cv.notify_all();
     }
 
-    #[cfg(test)]
+    /// Current depth of one class shard — the introspection gauges
+    /// (`flowmatch_shard_depth{class=...}`) read this on every snapshot.
     pub fn depth(&self, class: SizeClass) -> usize {
         self.state.lock().unwrap().queues[class.index()].len()
+    }
+
+    /// Total depth of the per-worker pinned session lanes.
+    pub fn pinned_depth(&self) -> usize {
+        self.state
+            .lock()
+            .unwrap()
+            .pinned
+            .iter()
+            .map(VecDeque::len)
+            .sum()
     }
 }
 

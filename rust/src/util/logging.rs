@@ -51,6 +51,16 @@ fn init_from_env() {
     });
 }
 
+/// Force the `FLOWMATCH_LOG` read to happen *now*.  The level lives in
+/// one process-global atomic, so any thread spawned after this call
+/// observes the configured level deterministically — thread-spawning
+/// layers (the solver pool, the CLI entry point) call this before
+/// their first `spawn` instead of racing the lazy init against worker
+/// startup.
+pub fn ensure_init() {
+    init_from_env();
+}
+
 /// Override the level programmatically (CLI `--log-level`).
 pub fn set_level(level: Level) {
     init_from_env();

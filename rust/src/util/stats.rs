@@ -51,11 +51,17 @@ impl Summary {
 /// Accumulates per-request latencies (seconds) and summarises them.
 /// This is the single recorder behind both the legacy coordinator
 /// service report and the solver pool's metrics.
+///
+/// Timing goes through [`crate::util::Timer`] — the one wall-clock
+/// helper — instead of keeping a private pair of `Instant`s (the old
+/// split between here and `util::timer` is gone).
 #[derive(Debug, Default, Clone)]
 pub struct LatencyRecorder {
     samples: Vec<f64>,
-    started: Option<std::time::Instant>,
-    finished: Option<std::time::Instant>,
+    /// Started at the first `mark_start`/`record`.
+    window: Option<super::Timer>,
+    /// Seconds from window start to the most recent `record`.
+    window_secs: f64,
 }
 
 impl LatencyRecorder {
@@ -64,13 +70,13 @@ impl LatencyRecorder {
     }
 
     pub fn mark_start(&mut self) {
-        self.started.get_or_insert_with(std::time::Instant::now);
+        self.window.get_or_insert_with(super::Timer::start);
     }
 
     pub fn record(&mut self, latency_secs: f64) {
         self.mark_start();
         self.samples.push(latency_secs);
-        self.finished = Some(std::time::Instant::now());
+        self.window_secs = self.window.as_ref().map_or(0.0, |t| t.elapsed());
     }
 
     pub fn count(&self) -> usize {
@@ -83,9 +89,10 @@ impl LatencyRecorder {
 
     /// Requests per second over the recording window.
     pub fn throughput(&self) -> f64 {
-        match (self.started, self.finished) {
-            (Some(a), Some(b)) if b > a => self.samples.len() as f64 / (b - a).as_secs_f64(),
-            _ => 0.0,
+        if self.window_secs > 0.0 {
+            self.samples.len() as f64 / self.window_secs
+        } else {
+            0.0
         }
     }
 }
@@ -129,10 +136,16 @@ impl Ewma {
     }
 }
 
-/// Nearest-rank percentile on a pre-sorted slice.
+/// Nearest-rank percentile on a pre-sorted slice.  Total on all
+/// inputs: an empty slice yields `0.0` (callers that must distinguish
+/// "no samples" go through [`Summary::of`], which returns `None`), a
+/// single sample is every percentile of itself, and `q` is clamped to
+/// `[0, 1]` instead of panicking.
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty());
-    assert!((0.0..=1.0).contains(&q));
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
     let rank = (q * (sorted.len() - 1) as f64).round() as usize;
     sorted[rank.min(sorted.len() - 1)]
 }
@@ -206,7 +219,21 @@ mod tests {
     fn single_sample() {
         let s = Summary::of(&[5.0]).unwrap();
         assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.min, 5.0);
+        assert_eq!(s.p50, 5.0);
+        assert_eq!(s.p95, 5.0);
         assert_eq!(s.p99, 5.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn percentile_is_total() {
+        // Empty and out-of-range inputs must not panic.
+        assert_eq!(percentile(&[], 0.99), 0.0);
+        assert_eq!(percentile(&[3.0], 0.0), 3.0);
+        assert_eq!(percentile(&[3.0], 1.0), 3.0);
+        assert_eq!(percentile(&[1.0, 2.0], 7.5), 2.0); // clamped to max
+        assert_eq!(percentile(&[1.0, 2.0], -1.0), 1.0); // clamped to min
     }
 
     #[test]

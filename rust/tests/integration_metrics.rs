@@ -1,0 +1,223 @@
+//! Differential tests for the telemetry spine: the registry twins the
+//! service maintains must reproduce the client- and server-side
+//! reports *exactly* — same update sites, same counts — and the phase
+//! breakdowns riding the replies must be coherent with the measured
+//! latencies.
+
+use flowmatch::obs;
+use flowmatch::service::{
+    replay, replay_sessions, PoolConfig, ProblemInstance, RouterConfig, ShardConfig, SolverPool,
+};
+use flowmatch::util::Rng;
+use flowmatch::workloads::{
+    DeltaTrace, DeltaTraceConfig, MixedTrace, MixedTraceConfig, TraceConfig,
+};
+
+fn test_pool_config(workers: usize) -> PoolConfig {
+    PoolConfig {
+        workers,
+        shard: ShardConfig {
+            small_max_units: 256,
+            medium_max_units: 1024,
+            queue_depth: 64,
+            max_units: 1 << 16,
+        },
+        router: RouterConfig {
+            use_pjrt: false,
+            cycle_waves: 128,
+            par_threads: 2,
+            tile_rows: 4,
+            ..Default::default()
+        },
+        session_budget_mb: 64,
+    }
+}
+
+fn mixed_trace(seed: u64) -> MixedTrace {
+    let mut rng = Rng::seeded(seed);
+    MixedTrace::generate(
+        &mut rng,
+        &MixedTraceConfig {
+            assign: TraceConfig {
+                requests: 10,
+                n: 10,
+                max_weight: 60,
+                arrival_gap: 0.0,
+                ..Default::default()
+            },
+            grid_requests: 5,
+            grid_size: 24,
+            grid_max_cap: 12,
+            grid_arrival_gap: 0.0,
+            large_every: 0,
+            ..Default::default()
+        },
+    )
+}
+
+/// Read this pool's `flowmatch_pool_<field>_total{pool="..."}` twin.
+fn pool_counter(label: &str, field: &str) -> u64 {
+    obs::global()
+        .counter_value(&format!("flowmatch_pool_{field}_total{{pool=\"{label}\"}}"))
+        .unwrap_or(0)
+}
+
+/// The headline differential: every `PoolReport` counter has a registry
+/// twin incremented at the identical call site, so after shutdown the
+/// two views must be equal — not approximately, exactly.
+#[test]
+fn pool_report_counters_match_registry_twins_exactly() {
+    let trace = mixed_trace(601);
+    let pool = SolverPool::start(test_pool_config(3));
+    let label = pool.metrics_label().to_string();
+    let out = replay(&pool, &trace, false);
+    let report = pool.shutdown();
+
+    assert_eq!(pool_counter(&label, "served") as usize, report.served);
+    assert_eq!(pool_counter(&label, "rejected") as usize, report.rejected);
+    assert_eq!(pool_counter(&label, "failed") as usize, report.failed);
+    assert_eq!(pool_counter(&label, "retries"), report.retries);
+    assert_eq!(pool_counter(&label, "breaker_skips"), report.breaker_skips);
+    assert_eq!(
+        pool_counter(&label, "deadline_misses") as usize,
+        report.deadline_misses
+    );
+    assert_eq!(
+        pool_counter(&label, "warm_served") as usize,
+        report.warm_served
+    );
+    assert_eq!(
+        pool_counter(&label, "sessions_evicted") as usize,
+        report.sessions_evicted
+    );
+
+    // Reply conservation, read back from the metrics alone: every
+    // request sent ended as exactly one of served / rejected / failed.
+    assert_eq!(out.sent, out.ok + out.rejected + out.failed);
+    assert_eq!(
+        (pool_counter(&label, "served")
+            + pool_counter(&label, "rejected")
+            + pool_counter(&label, "failed")) as usize,
+        out.sent
+    );
+
+    // Per-backend served twins agree with the report's breakdown.
+    for (backend, n) in &report.backends {
+        let twin = obs::global()
+            .counter_value(&format!(
+                "flowmatch_pool_backend_served_total{{pool=\"{label}\",backend=\"{backend}\"}}"
+            ))
+            .unwrap_or(0);
+        assert_eq!(twin as usize, *n, "backend {backend}");
+    }
+
+    // The latency histogram saw exactly the served requests.
+    let text = obs::global().render_text();
+    let count_line = format!("flowmatch_pool_latency_seconds_count{{pool=\"{label}\"}}");
+    let counted: u64 = text
+        .lines()
+        .find_map(|l| l.strip_prefix(&count_line))
+        .expect("latency histogram in exposition")
+        .trim()
+        .parse()
+        .unwrap();
+    assert_eq!(counted as usize, report.served);
+}
+
+/// Every served reply carries a phase breakdown whose queue wait is
+/// bounded by the measured latency, grid replies carry nonzero engine
+/// op counters, and the engine phase counters land in the registry.
+#[test]
+fn replies_carry_coherent_phase_breakdowns() {
+    use flowmatch::obs::Phase;
+
+    let reg = obs::global();
+    let wave_key = "flowmatch_phase_micros_total{family=\"grid\",phase=\"wave_compute\"}";
+    let queue_key = "flowmatch_phase_micros_total{family=\"service\",phase=\"queue_wait\"}";
+    let wave_before = reg.counter_value(wave_key).unwrap_or(0);
+
+    let trace = mixed_trace(602);
+    let pool = SolverPool::start(test_pool_config(2));
+    let out = replay(&pool, &trace, false);
+    drop(pool.shutdown());
+
+    assert_eq!(out.ok, out.sent, "trace must be fully served");
+    let mut grid_replies = 0;
+    for (id, reply) in &out.replies {
+        let reply = reply.as_ref().unwrap();
+        let phases = reply
+            .phases
+            .as_ref()
+            .unwrap_or_else(|| panic!("request {id}: served reply without phases"));
+        // Queue wait is measured before the solve starts; it can never
+        // exceed the submit-to-reply latency (allow scheduler noise).
+        assert!(
+            phases.get(Phase::QueueWait) <= reply.latency + 0.005,
+            "request {id}: queue_wait {} > latency {}",
+            phases.get(Phase::QueueWait),
+            reply.latency
+        );
+        if matches!(trace.requests[*id].instance, ProblemInstance::Grid(_)) {
+            grid_replies += 1;
+            assert!(phases.waves > 0, "request {id}: grid solve with 0 waves");
+            assert!(phases.pushes > 0, "request {id}: grid solve with 0 pushes");
+            assert!(
+                phases.total_seconds() > 0.0,
+                "request {id}: grid solve with an all-zero phase profile"
+            );
+            // The breakdown is a decomposition of the solve, not an
+            // unrelated set of stopwatches: it cannot exceed the
+            // end-to-end latency by more than timer noise.
+            assert!(
+                phases.total_seconds() <= reply.latency + 0.010,
+                "request {id}: phases sum {} vs latency {}",
+                phases.total_seconds(),
+                reply.latency
+            );
+        }
+    }
+    assert!(grid_replies > 0, "trace generated no grid requests");
+    // Aggregated client view sums the per-reply breakdowns.
+    assert!(out.phases.waves > 0 && out.phases.pushes > 0);
+    // And the solve-boundary flush advanced the registry's grid wave
+    // phase counter (delta-based: the registry is process-global).
+    assert!(
+        reg.counter_value(wave_key).unwrap_or(0) > wave_before,
+        "grid wave_compute phase counter did not advance"
+    );
+    assert!(
+        reg.counter_value(queue_key).unwrap_or(0) > 0,
+        "service queue_wait phase counter never recorded"
+    );
+}
+
+/// Warm-session replay: warm replies carry a breakdown too, and the
+/// pool's warm-served twin matches the client's count of warm hits.
+#[test]
+fn session_replay_metrics_match() {
+    let dcfg = DeltaTraceConfig {
+        sessions: 2,
+        updates_per_session: 4,
+        edits_per_update: 3,
+        grid_size: 16,
+        ..Default::default()
+    };
+    let mut rng = Rng::seeded(603);
+    let trace = DeltaTrace::generate(&mut rng, &dcfg);
+    let pool = SolverPool::start(test_pool_config(2));
+    let label = pool.metrics_label().to_string();
+    let out = replay_sessions(&pool, &trace);
+    let report = pool.shutdown();
+
+    assert_eq!(out.lost, 0);
+    assert_eq!(report.warm_served, out.warm_hits);
+    assert_eq!(pool_counter(&label, "warm_served") as usize, out.warm_hits);
+    for (id, reply) in &out.replies {
+        if let Ok(reply) = reply {
+            assert!(
+                reply.phases.is_some(),
+                "request {id}: session reply without phases"
+            );
+        }
+    }
+}
