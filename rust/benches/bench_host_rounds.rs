@@ -14,7 +14,7 @@ use std::sync::Arc;
 use flowmatch::benchkit::{write_json, Cell, Measure, Table};
 use flowmatch::gridflow::wave::{native_wave_with, WaveScratch};
 use flowmatch::gridflow::{host, init_state};
-use flowmatch::parallel::Lanes;
+use flowmatch::parallel::{CommitMode, Lanes, ParTuning, StripeBalance};
 use flowmatch::runtime::device::GridWireState;
 use flowmatch::service::WorkerPool;
 use flowmatch::util::stats::Summary;
@@ -47,9 +47,14 @@ fn run_seq(st0: &GridWireState) -> (GridWireState, host::HostScratch) {
     (st, scratch)
 }
 
-fn run_striped(st0: &GridWireState, lanes: &Lanes<'_>) -> (GridWireState, host::HostScratch) {
+fn run_striped(
+    st0: &GridWireState,
+    lanes: &Lanes<'_>,
+    tuning: ParTuning,
+) -> (GridWireState, host::HostScratch) {
     let mut st = st0.clone();
     let mut scratch = host::HostScratch::for_state(&st);
+    scratch.set_tuning(tuning);
     for _ in 0..ROUNDS {
         host::host_round_par(&mut st, &mut scratch, lanes);
     }
@@ -89,6 +94,10 @@ fn main() {
         &format!("E14: host-round phase split ({ROUNDS} rounds, one instrumented run)"),
         &["grid", "mode", "threads", "cancel ms", "relabel ms", "relabel share"],
     );
+    let mut tuning_table = Table::new(
+        &format!("E15: stripe tunings on striped host rounds ({ROUNDS} rounds, 4 threads)"),
+        &["grid", "balance", "commit", "time", "speedup vs seq"],
+    );
 
     for &size in sizes {
         let st0 = mid_solve_state(9, size, size);
@@ -109,7 +118,8 @@ fn main() {
             let lanes = Lanes::Pool(&pool);
             // The differential contract, enforced even while
             // benchmarking: identical post-round state.
-            let (striped_state, striped_scratch) = run_striped(&st0, &lanes);
+            let (striped_state, striped_scratch) =
+                run_striped(&st0, &lanes, ParTuning::default());
             phase_row(&mut phase_table, size, "striped", threads, &striped_scratch);
             assert_eq!(
                 striped_state.h, seq_state.h,
@@ -117,7 +127,7 @@ fn main() {
             );
             assert_eq!(striped_state.e, seq_state.e, "excess diverged");
             assert_eq!(striped_state.cap, seq_state.cap, "caps diverged");
-            let times = measure.run(|| run_striped(&st0, &lanes));
+            let times = measure.run(|| run_striped(&st0, &lanes, ParTuning::default()));
             let summary = Summary::of(&times).unwrap();
             let speedup = seq_mean / summary.mean;
             table.row(vec![
@@ -128,14 +138,48 @@ fn main() {
                 Cell::Float(speedup),
             ]);
         }
+
+        // E15 rows: the opt-in stripe tunings against the default
+        // two-pass/fixed discipline, all on one pooled lane set.  The
+        // bit-exact contract holds for every combination — a weighted
+        // re-cut or merged commit that diverged would fail right here,
+        // before any timing is reported.
+        let pool = Arc::new(WorkerPool::new(4));
+        let lanes = Lanes::Pool(&pool);
+        for (balance, commit) in [
+            (StripeBalance::Fixed, CommitMode::TwoPass),
+            (StripeBalance::Fixed, CommitMode::Merged),
+            (StripeBalance::Weighted, CommitMode::TwoPass),
+            (StripeBalance::Weighted, CommitMode::Merged),
+        ] {
+            let tuning = ParTuning { balance, commit };
+            let (state, _) = run_striped(&st0, &lanes, tuning);
+            assert_eq!(
+                state.h, seq_state.h,
+                "tuned host rounds diverged at {size}x{size} {balance:?}/{commit:?}"
+            );
+            assert_eq!(state.e, seq_state.e, "excess diverged under tuning");
+            assert_eq!(state.cap, seq_state.cap, "caps diverged under tuning");
+            let times = measure.run(|| run_striped(&st0, &lanes, tuning));
+            let summary = Summary::of(&times).unwrap();
+            let speedup = seq_mean / summary.mean;
+            tuning_table.row(vec![
+                format!("{size}x{size}").into(),
+                balance.name().into(),
+                commit.name().into(),
+                summary.into(),
+                Cell::Float(speedup),
+            ]);
+        }
     }
 
     table.print();
     phase_table.print();
+    tuning_table.print();
     let path = std::env::var("FLOWMATCH_BENCH_JSON")
         .unwrap_or_else(|_| "benches/data/bench_host_rounds.json".to_string());
     let path = std::path::PathBuf::from(path);
-    match write_json(&path, &[&table, &phase_table]) {
+    match write_json(&path, &[&table, &phase_table, &tuning_table]) {
         Ok(()) => println!("\nbenchkit JSON written to {}", path.display()),
         Err(e) => eprintln!("\nwarning: could not write benchkit JSON: {e}"),
     }

@@ -17,7 +17,15 @@ pub struct Args {
 
 /// Option names that never take a value (needed to disambiguate
 /// `--verbose file` from `--key value`).
-pub const BOOLEAN_FLAGS: &[&str] = &["native", "verbose", "fast", "no-heuristics", "baseline"];
+pub const BOOLEAN_FLAGS: &[&str] = &[
+    "native",
+    "verbose",
+    "fast",
+    "no-heuristics",
+    "baseline",
+    "gap-relabel",
+    "scaling",
+];
 
 impl Args {
     /// Parse from an iterator (first element = argv[0], skipped).

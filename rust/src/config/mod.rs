@@ -124,8 +124,9 @@ pub fn preset(name: &str) -> Result<Config> {
         "paper" => {
             "[assign]\nalpha = 10\nmax_n = 30\nmax_weight = 100\ncycle = 1024\n\
              [maxflow]\ncycle = 7000\nheuristics = true\nengine = \"auto\"\n\
-             threads = 4\ntile_rows = 16\n\
-             [gridflow]\nhost_rounds = \"striped\"\n\
+             threads = 4\ntile_rows = 16\nstriped_relabel_min_nodes = 256\n\
+             [gridflow]\nhost_rounds = \"striped\"\nstripe_balance = \"fixed\"\n\
+             commit = \"two_pass\"\n\
              [service]\nworkers = 4\nqueue_depth = 64\nsmall_units = 2048\n\
              medium_units = 8192\nmax_units = 1048576\nuse_pjrt = true\n\
              assign_small = \"hungarian\"\nassign_medium = \"csa-lockfree\"\n\
@@ -141,8 +142,9 @@ pub fn preset(name: &str) -> Result<Config> {
         "smoke" => {
             "[assign]\nalpha = 10\nmax_n = 8\nmax_weight = 20\ncycle = 64\n\
              [maxflow]\ncycle = 64\nheuristics = true\nengine = \"auto\"\n\
-             threads = 2\ntile_rows = 4\n\
-             [gridflow]\nhost_rounds = \"striped\"\n\
+             threads = 2\ntile_rows = 4\nstriped_relabel_min_nodes = 256\n\
+             [gridflow]\nhost_rounds = \"striped\"\nstripe_balance = \"fixed\"\n\
+             commit = \"two_pass\"\n\
              [service]\nworkers = 2\nqueue_depth = 16\nsmall_units = 512\n\
              medium_units = 4096\nmax_units = 65536\nuse_pjrt = false\n\
              cycle = 128\nthreads = 2\ntile_rows = 4\n\
@@ -198,10 +200,18 @@ mod tests {
         assert_eq!(p.get_usize("maxflow.threads", 0).unwrap(), 4);
         assert_eq!(p.get_usize("maxflow.tile_rows", 0).unwrap(), 16);
         assert_eq!(p.get("gridflow.host_rounds"), Some("striped"));
+        // Striped-substrate tuning ships in its bit-exact default; the
+        // keys are present so operators can flip them in one place.
+        assert_eq!(p.get("gridflow.stripe_balance"), Some("fixed"));
+        assert_eq!(p.get("gridflow.commit"), Some("two_pass"));
         assert_eq!(
-            preset("smoke").unwrap().get("gridflow.host_rounds"),
-            Some("striped")
+            p.get_usize("maxflow.striped_relabel_min_nodes", 0).unwrap(),
+            256
         );
+        let s = preset("smoke").unwrap();
+        assert_eq!(s.get("gridflow.host_rounds"), Some("striped"));
+        assert_eq!(s.get("gridflow.stripe_balance"), Some("fixed"));
+        assert_eq!(s.get("gridflow.commit"), Some("two_pass"));
         assert!(preset("nope").is_err());
     }
 

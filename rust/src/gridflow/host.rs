@@ -18,16 +18,22 @@
 //! frontier substrate (`crate::parallel`): the grid is partitioned into
 //! row stripes, each stripe owns its cells, and cross-stripe effects
 //! (BFS discoveries, cancel receive-sides) travel through per-stripe
-//! outboxes committed by the owner in the parity-coloured two-pass.
-//! The twins are **bit-exact** with the sequential passes at any stripe
-//! count and on any [`Lanes`]: BFS distances are visit-order
-//! independent, and the deferred cancel ops are additive increments to
-//! reverse arcs that can never themselves violate (a violation both
-//! ways would need `h(x) > h(y) + 1` and `h(y) > h(x) + 1`).
+//! outboxes committed by the owner (parity two-pass by default; one
+//! merged batch under [`CommitMode::Merged`]).  With
+//! [`StripeBalance::Weighted`] the stripe boundaries are re-cut between
+//! host rounds from the observed excess frontier, row-aligned.  The
+//! twins are **bit-exact** with the sequential passes at any stripe
+//! count, any boundary placement, and on any [`Lanes`]: BFS distances
+//! are visit-order independent, and the deferred cancel ops are
+//! additive increments to reverse arcs that can never themselves
+//! violate (a violation both ways would need `h(x) > h(y) + 1` and
+//! `h(y) > h(x) + 1`).
 
 use std::collections::VecDeque;
 
-use crate::parallel::{CrossOp, Lanes, Stripes, StripedFrontier};
+use crate::parallel::{
+    CommitMode, CrossOp, Lanes, ParTuning, StripeBalance, StripeCuts, Stripes, StripedFrontier,
+};
 use crate::runtime::device::GridWireState;
 
 const DIRS: [(i64, i64); 4] = [(-1, 0), (1, 0), (0, -1), (0, 1)];
@@ -67,6 +73,20 @@ pub struct HostScratch {
     cancel_out: Vec<Vec<CrossOp>>,
     stripe_cancel: Vec<(u64, i64)>,
     stripe_gap: Vec<u64>,
+    /// Balance/commit tuning for the striped passes (sticky; set by the
+    /// solver from its config).  The default — fixed uniform stripes,
+    /// parity two-pass commits — is the historical behaviour exactly.
+    tuning: ParTuning,
+    /// Current stripe boundaries of the striped passes.  Uniform under
+    /// `StripeBalance::Fixed`; re-cut between host rounds from the
+    /// observed excess frontier under `Weighted` (row-aligned, so W/E
+    /// cancels stay intra-stripe).  Results are partition-independent —
+    /// only the work split moves.
+    cuts: StripeCuts,
+    stripe_weights: Vec<u64>,
+    /// Host-round boundary re-cuts performed (weighted mode only),
+    /// drained by [`HostScratch::take_rebalances`] for telemetry.
+    rebalances: u64,
     /// Cumulative seconds the cancel / relabel passes have run through
     /// this scratch (filled by [`host_round_with`] / [`host_round_par`]).
     /// The solver reads deltas into its phase breakdown; the timing
@@ -100,6 +120,34 @@ impl HostScratch {
             src_cells,
             ..Default::default()
         }
+    }
+
+    /// Balance/commit tuning for the striped passes.  Sticky across
+    /// rounds; forwarded to the embedded BFS frontier so its levels use
+    /// the same discipline.
+    pub fn set_tuning(&mut self, tuning: ParTuning) {
+        self.tuning = tuning;
+        self.frontier.set_tuning(tuning);
+    }
+
+    pub fn tuning(&self) -> ParTuning {
+        self.tuning
+    }
+
+    /// Weighted boundary re-cuts since the last call — host-round
+    /// boundary re-cuts plus the frontier's per-level re-cuts (both 0
+    /// in `Fixed` mode).  Drained for the solver's phase breakdown.
+    pub fn take_rebalances(&mut self) -> u64 {
+        std::mem::take(&mut self.rebalances) + self.frontier.take_rebalances()
+    }
+
+    /// The striped passes' current partition, rebuilt uniform whenever
+    /// the geometry (or lane width) changed since the last pass.
+    fn resolve_cuts(&mut self, stripes: Stripes) -> &StripeCuts {
+        if self.cuts.len() != stripes.len() || self.cuts.n_stripes() != stripes.n_stripes() {
+            self.cuts = StripeCuts::uniform(stripes);
+        }
+        &self.cuts
     }
 }
 
@@ -301,7 +349,7 @@ pub fn cancel_violations_par(
     let v_total = (cells + 2) as i64;
     let stripes = host_stripes(st, lanes);
     let ns = stripes.n_stripes();
-    let sl = stripes.stripe_len();
+    scratch.resolve_cuts(stripes);
 
     scratch.cancel_out.iter_mut().for_each(Vec::clear);
     scratch.cancel_out.resize_with(ns * ns, Vec::new);
@@ -322,6 +370,7 @@ pub fn cancel_violations_par(
 
     struct CancelStripe<'a> {
         base: usize,
+        cuts: &'a StripeCuts,
         e: &'a mut [i32],
         cap_n: &'a mut [i32],
         cap_s: &'a mut [i32],
@@ -335,14 +384,16 @@ pub fn cancel_violations_par(
 
     // Pass 1: snapshot + cancel, owner-side effects applied in place.
     {
+        let cuts = &scratch.cuts;
         let mut tasks = Vec::with_capacity(ns);
-        let iter = e
-            .chunks_mut(sl)
-            .zip(cap_n.chunks_mut(sl))
-            .zip(cap_s.chunks_mut(sl))
-            .zip(cap_w.chunks_mut(sl))
-            .zip(cap_e.chunks_mut(sl))
-            .zip(cap_src.chunks_mut(sl))
+        let iter = cuts
+            .split_mut(e)
+            .into_iter()
+            .zip(cuts.split_mut(cap_n))
+            .zip(cuts.split_mut(cap_s))
+            .zip(cuts.split_mut(cap_w))
+            .zip(cuts.split_mut(cap_e))
+            .zip(cuts.split_mut(cap_src))
             .zip(scratch.stripe_active.iter_mut())
             .zip(scratch.cancel_out.chunks_mut(ns))
             .zip(scratch.stripe_cancel.iter_mut())
@@ -351,7 +402,8 @@ pub fn cancel_violations_par(
             iter
         {
             tasks.push(CancelStripe {
-                base: s * sl,
+                base: cuts.start(s),
+                cuts,
                 e,
                 cap_n,
                 cap_s,
@@ -369,6 +421,7 @@ pub fn cancel_violations_par(
                 for task in group {
                     let CancelStripe {
                         base,
+                        cuts,
                         e,
                         cap_n,
                         cap_s,
@@ -425,7 +478,7 @@ pub fn cancel_violations_par(
                                     }
                                     e[ln] += r;
                                 } else {
-                                    row[nc / sl].push(CrossOp {
+                                    row[cuts.owner(nc)].push(CrossOp {
                                         cell: nc as u32,
                                         arc: OPP[a] as u8,
                                         delta: r,
@@ -448,11 +501,18 @@ pub fn cancel_violations_par(
         lanes.run(jobs);
     }
 
-    // Pass 2: parity-coloured commit of the deferred receive sides —
-    // even-index stripes apply the ops addressed to them, then the odd
-    // stripes.  All increments are additive, so the final state equals
-    // the sequential in-order apply.  Skipped outright when no cancel
-    // crossed a stripe boundary (the common steady-state round).
+    // Pass 2: owner-exclusive commit of the deferred receive sides.
+    // Under `CommitMode::TwoPass` the owners run parity-coloured —
+    // even-index stripes, then odd (the oracle protocol); `Merged` runs
+    // every owner in one batch.  Both are safe for the same reason: a
+    // commit writes only the owner's chunks and reads only outboxes
+    // that are immutable for the whole phase, and all increments are
+    // additive, so the final state equals the sequential in-order
+    // apply.  Skipped outright when no cancel crossed a stripe boundary
+    // (the common steady-state round).  Each owner scans every
+    // producer's column (not just ±1): after a weighted re-cut a stripe
+    // can be empty, so adjacency in stripe index no longer implies
+    // adjacency in rows.  Non-adjacent columns are empty vectors.
     if scratch.cancel_out.iter().any(|b| !b.is_empty()) {
         struct CancelCommit<'a> {
             owner: usize,
@@ -464,44 +524,41 @@ pub fn cancel_violations_par(
             cap_e: &'a mut [i32],
         }
         let out: &[Vec<CrossOp>] = &scratch.cancel_out;
-        let mut even = Vec::new();
-        let mut odd = Vec::new();
-        let iter = e
-            .chunks_mut(sl)
-            .zip(cap_n.chunks_mut(sl))
-            .zip(cap_s.chunks_mut(sl))
-            .zip(cap_w.chunks_mut(sl))
-            .zip(cap_e.chunks_mut(sl))
+        let cuts = &scratch.cuts;
+        let mut tasks = Vec::with_capacity(ns);
+        let iter = cuts
+            .split_mut(e)
+            .into_iter()
+            .zip(cuts.split_mut(cap_n))
+            .zip(cuts.split_mut(cap_s))
+            .zip(cuts.split_mut(cap_w))
+            .zip(cuts.split_mut(cap_e))
             .enumerate();
         for (o, ((((e, cap_n), cap_s), cap_w), cap_e)) in iter {
-            let task = CancelCommit {
+            tasks.push(CancelCommit {
                 owner: o,
-                base: o * sl,
+                base: cuts.start(o),
                 e,
                 cap_n,
                 cap_s,
                 cap_w,
                 cap_e,
-            };
-            if o % 2 == 0 {
-                even.push(task);
-            } else {
-                odd.push(task);
-            }
+            });
         }
-        for pass in [even, odd] {
+        let passes: Vec<Vec<CancelCommit<'_>>> = match scratch.tuning.commit {
+            CommitMode::Merged => vec![tasks],
+            CommitMode::TwoPass => {
+                let (even, odd): (Vec<_>, Vec<_>) =
+                    tasks.into_iter().partition(|t| t.owner % 2 == 0);
+                vec![even, odd]
+            }
+        };
+        for pass in passes {
             let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
             for group in crate::parallel::deal(pass, lanes.width()) {
                 jobs.push(Box::new(move || {
                     for task in group {
-                        // Row-aligned stripes: a cancel's receive side
-                        // crosses exactly one row boundary, so only the
-                        // two adjacent producers can address this owner
-                        // (same argument as the wave reconcile).
-                        for p in [task.owner.wrapping_sub(1), task.owner + 1] {
-                            if p >= ns {
-                                continue;
-                            }
+                        for p in 0..ns {
                             for op in &out[p * ns + task.owner] {
                                 let lv = op.cell as usize - task.base;
                                 match op.arc {
@@ -544,7 +601,7 @@ pub fn global_relabel_par(
     let v_total = (cells + 2) as i32;
     let stripes = host_stripes(st, lanes);
     let ns = stripes.n_stripes();
-    let sl = stripes.stripe_len();
+    scratch.resolve_cuts(stripes);
 
     let HostScratch {
         sink_cells,
@@ -553,8 +610,10 @@ pub fn global_relabel_par(
         dist_s,
         frontier,
         stripe_gap,
+        cuts,
         ..
     } = scratch;
+    let cuts: &StripeCuts = cuts;
 
     // Pass 1: distance-to-sink over reverse residual arcs.
     dist.clear();
@@ -624,11 +683,11 @@ pub fn global_relabel_par(
     stripe_gap.resize(ns, 0);
     {
         let mut tasks = Vec::with_capacity(ns);
-        let iter = st
-            .h
-            .chunks_mut(sl)
-            .zip(dist.chunks(sl))
-            .zip(dist_s.chunks(sl))
+        let iter = cuts
+            .split_mut(&mut st.h)
+            .into_iter()
+            .zip(cuts.split_mut(dist))
+            .zip(cuts.split_mut(dist_s))
             .zip(stripe_gap.iter_mut());
         for (((h, d), ds), gap) in iter {
             tasks.push((h, d, ds, gap));
@@ -674,6 +733,22 @@ pub fn host_round_par(
     let t = crate::util::Timer::start();
     let (cancelled, src_returned) = cancel_violations_par(st, scratch, lanes);
     scratch.cancel_seconds += t.elapsed();
+    // Weighted mode, between rounds: re-cut the stripe boundaries from
+    // the excess frontier the cancel pass just snapshotted (per-stripe
+    // active-cell counts), row-aligned so W/E receive sides stay
+    // intra-stripe.  Bit-exactness is untouched — every striped pass is
+    // partition-independent; only the coming passes' work split moves.
+    if scratch.tuning.balance == StripeBalance::Weighted && scratch.cuts.n_stripes() > 1 {
+        scratch.stripe_weights.clear();
+        scratch
+            .stripe_weights
+            .extend(scratch.stripe_active.iter().map(|a| a.len() as u64));
+        let new_cuts = scratch.cuts.rebalance(&scratch.stripe_weights, st.width);
+        if new_cuts != scratch.cuts {
+            scratch.cuts = new_cuts;
+            scratch.rebalances += 1;
+        }
+    }
     let t = crate::util::Timer::start();
     let mut out = global_relabel_par(st, scratch, lanes);
     scratch.relabel_seconds += t.elapsed();
@@ -795,6 +870,16 @@ mod tests {
         st
     }
 
+    fn all_tunings() -> Vec<ParTuning> {
+        let mut out = Vec::new();
+        for balance in [StripeBalance::Fixed, StripeBalance::Weighted] {
+            for commit in [CommitMode::TwoPass, CommitMode::Merged] {
+                out.push(ParTuning { balance, commit });
+            }
+        }
+        out
+    }
+
     #[test]
     fn striped_round_bit_exact_with_sequential() {
         use crate::parallel::Lanes;
@@ -803,21 +888,61 @@ mod tests {
         let pool = WorkerPool::new(3);
         for (seed, hh, ww) in [(1u64, 1usize, 1usize), (2, 5, 7), (3, 16, 3), (4, 9, 9), (5, 1, 24)] {
             for lanes in [Lanes::Seq, Lanes::Scoped { threads: 3 }, Lanes::Pool(&pool)] {
-                let mut seq = mid_state(seed, hh, ww);
-                let mut par = seq.clone();
-                let mut ss = HostScratch::for_state(&seq);
-                let mut ps = HostScratch::for_state(&par);
-                let ctx = format!("seed={seed} {hh}x{ww} lanes={}", lanes.width());
-                // Several rounds through the same scratches, so the
-                // reused stripe buffers are exercised too.
-                for round in 0..3 {
-                    let a = host_round_with(&mut seq, &mut ss);
-                    let b = host_round_par(&mut par, &mut ps, &lanes);
-                    assert_eq!(a, b, "{ctx}: stats at round {round}");
-                    assert_state_eq(&seq, &par, &format!("{ctx} round {round}"));
+                for tuning in all_tunings() {
+                    let mut seq = mid_state(seed, hh, ww);
+                    let mut par = seq.clone();
+                    let mut ss = HostScratch::for_state(&seq);
+                    let mut ps = HostScratch::for_state(&par);
+                    ps.set_tuning(tuning);
+                    let ctx =
+                        format!("seed={seed} {hh}x{ww} lanes={} {tuning:?}", lanes.width());
+                    // Several rounds through the same scratches, so the
+                    // reused stripe buffers (and any weighted re-cuts
+                    // carried across rounds) are exercised too.
+                    for round in 0..3 {
+                        let a = host_round_with(&mut seq, &mut ss);
+                        let b = host_round_par(&mut par, &mut ps, &lanes);
+                        assert_eq!(a, b, "{ctx}: stats at round {round}");
+                        assert_state_eq(&seq, &par, &format!("{ctx} round {round}"));
+                    }
                 }
             }
         }
+    }
+
+    #[test]
+    fn weighted_rounds_recut_on_skewed_excess_and_stay_exact() {
+        use crate::parallel::Lanes;
+
+        // All excess concentrated in the bottom rows: the uniform cuts
+        // leave most stripes idle, so weighted mode must re-cut at
+        // least once — and the re-cut rounds must stay bit-exact.
+        let (hh, ww) = (16usize, 3usize);
+        let mut seq = mid_state(21, hh, ww);
+        for c in 0..(hh - 2) * ww {
+            seq.e[c] = 0;
+        }
+        for c in (hh - 2) * ww..hh * ww {
+            seq.e[c] = 3;
+        }
+        let mut par = seq.clone();
+        let mut ss = HostScratch::for_state(&seq);
+        let mut ps = HostScratch::for_state(&par);
+        ps.set_tuning(ParTuning {
+            balance: StripeBalance::Weighted,
+            commit: CommitMode::Merged,
+        });
+        let lanes = Lanes::Scoped { threads: 3 };
+        for round in 0..3 {
+            let a = host_round_with(&mut seq, &mut ss);
+            let b = host_round_par(&mut par, &mut ps, &lanes);
+            assert_eq!(a, b, "stats at round {round}");
+            assert_state_eq(&seq, &par, &format!("round {round}"));
+        }
+        assert!(ps.take_rebalances() > 0, "skewed excess never re-cut");
+        assert_eq!(ps.take_rebalances(), 0, "take must drain");
+        // Fixed-mode scratches never report re-cuts.
+        assert_eq!(ss.take_rebalances(), 0);
     }
 
     #[test]

@@ -28,7 +28,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::parallel::CrossOp;
+use crate::parallel::{CommitMode, CrossOp, ParTuning};
 use crate::runtime::device::{GridStepStats, GridWireState};
 use crate::service::pool::WorkerPool;
 
@@ -60,6 +60,11 @@ pub struct ParWaveScratch {
     borders: Vec<Vec<CrossOp>>,
     decisions: Vec<Decision>,
     on_list: Vec<bool>,
+    /// How the border reconcile batches its owner tasks: the parity
+    /// two-pass (default, the oracle protocol) or one merged batch —
+    /// safe either way because owners write disjoint tile slices and
+    /// the outboxes are immutable for the whole phase.
+    commit: CommitMode,
     pub(super) built_for: Option<(usize, usize)>,
 }
 
@@ -71,12 +76,17 @@ impl ParWaveScratch {
             borders: Vec::new(),
             decisions: Vec::new(),
             on_list: Vec::new(),
+            commit: CommitMode::default(),
             built_for: None,
         }
     }
 
     pub fn tile_rows(&self) -> usize {
         self.tile_rows
+    }
+
+    pub fn set_commit(&mut self, commit: CommitMode) {
+        self.commit = commit;
     }
 
     /// (Re)build the per-tile active lists from the state — call after
@@ -399,8 +409,7 @@ fn par_wave_exec(
         let borders: &[Vec<CrossOp>] = &scratch.borders;
         let (cap_n, rest) = st.cap.split_at_mut(cells);
         let (cap_s, _) = rest.split_at_mut(cells);
-        let mut even = Vec::new();
-        let mut odd = Vec::new();
+        let mut tasks = Vec::with_capacity(n_tiles);
         let iter = scratch
             .tiles
             .iter_mut()
@@ -410,21 +419,30 @@ fn par_wave_exec(
             .zip(scratch.on_list.chunks_mut(tile_cells))
             .enumerate();
         for (t, ((((tile, e), cap_n), cap_s), on_list)) in iter {
-            let job = ReconcileJob {
+            tasks.push(ReconcileJob {
                 t,
                 tile,
                 e,
                 cap_n,
                 cap_s,
                 on_list,
-            };
-            if t % 2 == 0 {
-                even.push(job);
-            } else {
-                odd.push(job);
-            }
+            });
         }
-        for pass in [even, odd] {
+        // `TwoPass` is the parity-coloured oracle protocol; `Merged`
+        // runs every owner in one batch (halving the per-wave barrier
+        // count).  Identical results: owners write disjoint tile
+        // slices, the outboxes are read-only for the whole phase, and
+        // each owner's apply order (upper neighbour's ops, then
+        // lower's) is the same in both shapes.
+        let passes: Vec<Vec<ReconcileJob<'_>>> = match scratch.commit {
+            CommitMode::Merged => vec![tasks],
+            CommitMode::TwoPass => {
+                let (even, odd): (Vec<_>, Vec<_>) =
+                    tasks.into_iter().partition(|j| j.t % 2 == 0);
+                vec![even, odd]
+            }
+        };
+        for pass in passes {
             let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
             for group in crate::parallel::deal(pass, threads) {
                 jobs.push(Box::new(move || {
@@ -519,6 +537,11 @@ pub struct NativeParGridExecutor {
     pub k_inner: usize,
     pub threads: usize,
     pub tile_rows: usize,
+    /// Striped-pass tuning.  The wave itself honours `commit` (border
+    /// reconcile batching); `balance` is carried for the solver's host
+    /// rounds — tile boundaries are bound to the scratch geometry and
+    /// are never re-cut mid-solve.
+    pub tuning: ParTuning,
     scratch: ParWaveScratch,
     needs_rebuild: bool,
     pool: Option<Arc<WorkerPool>>,
@@ -531,6 +554,7 @@ impl NativeParGridExecutor {
             k_inner: 16,
             threads: threads.max(1),
             tile_rows,
+            tuning: ParTuning::default(),
             scratch: ParWaveScratch::new(tile_rows),
             needs_rebuild: true,
             pool: None,
@@ -539,6 +563,11 @@ impl NativeParGridExecutor {
 
     pub fn with_k_inner(mut self, k_inner: usize) -> Self {
         self.k_inner = k_inner.max(1);
+        self
+    }
+
+    pub fn with_tuning(mut self, tuning: ParTuning) -> Self {
+        self.tuning = tuning;
         self
     }
 
@@ -602,6 +631,7 @@ impl GridExecutor for NativeParGridExecutor {
             self.scratch.rebuild(st);
             self.needs_rebuild = false;
         }
+        self.scratch.set_commit(self.tuning.commit);
         for _ in 0..budget {
             if self.scratch.active_count() == 0 {
                 break;
@@ -736,6 +766,68 @@ mod tests {
             assert_eq!(got.pushes, want.pushes, "t={threads} tr={tile_rows}");
             assert_eq!(got.relabels, want.relabels, "t={threads} tr={tile_rows}");
             assert_eq!(got.host_rounds, want.host_rounds, "t={threads} tr={tile_rows}");
+        }
+    }
+
+    #[test]
+    fn merged_commit_bit_exact_with_two_pass_wave_by_wave() {
+        // 6x1 column with tile_rows=1: every S push is a border op, so
+        // the reconcile protocols are exercised on every wave.  The
+        // merged commit must reproduce the two-pass (and sequential)
+        // trajectory state-for-state.
+        let mut seq = GridWireState::zeros(6, 1);
+        seq.e[0] = 7;
+        seq.cap_src[0] = 7;
+        seq.cap_sink[5] = 5;
+        for c in 0..5 {
+            seq.cap[6 + c] = 4; // S plane (arc 1) starts at cells=6
+        }
+        let mut two = seq.clone();
+        let mut merged = seq.clone();
+        let mut ss = WaveScratch::default();
+        let mut ts = ParWaveScratch::new(1);
+        let mut ms = ParWaveScratch::new(1);
+        ms.set_commit(crate::parallel::CommitMode::Merged);
+        for _ in 0..400 {
+            if active_cells(&seq) == 0 {
+                break;
+            }
+            let a = native_wave_with(&mut seq, &mut ss);
+            let b = par_wave_with(&mut two, &mut ts, 3).unwrap();
+            let c = par_wave_with(&mut merged, &mut ms, 3).unwrap();
+            assert_eq!(a, b);
+            assert_eq!(a, c);
+            assert_eq!(seq.e, merged.e);
+            assert_eq!(seq.h, merged.h);
+            assert_eq!(seq.cap, merged.cap);
+            assert_eq!(two.e, merged.e);
+        }
+        assert_eq!(active_cells(&merged), 0);
+    }
+
+    #[test]
+    fn tuned_executor_matches_sequential_executor() {
+        use crate::gridflow::{HybridGridSolver, NativeGridExecutor};
+        use crate::parallel::{CommitMode, ParTuning, StripeBalance};
+        use crate::util::Rng;
+        use crate::workloads::grid_gen::random_grid;
+
+        let mut rng = Rng::seeded(37);
+        let net = random_grid(&mut rng, 8, 6, 9, 0.3, 0.3);
+        let solver = HybridGridSolver::with_cycle(48);
+        let mut seq_exec = NativeGridExecutor::default();
+        let want = solver.solve(&net, &mut seq_exec).unwrap();
+        for balance in [StripeBalance::Fixed, StripeBalance::Weighted] {
+            for commit in [CommitMode::TwoPass, CommitMode::Merged] {
+                let tuning = ParTuning { balance, commit };
+                let mut exec =
+                    NativeParGridExecutor::new(3, 2).with_tuning(tuning);
+                let got = solver.solve(&net, &mut exec).unwrap();
+                assert_eq!(got.flow, want.flow, "{tuning:?}");
+                assert_eq!(got.waves, want.waves, "{tuning:?}");
+                assert_eq!(got.pushes, want.pushes, "{tuning:?}");
+                assert_eq!(got.relabels, want.relabels, "{tuning:?}");
+            }
         }
     }
 

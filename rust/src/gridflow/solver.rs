@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use crate::graph::GridNetwork;
 use crate::obs::{self, Phase, PhaseBreakdown};
-use crate::parallel::Lanes;
+use crate::parallel::{Lanes, ParTuning};
 use crate::runtime::device::{GridStepStats, GridWireState};
 use crate::service::pool::WorkerPool;
 use crate::util::CancelToken;
@@ -180,6 +180,11 @@ pub struct HybridGridSolver {
     /// Sequential host rounds, or the stripe-parallel twins (bit-exact;
     /// parallel when a pool is available).
     pub host_rounds: HostRounds,
+    /// Striped-pass tuning for the host-round twins: stripe balancing
+    /// (`[gridflow] stripe_balance`) and commit batching (`[gridflow]
+    /// commit`).  Ignored by sequential host rounds; the default is the
+    /// prior behaviour exactly.
+    pub tuning: ParTuning,
     /// Explicit pool for striped host rounds.  Takes precedence over
     /// the executor's own pool ([`GridExecutor::host_pool`]); lets
     /// callers parallelise host rounds behind executors that have no
@@ -198,6 +203,7 @@ impl Default for HybridGridSolver {
             heuristics: true,
             max_rounds: 100_000,
             host_rounds: HostRounds::Seq,
+            tuning: ParTuning::default(),
             host_pool: None,
             cancel: None,
         }
@@ -222,6 +228,11 @@ impl HybridGridSolver {
 
     pub fn with_host_rounds(mut self, host_rounds: HostRounds) -> Self {
         self.host_rounds = host_rounds;
+        self
+    }
+
+    pub fn with_tuning(mut self, tuning: ParTuning) -> Self {
+        self.tuning = tuning;
         self
     }
 
@@ -281,6 +292,7 @@ impl HybridGridSolver {
         // for states whose terminal caps never grow, which holds from
         // here on but not across an edit that raised them.
         let mut hscratch = host::HostScratch::for_state(st);
+        hscratch.set_tuning(self.tuning);
 
         // Striped host rounds run on the solver's explicit pool, else
         // the executor's (the service's native-par backend); with
@@ -310,6 +322,11 @@ impl HybridGridSolver {
                 host::global_relabel_with(st, &mut hscratch)
             };
             report.gap_cells += out.gap_cells;
+            // A relabel that parked unreachable cells at |V| is one gap
+            // event (the grid twin of the CSR engines' batched lift).
+            if out.gap_cells > 0 {
+                report.phases.gap_relabels += 1;
+            }
             let secs = t.elapsed();
             report.host_seconds += secs;
             report.phases.add(Phase::GlobalRelabel, secs);
@@ -362,6 +379,9 @@ impl HybridGridSolver {
                 };
                 src_total += out.src_returned;
                 report.gap_cells += out.gap_cells;
+                if out.gap_cells > 0 {
+                    report.phases.gap_relabels += 1;
+                }
                 report.cancelled_arcs += out.cancelled_arcs;
                 report.host_seconds += t.elapsed();
                 report.phases.add(Phase::Cancel, hscratch.cancel_seconds - c0);
@@ -384,6 +404,7 @@ impl HybridGridSolver {
         report.phases.pushes = report.pushes.max(0) as u64;
         report.phases.relabels = report.relabels.max(0) as u64;
         report.phases.waves = report.waves.max(0) as u64;
+        report.phases.rebalances = hscratch.take_rebalances();
         obs::record_phases("grid", &report.phases);
         Ok(report)
     }
@@ -453,6 +474,37 @@ mod tests {
         let mut g = net.to_flow_network();
         let want = maxflow::dinic::Dinic.solve(&mut g).unwrap();
         assert_eq!(report.flow, want.value);
+    }
+
+    #[test]
+    fn tuned_striped_host_rounds_match_sequential_host_rounds() {
+        use crate::parallel::{CommitMode, StripeBalance};
+
+        let net = demo_net();
+        let mut exec = NativeGridExecutor::default();
+        let want = HybridGridSolver::with_cycle(8)
+            .solve(&net, &mut exec)
+            .unwrap();
+        for balance in [StripeBalance::Fixed, StripeBalance::Weighted] {
+            for commit in [CommitMode::TwoPass, CommitMode::Merged] {
+                let tuning = ParTuning { balance, commit };
+                let mut exec = NativeGridExecutor::default();
+                let got = HybridGridSolver::with_cycle(8)
+                    .with_host_rounds(HostRounds::Striped)
+                    .with_tuning(tuning)
+                    .solve(&net, &mut exec)
+                    .unwrap();
+                assert_eq!(got.flow, want.flow, "{tuning:?}");
+                assert_eq!(got.waves, want.waves, "{tuning:?}");
+                assert_eq!(got.host_rounds, want.host_rounds, "{tuning:?}");
+                assert_eq!(got.gap_cells, want.gap_cells, "{tuning:?}");
+                assert_eq!(got.cancelled_arcs, want.cancelled_arcs, "{tuning:?}");
+                assert_eq!(
+                    got.phases.gap_relabels, want.phases.gap_relabels,
+                    "{tuning:?}"
+                );
+            }
+        }
     }
 
     #[test]

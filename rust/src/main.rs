@@ -65,6 +65,9 @@ const USAGE: &str = "flowmatch <info|maxflow|assign|segment|optflow|serve|solver
   maxflow   --height H --width W [--cycle N] [--seed S] [--native] [--dimacs FILE]
             [--engine auto|native|native-par] [--threads T] [--tile-rows R]
             [--host-rounds seq|striped] [--preset paper|smoke]
+            [--rmf AxFRAMES (CSR smoke on a Goldberg-Rao RMF instance; with
+            --gap-relabel / --scaling, self-asserts the opt-in heuristics
+            match the default engine's flow)] [--relabel-min-nodes N]
   assign    --n N [--max-weight C] [--alpha A] [--engine NAME] [--seed S] [--preset paper|smoke]
   segment   --height H --width W [--lambda L] [--seed S]
   optflow   --height H --width W [--features K] [--dy D --dx D]
@@ -73,7 +76,9 @@ const USAGE: &str = "flowmatch <info|maxflow|assign|segment|optflow|serve|solver
             [--workers W] [--requests R] [--grid-requests G] [--n N] [--grid S]
             [--large-grid S] [--fps F] [--queue-depth D] [--max-units U] [--seed S]
             [--routing static|adaptive] [--probe-every N] [--spill-depth D]
-            [--host-rounds seq|striped] [--native] [--preset paper|smoke] [--baseline (loadgen)]
+            [--host-rounds seq|striped] [--stripe-balance fixed|weighted]
+            [--commit two_pass|merged] [--relabel-min-nodes N]
+            [--native] [--preset paper|smoke] [--baseline (loadgen)]
             [--max-retries N] [--deadline-ms MS] [--breaker-threshold N (consecutive failures
             that trip a circuit breaker; 0 disables)]
             [--chaos SEED (loadgen; seeded fault injection,
@@ -104,8 +109,12 @@ fn cmd_info() -> Result<()> {
 fn cmd_maxflow(args: &Args) -> Result<()> {
     args.expect_known(&[
         "height", "width", "cycle", "seed", "native", "dimacs", "max-cap", "engine", "threads",
-        "tile-rows", "host-rounds", "preset",
+        "tile-rows", "host-rounds", "preset", "rmf", "gap-relabel", "scaling",
+        "relabel-min-nodes",
     ])?;
+    if let Some(spec) = args.get("rmf") {
+        return cmd_maxflow_rmf(args, spec);
+    }
     if let Some(path) = args.get("dimacs") {
         // CSR path: solve a DIMACS file with every engine.  With
         // --threads the push-relabel engines borrow one worker pool for
@@ -207,6 +216,104 @@ fn cmd_maxflow(args: &Args) -> Result<()> {
         fmt_duration(elapsed),
         fmt_duration(report.device_seconds),
         fmt_duration(report.host_seconds)
+    );
+    Ok(())
+}
+
+/// `maxflow --rmf AxFRAMES`: the §E15 heuristics smoke.  Solves one
+/// Goldberg–Rao RMF instance with the default FIFO engine, then again
+/// with whatever opt-in heuristics the flags ask for (`--gap-relabel`,
+/// `--scaling`) on the FIFO, highest-label, and hybrid engines — and
+/// fails unless every flow agrees with the default.  CI runs this as a
+/// one-liner; a silent heuristic regression becomes a hard error here.
+fn cmd_maxflow_rmf(args: &Args, spec: &str) -> Result<()> {
+    use flowmatch::maxflow::{
+        fifo::FifoPushRelabel, highest::HighestLabel, hybrid::Hybrid, MaxFlowSolver, ScalingMode,
+    };
+    let (a, frames) = match spec.split_once('x') {
+        Some((a, f)) => (a.parse::<usize>()?, f.parse::<usize>()?),
+        None => bail!("--rmf expects AxFRAMES, e.g. --rmf 4x6"),
+    };
+    ensure!(a >= 2 && frames >= 2, "--rmf needs a >= 2 and frames >= 2");
+    let seed = args.get_u64("seed", 1)?;
+    let max_cap = args.get_i64("max-cap", 16)?;
+    let gap = args.flag("gap-relabel");
+    let scaling = if args.flag("scaling") {
+        ScalingMode::Delta
+    } else {
+        ScalingMode::Off
+    };
+    let min_nodes = args.get_usize(
+        "relabel-min-nodes",
+        flowmatch::maxflow::global_relabel::STRIPED_RELABEL_MIN_NODES,
+    )?;
+    let pool = match args.get_usize("threads", 0)? {
+        0 => None,
+        t => Some(std::sync::Arc::new(flowmatch::service::WorkerPool::new(t))),
+    };
+
+    let mut rng = Rng::seeded(seed);
+    let mut g = workloads::rmf_network(&mut rng, a, frames, max_cap);
+    let t = Timer::start();
+    let want = FifoPushRelabel::default().solve(&mut g)?;
+    println!(
+        "rmf {a}x{a}x{frames} seed={seed}: {:<16} value={} pushes={} relabels={} time={}",
+        "fifo (baseline)",
+        want.value,
+        want.pushes,
+        want.relabels,
+        fmt_duration(t.elapsed())
+    );
+
+    let mut fifo = FifoPushRelabel::default()
+        .with_scaling(scaling)
+        .with_striped_min_nodes(min_nodes);
+    if gap {
+        fifo = fifo.with_gap();
+    }
+    let mut highest = HighestLabel::default()
+        .with_scaling(scaling)
+        .with_striped_min_nodes(min_nodes);
+    let mut hybrid = Hybrid::default()
+        .with_scaling(scaling)
+        .with_striped_min_nodes(min_nodes);
+    if gap {
+        hybrid = hybrid.with_gap();
+    }
+    if let Some(p) = &pool {
+        fifo = fifo.with_relabel_pool(std::sync::Arc::clone(p));
+        highest = highest.with_relabel_pool(std::sync::Arc::clone(p));
+        hybrid = hybrid.with_relabel_pool(std::sync::Arc::clone(p));
+    }
+    let engines: [Box<dyn MaxFlowSolver>; 3] = [Box::new(fifo), Box::new(highest), Box::new(hybrid)];
+    for engine in engines {
+        g.reset();
+        let t = Timer::start();
+        let stats = engine.solve(&mut g)?;
+        println!(
+            "  {:<16} value={} pushes={} relabels={} gap_relabels={} gap_nodes={} rounds={} time={}",
+            engine.name(),
+            stats.value,
+            stats.pushes,
+            stats.relabels,
+            stats.gap_relabels,
+            stats.gap_nodes,
+            stats.rounds,
+            fmt_duration(t.elapsed())
+        );
+        ensure!(
+            stats.value == want.value,
+            "{} returned flow {} but the default engine found {}",
+            engine.name(),
+            stats.value,
+            want.value
+        );
+    }
+    println!(
+        "rmf: OK — gap-relabel={} scaling={} agree with the default flow {}",
+        gap,
+        scaling.name(),
+        want.value
     );
     Ok(())
 }
@@ -459,6 +566,9 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
         "probe-every",
         "spill-depth",
         "host-rounds",
+        "stripe-balance",
+        "commit",
+        "relabel-min-nodes",
         "max-retries",
         "deadline-ms",
         "breaker-threshold",
@@ -497,6 +607,16 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
     if let Some(hr) = args.get("host-rounds") {
         pool_cfg.router.host_rounds = flowmatch::service::HostRounds::parse(hr)?;
     }
+    if let Some(b) = args.get("stripe-balance") {
+        pool_cfg.router.tuning.balance = flowmatch::parallel::StripeBalance::parse(b)?;
+    }
+    if let Some(c) = args.get("commit") {
+        pool_cfg.router.tuning.commit = flowmatch::parallel::CommitMode::parse(c)?;
+    }
+    pool_cfg.router.striped_relabel_min_nodes = args.get_usize(
+        "relabel-min-nodes",
+        pool_cfg.router.striped_relabel_min_nodes,
+    )?;
     if args.flag("native") {
         pool_cfg.router.use_pjrt = false;
     }
@@ -625,13 +745,15 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
     let trace = workloads::MixedTrace::generate(&mut rng, &trace_cfg);
     println!(
         "solver-pool {action}: {} requests ({} assignment n={n}, {} grid {grid}²/{large_grid}²), \
-         {} workers, routing={}, host_rounds={}",
+         {} workers, routing={}, host_rounds={}, stripe_balance={}, commit={}",
         trace.len(),
         trace.assignment_count(),
         trace.grid_count(),
         pool_cfg.workers,
         pool_cfg.router.routing.name(),
-        pool_cfg.router.host_rounds.name()
+        pool_cfg.router.host_rounds.name(),
+        pool_cfg.router.tuning.balance.name(),
+        pool_cfg.router.tuning.commit.name()
     );
 
     let shard_cfg = pool_cfg.shard.clone();

@@ -21,8 +21,144 @@ use crate::service::pool::WorkerPool;
 
 /// Below this node count the sequential BFS wins outright (the striped
 /// pass costs a few batch barriers per level), so
-/// [`global_relabel_auto`] does not bother the pool.
+/// [`global_relabel_auto`] does not bother the pool.  This is the
+/// *default* gate; services thread their configured value
+/// (`[maxflow] striped_relabel_min_nodes`) through
+/// [`global_relabel_auto_with`].
 pub const STRIPED_RELABEL_MIN_NODES: usize = 256;
+
+/// Incremental height-bucket occupancy for the gap heuristic: one
+/// counter per height `0..n` (heights `>= n` never gate a gap — those
+/// nodes are already cut off from the sink).  Engines decrement/
+/// increment at every relabel ([`GapBuckets::on_relabel`]); when a
+/// bucket `0 < d < n` empties, every node stranded at `d < h < n` can
+/// be lifted in one batched pass ([`gap_lift`] / [`gap_lift_striped`]).
+#[derive(Debug, Default, Clone)]
+pub struct GapBuckets {
+    counts: Vec<u32>,
+    n: usize,
+}
+
+impl GapBuckets {
+    /// Recount from scratch (after a global relabel rewrote `h`).
+    pub fn rebuild(&mut self, h: &[i64]) {
+        let n = h.len();
+        self.n = n;
+        self.counts.clear();
+        self.counts.resize(n, 0);
+        for &hv in h {
+            if hv >= 0 && (hv as usize) < n {
+                self.counts[hv as usize] += 1;
+            }
+        }
+    }
+
+    /// Adopt pre-counted buckets (the striped relabel's write-back
+    /// counts them as a by-product; see
+    /// [`global_relabel_striped_with_buckets`]).
+    fn adopt(&mut self, counts: &mut Vec<u32>, n: usize) {
+        self.n = n;
+        std::mem::swap(&mut self.counts, counts);
+    }
+
+    /// Record a relabel `old -> new`.  Returns `Some(old)` when the old
+    /// bucket emptied at a gap-relevant height (`0 < old < n`) — the
+    /// caller should then run a batched lift.
+    #[inline]
+    pub fn on_relabel(&mut self, old: i64, new: i64) -> Option<i64> {
+        let mut gap = None;
+        if old >= 0 && (old as usize) < self.n {
+            let c = &mut self.counts[old as usize];
+            debug_assert!(*c > 0, "bucket {old} underflow");
+            *c -= 1;
+            if *c == 0 && old > 0 {
+                gap = Some(old);
+            }
+        }
+        if new >= 0 && (new as usize) < self.n {
+            self.counts[new as usize] += 1;
+        }
+        gap
+    }
+
+    /// Occupancy of height bucket `d` (0 outside the tracked range).
+    pub fn count(&self, d: i64) -> u32 {
+        if d >= 0 && (d as usize) < self.n {
+            self.counts[d as usize]
+        } else {
+            0
+        }
+    }
+
+    /// Zero every bucket strictly above `gap_h` (they were just lifted
+    /// out of the tracked range).
+    fn clear_above(&mut self, gap_h: i64) {
+        let from = (gap_h.max(0) as usize + 1).min(self.counts.len());
+        for c in &mut self.counts[from..] {
+            *c = 0;
+        }
+    }
+}
+
+/// Batched sequential gap lift: every node with `gap_h < h[v] < n`
+/// rises to `n + 1` (the empty bucket proves it cannot reach the sink;
+/// `n + 1` keeps the labeling valid among the lifted set and lets
+/// excess drain back to the source).  The source sits at exactly `n`
+/// and the sink at a height `<= gap_h`, so neither is touched.
+/// Returns the number of nodes lifted.
+pub fn gap_lift(h: &mut [i64], buckets: &mut GapBuckets, gap_h: i64) -> usize {
+    let n = h.len() as i64;
+    let mut lifted = 0usize;
+    for hv in h.iter_mut() {
+        if *hv > gap_h && *hv < n {
+            *hv = n + 1;
+            lifted += 1;
+        }
+    }
+    buckets.clear_above(gap_h);
+    lifted
+}
+
+/// Stripe-parallel twin of [`gap_lift`]: the height plane is dealt out
+/// as disjoint stripe chunks, every stripe lifts its own slice and
+/// tallies into its own counter slot, and the tallies merge in one
+/// owner pass.  Bit-exact with the sequential lift (each node's test
+/// and target are independent of every other node's).
+pub fn gap_lift_striped(
+    h: &mut [i64],
+    buckets: &mut GapBuckets,
+    gap_h: i64,
+    lanes: &Lanes<'_>,
+    stripe_lift: &mut Vec<u64>,
+) -> usize {
+    let n = h.len();
+    let stripes = Stripes::new(n, lanes.width() * 2);
+    let ns = stripes.n_stripes();
+    stripe_lift.clear();
+    stripe_lift.resize(ns, 0);
+    {
+        let mut tasks = Vec::with_capacity(ns);
+        for (chunk, lift) in h.chunks_mut(stripes.stripe_len()).zip(stripe_lift.iter_mut()) {
+            tasks.push((chunk, lift));
+        }
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for group in deal(tasks, lanes.width()) {
+            jobs.push(Box::new(move || {
+                for (chunk, lift) in group {
+                    for hv in chunk.iter_mut() {
+                        if *hv > gap_h && *hv < n as i64 {
+                            *hv = n as i64 + 1;
+                            *lift += 1;
+                        }
+                    }
+                }
+            }));
+        }
+        lanes.run(jobs);
+    }
+    buckets.clear_above(gap_h);
+    stripe_lift.iter().sum::<u64>() as usize
+}
 
 /// Result of a global relabel pass.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -112,6 +248,15 @@ pub struct RelabelScratch {
     dist_s: Vec<i32>,
     frontier: StripedFrontier,
     stripe_gap: Vec<u64>,
+    /// Per-stripe height-bucket tallies (flat `ns * n`) for the
+    /// bucket-counting write-back.
+    stripe_counts: Vec<u32>,
+    /// Merged bucket counts handed to the caller's [`GapBuckets`].
+    bucket_counts: Vec<u32>,
+    /// Per-stripe lift tallies for [`gap_lift_striped`].
+    pub(crate) stripe_lift: Vec<u64>,
+    /// One "chosen path" debug log per scratch lifetime (one per solve).
+    logged: bool,
 }
 
 /// Stripe-parallel twin of [`global_relabel`], bit-exact at any stripe
@@ -125,6 +270,21 @@ pub fn global_relabel_striped(
     scratch: &mut RelabelScratch,
     lanes: &Lanes<'_>,
 ) -> GlobalRelabelOutcome {
+    global_relabel_striped_with_buckets(g, h, scratch, lanes, None)
+}
+
+/// [`global_relabel_striped`], optionally refreshing the caller's
+/// [`GapBuckets`] as a by-product: every write-back stripe tallies its
+/// own chunk's fresh heights into a private counter slice, and the
+/// tallies merge in one owner pass over disjoint bucket ranges — the
+/// gap structure is rebuilt without a second sequential O(n) scan.
+pub fn global_relabel_striped_with_buckets(
+    g: &FlowNetwork,
+    h: &mut [i64],
+    scratch: &mut RelabelScratch,
+    lanes: &Lanes<'_>,
+    buckets: Option<&mut GapBuckets>,
+) -> GlobalRelabelOutcome {
     let n = g.node_count();
     debug_assert_eq!(h.len(), n);
     let (s, t) = (g.source(), g.sink());
@@ -137,6 +297,9 @@ pub fn global_relabel_striped(
         dist_s,
         frontier,
         stripe_gap,
+        stripe_counts,
+        bucket_counts,
+        ..
     } = scratch;
 
     // Pass 1: distance-to-sink over reverse residual arcs.  The source
@@ -177,30 +340,47 @@ pub fn global_relabel_striped(
         frontier.run(dist_s, 0, None, &neigh_s, lanes);
     }
 
-    // Write-back, gap counting per stripe.
+    // Write-back, gap counting per stripe — and, when the caller keeps
+    // gap buckets, a per-stripe height-bucket tally as a by-product.
+    let counting = buckets.is_some();
     stripe_gap.clear();
     stripe_gap.resize(ns, 0);
+    stripe_counts.clear();
+    if counting {
+        stripe_counts.resize(ns * n, 0);
+    }
     {
+        let mut count_chunks: Vec<Option<&mut [u32]>> = if counting {
+            stripe_counts.chunks_mut(n).map(Some).collect()
+        } else {
+            (0..ns).map(|_| None).collect()
+        };
         let mut tasks = Vec::with_capacity(ns);
         let iter = h
             .chunks_mut(sl)
             .zip(dist.chunks(sl))
             .zip(dist_s.chunks(sl))
             .zip(stripe_gap.iter_mut())
+            .zip(count_chunks.drain(..))
             .enumerate();
-        for (o, (((h, d), ds), gap)) in iter {
-            tasks.push((o * sl, h, d, ds, gap));
+        for (o, ((((h, d), ds), gap), counts)) in iter {
+            tasks.push((o * sl, h, d, ds, gap, counts));
         }
         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
         for group in deal(tasks, lanes.width()) {
             jobs.push(Box::new(move || {
-                for (base, h, d, ds, gap) in group {
+                for (base, h, d, ds, gap, mut counts) in group {
                     for lc in 0..h.len() {
                         let v = base + lc;
                         if v == s {
                             h[lc] = n as i64;
                         } else if d[lc] >= 0 {
                             h[lc] = d[lc] as i64;
+                            if let Some(c) = counts.as_deref_mut() {
+                                // Distances to the sink are < n by
+                                // construction (simple residual paths).
+                                c[d[lc] as usize] += 1;
+                            }
                         } else {
                             if h[lc] < n as i64 {
                                 *gap += 1;
@@ -216,6 +396,38 @@ pub fn global_relabel_striped(
             }));
         }
         lanes.run(jobs);
+    }
+
+    if let Some(buckets) = buckets {
+        // Single owner pass: disjoint bucket ranges are dealt to the
+        // lanes and each owner sums the per-stripe tallies for its own
+        // range — no atomics, no second sequential scan.
+        bucket_counts.clear();
+        bucket_counts.resize(n, 0);
+        {
+            let stripe_counts: &[u32] = stripe_counts;
+            let merge = Stripes::new(n, lanes.width() * 2);
+            let msl = merge.stripe_len();
+            let mut tasks = Vec::with_capacity(merge.n_stripes());
+            for (o, out) in bucket_counts.chunks_mut(msl).enumerate() {
+                tasks.push((o * msl, out));
+            }
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for group in deal(tasks, lanes.width()) {
+                jobs.push(Box::new(move || {
+                    for (base, out) in group {
+                        for p in 0..ns {
+                            let col = &stripe_counts[p * n + base..p * n + base + out.len()];
+                            for (o, c) in out.iter_mut().zip(col) {
+                                *o += c;
+                            }
+                        }
+                    }
+                }));
+            }
+            lanes.run(jobs);
+        }
+        buckets.adopt(bucket_counts, n);
     }
 
     GlobalRelabelOutcome {
@@ -239,12 +451,43 @@ pub fn global_relabel_auto(
     pool: Option<&WorkerPool>,
     scratch: &mut RelabelScratch,
 ) -> GlobalRelabelOutcome {
+    global_relabel_auto_with(g, h, pool, scratch, STRIPED_RELABEL_MIN_NODES, None)
+}
+
+/// [`global_relabel_auto`] with an explicit striped-path size gate
+/// (`[maxflow] striped_relabel_min_nodes`; default
+/// [`STRIPED_RELABEL_MIN_NODES`]) and an optional [`GapBuckets`]
+/// refresh.  The chosen path is logged once per scratch lifetime (one
+/// line per solve) at debug level.
+pub fn global_relabel_auto_with(
+    g: &FlowNetwork,
+    h: &mut [i64],
+    pool: Option<&WorkerPool>,
+    scratch: &mut RelabelScratch,
+    min_nodes: usize,
+    buckets: Option<&mut GapBuckets>,
+) -> GlobalRelabelOutcome {
     let t = crate::util::Timer::start();
-    let out = match pool {
-        Some(pool) if g.node_count() >= STRIPED_RELABEL_MIN_NODES => {
-            global_relabel_striped(g, h, scratch, &Lanes::Pool(pool))
+    let striped = pool.is_some() && g.node_count() >= min_nodes;
+    if !scratch.logged {
+        crate::log_debug!(
+            "global relabel path: {} (n={}, gate={}, pool={})",
+            if striped { "striped" } else { "sequential" },
+            g.node_count(),
+            min_nodes,
+            pool.is_some()
+        );
+        scratch.logged = true;
+    }
+    let out = if striped {
+        let lanes = Lanes::Pool(pool.expect("striped implies pool"));
+        global_relabel_striped_with_buckets(g, h, scratch, &lanes, buckets)
+    } else {
+        let out = global_relabel(g, h);
+        if let Some(b) = buckets {
+            b.rebuild(h);
         }
-        _ => global_relabel(g, h),
+        out
     };
     crate::obs::record_phase_secs("csr", crate::obs::Phase::GlobalRelabel, t.elapsed());
     out
@@ -368,6 +611,114 @@ mod tests {
         let got = global_relabel_auto(&g, &mut h_auto, Some(&pool), &mut scratch);
         assert_eq!(h_auto, h_seq);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn gap_buckets_track_relabels_and_detect_gaps() {
+        // n = 6; heights 0..n tracked.  One node each at 1 and 2, two
+        // at 3; source parked at n.
+        let h = vec![6, 1, 2, 3, 3, 0];
+        let mut b = GapBuckets::default();
+        b.rebuild(&h);
+        assert_eq!(b.count(0), 1);
+        assert_eq!(b.count(1), 1);
+        assert_eq!(b.count(2), 1);
+        assert_eq!(b.count(3), 2);
+        assert_eq!(b.count(6), 0); // out of tracked range
+        // Relabel within the tracked range: no gap while 2 stays
+        // occupied... moving the node out of 2 empties it.
+        assert_eq!(b.on_relabel(3, 4), None);
+        assert_eq!(b.on_relabel(2, 4), Some(2));
+        assert_eq!(b.count(4), 2);
+        // Bucket 0 can never gate a gap.
+        let mut b0 = GapBuckets::default();
+        b0.rebuild(&[0, 3]); // n = 2: only height 0 and 1 tracked... 3 untracked
+        assert_eq!(b0.on_relabel(0, 1), None);
+        // Leaving the tracked range decrements only the old bucket.
+        let mut b1 = GapBuckets::default();
+        b1.rebuild(&[0, 1, 1, 5]);
+        assert_eq!(b1.on_relabel(1, 9), None);
+        assert_eq!(b1.on_relabel(1, 9), Some(1));
+        assert_eq!(b1.count(1), 0);
+    }
+
+    #[test]
+    fn gap_lift_twins_lift_exactly_the_stranded_set() {
+        // A manufactured mid-solve gap: bucket 4 is empty, nodes sit at
+        // 2, 3 (below: stay), 5, 7 (stranded: lift), n=10 (source:
+        // stay), 11 (already above n: stay).
+        let h0: Vec<i64> = vec![10, 2, 3, 5, 7, 11, 3, 9, 0, 5];
+        let n = h0.len() as i64;
+        let gap_h = 4i64;
+        let want: Vec<i64> = h0
+            .iter()
+            .map(|&hv| if hv > gap_h && hv < n { n + 1 } else { hv })
+            .collect();
+        let stranded = h0.iter().filter(|&&hv| hv > gap_h && hv < n).count();
+        assert_eq!(stranded, 4);
+
+        let mut h_seq = h0.clone();
+        let mut b_seq = GapBuckets::default();
+        b_seq.rebuild(&h_seq);
+        let lifted = gap_lift(&mut h_seq, &mut b_seq, gap_h);
+        assert_eq!(lifted, stranded);
+        assert_eq!(h_seq, want);
+        for d in (gap_h + 1)..n {
+            assert_eq!(b_seq.count(d), 0, "bucket {d} not cleared");
+        }
+        assert_eq!(b_seq.count(2), 1);
+        assert_eq!(b_seq.count(3), 2);
+
+        let pool = WorkerPool::new(3);
+        for lanes in [Lanes::Seq, Lanes::Scoped { threads: 3 }, Lanes::Pool(&pool)] {
+            let mut h_par = h0.clone();
+            let mut b_par = GapBuckets::default();
+            b_par.rebuild(&h_par);
+            let mut stripe_lift = Vec::new();
+            let got = gap_lift_striped(&mut h_par, &mut b_par, gap_h, &lanes, &mut stripe_lift);
+            assert_eq!(got, stranded, "lanes={}", lanes.width());
+            assert_eq!(h_par, want, "lanes={}", lanes.width());
+        }
+    }
+
+    #[test]
+    fn striped_bucket_counting_matches_sequential_rebuild() {
+        // Partially pushed chain + the unit cases: the bucket counts
+        // produced by the striped write-back must equal a sequential
+        // rebuild of the same (identical) heights.
+        let n = STRIPED_RELABEL_MIN_NODES + 20;
+        let mut b = NetworkBuilder::new(n, 0, n - 1);
+        for i in 0..n - 1 {
+            b.add_edge(i, i + 1, 3, 1);
+        }
+        let g = b.build().unwrap();
+        let mut h_seq = vec![0i64; n];
+        global_relabel(&g, &mut h_seq);
+        let mut want = GapBuckets::default();
+        want.rebuild(&h_seq);
+
+        let pool = WorkerPool::new(4);
+        for lanes in [Lanes::Seq, Lanes::Scoped { threads: 4 }, Lanes::Pool(&pool)] {
+            let mut h_par = vec![0i64; n];
+            let mut scratch = RelabelScratch::default();
+            let mut got = GapBuckets::default();
+            global_relabel_striped_with_buckets(&g, &mut h_par, &mut scratch, &lanes, Some(&mut got));
+            assert_eq!(h_par, h_seq);
+            for d in 0..n as i64 {
+                assert_eq!(got.count(d), want.count(d), "bucket {d} lanes={}", lanes.width());
+            }
+        }
+
+        // The auto path with a gate above n must stay sequential and
+        // still refresh the buckets.
+        let mut h_auto = vec![0i64; n];
+        let mut scratch = RelabelScratch::default();
+        let mut got = GapBuckets::default();
+        global_relabel_auto_with(&g, &mut h_auto, Some(&pool), &mut scratch, n + 1, Some(&mut got));
+        assert_eq!(h_auto, h_seq);
+        for d in 0..n as i64 {
+            assert_eq!(got.count(d), want.count(d), "auto bucket {d}");
+        }
     }
 
     #[test]

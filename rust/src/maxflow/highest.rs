@@ -11,8 +11,8 @@ use crate::graph::csr::FlowNetwork;
 use crate::service::pool::WorkerPool;
 use crate::util::CancelToken;
 
-use super::global_relabel::{global_relabel_auto, RelabelScratch};
-use super::{FlowStats, MaxFlowSolver};
+use super::global_relabel::{global_relabel_auto_with, RelabelScratch, STRIPED_RELABEL_MIN_NODES};
+use super::{FlowStats, MaxFlowSolver, ScalingMode};
 
 /// Highest-label engine with gap relabeling; global relabel every
 /// `global_freq * n` relabels (None disables, for the E3 ablation).
@@ -21,6 +21,11 @@ pub struct HighestLabel {
     pub global_relabel_freq: Option<f64>,
     /// Enable the label-count gap heuristic.
     pub gap: bool,
+    /// Δ-phase excess scaling (see [`ScalingMode`]); `Off` by default.
+    pub scaling: ScalingMode,
+    /// Node-count gate for the striped global-relabel path; mirrors
+    /// `[maxflow] striped_relabel_min_nodes` in the service config.
+    pub striped_relabel_min_nodes: usize,
     /// Worker pool for the striped global relabel on large instances.
     pub relabel_pool: Option<Arc<WorkerPool>>,
     /// Cooperative cancellation, polled at the global-relabel entry
@@ -33,6 +38,8 @@ impl Default for HighestLabel {
         Self {
             global_relabel_freq: Some(1.0),
             gap: true,
+            scaling: ScalingMode::Off,
+            striped_relabel_min_nodes: STRIPED_RELABEL_MIN_NODES,
             relabel_pool: None,
             cancel: None,
         }
@@ -45,6 +52,16 @@ impl HighestLabel {
             gap: false,
             ..Self::default()
         }
+    }
+
+    pub fn with_scaling(mut self, mode: ScalingMode) -> Self {
+        self.scaling = mode;
+        self
+    }
+
+    pub fn with_striped_min_nodes(mut self, min_nodes: usize) -> Self {
+        self.striped_relabel_min_nodes = min_nodes;
+        self
     }
 
     pub fn with_relabel_pool(mut self, pool: Arc<WorkerPool>) -> Self {
@@ -99,10 +116,11 @@ impl Buckets {
 
 impl MaxFlowSolver for HighestLabel {
     fn name(&self) -> &'static str {
-        if self.gap {
-            "highest+gap"
-        } else {
-            "highest-nogap"
+        match (self.gap, self.scaling == ScalingMode::Delta) {
+            (true, false) => "highest+gap",
+            (false, false) => "highest-nogap",
+            (true, true) => "highest+gap+scale",
+            (false, true) => "highest+scale",
         }
     }
 
@@ -135,7 +153,14 @@ impl MaxFlowSolver for HighestLabel {
             c.check()?;
         }
         if self.global_relabel_freq.is_some() {
-            let out = global_relabel_auto(g, &mut h, self.relabel_pool.as_deref(), &mut rscratch);
+            let out = global_relabel_auto_with(
+                g,
+                &mut h,
+                self.relabel_pool.as_deref(),
+                &mut rscratch,
+                self.striped_relabel_min_nodes,
+                None,
+            );
             stats.global_relabels += 1;
             stats.gap_nodes += out.gap_lifted as u64;
         }
@@ -160,87 +185,131 @@ impl MaxFlowSolver for HighestLabel {
             .global_relabel_freq
             .map(|f| (f * n as f64).max(1.0) as u64);
 
-        while let Some((u32v, hv)) = buckets.pop_highest() {
-            let u = u32v as usize;
-            if excess[u] <= 0 || h[u] as usize != hv {
-                continue; // stale entry
+        // Δ-phase excess scaling: with Δ = 1 (the default) the
+        // admission test `excess ≥ 1` is exactly the pre-scaling "has
+        // excess" condition, so the default engine is bit-identical.
+        let mut delta = 1i64;
+        if self.scaling == ScalingMode::Delta {
+            let max_e = (0..n)
+                .filter(|&v| v != s && v != t)
+                .map(|v| excess[v])
+                .max()
+                .unwrap_or(0);
+            while delta <= max_e / 2 {
+                delta *= 2;
             }
-            // Discharge u.
-            while excess[u] > 0 {
-                let out_len = g.out_edges(u).len();
-                if cur[u] == out_len {
-                    // Relabel.
-                    let old_h = h[u] as usize;
-                    let mut min_h = i64::MAX;
-                    for &e in g.out_edges(u) {
-                        if g.residual(e) > 0 {
-                            min_h = min_h.min(h[g.edge_head(e)]);
-                        }
+            if delta > 1 {
+                // The initial rebuild admitted every active node; defer
+                // the ones below the opening Δ to later phases.
+                buckets.clear();
+                for v in 0..n {
+                    if v != s && v != t && excess[v] >= delta && (h[v] as usize) < levels - 1 {
+                        buckets.push(v as u32, (h[v] as usize).min(levels - 1));
                     }
-                    if min_h == i64::MAX {
-                        break;
-                    }
-                    let new_h = (min_h + 1).min((levels - 1) as i64);
-                    stats.relabels += 1;
-                    relabels_since_global += 1;
-                    label_count[old_h] -= 1;
-                    h[u] = new_h;
-                    label_count[new_h as usize] += 1;
-                    cur[u] = 0;
+                }
+            }
+        }
 
-                    // Gap heuristic: if old level emptied below n, every node
-                    // above it (and below n) can never reach t again.
-                    if self.gap && label_count[old_h] == 0 && old_h < n {
-                        for v in 0..n {
-                            let hv = h[v] as usize;
-                            if v != s && hv > old_h && hv < n {
-                                label_count[hv] -= 1;
-                                h[v] = (n + 1) as i64;
-                                label_count[n + 1] += 1;
-                                stats.gap_nodes += 1;
-                            }
-                        }
-                    }
-                    if let Some(b) = budget {
-                        if relabels_since_global >= b {
-                            if let Some(c) = &self.cancel {
-                                c.check()?;
-                            }
-                            let out = global_relabel_auto(
-                                g,
-                                &mut h,
-                                self.relabel_pool.as_deref(),
-                                &mut rscratch,
-                            );
-                            stats.global_relabels += 1;
-                            stats.gap_nodes += out.gap_lifted as u64;
-                            relabels_since_global = 0;
-                            rebuild(&mut buckets, &mut label_count, &h, &excess);
-                        }
-                    }
-                    if h[u] as usize >= levels - 1 {
-                        break;
-                    }
-                    continue;
+        loop {
+            while let Some((u32v, hv)) = buckets.pop_highest() {
+                let u = u32v as usize;
+                if excess[u] <= 0 || h[u] as usize != hv {
+                    continue; // stale entry
                 }
-                let e = g.out_edges(u)[cur[u]];
-                let v = g.edge_head(e);
-                if g.residual(e) > 0 && h[u] == h[v] + 1 {
-                    let delta = excess[u].min(g.residual(e));
-                    let was_inactive = excess[v] == 0;
-                    g.push(e, delta);
-                    excess[u] -= delta;
-                    excess[v] += delta;
-                    stats.pushes += 1;
-                    if v != s && v != t && was_inactive {
-                        buckets.push(v as u32, h[v] as usize);
+                // Discharge u.
+                while excess[u] > 0 {
+                    let out_len = g.out_edges(u).len();
+                    if cur[u] == out_len {
+                        // Relabel.
+                        let old_h = h[u] as usize;
+                        let mut min_h = i64::MAX;
+                        for &e in g.out_edges(u) {
+                            if g.residual(e) > 0 {
+                                min_h = min_h.min(h[g.edge_head(e)]);
+                            }
+                        }
+                        if min_h == i64::MAX {
+                            break;
+                        }
+                        let new_h = (min_h + 1).min((levels - 1) as i64);
+                        stats.relabels += 1;
+                        relabels_since_global += 1;
+                        label_count[old_h] -= 1;
+                        h[u] = new_h;
+                        label_count[new_h as usize] += 1;
+                        cur[u] = 0;
+
+                        // Gap heuristic: if old level emptied below n, every node
+                        // above it (and below n) can never reach t again.
+                        if self.gap && label_count[old_h] == 0 && old_h > 0 && old_h < n {
+                            let mut lifted = 0u64;
+                            for v in 0..n {
+                                let hv = h[v] as usize;
+                                if v != s && hv > old_h && hv < n {
+                                    label_count[hv] -= 1;
+                                    h[v] = (n + 1) as i64;
+                                    label_count[n + 1] += 1;
+                                    lifted += 1;
+                                }
+                            }
+                            if lifted > 0 {
+                                stats.gap_relabels += 1;
+                                stats.gap_nodes += lifted;
+                            }
+                        }
+                        if let Some(b) = budget {
+                            if relabels_since_global >= b {
+                                if let Some(c) = &self.cancel {
+                                    c.check()?;
+                                }
+                                let out = global_relabel_auto_with(
+                                    g,
+                                    &mut h,
+                                    self.relabel_pool.as_deref(),
+                                    &mut rscratch,
+                                    self.striped_relabel_min_nodes,
+                                    None,
+                                );
+                                stats.global_relabels += 1;
+                                stats.gap_nodes += out.gap_lifted as u64;
+                                relabels_since_global = 0;
+                                rebuild(&mut buckets, &mut label_count, &h, &excess);
+                            }
+                        }
+                        if h[u] as usize >= levels - 1 {
+                            break;
+                        }
+                        continue;
                     }
-                } else {
-                    cur[u] += 1;
+                    let e = g.out_edges(u)[cur[u]];
+                    let v = g.edge_head(e);
+                    if g.residual(e) > 0 && h[u] == h[v] + 1 {
+                        let push_amt = excess[u].min(g.residual(e));
+                        let was_inactive = excess[v] == 0;
+                        g.push(e, push_amt);
+                        excess[u] -= push_amt;
+                        excess[v] += push_amt;
+                        stats.pushes += 1;
+                        if v != s && v != t && was_inactive && excess[v] >= delta {
+                            buckets.push(v as u32, h[v] as usize);
+                        }
+                    } else {
+                        cur[u] += 1;
+                    }
+                }
+                if excess[u] >= delta && (h[u] as usize) < levels - 1 {
+                    buckets.push(u as u32, h[u] as usize);
                 }
             }
-            if excess[u] > 0 && (h[u] as usize) < levels - 1 {
-                buckets.push(u as u32, h[u] as usize);
+            if self.scaling != ScalingMode::Delta || delta <= 1 {
+                break;
+            }
+            delta /= 2;
+            stats.rounds += 1;
+            for v in 0..n {
+                if v != s && v != t && excess[v] >= delta && (h[v] as usize) < levels - 1 {
+                    buckets.push(v as u32, h[v] as usize);
+                }
             }
         }
 
@@ -256,12 +325,39 @@ mod tests {
 
     #[test]
     fn solves_clrs_variants() {
-        for engine in [HighestLabel::default(), HighestLabel::no_gap()] {
+        for engine in [
+            HighestLabel::default(),
+            HighestLabel::no_gap(),
+            HighestLabel::default().with_scaling(ScalingMode::Delta),
+            HighestLabel::no_gap().with_scaling(ScalingMode::Delta),
+        ] {
             let mut g = crate::maxflow::tests::clrs();
             let stats = engine.solve(&mut g).unwrap();
             assert_eq!(stats.value, 23, "{}", engine.name());
             assert_max_flow(&g, 23).unwrap();
         }
+    }
+
+    #[test]
+    fn gap_events_are_counted() {
+        // s → a → b → t with the sink arc as bottleneck: returning the
+        // 3 stranded units empties bucket 1 while a and b sit above it,
+        // so exactly one gap event lifts both.  Global relabel is
+        // disabled so the incremental machinery is the only lift.
+        let mut b = crate::graph::csr::NetworkBuilder::new(4, 0, 3);
+        b.add_edge(0, 1, 5, 0);
+        b.add_edge(1, 2, 5, 0);
+        b.add_edge(2, 3, 2, 0);
+        let mut g = b.build().unwrap();
+        let engine = HighestLabel {
+            global_relabel_freq: None,
+            ..HighestLabel::default()
+        };
+        let stats = engine.solve(&mut g).unwrap();
+        assert_eq!(stats.value, 2);
+        assert_max_flow(&g, 2).unwrap();
+        assert!(stats.gap_relabels > 0, "stats: {stats:?}");
+        assert!(stats.gap_nodes >= 2 * stats.gap_relabels);
     }
 
     #[test]

@@ -16,8 +16,12 @@ use crate::graph::csr::FlowNetwork;
 use crate::service::pool::WorkerPool;
 use crate::util::CancelToken;
 
-use super::global_relabel::{cancel_violations, global_relabel_auto, RelabelScratch};
-use super::{FlowStats, MaxFlowSolver};
+use super::global_relabel::{
+    cancel_violations, gap_lift, gap_lift_striped, global_relabel_auto_with, GapBuckets,
+    RelabelScratch, STRIPED_RELABEL_MIN_NODES,
+};
+use super::{FlowStats, MaxFlowSolver, ScalingMode};
+use crate::parallel::Lanes;
 
 #[derive(Debug, Clone)]
 pub struct Hybrid {
@@ -25,6 +29,16 @@ pub struct Hybrid {
     pub cycle: u64,
     /// Run the global relabel + gap heuristics between rounds.
     pub heuristics: bool,
+    /// Incremental gap relabeling inside the device phase (bucket
+    /// occupancy maintained at every Hong relabel; batched lift when a
+    /// bucket below `n` empties).  Off by default.
+    pub gap: bool,
+    /// Δ-phase excess scaling for the device sweep (see
+    /// [`ScalingMode`]); `Off` by default.
+    pub scaling: ScalingMode,
+    /// Node-count gate for the striped relabel / gap-lift paths;
+    /// mirrors `[maxflow] striped_relabel_min_nodes`.
+    pub striped_relabel_min_nodes: usize,
     /// Worker pool for the striped host-round relabel on large
     /// instances (the general-graph twin of the grid solver's striped
     /// host rounds).
@@ -38,6 +52,9 @@ impl Default for Hybrid {
         Self {
             cycle: 7000,
             heuristics: true,
+            gap: false,
+            scaling: ScalingMode::Off,
+            striped_relabel_min_nodes: STRIPED_RELABEL_MIN_NODES,
             relabel_pool: None,
             cancel: None,
         }
@@ -60,6 +77,21 @@ impl Hybrid {
         }
     }
 
+    pub fn with_gap(mut self) -> Self {
+        self.gap = true;
+        self
+    }
+
+    pub fn with_scaling(mut self, mode: ScalingMode) -> Self {
+        self.scaling = mode;
+        self
+    }
+
+    pub fn with_striped_min_nodes(mut self, min_nodes: usize) -> Self {
+        self.striped_relabel_min_nodes = min_nodes;
+        self
+    }
+
     pub fn with_relabel_pool(mut self, pool: Arc<WorkerPool>) -> Self {
         self.relabel_pool = Some(pool);
         self
@@ -69,14 +101,38 @@ impl Hybrid {
         self.cancel = Some(token);
         self
     }
+
+    /// Batched gap lift, striped over the lent pool on large instances.
+    fn lift_gap(
+        &self,
+        h: &mut [i64],
+        buckets: &mut GapBuckets,
+        gap_h: i64,
+        rscratch: &mut RelabelScratch,
+    ) -> usize {
+        if let Some(pool) = self.relabel_pool.as_deref() {
+            if h.len() >= self.striped_relabel_min_nodes {
+                return gap_lift_striped(
+                    h,
+                    buckets,
+                    gap_h,
+                    &Lanes::Pool(pool),
+                    &mut rscratch.stripe_lift,
+                );
+            }
+        }
+        gap_lift(h, buckets, gap_h)
+    }
 }
 
 impl MaxFlowSolver for Hybrid {
     fn name(&self) -> &'static str {
-        if self.heuristics {
-            "hybrid-cycle"
-        } else {
-            "hybrid-noheur"
+        match (self.heuristics, self.gap, self.scaling == ScalingMode::Delta) {
+            (_, true, true) => "hybrid+gap+scale",
+            (_, true, false) => "hybrid+gap",
+            (_, false, true) => "hybrid+scale",
+            (true, false, false) => "hybrid-cycle",
+            (false, false, false) => "hybrid-noheur",
         }
     }
 
@@ -102,6 +158,10 @@ impl MaxFlowSolver for Hybrid {
 
         // e(s) counts flow returned to the source.
         let mut rscratch = RelabelScratch::default();
+        let mut buckets = if self.gap { Some(GapBuckets::default()) } else { None };
+        if let Some(b) = buckets.as_mut() {
+            b.rebuild(&h);
+        }
         let height_cap = 4 * n as i64;
         while excess[s] + excess[t] < excess_total {
             // Host-round boundary: the same safe give-up point as the
@@ -109,13 +169,28 @@ impl MaxFlowSolver for Hybrid {
             if let Some(c) = &self.cancel {
                 c.check()?;
             }
+            // Δ-phase admission for the device sweep: only nodes with
+            // excess ≥ Δ take Hong steps; Δ halves when a sweep at the
+            // current threshold makes no progress.  Δ = 1 (the default)
+            // is exactly the pre-scaling `excess > 0` admission.
+            let mut delta = 1i64;
+            if self.scaling == ScalingMode::Delta {
+                let max_e = (0..n)
+                    .filter(|&v| v != s && v != t)
+                    .map(|v| excess[v])
+                    .max()
+                    .unwrap_or(0);
+                while delta <= max_e / 2 {
+                    delta *= 2;
+                }
+            }
             // "Device" phase: CYCLE Hong operations, round-robin.
             let mut ops = 0u64;
             let mut progress = true;
             while ops < self.cycle && progress {
                 progress = false;
                 for x in 0..n {
-                    if x == s || x == t || excess[x] <= 0 {
+                    if x == s || x == t || excess[x] < delta {
                         continue;
                     }
                     // Lowest residual neighbour (Algorithm 4.5 lines 4-9).
@@ -132,15 +207,25 @@ impl MaxFlowSolver for Hybrid {
                     }
                     let Some(eid) = best_e else { continue };
                     if h[x] > best_h {
-                        let delta = excess[x].min(g.residual(eid));
+                        let amt = excess[x].min(g.residual(eid));
                         let y = g.edge_head(eid);
-                        g.push(eid, delta);
-                        excess[x] -= delta;
-                        excess[y] += delta;
+                        g.push(eid, amt);
+                        excess[x] -= amt;
+                        excess[y] += amt;
                         stats.pushes += 1;
                     } else if best_h < height_cap {
+                        let old_h = h[x];
                         h[x] = best_h + 1;
                         stats.relabels += 1;
+                        if let Some(b) = buckets.as_mut() {
+                            if let Some(gap_h) = b.on_relabel(old_h, h[x]) {
+                                let lifted = self.lift_gap(&mut h, b, gap_h, &mut rscratch);
+                                if lifted > 0 {
+                                    stats.gap_relabels += 1;
+                                    stats.gap_nodes += lifted as u64;
+                                }
+                            }
+                        }
                     } else {
                         continue;
                     }
@@ -150,6 +235,10 @@ impl MaxFlowSolver for Hybrid {
                         break;
                     }
                 }
+                if !progress && delta > 1 {
+                    delta /= 2;
+                    progress = true;
+                }
             }
 
             // "Host" phase (Algorithm 4.8 global relabeling):
@@ -157,8 +246,14 @@ impl MaxFlowSolver for Hybrid {
             if self.heuristics {
                 let cancelled = cancel_violations(g, &h, &mut excess);
                 let _ = cancelled;
-                let out =
-                    global_relabel_auto(g, &mut h, self.relabel_pool.as_deref(), &mut rscratch);
+                let out = global_relabel_auto_with(
+                    g,
+                    &mut h,
+                    self.relabel_pool.as_deref(),
+                    &mut rscratch,
+                    self.striped_relabel_min_nodes,
+                    buckets.as_mut(),
+                );
                 stats.global_relabels += 1;
                 stats.gap_nodes += out.gap_lifted as u64;
             } else if !progress && ops == 0 {
@@ -204,5 +299,43 @@ mod tests {
         let mut g = crate::maxflow::tests::clrs();
         let stats = Hybrid::no_heuristics(1_000_000).solve(&mut g).unwrap();
         assert_eq!(stats.value, 23);
+    }
+
+    #[test]
+    fn gap_and_scaling_variants_solve_clrs() {
+        for engine in [
+            Hybrid::default().with_gap(),
+            Hybrid::default().with_scaling(ScalingMode::Delta),
+            Hybrid::default().with_gap().with_scaling(ScalingMode::Delta),
+            Hybrid::with_cycle(3).with_gap(),
+            Hybrid::no_heuristics(1_000_000).with_gap(),
+        ] {
+            let mut g = crate::maxflow::tests::clrs();
+            let stats = engine.solve(&mut g).unwrap();
+            assert_eq!(stats.value, 23, "{}", engine.name());
+            assert_max_flow(&g, 23).unwrap();
+        }
+    }
+
+    #[test]
+    fn device_phase_gap_fires_without_host_heuristics() {
+        // s → a → b → t with the sink arc as bottleneck: with host
+        // heuristics off, only the in-device gap machinery can
+        // shortcut the stranded nodes' climb back to the source.  The
+        // round-robin Hong sweep empties bucket 1 when a relabels past
+        // it, lifting both a and b in one batch.
+        let mut b = crate::graph::csr::NetworkBuilder::new(4, 0, 3);
+        b.add_edge(0, 1, 5, 0);
+        b.add_edge(1, 2, 5, 0);
+        b.add_edge(2, 3, 2, 0);
+        let mut g = b.build().unwrap();
+        let stats = Hybrid::no_heuristics(1_000_000)
+            .with_gap()
+            .solve(&mut g)
+            .unwrap();
+        assert_eq!(stats.value, 2);
+        assert_max_flow(&g, 2).unwrap();
+        assert!(stats.gap_relabels > 0, "stats: {stats:?}");
+        assert!(stats.gap_nodes >= 2 * stats.gap_relabels);
     }
 }

@@ -73,6 +73,19 @@ pub struct LockFree {
     /// CUDA because of the global-memory queue; here it is an ablation
     /// option (off by default, like the paper's final implementation).
     pub arg: bool,
+    /// Gap detection via atomic height-bucket occupancy counters: every
+    /// height transition (worker `fetch_max` relabels and BFS-thread CAS
+    /// raises) moves a node between `bucket[old]` and `bucket[new]`
+    /// atomically, and a distinguished thread polls for an empty bucket
+    /// with occupants above it.  Unlike the sequential engines, an
+    /// instantaneous "bucket d is empty" observation is not stable here
+    /// (a node below can climb into `d` while the sweep runs), so the
+    /// counters act as a cheap *trigger* only: the lift itself is a
+    /// snapshot-BFS raise pass — the same raising-only machinery as ARG,
+    /// which is safe regardless of how stale the trigger was.  Stranded
+    /// nodes (height below `n` at raise time, unreachable from `t` in
+    /// the snapshot) are lifted to `n` in one stripe-parallel sweep.
+    pub gap: bool,
     /// Worker pool the ARG thread's BFS borrows on large instances; the
     /// BFS runs on the striped frontier substrate either way (`None` =
     /// sequential lanes).
@@ -88,6 +101,7 @@ impl Default for LockFree {
         Self {
             threads: 2,
             arg: false,
+            gap: false,
             relabel_pool: None,
             cancel: None,
         }
@@ -108,6 +122,11 @@ impl LockFree {
             arg: true,
             ..Self::default()
         }
+    }
+
+    pub fn with_gap(mut self) -> Self {
+        self.gap = true;
+        self
     }
 
     pub fn with_relabel_pool(mut self, pool: Arc<WorkerPool>) -> Self {
@@ -137,9 +156,16 @@ struct Shared<'a> {
     cap: Vec<AtomicI64>,
     excess: Vec<AtomicI64>,
     height: Vec<AtomicI64>,
+    /// Height-bucket occupancy for heights `0..n` (empty unless the gap
+    /// trigger is enabled).  Every height transition moves a node
+    /// between buckets with two relaxed RMWs (add-then-sub, so a racy
+    /// reader sees a transient double count, never a transient hole).
+    bucket: Vec<AtomicI64>,
     done: AtomicBool,
     pushes: AtomicI64,
     relabels: AtomicI64,
+    gap_events: AtomicI64,
+    gap_lift_nodes: AtomicI64,
     excess_total: i64,
 }
 
@@ -203,10 +229,50 @@ impl<'a> Shared<'a> {
             if best_h >= 4 * n as i64 {
                 return false;
             }
-            self.height[x].fetch_max(best_h + 1, Ordering::Relaxed);
+            let prev = self.height[x].fetch_max(best_h + 1, Ordering::Relaxed);
+            if prev < best_h + 1 {
+                self.bucket_move(prev, best_h + 1);
+            }
             self.relabels.fetch_add(1, Ordering::Relaxed);
             true
         }
+    }
+
+    /// Account a height transition in the occupancy buckets.  Only the
+    /// thread that actually performed the raise (`fetch_max` returning a
+    /// smaller previous value, or a successful CAS) calls this, so each
+    /// transition is counted exactly once.  Increment before decrement:
+    /// a concurrent reader then sees at worst a transient double-count,
+    /// never a spurious empty bucket.
+    #[inline]
+    fn bucket_move(&self, old: i64, new: i64) {
+        if self.bucket.is_empty() {
+            return;
+        }
+        let n = self.bucket.len() as i64;
+        if (0..n).contains(&new) {
+            self.bucket[new as usize].fetch_add(1, Ordering::Relaxed);
+        }
+        if (0..n).contains(&old) {
+            self.bucket[old as usize].fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Racy scan for a gap candidate: the lowest empty bucket `d ≥ 1`
+    /// with some occupied bucket above it (still below `n`).  Purely a
+    /// trigger — both false positives (transient states) and misses
+    /// (caught on the next poll) are harmless.
+    fn find_gap(&self) -> Option<usize> {
+        let mut gap = None;
+        for d in 1..self.bucket.len() {
+            let c = self.bucket[d].load(Ordering::Relaxed);
+            match gap {
+                None if c == 0 => gap = Some(d),
+                Some(_) if c > 0 => return gap,
+                _ => {}
+            }
+        }
+        None
     }
 
     fn terminated(&self) -> bool {
@@ -218,8 +284,10 @@ impl<'a> Shared<'a> {
     }
 
     /// One ARG pass (§4.5) with the classic queue BFS — the fast shape
-    /// on small graphs and the fallback when no pool is lent.
-    fn arg_pass_seq(&self, n: usize) {
+    /// on small graphs and the fallback when no pool is lent.  Returns
+    /// the number of stranded nodes lifted out of the tracked height
+    /// range (raised from `< n` to `n`).
+    fn arg_pass_seq(&self, n: usize) -> u64 {
         use std::collections::VecDeque;
         let (s, t) = (self.g.source(), self.g.sink());
         // The snapshot is heuristic (any plausible residual graph will
@@ -238,28 +306,36 @@ impl<'a> Shared<'a> {
                 }
             }
         }
+        let mut lifted = 0u64;
         for v in 0..n {
             if v == s || v == t {
                 continue;
             }
             let target = if dist[v] >= 0 { dist[v] } else { n as i64 };
-            self.raise_height(v, target);
+            if let Some(prev) = self.raise_height(v, target) {
+                if prev < n as i64 && target >= n as i64 {
+                    lifted += 1;
+                }
+            }
         }
+        lifted
     }
 
     /// Monotone raise via CAS loop; no payload travels with the height,
-    /// so Relaxed orderings are enough.
-    fn raise_height(&self, v: usize, target: i64) {
+    /// so Relaxed orderings are enough.  Returns `Some(previous)` when
+    /// this call performed the raise.
+    fn raise_height(&self, v: usize, target: i64) -> Option<i64> {
         loop {
             let cur = self.height[v].load(Ordering::Relaxed);
             if cur >= target {
-                break;
+                return None;
             }
             if self.height[v]
                 .compare_exchange(cur, target, Ordering::Relaxed, Ordering::Relaxed)
                 .is_ok()
             {
-                break;
+                self.bucket_move(cur, target);
+                return Some(cur);
             }
         }
     }
@@ -276,7 +352,7 @@ impl<'a> Shared<'a> {
     /// per-node atomics, so stripe order is irrelevant.  Only used on
     /// large instances with a lent pool — below that the queue BFS wins
     /// (same rationale as `global_relabel_auto`).
-    fn arg_pass_striped(&self, n: usize, scratch: &mut ArgScratch, lanes: &Lanes<'_>) {
+    fn arg_pass_striped(&self, n: usize, scratch: &mut ArgScratch, lanes: &Lanes<'_>) -> u64 {
         let (s, t) = (self.g.source(), self.g.sink());
         let stripes = Stripes::new(n, lanes.width() * 2);
         let ArgScratch {
@@ -308,9 +384,12 @@ impl<'a> Shared<'a> {
         for (o, chunk) in dist.chunks(sl).enumerate() {
             tasks.push((o * sl, chunk));
         }
+        let lifted_total = AtomicI64::new(0);
         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
         for group in deal(tasks, lanes.width()) {
+            let lifted_total = &lifted_total;
             jobs.push(Box::new(move || {
+                let mut lifted = 0i64;
                 for (base, chunk) in group {
                     for (lc, &d) in chunk.iter().enumerate() {
                         let v = base + lc;
@@ -318,18 +397,30 @@ impl<'a> Shared<'a> {
                             continue;
                         }
                         let target = if d >= 0 { d as i64 } else { n as i64 };
-                        self.raise_height(v, target);
+                        if let Some(prev) = self.raise_height(v, target) {
+                            if prev < n as i64 && target >= n as i64 {
+                                lifted += 1;
+                            }
+                        }
                     }
+                }
+                if lifted > 0 {
+                    lifted_total.fetch_add(lifted, Ordering::Relaxed);
                 }
             }));
         }
         lanes.run(jobs);
+        lifted_total.load(Ordering::Relaxed) as u64
     }
 }
 
 impl MaxFlowSolver for LockFree {
     fn name(&self) -> &'static str {
-        "lockfree-hong"
+        if self.gap {
+            "lockfree-hong+gap"
+        } else {
+            "lockfree-hong"
+        }
     }
 
     fn solve(&self, g: &mut FlowNetwork) -> Result<FlowStats> {
@@ -353,14 +444,27 @@ impl MaxFlowSolver for LockFree {
         let mut height0 = vec![0i64; n];
         height0[s] = n as i64;
 
+        // Occupancy buckets only exist when the gap trigger is on; the
+        // initial state has every node except the source at height 0.
+        let bucket0 = if self.gap {
+            let b: Vec<AtomicI64> = (0..n).map(|_| AtomicI64::new(0)).collect();
+            b[0].store(n as i64 - 1, Ordering::Relaxed);
+            b
+        } else {
+            Vec::new()
+        };
+
         let shared = Shared {
             g,
             cap: cap0.into_iter().map(AtomicI64::new).collect(),
             excess: excess0.into_iter().map(AtomicI64::new).collect(),
             height: height0.into_iter().map(AtomicI64::new).collect(),
+            bucket: bucket0,
             done: AtomicBool::new(false),
             pushes: AtomicI64::new(0),
             relabels: AtomicI64::new(0),
+            gap_events: AtomicI64::new(0),
+            gap_lift_nodes: AtomicI64::new(0),
             excess_total,
         };
 
@@ -368,14 +472,18 @@ impl MaxFlowSolver for LockFree {
         let cancel = self.cancel.as_ref();
         let was_cancelled = AtomicBool::new(false);
         std::thread::scope(|scope| {
-            if self.arg {
-                // The distinguished ARG thread (§4.5) runs BFS passes
-                // concurrently until the workers finish — striped on the
-                // lent pool for large instances, the classic queue BFS
-                // otherwise (the striped pass's per-level batches only
-                // pay off with real lanes and enough nodes).
+            if self.arg || self.gap {
+                // The distinguished relabel thread: with ARG it runs BFS
+                // passes back-to-back (§4.5); with the gap trigger it
+                // polls the occupancy buckets and runs a pass only when
+                // a candidate gap shows up.  Both lift via the same
+                // raising-only snapshot pass — striped on the lent pool
+                // for large instances, the classic queue BFS otherwise
+                // (the striped pass's per-level batches only pay off
+                // with real lanes and enough nodes).
                 let shared = &shared;
                 let relabel_pool = self.relabel_pool.clone();
+                let (arg, gap) = (self.arg, self.gap);
                 scope.spawn(move || {
                     let striped = relabel_pool.is_some()
                         && n >= super::global_relabel::STRIPED_RELABEL_MIN_NODES;
@@ -384,18 +492,26 @@ impl MaxFlowSolver for LockFree {
                         Some(p) if striped => Lanes::Pool(p.as_ref()),
                         _ => Lanes::Seq,
                     };
-                    // ARG passes run back-to-back until the workers
-                    // finish; accumulate their time locally and flush
+                    // Passes accumulate their time locally and flush
                     // once — a registry touch per pass would contend.
                     let mut arg_secs = 0.0;
                     while !shared.done.load(Ordering::Acquire) {
-                        let t = crate::util::Timer::start();
-                        if striped {
-                            shared.arg_pass_striped(n, &mut scratch, &lanes);
-                        } else {
-                            shared.arg_pass_seq(n);
+                        let gap_hit = gap && shared.find_gap().is_some();
+                        if arg || gap_hit {
+                            let t = crate::util::Timer::start();
+                            let lifted = if striped {
+                                shared.arg_pass_striped(n, &mut scratch, &lanes)
+                            } else {
+                                shared.arg_pass_seq(n)
+                            };
+                            arg_secs += t.elapsed();
+                            if gap_hit {
+                                shared.gap_events.fetch_add(1, Ordering::Relaxed);
+                                shared
+                                    .gap_lift_nodes
+                                    .fetch_add(lifted as i64, Ordering::Relaxed);
+                            }
                         }
-                        arg_secs += t.elapsed();
                         std::thread::yield_now();
                     }
                     crate::obs::record_phase_secs(
@@ -474,9 +590,9 @@ impl MaxFlowSolver for LockFree {
             value,
             pushes: shared.pushes.load(Ordering::Relaxed) as u64,
             relabels: shared.relabels.load(Ordering::Relaxed) as u64,
-            global_relabels: 0,
-            gap_nodes: 0,
-            rounds: 0,
+            gap_nodes: shared.gap_lift_nodes.load(Ordering::Relaxed) as u64,
+            gap_relabels: shared.gap_events.load(Ordering::Relaxed) as u64,
+            ..FlowStats::default()
         };
         g.set_capacities(cap);
         Ok(stats)
@@ -561,6 +677,49 @@ mod tests {
                 let mut g = base.clone();
                 let stats = LockFree::with_threads(threads).solve(&mut g).unwrap();
                 assert_eq!(stats.value, want, "case={case} threads={threads}");
+                assert_max_flow(&g, stats.value).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn gap_variant_matches_reference() {
+        for threads in [1, 2, 4] {
+            let mut g = crate::maxflow::tests::clrs();
+            let stats = LockFree::with_threads(threads)
+                .with_gap()
+                .solve(&mut g)
+                .unwrap();
+            assert_eq!(stats.value, 23, "gap threads={threads}");
+            assert_max_flow(&g, 23).unwrap();
+        }
+    }
+
+    #[test]
+    fn gap_on_random_networks() {
+        // The gap trigger only ever schedules raising-only snapshot
+        // passes, so every instance must stay exact — with and without
+        // ARG running alongside.
+        use crate::graph::csr::NetworkBuilder;
+        let mut rng = crate::util::Rng::seeded(777);
+        for case in 0..8 {
+            let nn = 5 + rng.index(10);
+            let mut b = NetworkBuilder::new(nn, 0, nn - 1);
+            for _ in 0..3 * nn {
+                let u = rng.index(nn);
+                let v = (u + 1 + rng.index(nn - 1)) % nn;
+                b.add_edge(u, v, rng.range_i64(0, 15), 0);
+            }
+            let base = b.build().unwrap();
+            let mut g0 = base.clone();
+            let want = crate::maxflow::dinic::Dinic.solve(&mut g0).unwrap().value;
+            for engine in [
+                LockFree::with_threads(2).with_gap(),
+                LockFree::with_arg(2).with_gap(),
+            ] {
+                let mut g = base.clone();
+                let stats = engine.solve(&mut g).unwrap();
+                assert_eq!(stats.value, want, "case={case} {}", engine.name());
                 assert_max_flow(&g, stats.value).unwrap();
             }
         }

@@ -35,6 +35,9 @@ pub struct FlowStats {
     pub global_relabels: u64,
     /// Nodes lifted by gap relabeling.
     pub gap_nodes: u64,
+    /// Gap-relabel events (one per bucket that emptied and triggered a
+    /// batched lift; `gap_nodes` counts the lifted nodes).
+    pub gap_relabels: u64,
     /// Host rounds (hybrid engines) or BFS phases (augmenting engines).
     pub rounds: u64,
 }
@@ -42,6 +45,41 @@ pub struct FlowStats {
 impl FlowStats {
     pub fn work(&self) -> u64 {
         self.pushes + self.relabels
+    }
+}
+
+/// Excess-scaling discipline for the sequential push-relabel engines.
+///
+/// `Delta` runs the discharge loop in Δ-phases: only nodes with excess
+/// ≥ Δ are admitted to the active set, and Δ halves each time the set
+/// drains.  Push amounts are untouched, so the computed flow (and the
+/// final residual network) is identical to `Off` — only the discharge
+/// order and the op counters move.  Phases are reported in
+/// [`FlowStats::rounds`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScalingMode {
+    /// Plain FIFO/highest-label admission (the default; bit-exact with
+    /// the pre-scaling engines).
+    #[default]
+    Off,
+    /// Δ-phase excess scaling.
+    Delta,
+}
+
+impl ScalingMode {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "off" => Ok(ScalingMode::Off),
+            "delta" => Ok(ScalingMode::Delta),
+            other => anyhow::bail!("unknown scaling mode {other:?} (expected off|delta)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ScalingMode::Off => "off",
+            ScalingMode::Delta => "delta",
+        }
     }
 }
 
@@ -71,7 +109,11 @@ pub fn all_engines() -> Vec<Box<dyn MaxFlowSolver>> {
 
 /// All engines, with the push-relabel family borrowing `pool` for their
 /// periodic global relabel (striped BFS on large instances; identical
-/// results, see [`global_relabel::global_relabel_auto`]).
+/// results, see [`global_relabel::global_relabel_auto`]).  The list
+/// includes the opt-in heuristic variants (gap relabeling, Δ-phase
+/// excess scaling) so the differential oracles in `prop_maxflow` cover
+/// them alongside the defaults; the order is fixed and shared between
+/// the pooled and unpooled lists so they can be zipped pairwise.
 pub fn all_engines_with(
     pool: Option<std::sync::Arc<crate::service::pool::WorkerPool>>,
 ) -> Vec<Box<dyn MaxFlowSolver>> {
@@ -88,10 +130,16 @@ pub fn all_engines_with(
     vec![
         Box::new(edmonds_karp::EdmondsKarp),
         Box::new(dinic::Dinic),
-        Box::new(fifo),
-        Box::new(highest),
-        Box::new(lockfree),
-        Box::new(hybrid),
+        Box::new(fifo.clone()),
+        Box::new(fifo.clone().with_gap()),
+        Box::new(fifo.clone().with_scaling(ScalingMode::Delta)),
+        Box::new(fifo.with_gap().with_scaling(ScalingMode::Delta)),
+        Box::new(highest.clone()),
+        Box::new(highest.with_scaling(ScalingMode::Delta)),
+        Box::new(lockfree.clone()),
+        Box::new(lockfree.with_gap()),
+        Box::new(hybrid.clone()),
+        Box::new(hybrid.with_gap().with_scaling(ScalingMode::Delta)),
     ]
 }
 

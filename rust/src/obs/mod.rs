@@ -45,6 +45,12 @@ pub fn record_flow_stats(engine: &str, stats: &crate::maxflow::FlowStats) {
         reg.counter(&format!("flowmatch_engine_gap_nodes_total{{engine=\"{engine}\"}}"))
             .add(stats.gap_nodes);
     }
+    if stats.gap_relabels > 0 {
+        reg.counter(&format!(
+            "flowmatch_engine_gap_relabels_total{{engine=\"{engine}\"}}"
+        ))
+        .add(stats.gap_relabels);
+    }
     reg.counter(&format!("flowmatch_engine_solves_total{{engine=\"{engine}\"}}"))
         .inc();
 }

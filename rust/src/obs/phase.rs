@@ -75,6 +75,11 @@ pub struct PhaseBreakdown {
     pub pushes: u64,
     pub relabels: u64,
     pub global_relabels: u64,
+    /// Gap-relabel events: a height bucket emptied and the stranded
+    /// nodes above it were lifted in one batch.
+    pub gap_relabels: u64,
+    /// Weighted stripe-boundary re-cuts (frontier levels / host rounds).
+    pub rebalances: u64,
     pub waves: u64,
 }
 
@@ -105,6 +110,8 @@ impl PhaseBreakdown {
         self.pushes += other.pushes;
         self.relabels += other.relabels;
         self.global_relabels += other.global_relabels;
+        self.gap_relabels += other.gap_relabels;
+        self.rebalances += other.rebalances;
         self.waves += other.waves;
     }
 
@@ -114,7 +121,13 @@ impl PhaseBreakdown {
     }
 
     pub fn is_zero(&self) -> bool {
-        self.total_seconds() == 0.0 && self.pushes == 0 && self.relabels == 0 && self.waves == 0
+        self.total_seconds() == 0.0
+            && self.pushes == 0
+            && self.relabels == 0
+            && self.global_relabels == 0
+            && self.gap_relabels == 0
+            && self.rebalances == 0
+            && self.waves == 0
     }
 
     /// `(phase name, seconds)` pairs in display order, zeros included.
@@ -231,6 +244,18 @@ pub fn record_phases(family: &str, b: &PhaseBreakdown) {
         ))
         .add(b.global_relabels);
     }
+    if b.gap_relabels > 0 {
+        reg.counter(&format!(
+            "flowmatch_engine_gap_relabels_total{{family=\"{family}\"}}"
+        ))
+        .add(b.gap_relabels);
+    }
+    if b.rebalances > 0 {
+        reg.counter(&format!(
+            "flowmatch_engine_rebalances_total{{family=\"{family}\"}}"
+        ))
+        .add(b.rebalances);
+    }
     if b.waves > 0 {
         reg.counter(&format!("flowmatch_engine_waves_total{{family=\"{family}\"}}"))
             .add(b.waves);
@@ -284,14 +309,22 @@ mod tests {
         let mut b = PhaseBreakdown::default();
         b.add(Phase::WaveCompute, 0.125);
         b.pushes = 7;
+        b.gap_relabels = 3;
+        b.rebalances = 2;
         let reg = crate::obs::global();
         let phase_name =
             "flowmatch_phase_micros_total{family=\"test_phase\",phase=\"wave_compute\"}";
         let push_name = "flowmatch_engine_pushes_total{family=\"test_phase\"}";
+        let gap_name = "flowmatch_engine_gap_relabels_total{family=\"test_phase\"}";
+        let reb_name = "flowmatch_engine_rebalances_total{family=\"test_phase\"}";
         let before_phase = reg.counter_value(phase_name).unwrap_or(0);
         let before_push = reg.counter_value(push_name).unwrap_or(0);
+        let before_gap = reg.counter_value(gap_name).unwrap_or(0);
+        let before_reb = reg.counter_value(reb_name).unwrap_or(0);
         record_phases("test_phase", &b);
         assert_eq!(reg.counter_value(phase_name), Some(before_phase + 125_000));
         assert_eq!(reg.counter_value(push_name), Some(before_push + 7));
+        assert_eq!(reg.counter_value(gap_name), Some(before_gap + 3));
+        assert_eq!(reg.counter_value(reb_name), Some(before_reb + 2));
     }
 }

@@ -4,7 +4,10 @@
 //! order, CSR node ids) into contiguous equal-length ranges, so every
 //! per-item array can be lent to workers as disjoint `chunks_mut`
 //! slices — the same trick the tiled wave engine uses for its state
-//! planes.
+//! planes.  [`StripeCuts`] is the runtime form of that partition:
+//! explicit boundary positions, so the stripes can also be *re-cut*
+//! from observed workload ([`Stripes::rebalance`]) without changing
+//! their count.
 //!
 //! [`StripedFrontier`] runs a level-synchronous multi-source BFS over
 //! that partition.  Each level is two (logically; three with the parity
@@ -15,21 +18,27 @@
 //!    stripe are committed immediately (distance set, queued for the
 //!    next level); targets in a foreign stripe go to a per-(producer ×
 //!    owner) outbox — no shared writes anywhere.
-//! 2. **Commit** — the parity-coloured two-pass: stripes of even index
-//!    drain the outbox columns addressed to them, then the odd stripes.
-//!    Only the owner ever writes its distance chunk or queue, so both
-//!    passes are race-free; the parity split mirrors the border
-//!    reconciliation protocol of `gridflow::par_wave` (even tiles then
-//!    odd tiles own their borders) so the two layers share one shape.
+//! 2. **Commit** — owners drain the outbox columns addressed to them.
+//!    Under [`CommitMode::TwoPass`] this is the parity-coloured
+//!    even-then-odd protocol mirroring `gridflow::par_wave`'s border
+//!    reconciliation; under [`CommitMode::Merged`] all owners run in
+//!    one batch (every write is owner-exclusive and the outboxes are
+//!    immutable for the whole phase, so the split is structural only).
+//!
+//! With [`StripeBalance::Weighted`], the boundaries are re-cut between
+//! levels from the previous level's per-stripe queue sizes (prefix-sum
+//! interpolation), so a frontier concentrated in one region still
+//! spreads across all lanes.
 //!
 //! Bit-exactness with a sequential queue BFS is structural: BFS
 //! distances are the unique shortest-path distances from the seed set,
 //! independent of visit order, and duplicate candidates are deduped by
 //! the owner's distance check.  The differential tests in
 //! `gridflow::host`, `maxflow::global_relabel`, and
-//! `tests/prop_par_wave.rs` pin this for every consumer.
+//! `tests/prop_par_wave.rs` pin this for every consumer — across both
+//! balance and commit modes.
 
-use super::{deal, Lanes};
+use super::{deal, CommitMode, Lanes, ParTuning, StripeBalance};
 
 /// A contiguous partition of `0..len` into equal-length stripes (the
 /// last stripe may be ragged).  `stripe_len` is the chunk size every
@@ -88,10 +97,153 @@ impl Stripes {
     pub fn owner(&self, idx: usize) -> usize {
         idx / self.stripe_len
     }
+
+    /// The runtime cut positions of the uniform partition.
+    pub fn cuts(&self) -> StripeCuts {
+        StripeCuts::uniform(*self)
+    }
+
+    /// Re-cut the partition so each stripe carries about the same
+    /// weight, where `weights[s]` is the observed occupancy of stripe
+    /// `s` of the *uniform* partition (e.g. its frontier queue size).
+    /// The stripe count is preserved; see [`StripeCuts::rebalance`].
+    pub fn rebalance(&self, weights: &[u64]) -> StripeCuts {
+        self.cuts().rebalance(weights, 1)
+    }
+}
+
+/// Explicit stripe boundaries: `cuts[s]..cuts[s+1]` is stripe `s`.
+/// `cuts[0] == 0`, `cuts[n_stripes] == len`, non-decreasing (stripes
+/// may be empty after an aggressive rebalance; empty stripes simply
+/// own nothing).  The uniform cuts of a [`Stripes`] reproduce its
+/// `chunks_mut(stripe_len)` boundaries exactly, so `Fixed` mode is
+/// bit-identical to the historical partition.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StripeCuts {
+    len: usize,
+    cuts: Vec<usize>,
+}
+
+impl Default for StripeCuts {
+    fn default() -> Self {
+        Self { len: 0, cuts: vec![0] }
+    }
+}
+
+impl StripeCuts {
+    /// The uniform partition of `stripes`, boundary-identical to
+    /// `chunks_mut(stripes.stripe_len())`.
+    pub fn uniform(stripes: Stripes) -> Self {
+        let ns = stripes.n_stripes();
+        let mut cuts = Vec::with_capacity(ns + 1);
+        cuts.push(0);
+        for s in 1..=ns {
+            cuts.push((s * stripes.stripe_len()).min(stripes.len()));
+        }
+        Self {
+            len: stripes.len(),
+            cuts,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn n_stripes(&self) -> usize {
+        self.cuts.len() - 1
+    }
+
+    /// Boundary positions (`n_stripes + 1` entries).
+    pub fn bounds(&self) -> &[usize] {
+        &self.cuts
+    }
+
+    pub fn start(&self, s: usize) -> usize {
+        self.cuts[s]
+    }
+
+    pub fn range(&self, s: usize) -> std::ops::Range<usize> {
+        self.cuts[s]..self.cuts[s + 1]
+    }
+
+    /// Which stripe owns item `idx`.  With possibly-empty stripes the
+    /// owner is the unique stripe whose half-open range contains `idx`.
+    #[inline]
+    pub fn owner(&self, idx: usize) -> usize {
+        debug_assert!(idx < self.len);
+        let inner = &self.cuts[1..self.cuts.len() - 1];
+        inner.partition_point(|&b| b <= idx)
+    }
+
+    /// Lend `slice` out as one disjoint `&mut` chunk per stripe
+    /// (the cut-aware generalisation of `chunks_mut(stripe_len)`).
+    pub fn split_mut<'a, T>(&self, mut slice: &'a mut [T]) -> Vec<&'a mut [T]> {
+        debug_assert_eq!(slice.len(), self.len);
+        let mut out = Vec::with_capacity(self.n_stripes());
+        let mut prev = 0usize;
+        for &c in &self.cuts[1..] {
+            let (head, tail) = slice.split_at_mut(c - prev);
+            out.push(head);
+            slice = tail;
+            prev = c;
+        }
+        out
+    }
+
+    /// Re-cut so each stripe carries about `total_weight / n_stripes`,
+    /// where `weights[s]` is the observed occupancy of *this*
+    /// partition's stripe `s`.  Weight is interpolated uniformly inside
+    /// each current stripe (the prefix-sum-over-queue-sizes scheme of
+    /// Hsieh et al., arXiv:2404.00270), and every new boundary is
+    /// rounded down to a multiple of `align` (pass the row width to
+    /// keep grid stripes row-aligned; 1 for item granularity).  The
+    /// stripe count never changes; zero total weight returns the
+    /// partition unchanged.
+    pub fn rebalance(&self, weights: &[u64], align: usize) -> StripeCuts {
+        let ns = self.n_stripes();
+        let align = align.max(1);
+        debug_assert_eq!(weights.len(), ns);
+        let total: u64 = weights.iter().sum();
+        if ns <= 1 || total == 0 {
+            return self.clone();
+        }
+        let mut cuts = Vec::with_capacity(ns + 1);
+        cuts.push(0usize);
+        let mut acc = 0u64; // cumulative weight strictly before stripe `i`
+        let mut i = 0usize;
+        for j in 1..ns {
+            let target = (total * j as u64).div_ceil(ns as u64);
+            while i < ns && acc + weights[i] < target {
+                acc += weights[i];
+                i += 1;
+            }
+            let x = if i >= ns {
+                self.len
+            } else {
+                let span = (self.cuts[i + 1] - self.cuts[i]) as u128;
+                let need = (target - acc) as u128;
+                self.cuts[i] + ((need * span) / weights[i].max(1) as u128) as usize
+            };
+            let x = (x / align) * align;
+            let prev = *cuts.last().unwrap();
+            cuts.push(x.clamp(prev, self.len));
+        }
+        cuts.push(self.len);
+        StripeCuts {
+            len: self.len,
+            cuts,
+        }
+    }
 }
 
 struct ExpandTask<'a> {
     base: usize,
+    cuts: &'a StripeCuts,
     cur: &'a mut Vec<u32>,
     nxt: &'a mut Vec<u32>,
     /// This producer's outbox row: one box per owner stripe.
@@ -115,12 +267,17 @@ struct CommitTask<'a> {
 #[derive(Debug, Default)]
 pub struct StripedFrontier {
     stripes: Stripes,
+    cuts: StripeCuts,
+    tuning: ParTuning,
+    rebalances: u64,
     current: Vec<Vec<u32>>,
     next: Vec<Vec<u32>>,
     /// Producer-major: `outbox[p * n_stripes + o]` holds targets stripe
     /// `p` discovered that stripe `o` owns.
     outbox: Vec<Vec<u32>>,
     counts: Vec<u64>,
+    weights: Vec<u64>,
+    redeal: Vec<u32>,
 }
 
 impl Default for Stripes {
@@ -145,10 +302,28 @@ impl StripedFrontier {
         self.stripes
     }
 
+    /// The balance/commit tuning for subsequent runs.  Sticky across
+    /// `reset`; defaults to fixed stripes + the parity two-pass.
+    pub fn set_tuning(&mut self, tuning: ParTuning) {
+        self.tuning = tuning;
+    }
+
+    pub fn tuning(&self) -> ParTuning {
+        self.tuning
+    }
+
+    /// Number of weighted boundary re-cuts performed since the last
+    /// `take_rebalances` (0 in `Fixed` mode), drained for telemetry.
+    pub fn take_rebalances(&mut self) -> u64 {
+        std::mem::take(&mut self.rebalances)
+    }
+
     /// Rebind to a partition and clear every queue/outbox (buffers are
-    /// kept when the stripe count is unchanged).
+    /// kept when the stripe count is unchanged).  Boundaries start
+    /// uniform; `Weighted` runs re-cut them level by level.
     pub fn reset(&mut self, stripes: Stripes) {
         self.stripes = stripes;
+        self.cuts = StripeCuts::uniform(stripes);
         let ns = stripes.n_stripes();
         self.current.iter_mut().for_each(Vec::clear);
         self.next.iter_mut().for_each(Vec::clear);
@@ -163,7 +338,7 @@ impl StripedFrontier {
     /// Enqueue a seed item for level 0 of the run.  The caller must
     /// have already assigned its distance (all seeds share one level).
     pub fn seed(&mut self, idx: usize) {
-        let o = self.stripes.owner(idx);
+        let o = self.cuts.owner(idx);
         self.current[o].push(idx as u32);
     }
 
@@ -186,8 +361,7 @@ impl StripedFrontier {
     where
         F: Fn(usize, &mut dyn FnMut(usize)) + Sync,
     {
-        let ns = self.stripes.n_stripes();
-        let sl = self.stripes.stripe_len();
+        let ns = self.cuts.n_stripes();
         debug_assert_eq!(dist.len(), self.stripes.len());
         let width = lanes.width();
         let mut level = seed_level;
@@ -206,18 +380,20 @@ impl StripedFrontier {
 
             // --- Expand: parallel over producer stripes ------------------
             {
+                let cuts = &self.cuts;
                 let mut tasks = Vec::with_capacity(ns);
                 let iter = self
                     .current
                     .iter_mut()
                     .zip(self.next.iter_mut())
                     .zip(self.outbox.chunks_mut(ns))
-                    .zip(dist.chunks_mut(sl))
+                    .zip(cuts.split_mut(dist))
                     .zip(self.counts.iter_mut())
                     .enumerate();
                 for (s, ((((cur, nxt), row), dist), count)) in iter {
                     tasks.push(ExpandTask {
-                        base: s * sl,
+                        base: cuts.start(s),
+                        cuts,
                         cur,
                         nxt,
                         row,
@@ -231,6 +407,7 @@ impl StripedFrontier {
                         for task in group {
                             let ExpandTask {
                                 base,
+                                cuts,
                                 cur,
                                 nxt,
                                 row,
@@ -249,7 +426,7 @@ impl StripedFrontier {
                                         }
                                     }
                                 } else {
-                                    row[v / sl].push(v as u32);
+                                    row[cuts.owner(v)].push(v as u32);
                                 }
                             };
                             for &u in cur.iter() {
@@ -262,34 +439,38 @@ impl StripedFrontier {
                 lanes.run(jobs);
             }
 
-            // --- Commit: the parity-coloured two-pass --------------------
-            // Owners drain the outbox columns addressed to them — even
-            // stripes first, then odd.  Writes stay owner-exclusive.
+            // --- Commit: owners drain their outbox columns ---------------
+            // Writes stay owner-exclusive in either mode; `TwoPass` is
+            // the parity-coloured even-then-odd oracle protocol,
+            // `Merged` runs every owner in one batch (one barrier).
             {
                 let outbox = &self.outbox;
-                let mut even = Vec::new();
-                let mut odd = Vec::new();
+                let cuts = &self.cuts;
+                let mut tasks = Vec::with_capacity(ns);
                 let iter = self
                     .next
                     .iter_mut()
-                    .zip(dist.chunks_mut(sl))
+                    .zip(cuts.split_mut(dist))
                     .zip(self.counts.iter_mut())
                     .enumerate();
                 for (o, ((nxt, dist), count)) in iter {
-                    let task = CommitTask {
+                    tasks.push(CommitTask {
                         owner: o,
-                        base: o * sl,
+                        base: cuts.start(o),
                         nxt,
                         dist,
                         count,
-                    };
-                    if o % 2 == 0 {
-                        even.push(task);
-                    } else {
-                        odd.push(task);
-                    }
+                    });
                 }
-                for pass in [even, odd] {
+                let passes: Vec<Vec<CommitTask<'_>>> = match self.tuning.commit {
+                    CommitMode::Merged => vec![tasks],
+                    CommitMode::TwoPass => {
+                        let (even, odd): (Vec<_>, Vec<_>) =
+                            tasks.into_iter().partition(|t| t.owner % 2 == 0);
+                        vec![even, odd]
+                    }
+                };
+                for pass in passes {
                     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
                     for group in deal(pass, width) {
                         jobs.push(Box::new(move || {
@@ -317,11 +498,40 @@ impl StripedFrontier {
                 b.clear();
             }
             std::mem::swap(&mut self.current, &mut self.next);
+            if self.tuning.balance == StripeBalance::Weighted && ns > 1 {
+                self.rebalance_level();
+            }
             level = next_level;
         }
         let total = self.counts.iter().sum();
         self.counts.iter_mut().for_each(|c| *c = 0);
         total
+    }
+
+    /// Weighted mode, between levels: re-cut the boundaries from the
+    /// next level's per-stripe queue sizes and re-deal queued items to
+    /// their new owners.  Distances are untouched, so the BFS output is
+    /// identical — only the partition of the coming level's work moves.
+    fn rebalance_level(&mut self) {
+        self.weights.clear();
+        self.weights
+            .extend(self.current.iter().map(|q| q.len() as u64));
+        let new_cuts = self.cuts.rebalance(&self.weights, 1);
+        if new_cuts == self.cuts {
+            return;
+        }
+        self.redeal.clear();
+        for q in &mut self.current {
+            self.redeal.extend_from_slice(q);
+            q.clear();
+        }
+        self.cuts = new_cuts;
+        self.rebalances += 1;
+        let redeal = std::mem::take(&mut self.redeal);
+        for &v in &redeal {
+            self.current[self.cuts.owner(v as usize)].push(v);
+        }
+        self.redeal = redeal;
     }
 }
 
@@ -369,10 +579,12 @@ mod tests {
         seeds: &[usize],
         skip: Option<usize>,
         stripes: Stripes,
+        tuning: ParTuning,
         lanes: &Lanes<'_>,
     ) -> (Vec<i32>, u64) {
         let mut dist = vec![-1i32; adj.len()];
         let mut fr = StripedFrontier::new();
+        fr.set_tuning(tuning);
         fr.reset(stripes);
         for &s in seeds {
             dist[s] = 0;
@@ -387,6 +599,16 @@ mod tests {
         (dist, assigned)
     }
 
+    fn all_tunings() -> Vec<ParTuning> {
+        let mut out = Vec::new();
+        for balance in [StripeBalance::Fixed, StripeBalance::Weighted] {
+            for commit in [CommitMode::TwoPass, CommitMode::Merged] {
+                out.push(ParTuning { balance, commit });
+            }
+        }
+        out
+    }
+
     #[test]
     fn matches_queue_bfs_across_stripe_counts_and_lanes() {
         let adj = ring_with_chords(97);
@@ -394,11 +616,19 @@ mod tests {
         let pool = WorkerPool::new(3);
         for n_stripes in [1, 2, 3, 5, 16, 97] {
             for lanes in [Lanes::Seq, Lanes::Scoped { threads: 3 }, Lanes::Pool(&pool)] {
-                let (dist, assigned) =
-                    run_striped(&adj, &[0, 40], None, Stripes::new(97, n_stripes), &lanes);
-                assert_eq!(dist, want, "stripes={n_stripes}");
-                let reach = want.iter().filter(|&&d| d >= 0).count() as u64;
-                assert_eq!(assigned + 2, reach, "stripes={n_stripes}");
+                for tuning in all_tunings() {
+                    let (dist, assigned) = run_striped(
+                        &adj,
+                        &[0, 40],
+                        None,
+                        Stripes::new(97, n_stripes),
+                        tuning,
+                        &lanes,
+                    );
+                    assert_eq!(dist, want, "stripes={n_stripes} tuning={tuning:?}");
+                    let reach = want.iter().filter(|&&d| d >= 0).count() as u64;
+                    assert_eq!(assigned + 2, reach, "stripes={n_stripes} tuning={tuning:?}");
+                }
             }
         }
     }
@@ -410,7 +640,14 @@ mod tests {
         let want = bfs_oracle(&adj, &[0], Some(1));
         assert_eq!(want, vec![0, 1, -1, -1]);
         for n_stripes in [1, 2, 4] {
-            let (dist, _) = run_striped(&adj, &[0], Some(1), Stripes::new(4, n_stripes), &Lanes::Seq);
+            let (dist, _) = run_striped(
+                &adj,
+                &[0],
+                Some(1),
+                Stripes::new(4, n_stripes),
+                ParTuning::default(),
+                &Lanes::Seq,
+            );
             assert_eq!(dist, want, "stripes={n_stripes}");
         }
     }
@@ -419,10 +656,50 @@ mod tests {
     fn cross_stripe_duplicates_dedupe_to_one_assignment() {
         // Two nodes in stripe 0 both point at the same node in stripe 1.
         let adj = vec![vec![2], vec![2], vec![]];
-        let (dist, assigned) =
-            run_striped(&adj, &[0, 1], None, Stripes::with_stripe_len(3, 2), &Lanes::Seq);
-        assert_eq!(dist, vec![0, 0, 1]);
-        assert_eq!(assigned, 1);
+        for tuning in all_tunings() {
+            let (dist, assigned) = run_striped(
+                &adj,
+                &[0, 1],
+                None,
+                Stripes::with_stripe_len(3, 2),
+                tuning,
+                &Lanes::Seq,
+            );
+            assert_eq!(dist, vec![0, 0, 1], "tuning={tuning:?}");
+            assert_eq!(assigned, 1, "tuning={tuning:?}");
+        }
+    }
+
+    #[test]
+    fn weighted_runs_rebalance_on_skewed_frontiers() {
+        // A long path starting in stripe 0 keeps the whole frontier in
+        // one uniform stripe; weighted mode must re-cut at least once
+        // and still match the oracle.
+        let n = 64;
+        let mut adj = vec![Vec::new(); n];
+        for v in 0..n - 1 {
+            adj[v].push(v + 1);
+            adj[v + 1].push(v);
+        }
+        let want = bfs_oracle(&adj, &[0], None);
+        let mut dist = vec![-1i32; n];
+        let mut fr = StripedFrontier::new();
+        fr.set_tuning(ParTuning {
+            balance: StripeBalance::Weighted,
+            commit: CommitMode::Merged,
+        });
+        fr.reset(Stripes::new(n, 4));
+        dist[0] = 0;
+        fr.seed(0);
+        let neigh = |u: usize, emit: &mut dyn FnMut(usize)| {
+            for &v in &adj[u] {
+                emit(v);
+            }
+        };
+        fr.run(&mut dist, 0, None, &neigh, &Lanes::Scoped { threads: 3 });
+        assert_eq!(dist, want);
+        assert!(fr.take_rebalances() > 0, "skewed frontier never re-cut");
+        assert_eq!(fr.take_rebalances(), 0, "take must drain");
     }
 
     #[test]
@@ -437,5 +714,66 @@ mod tests {
         let s = Stripes::new(7, 16);
         assert_eq!(s.stripe_len(), 1);
         assert_eq!(s.n_stripes(), 7);
+    }
+
+    #[test]
+    fn uniform_cuts_match_chunks_mut_boundaries() {
+        for (len, ts) in [(40, 3), (7, 16), (97, 5), (1, 1)] {
+            let s = Stripes::new(len, ts);
+            let cuts = s.cuts();
+            assert_eq!(cuts.n_stripes(), s.n_stripes());
+            let mut data = vec![0u8; len];
+            let chunk_lens: Vec<usize> =
+                data.chunks_mut(s.stripe_len()).map(|c| c.len()).collect();
+            let cut_lens: Vec<usize> = (0..cuts.n_stripes()).map(|i| cuts.range(i).len()).collect();
+            assert_eq!(cut_lens, chunk_lens, "len={len} ts={ts}");
+            for idx in 0..len {
+                assert_eq!(cuts.owner(idx), s.owner(idx), "len={len} ts={ts} idx={idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn rebalance_equalises_weight_and_respects_alignment() {
+        // All weight in the first of four stripes of 4 rows x 8 cols.
+        let s = Stripes::rows(16, 8, 4);
+        let cuts = s.cuts();
+        let balanced = cuts.rebalance(&[80, 0, 0, 0], 8);
+        assert_eq!(balanced.n_stripes(), 4);
+        assert_eq!(balanced.bounds()[0], 0);
+        assert_eq!(*balanced.bounds().last().unwrap(), 128);
+        for w in balanced.bounds() {
+            assert_eq!(w % 8, 0, "cut {w} not row-aligned");
+        }
+        // The loaded first uniform stripe (items 0..32) is split across
+        // the new stripes: every interior cut lands inside it.
+        for &b in &balanced.bounds()[1..3] {
+            assert!(b <= 32, "cut {b} outside the loaded region");
+        }
+        // Weight spread evenly: interior cuts at 8, 16, 24.
+        assert_eq!(balanced.bounds(), &[0, 8, 16, 24, 128]);
+        // Ownership stays a partition.
+        for idx in 0..128 {
+            let o = balanced.owner(idx);
+            assert!(balanced.range(o).contains(&idx));
+        }
+        // Zero weight: unchanged.
+        assert_eq!(cuts.rebalance(&[0, 0, 0, 0], 8), cuts);
+    }
+
+    #[test]
+    fn split_mut_follows_cuts() {
+        let s = Stripes::new(10, 3);
+        let cuts = s.cuts().rebalance(&[6, 2, 2], 1);
+        let mut data: Vec<u32> = (0..10).collect();
+        let total: usize = cuts.split_mut(&mut data).iter().map(|c| c.len()).sum();
+        assert_eq!(total, 10);
+        let chunks = cuts.split_mut(&mut data);
+        for (i, c) in chunks.iter().enumerate() {
+            assert_eq!(c.len(), cuts.range(i).len());
+            if !c.is_empty() {
+                assert_eq!(c[0] as usize, cuts.start(i));
+            }
+        }
     }
 }

@@ -29,9 +29,83 @@
 
 pub mod frontier;
 
-pub use frontier::{Stripes, StripedFrontier};
+pub use frontier::{StripeCuts, Stripes, StripedFrontier};
 
 use crate::service::pool::WorkerPool;
+
+/// How stripe boundaries are chosen for a striped pass.
+///
+/// `Fixed` is the uniform contiguous partition (the default, bit-exact
+/// with every sequential twin).  `Weighted` re-cuts the boundaries
+/// between rounds/levels from observed per-stripe occupancy
+/// (frontier queue sizes, active-cell counts) so non-uniform frontiers
+/// spread evenly across lanes (Hsieh et al., arXiv:2404.00270).  The
+/// *results* stay bit-exact either way — only the work partition moves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StripeBalance {
+    #[default]
+    Fixed,
+    Weighted,
+}
+
+impl StripeBalance {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "fixed" => Ok(StripeBalance::Fixed),
+            "weighted" => Ok(StripeBalance::Weighted),
+            other => anyhow::bail!("unknown stripe_balance {other:?} (expected fixed or weighted)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StripeBalance::Fixed => "fixed",
+            StripeBalance::Weighted => "weighted",
+        }
+    }
+}
+
+/// How owner-exclusive commit work is batched.
+///
+/// `TwoPass` is the parity-coloured even-then-odd protocol (the
+/// default, and the oracle twin).  `Merged` runs every owner task in
+/// one batch: all commit-side writes land in owner-exclusive chunks
+/// and read only outboxes that are immutable for the whole phase, so
+/// the parity split is purely structural — merging halves the barrier
+/// count per level/wave.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CommitMode {
+    #[default]
+    TwoPass,
+    Merged,
+}
+
+impl CommitMode {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "two_pass" | "two-pass" => Ok(CommitMode::TwoPass),
+            "merged" => Ok(CommitMode::Merged),
+            other => anyhow::bail!("unknown commit mode {other:?} (expected two_pass or merged)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CommitMode::TwoPass => "two_pass",
+            CommitMode::Merged => "merged",
+        }
+    }
+}
+
+/// The striped-pass tuning knobs, threaded together through the grid
+/// solver, the tiled wave engine, and the frontier substrate.  The
+/// default is the prior behaviour exactly: fixed uniform stripes,
+/// parity two-pass commits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ParTuning {
+    pub balance: StripeBalance,
+    pub commit: CommitMode,
+}
 
 /// Receive side of one cross-stripe operation, deferred to the owning
 /// stripe's parity commit: `cap[arc * cells + cell] += delta` and

@@ -233,6 +233,20 @@ impl PoolConfig {
                     Some(name) => crate::gridflow::HostRounds::parse(name)?,
                     None => d.router.host_rounds,
                 },
+                tuning: crate::parallel::ParTuning {
+                    balance: match cfg.get("gridflow.stripe_balance") {
+                        Some(name) => crate::parallel::StripeBalance::parse(name)?,
+                        None => d.router.tuning.balance,
+                    },
+                    commit: match cfg.get("gridflow.commit") {
+                        Some(name) => crate::parallel::CommitMode::parse(name)?,
+                        None => d.router.tuning.commit,
+                    },
+                },
+                striped_relabel_min_nodes: cfg.get_usize(
+                    "maxflow.striped_relabel_min_nodes",
+                    d.router.striped_relabel_min_nodes,
+                )?,
                 routing: match cfg.get("service.routing") {
                     Some(name) => RoutingMode::parse(name)?,
                     None => d.router.routing,
@@ -291,6 +305,32 @@ mod tests {
         assert_eq!(pc.router.grid[2], GridBackend::FifoLockfree);
         assert_eq!(pc.router.cycle_waves, 99);
         assert_eq!(pc.router.par_threads, 2);
+    }
+
+    #[test]
+    fn tuning_keys_from_config() {
+        use crate::parallel::{CommitMode, StripeBalance};
+        let cfg = Config::parse(
+            "[gridflow]\nstripe_balance = \"weighted\"\ncommit = \"merged\"\n\
+             [maxflow]\nstriped_relabel_min_nodes = 64\n",
+        )
+        .unwrap();
+        let pc = PoolConfig::from_config(&cfg).unwrap();
+        assert_eq!(pc.router.tuning.balance, StripeBalance::Weighted);
+        assert_eq!(pc.router.tuning.commit, CommitMode::Merged);
+        assert_eq!(pc.router.striped_relabel_min_nodes, 64);
+        // Absent keys keep the bit-exact defaults.
+        let pc = PoolConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(pc.router.tuning.balance, StripeBalance::Fixed);
+        assert_eq!(pc.router.tuning.commit, CommitMode::TwoPass);
+        assert_eq!(
+            pc.router.striped_relabel_min_nodes,
+            crate::maxflow::global_relabel::STRIPED_RELABEL_MIN_NODES
+        );
+        let bad = Config::parse("[gridflow]\nstripe_balance = \"nope\"\n").unwrap();
+        assert!(PoolConfig::from_config(&bad).is_err());
+        let bad = Config::parse("[gridflow]\ncommit = \"nope\"\n").unwrap();
+        assert!(PoolConfig::from_config(&bad).is_err());
     }
 
     #[test]

@@ -36,8 +36,10 @@ use crate::gridflow::{
     NativeParGridExecutor,
 };
 use crate::maxflow::fifo::FifoPushRelabel;
+use crate::maxflow::global_relabel::STRIPED_RELABEL_MIN_NODES;
 use crate::maxflow::warm::{CsrDelta, CsrWarmState};
 use crate::maxflow::{self, MaxFlowSolver};
+use crate::parallel::ParTuning;
 use crate::runtime::ArtifactRegistry;
 use crate::util::{CancelToken, Cancelled};
 use crate::workloads::ProblemInstance;
@@ -294,6 +296,9 @@ struct NativeParGridBackend {
     /// (via `GridExecutor::host_pool`), so Large solves stop
     /// serialising on the between-wave BFS.  Bit-exact with `Seq`.
     host_rounds: HostRounds,
+    /// Stripe balancing + commit parity discipline for the striped
+    /// substrate (`[gridflow] stripe_balance` / `[gridflow] commit`).
+    tuning: ParTuning,
 }
 
 impl Backend for NativeParGridBackend {
@@ -310,6 +315,7 @@ impl Backend for NativeParGridBackend {
             ProblemInstance::Grid(net) => Ok(SolveOutcome::Grid(
                 HybridGridSolver::with_cycle(self.cycle_waves)
                     .with_host_rounds(self.host_rounds)
+                    .with_tuning(self.tuning)
                     .with_cancel(cancel.clone())
                     .solve(net, &mut self.exec)?,
             )),
@@ -440,7 +446,8 @@ impl BackendRegistry {
             }))
         });
         r.register("native-par", Family::Grid, |cfg, pool| {
-            let mut exec = NativeParGridExecutor::new(cfg.par_threads, cfg.tile_rows);
+            let mut exec = NativeParGridExecutor::new(cfg.par_threads, cfg.tile_rows)
+                .with_tuning(cfg.tuning);
             if let Some(pool) = pool {
                 exec = exec.with_pool(Arc::clone(pool));
             }
@@ -448,6 +455,7 @@ impl BackendRegistry {
                 exec,
                 cycle_waves: cfg.cycle_waves,
                 host_rounds: cfg.host_rounds,
+                tuning: cfg.tuning,
             }))
         });
         r.register("fifo-lockfree", Family::Grid, |cfg, _| {
@@ -598,6 +606,16 @@ pub struct RouterConfig {
     /// `Striped` runs the between-wave cancel/relabel on the worker's
     /// wave pool (bit-exact with `Seq`; `[gridflow] host_rounds`).
     pub host_rounds: HostRounds,
+    /// Striped-substrate tuning for the grid engines behind
+    /// `native-par`: stripe balancing (`[gridflow] stripe_balance`,
+    /// fixed|weighted) and owner-commit parity (`[gridflow] commit`,
+    /// two_pass|merged).  The default reproduces the pre-tuning
+    /// behaviour bit for bit.
+    pub tuning: ParTuning,
+    /// Node-count gate below which the CSR engines' periodic global
+    /// relabel stays on the sequential BFS even when a pool is attached
+    /// (`[maxflow] striped_relabel_min_nodes`).
+    pub striped_relabel_min_nodes: usize,
     /// Static (PR 3 tables) or adaptive (measurement-driven) routing.
     pub routing: RoutingMode,
     /// Adaptive mode: probe one decision in `probe_every` (0 disables
@@ -642,6 +660,8 @@ impl Default for RouterConfig {
             par_threads: 4,
             tile_rows: 16,
             host_rounds: HostRounds::Seq,
+            tuning: ParTuning::default(),
+            striped_relabel_min_nodes: STRIPED_RELABEL_MIN_NODES,
             routing: RoutingMode::Static,
             probe_every: 8,
             spill_depth: 8,
@@ -1061,6 +1081,7 @@ impl WorkerBackends {
             GridBackend::NativePar => {
                 let solver = HybridGridSolver::with_cycle(self.cfg.cycle_waves)
                     .with_host_rounds(self.cfg.host_rounds)
+                    .with_tuning(self.cfg.tuning)
                     .with_cancel(cancel.clone());
                 let mut exec = self.session_par_exec();
                 let (report, warm) = WarmState::solve_cold(net.clone(), &solver, &mut exec)?;
@@ -1111,6 +1132,7 @@ impl WorkerBackends {
                     GridBackend::NativePar => (
                         HybridGridSolver::with_cycle(self.cfg.cycle_waves)
                             .with_host_rounds(self.cfg.host_rounds)
+                            .with_tuning(self.cfg.tuning)
                             .with_cancel(cancel.clone()),
                         "native-par",
                     ),
@@ -1160,7 +1182,8 @@ impl WorkerBackends {
     /// Fresh tiled executor for a session solve, borrowing the worker's
     /// wave pool like the `native-par` backend does.
     fn session_par_exec(&self) -> NativeParGridExecutor {
-        let mut exec = NativeParGridExecutor::new(self.cfg.par_threads, self.cfg.tile_rows);
+        let mut exec = NativeParGridExecutor::new(self.cfg.par_threads, self.cfg.tile_rows)
+            .with_tuning(self.cfg.tuning);
         if let Some(pool) = &self.wave_pool {
             exec = exec.with_pool(Arc::clone(pool));
         }
@@ -1170,7 +1193,9 @@ impl WorkerBackends {
     /// Sequential FIFO engine for CSR sessions, with the worker's wave
     /// pool lent to its periodic global relabel.
     fn session_fifo(&self, cancel: &CancelToken) -> FifoPushRelabel {
-        let mut engine = FifoPushRelabel::default().with_cancel(cancel.clone());
+        let mut engine = FifoPushRelabel::default()
+            .with_striped_min_nodes(self.cfg.striped_relabel_min_nodes)
+            .with_cancel(cancel.clone());
         if let Some(pool) = &self.wave_pool {
             engine = engine.with_relabel_pool(Arc::clone(pool));
         }

@@ -191,6 +191,66 @@ fn replies_carry_coherent_phase_breakdowns() {
     );
 }
 
+/// The heuristic counters reach the registry end to end: a CSR solve
+/// with gap relabeling advances the engine-labelled gap twins by
+/// exactly the stats it returned, and a tuned grid solve advances the
+/// family-labelled rebalance twin by exactly the phases it reported.
+#[test]
+fn gap_and_rebalance_counters_land_in_registry() {
+    use flowmatch::graph::csr::NetworkBuilder;
+    use flowmatch::gridflow::{HostRounds, HybridGridSolver, NativeGridExecutor};
+    use flowmatch::maxflow::{fifo::FifoPushRelabel, MaxFlowSolver};
+    use flowmatch::parallel::{CommitMode, ParTuning, StripeBalance};
+
+    let reg = obs::global();
+
+    // CSR side: the manufactured bottleneck (s→a→b→t with the sink arc
+    // the bottleneck) fires exactly the gap events its stats report,
+    // and solve_traced flushes them under the engine's name.
+    let gap_key = "flowmatch_engine_gap_relabels_total{engine=\"fifo+gap\"}";
+    let nodes_key = "flowmatch_engine_gap_nodes_total{engine=\"fifo+gap\"}";
+    let before_gap = reg.counter_value(gap_key).unwrap_or(0);
+    let before_nodes = reg.counter_value(nodes_key).unwrap_or(0);
+    let mut b = NetworkBuilder::new(4, 0, 3);
+    b.add_edge(0, 1, 5, 0);
+    b.add_edge(1, 2, 5, 0);
+    b.add_edge(2, 3, 2, 0);
+    let mut g = b.build().unwrap();
+    let stats = FifoPushRelabel::generic().with_gap().solve_traced(&mut g).unwrap();
+    assert_eq!(stats.value, 2);
+    assert!(stats.gap_relabels > 0, "bottleneck must fire a gap event");
+    assert_eq!(
+        reg.counter_value(gap_key).unwrap_or(0) - before_gap,
+        stats.gap_relabels
+    );
+    assert_eq!(
+        reg.counter_value(nodes_key).unwrap_or(0) - before_nodes,
+        stats.gap_nodes
+    );
+
+    // Grid side: a weighted/merged striped solve reports its re-cuts in
+    // the reply phases, and the solve-boundary flush twins them under
+    // family="grid" (no other tuned solve runs in this binary, so the
+    // delta is exact whatever the count is).
+    let reb_key = "flowmatch_engine_rebalances_total{family=\"grid\"}";
+    let before_reb = reg.counter_value(reb_key).unwrap_or(0);
+    let mut rng = Rng::seeded(604);
+    let net = flowmatch::workloads::random_grid(&mut rng, 12, 6, 9, 0.3, 0.3);
+    let mut exec = NativeGridExecutor::default();
+    let report = HybridGridSolver::with_cycle(16)
+        .with_host_rounds(HostRounds::Striped)
+        .with_tuning(ParTuning {
+            balance: StripeBalance::Weighted,
+            commit: CommitMode::Merged,
+        })
+        .solve(&net, &mut exec)
+        .unwrap();
+    assert_eq!(
+        reg.counter_value(reb_key).unwrap_or(0) - before_reb,
+        report.phases.rebalances
+    );
+}
+
 /// Warm-session replay: warm replies carry a breakdown too, and the
 /// pool's warm-served twin matches the client's count of warm hits.
 #[test]

@@ -199,10 +199,12 @@ fn pooled_engines_bit_exact_on_large_instance() {
         let mut g2 = base.clone();
         let got = pooled.solve(&mut g2).unwrap();
         assert_eq!(got.value, want.value, "{} value", seq.name());
-        // The deterministic engines must match work counters too; the
-        // lock-free engine's counters are scheduling-dependent either
-        // way, so only its value is pinned.
-        if seq.name() != "lockfree-hong" {
+        // The deterministic engines must match work counters too — this
+        // covers the gap/scaling variants, whose striped gap lifts must
+        // be drop-ins just like the striped relabel; the lock-free
+        // engines' counters are scheduling-dependent either way, so
+        // only their values are pinned.
+        if !seq.name().starts_with("lockfree") {
             assert_eq!(got, want, "{} stats", seq.name());
         }
         assert_max_flow(&g2, got.value).unwrap();
@@ -218,6 +220,92 @@ fn pooled_engines_bit_exact_on_large_instance() {
     let want = maxflow::dinic::Dinic.solve(&mut g0).unwrap();
     assert_eq!(stats.value, want.value, "arg+pool value");
     assert_max_flow(&g, stats.value).unwrap();
+}
+
+/// §E15 differential suite: every gap × scaling combination, on both
+/// the sequential and the striped (pooled, gate forced to 0) relabel
+/// paths, must agree with the Dinic oracle on RMF instances — the
+/// layered family the heuristics target.  The striped runs must also
+/// be *bit-exact* with their sequential twins (same counters), since
+/// the striped relabel and gap lift are drop-ins.
+#[test]
+fn prop_rmf_gap_scaling_differential() {
+    use flowmatch::maxflow::ScalingMode;
+    use flowmatch::service::WorkerPool;
+    use flowmatch::workloads::rmf_network;
+    use std::sync::Arc;
+
+    let pool = Arc::new(WorkerPool::new(3));
+    forall(
+        Config::cases(6).seed(0xE15).named("rmf gap/scaling differential"),
+        |rng| {
+            let a = 2 + rng.index(2);
+            let frames = 2 + rng.index(3);
+            let base = rmf_network(rng, a, frames, 6);
+            let mut g0 = base.clone();
+            let want = maxflow::dinic::Dinic
+                .solve(&mut g0)
+                .map_err(|e| e.to_string())?
+                .value;
+            for gap in [false, true] {
+                for scaling in [ScalingMode::Off, ScalingMode::Delta] {
+                    let mut engines: Vec<Box<dyn MaxFlowSolver>> = Vec::new();
+                    let mut fifo = maxflow::fifo::FifoPushRelabel::default().with_scaling(scaling);
+                    let mut hybrid = maxflow::hybrid::Hybrid::with_cycle(64).with_scaling(scaling);
+                    if gap {
+                        fifo = fifo.with_gap();
+                        hybrid = hybrid.with_gap();
+                    }
+                    let mut highest = maxflow::highest::HighestLabel::default().with_scaling(scaling);
+                    highest.gap = gap;
+                    engines.push(Box::new(fifo.clone()));
+                    engines.push(Box::new(hybrid.clone()));
+                    engines.push(Box::new(highest.clone()));
+                    // Striped twins: lend the pool and force the gate to
+                    // 0 so even these small instances take the striped
+                    // relabel + gap-lift paths.
+                    engines.push(Box::new(
+                        fifo.with_striped_min_nodes(0)
+                            .with_relabel_pool(Arc::clone(&pool)),
+                    ));
+                    engines.push(Box::new(
+                        hybrid
+                            .with_striped_min_nodes(0)
+                            .with_relabel_pool(Arc::clone(&pool)),
+                    ));
+                    engines.push(Box::new(
+                        highest
+                            .with_striped_min_nodes(0)
+                            .with_relabel_pool(Arc::clone(&pool)),
+                    ));
+                    let mut seq_stats = Vec::new();
+                    for (i, engine) in engines.iter().enumerate() {
+                        let mut g = base.clone();
+                        let stats = engine
+                            .solve(&mut g)
+                            .map_err(|e| format!("{}: {e}", engine.name()))?;
+                        prop_assert_eq!(
+                            stats.value,
+                            want,
+                            format!("{} gap={gap} scaling={}", engine.name(), scaling.name())
+                        );
+                        assert_max_flow(&g, stats.value)
+                            .map_err(|e| format!("{}: {e}", engine.name()))?;
+                        if i < 3 {
+                            seq_stats.push(stats);
+                        } else {
+                            prop_assert_eq!(
+                                &stats,
+                                &seq_stats[i - 3],
+                                format!("{} striped twin not bit-exact", engine.name())
+                            );
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
