@@ -1,0 +1,208 @@
+//! E16: batched device execution for the grid family.
+//!
+//! Two comparisons:
+//!
+//! * **dispatch level**: K same-class grid instances solved through one
+//!   padded batched dispatch (`BatchGridSolver` over a
+//!   `BatchedGridDriver`) against K per-instance device solves
+//!   (`GridEngine::Pjrt`) and the native oracle, across batch widths
+//!   and a ragged mix.  The bit-exact contract is asserted on every
+//!   combination before any timing is reported, and the driver's own
+//!   dispatch stats contribute padding-waste and transfer-overlap
+//!   columns.
+//! * **service level**: the same closed-loop grid burst replayed
+//!   against a pool with micro-batching off (`batch_max = 1`, the
+//!   default) and on (`batch_max = 8`), with the pool's batch counters
+//!   alongside throughput.
+//!
+//! Emits benchkit JSON (default `benches/data/bench_batch.json`,
+//! override with `FLOWMATCH_BENCH_JSON`).
+
+use flowmatch::benchkit::{write_json, Cell, Measure, Table};
+use flowmatch::coordinator::{solve_grid_with, GridEngine};
+use flowmatch::graph::GridNetwork;
+use flowmatch::gridflow::{padded_class, BatchGridSolver};
+use flowmatch::runtime::BatchedGridDriver;
+use flowmatch::service::{replay, PoolConfig, SolverPool};
+use flowmatch::util::stats::Summary;
+use flowmatch::util::Rng;
+use flowmatch::workloads::{random_grid, MixedTrace, MixedTraceConfig, TraceConfig};
+
+const CYCLE: usize = 128;
+
+fn uniform_nets(seed: u64, k: usize, size: usize) -> Vec<GridNetwork> {
+    let mut rng = Rng::seeded(seed);
+    (0..k)
+        .map(|_| random_grid(&mut rng, size, size, 20, 0.3, 0.3))
+        .collect()
+}
+
+/// Ragged mix: four shapes padded to one envelope, the worst packing
+/// the shard compatibility cut will actually emit.
+fn ragged_nets(seed: u64, base: usize) -> Vec<GridNetwork> {
+    let mut rng = Rng::seeded(seed);
+    [
+        (base, base),
+        (base - base / 4, base),
+        (base, base - base / 3),
+        (base / 2 + 1, base / 2 + 1),
+    ]
+    .iter()
+    .map(|&(h, w)| random_grid(&mut rng, h, w, 20, 0.3, 0.3))
+    .collect()
+}
+
+fn solve_batched(nets: &[GridNetwork]) -> (Vec<i64>, BatchedGridDriver) {
+    let refs: Vec<&GridNetwork> = nets.iter().collect();
+    let (hmax, wmax) = padded_class(&refs);
+    let mut driver = BatchedGridDriver::for_class(hmax, wmax);
+    let cancels = vec![None; nets.len()];
+    let flows = BatchGridSolver::with_cycle(CYCLE)
+        .solve_batch(&refs, &cancels, &mut driver)
+        .unwrap()
+        .into_iter()
+        .map(|r| r.unwrap().flow)
+        .collect();
+    (flows, driver)
+}
+
+fn solve_solo(nets: &[GridNetwork], engine: GridEngine) -> Vec<i64> {
+    nets.iter()
+        .map(|n| solve_grid_with(n, CYCLE, None, engine).unwrap().0.flow)
+        .collect()
+}
+
+fn dispatch_rows(table: &mut Table, measure: &Measure, label: &str, nets: &[GridNetwork]) {
+    let k = nets.len();
+    // Differential contract first: batched == per-instance device ==
+    // native, or the bench refuses to time a broken path.
+    let (batched_flows, driver) = solve_batched(nets);
+    assert_eq!(batched_flows, solve_solo(nets, GridEngine::Native), "{label}: vs native");
+    assert_eq!(batched_flows, solve_solo(nets, GridEngine::Pjrt), "{label}: vs device");
+    let stats = driver.stats();
+
+    let solo_times = measure.run(|| solve_solo(nets, GridEngine::Pjrt));
+    let solo = Summary::of(&solo_times).unwrap();
+    let batch_times = measure.run(|| solve_batched(nets));
+    let batch = Summary::of(&batch_times).unwrap();
+    let speedup = solo.mean / batch.mean;
+
+    table.row(vec![
+        label.into(),
+        Cell::Int(k as i64),
+        "per-instance".into(),
+        solo.into(),
+        Cell::Float(1.0),
+        Cell::Missing,
+        Cell::Missing,
+    ]);
+    table.row(vec![
+        label.into(),
+        Cell::Int(k as i64),
+        "batched".into(),
+        batch.into(),
+        Cell::Float(speedup),
+        Cell::Float(stats.padding_waste()),
+        Cell::Float(stats.overlap_ratio()),
+    ]);
+    println!(
+        "{label} K={k}: batched {speedup:.2}x vs per-instance device \
+         (padding waste {:.1}%, overlap {:.1}%)",
+        stats.padding_waste() * 100.0,
+        stats.overlap_ratio() * 100.0
+    );
+}
+
+fn grid_burst(seed: u64, grids: usize, size: usize) -> MixedTrace {
+    let mut rng = Rng::seeded(seed);
+    MixedTrace::generate(
+        &mut rng,
+        &MixedTraceConfig {
+            assign: TraceConfig {
+                requests: 0,
+                arrival_gap: 0.0,
+                ..Default::default()
+            },
+            grid_requests: grids,
+            grid_size: size,
+            grid_max_cap: 20,
+            grid_arrival_gap: 0.0,
+            large_every: 0,
+            ..Default::default()
+        },
+    )
+}
+
+fn service_row(table: &mut Table, batch_max: usize, trace: &MixedTrace) {
+    let mut cfg = PoolConfig {
+        workers: 2,
+        ..Default::default()
+    };
+    cfg.router.use_pjrt = false;
+    cfg.router.batch_max = batch_max;
+    cfg.router.batch_linger_us = 20_000;
+    let pool = SolverPool::start(cfg);
+    let out = replay(&pool, trace, false);
+    let report = pool.shutdown();
+    assert_eq!(out.lost, 0, "batched pool lost replies");
+    assert_eq!(out.ok, out.sent, "burst must be fully served");
+    table.row(vec![
+        Cell::Int(batch_max as i64),
+        Cell::Int(out.sent as i64),
+        Cell::Float(out.throughput_rps),
+        match &out.grid {
+            Some(s) => Cell::Float(s.p95 * 1e3),
+            None => Cell::Missing,
+        },
+        Cell::Int(report.batches as i64),
+        Cell::Int(report.batched_jobs as i64),
+        Cell::Int(report.padding_waste_cells as i64),
+        Cell::Int(report.linger_sheds as i64),
+    ]);
+}
+
+fn main() {
+    let measure = Measure::default().from_env();
+    let fast = std::env::var("FLOWMATCH_BENCH_FAST").as_deref() == Ok("1");
+    let size = if fast { 24 } else { 48 };
+    let widths: &[usize] = if fast { &[2, 4] } else { &[1, 2, 4, 8] };
+    let burst = if fast { 12 } else { 32 };
+
+    let mut table = Table::new(
+        "E16: batched device dispatch vs per-instance (host-simulated device)",
+        &["set", "K", "mode", "time", "speedup", "padding waste", "overlap"],
+    );
+    for &k in widths {
+        let nets = uniform_nets(16 + k as u64, k, size);
+        dispatch_rows(&mut table, &measure, &format!("uniform {size}x{size}"), &nets);
+    }
+    let nets = ragged_nets(99, size);
+    dispatch_rows(&mut table, &measure, "ragged", &nets);
+
+    let mut service_table = Table::new(
+        "E16: micro-batched service, closed-loop grid burst (grid p95 in ms)",
+        &[
+            "batch_max",
+            "sent",
+            "throughput rps",
+            "grid p95 ms",
+            "batches",
+            "batched jobs",
+            "padding cells",
+            "linger sheds",
+        ],
+    );
+    let trace = grid_burst(23, burst, size);
+    service_row(&mut service_table, 1, &trace);
+    service_row(&mut service_table, 8, &trace);
+
+    table.print();
+    service_table.print();
+    let path = std::env::var("FLOWMATCH_BENCH_JSON")
+        .unwrap_or_else(|_| "benches/data/bench_batch.json".to_string());
+    let path = std::path::PathBuf::from(path);
+    match write_json(&path, &[&table, &service_table]) {
+        Ok(()) => println!("\nbenchkit JSON written to {}", path.display()),
+        Err(e) => eprintln!("\nwarning: could not write benchkit JSON: {e}"),
+    }
+}

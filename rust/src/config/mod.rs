@@ -136,6 +136,7 @@ pub fn preset(name: &str) -> Result<Config> {
              routing = \"static\"\nprobe_every = 8\nspill_depth = 8\n\
              max_retries = 2\nretry_backoff_ms = 2\n\
              breaker_threshold = 3\nbreaker_cooldown = 8\n\
+             batch_max = 1\nbatch_linger_us = 200\n\
              session_budget_mb = 64\n"
         }
         // Small smoke setting for CI.
@@ -151,6 +152,7 @@ pub fn preset(name: &str) -> Result<Config> {
              routing = \"static\"\nprobe_every = 4\nspill_depth = 4\n\
              max_retries = 1\nretry_backoff_ms = 1\n\
              breaker_threshold = 2\nbreaker_cooldown = 4\n\
+             batch_max = 1\nbatch_linger_us = 200\n\
              session_budget_mb = 8\n"
         }
         other => bail!("unknown preset {other:?} (try: paper, smoke)"),
@@ -231,5 +233,11 @@ mod tests {
         assert_eq!(s.get_usize("service.workers", 0).unwrap(), 2);
         assert!(!s.get_bool("service.use_pjrt", true).unwrap());
         assert_eq!(s.get("service.routing"), Some("static"));
+        // Batching ships config-gated **off** in both presets: at
+        // batch_max = 1 routing is bit-identical to pre-batching.
+        for preset in [&p, &s] {
+            assert_eq!(preset.get_usize("service.batch_max", 0).unwrap(), 1);
+            assert_eq!(preset.get_usize("service.batch_linger_us", 0).unwrap(), 200);
+        }
     }
 }

@@ -10,10 +10,12 @@ use anyhow::Result;
 
 use crate::graph::GridNetwork;
 use crate::gridflow::{
-    GridSolveReport, HostRounds, HybridGridSolver, NativeGridExecutor, NativeParGridExecutor,
+    padded_class, BatchGridSolver, GridSolveReport, HostRounds, HybridGridSolver,
+    NativeGridExecutor, NativeParGridExecutor,
 };
-use crate::runtime::{ArtifactRegistry, GridDevice};
+use crate::runtime::{ArtifactRegistry, BatchedGridDriver, GridDevice, SimGridDevice};
 use crate::service::pool::WorkerPool;
+use crate::util::CancelToken;
 
 /// Which device phase backed a solve.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -29,6 +31,11 @@ pub enum GridEngine {
     /// PJRT artifact when one matches the shape, else the sequential
     /// native twin.
     Auto,
+    /// Force the device path: the PJRT artifact when one matches the
+    /// shape, else the deterministic host-simulated device
+    /// ([`SimGridDevice`] — same packed wire format, bit-exact waves),
+    /// so the path is exercisable in device-free containers.
+    Pjrt,
     /// Force the single-threaded native twin.
     Native,
     /// Force the multi-threaded tiled engine (bit-exact with `Native`).
@@ -98,6 +105,19 @@ pub fn solve_grid_opts(
             let report = solver.solve(net, &mut exec)?;
             return Ok((report, Backend::Native));
         }
+        GridEngine::Pjrt => {
+            if let Some(reg) = registry {
+                if let Ok(mut dev) = GridDevice::for_shape(reg, net.height, net.width) {
+                    let report = solver.solve(net, &mut dev)?;
+                    return Ok((report, Backend::Pjrt));
+                }
+            }
+            // No artifact for this shape: the host-simulated device
+            // keeps the path deterministic (and bit-exact with Native).
+            let mut dev = SimGridDevice::for_shape(net.height, net.width);
+            let report = solver.solve(net, &mut dev)?;
+            return Ok((report, Backend::Pjrt));
+        }
         GridEngine::Auto => {}
     }
     if let Some(reg) = registry {
@@ -109,6 +129,28 @@ pub fn solve_grid_opts(
     let mut exec = NativeGridExecutor::default();
     let report = solver.solve(net, &mut exec)?;
     Ok((report, Backend::Native))
+}
+
+/// Batched device entry point: solve K grid instances of one padded
+/// size class as joint device dispatches (see
+/// [`crate::runtime::BatchedGridDriver`]).  `cancels[k]` carries slot
+/// k's own deadline — an expired slot retires with the typed
+/// [`crate::util::Cancelled`] error while its batchmates solve on.
+///
+/// Today the dispatches run on the deterministic host-simulated device
+/// (bit-exact with the native oracle); a PJRT artifact compiled for the
+/// padded `[K, planes, Hmax, Wmax]` shape slots in behind the same
+/// driver when the toolchain lands (`registry` is accepted now so call
+/// sites don't change).
+pub fn solve_grid_batch(
+    nets: &[&GridNetwork],
+    cycle_waves: usize,
+    _registry: Option<&ArtifactRegistry>,
+    cancels: &[Option<CancelToken>],
+) -> Result<Vec<Result<GridSolveReport>>> {
+    let (hmax, wmax) = padded_class(nets);
+    let mut driver = BatchedGridDriver::for_class(hmax, wmax);
+    BatchGridSolver::with_cycle(cycle_waves).solve_batch(nets, cancels, &mut driver)
 }
 
 #[cfg(test)]
@@ -162,6 +204,48 @@ mod tests {
             assert_eq!(par.relabels, seq.relabels, "{engine:?}");
             assert_eq!(par.gap_cells, seq.gap_cells, "{engine:?}");
             assert_eq!(par.cancelled_arcs, seq.cancelled_arcs, "{engine:?}");
+        }
+    }
+
+    /// The explicit device path (host-simulated without an artifact) is
+    /// the native engine's bit-exact twin through the packed wire format.
+    #[test]
+    fn forced_pjrt_sim_engine_matches_baseline() {
+        let mut rng = Rng::seeded(82);
+        let net = random_grid(&mut rng, 6, 9, 10, 0.3, 0.3);
+        let (seq, b0) = solve_grid_with(&net, 128, None, GridEngine::Native).unwrap();
+        assert_eq!(b0, Backend::Native);
+        let (dev, b1) = solve_grid_with(&net, 128, None, GridEngine::Pjrt).unwrap();
+        assert_eq!(b1, Backend::Pjrt);
+        assert_eq!(dev.flow, seq.flow);
+        assert_eq!(dev.waves, seq.waves);
+        assert_eq!(dev.pushes, seq.pushes);
+        assert_eq!(dev.relabels, seq.relabels);
+        assert_eq!(dev.host_rounds, seq.host_rounds);
+    }
+
+    /// The batched entry point reproduces every per-instance device
+    /// solve (which itself matches Native) across a ragged batch.
+    #[test]
+    fn batched_entry_point_matches_per_instance() {
+        let nets: Vec<GridNetwork> = [(83u64, 5, 8), (84, 8, 5), (85, 8, 8)]
+            .iter()
+            .map(|&(seed, h, w)| {
+                let mut rng = Rng::seeded(seed);
+                random_grid(&mut rng, h, w, 10, 0.3, 0.3)
+            })
+            .collect();
+        let refs: Vec<&GridNetwork> = nets.iter().collect();
+        let cancels = vec![None; refs.len()];
+        let got = solve_grid_batch(&refs, 96, None, &cancels).unwrap();
+        for (k, (net, report)) in nets.iter().zip(got).enumerate() {
+            let report = report.unwrap();
+            let (solo, _) = solve_grid_with(net, 96, None, GridEngine::Pjrt).unwrap();
+            assert_eq!(report.flow, solo.flow, "slot {k}");
+            assert_eq!(report.waves, solo.waves, "slot {k}");
+            assert_eq!(report.pushes, solo.pushes, "slot {k}");
+            assert_eq!(report.relabels, solo.relabels, "slot {k}");
+            assert_eq!(report.host_rounds, solo.host_rounds, "slot {k}");
         }
     }
 

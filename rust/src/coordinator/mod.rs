@@ -7,7 +7,9 @@ pub mod maxflow_driver;
 pub mod server;
 
 pub use assignment_driver::{PjrtAssignmentDriver, SolveTelemetry};
-pub use maxflow_driver::{solve_grid, solve_grid_opts, solve_grid_with, Backend, GridEngine};
+pub use maxflow_driver::{
+    solve_grid, solve_grid_batch, solve_grid_opts, solve_grid_with, Backend, GridEngine,
+};
 // Deprecated alias: the recorder lives in `util::stats` since PR 4 and
 // the `coordinator::metrics` shim module is gone — import
 // `util::stats::LatencyRecorder` in new code; this re-export keeps the

@@ -1,0 +1,425 @@
+//! The batched hybrid loop: K instances of one padded size class advance
+//! through Algorithm 4.6 *together* — every superstep is one
+//! [`BatchedGridDriver`] dispatch over the whole batch, while the host
+//! rounds (violation cancel + global/gap relabel) run per slot between
+//! dispatches, exactly as [`HybridGridSolver::resume`] runs them for a
+//! single instance.
+//!
+//! Bit-exactness: slots never interact inside a dispatch (each has its
+//! own planes in the packed literal), and the per-slot wave/host-round
+//! sequence below mirrors `resume` line for line, so every slot's
+//! trajectory — flow, heights, waves, pushes, relabels, host rounds, gap
+//! cells, cancelled arcs — is identical to a solo solve of the same
+//! instance.  The differential suites (`tests/integration_batch.rs`) pin
+//! this against the native sequential oracle.
+//!
+//! A slot retires from the batch when it terminates, errors, or its
+//! cancel token fires; retired slots stay in the literal as dead (zero)
+//! planes but cost no compute.  An expired batchmate therefore never
+//! delays — or is delayed by — the rest of the batch.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::graph::GridNetwork;
+use crate::obs::{self, Phase};
+use crate::parallel::{Lanes, ParTuning};
+use crate::runtime::batch::BatchedGridDriver;
+use crate::runtime::device::{GridStepStats, GridWireState};
+use crate::runtime::SimGridDevice;
+use crate::service::pool::WorkerPool;
+use crate::util::CancelToken;
+
+use super::host;
+use super::solver::{GridExecutor, GridSolveReport, HostRounds};
+use super::state::init_state;
+
+/// The host-simulated device as a per-instance executor: batch-of-one
+/// dispatches through the same packed wire format, so the explicit
+/// `GridEngine::Pjrt` path exercises pack/unpack + transfer accounting
+/// even in device-free containers.
+impl GridExecutor for SimGridDevice {
+    fn k_inner(&self) -> usize {
+        self.driver.k_inner()
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-sim"
+    }
+
+    fn superstep(&mut self, st: &mut GridWireState, outer: i32) -> Result<GridStepStats> {
+        self.step(st, outer)
+    }
+
+    // No `invalidate` override: the driver re-packs from the caller's
+    // state on every dispatch, so there is no cached activity to drop.
+}
+
+/// Smallest padded class `(Hmax, Wmax)` that admits every instance.
+pub fn padded_class(nets: &[&GridNetwork]) -> (usize, usize) {
+    nets.iter()
+        .fold((1, 1), |(h, w), n| (h.max(n.height), w.max(n.width)))
+}
+
+/// Per-slot solve bookkeeping (the locals of `resume`, one set per
+/// batch member).
+struct Slot {
+    excess_total: i64,
+    sink_total: i64,
+    src_total: i64,
+    hscratch: host::HostScratch,
+    report: GridSolveReport,
+}
+
+/// The batched twin of [`HybridGridSolver`]: same knobs, joint loop.
+pub struct BatchGridSolver {
+    pub cycle_waves: usize,
+    pub heuristics: bool,
+    pub max_rounds: u64,
+    pub host_rounds: HostRounds,
+    pub tuning: ParTuning,
+    /// Pool for striped host rounds (sequential lanes otherwise — same
+    /// results).  The batched driver has no worker threads of its own.
+    pub host_pool: Option<Arc<WorkerPool>>,
+}
+
+impl Default for BatchGridSolver {
+    fn default() -> Self {
+        Self {
+            cycle_waves: 512,
+            heuristics: true,
+            max_rounds: 100_000,
+            host_rounds: HostRounds::Seq,
+            tuning: ParTuning::default(),
+            host_pool: None,
+        }
+    }
+}
+
+impl BatchGridSolver {
+    pub fn with_cycle(cycle_waves: usize) -> Self {
+        Self {
+            cycle_waves: cycle_waves.max(1),
+            ..Self::default()
+        }
+    }
+
+    pub fn with_host_rounds(mut self, host_rounds: HostRounds) -> Self {
+        self.host_rounds = host_rounds;
+        self
+    }
+
+    pub fn with_tuning(mut self, tuning: ParTuning) -> Self {
+        self.tuning = tuning;
+        self
+    }
+
+    pub fn with_host_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.host_pool = Some(pool);
+        self
+    }
+
+    /// Solve `nets[k]` under `cancels[k]` (per-job deadlines: a token
+    /// that fires retires only its own slot).  Returns one result per
+    /// slot, in order.  A `Err` from the driver itself (shape refused,
+    /// artifact died) fails the whole batch — the caller falls back to
+    /// per-instance solves.
+    pub fn solve_batch(
+        &self,
+        nets: &[&GridNetwork],
+        cancels: &[Option<CancelToken>],
+        driver: &mut BatchedGridDriver,
+    ) -> Result<Vec<Result<GridSolveReport>>> {
+        anyhow::ensure!(!nets.is_empty(), "solve_batch: empty batch");
+        anyhow::ensure!(
+            nets.len() == cancels.len(),
+            "solve_batch: {} nets vs {} cancel tokens",
+            nets.len(),
+            cancels.len()
+        );
+        let n = nets.len();
+        let mut states: Vec<GridWireState> = Vec::with_capacity(n);
+        let mut slots: Vec<Slot> = Vec::with_capacity(n);
+        for net in nets {
+            let (st, excess_total) = init_state(net);
+            let mut hscratch = host::HostScratch::for_state(&st);
+            hscratch.set_tuning(self.tuning);
+            states.push(st);
+            slots.push(Slot {
+                excess_total,
+                sink_total: 0,
+                src_total: 0,
+                hscratch,
+                report: GridSolveReport {
+                    excess_total,
+                    ..Default::default()
+                },
+            });
+        }
+        let mut live = vec![true; n];
+        let mut results: Vec<Option<Result<GridSolveReport>>> = (0..n).map(|_| None).collect();
+
+        let striped = self.host_rounds == HostRounds::Striped;
+        let host_pool = if striped { self.host_pool.clone() } else { None };
+        let lanes = match &host_pool {
+            Some(p) => Lanes::Pool(p.as_ref()),
+            None => Lanes::Seq,
+        };
+
+        // Initial global relabel per slot (exact heights before the
+        // first dispatch), with per-slot cancel checks first.
+        for k in 0..n {
+            if let Some(c) = &cancels[k] {
+                if let Err(e) = c.check() {
+                    results[k] = Some(Err(e.into()));
+                    live[k] = false;
+                    continue;
+                }
+            }
+            if self.heuristics {
+                let t = crate::util::Timer::start();
+                let out = if striped {
+                    host::global_relabel_par(&mut states[k], &mut slots[k].hscratch, &lanes)
+                } else {
+                    host::global_relabel_with(&mut states[k], &mut slots[k].hscratch)
+                };
+                let report = &mut slots[k].report;
+                report.gap_cells += out.gap_cells;
+                if out.gap_cells > 0 {
+                    report.phases.gap_relabels += 1;
+                }
+                let secs = t.elapsed();
+                report.host_seconds += secs;
+                report.phases.add(Phase::GlobalRelabel, secs);
+                report.phases.global_relabels += 1;
+            }
+        }
+
+        let outer =
+            (self.cycle_waves as i64 + driver.k_inner() as i64 - 1) / driver.k_inner() as i64;
+
+        while live.iter().any(|&l| l) {
+            // Host-round boundary: per-slot cancel checks — an expired
+            // slot retires with the typed error, its batchmates go on.
+            for k in 0..n {
+                if !live[k] {
+                    continue;
+                }
+                if let Some(c) = &cancels[k] {
+                    if let Err(e) = c.check() {
+                        results[k] = Some(Err(e.into()));
+                        live[k] = false;
+                    }
+                }
+            }
+            let live_count = live.iter().filter(|&&l| l).count();
+            if live_count == 0 {
+                break;
+            }
+
+            // One padded dispatch advances every live slot.  The joint
+            // wall-clock is attributed evenly — it *was* one device
+            // call; per-slot shares keep the phase totals additive.
+            let t = crate::util::Timer::start();
+            let stats = driver.superstep_batch(&mut states, &live, outer as i32)?;
+            let share = t.elapsed() / live_count as f64;
+
+            for k in 0..n {
+                if !live[k] {
+                    continue;
+                }
+                let slot = &mut slots[k];
+                slot.report.device_seconds += share;
+                slot.report.phases.add(Phase::WaveCompute, share);
+                slot.sink_total += stats[k].sink_flow;
+                slot.src_total += stats[k].src_flow;
+                slot.report.waves += stats[k].waves;
+                slot.report.pushes += stats[k].pushes;
+                slot.report.relabels += stats[k].relabels;
+                slot.report.host_rounds += 1;
+
+                if slot.sink_total + slot.src_total >= slot.excess_total
+                    && stats[k].active == 0
+                {
+                    results[k] = Some(finish(slot));
+                    live[k] = false;
+                    continue;
+                }
+                if slot.report.host_rounds >= self.max_rounds {
+                    results[k] = Some(Err(anyhow::anyhow!(
+                        "hybrid grid solve exceeded {} rounds (sink={} src={} total={})",
+                        self.max_rounds,
+                        slot.sink_total,
+                        slot.src_total,
+                        slot.excess_total
+                    )));
+                    live[k] = false;
+                    continue;
+                }
+
+                if self.heuristics {
+                    let t = crate::util::Timer::start();
+                    let (c0, r0) = (slot.hscratch.cancel_seconds, slot.hscratch.relabel_seconds);
+                    let out = if striped {
+                        host::host_round_par(&mut states[k], &mut slot.hscratch, &lanes)
+                    } else {
+                        host::host_round_with(&mut states[k], &mut slot.hscratch)
+                    };
+                    slot.src_total += out.src_returned;
+                    slot.report.gap_cells += out.gap_cells;
+                    if out.gap_cells > 0 {
+                        slot.report.phases.gap_relabels += 1;
+                    }
+                    slot.report.cancelled_arcs += out.cancelled_arcs;
+                    slot.report.host_seconds += t.elapsed();
+                    slot.report
+                        .phases
+                        .add(Phase::Cancel, slot.hscratch.cancel_seconds - c0);
+                    slot.report
+                        .phases
+                        .add(Phase::GlobalRelabel, slot.hscratch.relabel_seconds - r0);
+                    slot.report.phases.global_relabels += 1;
+                    // No executor cache to invalidate: the next dispatch
+                    // re-packs this state from scratch.
+                }
+            }
+        }
+
+        Ok(results
+            .into_iter()
+            .map(|r| r.expect("every slot retired with a result"))
+            .collect())
+    }
+}
+
+/// Terminal bookkeeping for one slot — the tail of `resume`, verbatim.
+fn finish(slot: &mut Slot) -> Result<GridSolveReport> {
+    anyhow::ensure!(
+        slot.sink_total + slot.src_total == slot.excess_total,
+        "mass accounting broken: sink {} + src {} != total {}",
+        slot.sink_total,
+        slot.src_total,
+        slot.excess_total
+    );
+    let mut report = std::mem::take(&mut slot.report);
+    report.flow = slot.sink_total;
+    report.phases.pushes = report.pushes.max(0) as u64;
+    report.phases.relabels = report.relabels.max(0) as u64;
+    report.phases.waves = report.waves.max(0) as u64;
+    report.phases.rebalances = slot.hscratch.take_rebalances();
+    obs::record_phases("grid", &report.phases);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gridflow::{HybridGridSolver, NativeGridExecutor};
+    use crate::util::Rng;
+    use crate::workloads::grid_gen::random_grid;
+
+    fn nets(seeds: &[(u64, usize, usize)]) -> Vec<GridNetwork> {
+        seeds
+            .iter()
+            .map(|&(seed, h, w)| {
+                let mut rng = Rng::seeded(seed);
+                random_grid(&mut rng, h, w, 9, 0.3, 0.3)
+            })
+            .collect()
+    }
+
+    fn solo(net: &GridNetwork, cycle: usize) -> GridSolveReport {
+        let mut exec = NativeGridExecutor::default();
+        HybridGridSolver::with_cycle(cycle).solve(net, &mut exec).unwrap()
+    }
+
+    /// The headline invariant: a ragged batch reproduces every solo
+    /// trajectory counter-for-counter.
+    #[test]
+    fn batched_solve_matches_solo_trajectories() {
+        let owned = nets(&[(21, 5, 7), (22, 7, 5), (23, 7, 7), (24, 3, 4)]);
+        let refs: Vec<&GridNetwork> = owned.iter().collect();
+        let (hmax, wmax) = padded_class(&refs);
+        assert_eq!((hmax, wmax), (7, 7));
+        let mut driver = BatchedGridDriver::for_class(hmax, wmax);
+        let cancels = vec![None; refs.len()];
+        let got = BatchGridSolver::with_cycle(64)
+            .solve_batch(&refs, &cancels, &mut driver)
+            .unwrap();
+        for (k, (net, report)) in owned.iter().zip(got).enumerate() {
+            let report = report.unwrap();
+            let want = solo(net, 64);
+            assert_eq!(report.flow, want.flow, "slot {k}");
+            assert_eq!(report.waves, want.waves, "slot {k}");
+            assert_eq!(report.pushes, want.pushes, "slot {k}");
+            assert_eq!(report.relabels, want.relabels, "slot {k}");
+            assert_eq!(report.host_rounds, want.host_rounds, "slot {k}");
+            assert_eq!(report.gap_cells, want.gap_cells, "slot {k}");
+            assert_eq!(report.cancelled_arcs, want.cancelled_arcs, "slot {k}");
+        }
+    }
+
+    /// A batch of one is the degenerate case (batch_max = 1).
+    #[test]
+    fn batch_of_one_matches_solo() {
+        let owned = nets(&[(31, 6, 6)]);
+        let refs: Vec<&GridNetwork> = owned.iter().collect();
+        let mut driver = BatchedGridDriver::for_class(6, 6);
+        let got = BatchGridSolver::with_cycle(128)
+            .solve_batch(&refs, &[None], &mut driver)
+            .unwrap();
+        let report = got.into_iter().next().unwrap().unwrap();
+        let want = solo(&owned[0], 128);
+        assert_eq!(report.flow, want.flow);
+        assert_eq!(report.waves, want.waves);
+    }
+
+    /// A pre-cancelled slot retires with the typed error while its
+    /// batchmates solve to the exact solo answers.
+    #[test]
+    fn cancelled_slot_retires_batchmates_solve() {
+        use crate::util::{CancelToken, Cancelled};
+        let owned = nets(&[(41, 5, 5), (42, 5, 5), (43, 4, 5)]);
+        let refs: Vec<&GridNetwork> = owned.iter().collect();
+        let dead = CancelToken::new();
+        dead.cancel();
+        let cancels = vec![None, Some(dead), None];
+        let mut driver = BatchedGridDriver::for_class(5, 5);
+        let got = BatchGridSolver::with_cycle(64)
+            .solve_batch(&refs, &cancels, &mut driver)
+            .unwrap();
+        assert!(got[1].as_ref().is_err(), "cancelled slot errors");
+        assert!(
+            Cancelled::caused(got[1].as_ref().err().unwrap()),
+            "typed cancel error"
+        );
+        for k in [0, 2] {
+            let want = solo(&owned[k], 64);
+            let r = got[k].as_ref().unwrap();
+            assert_eq!(r.flow, want.flow, "slot {k}");
+            assert_eq!(r.waves, want.waves, "slot {k}");
+        }
+    }
+
+    /// Heuristics-off batches terminate too and still agree on flow.
+    #[test]
+    fn no_heuristics_batch_matches() {
+        let owned = nets(&[(51, 4, 4), (52, 4, 3)]);
+        let refs: Vec<&GridNetwork> = owned.iter().collect();
+        let mut driver = BatchedGridDriver::for_class(4, 4);
+        let solver = BatchGridSolver {
+            heuristics: false,
+            cycle_waves: 64,
+            ..Default::default()
+        };
+        let got = solver.solve_batch(&refs, &[None, None], &mut driver).unwrap();
+        for (k, (net, r)) in owned.iter().zip(got).enumerate() {
+            let r = r.unwrap();
+            let mut exec = NativeGridExecutor::default();
+            let want = HybridGridSolver::no_heuristics(64).solve(net, &mut exec).unwrap();
+            assert_eq!(r.flow, want.flow, "slot {k}");
+            assert_eq!(r.waves, want.waves, "slot {k}");
+        }
+    }
+}

@@ -3,6 +3,7 @@
 //! scheme, and the solver that alternates the two — with the device phase
 //! served either natively or by the PJRT artifact.
 
+pub mod batch;
 pub mod host;
 pub mod par_wave;
 pub mod solver;
@@ -10,6 +11,7 @@ pub mod state;
 pub mod warm;
 pub mod wave;
 
+pub use batch::{padded_class, BatchGridSolver};
 pub use par_wave::{par_wave_pooled, par_wave_with, NativeParGridExecutor, ParWaveScratch};
 pub use solver::{GridExecutor, GridSolveReport, HostRounds, HybridGridSolver, NativeGridExecutor};
 pub use state::init_state;

@@ -3,7 +3,7 @@
 //! ```text
 //! flowmatch info
 //! flowmatch maxflow   --height 32 --width 32 [--cycle 512] [--seed 1] [--native] [--dimacs f.max]
-//!                     [--engine auto|native|native-par] [--threads 4] [--tile-rows 16]
+//!                     [--engine auto|native|native-par|pjrt] [--threads 4] [--tile-rows 16]
 //! flowmatch assign    --n 30 [--max-weight 100] [--alpha 10] [--engine csa-seq|csa-lockfree|csa-wave|hungarian|auction|pjrt] [--seed 1]
 //! flowmatch segment   --height 32 --width 32 [--lambda 12] [--seed 1]
 //! flowmatch optflow   --height 32 --width 32 [--features 12] [--dy 2 --dx 1]
@@ -63,7 +63,7 @@ fn run(args: Args) -> Result<()> {
 
 const USAGE: &str = "flowmatch <info|maxflow|assign|segment|optflow|serve|solver-pool|artifacts> [options]
   maxflow   --height H --width W [--cycle N] [--seed S] [--native] [--dimacs FILE]
-            [--engine auto|native|native-par] [--threads T] [--tile-rows R]
+            [--engine auto|native|native-par|pjrt] [--threads T] [--tile-rows R]
             [--host-rounds seq|striped] [--preset paper|smoke]
             [--rmf AxFRAMES (CSR smoke on a Goldberg-Rao RMF instance; with
             --gap-relabel / --scaling, self-asserts the opt-in heuristics
@@ -83,6 +83,10 @@ const USAGE: &str = "flowmatch <info|maxflow|assign|segment|optflow|serve|solver
             that trip a circuit breaker; 0 disables)]
             [--chaos SEED (loadgen; seeded fault injection,
             asserts zero lost replies)]
+            [--batch-max K (cut up to K compatible grid jobs per dispatch;
+            1 = batching off, loadgen self-asserts a multi-instance batch)]
+            [--batch-linger-us US (max wait for batch-mates; realtime lane
+            never lingers)]
             [--sessions K (loadgen; warm-start delta-trace smoke, asserts warm hits + zero lost)]
             [--session-updates U] [--session-edits E] [--session-budget-mb MB]
             [--metrics-interval SECS (dump the metrics exposition every SECS and at shutdown)]
@@ -174,16 +178,21 @@ fn cmd_maxflow(args: &Args) -> Result<()> {
         "auto" => GridEngine::Auto,
         "native" => GridEngine::Native,
         "native-par" => GridEngine::NativePar { threads, tile_rows },
-        other => bail!("unknown grid engine {other:?} (expected auto, native, native-par)"),
+        // Forced device path: the PJRT artifact when one matches the
+        // shape, else the bit-exact host-simulated device.
+        "pjrt" => GridEngine::Pjrt,
+        other => bail!("unknown grid engine {other:?} (expected auto, native, native-par, pjrt)"),
     };
     let host_rounds =
         flowmatch::gridflow::HostRounds::parse(args.get_str("host-rounds", d_host_rounds))?;
     let mut rng = Rng::seeded(seed);
     let net = workloads::random_grid(&mut rng, height, width, max_cap, 0.25, 0.25);
 
-    // Artifact discovery only matters on the Auto path; forced native
-    // engines never consult the registry.
-    let registry = if args.flag("native") || engine != GridEngine::Auto {
+    // Artifact discovery only matters on the Auto and Pjrt paths;
+    // forced native engines never consult the registry.
+    let registry = if args.flag("native")
+        || !matches!(engine, GridEngine::Auto | GridEngine::Pjrt)
+    {
         None
     } else {
         ArtifactRegistry::discover().ok()
@@ -572,6 +581,8 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
         "max-retries",
         "deadline-ms",
         "breaker-threshold",
+        "batch-max",
+        "batch-linger-us",
         "chaos",
         "sessions",
         "session-updates",
@@ -623,6 +634,11 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
     pool_cfg.router.max_retries = args.get_usize("max-retries", pool_cfg.router.max_retries)?;
     pool_cfg.router.breaker_threshold =
         args.get_usize("breaker-threshold", pool_cfg.router.breaker_threshold)?;
+    // Micro-batching: at the default batch_max = 1 the queues and the
+    // routing are bit-identical to the pre-batching service.
+    pool_cfg.router.batch_max = args.get_usize("batch-max", pool_cfg.router.batch_max)?;
+    pool_cfg.router.batch_linger_us =
+        args.get_usize("batch-linger-us", pool_cfg.router.batch_linger_us as usize)? as u64;
     // Chaos mode: wrap one backend in a seeded deterministic fault plan
     // (periodic panics + injected failures, never corrupted answers) so
     // the retry/breaker machinery is exercised end to end.
@@ -831,6 +847,12 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
             report.spilled
         );
     }
+    if report.batches > 0 || report.linger_sheds > 0 {
+        println!(
+            "  batch  : dispatches={} jobs={} padding_waste_cells={} linger_sheds={}",
+            report.batches, report.batched_jobs, report.padding_waste_cells, report.linger_sheds
+        );
+    }
     // Fault-tolerance counters: printed whenever anything non-trivial
     // happened, so a clean run stays a clean report.
     if out.retries > 0
@@ -921,6 +943,27 @@ fn cmd_solver_pool(args: &Args) -> Result<()> {
         println!(
             "chaos: OK — {} retries, 0 lost replies across {} requests",
             out.retries, out.sent
+        );
+    }
+    if action == "loadgen" && router_cfg.batch_max > 1 {
+        // Batching smoke: micro-batching must never lose a reply (each
+        // slot still gets exactly one), and a closed-loop run with deep
+        // queues must actually cut at least one multi-instance batch.
+        ensure!(
+            out.lost == 0,
+            "batched run lost {} repl(ies) — every slot in a cut batch must reply",
+            out.lost
+        );
+        ensure!(
+            report.batches >= 1 && report.batched_jobs > report.batches,
+            "batched run never cut a multi-instance batch \
+             (dispatches={}, jobs={}) — micro-batching failed to engage",
+            report.batches,
+            report.batched_jobs
+        );
+        println!(
+            "batch: OK — {} joint dispatch(es) served {} jobs, 0 lost replies",
+            report.batches, report.batched_jobs
         );
     }
     Ok(())

@@ -55,6 +55,62 @@ pub fn record_flow_stats(engine: &str, stats: &crate::maxflow::FlowStats) {
         .inc();
 }
 
+/// Jobs per cut batch (upper bounds; `batch_max` caps the real value).
+const BATCH_SIZE_BUCKETS: &[f64] = &[1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0, 24.0, 32.0];
+/// Ratio-valued histograms (padding waste, transfer/compute overlap).
+const RATIO_BUCKETS: &[f64] = &[0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+
+/// Flush the delta of a [`crate::runtime::BatchedGridDriver`]'s
+/// dispatch stats after a batched solve: dispatch/instance/cell
+/// counters, the transfer vs compute clocks (micro-unit fixed point),
+/// and per-solve padding-waste and overlap-ratio histograms.  Called
+/// once per batch solve with the driver's stats snapshot from before
+/// and after — never inside the dispatch loop.
+pub fn record_batch_dispatches(
+    before: &crate::runtime::BatchDispatchStats,
+    after: &crate::runtime::BatchDispatchStats,
+) {
+    let dispatches = after.dispatches.saturating_sub(before.dispatches);
+    if dispatches == 0 {
+        return;
+    }
+    let reg = global();
+    reg.counter("flowmatch_batch_dispatches_total").add(dispatches);
+    reg.counter("flowmatch_batch_dispatch_instances_total")
+        .add(after.instances.saturating_sub(before.instances));
+    let padded = after.padded_cells.saturating_sub(before.padded_cells);
+    let logical = after.logical_cells.saturating_sub(before.logical_cells);
+    reg.counter("flowmatch_batch_padded_cells_total").add(padded);
+    reg.counter("flowmatch_batch_logical_cells_total").add(logical);
+    let transfer = after.transfer_seconds - before.transfer_seconds;
+    let overlap = after.overlap_seconds - before.overlap_seconds;
+    reg.counter("flowmatch_batch_transfer_micros_total").add_secs(transfer);
+    reg.counter("flowmatch_batch_compute_micros_total")
+        .add_secs(after.compute_seconds - before.compute_seconds);
+    reg.counter("flowmatch_batch_overlap_micros_total").add_secs(overlap);
+    if transfer > 0.0 {
+        reg.histogram("flowmatch_batch_overlap_ratio", RATIO_BUCKETS)
+            .observe((overlap / transfer).clamp(0.0, 1.0));
+    }
+    if padded > 0 {
+        reg.histogram("flowmatch_batch_padding_waste_ratio", RATIO_BUCKETS)
+            .observe(1.0 - logical as f64 / padded as f64);
+    }
+}
+
+/// Record one batch cut from the shard queues: jobs carried, padding
+/// the cut will waste on the padded slab, and how long the cut lingered
+/// for late arrivals (the batching tax on the seed job's latency).
+pub fn record_batch_cut(jobs: usize, padded_cells: u64, logical_cells: u64, linger_secs: f64) {
+    let reg = global();
+    reg.histogram("flowmatch_batch_cut_jobs", BATCH_SIZE_BUCKETS)
+        .observe(jobs as f64);
+    reg.counter("flowmatch_batch_cut_padding_cells_total")
+        .add(padded_cells.saturating_sub(logical_cells));
+    reg.histogram("flowmatch_batch_linger_seconds", LATENCY_BUCKETS)
+        .observe(linger_secs);
+}
+
 /// Flush an assignment engine's end-of-solve counters.
 pub fn record_assignment_stats(engine: &str, stats: &crate::assignment::AssignStats) {
     let reg = global();

@@ -1,0 +1,489 @@
+//! Batched device execution for the grid family: pack K same-size-class
+//! grid instances into one padded `[K, PLANES, Hmax, Wmax]` literal, run
+//! the wave phase for all of them as a single dispatch, and double-buffer
+//! the host↔device staging so the upload of batch i+1 overlaps the
+//! compute of batch i.
+//!
+//! Two execution substrates share the packed wire format:
+//!
+//! * A real PJRT artifact (when the toolchain/device is present) would
+//!   consume the padded literal directly — the layout is chosen so the
+//!   kernel indexes `[k, plane, i, j]` with no per-slot metadata.
+//! * [`BatchedGridDriver`] itself carries a deterministic host-simulated
+//!   device mode: compute runs on per-slot states *unpacked from the
+//!   literal* (never on the caller's buffers), so every packing bug is
+//!   observable as a wrong answer in the differential suites, exactly as
+//!   it would be on hardware.
+//!
+//! The simulated compute is `gridflow::wave::native_wave_with` per slot —
+//! the same single source of decision semantics the kernel is pinned to —
+//! so batched trajectories are bit-exact with the sequential native
+//! engine (slots never interact: pushes stay inside a slot's plane).
+//!
+//! Padding: a slot of logical dims `(h, w)` occupies the top-left corner
+//! of its `(Hmax, Wmax)` plane; pad cells carry zero capacity and zero
+//! excess, so they can never activate.  Compute still runs on the
+//! *logical* dims (the relabel ceiling `V = cells + 2` is
+//! dimension-derived, so a kernel must mask to logical dims too — the
+//! host-simulated mode models that by reconstructing logical-dims states
+//! from the literal).
+
+use anyhow::{ensure, Result};
+
+use super::device::{GridStepStats, GridWireState};
+use super::transfer;
+use crate::gridflow::wave::{native_wave_with, WaveScratch};
+
+/// Planes per slot in the packed literal: h, e, cap[N,S,W,E], cap_sink,
+/// cap_src — the whole wire state of one instance.
+pub const PLANES: usize = 8;
+
+/// Cumulative accounting for one driver's lifetime of batched dispatches.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BatchDispatchStats {
+    /// Batched supersteps dispatched.
+    pub dispatches: u64,
+    /// Live instances summed over dispatches (= Σ K_live).
+    pub instances: u64,
+    /// Padded plane cells shipped (K · Hmax · Wmax per dispatch).
+    pub padded_cells: u64,
+    /// Logical cells of the live instances (≤ padded_cells).
+    pub logical_cells: u64,
+    /// Seconds spent packing/unpacking the staging literals (the
+    /// host-side half of the transfer).
+    pub transfer_seconds: f64,
+    /// Seconds spent in the wave compute across all slots.
+    pub compute_seconds: f64,
+    /// Transfer seconds hidden behind compute by the double buffer
+    /// (min(upload_i+1, compute_i) per adjacent dispatch pair).
+    pub overlap_seconds: f64,
+}
+
+impl BatchDispatchStats {
+    /// Padding waste: padded cells that carried no logical instance data,
+    /// as a fraction of everything shipped (0 = perfectly packed).
+    pub fn padding_waste(&self) -> f64 {
+        if self.padded_cells == 0 {
+            return 0.0;
+        }
+        1.0 - self.logical_cells as f64 / self.padded_cells as f64
+    }
+
+    /// Fraction of transfer time hidden behind compute (0 = fully
+    /// serialized, → 1 = fully overlapped).
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.transfer_seconds <= 0.0 {
+            return 0.0;
+        }
+        (self.overlap_seconds / self.transfer_seconds).clamp(0.0, 1.0)
+    }
+}
+
+/// The batched grid wave driver for one padded shape class.
+///
+/// Owns two staging literals (ping-pong): while dispatch i computes, the
+/// pack of dispatch i+1 targets the other buffer, so the host-side
+/// transfer work overlaps device compute — the overlap accounting below
+/// models exactly that pipeline (credit = min(this pack, previous
+/// compute)).
+pub struct BatchedGridDriver {
+    hmax: usize,
+    wmax: usize,
+    k_inner: usize,
+    /// Ping-pong staging literals, each grown to `K · PLANES · Hmax ·
+    /// Wmax` on demand.  `staging[upload]` receives the next pack.
+    staging: [Vec<i32>; 2],
+    upload: usize,
+    /// Compute seconds of the previous dispatch — the budget the next
+    /// pack can hide behind.
+    prev_compute: f64,
+    stats: BatchDispatchStats,
+}
+
+impl BatchedGridDriver {
+    /// Driver for a padded shape class `(hmax, wmax)` with the standard
+    /// wave budget per outer unit.
+    pub fn for_class(hmax: usize, wmax: usize) -> Self {
+        Self::with_k_inner(hmax, wmax, 16)
+    }
+
+    pub fn with_k_inner(hmax: usize, wmax: usize, k_inner: usize) -> Self {
+        assert!(hmax > 0 && wmax > 0, "degenerate padded shape");
+        Self {
+            hmax,
+            wmax,
+            k_inner: k_inner.max(1),
+            staging: [Vec::new(), Vec::new()],
+            upload: 0,
+            prev_compute: 0.0,
+            stats: BatchDispatchStats::default(),
+        }
+    }
+
+    pub fn k_inner(&self) -> usize {
+        self.k_inner
+    }
+
+    pub fn padded_shape(&self) -> (usize, usize) {
+        (self.hmax, self.wmax)
+    }
+
+    /// Whether a state of these dims fits this driver's padded planes.
+    pub fn admits(&self, st: &GridWireState) -> bool {
+        st.height <= self.hmax && st.width <= self.wmax
+    }
+
+    /// Cumulative dispatch accounting since construction.
+    pub fn stats(&self) -> BatchDispatchStats {
+        self.stats
+    }
+
+    fn slot_stride(&self) -> usize {
+        PLANES * self.hmax * self.wmax
+    }
+
+    /// Copy one plane (logical dims `h×w`) into the padded plane at
+    /// `base`, row by row.  Pad cells keep whatever `fill` left there
+    /// (the pack zero-fills the buffer first).
+    fn pack_plane(&self, buf: &mut [i32], base: usize, src: &[i32], h: usize, w: usize) {
+        for r in 0..h {
+            let dst = base + r * self.wmax;
+            buf[dst..dst + w].copy_from_slice(&src[r * w..(r + 1) * w]);
+        }
+    }
+
+    fn unpack_plane(&self, buf: &[i32], base: usize, dst: &mut [i32], h: usize, w: usize) {
+        for r in 0..h {
+            let src = base + r * self.wmax;
+            dst[r * w..r * w + w].copy_from_slice(&buf[src..src + w]);
+        }
+    }
+
+    /// Pack every live slot into the current upload buffer.  Dead slots
+    /// (and pad cells) are zeroed: zero capacity + zero excess can never
+    /// activate, so a kernel may run over the full padded plane safely.
+    fn pack(&mut self, states: &[GridWireState], live: &[bool]) {
+        let stride = self.slot_stride();
+        let total = stride * states.len();
+        let plane = self.hmax * self.wmax;
+        let (hmax, wmax) = (self.hmax, self.wmax);
+        let mut buf = std::mem::take(&mut self.staging[self.upload]);
+        buf.clear();
+        buf.resize(total, 0);
+        for (k, st) in states.iter().enumerate() {
+            if !live[k] {
+                continue;
+            }
+            let (h, w) = (st.height, st.width);
+            debug_assert!(h <= hmax && w <= wmax);
+            let cells = st.cells();
+            let base = k * stride;
+            self.pack_plane(&mut buf, base, &st.h, h, w);
+            self.pack_plane(&mut buf, base + plane, &st.e, h, w);
+            for a in 0..4 {
+                self.pack_plane(
+                    &mut buf,
+                    base + (2 + a) * plane,
+                    &st.cap[a * cells..(a + 1) * cells],
+                    h,
+                    w,
+                );
+            }
+            self.pack_plane(&mut buf, base + 6 * plane, &st.cap_sink, h, w);
+            self.pack_plane(&mut buf, base + 7 * plane, &st.cap_src, h, w);
+        }
+        self.staging[self.upload] = buf;
+    }
+
+    /// Rebuild one slot's logical-dims state from a staging buffer.
+    /// This is the read side of the wire format: compute consumes ONLY
+    /// what round-tripped through the literal.
+    fn unpack_slot(&self, buf: &[i32], k: usize, height: usize, width: usize) -> GridWireState {
+        let stride = self.slot_stride();
+        let plane = self.hmax * self.wmax;
+        let base = k * stride;
+        let mut st = GridWireState::zeros(height, width);
+        let cells = st.cells();
+        self.unpack_plane(buf, base, &mut st.h, height, width);
+        self.unpack_plane(buf, base + plane, &mut st.e, height, width);
+        for a in 0..4 {
+            self.unpack_plane(
+                buf,
+                base + (2 + a) * plane,
+                &mut st.cap[a * cells..(a + 1) * cells],
+                height,
+                width,
+            );
+        }
+        self.unpack_plane(buf, base + 6 * plane, &mut st.cap_sink, height, width);
+        self.unpack_plane(buf, base + 7 * plane, &mut st.cap_src, height, width);
+        st
+    }
+
+    /// Run one batched superstep: every live slot advances by up to
+    /// `outer · k_inner` waves (stopping early when its active set
+    /// drains), exactly like one `GridExecutor::superstep` per slot.
+    ///
+    /// `states[k]` is read and (for live slots) overwritten with the
+    /// post-superstep wire state; the returned vector carries one
+    /// [`GridStepStats`] per slot (dead slots report all-zero stats).
+    /// Slots never interact — the per-slot trajectory is bit-exact with
+    /// a solo solve of the same instance.
+    pub fn superstep_batch(
+        &mut self,
+        states: &mut [GridWireState],
+        live: &[bool],
+        outer: i32,
+    ) -> Result<Vec<GridStepStats>> {
+        ensure!(
+            states.len() == live.len(),
+            "superstep_batch: {} states vs {} live flags",
+            states.len(),
+            live.len()
+        );
+        ensure!(!states.is_empty(), "superstep_batch: empty batch");
+        for (k, st) in states.iter().enumerate() {
+            ensure!(
+                self.admits(st),
+                "slot {k}: {}x{} exceeds padded class {}x{}",
+                st.height,
+                st.width,
+                self.hmax,
+                self.wmax
+            );
+        }
+
+        // Upload: pack live slots into the staging literal and account
+        // the H2D bytes (payload + the `outer` scalar), mirroring
+        // `GridDevice::step`.
+        let t_pack = std::time::Instant::now();
+        self.pack(states, live);
+        let upload_bytes = self.staging[self.upload].len() * 4 + 4;
+        transfer::GLOBAL.record_h2d(upload_bytes);
+        let pack_secs = t_pack.elapsed().as_secs_f64();
+
+        // Compute: per live slot, on states reconstructed FROM the
+        // literal.  A packing bug (wrong stride, swapped plane, clipped
+        // row) therefore changes answers instead of hiding behind a
+        // host-side shortcut.
+        let t_compute = std::time::Instant::now();
+        let budget = outer as i64 * self.k_inner as i64;
+        let mut out = vec![GridStepStats::default(); states.len()];
+        let mut scratch = WaveScratch::default();
+        let upload = self.upload;
+        let mut logical = 0u64;
+        let mut live_count = 0u64;
+        for k in 0..states.len() {
+            if !live[k] {
+                continue;
+            }
+            live_count += 1;
+            logical += states[k].cells() as u64;
+            let mut st =
+                self.unpack_slot(&self.staging[upload], k, states[k].height, states[k].width);
+            scratch.rebuild(&st);
+            let stats = &mut out[k];
+            for _ in 0..budget {
+                if scratch.active_count() == 0 {
+                    break;
+                }
+                let w = native_wave_with(&mut st, &mut scratch);
+                stats.sink_flow += w.sink_flow;
+                stats.src_flow += w.src_flow;
+                stats.pushes += w.pushes;
+                stats.relabels += w.relabels;
+                stats.waves += 1;
+            }
+            stats.active = scratch.active_count() as i64;
+            states[k] = st;
+        }
+        let compute_secs = t_compute.elapsed().as_secs_f64();
+
+        // Download: the result planes come back through the other
+        // staging buffer (ping-pong), so the next dispatch's upload
+        // never waits on this readback.  D2H mirrors `GridDevice::step`
+        // (payload + 24 bytes of scalar stats, per live slot).
+        let t_unpack = std::time::Instant::now();
+        let download = 1 - self.upload;
+        {
+            let mut buf = std::mem::take(&mut self.staging[download]);
+            buf.clear();
+            buf.resize(self.slot_stride() * states.len(), 0);
+            let (hmax, wmax) = (self.hmax, self.wmax);
+            let plane = hmax * wmax;
+            let stride = self.slot_stride();
+            for (k, st) in states.iter().enumerate() {
+                if !live[k] {
+                    continue;
+                }
+                let base = k * stride;
+                self.pack_plane(&mut buf, base, &st.h, st.height, st.width);
+                self.pack_plane(&mut buf, base + plane, &st.e, st.height, st.width);
+            }
+            self.staging[download] = buf;
+        }
+        transfer::GLOBAL.record_d2h(self.staging[download].len() * 4 + 24 * live_count as usize);
+        let unpack_secs = t_unpack.elapsed().as_secs_f64();
+
+        // Double-buffer pipeline model: this dispatch's host-side pack
+        // ran while the previous dispatch's compute was still in flight,
+        // so up to min(pack, prev_compute) of it was free.
+        let transfer_secs = pack_secs + unpack_secs;
+        self.stats.overlap_seconds += pack_secs.min(self.prev_compute);
+        self.prev_compute = compute_secs;
+        self.upload = download;
+
+        self.stats.dispatches += 1;
+        self.stats.instances += live_count;
+        self.stats.padded_cells += (states.len() * self.hmax * self.wmax) as u64;
+        self.stats.logical_cells += logical;
+        self.stats.transfer_seconds += transfer_secs;
+        self.stats.compute_seconds += compute_secs;
+        Ok(out)
+    }
+}
+
+/// Deterministic host-simulated device for the per-instance path: a
+/// batch-of-one view over [`BatchedGridDriver`], so `GridEngine::Pjrt`
+/// stays testable (and bit-exact with the native engine) in containers
+/// with no PJRT device.  The `GridExecutor` impl lives in
+/// `gridflow::batch` next to the solver-side plumbing.
+pub struct SimGridDevice {
+    pub driver: BatchedGridDriver,
+}
+
+impl SimGridDevice {
+    pub fn for_shape(height: usize, width: usize) -> Self {
+        Self {
+            driver: BatchedGridDriver::for_class(height, width),
+        }
+    }
+
+    pub fn step(&mut self, state: &mut GridWireState, outer: i32) -> Result<GridStepStats> {
+        let live = [true];
+        let mut stats =
+            self.driver
+                .superstep_batch(std::slice::from_mut(state), &live, outer)?;
+        Ok(stats.pop().expect("batch of one"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny deterministic instance: border sources, far-corner sinks.
+    fn demo_state(h: usize, w: usize, seed: i32) -> GridWireState {
+        let mut st = GridWireState::zeros(h, w);
+        let cells = h * w;
+        for c in 0..cells {
+            for a in 0..4 {
+                st.cap[a * cells + c] = ((c as i32 * 7 + a as i32 * 3 + seed) % 5) + 1;
+            }
+        }
+        st.cap_src[0] = 6 + seed;
+        st.e[0] = 6 + seed;
+        st.cap_sink[cells - 1] = 5 + seed;
+        st
+    }
+
+    fn solo_superstep(st: &mut GridWireState, outer: i32, k_inner: usize) -> GridStepStats {
+        let mut stats = GridStepStats::default();
+        let mut scratch = WaveScratch::default();
+        scratch.rebuild(st);
+        for _ in 0..(outer as i64 * k_inner as i64) {
+            if scratch.active_count() == 0 {
+                break;
+            }
+            let w = native_wave_with(st, &mut scratch);
+            stats.sink_flow += w.sink_flow;
+            stats.src_flow += w.src_flow;
+            stats.pushes += w.pushes;
+            stats.relabels += w.relabels;
+            stats.waves += 1;
+        }
+        stats.active = scratch.active_count() as i64;
+        stats
+    }
+
+    /// The tentpole invariant at the superstep level: a padded batched
+    /// dispatch advances every slot exactly as a solo native superstep
+    /// would — heights, excesses, and every counter.
+    #[test]
+    fn batched_superstep_matches_solo_per_slot() {
+        let mut driver = BatchedGridDriver::for_class(5, 6);
+        // Ragged dims inside one padded class.
+        let mut batched = vec![
+            demo_state(3, 4, 0),
+            demo_state(5, 6, 1),
+            demo_state(4, 3, 2),
+        ];
+        let mut solo = batched.clone();
+        let live = [true, true, true];
+        let stats = driver
+            .superstep_batch(&mut batched, &live, 2)
+            .expect("batched superstep");
+        for (k, (b, s)) in batched.iter().zip(solo.iter_mut()).enumerate() {
+            let want = solo_superstep(s, 2, driver.k_inner());
+            assert_eq!(stats[k], want, "slot {k} stats");
+            assert_eq!(b.h, s.h, "slot {k} heights");
+            assert_eq!(b.e, s.e, "slot {k} excess");
+        }
+    }
+
+    /// Dead slots are left untouched and report zero stats.
+    #[test]
+    fn dead_slots_are_skipped() {
+        let mut driver = BatchedGridDriver::for_class(4, 4);
+        let mut batched = vec![demo_state(4, 4, 0), demo_state(4, 4, 3)];
+        let before = batched[1].clone();
+        let stats = driver
+            .superstep_batch(&mut batched, &[true, false], 1)
+            .unwrap();
+        assert_eq!(stats[1], GridStepStats::default());
+        assert_eq!(batched[1].h, before.h);
+        assert_eq!(batched[1].e, before.e);
+        assert!(stats[0].waves > 0, "live slot advanced");
+    }
+
+    /// SimGridDevice (batch of one) is the same superstep again.
+    #[test]
+    fn sim_device_matches_solo() {
+        let mut dev = SimGridDevice::for_shape(4, 5);
+        let mut a = demo_state(4, 5, 0);
+        let mut b = a.clone();
+        let got = dev.step(&mut a, 3).unwrap();
+        let want = solo_superstep(&mut b, 3, dev.driver.k_inner());
+        assert_eq!(got, want);
+        assert_eq!(a.h, b.h);
+        assert_eq!(a.e, b.e);
+    }
+
+    /// Accounting: padded vs logical cells, dispatch counts, and the
+    /// waste/overlap ratios stay in range.
+    #[test]
+    fn dispatch_stats_account_padding() {
+        let mut driver = BatchedGridDriver::for_class(6, 6);
+        let mut batched = vec![demo_state(3, 3, 0), demo_state(6, 6, 1)];
+        driver
+            .superstep_batch(&mut batched, &[true, true], 1)
+            .unwrap();
+        let s = driver.stats();
+        assert_eq!(s.dispatches, 1);
+        assert_eq!(s.instances, 2);
+        assert_eq!(s.padded_cells, 72);
+        assert_eq!(s.logical_cells, 9 + 36);
+        let waste = s.padding_waste();
+        assert!((waste - (1.0 - 45.0 / 72.0)).abs() < 1e-12, "{waste}");
+        let overlap = s.overlap_ratio();
+        assert!((0.0..=1.0).contains(&overlap), "{overlap}");
+    }
+
+    /// Oversized instances are refused, not silently clipped.
+    #[test]
+    fn oversized_slot_is_an_error() {
+        let mut driver = BatchedGridDriver::for_class(3, 3);
+        let mut batched = vec![demo_state(4, 3, 0)];
+        assert!(driver.superstep_batch(&mut batched, &[true], 1).is_err());
+    }
+}

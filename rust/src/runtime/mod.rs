@@ -16,6 +16,7 @@
 //! §5.5 of the paper).
 
 pub mod artifact;
+pub mod batch;
 pub mod client;
 pub mod device;
 pub mod executor;
@@ -23,6 +24,7 @@ pub mod literal;
 pub mod transfer;
 
 pub use artifact::{ArtifactKind, ArtifactRegistry, ArtifactSpec};
+pub use batch::{BatchDispatchStats, BatchedGridDriver, SimGridDevice};
 pub use device::{CsaDevice, CsaStepStats, GridDevice, GridStepStats};
 pub use executor::Executor;
 pub use transfer::TransferLog;

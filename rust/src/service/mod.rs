@@ -263,6 +263,11 @@ impl PoolConfig {
                     .get_usize("service.breaker_threshold", d.router.breaker_threshold)?,
                 breaker_cooldown: cfg
                     .get_usize("service.breaker_cooldown", d.router.breaker_cooldown)?,
+                batch_max: cfg.get_usize("service.batch_max", d.router.batch_max)?,
+                batch_linger_us: cfg.get_usize(
+                    "service.batch_linger_us",
+                    d.router.batch_linger_us as usize,
+                )? as u64,
                 ..d.router
             },
         };
@@ -385,6 +390,22 @@ mod tests {
         assert_eq!(pc.router.max_retries, 2);
         assert_eq!(pc.router.breaker_threshold, 3);
         assert!(pc.router.fault.is_none());
+    }
+
+    #[test]
+    fn batching_keys_from_config() {
+        let cfg = Config::parse("[service]\nbatch_max = 8\nbatch_linger_us = 450\n").unwrap();
+        let pc = PoolConfig::from_config(&cfg).unwrap();
+        assert_eq!(pc.router.batch_max, 8);
+        assert_eq!(pc.router.batch_linger_us, 450);
+        // Absent keys keep batching off: batch_max = 1 means the
+        // grid-batch backend never instantiates and the shard queues
+        // never cut batches.
+        let pc = PoolConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(pc.router.batch_max, 1);
+        assert_eq!(pc.router.batch_linger_us, 200);
+        // The batched backend is routable through the static table.
+        assert_eq!(GridBackend::parse("grid-batch").unwrap(), GridBackend::Batch);
     }
 
     #[test]

@@ -289,6 +289,10 @@ struct MetricTwins {
     deadline_misses: Arc<obs::Counter>,
     warm_served: Arc<obs::Counter>,
     sessions_evicted: Arc<obs::Counter>,
+    batches: Arc<obs::Counter>,
+    batched_jobs: Arc<obs::Counter>,
+    padding_waste_cells: Arc<obs::Counter>,
+    linger_sheds: Arc<obs::Counter>,
     latency: Arc<obs::Histogram>,
 }
 
@@ -310,6 +314,10 @@ impl MetricTwins {
             deadline_misses: c("deadline_misses"),
             warm_served: c("warm_served"),
             sessions_evicted: c("sessions_evicted"),
+            batches: c("batches"),
+            batched_jobs: c("batched_jobs"),
+            padding_waste_cells: c("padding_waste_cells"),
+            linger_sheds: c("linger_sheds"),
             latency: reg.histogram(
                 &format!("flowmatch_pool_latency_seconds{{pool=\"{label}\"}}"),
                 obs::LATENCY_BUCKETS,
@@ -330,6 +338,10 @@ struct PoolMetrics {
     deadline_misses: usize,
     warm_served: usize,
     sessions_evicted: usize,
+    batches: usize,
+    batched_jobs: usize,
+    padding_waste_cells: u64,
+    linger_sheds: usize,
     backends: BTreeMap<&'static str, usize>,
     twins: MetricTwins,
 }
@@ -352,6 +364,10 @@ impl PoolMetrics {
             deadline_misses: 0,
             warm_served: 0,
             sessions_evicted: 0,
+            batches: 0,
+            batched_jobs: 0,
+            padding_waste_cells: 0,
+            linger_sheds: 0,
             backends: BTreeMap::new(),
             twins: MetricTwins::new(label),
         }
@@ -422,6 +438,24 @@ impl PoolMetrics {
         self.sessions_evicted += n;
         self.twins.sessions_evicted.add(n as u64);
     }
+
+    /// One joint device dispatch served `jobs` requests, wasting
+    /// `waste_cells` padded slab cells over their logical sizes.
+    fn batch_dispatched(&mut self, jobs: usize, waste_cells: u64) {
+        self.batches += 1;
+        self.batched_jobs += jobs;
+        self.padding_waste_cells += waste_cells;
+        self.twins.batches.inc();
+        self.twins.batched_jobs.add(jobs as u64);
+        self.twins.padding_waste_cells.add(waste_cells);
+    }
+
+    /// Jobs cut into a batch whose deadline died during the linger —
+    /// answered `DeadlineExceeded` instead of padded into the dispatch.
+    fn linger_shed(&mut self, n: usize) {
+        self.linger_sheds += n;
+        self.twins.linger_sheds.add(n as u64);
+    }
 }
 
 /// Aggregate pool statistics, collected at shutdown.
@@ -461,6 +495,17 @@ pub struct PoolReport {
     pub warm_served: usize,
     /// Warm-start sessions evicted by the per-worker LRU byte budget.
     pub sessions_evicted: usize,
+    /// Joint device dispatches served by the batched grid backend
+    /// (each one cut ≥ 2 compatible jobs from a shard queue).
+    pub batches: usize,
+    /// Requests served inside those joint dispatches.
+    pub batched_jobs: usize,
+    /// Padded slab cells the joint dispatches shipped beyond the live
+    /// instances' logical sizes (the padding tax of micro-batching).
+    pub padding_waste_cells: u64,
+    /// Jobs cut into a batch whose deadline died during the linger,
+    /// answered `DeadlineExceeded` instead of padded into the dispatch.
+    pub linger_sheds: usize,
     /// Circuit-breaker states per (family × class × backend) at
     /// shutdown, in stable order.
     pub breakers: Vec<BreakerStat>,
@@ -759,6 +804,10 @@ impl SolverPool {
             deadline_misses: m.deadline_misses,
             warm_served: m.warm_served,
             sessions_evicted: m.sessions_evicted,
+            batches: m.batches,
+            batched_jobs: m.batched_jobs,
+            padding_waste_cells: m.padding_waste_cells,
+            linger_sheds: m.linger_sheds,
             served: m.overall.count(),
             rejected: m.rejected,
             assign_served: m.assign.count(),
@@ -824,6 +873,160 @@ fn reply_phases(queue_delay: f64, outcome: &super::SolveOutcome) -> Option<Phase
     Some(p)
 }
 
+/// Padded-slab cells a joint dispatch wastes beyond the live
+/// instances' logical sizes — K · Hmax · Wmax − Σ h·w, mirroring the
+/// batched driver's own accounting from instance dims alone.
+fn batch_padding_cells(instances: &[ProblemInstance]) -> u64 {
+    let (mut hmax, mut wmax, mut logical) = (0u64, 0u64, 0u64);
+    for inst in instances {
+        if let ProblemInstance::Grid(net) = inst {
+            hmax = hmax.max(net.height as u64);
+            wmax = wmax.max(net.width as u64);
+            logical += (net.height * net.width) as u64;
+        }
+    }
+    (instances.len() as u64 * hmax * wmax).saturating_sub(logical)
+}
+
+/// Joint device dispatch for a batch cut from the shard queues.
+/// Replies in place to every slot the batched backend served or
+/// cancelled — each under its **own** deadline and latency clock — and
+/// returns the jobs that still need the ordinary per-job path: the
+/// whole batch when the router or backend declined it, the failed
+/// slots otherwise (each re-solved on the full retry/fallback chain).
+fn dispatch_batch(
+    worker: usize,
+    backends: &mut WorkerBackends,
+    metrics: &Mutex<PoolMetrics>,
+    batch: Vec<QueuedJob>,
+) -> Vec<QueuedJob> {
+    // Second-chance shed: a job whose deadline died during the linger
+    // is answered now, never padded into the dispatch (a batch inherits
+    // nobody's budget — not its slackest member's, not its deadest's).
+    let mut live = Vec::with_capacity(batch.len());
+    for job in batch {
+        if job.deadline.map_or(false, |dl| Instant::now() >= dl) {
+            {
+                let mut m = metrics.lock().unwrap();
+                m.reject(1);
+                m.deadline_miss(1);
+                m.linger_shed(1);
+            }
+            let _ = job
+                .reply
+                .send(Err(ReplyError::Rejected(RejectReason::DeadlineExceeded)));
+        } else {
+            live.push(job);
+        }
+    }
+    if live.len() < 2 {
+        return live;
+    }
+    let class = live[0].class;
+    // Pull the instances out of the payloads; per-job metadata
+    // (deadline, reply channel) rides alongside so replies fan back
+    // per job.
+    let mut metas = Vec::with_capacity(live.len());
+    let mut instances = Vec::with_capacity(live.len());
+    for job in live {
+        let QueuedJob {
+            id,
+            class,
+            payload,
+            submitted,
+            deadline,
+            reply,
+        } = job;
+        let JobPayload::Solve { instance, .. } = payload else {
+            unreachable!("pop_batch cuts plain solve jobs only");
+        };
+        metas.push((id, class, submitted, deadline, reply));
+        instances.push(instance);
+    }
+    let cancels: Vec<CancelToken> = metas
+        .iter()
+        .map(|m| CancelToken::with_deadline(m.3))
+        .collect();
+    let dispatched = Instant::now();
+    let Some(results) = backends.solve_batch(class, &instances, &cancels) else {
+        // Declined (backend gated off, breaker open, or adaptive
+        // routing prefers another engine): rebuild the jobs untouched.
+        return metas
+            .into_iter()
+            .zip(instances)
+            .map(|((id, class, submitted, deadline, reply), instance)| QueuedJob {
+                id,
+                class,
+                payload: JobPayload::Solve {
+                    instance,
+                    open_session: false,
+                },
+                submitted,
+                deadline,
+                reply,
+            })
+            .collect();
+    };
+    metrics
+        .lock()
+        .unwrap()
+        .batch_dispatched(instances.len(), batch_padding_cells(&instances));
+    let mut fallback = Vec::new();
+    for ((meta, instance), slot) in metas.into_iter().zip(instances).zip(results) {
+        let (id, class, submitted, deadline, reply) = meta;
+        let queue_delay = dispatched.saturating_duration_since(submitted).as_secs_f64();
+        match slot {
+            Ok(served) => {
+                let latency = submitted.elapsed().as_secs_f64();
+                let mut m = metrics.lock().unwrap();
+                m.record(class, served.outcome.family(), served.backend, latency);
+                drop(m);
+                let _ = reply.send(Ok(SolveReply {
+                    id,
+                    class,
+                    worker,
+                    backend: served.backend,
+                    latency,
+                    queue_delay,
+                    retries: served.retries,
+                    breaker_skips: served.breaker_skips,
+                    session: None,
+                    warm: false,
+                    phases: reply_phases(queue_delay, &served.outcome),
+                    outcome: served.outcome,
+                }));
+            }
+            Err(fail) if fail.cancelled => {
+                let mut m = metrics.lock().unwrap();
+                m.fail();
+                m.deadline_miss(1);
+                drop(m);
+                let _ = reply.send(Err(ReplyError::Failed {
+                    message: fail.error,
+                    retries: fail.retries,
+                }));
+            }
+            Err(_) => {
+                // Its telemetry strike is already recorded; the request
+                // itself re-solves per instance on the retry/fallback
+                // chain.
+                fallback.push(QueuedJob {
+                    id,
+                    class,
+                    payload: JobPayload::Solve {
+                        instance,
+                        open_session: false,
+                    },
+                    submitted,
+                    deadline,
+                    reply,
+                });
+            }
+        }
+    }
+    fallback
+}
+
 #[allow(clippy::too_many_arguments)]
 fn solver_worker_loop(
     idx: usize,
@@ -842,6 +1045,8 @@ fn solver_worker_loop(
     // are !Send, exactly like a CUDA context — they live and die on
     // this thread.  The telemetry sink is the one shared measurement
     // store behind adaptive routing.
+    let batch_max = rcfg.batch_max.max(1);
+    let batch_linger = Duration::from_micros(rcfg.batch_linger_us);
     let mut backends = WorkerBackends::with_telemetry(rcfg, Some(&wave_pool), telemetry);
     // Warm-start sessions live with the worker that opened them (the
     // directory routes updates here); the LRU byte budget bounds their
@@ -857,18 +1062,41 @@ fn solver_worker_loop(
         "flowmatch_session_store_bytes{{pool=\"{label}\",worker=\"{idx}\"}}"
     ));
     let mut shed = Vec::new();
+    // Jobs a cut batch handed back for per-job dispatch (declined
+    // batches, failed slots) — served before pulling new work.
+    let mut pending: VecDeque<QueuedJob> = VecDeque::new();
     loop {
-        let popped = queues.pop(idx, total, &mut shed);
-        // Jobs whose deadline passed while queued are answered without
-        // ever touching a backend — including when the scan found no
-        // live job at all (`pop` hands them back instead of blocking).
-        let had_shed = !shed.is_empty();
-        shed_expired(&metrics, &mut shed);
-        let Some(job) = popped else {
-            if had_shed {
-                continue; // swept expired jobs; scan again
+        let job = if let Some(job) = pending.pop_front() {
+            job
+        } else {
+            let popped = if batch_max > 1 {
+                queues.pop_batch(idx, total, batch_max, batch_linger, &mut shed)
+            } else {
+                queues.pop(idx, total, &mut shed).map(|job| vec![job])
+            };
+            // Jobs whose deadline passed while queued are answered
+            // without ever touching a backend — including when the scan
+            // found no live job at all (the pops hand them back instead
+            // of blocking).
+            let had_shed = !shed.is_empty();
+            shed_expired(&metrics, &mut shed);
+            let Some(mut batch) = popped else {
+                if had_shed {
+                    continue; // swept expired jobs; scan again
+                }
+                break; // shutdown and drained
+            };
+            if batch.len() > 1 {
+                // Joint device dispatch; whatever it hands back (the
+                // whole batch if declined, failed slots otherwise)
+                // drains through the ordinary per-job path.
+                pending = dispatch_batch(idx, &mut backends, &metrics, batch).into();
+                continue;
             }
-            break; // shutdown and drained
+            match batch.pop() {
+                Some(job) => job,
+                None => continue,
+            }
         };
         let queue_delay = job.submitted.elapsed().as_secs_f64();
         // Second-chance deadline shed for the job we are about to run.

@@ -32,15 +32,15 @@ use crate::coordinator::PjrtAssignmentDriver;
 use crate::graph::{GridCsrIndex, GridNetwork};
 use crate::gridflow::warm::WarmState;
 use crate::gridflow::{
-    CapacityDelta, GridSolveReport, HostRounds, HybridGridSolver, NativeGridExecutor,
-    NativeParGridExecutor,
+    padded_class, BatchGridSolver, CapacityDelta, GridSolveReport, HostRounds, HybridGridSolver,
+    NativeGridExecutor, NativeParGridExecutor,
 };
 use crate::maxflow::fifo::FifoPushRelabel;
 use crate::maxflow::global_relabel::STRIPED_RELABEL_MIN_NODES;
 use crate::maxflow::warm::{CsrDelta, CsrWarmState};
 use crate::maxflow::{self, MaxFlowSolver};
 use crate::parallel::ParTuning;
-use crate::runtime::ArtifactRegistry;
+use crate::runtime::{ArtifactRegistry, BatchedGridDriver};
 use crate::util::{CancelToken, Cancelled};
 use crate::workloads::ProblemInstance;
 
@@ -109,6 +109,22 @@ pub trait Backend {
     /// deadline miss, not a backend fault (no penalty, no breaker, no
     /// retry).
     fn solve(&mut self, instance: &ProblemInstance, cancel: &CancelToken) -> Result<SolveOutcome>;
+
+    /// Solve a micro-batch of same-class instances in one dispatch,
+    /// each slot under its **own** cancel token (per-job deadlines — a
+    /// batch never inherits its slackest member's budget).  `None`, the
+    /// default, means this backend has no batched path and the pool
+    /// must dispatch per instance; `Some` carries one result per slot,
+    /// in order, with a fired token surfacing as the typed
+    /// [`Cancelled`] error in that slot only.
+    fn solve_batch(
+        &mut self,
+        instances: &[&ProblemInstance],
+        cancels: &[CancelToken],
+    ) -> Option<Vec<Result<SolveOutcome>>> {
+        let _ = (instances, cancels);
+        None
+    }
 }
 
 fn wrong_family(backend: &'static str, instance: &ProblemInstance) -> anyhow::Error {
@@ -368,6 +384,95 @@ impl Backend for FifoLockfreeBackend {
     }
 }
 
+/// The batched device backend: grid micro-batches run as joint padded
+/// dispatches on a [`BatchedGridDriver`] (the deterministic
+/// host-simulated device today; a PJRT artifact compiled for the padded
+/// batch shape slots in behind the same driver).  Single solves run as
+/// a batch of one, so the adaptive router's EWMA measures this engine
+/// on exactly the path batches take.  Instantiated only when
+/// `[service] batch_max > 1` — defaults leave routing untouched.
+struct BatchedGridBackend {
+    cycle_waves: usize,
+    /// Drivers cached per padded class: staging literals stay warm and
+    /// the dispatch stats accumulate across requests.
+    drivers: std::collections::BTreeMap<(usize, usize), BatchedGridDriver>,
+}
+
+impl BatchedGridBackend {
+    fn new(cycle_waves: usize) -> Self {
+        Self {
+            cycle_waves,
+            drivers: std::collections::BTreeMap::new(),
+        }
+    }
+
+    fn solve_grids(
+        &mut self,
+        nets: &[&GridNetwork],
+        cancels: &[CancelToken],
+    ) -> Result<Vec<Result<GridSolveReport>>> {
+        let class = padded_class(nets);
+        let driver = self
+            .drivers
+            .entry(class)
+            .or_insert_with(|| BatchedGridDriver::for_class(class.0, class.1));
+        let before = driver.stats();
+        let tokens: Vec<Option<CancelToken>> = cancels.iter().cloned().map(Some).collect();
+        let out =
+            BatchGridSolver::with_cycle(self.cycle_waves).solve_batch(nets, &tokens, driver)?;
+        crate::obs::record_batch_dispatches(&before, &driver.stats());
+        Ok(out)
+    }
+}
+
+impl Backend for BatchedGridBackend {
+    fn name(&self) -> &'static str {
+        "grid-batch"
+    }
+
+    fn family(&self) -> Family {
+        Family::Grid
+    }
+
+    fn solve(&mut self, instance: &ProblemInstance, cancel: &CancelToken) -> Result<SolveOutcome> {
+        match instance {
+            ProblemInstance::Grid(net) => {
+                let results = self.solve_grids(&[net], std::slice::from_ref(cancel))?;
+                let report = results.into_iter().next().expect("batch of one")?;
+                Ok(SolveOutcome::Grid(report))
+            }
+            other => Err(wrong_family(self.name(), other)),
+        }
+    }
+
+    fn solve_batch(
+        &mut self,
+        instances: &[&ProblemInstance],
+        cancels: &[CancelToken],
+    ) -> Option<Vec<Result<SolveOutcome>>> {
+        let mut nets = Vec::with_capacity(instances.len());
+        for inst in instances {
+            match inst {
+                ProblemInstance::Grid(net) => nets.push(*net),
+                // A mixed batch is a pool bug; refuse the batched path
+                // and let per-instance dispatch sort it out.
+                _ => return None,
+            }
+        }
+        match self.solve_grids(&nets, cancels) {
+            Ok(results) => Some(
+                results
+                    .into_iter()
+                    .map(|r| r.map(SolveOutcome::Grid))
+                    .collect(),
+            ),
+            // Whole-dispatch failure (shape refused, driver died):
+            // decline — the pool re-solves every slot per instance.
+            Err(_) => None,
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Registry
 // ---------------------------------------------------------------------------
@@ -463,6 +568,16 @@ impl BackendRegistry {
                 threads: cfg.par_threads.max(1),
             }))
         });
+        // Config-gated like PJRT: with batching off (`batch_max <= 1`,
+        // the default) the backend does not instantiate, so routing —
+        // static tables, adaptive candidates, fallback chains — is
+        // bit-identical to the pre-batching service.
+        r.register("grid-batch", Family::Grid, |cfg, _| {
+            if cfg.batch_max <= 1 {
+                return None;
+            }
+            Some(Box::new(BatchedGridBackend::new(cfg.cycle_waves)))
+        });
         r
     }
 
@@ -556,6 +671,10 @@ pub enum GridBackend {
     NativePar,
     /// Hong's lock-free engine over the CSR conversion.
     FifoLockfree,
+    /// Batched device dispatches (bit-exact with `Native`); requires
+    /// `batch_max > 1` or the backend does not instantiate and the
+    /// fallback chain serves the request.
+    Batch,
 }
 
 impl GridBackend {
@@ -564,9 +683,10 @@ impl GridBackend {
             "native" => GridBackend::Native,
             "native-par" => GridBackend::NativePar,
             "fifo-lockfree" => GridBackend::FifoLockfree,
+            "grid-batch" => GridBackend::Batch,
             other => bail!(
                 "unknown grid backend {other:?} \
-                 (expected native, native-par, fifo-lockfree)"
+                 (expected native, native-par, fifo-lockfree, grid-batch)"
             ),
         })
     }
@@ -576,6 +696,7 @@ impl GridBackend {
             GridBackend::Native => "native",
             GridBackend::NativePar => "native-par",
             GridBackend::FifoLockfree => "fifo-lockfree",
+            GridBackend::Batch => "grid-batch",
         }
     }
 }
@@ -641,6 +762,16 @@ pub struct RouterConfig {
     /// Chaos harness: wrap the targeted backend in a [`FaultyBackend`]
     /// driven by this plan (`loadgen --chaos <seed>`).
     pub fault: Option<FaultPlan>,
+    /// Most grid solves one device dispatch may carry (`[service]
+    /// batch_max`, `loadgen --batch-max`).  At the default 1 the
+    /// `grid-batch` backend does not instantiate and the shard queues
+    /// never cut batches — the service is bit-identical to the
+    /// pre-batching build.
+    pub batch_max: usize,
+    /// Longest a cut batch may linger waiting for compatible jobs, in
+    /// microseconds (`[service] batch_linger_us`).  The reserved
+    /// real-time lane (worker 0 when `workers >= 2`) never lingers.
+    pub batch_linger_us: u64,
 }
 
 impl Default for RouterConfig {
@@ -670,6 +801,8 @@ impl Default for RouterConfig {
             breaker_threshold: 3,
             breaker_cooldown: 8,
             fault: None,
+            batch_max: 1,
+            batch_linger_us: 200,
         }
     }
 }
@@ -1018,6 +1151,105 @@ impl WorkerBackends {
         })
     }
 
+    /// Serve a batch cut from the shard queues as one joint device
+    /// dispatch on the `grid-batch` backend.  Returns `None` when the
+    /// batch should be served per-instance instead: the backend is not
+    /// instantiated (`batch_max <= 1`), the batch is a singleton, this
+    /// class's breaker is open, or — in adaptive mode — the telemetry
+    /// sink's EWMA arbitration would not route this class to the
+    /// batched backend anyway.  Per-slot outcomes mirror [`Self::solve`]'s
+    /// accounting with the joint dispatch cost attributed evenly across
+    /// slots; a non-cancelled failed slot does *not* complete the
+    /// request here because the caller re-solves it per instance on the
+    /// ordinary fallback chain.
+    pub(crate) fn solve_batch(
+        &mut self,
+        class: SizeClass,
+        instances: &[ProblemInstance],
+        cancels: &[CancelToken],
+    ) -> Option<Vec<Result<SolveAttempts, SolveFailure>>> {
+        if instances.len() < 2 {
+            return None;
+        }
+        let family = Family::of(&instances[0]);
+        let idx = self.index_of("grid-batch")?;
+        if self.cfg.routing == RoutingMode::Adaptive {
+            let mut skips = 0u32;
+            if self.route_adaptive(class, &instances[0], &mut skips) != "grid-batch" {
+                return None;
+            }
+        }
+        if !self.telemetry.breaker_allows(family, class, "grid-batch") {
+            return None;
+        }
+        let refs: Vec<&ProblemInstance> = instances.iter().collect();
+        let t = Instant::now();
+        let backend = &mut self.backends[idx];
+        let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            backend.solve_batch(&refs, cancels)
+        }));
+        let per_slot = t.elapsed().as_secs_f64() / instances.len() as f64;
+        let results = match solved {
+            Ok(Some(results)) => results,
+            // The backend declined the batch (mixed families): solve
+            // per instance, no telemetry — nothing was attempted.
+            Ok(None) => return None,
+            Err(_) => {
+                // A panicking dispatch is one failed attempt against
+                // the backend; every slot re-solves on the fallback
+                // chain via the caller.
+                self.telemetry.record(
+                    family,
+                    class,
+                    "grid-batch",
+                    per_slot.max(MIN_FAILURE_SECS) * FAILURE_PENALTY,
+                );
+                self.telemetry.record_breaker_failure(family, class, "grid-batch");
+                return None;
+            }
+        };
+        Some(
+            results
+                .into_iter()
+                .map(|slot| match slot {
+                    Ok(out) => {
+                        self.telemetry.record(family, class, "grid-batch", per_slot);
+                        self.telemetry.record_breaker_success(family, class, "grid-batch");
+                        self.telemetry.request_completed(family, class);
+                        Ok(SolveAttempts {
+                            outcome: out,
+                            backend: "grid-batch",
+                            retries: 0,
+                            breaker_skips: 0,
+                        })
+                    }
+                    Err(e) if Cancelled::caused(&e) => {
+                        self.telemetry.request_completed(family, class);
+                        Err(SolveFailure {
+                            error: format!("{e:#}"),
+                            retries: 0,
+                            cancelled: true,
+                        })
+                    }
+                    Err(e) => {
+                        self.telemetry.record(
+                            family,
+                            class,
+                            "grid-batch",
+                            per_slot.max(MIN_FAILURE_SECS) * FAILURE_PENALTY,
+                        );
+                        self.telemetry.record_breaker_failure(family, class, "grid-batch");
+                        Err(SolveFailure {
+                            error: format!("solver error: {e:#}"),
+                            retries: 0,
+                            cancelled: false,
+                        })
+                    }
+                })
+                .collect(),
+        )
+    }
+
     /// Test hook: build against an arbitrary registry (fault injection).
     #[cfg(test)]
     fn with_registry_for_tests(cfg: RouterConfig, registry: &BackendRegistry) -> Self {
@@ -1067,7 +1299,10 @@ impl WorkerBackends {
         cancel: &CancelToken,
     ) -> Result<(SolveOutcome, SessionState, &'static str)> {
         match self.cfg.grid[class.index()] {
-            GridBackend::Native => {
+            // The batched backend keeps no warm state (every dispatch
+            // re-packs the wire literal), so sessions opened under it
+            // run on its bit-exact native twin.
+            GridBackend::Native | GridBackend::Batch => {
                 let solver = HybridGridSolver::with_cycle(self.cfg.cycle_waves)
                     .with_cancel(cancel.clone());
                 let mut exec = NativeGridExecutor::default();
@@ -1411,6 +1646,7 @@ mod tests {
             GridBackend::Native,
             GridBackend::NativePar,
             GridBackend::FifoLockfree,
+            GridBackend::Batch,
         ] {
             assert_eq!(GridBackend::parse(b.name()).unwrap(), b);
         }
@@ -1427,13 +1663,13 @@ mod tests {
         );
         assert_eq!(
             reg.names(Family::Grid),
-            ["native", "native-par", "fifo-lockfree"]
+            ["native", "native-par", "fifo-lockfree", "grid-batch"]
         );
         // Every static-table name resolves to a registered spec.
         for n in ["hungarian", "csa-seq", "csa-lockfree", "csa-wave"] {
             assert!(reg.names(Family::Assignment).contains(&n));
         }
-        for n in ["native", "native-par", "fifo-lockfree"] {
+        for n in ["native", "native-par", "fifo-lockfree", "grid-batch"] {
             assert!(reg.names(Family::Grid).contains(&n));
         }
     }
@@ -1480,6 +1716,101 @@ mod tests {
                 .solve_named(b.name(), &ProblemInstance::Grid(net.clone()))
                 .unwrap();
             assert_eq!(out.flow(), Some(want), "backend {}", b.name());
+        }
+    }
+
+    /// `batch_max` gates the batched backend: the default config is
+    /// bit-identical to the pre-batching registry, and enabling it
+    /// instantiates an engine that agrees with Dinic on a batch of one.
+    #[test]
+    fn grid_batch_backend_is_config_gated_and_optimal() {
+        let mut defaults = WorkerBackends::new(RouterConfig::default(), None);
+        let mut rng = Rng::seeded(41);
+        let net = random_grid(&mut rng, 6, 8, 9, 0.3, 0.3);
+        assert!(
+            defaults
+                .solve_named("grid-batch", &ProblemInstance::Grid(net.clone()))
+                .is_err(),
+            "grid-batch must not instantiate at batch_max = 1"
+        );
+        let cfg = RouterConfig {
+            batch_max: 8,
+            ..RouterConfig::default()
+        };
+        let mut backends = WorkerBackends::new(cfg, None);
+        let mut g = net.to_flow_network();
+        let want = Dinic.solve(&mut g).unwrap().value;
+        let out = backends
+            .solve_named("grid-batch", &ProblemInstance::Grid(net))
+            .unwrap();
+        assert_eq!(out.flow(), Some(want));
+    }
+
+    /// The worker-level batched dispatch returns the same per-slot
+    /// reports as routing every instance through `solve` alone.
+    #[test]
+    fn worker_solve_batch_matches_per_instance_solves() {
+        let cfg = RouterConfig {
+            batch_max: 8,
+            ..RouterConfig::default()
+        };
+        let instances: Vec<ProblemInstance> = [(42u64, 5, 7), (43, 7, 5), (44, 7, 7)]
+            .iter()
+            .map(|&(seed, h, w)| {
+                let mut rng = Rng::seeded(seed);
+                ProblemInstance::Grid(random_grid(&mut rng, h, w, 9, 0.3, 0.3))
+            })
+            .collect();
+        let cancels: Vec<CancelToken> = instances.iter().map(|_| CancelToken::new()).collect();
+        let mut batched = WorkerBackends::new(cfg.clone(), None);
+        let got = batched
+            .solve_batch(SizeClass::Small, &instances, &cancels)
+            .expect("grid-batch available and batch non-trivial");
+        assert_eq!(got.len(), instances.len());
+        let mut solo = WorkerBackends::new(cfg, None);
+        for (k, (inst, served)) in instances.iter().zip(got).enumerate() {
+            let served = served.unwrap_or_else(|e| panic!("slot {k}: {e}"));
+            assert_eq!(served.backend, "grid-batch", "slot {k}");
+            let want = solo
+                .solve_named("grid-batch", inst)
+                .unwrap()
+                .flow()
+                .unwrap();
+            assert_eq!(served.outcome.flow(), Some(want), "slot {k}");
+        }
+        // Singleton batches decline so the caller takes the ordinary
+        // per-instance path (no joint-dispatch overhead for one job).
+        assert!(batched
+            .solve_batch(SizeClass::Small, &instances[..1], &cancels[..1])
+            .is_none());
+    }
+
+    /// An already-expired slot in a batch surfaces as a cancelled
+    /// failure while its batchmates solve to optimality.
+    #[test]
+    fn expired_slot_in_worker_batch_is_cancelled_not_failed() {
+        let cfg = RouterConfig {
+            batch_max: 8,
+            ..RouterConfig::default()
+        };
+        let mut backends = WorkerBackends::new(cfg, None);
+        let instances: Vec<ProblemInstance> = [(45u64, 6, 6), (46, 6, 6)]
+            .iter()
+            .map(|&(seed, h, w)| {
+                let mut rng = Rng::seeded(seed);
+                ProblemInstance::Grid(random_grid(&mut rng, h, w, 9, 0.3, 0.3))
+            })
+            .collect();
+        let dead = CancelToken::new();
+        dead.cancel();
+        let cancels = vec![CancelToken::new(), dead];
+        let got = backends
+            .solve_batch(SizeClass::Small, &instances, &cancels)
+            .unwrap();
+        assert!(got[0].is_ok(), "live slot must solve");
+        match &got[1] {
+            Err(f) => assert!(f.cancelled, "expired slot must be a deadline miss"),
+            Ok(_) => panic!("expired slot must not solve"),
         }
     }
 

@@ -219,6 +219,19 @@ pub(crate) fn scan_order(worker: usize, workers: usize) -> &'static [SizeClass] 
     }
 }
 
+/// Whether a job may ride in a grid micro-batch: a plain cold grid
+/// solve.  Session opens keep per-worker state and session updates are
+/// sticky — both stay on the per-instance path.
+fn batchable(job: &QueuedJob) -> bool {
+    matches!(
+        &job.payload,
+        JobPayload::Solve {
+            instance: ProblemInstance::Grid(_),
+            open_session: false,
+        }
+    )
+}
+
 /// Move every already-expired job out of `q` into `shed` (the caller
 /// replies `DeadlineExceeded` and counts the misses, outside the lock).
 fn drain_expired(q: &mut VecDeque<QueuedJob>, now: Instant, shed: &mut Vec<QueuedJob>) {
@@ -374,6 +387,94 @@ impl ShardedQueues {
         }
     }
 
+    /// Pop a micro-batch: the seed job comes from the normal scan
+    /// ([`ShardedQueues::pop`] semantics, including the pinned lane and
+    /// expired-job shedding), then — when the seed is a *plain grid
+    /// solve* (no session open) and `max > 1` — up to `max - 1`
+    /// compatible followers are cut from the **front** of the seed's
+    /// class shard.  Compatible = same class, grid family, plain solve;
+    /// the cut stops at the first live incompatible job, so nothing is
+    /// reordered past anything else in its shard.  Expired jobs met
+    /// while cutting go to `shed` (answered `DeadlineExceeded`, never
+    /// solved) — each member keeps its own deadline; the batch inherits
+    /// nothing from its slackest member.
+    ///
+    /// If the cut comes up short and `linger` is nonzero, the worker
+    /// waits on the condvar up to the linger deadline for more
+    /// compatible arrivals.  The reserved real-time lane (worker 0 when
+    /// `workers ≥ 2`) **never lingers** — its job is latency, and a
+    /// seed popped there dispatches immediately with whatever was
+    /// already queued.
+    ///
+    /// Returns `None` exactly when [`ShardedQueues::pop`] would: shed
+    /// jobs to reply to (non-empty `shed`), or shutdown.
+    pub fn pop_batch(
+        &self,
+        worker: usize,
+        workers: usize,
+        max: usize,
+        linger: std::time::Duration,
+        shed: &mut Vec<QueuedJob>,
+    ) -> Option<Vec<QueuedJob>> {
+        let seed = self.pop(worker, workers, shed)?;
+        if max <= 1 || !batchable(&seed) {
+            return Some(vec![seed]);
+        }
+        let class = seed.class;
+        let mut batch = vec![seed];
+        let realtime = workers >= 2 && worker == 0;
+        let start = Instant::now();
+        let deadline = start + linger;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            let q = &mut st.queues[class.index()];
+            while batch.len() < max {
+                match q.front() {
+                    Some(j) if j.expired(now) => {
+                        shed.push(q.pop_front().expect("front exists"));
+                    }
+                    Some(j) if batchable(j) => {
+                        batch.push(q.pop_front().expect("front exists"));
+                    }
+                    _ => break,
+                }
+            }
+            if batch.len() >= max || realtime || st.shutdown {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        drop(st);
+        // One cut record per batch path taken (singletons included: the
+        // histogram is the cut-size distribution, and a lone seed after
+        // a full linger is signal, not noise).
+        let (mut hmax, mut wmax, mut logical) = (0u64, 0u64, 0u64);
+        for job in &batch {
+            if let JobPayload::Solve {
+                instance: ProblemInstance::Grid(net),
+                ..
+            } = &job.payload
+            {
+                hmax = hmax.max(net.height as u64);
+                wmax = wmax.max(net.width as u64);
+                logical += (net.height * net.width) as u64;
+            }
+        }
+        crate::obs::record_batch_cut(
+            batch.len(),
+            batch.len() as u64 * hmax * wmax,
+            logical,
+            start.elapsed().as_secs_f64(),
+        );
+        Some(batch)
+    }
+
     /// Begin shutdown: no new admissions; workers drain then exit.
     pub fn shutdown(&self) {
         self.state.lock().unwrap().shutdown = true;
@@ -437,6 +538,131 @@ mod tests {
         let got = q.pop(worker, workers, &mut shed);
         assert!(shed.is_empty(), "unexpected shed during test pop");
         got
+    }
+
+    /// A plain cold grid solve — the only payload shape that batches.
+    fn grid_job(class: SizeClass, id: u64) -> QueuedJob {
+        let mut j = job(class);
+        j.id = id;
+        j.payload = JobPayload::Solve {
+            instance: ProblemInstance::Grid(crate::graph::GridNetwork::zeros(2, 2)),
+            open_session: false,
+        };
+        j
+    }
+
+    #[test]
+    fn pop_batch_cuts_compatible_plain_grid_solves() {
+        let q = ShardedQueues::new(ShardConfig::default(), 1);
+        let mut shed = Vec::new();
+        for id in 0..3 {
+            assert!(q.push(grid_job(SizeClass::Small, id), &mut shed).is_ok());
+        }
+        // An assignment job interrupts the run; a grid job sits behind it.
+        assert!(q.push(job(SizeClass::Small), &mut shed).is_ok());
+        assert!(q.push(grid_job(SizeClass::Small, 9), &mut shed).is_ok());
+        let batch = q
+            .pop_batch(0, 1, 8, std::time::Duration::ZERO, &mut shed)
+            .unwrap();
+        assert!(shed.is_empty());
+        let ids: Vec<u64> = batch.iter().map(|j| j.id).collect();
+        assert_eq!(ids, vec![0, 1, 2], "cut stops at the first incompatible job");
+        // FIFO past the cut point is intact: assignment first, then the
+        // grid job that was parked behind it.
+        let next = pop(&q, 0, 1).unwrap();
+        assert!(!batchable(&next), "assignment job preserved its slot");
+        assert_eq!(pop(&q, 0, 1).unwrap().id, 9);
+    }
+
+    /// Satellite regression: an expired job inside a cut batch is shed
+    /// (its reply is `DeadlineExceeded`, handled by the pool from
+    /// `shed`) while its batchmates are returned for solving.  The
+    /// batch never inherits the slackest member's deadline — each
+    /// member keeps its own.
+    #[test]
+    fn expired_mate_in_cut_batch_is_shed_not_solved() {
+        let q = ShardedQueues::new(ShardConfig::default(), 1);
+        let mut shed = Vec::new();
+        assert!(q.push(grid_job(SizeClass::Small, 1), &mut shed).is_ok());
+        let mut dead = grid_job(SizeClass::Small, 2);
+        dead.deadline = Some(Instant::now() - std::time::Duration::from_millis(10));
+        assert!(q.push(dead, &mut shed).is_ok());
+        assert!(q.push(grid_job(SizeClass::Small, 3), &mut shed).is_ok());
+        let batch = q
+            .pop_batch(0, 1, 8, std::time::Duration::ZERO, &mut shed)
+            .unwrap();
+        let ids: Vec<u64> = batch.iter().map(|j| j.id).collect();
+        assert_eq!(ids, vec![1, 3], "live batchmates solve");
+        assert_eq!(shed.len(), 1, "expired mate shed, not solved");
+        assert_eq!(shed[0].id, 2);
+    }
+
+    /// The reserved real-time lane dispatches immediately: no linger
+    /// wait even when the batch is short of `max`.
+    #[test]
+    fn pop_batch_realtime_lane_never_lingers() {
+        let q = ShardedQueues::new(ShardConfig::default(), 2);
+        let mut shed = Vec::new();
+        assert!(q.push(grid_job(SizeClass::Small, 1), &mut shed).is_ok());
+        let t0 = Instant::now();
+        let batch = q
+            .pop_batch(0, 2, 8, std::time::Duration::from_millis(500), &mut shed)
+            .unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t0.elapsed() < std::time::Duration::from_millis(250),
+            "real-time lane lingered"
+        );
+    }
+
+    /// A non-realtime worker lingers up to the deadline and picks up a
+    /// compatible late arrival.
+    #[test]
+    fn pop_batch_lingers_for_late_arrivals() {
+        use std::sync::Arc;
+        let q = Arc::new(ShardedQueues::new(ShardConfig::default(), 1));
+        let mut shed = Vec::new();
+        assert!(q.push(grid_job(SizeClass::Small, 1), &mut shed).is_ok());
+        let q2 = Arc::clone(&q);
+        let late = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            let mut shed = Vec::new();
+            assert!(q2.push(grid_job(SizeClass::Small, 2), &mut shed).is_ok());
+        });
+        let batch = q
+            .pop_batch(0, 1, 2, std::time::Duration::from_millis(2_000), &mut shed)
+            .unwrap();
+        late.join().unwrap();
+        let ids: Vec<u64> = batch.iter().map(|j| j.id).collect();
+        assert_eq!(ids, vec![1, 2], "linger caught the late arrival");
+    }
+
+    /// Non-batchable seeds (assignment; grid session opens) never grow
+    /// a batch, even with compatible jobs queued behind them.
+    #[test]
+    fn non_batchable_seed_dispatches_alone() {
+        let q = ShardedQueues::new(ShardConfig::default(), 1);
+        let mut shed = Vec::new();
+        assert!(q.push(job(SizeClass::Small), &mut shed).is_ok());
+        assert!(q.push(grid_job(SizeClass::Small, 7), &mut shed).is_ok());
+        let batch = q
+            .pop_batch(0, 1, 8, std::time::Duration::ZERO, &mut shed)
+            .unwrap();
+        assert_eq!(batch.len(), 1, "assignment seed stays solo");
+
+        let mut open = grid_job(SizeClass::Small, 8);
+        if let JobPayload::Solve { open_session, .. } = &mut open.payload {
+            *open_session = true;
+        }
+        assert!(q.push(open, &mut shed).is_ok());
+        assert!(q.push(grid_job(SizeClass::Small, 9), &mut shed).is_ok());
+        // Drain the id-7 job left from the first cut-stop.
+        assert_eq!(pop(&q, 0, 1).unwrap().id, 7);
+        let batch = q
+            .pop_batch(0, 1, 8, std::time::Duration::ZERO, &mut shed)
+            .unwrap();
+        assert_eq!(batch.len(), 1, "session-open seed stays solo");
+        assert_eq!(batch[0].id, 8);
     }
 
     #[test]

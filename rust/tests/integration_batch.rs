@@ -1,0 +1,232 @@
+//! Differential suite for batched device execution: the padded
+//! multi-instance dispatch must be *bit-exact* with both the
+//! per-instance device path and the native oracle — same flow, same
+//! wave/push/relabel trajectory — across size classes, ragged batches,
+//! and the degenerate batch of one.  On the service side, a pool with
+//! micro-batching enabled must answer the identical flows as the
+//! pre-batching pool, and `batch_max = 1` must keep batching fully
+//! disengaged.
+
+use std::collections::BTreeMap;
+
+use flowmatch::coordinator::{solve_grid_batch, solve_grid_with, Backend, GridEngine};
+use flowmatch::graph::GridNetwork;
+use flowmatch::service::{
+    replay, CancelToken, Cancelled, PoolConfig, ProblemInstance, RouterConfig, ShardConfig,
+    SolveOutcome, SolverPool,
+};
+use flowmatch::util::Rng;
+use flowmatch::workloads::{random_grid, MixedTrace, MixedTraceConfig, TraceConfig};
+
+const CYCLE: usize = 96;
+
+/// Solve each net solo with a forced engine and return the trajectory
+/// counters that must survive batching untouched.
+fn solo_trajectories(nets: &[GridNetwork], engine: GridEngine) -> Vec<(i64, u64, i64, i64, i64)> {
+    nets.iter()
+        .map(|net| {
+            let (r, backend) = solve_grid_with(net, CYCLE, None, engine).unwrap();
+            if engine == GridEngine::Pjrt {
+                assert_eq!(backend, Backend::Pjrt, "forced device path must report Pjrt");
+            }
+            (r.flow, r.host_rounds, r.waves, r.pushes, r.relabels)
+        })
+        .collect()
+}
+
+fn assert_batch_matches(nets: &[GridNetwork], label: &str) {
+    let refs: Vec<&GridNetwork> = nets.iter().collect();
+    let cancels = vec![None; nets.len()];
+    let batched = solve_grid_batch(&refs, CYCLE, None, &cancels).unwrap();
+    let native = solo_trajectories(nets, GridEngine::Native);
+    let device = solo_trajectories(nets, GridEngine::Pjrt);
+    // The device path is bit-exact with native before batching even
+    // enters the picture; assert it so a failure pinpoints the layer.
+    assert_eq!(native, device, "{label}: per-instance device vs native");
+    for (slot, report) in batched.into_iter().enumerate() {
+        let r = report.unwrap_or_else(|e| panic!("{label}: slot {slot} failed: {e:#}"));
+        assert_eq!(
+            (r.flow, r.host_rounds, r.waves, r.pushes, r.relabels),
+            native[slot],
+            "{label}: slot {slot} diverged from the solo trajectory"
+        );
+    }
+}
+
+/// Uniform batch: every slot the same shape, no padding at all.
+#[test]
+fn uniform_batch_is_bit_exact_with_solo_solves() {
+    let mut rng = Rng::seeded(901);
+    let nets: Vec<GridNetwork> = (0..4)
+        .map(|_| random_grid(&mut rng, 10, 10, 9, 0.3, 0.3))
+        .collect();
+    assert_batch_matches(&nets, "uniform 10x10 x4");
+}
+
+/// Ragged batch: four different shapes padded to the 9x10 envelope.
+/// Padding planes carry zero capacity, so padded cells can never push;
+/// each slot's trajectory must match its solo solve exactly.
+#[test]
+fn ragged_batch_is_bit_exact_with_solo_solves() {
+    let mut rng = Rng::seeded(902);
+    let shapes = [(6usize, 10usize), (8, 8), (5, 7), (9, 6)];
+    let nets: Vec<GridNetwork> = shapes
+        .iter()
+        .map(|&(h, w)| random_grid(&mut rng, h, w, 12, 0.25, 0.25))
+        .collect();
+    assert_batch_matches(&nets, "ragged 9x10 envelope");
+}
+
+/// Larger size class: the batch path must not care how many host
+/// rounds the instances need.
+#[test]
+fn medium_class_batch_is_bit_exact() {
+    let mut rng = Rng::seeded(903);
+    let nets: Vec<GridNetwork> = (0..3)
+        .map(|_| random_grid(&mut rng, 16, 16, 20, 0.3, 0.3))
+        .collect();
+    assert_batch_matches(&nets, "16x16 x3");
+}
+
+/// The degenerate batch of one (what `--batch-max 1` would dispatch if
+/// it dispatched at all) is the solo solve.
+#[test]
+fn batch_of_one_is_the_solo_solve() {
+    let mut rng = Rng::seeded(904);
+    let nets = vec![random_grid(&mut rng, 7, 11, 9, 0.3, 0.3)];
+    assert_batch_matches(&nets, "batch of one");
+}
+
+/// A cancelled slot retires with a typed `Cancelled` error while its
+/// batch-mates keep solving to the exact solo answers.
+#[test]
+fn cancelled_slot_does_not_disturb_batchmates() {
+    let mut rng = Rng::seeded(905);
+    let nets: Vec<GridNetwork> = (0..3)
+        .map(|_| random_grid(&mut rng, 9, 9, 9, 0.3, 0.3))
+        .collect();
+    let refs: Vec<&GridNetwork> = nets.iter().collect();
+    let dead = CancelToken::new();
+    dead.cancel();
+    let cancels = vec![None, Some(dead), None];
+    let batched = solve_grid_batch(&refs, CYCLE, None, &cancels).unwrap();
+    let native = solo_trajectories(&nets, GridEngine::Native);
+    for (slot, report) in batched.into_iter().enumerate() {
+        match report {
+            Ok(r) => {
+                assert_ne!(slot, 1, "cancelled slot must not produce a report");
+                assert_eq!((r.flow, r.host_rounds, r.waves, r.pushes, r.relabels), native[slot]);
+            }
+            Err(e) => {
+                assert_eq!(slot, 1, "live slot {slot} unexpectedly failed: {e:#}");
+                assert!(Cancelled::caused(&e), "slot 1 must fail with Cancelled, got {e:#}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- service
+
+fn pool_config(batch_max: usize) -> PoolConfig {
+    PoolConfig {
+        workers: 2,
+        shard: ShardConfig {
+            small_max_units: 256,
+            medium_max_units: 1024,
+            queue_depth: 64,
+            max_units: 1 << 16,
+        },
+        router: RouterConfig {
+            use_pjrt: false,
+            cycle_waves: 128,
+            par_threads: 2,
+            tile_rows: 4,
+            batch_max,
+            // Generous linger so the closed-loop burst reliably forms
+            // multi-instance batches (the test asserts at least one).
+            batch_linger_us: 20_000,
+            ..Default::default()
+        },
+        session_budget_mb: 64,
+    }
+}
+
+/// Back-to-back burst: matchings land Small, 24x24 grids land Medium,
+/// so the Medium queues hold nothing but batchable grid jobs.
+fn burst_trace(seed: u64) -> MixedTrace {
+    let mut rng = Rng::seeded(seed);
+    MixedTrace::generate(
+        &mut rng,
+        &MixedTraceConfig {
+            assign: TraceConfig {
+                requests: 6,
+                n: 10,
+                max_weight: 60,
+                arrival_gap: 0.0,
+                ..Default::default()
+            },
+            grid_requests: 12,
+            grid_size: 24,
+            grid_max_cap: 12,
+            grid_arrival_gap: 0.0,
+            large_every: 0,
+            ..Default::default()
+        },
+    )
+}
+
+fn grid_flows(trace: &MixedTrace, out: &flowmatch::service::ReplayOutcome) -> BTreeMap<usize, i64> {
+    let mut flows = BTreeMap::new();
+    for (id, reply) in &out.replies {
+        let reply = reply.as_ref().unwrap_or_else(|e| panic!("request {id}: {e}"));
+        if matches!(trace.requests[*id].instance, ProblemInstance::Grid(_)) {
+            let SolveOutcome::Grid(report) = &reply.outcome else {
+                panic!("request {id}: grid request answered with a non-grid outcome");
+            };
+            flows.insert(*id, report.flow);
+        }
+    }
+    flows
+}
+
+/// The headline service differential: a batching pool answers the
+/// identical flows as the pre-batching pool, loses nothing, and
+/// actually cuts at least one multi-instance batch; the `batch_max = 1`
+/// pool never batches at all.
+#[test]
+fn batching_pool_answers_identical_flows_and_engages() {
+    let trace = burst_trace(906);
+
+    let plain = SolverPool::start(pool_config(1));
+    let out_plain = replay(&plain, &trace, false);
+    let report_plain = plain.shutdown();
+    assert_eq!(out_plain.ok, out_plain.sent, "unbatched pool must serve the whole burst");
+    assert_eq!(report_plain.batches, 0, "batch_max = 1 must keep batching disengaged");
+    assert_eq!(report_plain.batched_jobs, 0);
+
+    let batched = SolverPool::start(pool_config(8));
+    let out_batched = replay(&batched, &trace, false);
+    let report_batched = batched.shutdown();
+    assert_eq!(out_batched.lost, 0, "a cut batch must answer every slot");
+    assert_eq!(out_batched.ok, out_batched.sent, "batched pool must serve the whole burst");
+
+    // Same trace, same answers: flows are engine-invariant.
+    assert_eq!(grid_flows(&trace, &out_plain), grid_flows(&trace, &out_batched));
+
+    // The burst is deep and the linger generous: batching must engage,
+    // and every dispatch carries at least two jobs by construction.
+    assert!(
+        report_batched.batches >= 1,
+        "no batch cut from a 12-grid closed-loop burst"
+    );
+    assert!(report_batched.batched_jobs >= 2 * report_batched.batches);
+    let via_batch = out_batched
+        .replies
+        .iter()
+        .filter(|(_, r)| r.as_ref().is_ok_and(|r| r.backend == "grid-batch"))
+        .count();
+    assert_eq!(
+        via_batch, report_batched.batched_jobs,
+        "client-side grid-batch replies must equal the pool's batched-job count"
+    );
+}

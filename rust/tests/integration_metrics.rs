@@ -251,6 +251,69 @@ fn gap_and_rebalance_counters_land_in_registry() {
     );
 }
 
+/// Micro-batching counters have registry twins too: run a pool with
+/// batching engaged (deep closed-loop grid burst, generous linger) and
+/// pin every batch field of the `PoolReport` against its
+/// `flowmatch_pool_*` twin — exactly, not approximately.  A second pool
+/// at the default `batch_max = 1` must leave all four at zero.
+#[test]
+fn batch_counters_match_registry_twins_exactly() {
+    let mut rng = Rng::seeded(605);
+    let trace = MixedTrace::generate(
+        &mut rng,
+        &MixedTraceConfig {
+            assign: TraceConfig {
+                requests: 4,
+                n: 10,
+                max_weight: 60,
+                arrival_gap: 0.0,
+                ..Default::default()
+            },
+            grid_requests: 10,
+            grid_size: 24,
+            grid_max_cap: 12,
+            grid_arrival_gap: 0.0,
+            large_every: 0,
+            ..Default::default()
+        },
+    );
+
+    let mut cfg = test_pool_config(2);
+    cfg.router.batch_max = 8;
+    cfg.router.batch_linger_us = 20_000;
+    let pool = SolverPool::start(cfg);
+    let label = pool.metrics_label().to_string();
+    let out = replay(&pool, &trace, false);
+    let report = pool.shutdown();
+
+    assert_eq!(out.lost, 0);
+    assert!(report.batches >= 1, "burst must cut at least one batch");
+    assert_eq!(pool_counter(&label, "batches") as usize, report.batches);
+    assert_eq!(
+        pool_counter(&label, "batched_jobs") as usize,
+        report.batched_jobs
+    );
+    assert_eq!(
+        pool_counter(&label, "padding_waste_cells"),
+        report.padding_waste_cells
+    );
+    assert_eq!(
+        pool_counter(&label, "linger_sheds") as usize,
+        report.linger_sheds
+    );
+    // Uniform 24x24 batches pad nothing: waste counts the envelope
+    // minus the logical cells, and here every slot *is* the envelope.
+    assert_eq!(report.padding_waste_cells, 0);
+
+    let plain = SolverPool::start(test_pool_config(2));
+    let plain_label = plain.metrics_label().to_string();
+    drop(replay(&plain, &trace, false));
+    let plain_report = plain.shutdown();
+    assert_eq!(plain_report.batches, 0, "default batch_max must not batch");
+    assert_eq!(pool_counter(&plain_label, "batches"), 0);
+    assert_eq!(pool_counter(&plain_label, "batched_jobs"), 0);
+}
+
 /// Warm-session replay: warm replies carry a breakdown too, and the
 /// pool's warm-served twin matches the client's count of warm hits.
 #[test]
